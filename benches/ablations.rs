@@ -1,0 +1,13 @@
+//! Bench: regenerate the design-choice ablation table (refine on/off,
+//! shuffle vs weighted grouping, heterogeneity-blind profiles).
+//! Run: cargo bench --bench ablations
+
+use hstorm::experiments::ablation;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, dt) = bench::time_once(|| ablation::run(fast).expect("ablation runs"));
+    println!("{}", result.render());
+    println!("[ablations] regenerated in {dt:?} (fast={fast})");
+}

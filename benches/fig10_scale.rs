@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig. 10 (large-scale simulation over the Table-4
+//! scenarios) and time the scheduler at each cluster size — the paper's
+//! point that the heuristic stays fast where exhaustive search explodes.
+//! Run: cargo bench --bench fig10_scale  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::cluster::scenarios::SCENARIOS;
+use hstorm::experiments::fig10;
+use hstorm::scheduler::hetero::HeteroScheduler;
+use hstorm::scheduler::Scheduler;
+use hstorm::topology::benchmarks;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, dt) = bench::time_once(|| fig10::run(fast).expect("fig10 runs"));
+    println!("{}", result.render());
+    println!("[fig10_scale] regenerated in {dt:?} (fast={fast})\n");
+
+    // scheduler latency per scenario size (small/medium/large)
+    for s in SCENARIOS.iter().take(if fast { 2 } else { 3 }) {
+        let (cluster, db) = s.build();
+        let top = benchmarks::diamond();
+        let iters = if s.total_machines() > 100 { 3 } else { 10 };
+        bench::run(
+            &format!("hetero schedule, scenario {} ({} machines)", s.id, s.total_machines()),
+            1,
+            iters,
+            || {
+                HeteroScheduler::default().schedule(&top, &cluster, &db).expect("schedules");
+            },
+        );
+    }
+}

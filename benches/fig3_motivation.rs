@@ -1,0 +1,12 @@
+//! Bench: regenerate the paper's Fig.3-motivation table (fig3) and time it.
+//! Run: cargo bench --bench fig3_motivation  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::experiments::fig3;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, dt) = bench::time_once(|| fig3::run(fast).expect("fig3 runs"));
+    println!("{}", result.render());
+    println!("[fig3_motivation] regenerated in {dt:?} (fast={fast})");
+}

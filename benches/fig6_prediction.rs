@@ -1,0 +1,12 @@
+//! Bench: regenerate the paper's Fig.6-prediction-accuracy table (fig6) and time it.
+//! Run: cargo bench --bench fig6_prediction  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::experiments::fig6;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, dt) = bench::time_once(|| fig6::run(fast).expect("fig6 runs"));
+    println!("{}", result.render());
+    println!("[fig6_prediction] regenerated in {dt:?} (fast={fast})");
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate the paper's Fig.7-instance-pairs table (fig7) and time it.
+//! Run: cargo bench --bench fig7_instances  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::experiments::fig7;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, dt) = bench::time_once(|| fig7::run(fast).expect("fig7 runs"));
+    println!("{}", result.render());
+    println!("[fig7_instances] regenerated in {dt:?} (fast={fast})");
+}

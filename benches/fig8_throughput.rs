@@ -1,0 +1,12 @@
+//! Bench: regenerate the paper's Fig.8-throughput-comparison table (fig8) and time it.
+//! Run: cargo bench --bench fig8_throughput  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::experiments::fig8;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, dt) = bench::time_once(|| fig8::run(fast).expect("fig8 runs"));
+    println!("{}", result.render());
+    println!("[fig8_throughput] regenerated in {dt:?} (fast={fast})");
+}

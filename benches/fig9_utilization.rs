@@ -1,0 +1,12 @@
+//! Bench: regenerate the paper's Fig.9-utilization table (fig9) and time it.
+//! Run: cargo bench --bench fig9_utilization  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::experiments::fig9;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, dt) = bench::time_once(|| fig9::run(fast).expect("fig9 runs"));
+    println!("{}", result.render());
+    println!("[fig9_utilization] regenerated in {dt:?} (fast={fast})");
+}

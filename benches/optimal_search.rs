@@ -1,0 +1,71 @@
+//! Bench: the §3 complexity story — design-space sizes, candidate
+//! scoring rate through the batched AOT scorer (PJRT) vs the native
+//! mirror, and the measured wall time of a full bounded optimal search
+//! (the paper's comparator needed ~18 h on its server).
+//! Run: cargo bench --bench optimal_search  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::cluster::presets;
+use hstorm::experiments::complexity;
+use hstorm::predict::Placement;
+use hstorm::runtime::scorer::{NativeScorer, PjRtScorer, PlacementScorer};
+use hstorm::runtime::PjRtRuntime;
+use hstorm::scheduler::optimal::OptimalScheduler;
+use hstorm::scheduler::Scheduler;
+use hstorm::topology::benchmarks;
+use hstorm::util::bench;
+use hstorm::util::rng::Rng;
+
+fn random_batch(n: usize, n_comp: usize, m: usize, seed: u64) -> Vec<Placement> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut p = Placement::empty(n_comp, m);
+            for c in 0..n_comp {
+                for _ in 0..rng.range(1, 3) {
+                    p.x[c][rng.range(0, m - 1)] += 1;
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, _) = bench::time_once(|| complexity::run(fast).expect("complexity runs"));
+    println!("{}", result.render());
+
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::linear();
+    let n = top.n_components();
+    let m = cluster.n_machines();
+    let batch = random_batch(256, n, m, 0xBEEF);
+    let rates = vec![1.0; batch.len()];
+
+    // scoring backends head-to-head, 256 candidates per call
+    let native = NativeScorer::new(&top, &cluster, &db).expect("native scorer");
+    let mn = bench::run("score 256 candidates (native)", 3, if fast { 20 } else { 100 }, || {
+        native.score_batch(&batch, &rates).expect("scores");
+    });
+    println!("  native: {:.0} candidates/s", mn.throughput(256.0));
+
+    match PjRtRuntime::cpu_default() {
+        Ok(rt) => {
+            let pjrt = PjRtScorer::new(&rt, &top, &cluster, &db).expect("pjrt scorer");
+            let mp = bench::run("score 256 candidates (pjrt AOT)", 3, if fast { 20 } else { 100 }, || {
+                pjrt.score_batch(&batch, &rates).expect("scores");
+            });
+            println!("  pjrt:   {:.0} candidates/s", mp.throughput(256.0));
+        }
+        Err(e) => println!("  (pjrt scorer skipped: {e})"),
+    }
+
+    // the full bounded optimal search, end to end
+    let os = OptimalScheduler { max_instances_per_component: if fast { 2 } else { 3 }, ..Default::default() };
+    let space = os.design_space_size(n, m);
+    let (s, dt) = bench::time_once(|| os.schedule(&top, &cluster, &db).expect("optimal schedules"));
+    println!(
+        "full optimal search over {space} placements: {dt:?} -> rate {:.1} t/s (paper's comparator: hours)",
+        s.rate
+    );
+}

@@ -1,0 +1,55 @@
+//! Micro-benchmarks of the scheduling hot paths (the §Perf targets in
+//! EXPERIMENTS.md): evaluator, closed-form max-rate, FirstAssignment,
+//! full hetero schedule, and the refinement pass, across cluster sizes.
+//! Run: cargo bench --bench scheduler_micro  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::cluster::{presets, scenarios};
+use hstorm::predict::{Evaluator, Placement};
+use hstorm::scheduler::default_rr::DefaultScheduler;
+use hstorm::scheduler::hetero::HeteroScheduler;
+use hstorm::scheduler::Scheduler;
+use hstorm::topology::{benchmarks, Etg};
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let iters = if fast { 50 } else { 500 };
+
+    // paper cluster (3 machines)
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::diamond();
+    let ev = Evaluator::new(&top, &cluster, &db).expect("evaluator");
+    let mut p = Placement::empty(top.n_components(), cluster.n_machines());
+    for c in 0..top.n_components() {
+        p.x[c][c % 3] = 1;
+    }
+
+    bench::run("evaluate placement (5 comp x 3 machines)", 10, iters * 10, || {
+        ev.evaluate(&p, 100.0).expect("evaluates");
+    });
+    bench::run("max_stable_rate closed form", 10, iters * 10, || {
+        ev.max_stable_rate(&p).expect("rate");
+    });
+    bench::run("hetero schedule (paper cluster)", 2, iters / 5, || {
+        HeteroScheduler::default().schedule(&top, &cluster, &db).expect("schedules");
+    });
+    bench::run("default RR schedule (paper cluster)", 2, iters, || {
+        DefaultScheduler::with_etg(Etg { counts: vec![1, 2, 2, 2, 2] })
+            .schedule(&top, &cluster, &db)
+            .expect("schedules");
+    });
+
+    // medium scenario (30 machines)
+    let (c30, db30) = scenarios::by_id(2).unwrap().build();
+    bench::run("hetero schedule (30 machines)", 1, (iters / 25).max(3), || {
+        HeteroScheduler::default().schedule(&top, &c30, &db30).expect("schedules");
+    });
+
+    if !fast {
+        // large scenario (180 machines)
+        let (c180, db180) = scenarios::by_id(3).unwrap().build();
+        bench::run("hetero schedule (180 machines)", 1, 3, || {
+            HeteroScheduler::default().schedule(&top, &c180, &db180).expect("schedules");
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Table 5 (throughput-gain / utilization-gain ratios)
+//! from the Fig. 10 simulation cells.
+//! Run: cargo bench --bench table5_ratios  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::experiments::fig10;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let (result, dt) = bench::time_once(|| fig10::table5(fast).expect("table5 runs"));
+    println!("{}", result.render());
+    println!("[table5_ratios] regenerated in {dt:?} (fast={fast})");
+}

@@ -1,0 +1,29 @@
+//! Large-scale simulation (paper §6.3 / Fig. 10): run the proposed and
+//! default schedulers on the three Table-4 cluster scenarios and report
+//! throughput and weighted utilization gains per topology.
+//!
+//! ```bash
+//! cargo run --release --example large_scale
+//! ```
+
+use hstorm::experiments::fig10;
+
+fn main() -> hstorm::Result<()> {
+    println!("== hstorm large-scale scenarios (Table 4) ==");
+    let fig = fig10::run(false)?;
+    println!("{}", fig.render());
+    let t5 = fig10::table5(false)?;
+    println!("{}", t5.render());
+
+    // headline summary, paper-style
+    let cells = fig10::cells(false)?;
+    for sid in 1..=3 {
+        let gains: Vec<f64> =
+            cells.iter().filter(|c| c.scenario == sid).map(|c| c.thpt_gain()).collect();
+        let lo = gains.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = gains.iter().cloned().fold(0.0, f64::max);
+        println!("scenario {sid}: throughput gain {lo:+.0}%..{hi:+.0}% over default");
+    }
+    println!("(paper: +26..49% small, +36..48% medium, +27..31% large)");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Quickstart: schedule the Linear micro-benchmark on the paper's
+//! Table-2 heterogeneous cluster with the proposed algorithm and print
+//! the resulting execution topology graph.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hstorm::cluster::presets;
+use hstorm::scheduler::default_rr::DefaultScheduler;
+use hstorm::scheduler::hetero::HeteroScheduler;
+use hstorm::scheduler::Scheduler;
+use hstorm::topology::{benchmarks, Etg};
+
+fn main() -> hstorm::Result<()> {
+    let top = benchmarks::linear();
+    let (cluster, profiles) = presets::paper_cluster();
+
+    println!("== hstorm quickstart ==");
+    println!("topology '{}' ({} components), cluster '{}' ({} machines)\n",
+        top.name, top.n_components(), cluster.name, cluster.n_machines());
+
+    // The paper's scheduler: builds the ETG *and* the assignment.
+    let ours = HeteroScheduler::default().schedule(&top, &cluster, &profiles)?;
+    println!("proposed scheduler:");
+    println!("  certified input rate  {:.1} tuple/s", ours.rate);
+    println!("  predicted throughput  {:.1} tuple/s", ours.eval.throughput);
+    print!("{}", ours.describe(&top, &cluster));
+
+    // Storm's default: same instance counts, Round-Robin placement.
+    let etg = Etg { counts: ours.placement.counts() };
+    let default = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &profiles)?;
+    println!("\nStorm default scheduler (same ETG, Round-Robin):");
+    println!("  max stable rate       {:.1} tuple/s", default.rate);
+    println!("  predicted throughput  {:.1} tuple/s", default.eval.throughput);
+
+    let gain = (ours.eval.throughput - default.eval.throughput) / default.eval.throughput * 100.0;
+    println!("\n=> heterogeneity-aware scheduling gains {gain:+.1}% throughput (paper: +7%..+44%)");
+    Ok(())
+}

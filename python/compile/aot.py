@@ -1,0 +1,104 @@
+"""AOT entry point: lower the L2 model to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the published ``xla`` crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts (consumed by rust/src/runtime/):
+  scorer_b256.hlo.txt  — evaluate_placements, B=256 (optimal scheduler)
+  scorer_b1.hlo.txt    — evaluate_placements, B=1   (heuristic inner loop)
+  work.hlo.txt         — bolt_work, the engine's PJRT compute-mode body
+  dims.json            — the dims the artifacts were lowered with
+
+Run via ``make artifacts`` (no-op if inputs unchanged):
+  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dims
+from .model import bolt_work, evaluate_placements
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_scorer(batch: int) -> str:
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    args = (
+        s((batch, dims.C, dims.M), f32),  # x
+        s((dims.C, dims.C), f32),         # adj
+        s((dims.C,), f32),                # alpha
+        s((dims.C,), f32),                # src_mask
+        s((batch,), f32),                 # r0
+        s((dims.C, dims.M), f32),         # e_m
+        s((dims.C, dims.M), f32),         # met_m
+        s((dims.M,), f32),                # cap
+        s((dims.C,), f32),                # active
+    )
+    fn = functools.partial(evaluate_placements, depth=dims.DEPTH,
+                           interpret=True)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_work() -> str:
+    arg = jax.ShapeDtypeStruct((dims.WORK_N,), jnp.float32)
+    return to_hlo_text(jax.jit(bolt_work).lower(arg))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file target (writes scorer_b256)")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    emitted = {}
+    for name, text in (
+        (f"scorer_b{dims.B_BATCH}.hlo.txt", lower_scorer(dims.B_BATCH)),
+        (f"scorer_b{dims.B_ONE}.hlo.txt", lower_scorer(dims.B_ONE)),
+        ("work.hlo.txt", lower_work()),
+    ):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        emitted[name] = len(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+    if args.out:  # Makefile stamp target
+        with open(args.out, "w") as f:
+            f.write(open(os.path.join(out_dir,
+                    f"scorer_b{dims.B_BATCH}.hlo.txt")).read())
+
+    meta = {
+        "C": dims.C, "M": dims.M, "DEPTH": dims.DEPTH,
+        "B_BATCH": dims.B_BATCH, "B_ONE": dims.B_ONE,
+        "CAP": dims.CAP, "WORK_N": dims.WORK_N,
+        "artifacts": emitted,
+    }
+    with open(os.path.join(out_dir, "dims.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote dims.json: {meta}")
+
+
+if __name__ == "__main__":
+    main()

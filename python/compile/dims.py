@@ -1,0 +1,31 @@
+"""Fixed AOT shapes shared by the JAX model, the Pallas kernels and the
+Rust runtime.
+
+HLO modules have static shapes, so the scheduler's evaluation model is
+lowered once for a padded problem size and the Rust side masks the padding:
+
+* ``C``      — max components in a user topology graph (paper topologies
+               have <= 9; RollingCount/UniqueVisitor have 3).
+* ``M``      — max worker machines visible to one scorer call.  The
+               exhaustive (optimal) scheduler only ever runs on small
+               clusters (the paper's point is that it is intractable), so
+               32 machines is generous; the heuristic path batches B=1.
+* ``DEPTH``  — fixed-point iterations for rate propagation (eq. 6).  A DAG
+               with C components converges in <= C iterations.
+* ``B_*``    — candidate-batch sizes we emit artifacts for.
+
+Changing any of these requires `make artifacts` and a rebuild; the Rust
+runtime asserts the artifact dims match `rust/src/runtime/dims.rs`.
+"""
+
+C = 16        # max components
+M = 32        # max machines
+DEPTH = 16    # rate-propagation iterations (>= longest DAG path)
+B_BATCH = 256 # exhaustive-search scoring batch
+B_ONE = 1     # single-candidate variant (heuristic scheduler inner loop)
+BLOCK_B = 256 # Pallas batch tile (one grid step per batch; a 512 KiB
+              # candidate block still fits a TPU core's VMEM)
+
+CAP = 100.0   # MAC budget per machine (percent), paper §4.2
+
+WORK_N = 64   # synthetic bolt-work kernel vector length

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: one rate-propagation step (paper eq. 6).
+
+Component-level tuple-rate flow over the topology DAG.  One step:
+
+    ir'[b, j] = src[b, j] + sum_i adj[i, j] * alpha[i] * ir[b, i]
+
+i.e. every upstream component i forwards its output rate
+``OR_i = IR_i * alpha_i`` to each downstream component it feeds (Storm
+semantics: every subscribed consumer group receives the full stream).
+``src[b, j]`` carries the topology input rate R0 into spout components.
+
+The step is a [B, C] x [C, C] matmul; iterated DEPTH (>= longest path)
+times in the L2 model it reaches the DAG fixed point.  Grid over the batch
+axis; adj/alpha stay VMEM-resident.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..dims import BLOCK_B
+
+
+def _prop_kernel(ir_ref, adj_ref, alpha_ref, src_ref, out_ref):
+    ir = ir_ref[...]          # [bB, C]
+    adj = adj_ref[...]        # [C, C]  adj[i, j] = 1 iff i feeds j
+    alpha = alpha_ref[...]    # [1, C]  tuple division ratios
+    src = src_ref[...]        # [bB, C] R0 injected at spouts
+    out_ref[...] = src + (ir * alpha) @ adj
+
+
+def propagate_step(ir, adj, alpha, src, *, block_b=None, interpret=True):
+    """One eq.-6 step: f32[B, C] rates -> f32[B, C] rates."""
+    B, C = ir.shape
+    bb = block_b or min(BLOCK_B, B)
+    assert B % bb == 0
+    alpha2 = alpha.reshape(1, C)
+    return pl.pallas_call(
+        _prop_kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, C), lambda i: (i, 0)),
+            pl.BlockSpec((C, C), lambda i: (0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+            pl.BlockSpec((bb, C), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, C), ir.dtype),
+        interpret=interpret,
+    )(ir, adj, alpha2, src)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the Pallas kernels and the full evaluation model.
+
+Everything here is straight-line numpy-style code with no Pallas, no
+BlockSpecs and no grids; pytest/hypothesis compare the kernels (and the
+composed L2 model) against these implementations.
+"""
+
+import jax.numpy as jnp
+
+
+def score_utilization_ref(x, ir_task, e_m, met_m):
+    """util[b,m] = sum_c x[b,c,m] * (e_m[c,m]*ir_task[b,c] + met_m[c,m])."""
+    per_task = e_m[None, :, :] * ir_task[:, :, None] + met_m[None, :, :]
+    return jnp.sum(x * per_task, axis=1)
+
+
+def propagate_step_ref(ir, adj, alpha, src):
+    """ir'[b,j] = src[b,j] + sum_i adj[i,j] * alpha[i] * ir[b,i]."""
+    return src + (ir * alpha[None, :]) @ adj
+
+
+def propagate_ref(adj, alpha, src, depth):
+    """Iterate eq. 6 to the DAG fixed point."""
+    ir = src
+    for _ in range(depth):
+        ir = propagate_step_ref(ir, adj, alpha, src)
+    return ir
+
+
+def evaluate_placements_ref(x, adj, alpha, src_mask, r0, e_m, met_m, cap,
+                            active, depth, eps=1e-6):
+    """Reference for the full L2 model; see model.evaluate_placements."""
+    n_c = jnp.sum(x, axis=2)                       # [B, C]
+    src = src_mask[None, :] * r0[:, None]          # [B, C]
+    ir_comp = propagate_ref(adj, alpha, src, depth)
+    ir_task = ir_comp / jnp.maximum(n_c, 1.0)
+    util = score_utilization_ref(x, ir_task, e_m, met_m)
+    over = jnp.any(util > cap[None, :] + eps, axis=1)
+    missing = jnp.any((n_c < 0.5) & (active[None, :] > 0.5), axis=1)
+    feasible = jnp.logical_and(~over, ~missing).astype(x.dtype)
+    throughput = jnp.sum(ir_comp * active[None, :], axis=1)
+    return util, throughput, feasible, ir_comp

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: batched placement scoring (the evaluation hot-spot).
+
+For a batch of candidate placements ``X[b, c, m]`` (number of instances of
+component ``c`` assigned to machine ``m``) and per-task input rates
+``ir_task[b, c]``, computes the predicted CPU utilization of every machine
+(paper eq. 5 summed per machine):
+
+    util[b, m] = sum_c X[b,c,m] * (e_m[c,m] * ir_task[b,c] + met_m[c,m])
+
+``e_m``/``met_m`` are the profile tables already gathered per *machine*
+(the Rust side expands ``e[c, type]`` by each machine's type, so the kernel
+sees a dense [C, M] table and needs no gather).
+
+Kernel structure (the TPU mapping documented in DESIGN.md §Hardware
+adaptation): grid over the batch axis; each grid step loads one
+``[BLOCK_B, C, M]`` candidate tile plus the tiny resident ``[C, M]``
+profile tables into VMEM and contracts over ``C`` — an MXU-shaped
+reduction.  ``interpret=True`` everywhere on CPU; on a real TPU the same
+BlockSpec schedule double-buffers candidate tiles HBM->VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..dims import BLOCK_B
+
+
+def _score_kernel(x_ref, ir_ref, em_ref, met_ref, util_ref):
+    x = x_ref[...]            # [bB, C, M]  instance counts
+    ir = ir_ref[...]          # [bB, C]     per-task input rate
+    em = em_ref[...]          # [C, M]      e_ij expanded per machine
+    met = met_ref[...]        # [C, M]      MET_ij expanded per machine
+    # TCU of one instance of component c on machine m, per candidate:
+    per_task = em[None, :, :] * ir[:, :, None] + met[None, :, :]
+    # Machine utilization: contract over the component axis.
+    util_ref[...] = jnp.sum(x * per_task, axis=1)
+
+
+def score_utilization(x, ir_task, e_m, met_m, *, block_b=None, interpret=True):
+    """Predicted per-machine CPU utilization for a batch of placements.
+
+    Args:
+      x:       f32[B, C, M] instance counts (0 for padding).
+      ir_task: f32[B, C]    input rate of one instance of each component.
+      e_m:     f32[C, M]    per-tuple execution cost of c on machine m.
+      met_m:   f32[C, M]    per-instance miscellaneous overhead.
+    Returns:
+      f32[B, M] predicted utilization (percent of MAC budget).
+    """
+    B, C, M = x.shape
+    bb = block_b or min(BLOCK_B, B)
+    assert B % bb == 0, f"batch {B} not divisible by block {bb}"
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, C, M), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, C), lambda i: (i, 0)),
+            pl.BlockSpec((C, M), lambda i: (0, 0)),
+            pl.BlockSpec((C, M), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, M), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, M), x.dtype),
+        interpret=interpret,
+    )(x, ir_task, e_m, met_m)

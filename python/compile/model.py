@@ -1,0 +1,92 @@
+"""L2: the scheduler's evaluation model as a JAX compute graph.
+
+Composes the two L1 Pallas kernels into the full placement evaluator the
+Rust coordinator calls through PJRT:
+
+  1. rate propagation (eq. 6)   — kernels.propagate, iterated DEPTH times;
+  2. CPU-utilization prediction (eq. 5) summed per machine
+                                 — kernels.score;
+  3. feasibility + throughput reduction (the objective of eq. 2).
+
+All shapes are the fixed AOT dims from ``dims.py``; padding rows/columns
+are masked with ``active``/zero instance counts.  ``aot.py`` lowers
+``evaluate_placements`` to HLO text once at build time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dims import DEPTH
+from .kernels.propagate import propagate_step
+from .kernels.score import score_utilization
+
+
+def propagate(adj, alpha, src, *, depth=DEPTH, interpret=True):
+    """Iterate the eq.-6 step to the DAG fixed point.
+
+    ``src[b, c]`` is R0 injected at spouts; a DAG with a longest path of L
+    edges converges after L iterations, and extra iterations are no-ops, so
+    a static ``depth >= L`` is exact (not approximate).
+
+    The loop is unrolled at trace time (not ``lax.fori_loop``): an HLO
+    ``while`` op blocks XLA from fusing the tiny per-step matmuls and
+    costs a dispatch per iteration on the CPU PJRT runtime; unrolling cut
+    the Rust-side batch-scoring latency (see EXPERIMENTS.md §Perf).
+    """
+    ir = src
+    for _ in range(depth):
+        ir = propagate_step(ir, adj, alpha, src, interpret=interpret)
+    return ir
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "interpret"))
+def evaluate_placements(x, adj, alpha, src_mask, r0, e_m, met_m, cap, active,
+                        *, depth=DEPTH, interpret=True):
+    """Score a batch of candidate placements.
+
+    Args:
+      x:        f32[B, C, M] instances of component c on machine m.
+      adj:      f32[C, C]    adj[i, j] = 1 iff component i feeds j.
+      alpha:    f32[C]       tuple division ratio per component (eq. 6).
+      src_mask: f32[C]       1.0 at spout components.
+      r0:       f32[B]       topology input rate per candidate.
+      e_m:      f32[C, M]    per-tuple cost of c on machine m (%·s/tuple).
+      met_m:    f32[C, M]    per-instance overhead of c on machine m (%).
+      cap:      f32[M]       MAC budget per machine (100 active, 0 pad).
+      active:   f32[C]       1.0 for real components, 0.0 padding.
+
+    Returns:
+      util:       f32[B, M] predicted machine utilization (eq. 5 summed).
+      throughput: f32[B]    sum of component processing rates (objective).
+      feasible:   f32[B]    1.0 iff no machine over-utilized and every
+                            active component has >= 1 instance.
+      ir_comp:    f32[B, C] component-level input rates (eq. 6 fixed point).
+    """
+    n_c = jnp.sum(x, axis=2)                        # [B, C]
+    src = src_mask[None, :] * r0[:, None]           # [B, C]
+    ir_comp = propagate(adj, alpha, src, depth=depth, interpret=interpret)
+    # Shuffle grouping: a component's stream divides evenly over instances.
+    ir_task = ir_comp / jnp.maximum(n_c, 1.0)
+    util = score_utilization(x, ir_task, e_m, met_m, interpret=interpret)
+    over = jnp.any(util > cap[None, :] + 1e-6, axis=1)
+    missing = jnp.any((n_c < 0.5) & (active[None, :] > 0.5), axis=1)
+    feasible = jnp.logical_and(~over, ~missing).astype(x.dtype)
+    throughput = jnp.sum(ir_comp * active[None, :], axis=1)
+    return util, throughput, feasible, ir_comp
+
+
+def bolt_work(x, iters=8):
+    """Synthetic CPU-burning bolt body for the engine's PJRT compute mode.
+
+    A short chain of transcendental ops over a small vector; the Rust
+    engine executes the compiled module k times per tuple, k scaled by the
+    component's profiled cost, so 'real' compute flows through PJRT on the
+    data path without Python.
+    """
+
+    def body(_, v):
+        return jnp.tanh(v) * 1.000001 + jnp.sin(v) * 1e-3
+
+    return (jax.lax.fori_loop(0, iters, body, x),)

@@ -1,0 +1,164 @@
+"""Kernel-vs-oracle correctness: the CORE build-time signal.
+
+The Pallas kernels (interpret=True) must match the pure-jnp reference
+(fp32 allclose) on fixed cases and under hypothesis sweeps of
+shapes/values.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile import dims
+from compile.kernels.propagate import propagate_step
+from compile.kernels.ref import (propagate_ref, propagate_step_ref,
+                                 score_utilization_ref)
+from compile.kernels.score import score_utilization
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_case(b, c, m, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 4, size=(b, c, m)).astype(np.float32)
+    ir = (rng.random((b, c)) * 100).astype(np.float32)
+    e_m = (rng.random((c, m)) * 0.3).astype(np.float32)
+    met = (rng.random((c, m)) * 5).astype(np.float32)
+    return x, ir, e_m, met
+
+
+class TestScoreKernel:
+    def test_matches_ref_fixed(self):
+        x, ir, e_m, met = rand_case(dims.B_BATCH, dims.C, dims.M)
+        got = score_utilization(jnp.array(x), jnp.array(ir), jnp.array(e_m),
+                                jnp.array(met))
+        want = score_utilization_ref(x, ir, e_m, met)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_batch_one(self):
+        x, ir, e_m, met = rand_case(1, dims.C, dims.M, seed=1)
+        got = score_utilization(jnp.array(x), jnp.array(ir), jnp.array(e_m),
+                                jnp.array(met), block_b=1)
+        want = score_utilization_ref(x, ir, e_m, met)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_zero_placement_zero_util(self):
+        x = np.zeros((32, dims.C, dims.M), np.float32)
+        _, ir, e_m, met = rand_case(32, dims.C, dims.M, seed=2)
+        got = score_utilization(jnp.array(x), jnp.array(ir), jnp.array(e_m),
+                                jnp.array(met))
+        assert np.all(np.asarray(got) == 0.0)
+
+    def test_single_instance_equals_tcu(self):
+        """One instance of c0 on m0 -> util[m0] == e*ir + met exactly."""
+        c, m = dims.C, dims.M
+        x = np.zeros((32, c, m), np.float32)
+        x[:, 0, 0] = 1.0
+        ir = np.full((32, c), 10.0, np.float32)
+        e_m = np.full((c, m), 0.2, np.float32)
+        met = np.full((c, m), 3.0, np.float32)
+        got = np.asarray(score_utilization(jnp.array(x), jnp.array(ir),
+                                           jnp.array(e_m), jnp.array(met)))
+        assert_allclose(got[:, 0], 0.2 * 10.0 + 3.0, rtol=1e-6)
+        assert np.all(got[:, 1:] == 0.0)
+
+    def test_additive_in_instances(self):
+        """util is linear in instance count (eq. 5 per-instance sum)."""
+        x, ir, e_m, met = rand_case(32, dims.C, dims.M, seed=3)
+        one = np.asarray(score_utilization(jnp.array(x), jnp.array(ir),
+                                           jnp.array(e_m), jnp.array(met)))
+        two = np.asarray(score_utilization(jnp.array(2 * x), jnp.array(ir),
+                                           jnp.array(e_m), jnp.array(met)))
+        assert_allclose(two, 2 * one, rtol=1e-5)
+
+    @settings(deadline=None, max_examples=25)
+    @given(b=st.sampled_from([1, 2, 4, 8, 32, 64]),
+           c=st.integers(1, 16), m=st.integers(1, 32),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_shapes(self, b, c, m, seed):
+        x, ir, e_m, met = rand_case(b, c, m, seed=seed)
+        bb = min(b, 8) if b % min(b, 8) == 0 else 1
+        got = score_utilization(jnp.array(x), jnp.array(ir), jnp.array(e_m),
+                                jnp.array(met), block_b=bb)
+        want = score_utilization_ref(x, ir, e_m, met)
+        assert_allclose(np.asarray(got), np.asarray(want),
+                        rtol=1e-4, atol=1e-4)
+
+
+def linear_adj(c_active, c_total):
+    """c0 -> c1 -> ... -> c_{k-1} chain, padded to c_total."""
+    adj = np.zeros((c_total, c_total), np.float32)
+    for i in range(c_active - 1):
+        adj[i, i + 1] = 1.0
+    return adj
+
+
+class TestPropagateKernel:
+    def test_matches_ref_fixed(self):
+        rng = np.random.default_rng(4)
+        b, c = 64, dims.C
+        ir = (rng.random((b, c)) * 50).astype(np.float32)
+        adj = (rng.random((c, c)) < 0.2).astype(np.float32)
+        np.fill_diagonal(adj, 0)
+        alpha = rng.random(c).astype(np.float32)
+        src = (rng.random((b, c)) * 10).astype(np.float32)
+        got = propagate_step(jnp.array(ir), jnp.array(adj), jnp.array(alpha),
+                             jnp.array(src))
+        want = propagate_step_ref(ir, adj, alpha, src)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_linear_chain_fixed_point(self):
+        """Chain with alpha=1: every component sees rate R0 at fixed point."""
+        c = dims.C
+        adj = linear_adj(5, c)
+        alpha = np.ones(c, np.float32)
+        src = np.zeros((4, c), np.float32)
+        src[:, 0] = 100.0
+        ir = propagate_ref(adj, alpha, src, depth=dims.DEPTH)
+        assert_allclose(np.asarray(ir[:, :5]), 100.0, rtol=1e-6)
+        assert np.all(np.asarray(ir[:, 5:]) == 0.0)
+
+    def test_alpha_scales_downstream(self):
+        """alpha=0.5 on each hop halves the rate per stage."""
+        c = dims.C
+        adj = linear_adj(4, c)
+        alpha = np.full(c, 0.5, np.float32)
+        src = np.zeros((2, c), np.float32)
+        src[:, 0] = 80.0
+        ir = np.asarray(propagate_ref(adj, alpha, src, depth=dims.DEPTH))
+        assert_allclose(ir[:, 0], 80.0)
+        assert_allclose(ir[:, 1], 40.0)
+        assert_allclose(ir[:, 2], 20.0)
+        assert_allclose(ir[:, 3], 10.0)
+
+    def test_diamond_fanin_sums(self):
+        """src -> {a, b} -> sink: sink rate = OR_a + OR_b (full copies)."""
+        c = dims.C
+        adj = np.zeros((c, c), np.float32)
+        adj[0, 1] = adj[0, 2] = 1.0   # spout feeds both branches
+        adj[1, 3] = adj[2, 3] = 1.0   # both feed the sink
+        alpha = np.ones(c, np.float32)
+        src = np.zeros((1, c), np.float32)
+        src[:, 0] = 30.0
+        ir = np.asarray(propagate_ref(adj, alpha, src, depth=dims.DEPTH))
+        assert_allclose(ir[0, 1], 30.0)
+        assert_allclose(ir[0, 2], 30.0)
+        assert_allclose(ir[0, 3], 60.0)
+
+    @settings(deadline=None, max_examples=20)
+    @given(seed=st.integers(0, 2**31 - 1), b=st.sampled_from([1, 8, 32]))
+    def test_hypothesis_step(self, seed, b):
+        rng = np.random.default_rng(seed)
+        c = dims.C
+        ir = (rng.random((b, c)) * 100).astype(np.float32)
+        adj = (rng.random((c, c)) < 0.3).astype(np.float32)
+        alpha = (rng.random(c) * 2).astype(np.float32)
+        src = (rng.random((b, c)) * 20).astype(np.float32)
+        got = propagate_step(jnp.array(ir), jnp.array(adj), jnp.array(alpha),
+                             jnp.array(src), block_b=1 if b == 1 else 8)
+        want = propagate_step_ref(ir, adj, alpha, src)
+        assert_allclose(np.asarray(got), np.asarray(want),
+                        rtol=1e-4, atol=1e-4)

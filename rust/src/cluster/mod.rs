@@ -1,0 +1,167 @@
+//! Heterogeneous cluster substrate (paper §4.1, Tables 2 & 4).
+//!
+//! A cluster is a set of worker machines, each of a *machine type*
+//! (processor generation).  In the paper's model each worker node runs
+//! one worker process with a CPU budget `MAC = 100` (%); heterogeneity
+//! enters exclusively through the per-type profile table `e_ij`/`MET_ij`
+//! ([`profile::ProfileDb`]).
+
+pub mod presets;
+pub mod profile;
+pub mod scenarios;
+
+use crate::{Error, Result};
+
+/// A processor generation ("Pentium Dual-Core 2.6", "Core i5 2.5", ...).
+#[derive(Debug, Clone)]
+pub struct MachineType {
+    pub name: String,
+    /// Free-text hardware description (Table 2 rows).
+    pub description: String,
+}
+
+/// One worker node.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    /// Unique name ("m1", "i5-0", ...).
+    pub name: String,
+    /// Index into [`Cluster::types`].
+    pub type_id: usize,
+    /// Available CPU capacity (MAC), percent.  100 unless the node is
+    /// partially reserved.
+    pub cap: f64,
+}
+
+/// A heterogeneous cluster: machine types + worker machines.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub name: String,
+    pub types: Vec<MachineType>,
+    pub machines: Vec<Machine>,
+}
+
+impl Cluster {
+    pub fn new(name: impl Into<String>) -> Self {
+        Cluster { name: name.into(), types: Vec::new(), machines: Vec::new() }
+    }
+
+    /// Register a machine type; returns its id.
+    pub fn add_type(&mut self, name: &str, description: &str) -> usize {
+        self.types.push(MachineType { name: name.into(), description: description.into() });
+        self.types.len() - 1
+    }
+
+    /// Add `count` identical machines of `type_id`, named `prefix-k`.
+    pub fn add_machines(&mut self, type_id: usize, count: usize, prefix: &str) {
+        for k in 0..count {
+            self.machines.push(Machine {
+                name: format!("{prefix}-{k}"),
+                type_id,
+                cap: 100.0,
+            });
+        }
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.types.len()
+    }
+
+    /// Machine-type name of machine `m`.
+    pub fn type_name(&self, m: usize) -> &str {
+        &self.types[self.machines[m].type_id].name
+    }
+
+    /// Count machines per type — `N_{T_i}` in the paper.
+    pub fn machines_per_type(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.types.len()];
+        for m in &self.machines {
+            counts[m.type_id] += 1;
+        }
+        counts
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.machines.is_empty() {
+            return Err(Error::Cluster("no machines".into()));
+        }
+        if self.types.is_empty() {
+            return Err(Error::Cluster("no machine types".into()));
+        }
+        for m in &self.machines {
+            if m.type_id >= self.types.len() {
+                return Err(Error::Cluster(format!(
+                    "machine '{}' references unknown type {}",
+                    m.name, m.type_id
+                )));
+            }
+            if !(0.0..=100.0).contains(&m.cap) {
+                return Err(Error::Cluster(format!(
+                    "machine '{}' capacity {} outside [0,100]",
+                    m.name, m.cap
+                )));
+            }
+        }
+        let mut names: Vec<&str> = self.machines.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.machines.len() {
+            return Err(Error::Cluster("duplicate machine names".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cluster {
+        let mut c = Cluster::new("test");
+        let a = c.add_type("fast", "fast cpu");
+        let b = c.add_type("slow", "slow cpu");
+        c.add_machines(a, 2, "fast");
+        c.add_machines(b, 1, "slow");
+        c
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let c = small();
+        c.validate().unwrap();
+        assert_eq!(c.n_machines(), 3);
+        assert_eq!(c.machines_per_type(), vec![2, 1]);
+        assert_eq!(c.type_name(2), "slow");
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(Cluster::new("x").validate().is_err());
+    }
+
+    #[test]
+    fn bad_type_id_rejected() {
+        let mut c = small();
+        c.machines[0].type_id = 9;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn bad_cap_rejected() {
+        let mut c = small();
+        c.machines[0].cap = 150.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut c = small();
+        let n = c.machines[0].name.clone();
+        c.machines[1].name = n;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! The paper's experimental setup as ready-made presets.
+//!
+//! * [`paper_cluster`] — Table 2's worker nodes (the second Core i3 is
+//!   the master and runs Nimbus/Zookeeper, so three workers schedule
+//!   tasks) plus Table 3's measured profile data.
+//! * [`paper_profiles`] — Table 3 `e_ij` values verbatim; `MET_ij` is not
+//!   published, we use small constants recovered the same way the paper
+//!   does (eq. 5 inversion at the saturation point) from our engine —
+//!   see DESIGN.md §5.
+
+use super::profile::{ProfileDb, TaskProfile};
+use super::Cluster;
+
+/// Machine-type names used throughout the experiments.
+pub const PENTIUM: &str = "pentium";
+pub const CORE_I3: &str = "core-i3";
+pub const CORE_I5: &str = "core-i5";
+
+/// Table 3 `e_ij` (%·s/tuple) for the Micro-Benchmark task types, plus a
+/// near-zero spout row (spouts only emit) and Storm-Benchmark rows for
+/// RollingCount/UniqueVisitor (profiled on our engine; same machine
+/// ordering as Table 3: Machine 1 = Pentium, 2 = i3, 3 = i5).
+pub fn paper_profiles() -> ProfileDb {
+    let mut db = ProfileDb::new();
+    // (task_type, [e on pentium, e on i3, e on i5], met)
+    let rows: &[(&str, [f64; 3], f64)] = &[
+        // Table 3 verbatim. NB the paper measured the *Pentium* cheapest
+        // per tuple for these CPU-bound microbenchmark bodies.
+        ("lowCompute", [0.0581, 0.1070, 0.0916], 2.0),
+        ("midCompute", [0.1030, 0.1844, 0.1680], 2.0),
+        ("highCompute", [0.1915, 0.3449, 0.3207], 2.0),
+        // Spout: emit-only, tiny serialization cost.
+        ("spout", [0.0040, 0.0072, 0.0062], 1.0),
+        // Storm-Benchmark profile rows (our engine measurements).
+        ("splitSentence", [0.0900, 0.1600, 0.1450], 2.0),
+        ("rollingCount", [0.0520, 0.0940, 0.0820], 2.0),
+        ("extractVisit", [0.0480, 0.0870, 0.0760], 2.0),
+        ("uniqueCount", [0.1100, 0.1980, 0.1760], 2.0),
+    ];
+    for (task, e, met) in rows {
+        for (mi, mt) in [PENTIUM, CORE_I3, CORE_I5].iter().enumerate() {
+            db.insert(task, mt, TaskProfile { e: e[mi], met: *met });
+        }
+    }
+    db
+}
+
+/// Table 2's heterogeneous worker set: one Pentium Dual-Core, one Core
+/// i3, one Core i5 (the other i3 is the master node).
+pub fn paper_cluster() -> (Cluster, ProfileDb) {
+    let mut c = Cluster::new("paper-table2");
+    let p = c.add_type(PENTIUM, "Pentium Dual-Core 2.6 GHz, 2 GB");
+    let i3 = c.add_type(CORE_I3, "Intel Core i3 2.9 GHz, 4 GB");
+    let i5 = c.add_type(CORE_I5, "Intel Core i5 2.5 GHz, 6 GB");
+    c.add_machines(p, 1, "pentium");
+    c.add_machines(i3, 1, "i3");
+    c.add_machines(i5, 1, "i5");
+    (c, paper_profiles())
+}
+
+/// A homogeneous control cluster (used by ablation benches): `n` machines
+/// all of the i3 type.
+pub fn homogeneous_cluster(n: usize) -> (Cluster, ProfileDb) {
+    let mut c = Cluster::new(format!("homogeneous-i3-x{n}"));
+    let i3 = c.add_type(CORE_I3, "Intel Core i3 2.9 GHz, 4 GB");
+    c.add_machines(i3, n, "i3");
+    (c, paper_profiles())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_shape() {
+        let (c, db) = paper_cluster();
+        c.validate().unwrap();
+        assert_eq!(c.n_machines(), 3);
+        assert_eq!(c.n_types(), 3);
+        // Table 3 spot checks
+        assert_eq!(db.get("lowCompute", PENTIUM).unwrap().e, 0.0581);
+        assert_eq!(db.get("midCompute", CORE_I3).unwrap().e, 0.1844);
+        assert_eq!(db.get("highCompute", CORE_I5).unwrap().e, 0.3207);
+    }
+
+    #[test]
+    fn homogeneous_shape() {
+        let (c, _) = homogeneous_cluster(4);
+        c.validate().unwrap();
+        assert_eq!(c.n_machines(), 4);
+        assert_eq!(c.machines_per_type(), vec![4]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Profile database: the paper's pre-process profiling data (§5.2).
+//!
+//! For every `(task_type, machine_type)` pair the DB holds
+//!
+//! * `e`   — average per-tuple execution cost, in **%·s/tuple**: one
+//!   instance processing `IR` tuples/s occupies `e * IR` percent of the
+//!   machine's CPU budget (paper eq. 5 first term; Table 3 values).
+//! * `met` — miscellaneous execution time of Storm for the task on that
+//!   machine, in percent (eq. 5 second term; a constant per pair).
+//!
+//! The units interpretation is documented in DESIGN.md §5: with Table 3's
+//! `e = 0.1915` for highCompute on Machine 1, a single instance saturates
+//! one worker at `(100 - MET) / 0.1915 ≈ 500` tuples/s — consistent with
+//! the paper's Fig. 6 rate axis.
+
+use std::collections::HashMap;
+
+use crate::{Error, Result};
+
+/// Cost of one task instance of some type on some machine type.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskProfile {
+    /// Per-tuple execution cost, %·s/tuple.
+    pub e: f64,
+    /// Miscellaneous per-instance overhead, %.
+    pub met: f64,
+}
+
+/// `(task_type, machine_type) -> TaskProfile` with helpful errors.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileDb {
+    entries: HashMap<String, HashMap<String, TaskProfile>>,
+}
+
+impl ProfileDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, task_type: &str, machine_type: &str, p: TaskProfile) {
+        self.entries
+            .entry(task_type.to_string())
+            .or_default()
+            .insert(machine_type.to_string(), p);
+    }
+
+    pub fn get(&self, task_type: &str, machine_type: &str) -> Result<TaskProfile> {
+        self.entries
+            .get(task_type)
+            .and_then(|m| m.get(machine_type))
+            .copied()
+            .ok_or_else(|| Error::MissingProfile {
+                task_type: task_type.to_string(),
+                machine_type: machine_type.to_string(),
+            })
+    }
+
+    /// Predicted TCU (eq. 5) of one instance at input rate `ir` (tuple/s).
+    pub fn tcu(&self, task_type: &str, machine_type: &str, ir: f64) -> Result<f64> {
+        let p = self.get(task_type, machine_type)?;
+        Ok(p.e * ir + p.met)
+    }
+
+    pub fn task_types(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Verify the DB covers every `(component, machine type)` pair a
+    /// topology/cluster combination will ask for.
+    pub fn check_coverage(
+        &self,
+        top: &crate::topology::Topology,
+        cluster: &crate::cluster::Cluster,
+    ) -> Result<()> {
+        for c in &top.components {
+            for t in &cluster.types {
+                self.get(&c.task_type, &t.name)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-machine expanded tables for the AOT scorer: `e_m[c][m]` and
+    /// `met_m[c][m]` (the Rust side does the type gather so the kernel
+    /// sees dense tables; see python/compile/kernels/score.py).
+    pub fn expand(
+        &self,
+        top: &crate::topology::Topology,
+        cluster: &crate::cluster::Cluster,
+    ) -> Result<(Vec<Vec<f64>>, Vec<Vec<f64>>)> {
+        let n = top.n_components();
+        let m = cluster.n_machines();
+        let mut e_m = vec![vec![0.0; m]; n];
+        let mut met_m = vec![vec![0.0; m]; n];
+        for (ci, comp) in top.components.iter().enumerate() {
+            for (mi, mach) in cluster.machines.iter().enumerate() {
+                let p = self.get(&comp.task_type, &cluster.types[mach.type_id].name)?;
+                e_m[ci][mi] = p.e;
+                met_m[ci][mi] = p.met;
+            }
+        }
+        Ok((e_m, met_m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut db = ProfileDb::new();
+        db.insert("low", "fast", TaskProfile { e: 0.05, met: 2.0 });
+        let p = db.get("low", "fast").unwrap();
+        assert_eq!(p.e, 0.05);
+        assert!(db.get("low", "slow").is_err());
+    }
+
+    #[test]
+    fn tcu_is_linear() {
+        let mut db = ProfileDb::new();
+        db.insert("t", "m", TaskProfile { e: 0.1, met: 3.0 });
+        assert!((db.tcu("t", "m", 0.0).unwrap() - 3.0).abs() < 1e-12);
+        assert!((db.tcu("t", "m", 100.0).unwrap() - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_profiles_cover_micro() {
+        let (cluster, db) = presets::paper_cluster();
+        for t in benchmarks::micro() {
+            db.check_coverage(&t, &cluster).unwrap();
+        }
+    }
+
+    #[test]
+    fn expand_shapes() {
+        let (cluster, db) = presets::paper_cluster();
+        let t = benchmarks::linear();
+        let (e_m, met_m) = db.expand(&t, &cluster).unwrap();
+        assert_eq!(e_m.len(), t.n_components());
+        assert_eq!(e_m[0].len(), cluster.n_machines());
+        assert_eq!(met_m.len(), t.n_components());
+        // highCompute on the Pentium worker must match Table 3
+        let hi = t.components.iter().position(|c| c.task_type == "highCompute").unwrap();
+        let pentium = cluster
+            .machines
+            .iter()
+            .position(|m| cluster.types[m.type_id].name == "pentium")
+            .unwrap();
+        assert!((e_m[hi][pentium] - 0.1915).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,82 @@
+//! Table 4's large-scale simulation scenarios (paper §6.3).
+//!
+//! | scenario | type   | Pentium | Core i3 | Core i5 |
+//! |----------|--------|---------|---------|---------|
+//! | 1        | small  | 2       | 2       | 2       |
+//! | 2        | medium | 10      | 10      | 10      |
+//! | 3        | large  | 20      | 70      | 90      |
+//!
+//! Machine 1/2/3 in Table 4 map to Table 2's Pentium / Core i3 / Core i5
+//! worker types.
+
+use super::presets::{paper_profiles, CORE_I3, CORE_I5, PENTIUM};
+use super::profile::ProfileDb;
+use super::Cluster;
+
+/// One Table 4 row.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub id: usize,
+    pub label: &'static str,
+    pub n_pentium: usize,
+    pub n_i3: usize,
+    pub n_i5: usize,
+}
+
+/// All three Table 4 scenarios.
+pub const SCENARIOS: [Scenario; 3] = [
+    Scenario { id: 1, label: "small", n_pentium: 2, n_i3: 2, n_i5: 2 },
+    Scenario { id: 2, label: "medium", n_pentium: 10, n_i3: 10, n_i5: 10 },
+    Scenario { id: 3, label: "large", n_pentium: 20, n_i3: 70, n_i5: 90 },
+];
+
+impl Scenario {
+    pub fn total_machines(&self) -> usize {
+        self.n_pentium + self.n_i3 + self.n_i5
+    }
+
+    /// Materialize the cluster (+ the shared profile DB).
+    pub fn build(&self) -> (Cluster, ProfileDb) {
+        let mut c = Cluster::new(format!("scenario{}-{}", self.id, self.label));
+        let p = c.add_type(PENTIUM, "Pentium Dual-Core 2.6 GHz");
+        let i3 = c.add_type(CORE_I3, "Intel Core i3 2.9 GHz");
+        let i5 = c.add_type(CORE_I5, "Intel Core i5 2.5 GHz");
+        c.add_machines(p, self.n_pentium, "pentium");
+        c.add_machines(i3, self.n_i3, "i3");
+        c.add_machines(i5, self.n_i5, "i5");
+        (c, paper_profiles())
+    }
+}
+
+/// Scenario lookup by id (1-based, as in the paper).
+pub fn by_id(id: usize) -> Option<Scenario> {
+    SCENARIOS.iter().copied().find(|s| s.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_counts() {
+        assert_eq!(SCENARIOS[0].total_machines(), 6);
+        assert_eq!(SCENARIOS[1].total_machines(), 30);
+        assert_eq!(SCENARIOS[2].total_machines(), 180);
+    }
+
+    #[test]
+    fn build_all() {
+        for s in SCENARIOS {
+            let (c, db) = s.build();
+            c.validate().unwrap();
+            assert_eq!(c.n_machines(), s.total_machines());
+            assert!(db.get("highCompute", CORE_I5).is_ok());
+        }
+    }
+
+    #[test]
+    fn by_id_lookup() {
+        assert_eq!(by_id(3).unwrap().label, "large");
+        assert!(by_id(4).is_none());
+    }
+}

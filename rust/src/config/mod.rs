@@ -1,0 +1,406 @@
+//! Config system: JSON descriptions of topologies, clusters, profiles
+//! and experiment runs, so downstream users can drive hstorm without
+//! writing Rust (`hstorm schedule --config my.json`).
+//!
+//! Parsing uses the in-tree [`crate::util::json`] module (this image
+//! builds offline; serde is unavailable — see `rust/src/util/`).
+
+use std::path::Path;
+
+use crate::cluster::profile::{ProfileDb, TaskProfile};
+use crate::cluster::Cluster;
+use crate::topology::{Component, ComponentKind, Topology};
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+/// One component row in a topology config.
+#[derive(Debug, Clone)]
+pub struct ComponentConfig {
+    pub name: String,
+    /// "spout" or "bolt".
+    pub kind: String,
+    pub task_type: String,
+    pub alpha: f64,
+    /// Names of upstream components (empty for spouts).
+    pub parents: Vec<String>,
+}
+
+/// A user topology graph in config form.
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    pub name: String,
+    pub components: Vec<ComponentConfig>,
+}
+
+impl TopologyConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let name = v.str_field("name")?.to_string();
+        let mut components = Vec::new();
+        for c in v.get("components")?.as_arr().ok_or_else(|| Error::Config("components must be an array".into()))? {
+            components.push(ComponentConfig {
+                name: c.str_field("name")?.to_string(),
+                kind: c.str_field("kind")?.to_string(),
+                task_type: c.str_field("task_type")?.to_string(),
+                alpha: c.opt("alpha").and_then(|a| a.as_f64()).unwrap_or(1.0),
+                parents: c
+                    .opt("parents")
+                    .and_then(|p| p.as_arr())
+                    .map(|arr| arr.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                    .unwrap_or_default(),
+            });
+        }
+        Ok(TopologyConfig { name, components })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            (
+                "components",
+                json::arr(
+                    self.components
+                        .iter()
+                        .map(|c| {
+                            json::obj(vec![
+                                ("name", json::s(&c.name)),
+                                ("kind", json::s(&c.kind)),
+                                ("task_type", json::s(&c.task_type)),
+                                ("alpha", json::num(c.alpha)),
+                                (
+                                    "parents",
+                                    json::arr(c.parents.iter().map(|p| json::s(p)).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_topology(&self) -> Result<Topology> {
+        let mut components = Vec::new();
+        let mut edges = Vec::new();
+        for c in &self.components {
+            let kind = match c.kind.as_str() {
+                "spout" => ComponentKind::Spout,
+                "bolt" => ComponentKind::Bolt,
+                other => {
+                    return Err(Error::Config(format!(
+                        "component '{}': kind must be spout|bolt, got '{other}'",
+                        c.name
+                    )))
+                }
+            };
+            components.push(Component {
+                name: c.name.clone(),
+                kind,
+                task_type: c.task_type.clone(),
+                alpha: c.alpha,
+            });
+        }
+        for (i, c) in self.components.iter().enumerate() {
+            for p in &c.parents {
+                let pi = self
+                    .components
+                    .iter()
+                    .position(|x| &x.name == p)
+                    .ok_or_else(|| {
+                        Error::Config(format!("component '{}': unknown parent '{p}'", c.name))
+                    })?;
+                edges.push((pi, i));
+            }
+        }
+        let top = Topology { name: self.name.clone(), components, edges };
+        top.validate()?;
+        Ok(top)
+    }
+
+    pub fn from_topology(top: &Topology) -> Self {
+        TopologyConfig {
+            name: top.name.clone(),
+            components: top
+                .components
+                .iter()
+                .enumerate()
+                .map(|(i, c)| ComponentConfig {
+                    name: c.name.clone(),
+                    kind: match c.kind {
+                        ComponentKind::Spout => "spout".into(),
+                        ComponentKind::Bolt => "bolt".into(),
+                    },
+                    task_type: c.task_type.clone(),
+                    alpha: c.alpha,
+                    parents: top
+                        .upstream(i)
+                        .iter()
+                        .map(|&p| top.components[p].name.clone())
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Machine group row: `count` machines of one type.
+#[derive(Debug, Clone)]
+pub struct MachineGroupConfig {
+    pub machine_type: String,
+    pub description: String,
+    pub count: usize,
+}
+
+/// Cluster config form.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub name: String,
+    pub groups: Vec<MachineGroupConfig>,
+}
+
+impl ClusterConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut groups = Vec::new();
+        for g in v.get("groups")?.as_arr().ok_or_else(|| Error::Config("groups must be an array".into()))? {
+            groups.push(MachineGroupConfig {
+                machine_type: g.str_field("machine_type")?.to_string(),
+                description: g.opt("description").and_then(|d| d.as_str()).unwrap_or("").to_string(),
+                count: g
+                    .get("count")?
+                    .as_usize()
+                    .ok_or_else(|| Error::Config("count must be a non-negative integer".into()))?,
+            });
+        }
+        Ok(ClusterConfig { name: v.str_field("name")?.to_string(), groups })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            (
+                "groups",
+                json::arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            json::obj(vec![
+                                ("machine_type", json::s(&g.machine_type)),
+                                ("description", json::s(&g.description)),
+                                ("count", json::num(g.count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_cluster(&self) -> Result<Cluster> {
+        let mut cluster = Cluster::new(self.name.clone());
+        for g in &self.groups {
+            let tid = cluster.add_type(&g.machine_type, &g.description);
+            cluster.add_machines(tid, g.count, &g.machine_type);
+        }
+        cluster.validate()?;
+        Ok(cluster)
+    }
+}
+
+/// One profile row: e/met of a task type per machine type.
+#[derive(Debug, Clone)]
+pub struct ProfileRowConfig {
+    pub task_type: String,
+    pub machine_type: String,
+    /// %·s/tuple.
+    pub e: f64,
+    /// %.
+    pub met: f64,
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub topology: TopologyConfig,
+    pub cluster: ClusterConfig,
+    pub profiles: Vec<ProfileRowConfig>,
+    /// Initial topology input rate R0 (tuple/s).
+    pub r0: f64,
+    /// Scheduler: "default" | "hetero" | "optimal".
+    pub scheduler: String,
+}
+
+impl ExperimentConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut profiles = Vec::new();
+        for r in v.get("profiles")?.as_arr().ok_or_else(|| Error::Config("profiles must be an array".into()))? {
+            profiles.push(ProfileRowConfig {
+                task_type: r.str_field("task_type")?.to_string(),
+                machine_type: r.str_field("machine_type")?.to_string(),
+                e: r.num_field("e")?,
+                met: r.opt("met").and_then(|m| m.as_f64()).unwrap_or(0.0),
+            });
+        }
+        Ok(ExperimentConfig {
+            topology: TopologyConfig::from_json(v.get("topology")?)?,
+            cluster: ClusterConfig::from_json(v.get("cluster")?)?,
+            profiles,
+            r0: v.opt("r0").and_then(|r| r.as_f64()).unwrap_or(8.0),
+            scheduler: v
+                .opt("scheduler")
+                .and_then(|s| s.as_str())
+                .unwrap_or("hetero")
+                .to_string(),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("topology", self.topology.to_json()),
+            ("cluster", self.cluster.to_json()),
+            (
+                "profiles",
+                json::arr(
+                    self.profiles
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("task_type", json::s(&r.task_type)),
+                                ("machine_type", json::s(&r.machine_type)),
+                                ("e", json::num(r.e)),
+                                ("met", json::num(r.met)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("r0", json::num(self.r0)),
+            ("scheduler", json::s(&self.scheduler)),
+        ])
+    }
+
+    pub fn profile_db(&self) -> ProfileDb {
+        let mut db = ProfileDb::new();
+        for r in &self.profiles {
+            db.insert(&r.task_type, &r.machine_type, TaskProfile { e: r.e, met: r.met });
+        }
+        db
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, json::to_string_pretty(&self.to_json()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::benchmarks;
+
+    fn sample_json() -> &'static str {
+        r#"{
+  "topology": {
+    "name": "tiny",
+    "components": [
+      { "name": "src", "kind": "spout", "task_type": "spout" },
+      { "name": "work", "kind": "bolt", "task_type": "midCompute",
+        "alpha": 1.0, "parents": ["src"] }
+    ]
+  },
+  "cluster": {
+    "name": "duo",
+    "groups": [
+      { "machine_type": "fast", "count": 1 },
+      { "machine_type": "slow", "count": 1 }
+    ]
+  },
+  "profiles": [
+    { "task_type": "spout", "machine_type": "fast", "e": 0.004, "met": 1.0 },
+    { "task_type": "spout", "machine_type": "slow", "e": 0.008, "met": 1.0 },
+    { "task_type": "midCompute", "machine_type": "fast", "e": 0.1, "met": 2.0 },
+    { "task_type": "midCompute", "machine_type": "slow", "e": 0.2, "met": 2.0 }
+  ],
+  "r0": 10.0,
+  "scheduler": "hetero"
+}"#
+    }
+
+    #[test]
+    fn parse_full_experiment() {
+        let cfg = ExperimentConfig::parse(sample_json()).unwrap();
+        let top = cfg.topology.to_topology().unwrap();
+        let cluster = cfg.cluster.to_cluster().unwrap();
+        let db = cfg.profile_db();
+        assert_eq!(top.n_components(), 2);
+        assert_eq!(cluster.n_machines(), 2);
+        db.check_coverage(&top, &cluster).unwrap();
+        assert_eq!(cfg.r0, 10.0);
+    }
+
+    #[test]
+    fn topology_config_roundtrip() {
+        for t in benchmarks::all() {
+            let cfg = TopologyConfig::from_topology(&t);
+            let back = cfg.to_topology().unwrap();
+            assert_eq!(back.n_components(), t.n_components());
+            assert_eq!(back.edges.len(), t.edges.len());
+            // gains identical => rate semantics preserved
+            let g1 = t.rate_gains().unwrap();
+            let g2 = back.rate_gains().unwrap();
+            for (a, b) in g1.iter().zip(&g2) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_via_value() {
+        let cfg = ExperimentConfig::parse(sample_json()).unwrap();
+        let text = json::to_string_pretty(&cfg.to_json());
+        let back = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(back.topology.name, cfg.topology.name);
+        assert_eq!(back.profiles.len(), cfg.profiles.len());
+        assert_eq!(back.cluster.groups.len(), cfg.cluster.groups.len());
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut cfg = ExperimentConfig::parse(sample_json()).unwrap();
+        cfg.topology.components[0].kind = "widget".into();
+        assert!(cfg.topology.to_topology().is_err());
+    }
+
+    #[test]
+    fn unknown_parent_rejected() {
+        let mut cfg = ExperimentConfig::parse(sample_json()).unwrap();
+        cfg.topology.components[1].parents = vec!["ghost".into()];
+        assert!(cfg.topology.to_topology().is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ExperimentConfig::parse(sample_json()).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "hstorm-cfg-test-{}.json",
+            std::process::id()
+        ));
+        cfg.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.topology.name, "tiny");
+        assert_eq!(back.profiles.len(), 4);
+    }
+
+    #[test]
+    fn missing_required_field_rejected() {
+        assert!(ExperimentConfig::parse("{}").is_err());
+        assert!(ExperimentConfig::parse(r#"{"topology": {"name": "x"}}"#).is_err());
+    }
+}

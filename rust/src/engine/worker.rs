@@ -1,0 +1,192 @@
+//! Machine worker thread: a single-server queue with a 100 %·s/s budget.
+//!
+//! Each tuple addressed to a task hosted here consumes `e[c][m]`
+//! percent-seconds of CPU budget (profile units scaled by `time_scale`);
+//! per-instance MET overhead is burned as periodic background work so
+//! measured utilization contains the same constant term the prediction
+//! model adds (eq. 5).  Service is realized either as high-resolution
+//! sleeping ([`ComputeMode::Simulated`]) or by repeatedly executing the
+//! AOT work kernel ([`ComputeMode::Pjrt`]).
+
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::WorkItem;
+use crate::metrics::Registry;
+use crate::util::rng::Rng;
+
+/// How service time is realized.
+#[derive(Debug, Clone)]
+pub enum ComputeMode {
+    /// High-resolution sleep (deterministic timing; the default).
+    Simulated,
+    /// Execute the AOT `work.hlo.txt` kernel repeatedly — real compute
+    /// through PJRT on the data path.  The value is the artifacts dir.
+    Pjrt { artifacts_dir: String },
+}
+
+pub(crate) struct MachineCtx {
+    pub machine: usize,
+    /// tasks[c][slot] = hosting machine (global task table).
+    pub tasks: Vec<Vec<usize>>,
+    pub e_m: Vec<Vec<f64>>,
+    pub met_m: Vec<Vec<f64>>,
+    pub alpha: Vec<f64>,
+    pub downstream: Vec<Vec<usize>>,
+    pub senders: Vec<Sender<WorkItem>>,
+    pub pending: Arc<Vec<AtomicI64>>,
+    pub recording: Arc<AtomicBool>,
+    pub stop: Arc<AtomicBool>,
+    pub metrics: Registry,
+    pub time_scale: f64,
+    pub noise: f64,
+    pub rng: Rng,
+    pub compute: ComputeMode,
+}
+
+/// Executes service time; abstracts Simulated vs Pjrt burning.
+enum Burner {
+    Sleep { owed: f64 },
+    Pjrt { kernel: crate::runtime::WorkKernel, secs_per_call: f64 },
+}
+
+impl Burner {
+    fn new(mode: &ComputeMode) -> Self {
+        match mode {
+            ComputeMode::Simulated => Burner::Sleep { owed: 0.0 },
+            ComputeMode::Pjrt { artifacts_dir } => {
+                // Each machine thread owns its own PJRT client + compiled
+                // kernel (the xla handles are not Send).
+                let rt = crate::runtime::PjRtRuntime::cpu(artifacts_dir)
+                    .expect("engine pjrt mode: artifacts must exist");
+                let kernel = rt.work_kernel().expect("work kernel loads");
+                // calibrate: how long does one kernel invocation take?
+                let t = Instant::now();
+                let calls = 200;
+                kernel.burn(calls).expect("calibration burn");
+                let secs_per_call = (t.elapsed().as_secs_f64() / calls as f64).max(1e-7);
+                Burner::Pjrt { kernel, secs_per_call }
+            }
+        }
+    }
+
+    /// Burn `secs` of CPU budget (already wall-scaled).
+    fn burn(&mut self, secs: f64) {
+        match self {
+            Burner::Sleep { owed } => {
+                // accumulate sub-millisecond debts and sleep in chunks so
+                // cheap tuples (spouts) do not drown in syscall overhead;
+                // measure the actual sleep so overshoot (scheduler
+                // latency) is repaid instead of shrinking capacity
+                *owed += secs;
+                if *owed >= 500e-6 {
+                    let t = Instant::now();
+                    std::thread::sleep(Duration::from_secs_f64(*owed));
+                    *owed -= t.elapsed().as_secs_f64();
+                }
+            }
+            Burner::Pjrt { kernel, secs_per_call } => {
+                let calls = (secs / *secs_per_call).ceil().max(1.0) as usize;
+                kernel.burn(calls).expect("work kernel burn");
+            }
+        }
+    }
+}
+
+pub(crate) fn machine_loop(mut ctx: MachineCtx, rx: Receiver<WorkItem>) {
+    let m = ctx.machine;
+    let n_comp = ctx.tasks.len();
+    let busy_us = ctx.metrics.counter(&format!("machine.{m}.busy_us"));
+    let processed: Vec<_> =
+        (0..n_comp).map(|c| ctx.metrics.counter(&format!("comp.{c}.processed"))).collect();
+    let svc: Vec<_> = (0..n_comp).map(|c| ctx.metrics.mean(&format!("svc.{c}.{m}"))).collect();
+
+    // Per-instance MET on this machine: background overhead burned every
+    // tick, in budget-percent.
+    let met_total: f64 = (0..n_comp)
+        .map(|c| ctx.tasks[c].iter().filter(|&&tm| tm == m).count() as f64 * ctx.met_m[c][m])
+        .sum();
+    let met_tick = Duration::from_millis(50);
+    let mut last_met = Instant::now();
+
+    // shuffle-grouping cursors: per (producer on this machine) we keep one
+    // cursor per downstream component
+    let mut cursors = vec![0usize; n_comp];
+    // fractional alpha accumulators per component processed here
+    let mut acc = vec![0.0f64; n_comp];
+
+    let mut burner = Burner::new(&ctx.compute);
+
+    loop {
+        // periodic MET burn (keeps measured util containing the eq.-5
+        // constant term)
+        if met_total > 0.0 && last_met.elapsed() >= met_tick {
+            // MET is a constant share of the budget, and the budget is
+            // wall time under time compression — no scale factor here
+            let secs = met_total / 100.0 * met_tick.as_secs_f64();
+            burner.burn(secs);
+            if ctx.recording.load(Ordering::Relaxed) {
+                busy_us.add((secs * 1e6) as u64);
+            }
+            last_met = Instant::now();
+        }
+
+        let item = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(it) => it,
+            Err(RecvTimeoutError::Timeout) => {
+                if ctx.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        ctx.pending[m].fetch_sub(1, Ordering::Relaxed);
+        let c = item.comp;
+
+        // ---- service -----------------------------------------------------
+        let noise_mul = if ctx.noise > 0.0 {
+            1.0 + ctx.noise * (ctx.rng.f64() * 2.0 - 1.0)
+        } else {
+            1.0
+        };
+        let service_budget_secs = ctx.e_m[c][m] / 100.0 * noise_mul; // profile units
+        let service_wall = service_budget_secs * ctx.time_scale;
+        burner.burn(service_wall);
+
+        if ctx.recording.load(Ordering::Relaxed) {
+            busy_us.add((service_wall * 1e6) as u64);
+            processed[c].inc();
+            svc[c].observe(service_wall);
+        }
+
+        // ---- emit downstream (shuffle grouping, eq. 6) ----------------------
+        acc[c] += ctx.alpha[c];
+        let emit = acc[c] as usize;
+        acc[c] -= emit as f64;
+        if emit > 0 {
+            for &d in &ctx.downstream[c] {
+                for _ in 0..emit {
+                    let n_inst = ctx.tasks[d].len();
+                    if n_inst == 0 {
+                        continue;
+                    }
+                    let slot = cursors[d] % n_inst;
+                    cursors[d] = cursors[d].wrapping_add(1);
+                    let target_machine = ctx.tasks[d][slot];
+                    if ctx.senders[target_machine].send(WorkItem { comp: d, slot }).is_ok() {
+                        ctx.pending[target_machine].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+
+        if ctx.stop.load(Ordering::Relaxed) {
+            // drain quickly on shutdown without burning time
+            while rx.try_recv().is_ok() {}
+            return;
+        }
+    }
+}

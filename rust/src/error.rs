@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// All fallible hstorm operations return this error.
+#[derive(Debug)]
+pub enum Error {
+    /// Topology structure is invalid (cycle, dangling edge, no spout...).
+    Topology(String),
+    /// Cluster/profile configuration is invalid or incomplete.
+    Cluster(String),
+    /// A profile entry `(task_type, machine_type)` is missing.
+    MissingProfile { task_type: String, machine_type: String },
+    /// Scheduling failed (e.g. no feasible placement at the initial rate).
+    Schedule(String),
+    /// AOT artifact problems (missing file, dim mismatch, PJRT failure).
+    Runtime(String),
+    /// Engine execution problems.
+    Engine(String),
+    /// Config parsing/IO.
+    Config(String),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Topology(m) => write!(f, "topology error: {m}"),
+            Error::Cluster(m) => write!(f, "cluster error: {m}"),
+            Error::MissingProfile { task_type, machine_type } => {
+                write!(f, "missing profile for task '{task_type}' on machine type '{machine_type}'")
+            }
+            Error::Schedule(m) => write!(f, "schedule error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

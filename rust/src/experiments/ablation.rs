@@ -1,0 +1,130 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! * **refine on/off** — the post-pass (prune + single-move hill climb)
+//!   we added under the paper's §8 "scheduler efficiency" future work;
+//! * **grouping: shuffle vs speed-weighted** — the paper names Storm's
+//!   "simple grouping strategies" as the main obstacle to full
+//!   utilization and proposes rate-weighted grouping as future work;
+//!   here we evaluate the proposed schedule under both semantics;
+//! * **heterogeneity-blindness** — the same algorithm fed a profile
+//!   that averages the machine types (what a heterogeneity-unaware
+//!   modeler would use), quantifying what the paper's core idea buys.
+
+use crate::cluster::presets;
+use crate::cluster::profile::{ProfileDb, TaskProfile};
+use crate::predict::Evaluator;
+use crate::scheduler::hetero::HeteroScheduler;
+use crate::scheduler::Scheduler;
+use crate::topology::benchmarks;
+use crate::Result;
+
+use super::{f1, pct, ExperimentResult};
+
+/// Profile DB with every task's `e` replaced by its across-type mean —
+/// the "heterogeneity-blind" modeler.
+fn blind_profiles(db: &ProfileDb, types: &[&str], tasks: &[&str]) -> ProfileDb {
+    let mut out = ProfileDb::new();
+    for tt in tasks {
+        let mut es = Vec::new();
+        let mut mets = Vec::new();
+        for mt in types {
+            if let Ok(p) = db.get(tt, mt) {
+                es.push(p.e);
+                mets.push(p.met);
+            }
+        }
+        let e = es.iter().sum::<f64>() / es.len().max(1) as f64;
+        let met = mets.iter().sum::<f64>() / mets.len().max(1) as f64;
+        for mt in types {
+            out.insert(tt, mt, TaskProfile { e, met });
+        }
+    }
+    out
+}
+
+pub fn run(_fast: bool) -> Result<ExperimentResult> {
+    let (cluster, db) = presets::paper_cluster();
+    let mut out = ExperimentResult::new(
+        "ablation",
+        "design-choice ablations (max stable throughput, tuples/s, model)",
+        &["topology", "proposed", "no refine", "weighted grouping", "hetero-blind profile"],
+    );
+    let types = ["pentium", "core-i3", "core-i5"];
+    let tasks = ["spout", "lowCompute", "midCompute", "highCompute"];
+    for top in benchmarks::micro() {
+        let ev = Evaluator::new(&top, &cluster, &db)?;
+
+        let full = HeteroScheduler::default().schedule(&top, &cluster, &db)?;
+        let no_refine = HeteroScheduler { refine: false, ..Default::default() }
+            .schedule(&top, &cluster, &db)?;
+
+        // same placement, weighted-grouping semantics
+        let weighted_rate = ev.max_stable_rate_weighted(&full.placement)?;
+        let gain_sum: f64 = top.rate_gains()?.iter().sum();
+        let weighted_thpt = weighted_rate * gain_sum;
+
+        // schedule decided with a heterogeneity-blind profile, evaluated
+        // against the true machine costs
+        let blind_db = blind_profiles(&db, &types, &tasks);
+        let blind = HeteroScheduler::default().schedule(&top, &cluster, &blind_db)?;
+        let blind_true_rate = ev.max_stable_rate(&blind.placement)?;
+        let blind_thpt = blind_true_rate.min(1e12) * gain_sum;
+
+        out.row(vec![
+            top.name.clone(),
+            f1(full.eval.throughput),
+            format!(
+                "{} ({})",
+                f1(no_refine.eval.throughput),
+                pct((no_refine.eval.throughput - full.eval.throughput) / full.eval.throughput
+                    * 100.0)
+            ),
+            format!(
+                "{} ({})",
+                f1(weighted_thpt),
+                pct((weighted_thpt - full.eval.throughput) / full.eval.throughput * 100.0)
+            ),
+            format!(
+                "{} ({})",
+                f1(blind_thpt),
+                pct((blind_thpt - full.eval.throughput) / full.eval.throughput * 100.0)
+            ),
+        ]);
+    }
+    out.note("weighted grouping applies speed-proportional stream shares to the proposed placement (paper §8 future work); it helps isolated instances and can hurt co-located ones");
+    out.note("hetero-blind: schedule computed from type-averaged profiles, evaluated on true costs — what ignoring heterogeneity costs");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ablation_rows_complete() {
+        let r = super::run(true).unwrap();
+        assert_eq!(r.rows.len(), 3);
+        for row in &r.rows {
+            let full: f64 = row[1].parse().unwrap();
+            assert!(full > 0.0);
+        }
+    }
+
+    #[test]
+    fn refine_never_hurts() {
+        let r = super::run(true).unwrap();
+        for row in &r.rows {
+            let full: f64 = row[1].parse().unwrap();
+            let no_refine: f64 = row[2].split(' ').next().unwrap().parse().unwrap();
+            assert!(full >= no_refine * 0.999, "{}: refine hurt", row[0]);
+        }
+    }
+
+    #[test]
+    fn blind_profile_never_helps() {
+        let r = super::run(true).unwrap();
+        for row in &r.rows {
+            let full: f64 = row[1].parse().unwrap();
+            let blind: f64 = row[4].split(' ').next().unwrap().parse().unwrap();
+            assert!(blind <= full * 1.001, "{}: blind schedule beat informed one", row[0]);
+        }
+    }
+}

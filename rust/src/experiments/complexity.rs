@@ -1,0 +1,112 @@
+//! §3 complexity: the size of the optimal scheduler's design space and
+//! the measured cost of searching it with the batched AOT scorer.
+//!
+//! The paper's example: a topology with 4 bolts on 3 machines with
+//! `k_j = 10` gives `C(30, 4) = 27,405` instance-count possibilities and
+//! took ~18 h on a 4×Xeon-5560 server.  Here we report (a) the same
+//! combinatorial counts, (b) placement-level space sizes for our bounded
+//! search, and (c) the measured candidate-scoring rate, which turns
+//! "18 hours" into seconds.
+
+use std::time::Instant;
+
+use crate::cluster::presets;
+use crate::predict::Placement;
+use crate::runtime::scorer::{NativeScorer, PlacementScorer};
+use crate::scheduler::optimal::OptimalScheduler;
+use crate::topology::benchmarks;
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::{f1, ExperimentResult};
+
+/// `C(n, k)` as u128 (the paper's eq. 1 count).
+pub fn binom(n: u64, k: u64) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut r: u128 = 1;
+    for i in 0..k {
+        r = r * (n - i) as u128 / (i + 1) as u128;
+    }
+    r
+}
+
+/// Measure native candidate-scoring throughput (candidates/second).
+pub fn scoring_rate(samples: usize) -> Result<f64> {
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::linear();
+    let scorer = NativeScorer::new(&top, &cluster, &db)?;
+    let mut rng = Rng::new(0xC0DE);
+    let n = top.n_components();
+    let m = cluster.n_machines();
+    let mut batch = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let mut p = Placement::empty(n, m);
+        for c in 0..n {
+            for _ in 0..rng.range(1, 3) {
+                p.x[c][rng.range(0, m - 1)] += 1;
+            }
+        }
+        batch.push(p);
+    }
+    let rates = vec![1.0; batch.len()];
+    let t = Instant::now();
+    let rows = scorer.score_batch(&batch, &rates)?;
+    let dt = t.elapsed().as_secs_f64();
+    assert_eq!(rows.len(), samples);
+    Ok(samples as f64 / dt)
+}
+
+pub fn run(fast: bool) -> Result<ExperimentResult> {
+    let mut out = ExperimentResult::new(
+        "space",
+        "design-space size and search cost (paper §3)",
+        &["quantity", "value"],
+    );
+    // the paper's count-vector example
+    out.row(vec![
+        "count vectors, n=4 bolts, m=3, sum k_j=30 (paper)".into(),
+        format!("{} (paper: 27,405, ~18 h)", binom(30, 4)),
+    ]);
+    for max_inst in [2usize, 3, 4] {
+        let o = OptimalScheduler { max_instances_per_component: max_inst, ..Default::default() };
+        out.row(vec![
+            format!("placement space, linear (4 comp, 3 machines, <= {max_inst} inst)"),
+            o.design_space_size(4, 3).to_string(),
+        ]);
+    }
+    let samples = if fast { 2_000 } else { 50_000 };
+    let rate = scoring_rate(samples)?;
+    out.row(vec![
+        format!("native scoring rate ({samples} candidates)"),
+        format!("{} candidates/s", f1(rate)),
+    ]);
+    let space = OptimalScheduler::default().design_space_size(4, 3) as f64;
+    out.row(vec![
+        "est. full search time at that rate (<=3 inst)".into(),
+        format!("{:.2} s (paper's comparator: hours)", space / rate),
+    ]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn paper_count_reproduced() {
+        assert_eq!(super::binom(30, 4), 27_405);
+    }
+
+    #[test]
+    fn scoring_rate_positive() {
+        let r = super::scoring_rate(500).unwrap();
+        assert!(r > 1_000.0, "scoring rate {r} too slow");
+    }
+
+    #[test]
+    fn report_has_rows() {
+        let r = super::run(true).unwrap();
+        assert!(r.rows.len() >= 5);
+    }
+}

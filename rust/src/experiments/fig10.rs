@@ -1,0 +1,172 @@
+//! Fig. 10 + Table 4 + Table 5: large-scale simulation of the proposed
+//! vs default schedulers on the three Table-4 cluster scenarios, and the
+//! throughput-gain / utilization-gain ratios.
+//!
+//! Methodology (paper §6.3): the proposed algorithm determines the
+//! instance counts for the given cluster; both placement policies then
+//! place that same ETG; the analytic simulator reports overall
+//! throughput and eq.-7 weighted utilization.
+
+use crate::cluster::scenarios::{Scenario, SCENARIOS};
+use crate::scheduler::default_rr::DefaultScheduler;
+use crate::scheduler::hetero::HeteroScheduler;
+use crate::scheduler::Scheduler;
+use crate::simulator;
+use crate::topology::{benchmarks, Etg};
+use crate::Result;
+
+use super::{f1, f2, pct, ExperimentResult};
+
+/// One (scenario, topology) comparison.
+#[derive(Debug, Clone)]
+pub struct ScaleCell {
+    pub scenario: usize,
+    pub topology: String,
+    pub tasks: usize,
+    pub def_thpt: f64,
+    pub def_util: f64,
+    pub ours_thpt: f64,
+    pub ours_util: f64,
+}
+
+impl ScaleCell {
+    pub fn thpt_gain(&self) -> f64 {
+        (self.ours_thpt - self.def_thpt) / self.def_thpt * 100.0
+    }
+
+    pub fn util_gain(&self) -> f64 {
+        (self.ours_util - self.def_util) / self.def_util * 100.0
+    }
+
+    /// Table 5's ratio: diff_thpt / diff_util.
+    pub fn ratio(&self) -> f64 {
+        let ug = self.util_gain();
+        if ug.abs() < 1e-9 {
+            f64::INFINITY
+        } else {
+            self.thpt_gain() / ug
+        }
+    }
+}
+
+fn run_cell(s: &Scenario, topology: &str) -> Result<ScaleCell> {
+    let (cluster, db) = s.build();
+    let top = benchmarks::by_name(topology)
+        .ok_or_else(|| crate::Error::Config(format!("unknown topology {topology}")))?;
+    let ours = HeteroScheduler::default().schedule(&top, &cluster, &db)?;
+    let etg = Etg { counts: ours.placement.counts() };
+    let def_placement = DefaultScheduler::assign(&top, &cluster, &etg)?;
+
+    let ours_rep = simulator::simulate(&top, &cluster, &db, &ours.placement, None)?;
+    let def_rep = simulator::simulate(&top, &cluster, &db, &def_placement, None)?;
+    Ok(ScaleCell {
+        scenario: s.id,
+        topology: topology.to_string(),
+        tasks: etg.total_tasks(),
+        def_thpt: def_rep.throughput,
+        def_util: def_rep.weighted_util,
+        ours_thpt: ours_rep.throughput,
+        ours_util: ours_rep.weighted_util,
+    })
+}
+
+/// All 9 cells (3 scenarios × 3 topologies).
+pub fn cells(fast: bool) -> Result<Vec<ScaleCell>> {
+    let scenarios: Vec<Scenario> = if fast {
+        SCENARIOS.iter().take(2).copied().collect()
+    } else {
+        SCENARIOS.to_vec()
+    };
+    let mut out = Vec::new();
+    for s in &scenarios {
+        for t in ["linear", "diamond", "star"] {
+            out.push(run_cell(s, t)?);
+        }
+    }
+    Ok(out)
+}
+
+pub fn run(fast: bool) -> Result<ExperimentResult> {
+    let mut out = ExperimentResult::new(
+        "fig10",
+        "large-scale simulation: proposed vs default (Table 4 scenarios)",
+        &[
+            "scenario", "topology", "tasks", "thpt default", "thpt proposed", "gain",
+            "util default", "util proposed", "util gain",
+        ],
+    );
+    for c in cells(fast)? {
+        out.row(vec![
+            format!("{} ({})", c.scenario, ["", "small", "medium", "large"][c.scenario]),
+            c.topology.clone(),
+            c.tasks.to_string(),
+            f1(c.def_thpt),
+            f1(c.ours_thpt),
+            pct(c.thpt_gain()),
+            f1(c.def_util),
+            f1(c.ours_util),
+            pct(c.util_gain()),
+        ]);
+    }
+    out.note("paper: +26..49% (small), +36..48% (medium), +27..31% (large) throughput gain");
+    if fast {
+        out.note("fast mode: scenario 3 (180 machines) skipped");
+    }
+    Ok(out)
+}
+
+/// Table 5: the throughput-gain / utilization-gain ratios.
+pub fn table5(fast: bool) -> Result<ExperimentResult> {
+    let mut out = ExperimentResult::new(
+        "table5",
+        "ratio of throughput gain to utilization gain (proposed vs default)",
+        &["scenario", "linear", "diamond", "star"],
+    );
+    let all = cells(fast)?;
+    let mut by_scenario: std::collections::BTreeMap<usize, Vec<&ScaleCell>> = Default::default();
+    for c in &all {
+        by_scenario.entry(c.scenario).or_default().push(c);
+    }
+    for (sid, row_cells) in by_scenario {
+        let mut row = vec![sid.to_string()];
+        for t in ["linear", "diamond", "star"] {
+            let cell = row_cells.iter().find(|c| c.topology == t).unwrap();
+            let r = cell.ratio();
+            row.push(if r.is_finite() { f2(r) } else { "inf".into() });
+        }
+        out.row(row);
+    }
+    out.note("paper Table 5: ratios 1.03 .. 2.68, all > 1 (throughput grows faster than CPU spend)");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn proposed_dominates_default_at_scale() {
+        for c in super::cells(true).unwrap() {
+            assert!(
+                c.ours_thpt >= c.def_thpt,
+                "scenario {} {}: proposed {} < default {}",
+                c.scenario,
+                c.topology,
+                c.ours_thpt,
+                c.def_thpt
+            );
+        }
+    }
+
+    #[test]
+    fn gains_meaningful_on_small_scenario() {
+        let cells = super::cells(true).unwrap();
+        let max_gain = cells.iter().map(|c| c.thpt_gain()).fold(0.0, f64::max);
+        assert!(max_gain > 5.0, "max gain only {max_gain}%");
+    }
+
+    #[test]
+    fn table5_renders_rows_per_scenario() {
+        let t = super::table5(true).unwrap();
+        assert_eq!(t.rows.len(), 2); // fast mode: scenarios 1, 2
+        assert_eq!(t.rows[0].len(), 4);
+    }
+}

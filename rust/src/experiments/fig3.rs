@@ -1,0 +1,71 @@
+//! Fig. 3 (motivation): Storm default vs optimal scheduler throughput on
+//! the three Micro-Benchmark topologies.
+//!
+//! The paper's point: the default Round-Robin placement leaves a large
+//! fraction of a heterogeneous cluster's achievable throughput on the
+//! table.  Both schedulers place the *minimal* user graph here (this is
+//! §3, before the instance-count contribution enters): default deals the
+//! one-instance-per-component ETG round-robin; optimal searches all
+//! placements of that ETG.
+
+use crate::cluster::presets;
+use crate::scheduler::default_rr::DefaultScheduler;
+use crate::scheduler::optimal::{OptimalScheduler, SearchSpace};
+use crate::scheduler::Scheduler;
+use crate::topology::benchmarks;
+use crate::Result;
+
+use super::{f1, pct, ExperimentResult};
+
+pub fn run(fast: bool) -> Result<ExperimentResult> {
+    let (cluster, db) = presets::paper_cluster();
+    let mut out = ExperimentResult::new(
+        "fig3",
+        "default vs optimal throughput, minimal ETG (tuples/s, model)",
+        &["topology", "default", "optimal", "gap"],
+    );
+    for top in benchmarks::micro() {
+        let def = DefaultScheduler::minimal().schedule(&top, &cluster, &db)?;
+        // one instance per component: search placements only
+        let opt = OptimalScheduler {
+            max_instances_per_component: 1,
+            space: SearchSpace::Exhaustive,
+            seed_heuristics: false,
+            ..Default::default()
+        }
+        .schedule(&top, &cluster, &db)?;
+        let gap = (opt.eval.throughput - def.eval.throughput) / def.eval.throughput * 100.0;
+        out.row(vec![
+            top.name.clone(),
+            f1(def.eval.throughput),
+            f1(opt.eval.throughput),
+            pct(gap),
+        ]);
+    }
+    out.note("paper Fig. 3 shows a remarkable gap between default and optimal on a heterogeneous cluster");
+    if fast {
+        out.note("fast mode: identical here (fig3 is model-only)");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn optimal_beats_default_on_every_topology() {
+        let r = super::run(true).unwrap();
+        assert_eq!(r.rows.len(), 3);
+        for row in &r.rows {
+            let def: f64 = row[1].parse().unwrap();
+            let opt: f64 = row[2].parse().unwrap();
+            assert!(opt >= def, "{}: optimal {} < default {}", row[0], opt, def);
+        }
+        // the motivation requires a *remarkable* gap on at least one
+        let max_gap: f64 = r
+            .rows
+            .iter()
+            .map(|row| row[3].trim_end_matches('%').parse::<f64>().unwrap())
+            .fold(0.0, f64::max);
+        assert!(max_gap > 5.0, "max gap only {max_gap}%");
+    }
+}

@@ -1,0 +1,162 @@
+//! Fig. 6: predicted vs measured CPU utilization of the `highCompute`
+//! bolt, on each machine type, in each Micro-Benchmark topology, over an
+//! input-rate sweep — plus the §6.2 headline prediction accuracy.
+//!
+//! Per the paper's setup the gray (`highCompute`) bolt is placed alone on
+//! the target machine and its upstream components on machines powerful
+//! enough to saturate it; the rate starts at 8 tuple/s and is raised by a
+//! random increment in U(20, 80) until over-utilization.  Measured TCU is
+//! the target machine's engine utilization (the bolt is its only load);
+//! predicted TCU is eq. 5.
+
+use crate::cluster::profile::{ProfileDb, TaskProfile};
+use crate::cluster::{presets, Cluster};
+use crate::engine::{self, EngineConfig};
+use crate::predict::{Evaluator, Placement};
+use crate::topology::benchmarks;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::{f1, ExperimentResult};
+
+/// The probe cluster: one target machine of `machine_type` + beefy
+/// helper hosts for everything upstream/downstream of the gray bolt.
+fn probe_cluster(machine_type: &str, description: &str) -> (Cluster, &'static str) {
+    let mut c = Cluster::new(format!("fig6-{machine_type}"));
+    let t = c.add_type(machine_type, description);
+    let h = c.add_type("helper", "synthetic strong host");
+    c.add_machines(t, 1, "target");
+    c.add_machines(h, 4, "helper");
+    (c, "helper")
+}
+
+/// Profile DB for the probe: real numbers for the target type, near-free
+/// helpers (they must never be the bottleneck).
+fn probe_db(truth: &ProfileDb, top: &Topology, machine_type: &str) -> Result<ProfileDb> {
+    let mut db = ProfileDb::new();
+    for comp in &top.components {
+        let real = truth.get(&comp.task_type, machine_type)?;
+        db.insert(&comp.task_type, machine_type, real);
+        db.insert(&comp.task_type, "helper", TaskProfile { e: real.e / 50.0, met: 0.2 });
+    }
+    Ok(db)
+}
+
+/// One sweep: returns rows of (rate, predicted, measured).
+fn sweep(
+    top: &Topology,
+    machine_type: &str,
+    description: &str,
+    truth: &ProfileDb,
+    cfg: &EngineConfig,
+    rng: &mut Rng,
+) -> Result<Vec<(f64, f64, f64)>> {
+    let (cluster, _) = probe_cluster(machine_type, description);
+    let db = probe_db(truth, top, machine_type)?;
+    let ev = Evaluator::new(top, &cluster, &db)?;
+
+    // gray bolt alone on the target (machine 0), everything else on helpers
+    let gray = top
+        .components
+        .iter()
+        .position(|c| c.task_type == "highCompute")
+        .expect("micro topologies contain highCompute");
+    let mut placement = Placement::empty(top.n_components(), cluster.n_machines());
+    let mut h = 1;
+    for c in 0..top.n_components() {
+        if c == gray {
+            placement.x[c][0] = 1;
+        } else {
+            placement.x[c][h] = 1;
+            h = 1 + (h % 4);
+        }
+    }
+
+    let mut rows = Vec::new();
+    let mut rate = 8.0f64;
+    let met = db.get("highCompute", machine_type)?.met;
+    let e = db.get("highCompute", machine_type)?.e;
+    for _ in 0..32 {
+        let pred_nominal = ev.evaluate(&placement, rate)?;
+        if pred_nominal.util[0] > 100.0 {
+            break;
+        }
+        let rep = engine::run(top, &cluster, &db, &placement, rate, cfg)?;
+        // Compare the prediction at the *achieved* bolt input rate (the
+        // paper measures the real rate too): host-noise emission deficits
+        // then do not masquerade as model error.
+        let achieved = rep.comp_rate[gray];
+        let pred = e * achieved + met;
+        rows.push((rate, pred, rep.util[0]));
+        rate += rng.range_f64(20.0, 80.0);
+    }
+    Ok(rows)
+}
+
+pub fn run(fast: bool) -> Result<ExperimentResult> {
+    let (paper_cluster, truth) = presets::paper_cluster();
+    let cfg = if fast {
+        EngineConfig {
+            duration: std::time::Duration::from_millis(500),
+            warmup: std::time::Duration::from_millis(200),
+            time_scale: 0.15,
+            ..Default::default()
+        }
+    } else {
+        EngineConfig::default()
+    };
+    let mut out = ExperimentResult::new(
+        "fig6",
+        "predicted vs measured TCU of highCompute (percent)",
+        &["topology", "machine", "rate", "predicted", "measured", "|err|"],
+    );
+    let mut rng = Rng::new(0xF16_6);
+    let mut abs_errs: Vec<f64> = Vec::new();
+    for top in benchmarks::micro() {
+        for (mt, desc) in paper_cluster
+            .types
+            .iter()
+            .map(|t| (t.name.clone(), t.description.clone()))
+        {
+            let rows = sweep(&top, &mt, &desc, &truth, &cfg, &mut rng)?;
+            for (rate, pred, meas) in rows {
+                let err = (pred - meas).abs();
+                abs_errs.push(err);
+                out.row(vec![
+                    top.name.clone(),
+                    mt.clone(),
+                    f1(rate),
+                    f1(pred),
+                    f1(meas),
+                    f1(err),
+                ]);
+            }
+        }
+    }
+    let max_err = abs_errs.iter().cloned().fold(0.0, f64::max);
+    let mean_err = abs_errs.iter().sum::<f64>() / abs_errs.len().max(1) as f64;
+    out.note(format!(
+        "prediction accuracy: mean |err| = {mean_err:.2} pp, max |err| = {max_err:.2} pp over {} points",
+        abs_errs.len()
+    ));
+    out.note(format!(
+        "paper: accuracy > 92%, worst-case diff < 8 pp; here mean accuracy = {:.1}%",
+        100.0 - mean_err
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn prediction_accuracy_holds() {
+        let r = super::run(true).unwrap();
+        assert!(r.rows.len() >= 9, "want sweeps for 3 topologies x 3 machines");
+        // every row's error below 15 pp even in the fast noisy mode
+        for row in &r.rows {
+            let err: f64 = row[5].parse().unwrap();
+            assert!(err < 15.0, "{row:?}");
+        }
+    }
+}

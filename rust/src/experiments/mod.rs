@@ -1,0 +1,154 @@
+//! Experiment harness: one regenerator per paper figure/table.
+//!
+//! Every function returns an [`ExperimentResult`] (title, headers, rows,
+//! notes) that the CLI (`hstorm bench <id>`) and the `benches/*` targets
+//! render.  The DESIGN.md experiment index maps each paper artifact to
+//! its function here:
+//!
+//! | id       | paper artifact | function           |
+//! |----------|----------------|--------------------|
+//! | fig3     | Fig. 3         | [`fig3::run`]      |
+//! | fig6     | Fig. 6 (+92%)  | [`fig6::run`]      |
+//! | fig7     | Fig. 7         | [`fig7::run`]      |
+//! | fig8     | Fig. 8         | [`fig8::run`]      |
+//! | fig9     | Fig. 9         | [`fig9::run`]      |
+//! | fig10    | Fig. 10 + T4   | [`fig10::run`]     |
+//! | table5   | Table 5        | [`fig10::table5`]  |
+//! | space    | §3 complexity  | [`complexity::run`]|
+//! | ablation | design choices | [`ablation::run`]  |
+//!
+//! `fast: true` shrinks engine windows/design spaces so the whole suite
+//! runs in seconds (used by tests); benches use `fast: false`.
+
+pub mod ablation;
+pub mod complexity;
+pub mod fig10;
+pub mod fig3;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+use crate::util::json::{self, Value};
+
+/// A rendered experiment: a table plus free-text notes.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    pub id: &'static str,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl ExperimentResult {
+    pub fn new(id: &'static str, title: impl Into<String>, headers: &[&str]) -> Self {
+        ExperimentResult {
+            id,
+            title: title.into(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) {
+        self.notes.push(n.into());
+    }
+
+    /// Render for the terminal.
+    pub fn render(&self) -> String {
+        let mut out = format!("\n=== {} — {} ===\n", self.id, self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(cell.len());
+                } else {
+                    widths.push(cell.len());
+                }
+            }
+        }
+        let fmt = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt(row));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// JSON form (EXPERIMENTS.md provenance + machine-readable output).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("id", json::s(self.id)),
+            ("title", json::s(&self.title)),
+            ("headers", json::arr(self.headers.iter().map(|h| json::s(h)).collect())),
+            (
+                "rows",
+                json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| json::arr(r.iter().map(|c| json::s(c)).collect()))
+                        .collect(),
+                ),
+            ),
+            ("notes", json::arr(self.notes.iter().map(|n| json::s(n)).collect())),
+        ])
+    }
+}
+
+/// Format helpers shared by the figure modules.
+pub(crate) fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub(crate) fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub(crate) fn pct(v: f64) -> String {
+    format!("{v:+.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_everything() {
+        let mut r = ExperimentResult::new("figX", "demo", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.note("hello");
+        let text = r.render();
+        assert!(text.contains("figX"));
+        assert!(text.contains("demo"));
+        assert!(text.contains("hello"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = ExperimentResult::new("figY", "demo2", &["x"]);
+        r.row(vec!["v".into()]);
+        let v = r.to_json();
+        assert_eq!(v.str_field("id").unwrap(), "figY");
+        assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,51 @@
+//! # hstorm — heterogeneity-aware stream scheduling
+//!
+//! A production-shaped reproduction of Nasiri, Nasehi, Divband & Goudarzi,
+//! *"A Scheduling Algorithm to Maximize Storm Throughput in Heterogeneous
+//! Cluster"* (2020), as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: topology model, heterogeneous
+//!   cluster model, the paper's scheduler (Alg. 1 + Alg. 2), the Storm
+//!   default Round-Robin baseline, the optimal exhaustive comparator, a
+//!   tokio stream-processing engine (the "real cluster" substitute), a
+//!   large-scale analytic simulator, and the experiment harness that
+//!   regenerates every figure/table of the paper's evaluation.
+//! * **L2 (python/compile/model.py)** — the placement-evaluation model
+//!   (rate propagation, eq. 6; CPU prediction, eq. 5; feasibility +
+//!   throughput) as a JAX graph, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the scoring
+//!   contraction and the propagation step, validated against a pure-jnp
+//!   oracle.
+//!
+//! Python never runs at schedule or serve time: `make artifacts` lowers
+//! the model once; [`runtime`] loads and executes the HLO via PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hstorm::cluster::presets;
+//! use hstorm::scheduler::{hetero::HeteroScheduler, Scheduler};
+//! use hstorm::topology::benchmarks;
+//!
+//! let top = benchmarks::linear();
+//! let (cluster, profiles) = presets::paper_cluster();
+//! let sched = HeteroScheduler::default();
+//! let out = sched.schedule(&top, &cluster, &profiles).unwrap();
+//! println!("rate={} thpt={}", out.rate, out.eval.throughput);
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod error;
+pub mod experiments;
+pub mod metrics;
+pub mod predict;
+pub mod profiling;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulator;
+pub mod topology;
+pub mod util;
+
+pub use error::{Error, Result};

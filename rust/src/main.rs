@@ -1,0 +1,300 @@
+//! hstorm launcher.
+//!
+//! ```text
+//! hstorm schedule --topology linear [--scenario 1|--paper-cluster] \
+//!                 [--scheduler hetero|default|optimal] [--pjrt] [--r0 8]
+//! hstorm run      --topology linear [--rate 100] [--seconds 4] [--pjrt-compute]
+//! hstorm simulate --topology linear --scenario 2
+//! hstorm profile  [--task highCompute] [--machine pentium]
+//! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|all> [--fast] [--json out.json]
+//! hstorm config   --config exp.json            # run a JSON experiment
+//! ```
+
+use std::process::ExitCode;
+
+use hstorm::cluster::{presets, scenarios};
+use hstorm::engine::{self, ComputeMode, EngineConfig};
+use hstorm::experiments;
+use hstorm::profiling;
+use hstorm::runtime::scorer::PjRtScorer;
+use hstorm::runtime::PjRtRuntime;
+use hstorm::scheduler::default_rr::DefaultScheduler;
+use hstorm::scheduler::hetero::HeteroScheduler;
+use hstorm::scheduler::optimal::OptimalScheduler;
+use hstorm::scheduler::{Schedule, Scheduler};
+use hstorm::topology::benchmarks;
+use hstorm::util::cli::Args;
+use hstorm::util::json;
+use hstorm::{Error, Result};
+
+const VALUE_FLAGS: &[&str] = &[
+    "topology", "scenario", "scheduler", "r0", "rate", "seconds", "task", "machine", "json",
+    "config", "max-instances", "time-scale",
+];
+const BOOL_FLAGS: &[&str] = &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help"];
+
+const USAGE: &str = "hstorm — heterogeneity-aware stream scheduling (Nasiri et al. 2020 repro)
+
+commands:
+  schedule  --topology T [--scenario 1..3] [--scheduler hetero|default|optimal] [--pjrt] [--r0 8]
+  run       --topology T [--rate R] [--seconds S] [--time-scale X] [--pjrt-compute]
+  simulate  --topology T [--scenario 1..3] [--scheduler ...]
+  profile   [--task highCompute] [--machine pentium]
+  bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|all [--fast] [--json out.json]
+  config    --config exp.json
+
+topologies: linear diamond star rolling-count unique-visitor";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv, VALUE_FLAGS, BOOL_FLAGS)?;
+    if args.has("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "schedule" => cmd_schedule(&args),
+        "run" => cmd_run(&args),
+        "simulate" => cmd_simulate(&args),
+        "profile" => cmd_profile(&args),
+        "bench" => cmd_bench(&args),
+        "config" => cmd_config(&args),
+        other => Err(Error::Config(format!("unknown command '{other}' (try --help)"))),
+    }
+}
+
+fn load_cluster(
+    args: &Args,
+) -> Result<(hstorm::cluster::Cluster, hstorm::cluster::profile::ProfileDb)> {
+    if let Some(s) = args.get("scenario") {
+        let id: usize = s.parse().map_err(|_| Error::Config("--scenario must be 1..3".into()))?;
+        let sc = scenarios::by_id(id).ok_or_else(|| Error::Config(format!("no scenario {id}")))?;
+        Ok(sc.build())
+    } else {
+        Ok(presets::paper_cluster())
+    }
+}
+
+fn load_topology(args: &Args) -> Result<hstorm::topology::Topology> {
+    let name = args.get_or("topology", "linear");
+    benchmarks::by_name(name).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown topology '{name}' (linear|diamond|star|rolling-count|unique-visitor)"
+        ))
+    })
+}
+
+fn make_schedule(
+    args: &Args,
+    top: &hstorm::topology::Topology,
+    cluster: &hstorm::cluster::Cluster,
+    db: &hstorm::cluster::profile::ProfileDb,
+) -> Result<Schedule> {
+    let which = args.get_or("scheduler", "hetero");
+    let r0 = args.get_f64("r0", 8.0)?;
+    let use_pjrt = args.has("pjrt");
+    match which {
+        "hetero" => {
+            let hs = HeteroScheduler { r0, ..Default::default() };
+            if use_pjrt {
+                let rt = PjRtRuntime::cpu_default()?;
+                let scorer = PjRtScorer::new(&rt, top, cluster, db)?;
+                hs.schedule_with_scorer(top, cluster, db, &scorer)
+            } else {
+                hs.schedule(top, cluster, db)
+            }
+        }
+        "default" => {
+            // default places the proposed ETG (the paper's fair-comparison
+            // protocol: counts come from our algorithm, placement is RR)
+            let ours = HeteroScheduler { r0, ..Default::default() }.schedule(top, cluster, db)?;
+            let etg = hstorm::topology::Etg { counts: ours.placement.counts() };
+            DefaultScheduler::with_etg(etg).schedule(top, cluster, db)
+        }
+        "optimal" => {
+            let max_inst = args.get_usize("max-instances", 3)?;
+            let os =
+                OptimalScheduler { max_instances_per_component: max_inst, ..Default::default() };
+            if use_pjrt {
+                let rt = PjRtRuntime::cpu_default()?;
+                let scorer = PjRtScorer::new(&rt, top, cluster, db)?;
+                os.schedule_with_scorer(top, cluster, db, &scorer)
+            } else {
+                os.schedule(top, cluster, db)
+            }
+        }
+        other => Err(Error::Config(format!("unknown scheduler '{other}'"))),
+    }
+}
+
+fn print_schedule(
+    s: &Schedule,
+    top: &hstorm::topology::Topology,
+    cluster: &hstorm::cluster::Cluster,
+) {
+    println!("scheduler certified rate : {:.1} tuple/s", s.rate);
+    println!("predicted throughput     : {:.1} tuple/s", s.eval.throughput);
+    println!("total tasks              : {}", s.placement.total_tasks());
+    println!("assignment:");
+    print!("{}", s.describe(top, cluster));
+    println!("predicted machine utilization:");
+    for (m, u) in s.eval.util.iter().enumerate().take(12) {
+        println!("  {:<12} {:>5.1}%", cluster.machines[m].name, u);
+    }
+    if s.eval.util.len() > 12 {
+        println!("  ... {} more machines", s.eval.util.len() - 12);
+    }
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let top = load_topology(args)?;
+    let (cluster, db) = load_cluster(args)?;
+    let s = make_schedule(args, &top, &cluster, &db)?;
+    println!(
+        "topology: {}   cluster: {} ({} machines)",
+        top.name,
+        cluster.name,
+        cluster.n_machines()
+    );
+    print_schedule(&s, &top, &cluster);
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let top = load_topology(args)?;
+    let (cluster, db) = load_cluster(args)?;
+    let s = make_schedule(args, &top, &cluster, &db)?;
+    let rate = args.get_f64("rate", s.rate)?;
+    let seconds = args.get_f64("seconds", 4.0)?;
+    let cfg = EngineConfig {
+        duration: std::time::Duration::from_secs_f64(seconds),
+        time_scale: args.get_f64("time-scale", 1.0)?,
+        compute: if args.has("pjrt-compute") {
+            ComputeMode::Pjrt {
+                artifacts_dir: std::env::var("HSTORM_ARTIFACTS")
+                    .unwrap_or_else(|_| "artifacts".into()),
+            }
+        } else {
+            ComputeMode::Simulated
+        },
+        ..Default::default()
+    };
+    println!("running '{}' on engine at {rate:.1} tuple/s for {seconds}s ...", top.name);
+    let rep = engine::run(&top, &cluster, &db, &s.placement, rate, &cfg)?;
+    println!(
+        "measured throughput : {:.1} tuple/s (predicted {:.1})",
+        rep.throughput, s.eval.throughput
+    );
+    println!("emitted rate        : {:.1} tuple/s   shed: {}", rep.emitted_rate, rep.shed);
+    for (m, u) in rep.util.iter().enumerate() {
+        println!(
+            "  {:<12} measured {:>5.1}%   predicted {:>5.1}%",
+            cluster.machines[m].name, u, s.eval.util[m]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let top = load_topology(args)?;
+    let (cluster, db) = load_cluster(args)?;
+    let s = make_schedule(args, &top, &cluster, &db)?;
+    let rep = hstorm::simulator::simulate(&top, &cluster, &db, &s.placement, None)?;
+    println!("simulated rate        : {:.1} tuple/s", rep.rate);
+    println!("simulated throughput  : {:.1} tuple/s", rep.throughput);
+    println!("weighted utilization  : {:.1}%   mean: {:.1}%", rep.weighted_util, rep.mean_util);
+    for n in rep.nodes.iter().take(12) {
+        println!(
+            "  {:<14} {:<10} tasks {:>3}  util {:>5.1}%  thpt {:>8.1}",
+            n.machine, n.machine_type, n.tasks, n.util, n.throughput
+        );
+    }
+    if rep.nodes.len() > 12 {
+        println!("  ... {} more nodes", rep.nodes.len() - 12);
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let (cluster, truth) = presets::paper_cluster();
+    let task = args.get_or("task", "highCompute");
+    let machine = args.get_or("machine", "pentium");
+    let cfg = EngineConfig::default();
+    println!("profiling '{task}' on '{machine}' (engine sweep)...");
+    let prof = profiling::profile_task(&cluster, &truth, task, machine, &cfg)?;
+    println!("{:<10} {:<12} {:<12}", "rate", "util%", "e (measured)");
+    for p in &prof.sweep {
+        println!("{:<10.1} {:<12.1} {:<12.5}", p.rate, p.util, p.service_e.unwrap_or(f64::NAN));
+    }
+    let want = truth.get(task, machine)?;
+    println!(
+        "recovered: e = {:.4} (truth {:.4}), MET = {:.2} (truth {:.2})",
+        prof.measured.e, want.e, prof.measured.met, want.met
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let fast = args.has("fast");
+    let mut results = Vec::new();
+    let ids: Vec<&str> = if which == "all" {
+        vec!["fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "table5", "space", "ablation"]
+    } else {
+        vec![which]
+    };
+    for id in ids {
+        let r = match id {
+            "fig3" => experiments::fig3::run(fast)?,
+            "fig6" => experiments::fig6::run(fast)?,
+            "fig7" => experiments::fig7::run(fast)?,
+            "fig8" => experiments::fig8::run(fast)?,
+            "fig9" => experiments::fig9::run(fast)?,
+            "fig10" => experiments::fig10::run(fast)?,
+            "table5" => experiments::fig10::table5(fast)?,
+            "space" => experiments::complexity::run(fast)?,
+            "ablation" => experiments::ablation::run(fast)?,
+            other => return Err(Error::Config(format!("unknown experiment '{other}'"))),
+        };
+        println!("{}", r.render());
+        results.push(r);
+    }
+    if let Some(path) = args.get("json") {
+        let v = json::arr(results.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, json::to_string_pretty(&v))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| Error::Config("config command needs --config <file.json>".into()))?;
+    let cfg = hstorm::config::ExperimentConfig::load(path)?;
+    let top = cfg.topology.to_topology()?;
+    let cluster = cfg.cluster.to_cluster()?;
+    let db = cfg.profile_db();
+    db.check_coverage(&top, &cluster)?;
+    println!("loaded experiment: topology '{}' on cluster '{}'", top.name, cluster.name);
+    let s = match cfg.scheduler.as_str() {
+        "hetero" => {
+            HeteroScheduler { r0: cfg.r0, ..Default::default() }.schedule(&top, &cluster, &db)?
+        }
+        "default" => DefaultScheduler::minimal().schedule(&top, &cluster, &db)?,
+        "optimal" => OptimalScheduler::default().schedule(&top, &cluster, &db)?,
+        other => return Err(Error::Config(format!("unknown scheduler '{other}' in config"))),
+    };
+    print_schedule(&s, &top, &cluster);
+    Ok(())
+}

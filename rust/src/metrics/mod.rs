@@ -1,0 +1,193 @@
+//! Lightweight metrics registry used by the engine and the CLI.
+//!
+//! Counters and gauges are atomic and cheap to update from the tokio hot
+//! path; snapshots are taken lock-free.  This replaces Storm's UI /
+//! `get_execute_ms_avg()` surface the paper's profiling step reads.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use std::sync::RwLock;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value (stored as micro-units to keep it atomic).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store((v * 1e6) as i64, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        self.0.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// Accumulates (sum, count) pairs for mean statistics, e.g. per-tuple
+/// service time — the engine-side `e_ij` measurement.
+#[derive(Debug, Default)]
+pub struct MeanStat {
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl MeanStat {
+    /// Record one observation in seconds.
+    pub fn observe(&self, seconds: f64) {
+        self.sum_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in seconds, or `None` with no observations.
+    pub fn mean(&self) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        Some(self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64)
+    }
+
+    pub fn reset(&self) {
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Named metric registry shared across engine actors.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    counters: Arc<RwLock<HashMap<String, Arc<Counter>>>>,
+    gauges: Arc<RwLock<HashMap<String, Arc<Gauge>>>>,
+    means: Arc<RwLock<HashMap<String, Arc<MeanStat>>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return c.clone();
+        }
+        self.counters
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Counter::default()))
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            return g.clone();
+        }
+        self.gauges
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Gauge::default()))
+            .clone()
+    }
+
+    pub fn mean(&self, name: &str) -> Arc<MeanStat> {
+        if let Some(m) = self.means.read().unwrap().get(name) {
+            return m.clone();
+        }
+        self.means
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(MeanStat::default()))
+            .clone()
+    }
+
+    /// Snapshot all metrics as `(name, value)` rows, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let mut rows: Vec<(String, f64)> = Vec::new();
+        for (k, v) in self.counters.read().unwrap().iter() {
+            rows.push((k.clone(), v.get() as f64));
+        }
+        for (k, v) in self.gauges.read().unwrap().iter() {
+            rows.push((k.clone(), v.get()));
+        }
+        for (k, v) in self.means.read().unwrap().iter() {
+            rows.push((format!("{k}.mean"), v.mean().unwrap_or(0.0)));
+        }
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_inc() {
+        let r = Registry::new();
+        let c = r.counter("tuples");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("tuples").get(), 5);
+    }
+
+    #[test]
+    fn gauge_roundtrip() {
+        let r = Registry::new();
+        r.gauge("util").set(73.25);
+        assert!((r.gauge("util").get() - 73.25).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mean_stat() {
+        let m = MeanStat::default();
+        assert!(m.mean().is_none());
+        m.observe(0.010);
+        m.observe(0.020);
+        assert!((m.mean().unwrap() - 0.015).abs() < 1e-6);
+        m.reset();
+        assert!(m.mean().is_none());
+    }
+
+    #[test]
+    fn snapshot_sorted() {
+        let r = Registry::new();
+        r.counter("b").inc();
+        r.gauge("a").set(1.0);
+        let snap = r.snapshot();
+        assert_eq!(snap[0].0, "a");
+        assert_eq!(snap[1].0, "b");
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let r = Registry::new();
+        let r2 = r.clone();
+        r.counter("x").inc();
+        assert_eq!(r2.counter("x").get(), 1);
+    }
+}

@@ -1,0 +1,521 @@
+//! Native evaluation model: eq. 5 (CPU prediction), eq. 6 (rate
+//! propagation), feasibility and throughput — an exact Rust mirror of the
+//! AOT JAX/Pallas model in `python/compile/model.py`.
+//!
+//! The schedulers can evaluate placements through either this module or
+//! the PJRT-compiled scorer ([`crate::runtime`]); integration tests
+//! cross-check the two paths on identical inputs.
+//!
+//! Rates here are computed in exact topological order (no fixed-point
+//! iteration needed natively); the closed-form [`max_stable_rate`] uses
+//! the linearity of eq. 5 in the input rate: for a fixed placement,
+//! `util_m(R0) = a_m * R0 + b_m`, so the largest feasible rate is
+//! `min_m (cap_m - b_m) / a_m`.
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::topology::Topology;
+use crate::{Error, Result};
+
+/// A placement: instance counts of every component on every machine.
+/// `x[c][m]` = number of instances of component `c` on machine `m`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub x: Vec<Vec<usize>>,
+}
+
+impl Placement {
+    /// All-zero placement for `n_comp` components over `n_machines`.
+    pub fn empty(n_comp: usize, n_machines: usize) -> Self {
+        Placement { x: vec![vec![0; n_machines]; n_comp] }
+    }
+
+    /// Total instances of component `c` — `N_{C_c}` in the paper.
+    pub fn count(&self, c: usize) -> usize {
+        self.x[c].iter().sum()
+    }
+
+    /// Instance counts per component (the ETG this placement realizes).
+    pub fn counts(&self) -> Vec<usize> {
+        (0..self.x.len()).map(|c| self.count(c)).collect()
+    }
+
+    /// Total tasks across all components.
+    pub fn total_tasks(&self) -> usize {
+        self.x.iter().map(|row| row.iter().sum::<usize>()).sum()
+    }
+
+    /// Tasks hosted on machine `m`.
+    pub fn tasks_on(&self, m: usize) -> usize {
+        self.x.iter().map(|row| row[m]).sum()
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.x.first().map_or(0, |r| r.len())
+    }
+}
+
+/// Result of evaluating one placement at one input rate.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// Predicted utilization per machine, percent (eq. 5 summed).
+    pub util: Vec<f64>,
+    /// Sum of the processing rates of all tasks (the paper's overall
+    /// throughput objective, eq. 2), tuples/s.
+    pub throughput: f64,
+    /// No machine over budget and every component has >= 1 instance.
+    pub feasible: bool,
+    /// Component-level input rates (eq. 6 fixed point), tuples/s.
+    pub ir_comp: Vec<f64>,
+}
+
+/// Static per-problem tables: expanded profiles + rate gains, computed
+/// once and reused across the scheduler's many evaluations.
+#[derive(Debug, Clone)]
+pub struct Evaluator {
+    /// `e[c][m]`: per-tuple cost of component c on machine m (%·s/tuple).
+    pub e_m: Vec<Vec<f64>>,
+    /// `met[c][m]`: per-instance overhead (%).
+    pub met_m: Vec<Vec<f64>>,
+    /// Machine CPU budgets (MAC), percent.
+    pub cap: Vec<f64>,
+    /// `IR_c = gain_c * R0` (eq. 6 solved symbolically).
+    pub gains: Vec<f64>,
+    n_comp: usize,
+    n_machines: usize,
+}
+
+impl Evaluator {
+    /// Build the evaluator for a (topology, cluster, profiles) triple.
+    pub fn new(top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Self> {
+        top.validate()?;
+        cluster.validate()?;
+        profiles.check_coverage(top, cluster)?;
+        let (e_m, met_m) = profiles.expand(top, cluster)?;
+        let gains = top.rate_gains()?;
+        Ok(Evaluator {
+            e_m,
+            met_m,
+            cap: cluster.machines.iter().map(|m| m.cap).collect(),
+            gains,
+            n_comp: top.n_components(),
+            n_machines: cluster.n_machines(),
+        })
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.n_comp
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.n_machines
+    }
+
+    /// Component input rates at topology rate `r0` (eq. 6).
+    pub fn rates(&self, r0: f64) -> Vec<f64> {
+        self.gains.iter().map(|g| g * r0).collect()
+    }
+
+    /// Predicted TCU (eq. 5) of **one instance** of component `c` on
+    /// machine `m`, given the component has `n_c` instances total and the
+    /// topology runs at `r0` (shuffle grouping divides the stream evenly).
+    pub fn tcu_one(&self, c: usize, m: usize, n_c: usize, r0: f64) -> f64 {
+        let ir_task = self.gains[c] * r0 / (n_c.max(1) as f64);
+        self.e_m[c][m] * ir_task + self.met_m[c][m]
+    }
+
+    /// Full evaluation of a placement at rate `r0` — mirrors
+    /// `evaluate_placements` in the AOT model (same semantics, exact
+    /// arithmetic).
+    pub fn evaluate(&self, p: &Placement, r0: f64) -> Result<Evaluation> {
+        if p.n_components() != self.n_comp || p.n_machines() != self.n_machines {
+            return Err(Error::Schedule(format!(
+                "placement shape {}x{} != problem {}x{}",
+                p.n_components(),
+                p.n_machines(),
+                self.n_comp,
+                self.n_machines
+            )));
+        }
+        let ir_comp = self.rates(r0);
+        let counts = p.counts();
+        let mut util = vec![0.0f64; self.n_machines];
+        for c in 0..self.n_comp {
+            let n_c = counts[c].max(1) as f64;
+            let ir_task = ir_comp[c] / n_c;
+            for m in 0..self.n_machines {
+                let k = p.x[c][m] as f64;
+                if k > 0.0 {
+                    util[m] += k * (self.e_m[c][m] * ir_task + self.met_m[c][m]);
+                }
+            }
+        }
+        let over = util
+            .iter()
+            .zip(&self.cap)
+            .any(|(u, c)| *u > *c + 1e-6);
+        let missing = counts.iter().any(|&n| n == 0);
+        let throughput = ir_comp.iter().sum();
+        Ok(Evaluation { util, throughput, feasible: !over && !missing, ir_comp })
+    }
+
+    /// Closed-form largest feasible topology input rate for a placement:
+    /// `util_m(R0) = a_m R0 + b_m` with
+    /// `a_m = Σ_c x[c][m] e[c][m] gain_c / n_c` and
+    /// `b_m = Σ_c x[c][m] met[c][m]`, so
+    /// `R0* = min_m (cap_m - b_m) / a_m` (∞ if every a_m = 0, 0 if some
+    /// machine is over budget on MET alone).
+    pub fn max_stable_rate(&self, p: &Placement) -> Result<f64> {
+        if p.counts().iter().any(|&n| n == 0) {
+            return Err(Error::Schedule("placement misses a component".into()));
+        }
+        let counts = p.counts();
+        let mut best = f64::INFINITY;
+        for m in 0..self.n_machines {
+            let mut a = 0.0f64;
+            let mut b = 0.0f64;
+            for c in 0..self.n_comp {
+                let k = p.x[c][m] as f64;
+                if k > 0.0 {
+                    a += k * self.e_m[c][m] * self.gains[c] / (counts[c] as f64);
+                    b += k * self.met_m[c][m];
+                }
+            }
+            if b > self.cap[m] + 1e-9 {
+                return Ok(0.0); // MET alone over budget
+            }
+            if a > 0.0 {
+                best = best.min((self.cap[m] - b) / a);
+            }
+        }
+        Ok(best)
+    }
+
+    /// Throughput at a placement's max stable rate — the objective the
+    /// optimal scheduler maximizes (`Σ_c gain_c * R0*`).
+    pub fn best_throughput(&self, p: &Placement) -> Result<f64> {
+        let r = self.max_stable_rate(p)?;
+        if !r.is_finite() {
+            return Ok(0.0);
+        }
+        Ok(r * self.gains.iter().sum::<f64>())
+    }
+
+    // ---- speed-weighted grouping (the paper's §8 future work) -----------
+    //
+    // Storm's shuffle grouping divides a component's stream evenly over
+    // its instances; the paper names this "simple grouping" as the main
+    // obstacle to full utilization and proposes an intelligent grouping
+    // that "determines adequate rates for each task depending on the
+    // computation power of the machine".  The natural choice: give each
+    // instance a share proportional to its machine's speed for that
+    // component, `w = 1 / e[c][m]` — every instance then saturates at the
+    // same input rate.
+
+    /// Per-machine instance share weights for component `c`:
+    /// `share[m] = x[c][m]·(1/e[c][m]) / Σ_m' x[c][m']·(1/e[c][m'])`.
+    fn weighted_shares(&self, p: &Placement, c: usize) -> Vec<f64> {
+        let mut w = vec![0.0; self.n_machines];
+        let mut total = 0.0;
+        for m in 0..self.n_machines {
+            if p.x[c][m] > 0 && self.e_m[c][m] > 0.0 {
+                w[m] = p.x[c][m] as f64 / self.e_m[c][m];
+                total += w[m];
+            }
+        }
+        if total > 0.0 {
+            for v in &mut w {
+                *v /= total;
+            }
+        }
+        w
+    }
+
+    /// [`evaluate`](Self::evaluate) under speed-weighted grouping.
+    pub fn evaluate_weighted(&self, p: &Placement, r0: f64) -> Result<Evaluation> {
+        if p.n_components() != self.n_comp || p.n_machines() != self.n_machines {
+            return Err(Error::Schedule("placement shape mismatch".into()));
+        }
+        let ir_comp = self.rates(r0);
+        let counts = p.counts();
+        let mut util = vec![0.0f64; self.n_machines];
+        for c in 0..self.n_comp {
+            let shares = self.weighted_shares(p, c);
+            for m in 0..self.n_machines {
+                let k = p.x[c][m] as f64;
+                if k > 0.0 {
+                    // machine m's instances of c process shares[m] of the
+                    // component stream collectively
+                    util[m] += self.e_m[c][m] * ir_comp[c] * shares[m]
+                        + k * self.met_m[c][m];
+                }
+            }
+        }
+        let over = util.iter().zip(&self.cap).any(|(u, c)| *u > *c + 1e-6);
+        let missing = counts.iter().any(|&n| n == 0);
+        let throughput = ir_comp.iter().sum();
+        Ok(Evaluation { util, throughput, feasible: !over && !missing, ir_comp })
+    }
+
+    /// [`max_stable_rate`](Self::max_stable_rate) under speed-weighted
+    /// grouping (still closed form: shares are rate-independent).
+    pub fn max_stable_rate_weighted(&self, p: &Placement) -> Result<f64> {
+        if p.counts().iter().any(|&n| n == 0) {
+            return Err(Error::Schedule("placement misses a component".into()));
+        }
+        let mut best = f64::INFINITY;
+        for m in 0..self.n_machines {
+            let mut a = 0.0f64;
+            let mut b = 0.0f64;
+            for c in 0..self.n_comp {
+                let k = p.x[c][m] as f64;
+                if k > 0.0 {
+                    let shares = self.weighted_shares(p, c);
+                    a += self.e_m[c][m] * self.gains[c] * shares[m];
+                    b += k * self.met_m[c][m];
+                }
+            }
+            if b > self.cap[m] + 1e-9 {
+                return Ok(0.0);
+            }
+            if a > 0.0 {
+                best = best.min((self.cap[m] - b) / a);
+            }
+        }
+        Ok(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    fn setup() -> (Topology, Cluster, ProfileDb) {
+        let (c, db) = presets::paper_cluster();
+        (benchmarks::linear(), c, db)
+    }
+
+    fn one_per_machine(ev: &Evaluator) -> Placement {
+        // place component c on machine c % M
+        let mut p = Placement::empty(ev.n_components(), ev.n_machines());
+        for c in 0..ev.n_components() {
+            p.x[c][c % ev.n_machines()] = 1;
+        }
+        p
+    }
+
+    #[test]
+    fn rates_linear_gain_one() {
+        let (t, c, db) = setup();
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let r = ev.rates(42.0);
+        for v in r {
+            assert!((v - 42.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn evaluate_matches_manual() {
+        let (t, c, db) = setup();
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let mut p = Placement::empty(4, 3);
+        // spout->m0, low->m0, mid->m1, high->m2
+        p.x[0][0] = 1;
+        p.x[1][0] = 1;
+        p.x[2][1] = 1;
+        p.x[3][2] = 1;
+        let r0 = 100.0;
+        let e = ev.evaluate(&p, r0).unwrap();
+        // m0: spout (0.0040*100+1) + low (0.0581*100+2) = 0.4+1 + 5.81+2
+        let want0 = 0.0040 * 100.0 + 1.0 + 0.0581 * 100.0 + 2.0;
+        assert!((e.util[0] - want0).abs() < 1e-9, "{} vs {want0}", e.util[0]);
+        // m1: mid on i3 = 0.1844*100 + 2
+        assert!((e.util[1] - (0.1844 * 100.0 + 2.0)).abs() < 1e-9);
+        // m2: high on i5 = 0.3207*100 + 2
+        assert!((e.util[2] - (0.3207 * 100.0 + 2.0)).abs() < 1e-9);
+        assert!(e.feasible);
+        assert!((e.throughput - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_instances_halve_per_task_rate() {
+        let (t, c, db) = setup();
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let mut p = Placement::empty(4, 3);
+        p.x[0][0] = 1;
+        p.x[1][0] = 1;
+        p.x[2][1] = 1;
+        p.x[3][1] = 1;
+        p.x[3][2] = 1; // highCompute has 2 instances
+        let e = ev.evaluate(&p, 100.0).unwrap();
+        // high on i5 gets half the stream: 0.3207*50 + 2
+        assert!((e.util[2] - (0.3207 * 50.0 + 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_stable_rate_closed_form() {
+        let (t, c, db) = setup();
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let mut p = Placement::empty(4, 3);
+        p.x[0][0] = 1;
+        p.x[1][0] = 1;
+        p.x[2][1] = 1;
+        p.x[3][2] = 1;
+        let r = ev.max_stable_rate(&p).unwrap();
+        // at r the binding machine sits exactly at cap
+        let e = ev.evaluate(&p, r).unwrap();
+        let max_u = e.util.iter().cloned().fold(0.0, f64::max);
+        assert!((max_u - 100.0).abs() < 1e-6, "max util {max_u}");
+        assert!(e.feasible);
+        // any higher rate is infeasible
+        let e2 = ev.evaluate(&p, r * 1.01).unwrap();
+        assert!(!e2.feasible);
+    }
+
+    #[test]
+    fn missing_component_is_error_for_rate() {
+        let (t, c, db) = setup();
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let p = Placement::empty(4, 3);
+        assert!(ev.max_stable_rate(&p).is_err());
+    }
+
+    #[test]
+    fn met_over_budget_rate_zero() {
+        let (t, c, mut db) = setup();
+        // blow up MET for highCompute on every machine
+        for mt in ["pentium", "core-i3", "core-i5"] {
+            db.insert("highCompute", mt, crate::cluster::profile::TaskProfile { e: 0.1, met: 200.0 });
+        }
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let p = one_per_machine(&ev);
+        assert_eq!(ev.max_stable_rate(&p).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (t, c, db) = setup();
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let p = Placement::empty(2, 3);
+        assert!(ev.evaluate(&p, 1.0).is_err());
+    }
+
+    #[test]
+    fn best_throughput_scales_with_gain() {
+        let (c, db) = presets::paper_cluster();
+        let t = benchmarks::diamond(); // sink gain = 3
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let p = one_per_machine(&ev);
+        let r = ev.max_stable_rate(&p).unwrap();
+        let thpt = ev.best_throughput(&p).unwrap();
+        let gain_sum: f64 = t.rate_gains().unwrap().iter().sum();
+        assert!((thpt - r * gain_sum).abs() < 1e-9);
+    }
+}
+
+#[cfg(test)]
+mod weighted_tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    fn setup() -> Evaluator {
+        let (c, db) = presets::paper_cluster();
+        Evaluator::new(&benchmarks::linear(), &c, &db).unwrap()
+    }
+
+    fn two_high() -> Placement {
+        // spout/low/mid on pentium, high x2 on pentium + i3
+        let mut p = Placement::empty(4, 3);
+        p.x[0][0] = 1;
+        p.x[1][0] = 1;
+        p.x[2][0] = 1;
+        p.x[3][0] = 1;
+        p.x[3][1] = 1;
+        p
+    }
+
+    #[test]
+    fn weighted_shares_prefer_fast_machine() {
+        let ev = setup();
+        let p = two_high();
+        let shares = ev.weighted_shares(&p, 3);
+        // pentium (e=0.1915) is faster than i3 (e=0.3449) for highCompute
+        assert!(shares[0] > shares[1], "{shares:?}");
+        assert!((shares[0] + shares[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_equalizes_saturation_when_isolated() {
+        // When a component's instances are alone on their machines,
+        // speed-proportional shares make both saturate at the same rate,
+        // so the weighted max rate beats the even split (whose binding
+        // instance is the one on the slower machine).  Probe topology:
+        // spout (on the idle i5) -> high, split pentium + i3.
+        use crate::topology::builder::TopologyBuilder;
+        let (cluster, db) = presets::paper_cluster();
+        let top = TopologyBuilder::new("probe")
+            .spout("s", "spout", 1.0)
+            .bolt("h", "highCompute", 1.0, &["s"])
+            .build()
+            .unwrap();
+        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+        let mut p = Placement::empty(2, 3);
+        p.x[0][2] = 1; // spout on i5
+        p.x[1][0] = 1; // high on pentium + i3, isolated
+        p.x[1][1] = 1;
+        let shuffle = ev.max_stable_rate(&p).unwrap();
+        let weighted = ev.max_stable_rate_weighted(&p).unwrap();
+        assert!(
+            weighted > shuffle * 1.2,
+            "weighted {weighted} should clearly beat shuffle {shuffle}"
+        );
+    }
+
+    #[test]
+    fn weighted_can_lose_under_colocation() {
+        // ...but weighting by speed alone ignores co-located load: the
+        // fast machine may already be busy, so weighted is NOT uniformly
+        // better — exactly why the paper leaves grouping as future work.
+        let ev = setup();
+        let p = two_high(); // pentium also hosts spout/low/mid
+        let shuffle = ev.max_stable_rate(&p).unwrap();
+        let weighted = ev.max_stable_rate_weighted(&p).unwrap();
+        assert!(weighted < shuffle, "expected colocation to hurt weighted");
+    }
+
+    #[test]
+    fn weighted_single_instance_equals_shuffle() {
+        // one instance per component: shares are 1.0, modes identical
+        let ev = setup();
+        let mut p = Placement::empty(4, 3);
+        for c in 0..4 {
+            p.x[c][c % 3] = 1;
+        }
+        let a = ev.evaluate(&p, 50.0).unwrap();
+        let b = ev.evaluate_weighted(&p, 50.0).unwrap();
+        for (x, y) in a.util.iter().zip(&b.util) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        let ra = ev.max_stable_rate(&p).unwrap();
+        let rb = ev.max_stable_rate_weighted(&p).unwrap();
+        assert!((ra - rb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_rate_is_boundary() {
+        let ev = setup();
+        let p = two_high();
+        let r = ev.max_stable_rate_weighted(&p).unwrap();
+        let at = ev.evaluate_weighted(&p, r).unwrap();
+        assert!(at.feasible);
+        let above = ev.evaluate_weighted(&p, r * 1.01).unwrap();
+        assert!(!above.feasible);
+    }
+}

@@ -1,0 +1,119 @@
+//! AOT dims: the fixed shapes the HLO artifacts were lowered with.
+//!
+//! Mirror of `python/compile/dims.py`.  `load_manifest` reads
+//! `artifacts/dims.json` and [`check`] asserts the two sides agree before
+//! any PJRT execution — a dim drift fails fast instead of producing
+//! garbage numerics.
+
+use crate::util::json;
+use crate::{Error, Result};
+
+/// Max components the AOT scorer supports (padding masks the rest).
+pub const MAX_COMPONENTS: usize = 16;
+/// Max machines per scorer call.
+pub const MAX_MACHINES: usize = 32;
+/// Rate-propagation iterations lowered into the model.
+pub const DEPTH: usize = 16;
+/// Candidate batch of the exhaustive-search artifact.
+pub const B_BATCH: usize = 256;
+/// Single-candidate artifact (heuristic scheduler inner loop).
+pub const B_ONE: usize = 1;
+/// MAC budget (percent) baked into feasibility checks.
+pub const CAP: f64 = 100.0;
+/// Vector length of the bolt-work kernel.
+pub const WORK_N: usize = 64;
+
+/// Parsed `artifacts/dims.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub c: usize,
+    pub m: usize,
+    pub depth: usize,
+    pub b_batch: usize,
+    pub b_one: usize,
+    pub cap: f64,
+    pub work_n: usize,
+}
+
+impl Manifest {
+    /// Parse from the JSON text `aot.py` emits.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| Error::Runtime(format!("bad dims.json: {e}")))?;
+        let field = |k: &str| -> Result<usize> {
+            v.get(k)?
+                .as_usize()
+                .ok_or_else(|| Error::Runtime(format!("dims.json: '{k}' is not an integer")))
+        };
+        Ok(Manifest {
+            c: field("C")?,
+            m: field("M")?,
+            depth: field("DEPTH")?,
+            b_batch: field("B_BATCH")?,
+            b_one: field("B_ONE")?,
+            cap: v.num_field("CAP").map_err(|e| Error::Runtime(e.to_string()))?,
+            work_n: field("WORK_N")?,
+        })
+    }
+}
+
+/// Load `dims.json` from an artifacts directory.
+pub fn load_manifest(artifacts_dir: &std::path::Path) -> Result<Manifest> {
+    let path = artifacts_dir.join("dims.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        Error::Runtime(format!(
+            "cannot read {} (run `make artifacts` first): {e}",
+            path.display()
+        ))
+    })?;
+    Manifest::parse(&text)
+}
+
+/// Assert the artifact dims match this build's constants.
+pub fn check(m: &Manifest) -> Result<()> {
+    let pairs = [
+        ("C", m.c, MAX_COMPONENTS),
+        ("M", m.m, MAX_MACHINES),
+        ("DEPTH", m.depth, DEPTH),
+        ("B_BATCH", m.b_batch, B_BATCH),
+        ("B_ONE", m.b_one, B_ONE),
+        ("WORK_N", m.work_n, WORK_N),
+    ];
+    for (name, got, want) in pairs {
+        if got != want {
+            return Err(Error::Runtime(format!(
+                "artifact dim {name}={got} but crate expects {want}; re-run `make artifacts`"
+            )));
+        }
+    }
+    if (m.cap - CAP).abs() > 1e-9 {
+        return Err(Error::Runtime(format!("artifact CAP={} != {CAP}", m.cap)));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_checks() {
+        let text = r#"{"C":16,"M":32,"DEPTH":16,"B_BATCH":256,"B_ONE":1,
+                       "CAP":100.0,"WORK_N":64,"artifacts":{}}"#;
+        let m = Manifest::parse(text).unwrap();
+        check(&m).unwrap();
+    }
+
+    #[test]
+    fn dim_mismatch_detected() {
+        let text = r#"{"C":8,"M":32,"DEPTH":16,"B_BATCH":256,"B_ONE":1,
+                       "CAP":100.0,"WORK_N":64}"#;
+        let m = Manifest::parse(text).unwrap();
+        assert!(check(&m).is_err());
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        assert!(Manifest::parse(r#"{"C":16}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts from Rust.
+//!
+//! The build-time Python side (`python/compile/aot.py`) lowers the L2
+//! JAX model (which embeds the L1 Pallas kernels) to HLO **text**; this
+//! module compiles those artifacts once on the PJRT CPU client and
+//! exposes typed entry points:
+//!
+//! * [`scorer::PjRtScorer`] — batched placement scoring (the optimal
+//!   scheduler's hot path and the heuristic's inner-loop evaluator);
+//! * [`WorkKernel`] — the bolt-work compute body the engine can execute
+//!   per tuple in `pjrt` compute mode.
+//!
+//! Python is never loaded here; the binary is self-contained once
+//! `artifacts/` exists.
+
+pub mod dims;
+pub mod scorer;
+
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A PJRT client plus the artifacts directory it loads from.
+pub struct PjRtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl PjRtRuntime {
+    /// CPU client over `artifacts_dir`; validates `dims.json` up front.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = dims::load_manifest(&artifacts_dir)?;
+        dims::check(&manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(PjRtRuntime { client, artifacts_dir })
+    }
+
+    /// Default artifacts location: `$HSTORM_ARTIFACTS` or `./artifacts`.
+    pub fn cpu_default() -> Result<Self> {
+        let dir = std::env::var("HSTORM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::cpu(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, file_name: &str) -> Result<Executable> {
+        let path = self.artifacts_dir.join(file_name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| {
+            Error::Runtime(format!(
+                "cannot load {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        Ok(Executable { exe, name: file_name.to_string() })
+    }
+
+    /// Load the bolt-work kernel artifact.
+    pub fn work_kernel(&self) -> Result<WorkKernel> {
+        Ok(WorkKernel { exe: self.load("work.hlo.txt")? })
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unwraps the jax `return_tuple=True`
+    /// wrapper and returns the flat output literals.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.unwrap_outputs(self.exe.execute::<xla::Literal>(args).map_err(xerr)?)
+    }
+
+    /// Like [`run`](Self::run) but with borrowed inputs — hot-path
+    /// callers keep static literals alive across calls (§Perf).
+    pub fn run_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.unwrap_outputs(self.exe.execute::<&xla::Literal>(args).map_err(xerr)?)
+    }
+
+    fn unwrap_outputs(&self, mut out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let buf = out
+            .first_mut()
+            .and_then(|r| r.first_mut())
+            .ok_or_else(|| Error::Runtime(format!("{}: empty result", self.name)))?;
+        let lit = buf.to_literal_sync().map_err(xerr)?;
+        lit.to_tuple().map_err(xerr)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The engine's per-tuple compute body (`bolt_work` in model.py): a small
+/// fixed-shape vector function executed `k` times per tuple, `k` scaled
+/// by the component's profiled cost.
+pub struct WorkKernel {
+    exe: Executable,
+}
+
+impl WorkKernel {
+    /// One invocation over a `WORK_N`-vector.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != dims::WORK_N {
+            return Err(Error::Runtime(format!(
+                "work kernel input len {} != {}",
+                input.len(),
+                dims::WORK_N
+            )));
+        }
+        let lit = xla::Literal::vec1(input);
+        let out = self.exe.run(&[lit])?;
+        out[0].to_vec::<f32>().map_err(xerr)
+    }
+
+    /// Execute the kernel `k` times, chaining outputs (real CPU burn
+    /// proportional to `k`).
+    pub fn burn(&self, k: usize) -> Result<()> {
+        let mut v: Vec<f32> = (0..dims::WORK_N).map(|i| (i as f32) / 64.0 - 0.5).collect();
+        for _ in 0..k {
+            v = self.run(&v)?;
+        }
+        Ok(())
+    }
+}
+
+/// Convert a row-major f64 tensor into a shaped f32 literal.
+pub(crate) fn literal_f32(data: &[f64], shape: &[i64]) -> Result<xla::Literal> {
+    let flat: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    let n: i64 = shape.iter().product();
+    if n as usize != flat.len() {
+        return Err(Error::Runtime(format!(
+            "literal shape {shape:?} product {n} != data len {}",
+            flat.len()
+        )));
+    }
+    if shape.len() == 1 {
+        return Ok(xla::Literal::vec1(&flat));
+    }
+    xla::Literal::vec1(&flat).reshape(shape).map_err(xerr)
+}

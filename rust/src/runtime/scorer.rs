@@ -1,0 +1,339 @@
+//! Batched placement scoring through the AOT model.
+//!
+//! [`ScorerProblem`] pads one (topology, cluster, profiles) triple to the
+//! AOT dims; [`PjRtScorer`] runs candidate batches through the compiled
+//! HLO (L2 model + L1 Pallas kernels); [`NativeScorer`] is the exact Rust
+//! mirror used as a fallback for clusters larger than `MAX_MACHINES` and
+//! as the cross-check oracle in integration tests.
+//!
+//! Both implement [`PlacementScorer`], so the schedulers are agnostic.
+
+use super::dims::{B_BATCH, B_ONE, MAX_COMPONENTS, MAX_MACHINES};
+use super::{literal_f32, PjRtRuntime};
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::predict::{Evaluator, Placement};
+use crate::topology::Topology;
+use crate::{Error, Result};
+
+/// One scored candidate.
+#[derive(Debug, Clone)]
+pub struct ScoreRow {
+    /// Predicted utilization per (real, unpadded) machine, percent.
+    pub util: Vec<f64>,
+    /// Overall throughput at the candidate's rate, tuples/s.
+    pub throughput: f64,
+    pub feasible: bool,
+    /// Component-level input rates (real components only), tuples/s.
+    pub ir_comp: Vec<f64>,
+}
+
+/// A problem instance padded to the AOT dims.
+#[derive(Debug, Clone)]
+pub struct ScorerProblem {
+    pub n_comp: usize,
+    pub n_machines: usize,
+    adj: Vec<f64>,      // [C, C] row-major
+    alpha: Vec<f64>,    // [C]
+    src_mask: Vec<f64>, // [C]
+    e_m: Vec<f64>,      // [C, M]
+    met_m: Vec<f64>,    // [C, M]
+    cap: Vec<f64>,      // [M]
+    active: Vec<f64>,   // [C]
+}
+
+impl ScorerProblem {
+    pub fn new(top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Self> {
+        top.validate()?;
+        cluster.validate()?;
+        let n = top.n_components();
+        let m = cluster.n_machines();
+        if n > MAX_COMPONENTS {
+            return Err(Error::Runtime(format!(
+                "{n} components exceed AOT max {MAX_COMPONENTS}"
+            )));
+        }
+        if m > MAX_MACHINES {
+            return Err(Error::Runtime(format!(
+                "{m} machines exceed AOT max {MAX_MACHINES}; use NativeScorer"
+            )));
+        }
+        if top.longest_path()? >= super::dims::DEPTH {
+            return Err(Error::Runtime("topology deeper than AOT DEPTH".into()));
+        }
+        let (e_exp, met_exp) = profiles.expand(top, cluster)?;
+        let c_pad = MAX_COMPONENTS;
+        let m_pad = MAX_MACHINES;
+        let mut adj = vec![0.0; c_pad * c_pad];
+        for &(a, b) in &top.edges {
+            adj[a * c_pad + b] = 1.0;
+        }
+        let mut alpha = vec![0.0; c_pad];
+        let mut src_mask = vec![0.0; c_pad];
+        let mut active = vec![0.0; c_pad];
+        for (i, comp) in top.components.iter().enumerate() {
+            alpha[i] = comp.alpha;
+            active[i] = 1.0;
+            if comp.kind == crate::topology::ComponentKind::Spout {
+                src_mask[i] = 1.0;
+            }
+        }
+        let mut e_m = vec![0.0; c_pad * m_pad];
+        let mut met_m = vec![0.0; c_pad * m_pad];
+        for c in 0..n {
+            for mm in 0..m {
+                e_m[c * m_pad + mm] = e_exp[c][mm];
+                met_m[c * m_pad + mm] = met_exp[c][mm];
+            }
+        }
+        let mut cap = vec![0.0; m_pad];
+        for (mm, mach) in cluster.machines.iter().enumerate() {
+            cap[mm] = mach.cap;
+        }
+        Ok(ScorerProblem { n_comp: n, n_machines: m, adj, alpha, src_mask, e_m, met_m, cap, active })
+    }
+
+    /// Flatten a placement into a padded `[C, M]` f32 block (written into
+    /// the caller's batch buffer — no per-candidate allocation).
+    fn pad_placement_into(&self, p: &Placement, out: &mut [f32]) -> Result<()> {
+        if p.n_components() != self.n_comp || p.n_machines() != self.n_machines {
+            return Err(Error::Runtime(format!(
+                "placement {}x{} != problem {}x{}",
+                p.n_components(),
+                p.n_machines(),
+                self.n_comp,
+                self.n_machines
+            )));
+        }
+        for c in 0..self.n_comp {
+            for m in 0..self.n_machines {
+                out[c * MAX_MACHINES + m] = p.x[c][m] as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The scheduler-facing scoring interface.
+pub trait PlacementScorer {
+    /// Score `candidates[i]` at input rate `r0s[i]`.
+    fn score_batch(&self, candidates: &[Placement], r0s: &[f64]) -> Result<Vec<ScoreRow>>;
+
+    /// Convenience single-candidate call.
+    fn score_one(&self, p: &Placement, r0: f64) -> Result<ScoreRow> {
+        let mut rows = self.score_batch(std::slice::from_ref(p), &[r0])?;
+        Ok(rows.remove(0))
+    }
+
+    /// Human-readable backend name ("pjrt" / "native").
+    fn backend(&self) -> &'static str;
+}
+
+/// PJRT-backed scorer: executes the AOT model (`scorer_b256` for full
+/// batches, `scorer_b1` for single candidates).
+pub struct PjRtScorer {
+    problem: ScorerProblem,
+    exe_batch: super::Executable,
+    exe_one: super::Executable,
+    /// Placement-independent input literals (adj, alpha, src_mask, e_m,
+    /// met_m, cap, active), shaped once and reused every call.
+    statics: Vec<xla::Literal>,
+}
+
+impl PjRtScorer {
+    pub fn new(rt: &PjRtRuntime, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Self> {
+        let problem = ScorerProblem::new(top, cluster, profiles)?;
+        let exe_batch = rt.load(&format!("scorer_b{B_BATCH}.hlo.txt"))?;
+        let exe_one = rt.load(&format!("scorer_b{B_ONE}.hlo.txt"))?;
+        // Static (placement-independent) input literals, built once.
+        let statics = vec![
+            literal_f32(&problem.adj, &[MAX_COMPONENTS as i64, MAX_COMPONENTS as i64])?,
+            literal_f32(&problem.alpha, &[MAX_COMPONENTS as i64])?,
+            literal_f32(&problem.src_mask, &[MAX_COMPONENTS as i64])?,
+            literal_f32(&problem.e_m, &[MAX_COMPONENTS as i64, MAX_MACHINES as i64])?,
+            literal_f32(&problem.met_m, &[MAX_COMPONENTS as i64, MAX_MACHINES as i64])?,
+            literal_f32(&problem.cap, &[MAX_MACHINES as i64])?,
+            literal_f32(&problem.active, &[MAX_COMPONENTS as i64])?,
+        ];
+        Ok(PjRtScorer { problem, exe_batch, exe_one, statics })
+    }
+
+    pub fn problem(&self) -> &ScorerProblem {
+        &self.problem
+    }
+
+    /// Run one padded chunk (`xs.len() <= b`) through an executable.
+    ///
+    /// §Perf: the seven placement-independent input literals are built
+    /// once at construction and passed by reference; only the `x` and
+    /// `r0` literals are created per call, from f32 buffers filled in
+    /// place.
+    fn run_chunk(
+        &self,
+        exe: &super::Executable,
+        statics: &[xla::Literal],
+        b: usize,
+        xs: &[&Placement],
+        r0s: &[f64],
+    ) -> Result<Vec<ScoreRow>> {
+        let cm = MAX_COMPONENTS * MAX_MACHINES;
+        let mut x_flat = vec![0.0f32; b * cm];
+        let mut r0_flat = vec![0.0f32; b];
+        for (i, p) in xs.iter().enumerate() {
+            self.problem.pad_placement_into(p, &mut x_flat[i * cm..(i + 1) * cm])?;
+            r0_flat[i] = r0s[i] as f32;
+        }
+        let x_lit = xla::Literal::vec1(&x_flat)
+            .reshape(&[b as i64, MAX_COMPONENTS as i64, MAX_MACHINES as i64])
+            .map_err(|e| Error::Runtime(e.to_string()))?;
+        let r0_lit = xla::Literal::vec1(&r0_flat);
+        // Input order must match aot.py's lower_scorer signature:
+        // (x, adj, alpha, src_mask, r0, e_m, met_m, cap, active)
+        let args: Vec<&xla::Literal> = vec![
+            &x_lit,
+            &statics[0],
+            &statics[1],
+            &statics[2],
+            &r0_lit,
+            &statics[3],
+            &statics[4],
+            &statics[5],
+            &statics[6],
+        ];
+        let out = exe.run_refs(&args)?;
+        if out.len() != 4 {
+            return Err(Error::Runtime(format!("scorer returned {} outputs, want 4", out.len())));
+        }
+        let util: Vec<f32> = out[0].to_vec().map_err(|e| Error::Runtime(e.to_string()))?;
+        let thpt: Vec<f32> = out[1].to_vec().map_err(|e| Error::Runtime(e.to_string()))?;
+        let feas: Vec<f32> = out[2].to_vec().map_err(|e| Error::Runtime(e.to_string()))?;
+        let ir: Vec<f32> = out[3].to_vec().map_err(|e| Error::Runtime(e.to_string()))?;
+        let mut rows = Vec::with_capacity(xs.len());
+        for i in 0..xs.len() {
+            rows.push(ScoreRow {
+                util: (0..self.problem.n_machines)
+                    .map(|m| util[i * MAX_MACHINES + m] as f64)
+                    .collect(),
+                throughput: thpt[i] as f64,
+                feasible: feas[i] > 0.5,
+                ir_comp: (0..self.problem.n_comp)
+                    .map(|c| ir[i * MAX_COMPONENTS + c] as f64)
+                    .collect(),
+            });
+        }
+        Ok(rows)
+    }
+}
+
+impl PlacementScorer for PjRtScorer {
+    fn score_batch(&self, candidates: &[Placement], r0s: &[f64]) -> Result<Vec<ScoreRow>> {
+        if candidates.len() != r0s.len() {
+            return Err(Error::Runtime("candidates/r0s length mismatch".into()));
+        }
+        let mut rows = Vec::with_capacity(candidates.len());
+        let mut i = 0;
+        while i < candidates.len() {
+            let remaining = candidates.len() - i;
+            if remaining == 1 {
+                let refs = [&candidates[i]];
+                rows.extend(self.run_chunk(&self.exe_one, &self.statics, B_ONE, &refs, &r0s[i..i + 1])?);
+                i += 1;
+            } else {
+                let take = remaining.min(B_BATCH);
+                let refs: Vec<&Placement> = candidates[i..i + take].iter().collect();
+                rows.extend(self.run_chunk(&self.exe_batch, &self.statics, B_BATCH, &refs, &r0s[i..i + take])?);
+                i += take;
+            }
+        }
+        Ok(rows)
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Exact native mirror (used beyond AOT dims and as the test oracle).
+pub struct NativeScorer {
+    ev: Evaluator,
+}
+
+impl NativeScorer {
+    pub fn new(top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Self> {
+        Ok(NativeScorer { ev: Evaluator::new(top, cluster, profiles)? })
+    }
+
+    pub fn evaluator(&self) -> &Evaluator {
+        &self.ev
+    }
+}
+
+impl PlacementScorer for NativeScorer {
+    fn score_batch(&self, candidates: &[Placement], r0s: &[f64]) -> Result<Vec<ScoreRow>> {
+        if candidates.len() != r0s.len() {
+            return Err(Error::Runtime("candidates/r0s length mismatch".into()));
+        }
+        candidates
+            .iter()
+            .zip(r0s)
+            .map(|(p, &r0)| {
+                let e = self.ev.evaluate(p, r0)?;
+                Ok(ScoreRow {
+                    util: e.util,
+                    throughput: e.throughput,
+                    feasible: e.feasible,
+                    ir_comp: e.ir_comp,
+                })
+            })
+            .collect()
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    #[test]
+    fn problem_padding_shapes() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let p = ScorerProblem::new(&top, &cluster, &db).unwrap();
+        assert_eq!(p.adj.len(), MAX_COMPONENTS * MAX_COMPONENTS);
+        assert_eq!(p.e_m.len(), MAX_COMPONENTS * MAX_MACHINES);
+        assert_eq!(p.cap[0], 100.0);
+        assert_eq!(p.cap[cluster.n_machines()], 0.0); // padding
+        assert_eq!(p.active.iter().sum::<f64>() as usize, top.n_components());
+    }
+
+    #[test]
+    fn native_scorer_matches_evaluator() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::diamond();
+        let sc = NativeScorer::new(&top, &cluster, &db).unwrap();
+        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+        let mut p = Placement::empty(top.n_components(), cluster.n_machines());
+        for c in 0..top.n_components() {
+            p.x[c][c % 3] = 1;
+        }
+        let row = sc.score_one(&p, 20.0).unwrap();
+        let want = ev.evaluate(&p, 20.0).unwrap();
+        assert_eq!(row.feasible, want.feasible);
+        assert!((row.throughput - want.throughput).abs() < 1e-9);
+        for (a, b) in row.util.iter().zip(&want.util) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn oversize_cluster_rejected() {
+        let (cluster, db) = presets::homogeneous_cluster(MAX_MACHINES + 1);
+        let top = benchmarks::linear();
+        assert!(ScorerProblem::new(&top, &cluster, &db).is_err());
+    }
+}

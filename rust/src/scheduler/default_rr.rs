@@ -1,0 +1,139 @@
+//! Storm's default scheduler (paper §2.3): Round-Robin, heterogeneity
+//! blind.
+//!
+//! Given an execution topology graph (instance counts per component), the
+//! default scheduler maps executors to worker slots in a simple
+//! Round-Robin over the available machines, "regardless of their
+//! computing power" — exactly the behavior Fig. 2c illustrates.
+//!
+//! The counts are an *input* here (in Storm the user sets them).  For the
+//! paper's comparisons the counts come from the proposed scheduler's ETG
+//! (the methodology of §6.3: "we first run our algorithm to determine the
+//! number of instances... now we can fairly compare only the
+//! effectiveness of scheduling policies").
+
+use super::{finish, Schedule, Scheduler};
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::predict::{Evaluator, Placement};
+use crate::topology::{Etg, Topology};
+use crate::{Error, Result};
+
+/// Round-Robin baseline.
+#[derive(Debug, Clone)]
+pub struct DefaultScheduler {
+    /// Instance counts to place.  `None` = minimal ETG (one per
+    /// component), matching a user who submits the bare user graph.
+    pub etg: Option<Etg>,
+}
+
+impl DefaultScheduler {
+    /// Place the minimal ETG (1 instance per component).
+    pub fn minimal() -> Self {
+        DefaultScheduler { etg: None }
+    }
+
+    /// Place a caller-provided ETG.
+    pub fn with_etg(etg: Etg) -> Self {
+        DefaultScheduler { etg: Some(etg) }
+    }
+
+    /// The pure assignment step, usable without profiles: executors are
+    /// enumerated component-major (Storm's executor list order) and dealt
+    /// to machines cyclically.
+    pub fn assign(top: &Topology, cluster: &Cluster, etg: &Etg) -> Result<Placement> {
+        if etg.counts.len() != top.n_components() {
+            return Err(Error::Schedule(format!(
+                "ETG has {} counts for {} components",
+                etg.counts.len(),
+                top.n_components()
+            )));
+        }
+        let m = cluster.n_machines();
+        let mut p = Placement::empty(top.n_components(), m);
+        let mut next = 0usize;
+        for (c, &count) in etg.counts.iter().enumerate() {
+            for _ in 0..count {
+                p.x[c][next % m] += 1;
+                next += 1;
+            }
+        }
+        Ok(p)
+    }
+}
+
+impl Scheduler for DefaultScheduler {
+    fn name(&self) -> &'static str {
+        "default-rr"
+    }
+
+    fn schedule(&self, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Schedule> {
+        let etg = self.etg.clone().unwrap_or_else(|| Etg::minimal(top));
+        let placement = Self::assign(top, cluster, &etg)?;
+        let ev = Evaluator::new(top, cluster, profiles)?;
+        // Storm does not certify a rate; for throughput comparisons the
+        // baseline gets credit for the largest rate its placement can
+        // sustain (most favorable interpretation for the baseline).
+        finish(&ev, placement)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    #[test]
+    fn rr_deals_cyclically() {
+        let (cluster, _) = presets::paper_cluster();
+        let top = benchmarks::linear(); // 4 components
+        let etg = Etg { counts: vec![1, 1, 1, 1] };
+        let p = DefaultScheduler::assign(&top, &cluster, &etg).unwrap();
+        // executors 0..3 dealt to machines 0,1,2,0
+        assert_eq!(p.x[0][0], 1);
+        assert_eq!(p.x[1][1], 1);
+        assert_eq!(p.x[2][2], 1);
+        assert_eq!(p.x[3][0], 1);
+    }
+
+    #[test]
+    fn rr_balances_counts() {
+        let (cluster, _) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let etg = Etg { counts: vec![2, 3, 4, 3] }; // 12 tasks over 3 machines
+        let p = DefaultScheduler::assign(&top, &cluster, &etg).unwrap();
+        for m in 0..cluster.n_machines() {
+            assert_eq!(p.tasks_on(m), 4);
+        }
+        assert_eq!(p.counts(), etg.counts);
+    }
+
+    #[test]
+    fn rr_ignores_heterogeneity() {
+        // identical task loads land on machines in index order, not by power
+        let (cluster, _) = presets::paper_cluster();
+        let top = benchmarks::star();
+        let etg = Etg { counts: vec![1; top.n_components()] };
+        let p = DefaultScheduler::assign(&top, &cluster, &etg).unwrap();
+        // first executor always on machine 0 (the slow Pentium)
+        assert_eq!(p.x[0][0], 1);
+    }
+
+    #[test]
+    fn schedule_is_feasible() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::diamond();
+        let s = DefaultScheduler::minimal().schedule(&top, &cluster, &db).unwrap();
+        assert!(s.eval.feasible);
+        assert!(s.rate > 0.0);
+    }
+
+    #[test]
+    fn wrong_etg_len_rejected() {
+        let (cluster, _) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let etg = Etg { counts: vec![1, 1] };
+        assert!(DefaultScheduler::assign(&top, &cluster, &etg).is_err());
+    }
+}

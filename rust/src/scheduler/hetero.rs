@@ -1,0 +1,517 @@
+//! The paper's heterogeneity-aware scheduler (§5, Algorithms 1 & 2).
+//!
+//! Phase 1 — `FirstAssignment` (Alg. 1): take one instance of every
+//! component and map it to the machine with the least predicted TCU
+//! (eq. 5) at the initial rate `R0`.
+//!
+//! Phase 2 — `MaximizeThroughput` (Alg. 2): repeatedly
+//!
+//! 1. predict machine utilizations at the current rate;
+//! 2. if nothing is over-utilized, checkpoint the state as the latest
+//!    stable schedule and raise the rate by `Current_IR / Scale`;
+//! 3. otherwise take a **new instance of the hottest task's component**
+//!    on the first over-utilized machine and place it on the most
+//!    suitable machine with enough capacity;
+//! 4. if no machine can host it, halve the rate increment (`Scale *= 2`),
+//!    roll back to the last stable schedule, and retry;
+//! 5. terminate when `Current_IR <= Scale` — no capacity is left and the
+//!    increment has collapsed.
+//!
+//! Rollback detail: the paper's pseudo-code restores `Current_ETG` from
+//! `Final_ETG` but leaves `Current_IR` implicit; we restore the last
+//! stable rate and re-apply the (now smaller) increment, which preserves
+//! the intent — retry from the stable state with a finer step — and
+//! guarantees termination (documented in DESIGN.md).
+//!
+//! Placement evaluations go through a [`PlacementScorer`], so the same
+//! algorithm runs against the PJRT-compiled AOT model (the production
+//! path) or the native mirror.
+
+use super::{Schedule, Scheduler};
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::predict::{Evaluation, Evaluator, Placement};
+use crate::runtime::scorer::{NativeScorer, PlacementScorer, ScoreRow};
+use crate::topology::Topology;
+use crate::{Error, Result};
+
+/// Tunables for the paper's algorithm.
+#[derive(Debug, Clone)]
+pub struct HeteroScheduler {
+    /// Topology initial input rate `R0` (tuples/s).  The paper starts its
+    /// profiling-style runs at 8 tuple/s.
+    pub r0: f64,
+    /// Upper bound on executors per worker (the paper's `k_j`).
+    pub max_tasks_per_machine: usize,
+    /// Safety bound on Alg. 2 iterations.
+    pub max_iterations: usize,
+    /// Post-pass refinement (the paper's §8 "possible improvements of the
+    /// scheduler efficiency" future work): greedily prune instances whose
+    /// MET overhead outweighs their share, and hill-climb single-instance
+    /// moves, as long as the max stable rate improves.
+    pub refine: bool,
+}
+
+impl Default for HeteroScheduler {
+    fn default() -> Self {
+        HeteroScheduler { r0: 8.0, max_tasks_per_machine: 32, max_iterations: 100_000, refine: true }
+    }
+}
+
+impl HeteroScheduler {
+    pub fn with_r0(r0: f64) -> Self {
+        HeteroScheduler { r0, ..Default::default() }
+    }
+
+    /// Greedy refinement: (a) drop instances whose removal raises the max
+    /// stable rate (their MET cost exceeded their sharing benefit);
+    /// (b) move single instances to better hosts while the rate improves.
+    ///
+    /// Uses the eq.-5 linearity incrementally: per machine we maintain the
+    /// utilization slope `a_m = Σ x[c][m]·e[c][m]·gain_c/n_c` and MET load
+    /// `b_m`, so every candidate prune/move is scored in O(machines)
+    /// without cloning the placement (§Perf in EXPERIMENTS.md: this took
+    /// the 180-machine schedule from ~712 ms to the recorded figure).
+    fn refine_placement(&self, ev: &Evaluator, mut p: Placement) -> Result<Placement> {
+        let n_m = ev.n_machines();
+        let n_c = p.n_components();
+
+        // closed-form rate from slope/intercept arrays with per-machine
+        // adjustments applied on the fly
+        let rate_with = |a: &[f64], b: &[f64], adj: &dyn Fn(usize) -> (f64, f64)| -> f64 {
+            let mut best = f64::INFINITY;
+            for m in 0..n_m {
+                let (da, db) = adj(m);
+                let bm = b[m] + db;
+                if bm > ev.cap[m] + 1e-9 {
+                    return 0.0;
+                }
+                let am = a[m] + da;
+                if am > 1e-15 {
+                    best = best.min((ev.cap[m] - bm) / am);
+                }
+            }
+            best
+        };
+
+        loop {
+            // rebuild the incremental state once per sweep (O(n·m))
+            let counts = p.counts();
+            let mut a = vec![0.0f64; n_m];
+            let mut b = vec![0.0f64; n_m];
+            for c in 0..n_c {
+                let share = ev.gains[c] / counts[c].max(1) as f64;
+                for m in 0..n_m {
+                    let k = p.x[c][m] as f64;
+                    if k > 0.0 {
+                        a[m] += k * ev.e_m[c][m] * share;
+                        b[m] += k * ev.met_m[c][m];
+                    }
+                }
+            }
+            let mut best_rate = rate_with(&a, &b, &|_| (0.0, 0.0));
+            let mut improved = false;
+
+            // (a) prune: removing one instance of c from machine `drop_m`
+            // re-shares the stream over n-1 instances (slope of every
+            // machine hosting c changes)
+            'prune: for c in 0..n_c {
+                let n = p.count(c);
+                if n <= 1 {
+                    continue;
+                }
+                let share_old = ev.gains[c] / n as f64;
+                let share_new = ev.gains[c] / (n - 1) as f64;
+                for drop_m in 0..n_m {
+                    if p.x[c][drop_m] == 0 {
+                        continue;
+                    }
+                    let adj = |m: usize| -> (f64, f64) {
+                        let k_old = p.x[c][m] as f64;
+                        let k_new = k_old - if m == drop_m { 1.0 } else { 0.0 };
+                        (
+                            ev.e_m[c][m] * (k_new * share_new - k_old * share_old),
+                            -if m == drop_m { ev.met_m[c][m] } else { 0.0 },
+                        )
+                    };
+                    let r = rate_with(&a, &b, &adj);
+                    if r > best_rate * (1.0 + 1e-9) {
+                        p.x[c][drop_m] -= 1;
+                        improved = true;
+                        break 'prune; // state arrays stale: restart sweep
+                    }
+                }
+            }
+            if improved {
+                continue;
+            }
+
+            // (b) single-instance moves (count unchanged: only from/to move)
+            'moves: for c in 0..n_c {
+                let share = ev.gains[c] / counts[c].max(1) as f64;
+                for from in 0..n_m {
+                    if p.x[c][from] == 0 {
+                        continue;
+                    }
+                    for to in 0..n_m {
+                        if to == from || p.tasks_on(to) >= self.max_tasks_per_machine {
+                            continue;
+                        }
+                        let adj = |m: usize| -> (f64, f64) {
+                            if m == from {
+                                (-ev.e_m[c][m] * share, -ev.met_m[c][m])
+                            } else if m == to {
+                                (ev.e_m[c][m] * share, ev.met_m[c][m])
+                            } else {
+                                (0.0, 0.0)
+                            }
+                        };
+                        let r = rate_with(&a, &b, &adj);
+                        if r > best_rate * (1.0 + 1e-9) {
+                            p.x[c][from] -= 1;
+                            p.x[c][to] += 1;
+                            best_rate = r;
+                            // a/b only changed on two machines: patch them
+                            a[from] -= ev.e_m[c][from] * share;
+                            b[from] -= ev.met_m[c][from];
+                            a[to] += ev.e_m[c][to] * share;
+                            b[to] += ev.met_m[c][to];
+                            improved = true;
+                            if p.x[c][from] == 0 {
+                                continue 'moves;
+                            }
+                        }
+                    }
+                }
+            }
+            if !improved {
+                return Ok(p);
+            }
+        }
+    }
+
+    /// Alg. 1: one instance per component on its least-TCU machine
+    /// (among machines still under the per-worker task bound `k_j`).
+    pub fn first_assignment(&self, ev: &Evaluator, top: &Topology) -> Result<Placement> {
+        let order = top.topo_order()?;
+        let mut p = Placement::empty(ev.n_components(), ev.n_machines());
+        for &c in &order {
+            let mut best: Option<(usize, f64)> = None;
+            for m in 0..ev.n_machines() {
+                if p.tasks_on(m) >= self.max_tasks_per_machine {
+                    continue;
+                }
+                let tcu = ev.tcu_one(c, m, 1, self.r0);
+                if best.map_or(true, |(_, t)| tcu < t) {
+                    best = Some((m, tcu));
+                }
+            }
+            let (best_m, _) = best.ok_or_else(|| {
+                Error::Schedule(format!(
+                    "cluster slots exhausted during FirstAssignment (k_j = {})",
+                    self.max_tasks_per_machine
+                ))
+            })?;
+            p.x[c][best_m] = 1;
+        }
+        Ok(p)
+    }
+
+    /// The hottest task (component index) on machine `m`: the instance
+    /// with the highest predicted TCU among tasks placed on `m`.
+    fn hottest_on(&self, ev: &Evaluator, p: &Placement, m: usize, rate: f64) -> Option<usize> {
+        let counts = p.counts();
+        let mut best: Option<(usize, f64)> = None;
+        for c in 0..p.n_components() {
+            if p.x[c][m] == 0 {
+                continue;
+            }
+            let tcu = ev.tcu_one(c, m, counts[c], rate);
+            if best.map_or(true, |(_, t)| tcu > t) {
+                best = Some((c, tcu));
+            }
+        }
+        best.map(|(c, _)| c)
+    }
+
+    /// Find the most suitable machine for a new instance of component
+    /// `c`: among machines that (a) stay under their task bound and
+    /// (b) stay within capacity *after* the instance is added (evaluated
+    /// through the scorer, so rate re-sharing is accounted for), pick the
+    /// one giving the new instance the least TCU.
+    fn best_host(
+        &self,
+        ev: &Evaluator,
+        scorer: &dyn PlacementScorer,
+        p: &Placement,
+        c: usize,
+        rate: f64,
+    ) -> Result<Option<(usize, Placement)>> {
+        let n_machines = ev.n_machines();
+        let n_before = p.count(c);
+        let n_after = n_before + 1;
+
+        if scorer.backend() == "native" {
+            // Fast path: the candidate's host utilization differs from the
+            // base evaluation only in component c's terms (the stream
+            // re-shares n -> n+1), so each candidate is O(1) given one base
+            // evaluation — no placement clones (§Perf).
+            let base = scorer.score_one(p, rate)?;
+            let ir = ev.gains[c] * rate;
+            let share_old = ir / n_before.max(1) as f64;
+            let share_new = ir / n_after as f64;
+            let mut best: Option<(usize, f64)> = None;
+            for m in 0..n_machines {
+                if p.tasks_on(m) >= self.max_tasks_per_machine {
+                    continue;
+                }
+                let k = p.x[c][m] as f64;
+                let util_after = base.util[m] - k * ev.e_m[c][m] * share_old
+                    + (k + 1.0) * ev.e_m[c][m] * share_new
+                    + ev.met_m[c][m];
+                if util_after > ev.cap[m] + 1e-6 {
+                    continue;
+                }
+                let headroom = ev.cap[m] - util_after;
+                let tcu = ev.tcu_one(c, m, n_after, rate);
+                let score = -headroom + tcu * 1e-3;
+                if best.map_or(true, |(_, s)| score < s) {
+                    best = Some((m, score));
+                }
+            }
+            return Ok(best.map(|(m, _)| {
+                let mut q = p.clone();
+                q.x[c][m] += 1;
+                (m, q)
+            }));
+        }
+
+        // PJRT path: build every candidate and score them in one batch
+        // (a single scorer_b256 execution).
+        let mut cands: Vec<(usize, Placement)> = Vec::new();
+        for m in 0..n_machines {
+            if p.tasks_on(m) >= self.max_tasks_per_machine {
+                continue;
+            }
+            let mut q = p.clone();
+            q.x[c][m] += 1;
+            cands.push((m, q));
+        }
+        if cands.is_empty() {
+            return Ok(None);
+        }
+        let placements: Vec<Placement> = cands.iter().map(|(_, q)| q.clone()).collect();
+        let rates = vec![rate; placements.len()];
+        let rows = scorer.score_batch(&placements, &rates)?;
+        let mut best: Option<(usize, f64, usize)> = None; // (machine, score, cand idx)
+        for (i, ((m, _), row)) in cands.iter().zip(&rows).enumerate() {
+            // the host itself must end up within budget
+            if row.util[*m] > ev.cap[*m] + 1e-6 {
+                continue;
+            }
+            // "most suitable machine": the host keeping the most headroom
+            // after absorbing the instance, tie-broken by the instance's
+            // own TCU (favors fast machines at equal headroom).
+            let headroom = ev.cap[*m] - row.util[*m];
+            let tcu = ev.tcu_one(c, *m, n_after, rate);
+            let score = -headroom + tcu * 1e-3;
+            if best.map_or(true, |(_, s, _)| score < s) {
+                best = Some((*m, score, i));
+            }
+        }
+        Ok(best.map(|(m, _, i)| (m, cands.swap_remove(i).1)))
+    }
+
+    /// First over-utilized machine under `row`, if any.
+    fn first_over(&self, ev: &Evaluator, row: &ScoreRow) -> Option<usize> {
+        row.util
+            .iter()
+            .enumerate()
+            .find(|(m, &u)| u > ev.cap[*m] + 1e-6)
+            .map(|(m, _)| m)
+    }
+
+    /// Alg. 2 with a pluggable scorer.
+    pub fn schedule_with_scorer(
+        &self,
+        top: &Topology,
+        cluster: &Cluster,
+        profiles: &ProfileDb,
+        scorer: &dyn PlacementScorer,
+    ) -> Result<Schedule> {
+        let ev = Evaluator::new(top, cluster, profiles)?;
+        let mut placement = self.first_assignment(&ev, top)?;
+        let mut scale = 1.0f64;
+        let mut current_ir = self.r0;
+        let mut final_state: Option<(Placement, f64)> = None;
+
+        for _ in 0..self.max_iterations {
+            let row = scorer.score_one(&placement, current_ir)?;
+            match self.first_over(&ev, &row) {
+                None => {
+                    // stable: checkpoint and raise the rate
+                    final_state = Some((placement.clone(), current_ir));
+                    current_ir += current_ir / scale;
+                }
+                Some(m_over) => {
+                    let hottest = self.hottest_on(&ev, &placement, m_over, current_ir)
+                        .ok_or_else(|| Error::Schedule("over-utilized machine hosts no tasks".into()))?;
+                    match self.best_host(&ev, scorer, &placement, hottest, current_ir)? {
+                        Some((_, q)) => {
+                            placement = q;
+                        }
+                        None => {
+                            // no capacity left anywhere
+                            if current_ir > scale {
+                                if let Some((fp, fr)) = &final_state {
+                                    scale *= 2.0;
+                                    placement = fp.clone();
+                                    current_ir = fr + fr / scale;
+                                } else {
+                                    // initial rate was never feasible
+                                    return Err(Error::Schedule(format!(
+                                        "initial rate R0={} infeasible on this cluster",
+                                        self.r0
+                                    )));
+                                }
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let (mut placement, mut rate) = final_state
+            .ok_or_else(|| Error::Schedule("no stable schedule found".into()))?;
+        if self.refine {
+            placement = self.refine_placement(&ev, placement)?;
+            // Also refine from the Round-Robin assignment of the same ETG:
+            // greedy growth can land in a local optimum the RR seed
+            // escapes, and this guarantees the proposed schedule never
+            // loses to the default scheduler on its own instance counts.
+            let etg = crate::topology::Etg { counts: placement.counts() };
+            if let Ok(rr) = crate::scheduler::default_rr::DefaultScheduler::assign(top, cluster, &etg) {
+                let rr_refined = self.refine_placement(&ev, rr)?;
+                if ev.max_stable_rate(&rr_refined)? > ev.max_stable_rate(&placement)? {
+                    placement = rr_refined;
+                }
+            }
+            rate = ev.max_stable_rate(&placement)?.max(rate);
+        }
+        let row = scorer.score_one(&placement, rate)?;
+        let eval = Evaluation {
+            util: row.util,
+            throughput: row.throughput,
+            feasible: row.feasible,
+            ir_comp: row.ir_comp,
+        };
+        Ok(Schedule { placement, rate, eval })
+    }
+}
+
+impl Scheduler for HeteroScheduler {
+    fn name(&self) -> &'static str {
+        "hetero"
+    }
+
+    fn schedule(&self, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Schedule> {
+        let scorer = NativeScorer::new(top, cluster, profiles)?;
+        self.schedule_with_scorer(top, cluster, profiles, &scorer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    fn run(top: &Topology) -> (Schedule, Evaluator) {
+        let (cluster, db) = presets::paper_cluster();
+        let ev = Evaluator::new(top, &cluster, &db).unwrap();
+        let s = HeteroScheduler::default().schedule(top, &cluster, &db).unwrap();
+        (s, ev)
+    }
+
+    #[test]
+    fn first_assignment_prefers_least_tcu() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+        let hs = HeteroScheduler::default();
+        let p = hs.first_assignment(&ev, &top).unwrap();
+        // Table 3: the Pentium worker (machine 0) has the lowest e for
+        // every micro-benchmark task type, so everything starts there.
+        for c in 0..top.n_components() {
+            assert_eq!(p.x[c][0], 1, "component {c}");
+            assert_eq!(p.count(c), 1);
+        }
+    }
+
+    #[test]
+    fn schedule_is_feasible_and_saturating() {
+        for top in benchmarks::micro() {
+            let (s, ev) = run(&top);
+            assert!(s.eval.feasible, "{}: infeasible result", top.name);
+            assert!(s.rate >= 8.0, "{}: rate {}", top.name, s.rate);
+            // every component keeps >= 1 instance
+            for c in 0..top.n_components() {
+                assert!(s.placement.count(c) >= 1);
+            }
+            // no machine over budget
+            for (m, u) in s.eval.util.iter().enumerate() {
+                assert!(*u <= ev.cap[m] + 1e-6, "{}: machine {m} at {u}%", top.name);
+            }
+        }
+    }
+
+    #[test]
+    fn beats_default_rr_on_micro() {
+        use crate::scheduler::default_rr::DefaultScheduler;
+        use crate::topology::Etg;
+        let (cluster, db) = presets::paper_cluster();
+        for top in benchmarks::micro() {
+            let ours = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+            let etg = Etg { counts: ours.placement.counts() };
+            let rr = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &db).unwrap();
+            assert!(
+                ours.eval.throughput >= rr.eval.throughput * 0.999,
+                "{}: ours {} < rr {}",
+                top.name,
+                ours.eval.throughput,
+                rr.eval.throughput
+            );
+        }
+    }
+
+    #[test]
+    fn respects_task_bound() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let hs = HeteroScheduler { max_tasks_per_machine: 2, ..Default::default() };
+        let s = hs.schedule(&top, &cluster, &db).unwrap();
+        for m in 0..cluster.n_machines() {
+            assert!(s.placement.tasks_on(m) <= 2);
+        }
+    }
+
+    #[test]
+    fn infeasible_r0_errors() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let hs = HeteroScheduler { r0: 1e9, max_tasks_per_machine: 4, ..Default::default() };
+        assert!(hs.schedule(&top, &cluster, &db).is_err());
+    }
+
+    #[test]
+    fn deterministic() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::diamond();
+        let a = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let b = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        assert_eq!(a.placement, b.placement);
+        assert!((a.rate - b.rate).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,112 @@
+//! Schedulers (paper §5 + §6 comparators).
+//!
+//! * [`default_rr::DefaultScheduler`] — Storm's default Round-Robin task
+//!   assignment (the baseline the paper beats).
+//! * [`hetero::HeteroScheduler`] — the paper's contribution: Alg. 1
+//!   (`FirstAssignment`) + Alg. 2 (`MaximizeThroughput`).
+//! * [`optimal::OptimalScheduler`] — exhaustive search over the placement
+//!   design space (the paper's upper-bound comparator), batch-scored
+//!   through the AOT model.
+//!
+//! All three produce a [`Schedule`]: a placement, the topology input rate
+//! it sustains, and the predicted evaluation at that rate.
+
+pub mod default_rr;
+pub mod hetero;
+pub mod optimal;
+pub mod reschedule;
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::predict::{Evaluation, Evaluator, Placement};
+use crate::topology::Topology;
+use crate::Result;
+
+/// A scheduler's output: the execution topology graph (implied by the
+/// placement's instance counts), its task assignment, and the topology
+/// input rate the scheduler certifies.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub placement: Placement,
+    /// Certified topology input rate (tuples/s).
+    pub rate: f64,
+    /// Predicted evaluation at `rate`.
+    pub eval: Evaluation,
+}
+
+impl Schedule {
+    /// Render the assignment as `component -> [machine names]` rows.
+    pub fn describe(&self, top: &Topology, cluster: &Cluster) -> String {
+        let mut out = String::new();
+        for (c, comp) in top.components.iter().enumerate() {
+            let mut homes = Vec::new();
+            for (m, mach) in cluster.machines.iter().enumerate() {
+                for _ in 0..self.placement.x[c][m] {
+                    homes.push(mach.name.as_str());
+                }
+            }
+            out.push_str(&format!(
+                "  {:<16} x{:<2} -> [{}]\n",
+                comp.name,
+                self.placement.count(c),
+                homes.join(", ")
+            ));
+        }
+        out
+    }
+}
+
+/// Common scheduler interface.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Produce a schedule for the triple.  Implementations certify the
+    /// returned `rate` is feasible under the prediction model.
+    fn schedule(&self, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Schedule>;
+}
+
+/// Finish a schedule from a placement: certify its max stable rate and
+/// evaluate there (shared by the RR baseline and the optimal search).
+pub(crate) fn finish(ev: &Evaluator, placement: Placement) -> Result<Schedule> {
+    let rate = ev.max_stable_rate(&placement)?;
+    let rate = if rate.is_finite() { rate } else { 0.0 };
+    let eval = ev.evaluate(&placement, rate)?;
+    Ok(Schedule { placement, rate, eval })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    #[test]
+    fn describe_lists_all_components() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+        let mut p = Placement::empty(top.n_components(), cluster.n_machines());
+        for c in 0..top.n_components() {
+            p.x[c][0] = 1;
+        }
+        let s = finish(&ev, p).unwrap();
+        let d = s.describe(&top, &cluster);
+        for comp in &top.components {
+            assert!(d.contains(&comp.name), "missing {}", comp.name);
+        }
+    }
+
+    #[test]
+    fn finish_rate_is_feasible_boundary() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+        let mut p = Placement::empty(top.n_components(), cluster.n_machines());
+        for c in 0..top.n_components() {
+            p.x[c][c % 3] = 1;
+        }
+        let s = finish(&ev, p).unwrap();
+        assert!(s.eval.feasible);
+        assert!(s.rate > 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Failure rescheduling (paper §4.2 & §8): "in case of machine failure,
+//! a slow scheduler leads the cluster to tuple overloading state...
+//! during the execution, by any change in the cluster state this
+//! algorithm can be used to recalculate the new number of instances and
+//! their suitable assignment."
+//!
+//! [`after_failure`] removes the failed worker from the cluster and
+//! re-runs the heterogeneity-aware scheduler on the survivors — the
+//! whole point being that it finishes in microseconds-to-milliseconds
+//! (see `benches/scheduler_micro.rs`), where the exhaustive comparator
+//! would strand the cluster for hours.
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::topology::Topology;
+use crate::{Error, Result};
+
+use super::hetero::HeteroScheduler;
+use super::{Schedule, Scheduler};
+
+/// Outcome of a failure-rescheduling step.
+#[derive(Debug, Clone)]
+pub struct Reschedule {
+    /// The surviving cluster (failed machine removed).
+    pub cluster: Cluster,
+    /// The recomputed schedule on the survivors.
+    pub schedule: Schedule,
+    /// Throughput retained vs the pre-failure schedule (1.0 = all).
+    pub retained: f64,
+}
+
+/// Remove `failed` (by machine name) and recompute the schedule.
+pub fn after_failure(
+    top: &Topology,
+    cluster: &Cluster,
+    profiles: &ProfileDb,
+    before: &Schedule,
+    failed: &str,
+    scheduler: &HeteroScheduler,
+) -> Result<Reschedule> {
+    let idx = cluster
+        .machines
+        .iter()
+        .position(|m| m.name == failed)
+        .ok_or_else(|| Error::Cluster(format!("unknown machine '{failed}'")))?;
+    if cluster.n_machines() == 1 {
+        return Err(Error::Cluster("cannot lose the only worker".into()));
+    }
+    let mut survivors = cluster.clone();
+    survivors.machines.remove(idx);
+    survivors.name = format!("{}-minus-{failed}", cluster.name);
+    survivors.validate()?;
+
+    let schedule = scheduler.schedule(top, &survivors, profiles)?;
+    let retained = if before.eval.throughput > 0.0 {
+        schedule.eval.throughput / before.eval.throughput
+    } else {
+        1.0
+    };
+    Ok(Reschedule { cluster: survivors, schedule, retained })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::scheduler::Scheduler;
+    use crate::topology::benchmarks;
+
+    #[test]
+    fn reschedule_survives_machine_loss() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let hs = HeteroScheduler::default();
+        let before = hs.schedule(&top, &cluster, &db).unwrap();
+        let r = after_failure(&top, &cluster, &db, &before, "i3-0", &hs).unwrap();
+        assert_eq!(r.cluster.n_machines(), 2);
+        assert!(r.schedule.eval.feasible);
+        // losing 1 of 3 workers keeps a meaningful share of throughput
+        assert!(r.retained > 0.3, "retained only {:.2}", r.retained);
+        assert!(r.retained < 1.0, "throughput should drop after failure");
+        // no instance may remain on the failed machine (shape shrank)
+        assert_eq!(r.schedule.placement.n_machines(), 2);
+    }
+
+    #[test]
+    fn losing_the_strongest_costs_more() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let hs = HeteroScheduler::default();
+        let before = hs.schedule(&top, &cluster, &db).unwrap();
+        // Table 3 makes the Pentium the per-tuple fastest worker here
+        let lose_fast = after_failure(&top, &cluster, &db, &before, "pentium-0", &hs).unwrap();
+        let lose_slow = after_failure(&top, &cluster, &db, &before, "i3-0", &hs).unwrap();
+        assert!(
+            lose_fast.retained <= lose_slow.retained + 1e-9,
+            "losing the fast worker ({}) should cost >= losing the slow one ({})",
+            lose_fast.retained,
+            lose_slow.retained
+        );
+    }
+
+    #[test]
+    fn unknown_machine_rejected() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let hs = HeteroScheduler::default();
+        let before = hs.schedule(&top, &cluster, &db).unwrap();
+        assert!(after_failure(&top, &cluster, &db, &before, "ghost", &hs).is_err());
+    }
+
+    #[test]
+    fn cannot_lose_last_worker() {
+        let (cluster, db) = presets::homogeneous_cluster(1);
+        let top = benchmarks::linear();
+        let hs = HeteroScheduler::default();
+        let before = hs.schedule(&top, &cluster, &db).unwrap();
+        let name = cluster.machines[0].name.clone();
+        assert!(after_failure(&top, &cluster, &db, &before, &name, &hs).is_err());
+    }
+
+    #[test]
+    fn cascading_failures() {
+        // lose machines one by one in a Table-4 small scenario; every
+        // intermediate schedule must stay feasible
+        use crate::cluster::scenarios;
+        let (mut cluster, db) = scenarios::by_id(1).unwrap().build();
+        let top = benchmarks::diamond();
+        let hs = HeteroScheduler::default();
+        let mut schedule = hs.schedule(&top, &cluster, &db).unwrap();
+        for _ in 0..3 {
+            let victim = cluster.machines[0].name.clone();
+            let r = after_failure(&top, &cluster, &db, &schedule, &victim, &hs).unwrap();
+            assert!(r.schedule.eval.feasible);
+            cluster = r.cluster;
+            schedule = r.schedule;
+        }
+        assert_eq!(cluster.n_machines(), 3);
+    }
+}

@@ -1,0 +1,215 @@
+//! Analytic large-scale simulator (paper §6.3).
+//!
+//! Given a placement, the simulator reports per-node throughput and CPU
+//! utilization at the placement's max sustainable input rate, plus the
+//! paper's aggregate metrics: overall throughput (sum of task processing
+//! rates) and **weighted overall utilization** (eq. 7/8 — machines with
+//! more processing capacity weigh more, with weights derived from the
+//! profiling data `1/e_ij`).
+//!
+//! This is the faithful equivalent of the paper's Scheduling-Simulator
+//! repo: purely model-driven, no queueing — the tokio engine
+//! ([`crate::engine`]) plays the role of the real cluster instead.
+
+use std::collections::HashMap;
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::predict::{Evaluator, Placement};
+use crate::topology::Topology;
+use crate::Result;
+
+/// Per-machine simulation row.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub machine: String,
+    pub machine_type: String,
+    /// Tasks hosted.
+    pub tasks: usize,
+    /// CPU utilization at the operating rate, percent.
+    pub util: f64,
+    /// Sum of processing rates of hosted tasks, tuples/s.
+    pub throughput: f64,
+}
+
+/// Whole-run simulation output.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Operating topology input rate (tuples/s).
+    pub rate: f64,
+    /// Overall throughput (paper eq. 2 objective), tuples/s.
+    pub throughput: f64,
+    /// Weighted overall utilization (eq. 7), percent.
+    pub weighted_util: f64,
+    /// Mean (unweighted) utilization, percent.
+    pub mean_util: f64,
+    pub nodes: Vec<NodeReport>,
+}
+
+/// Run the analytic simulation of `placement` at its max stable rate
+/// (or at `rate_override` if given — used for like-for-like comparisons
+/// where both schedulers must run the same input rate).
+pub fn simulate(
+    top: &Topology,
+    cluster: &Cluster,
+    profiles: &ProfileDb,
+    placement: &Placement,
+    rate_override: Option<f64>,
+) -> Result<SimReport> {
+    let ev = Evaluator::new(top, cluster, profiles)?;
+    let rate = match rate_override {
+        Some(r) => r,
+        None => {
+            let r = ev.max_stable_rate(placement)?;
+            if r.is_finite() {
+                r
+            } else {
+                0.0
+            }
+        }
+    };
+    let eval = ev.evaluate(placement, rate)?;
+    let counts = placement.counts();
+
+    let mut nodes = Vec::with_capacity(cluster.n_machines());
+    for (m, mach) in cluster.machines.iter().enumerate() {
+        // Tasks on machine m process their share of their component's
+        // stream; a machine's throughput is the sum of those shares.
+        let mut thpt = 0.0;
+        for c in 0..top.n_components() {
+            if placement.x[c][m] > 0 {
+                let share = eval.ir_comp[c] / counts[c].max(1) as f64;
+                thpt += placement.x[c][m] as f64 * share;
+            }
+        }
+        nodes.push(NodeReport {
+            machine: mach.name.clone(),
+            machine_type: cluster.type_name(m).to_string(),
+            tasks: placement.tasks_on(m),
+            util: eval.util[m],
+            throughput: thpt,
+        });
+    }
+
+    let weighted_util = weighted_utilization(top, cluster, profiles, &eval.util)?;
+    let mean_util = eval.util.iter().sum::<f64>() / eval.util.len().max(1) as f64;
+    Ok(SimReport { rate, throughput: eval.throughput, weighted_util, mean_util, nodes })
+}
+
+/// Paper eq. 7/8: overall utilization as a weighted average over machine
+/// types, with type weights proportional to profiled speed `1/e_ij`
+/// summed over the topology's distinct component types.
+pub fn weighted_utilization(
+    top: &Topology,
+    cluster: &Cluster,
+    profiles: &ProfileDb,
+    util: &[f64],
+) -> Result<f64> {
+    // distinct component (task) types — the paper's C <= n
+    let mut task_types: Vec<&str> = top.components.iter().map(|c| c.task_type.as_str()).collect();
+    task_types.sort_unstable();
+    task_types.dedup();
+
+    // x_{ij} = (1/e_ij) / sum_k (1/e_ik), i = machine type, j = task type
+    let type_names: Vec<&str> = cluster.types.iter().map(|t| t.name.as_str()).collect();
+    let mut x_i = vec![0.0f64; type_names.len()];
+    for tt in &task_types {
+        let inv: Vec<f64> = type_names
+            .iter()
+            .map(|mt| profiles.get(tt, mt).map(|p| 1.0 / p.e))
+            .collect::<Result<_>>()?;
+        let denom: f64 = inv.iter().sum();
+        for (i, v) in inv.iter().enumerate() {
+            x_i[i] += v / denom;
+        }
+    }
+    // normalize weights across types so Σ x_i = 1
+    let total: f64 = x_i.iter().sum();
+    for v in &mut x_i {
+        *v /= total;
+    }
+
+    // \bar u_i — mean utilization of machines of type i
+    let mut sum_u: HashMap<usize, (f64, usize)> = HashMap::new();
+    for (m, mach) in cluster.machines.iter().enumerate() {
+        let e = sum_u.entry(mach.type_id).or_insert((0.0, 0));
+        e.0 += util[m];
+        e.1 += 1;
+    }
+    let mut u = 0.0;
+    for (tid, w) in x_i.iter().enumerate() {
+        if let Some((s, n)) = sum_u.get(&tid) {
+            u += w * (s / *n as f64);
+        }
+    }
+    Ok(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::scheduler::{hetero::HeteroScheduler, Scheduler};
+    use crate::topology::benchmarks;
+
+    #[test]
+    fn simulate_hetero_schedule() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let rep = simulate(&top, &cluster, &db, &s.placement, None).unwrap();
+        assert!(rep.throughput > 0.0);
+        assert!(rep.rate > 0.0);
+        assert_eq!(rep.nodes.len(), cluster.n_machines());
+        // node throughputs sum to overall throughput
+        let node_sum: f64 = rep.nodes.iter().map(|n| n.throughput).sum();
+        assert!((node_sum - rep.throughput).abs() < 1e-6, "{node_sum} vs {}", rep.throughput);
+        // utilization within budget
+        for n in &rep.nodes {
+            assert!(n.util <= 100.0 + 1e-6, "{}: {}", n.machine, n.util);
+        }
+    }
+
+    #[test]
+    fn weighted_util_uniform_is_mean() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        // all machines equally utilized -> weighted = that value
+        let u = weighted_utilization(&top, &cluster, &db, &[50.0, 50.0, 50.0]).unwrap();
+        assert!((u - 50.0).abs() < 1e-9, "{u}");
+    }
+
+    #[test]
+    fn weighted_util_prefers_fast_machines() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        // Table 3: Pentium (machine 0) is the fastest per tuple, so a run
+        // that only loads the Pentium scores higher than one that only
+        // loads the i3.
+        let only_pentium = weighted_utilization(&top, &cluster, &db, &[90.0, 0.0, 0.0]).unwrap();
+        let only_i3 = weighted_utilization(&top, &cluster, &db, &[0.0, 90.0, 0.0]).unwrap();
+        assert!(only_pentium > only_i3, "{only_pentium} vs {only_i3}");
+    }
+
+    #[test]
+    fn rate_override_respected() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let rep = simulate(&top, &cluster, &db, &s.placement, Some(10.0)).unwrap();
+        assert!((rep.rate - 10.0).abs() < 1e-12);
+        // linear topology with alpha=1: throughput = n_comp * rate
+        assert!((rep.throughput - 40.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scenario_scale_simulation() {
+        use crate::cluster::scenarios;
+        let (cluster, db) = scenarios::by_id(1).unwrap().build();
+        let top = benchmarks::diamond();
+        let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let rep = simulate(&top, &cluster, &db, &s.placement, None).unwrap();
+        assert!(rep.throughput > 0.0);
+        assert_eq!(rep.nodes.len(), 6);
+    }
+}

@@ -1,0 +1,129 @@
+//! The paper's evaluation topologies.
+//!
+//! * Micro-Benchmark (R-Storm [6], paper Fig. 5): **Linear**, **Diamond**,
+//!   **Star**, assembled from `lowCompute` / `midCompute` / `highCompute`
+//!   CPU-intensive components.  The gray bolt in Fig. 5 (the profiled one
+//!   in Fig. 6) is `highCompute`.
+//! * Storm-Benchmark [15]: **RollingCount** and **UniqueVisitor** — a
+//!   spout plus two bolts each; used for the instance-count study
+//!   (Fig. 7).
+
+use super::builder::TopologyBuilder;
+use super::Topology;
+
+/// Profile key of the spout (negligible per-tuple cost, it only emits).
+pub const SPOUT_TYPE: &str = "spout";
+
+/// Linear micro-benchmark: spout → low → mid → high (Fig. 5 left).
+pub fn linear() -> Topology {
+    TopologyBuilder::new("linear")
+        .spout("spout", SPOUT_TYPE, 1.0)
+        .bolt("low", "lowCompute", 1.0, &["spout"])
+        .bolt("mid", "midCompute", 1.0, &["low"])
+        .bolt("high", "highCompute", 1.0, &["mid"])
+        .build()
+        .expect("linear benchmark is valid")
+}
+
+/// Diamond micro-benchmark: spout fans out to three parallel bolts which
+/// all feed the `highCompute` sink (Fig. 5 middle).
+pub fn diamond() -> Topology {
+    TopologyBuilder::new("diamond")
+        .spout("spout", SPOUT_TYPE, 1.0)
+        .bolt("branch-a", "lowCompute", 1.0, &["spout"])
+        .bolt("branch-b", "midCompute", 1.0, &["spout"])
+        .bolt("branch-c", "lowCompute", 1.0, &["spout"])
+        .bolt("sink", "highCompute", 1.0, &["branch-a", "branch-b", "branch-c"])
+        .build()
+        .expect("diamond benchmark is valid")
+}
+
+/// Star micro-benchmark: multiple spouts feed a central `highCompute`
+/// bolt which fans out to multiple sinks (Fig. 5 right).
+pub fn star() -> Topology {
+    TopologyBuilder::new("star")
+        .spout("spout-a", SPOUT_TYPE, 1.0)
+        .spout("spout-b", SPOUT_TYPE, 1.0)
+        .bolt("center", "highCompute", 1.0, &["spout-a", "spout-b"])
+        .bolt("sink-a", "lowCompute", 1.0, &["center"])
+        .bolt("sink-b", "midCompute", 1.0, &["center"])
+        .build()
+        .expect("star benchmark is valid")
+}
+
+/// Storm-Benchmark RollingCount: spout → split → rolling-count.
+/// `split` emits one word per sentence fragment (α > 1 in the real
+/// benchmark; we profile it as mid-cost with α = 1.5), the counter is
+/// cheap per tuple.
+pub fn rolling_count() -> Topology {
+    TopologyBuilder::new("rolling-count")
+        .spout("sentence-spout", SPOUT_TYPE, 1.0)
+        .bolt("split", "midCompute", 1.5, &["sentence-spout"])
+        .bolt("rolling-count", "lowCompute", 1.0, &["split"])
+        .build()
+        .expect("rolling-count benchmark is valid")
+}
+
+/// Storm-Benchmark UniqueVisitor: spout → extract → unique-count.
+/// Extraction is cheap, the distinct-count bolt is the heavy stage.
+pub fn unique_visitor() -> Topology {
+    TopologyBuilder::new("unique-visitor")
+        .spout("view-spout", SPOUT_TYPE, 1.0)
+        .bolt("extract", "lowCompute", 1.0, &["view-spout"])
+        .bolt("unique-count", "midCompute", 1.0, &["extract"])
+        .build()
+        .expect("unique-visitor benchmark is valid")
+}
+
+/// All five evaluation topologies.
+pub fn all() -> Vec<Topology> {
+    vec![linear(), diamond(), star(), rolling_count(), unique_visitor()]
+}
+
+/// The three Micro-Benchmark topologies used in Figs. 3/6/8/9/10.
+pub fn micro() -> Vec<Topology> {
+    vec![linear(), diamond(), star()]
+}
+
+/// Look a benchmark up by name (CLI/config surface).
+pub fn by_name(name: &str) -> Option<Topology> {
+    match name {
+        "linear" => Some(linear()),
+        "diamond" => Some(diamond()),
+        "star" => Some(star()),
+        "rolling-count" | "rollingcount" => Some(rolling_count()),
+        "unique-visitor" | "uniquevisitor" => Some(unique_visitor()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_roundtrip() {
+        for t in all() {
+            let got = by_name(&t.name).unwrap();
+            assert_eq!(got.n_components(), t.n_components());
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn star_has_two_spouts() {
+        assert_eq!(star().spouts().len(), 2);
+    }
+
+    #[test]
+    fn micro_is_three() {
+        assert_eq!(micro().len(), 3);
+    }
+
+    #[test]
+    fn rolling_count_alpha_amplifies() {
+        let g = rolling_count().rate_gains().unwrap();
+        // split has α=1.5 so the counter sees 1.5× the spout rate
+        assert!((g[2] - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,131 @@
+//! Fluent builder for user topology graphs.
+//!
+//! ```no_run
+//! use hstorm::topology::builder::TopologyBuilder;
+//!
+//! let top = TopologyBuilder::new("my-top")
+//!     .spout("src", "spout", 1.0)
+//!     .bolt("work", "midCompute", 1.0, &["src"])
+//!     .bolt("sink", "lowCompute", 0.5, &["work"])
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(top.n_components(), 3);
+//! ```
+
+use super::{Component, ComponentKind, Topology};
+use crate::{Error, Result};
+
+/// Incrementally assembles a [`Topology`], resolving parent names to
+/// indices and validating on `build()`.
+pub struct TopologyBuilder {
+    name: String,
+    components: Vec<Component>,
+    edges: Vec<(usize, usize)>,
+    errors: Vec<String>,
+}
+
+impl TopologyBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        TopologyBuilder { name: name.into(), components: Vec::new(), edges: Vec::new(), errors: Vec::new() }
+    }
+
+    fn index_of(&self, name: &str) -> Option<usize> {
+        self.components.iter().position(|c| c.name == name)
+    }
+
+    /// Add a spout. `task_type` keys the profile DB; `alpha` is the
+    /// emitted-per-consumed tuple ratio (spouts conventionally 1.0).
+    pub fn spout(mut self, name: &str, task_type: &str, alpha: f64) -> Self {
+        self.components.push(Component {
+            name: name.into(),
+            kind: ComponentKind::Spout,
+            task_type: task_type.into(),
+            alpha,
+        });
+        self
+    }
+
+    /// Add a bolt fed by every component in `parents` (names).
+    pub fn bolt(mut self, name: &str, task_type: &str, alpha: f64, parents: &[&str]) -> Self {
+        let idx = self.components.len();
+        self.components.push(Component {
+            name: name.into(),
+            kind: ComponentKind::Bolt,
+            task_type: task_type.into(),
+            alpha,
+        });
+        for p in parents {
+            match self.index_of(p) {
+                Some(pi) => self.edges.push((pi, idx)),
+                None => self.errors.push(format!("bolt '{name}': unknown parent '{p}'")),
+            }
+        }
+        self
+    }
+
+    /// Add an explicit edge between two existing components by name.
+    pub fn edge(mut self, from: &str, to: &str) -> Self {
+        match (self.index_of(from), self.index_of(to)) {
+            (Some(a), Some(b)) => self.edges.push((a, b)),
+            _ => self.errors.push(format!("edge '{from}'->'{to}': unknown component")),
+        }
+        self
+    }
+
+    pub fn build(self) -> Result<Topology> {
+        if !self.errors.is_empty() {
+            return Err(Error::Topology(self.errors.join("; ")));
+        }
+        let top = Topology { name: self.name, components: self.components, edges: self.edges };
+        top.validate()?;
+        Ok(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_linear() {
+        let t = TopologyBuilder::new("t")
+            .spout("s", "spout", 1.0)
+            .bolt("a", "lowCompute", 1.0, &["s"])
+            .bolt("b", "midCompute", 1.0, &["a"])
+            .build()
+            .unwrap();
+        assert_eq!(t.edges, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn unknown_parent_is_error() {
+        let r = TopologyBuilder::new("t")
+            .spout("s", "spout", 1.0)
+            .bolt("a", "lowCompute", 1.0, &["nope"])
+            .build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fan_in_edges() {
+        let t = TopologyBuilder::new("t")
+            .spout("s1", "spout", 1.0)
+            .spout("s2", "spout", 1.0)
+            .bolt("join", "highCompute", 1.0, &["s1", "s2"])
+            .build()
+            .unwrap();
+        assert_eq!(t.upstream(2).len(), 2);
+    }
+
+    #[test]
+    fn explicit_edge() {
+        let t = TopologyBuilder::new("t")
+            .spout("s", "spout", 1.0)
+            .bolt("a", "lowCompute", 1.0, &["s"])
+            .bolt("b", "lowCompute", 1.0, &["s"])
+            .edge("a", "b")
+            .build()
+            .unwrap();
+        assert_eq!(t.upstream(2).len(), 2);
+    }
+}

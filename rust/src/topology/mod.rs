@@ -1,0 +1,340 @@
+//! Topology substrate: the Storm programming model (paper §2.2).
+//!
+//! A *user topology graph* (UTG) is a DAG of components — `Spout`s
+//! produce the input stream, `Bolt`s process it.  An *execution topology
+//! graph* (ETG) fixes a parallelism degree (instance count) per component.
+//! The paper's contribution is that the ETG is an **output** of the
+//! scheduler, derived from the cluster's heterogeneous capacity.
+
+pub mod benchmarks;
+pub mod builder;
+
+use crate::{Error, Result};
+
+/// What a component does with the stream (paper §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComponentKind {
+    /// Produces the input stream (`R0` is injected here).
+    Spout,
+    /// Processes tuples.
+    Bolt,
+}
+
+/// One vertex of the user topology graph.
+#[derive(Debug, Clone)]
+pub struct Component {
+    /// Human-readable unique name ("spout", "bolt-1", ...).
+    pub name: String,
+    pub kind: ComponentKind,
+    /// Profile key: which row of the profile DB describes this
+    /// component's per-tuple cost ("lowCompute", "midCompute", ...).
+    pub task_type: String,
+    /// Tuple division ratio α (paper eq. 6): average output tuples
+    /// emitted per input tuple consumed.
+    pub alpha: f64,
+}
+
+/// A user topology graph: components + directed edges (paper Fig. 2a).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub components: Vec<Component>,
+    /// `(from, to)` indices into `components`; `from` feeds `to`.
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl Topology {
+    /// Validate the DAG invariants the schedulers rely on:
+    /// non-empty, edges in range, at least one spout, spouts have no
+    /// inputs, every bolt is reachable from a spout, acyclic.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.components.len();
+        if n == 0 {
+            return Err(Error::Topology("empty topology".into()));
+        }
+        if n > crate::runtime::dims::MAX_COMPONENTS {
+            return Err(Error::Topology(format!(
+                "{} components exceeds AOT max {}",
+                n,
+                crate::runtime::dims::MAX_COMPONENTS
+            )));
+        }
+        for &(a, b) in &self.edges {
+            if a >= n || b >= n {
+                return Err(Error::Topology(format!("edge ({a},{b}) out of range")));
+            }
+            if a == b {
+                return Err(Error::Topology(format!("self-loop on component {a}")));
+            }
+        }
+        if !self.components.iter().any(|c| c.kind == ComponentKind::Spout) {
+            return Err(Error::Topology("no spout".into()));
+        }
+        for (i, c) in self.components.iter().enumerate() {
+            if c.kind == ComponentKind::Spout && self.edges.iter().any(|&(_, b)| b == i) {
+                return Err(Error::Topology(format!("spout '{}' has an input edge", c.name)));
+            }
+        }
+        // acyclicity + reachability via the topo order
+        let order = self.topo_order()?;
+        let mut reach = vec![false; n];
+        for &i in &order {
+            if self.components[i].kind == ComponentKind::Spout {
+                reach[i] = true;
+            }
+            if reach[i] {
+                for &(a, b) in &self.edges {
+                    if a == i {
+                        reach[b] = true;
+                    }
+                }
+            }
+        }
+        if let Some(i) = reach.iter().position(|r| !r) {
+            return Err(Error::Topology(format!(
+                "component '{}' unreachable from any spout",
+                self.components[i].name
+            )));
+        }
+        // duplicate names break config round-trips and metrics keys
+        let mut names: Vec<&str> = self.components.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != n {
+            return Err(Error::Topology("duplicate component names".into()));
+        }
+        Ok(())
+    }
+
+    /// Kahn topological order; errors on a cycle.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let n = self.components.len();
+        let mut indeg = vec![0usize; n];
+        for &(_, b) in &self.edges {
+            indeg[b] += 1;
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &(a, b) in &self.edges {
+                if a == i {
+                    indeg[b] -= 1;
+                    if indeg[b] == 0 {
+                        queue.push(b);
+                    }
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(Error::Topology("cycle detected".into()));
+        }
+        Ok(order)
+    }
+
+    /// Upstream component indices of `i`.
+    pub fn upstream(&self, i: usize) -> Vec<usize> {
+        self.edges.iter().filter(|&&(_, b)| b == i).map(|&(a, _)| a).collect()
+    }
+
+    /// Downstream component indices of `i`.
+    pub fn downstream(&self, i: usize) -> Vec<usize> {
+        self.edges.iter().filter(|&&(a, _)| a == i).map(|&(_, b)| b).collect()
+    }
+
+    /// Indices of spout components.
+    pub fn spouts(&self) -> Vec<usize> {
+        self.components
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.kind == ComponentKind::Spout)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.components.len()
+    }
+
+    /// Per-component *rate gain*: the eq.-6 fixed point for R0 = 1, i.e.
+    /// `IR_c = gain_c * R0` for any topology input rate.  Spouts have
+    /// gain 1 (each spout emits R0); a downstream component's gain is the
+    /// sum of its upstream components' `gain * alpha` (every subscribed
+    /// consumer group receives the full stream — Storm semantics).
+    pub fn rate_gains(&self) -> Result<Vec<f64>> {
+        let order = self.topo_order()?;
+        let n = self.n_components();
+        let mut gain = vec![0.0f64; n];
+        for &i in &order {
+            if self.components[i].kind == ComponentKind::Spout {
+                gain[i] = 1.0;
+            }
+            let out = gain[i] * self.components[i].alpha;
+            for &(a, b) in &self.edges {
+                if a == i {
+                    gain[b] += out;
+                }
+            }
+        }
+        Ok(gain)
+    }
+
+    /// The longest path length in edges — the DEPTH the AOT propagation
+    /// model must cover (asserted against `runtime::dims::DEPTH`).
+    pub fn longest_path(&self) -> Result<usize> {
+        let order = self.topo_order()?;
+        let mut d = vec![0usize; self.n_components()];
+        let mut best = 0;
+        for &i in &order {
+            for &(a, b) in &self.edges {
+                if a == i {
+                    d[b] = d[b].max(d[i] + 1);
+                    best = best.max(d[b]);
+                }
+            }
+        }
+        Ok(best)
+    }
+}
+
+/// An execution topology graph: a UTG plus per-component instance counts
+/// (paper Fig. 2b).  Placement (which machine hosts each instance) lives
+/// in [`crate::scheduler::Placement`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Etg {
+    /// Instance count per component; index-aligned with `Topology::components`.
+    pub counts: Vec<usize>,
+}
+
+impl Etg {
+    /// The minimal ETG: one instance per component (Alg. 1 start state).
+    pub fn minimal(top: &Topology) -> Self {
+        Etg { counts: vec![1; top.n_components()] }
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::benchmarks;
+
+    #[test]
+    fn linear_is_valid() {
+        benchmarks::linear().validate().unwrap();
+    }
+
+    #[test]
+    fn all_benchmarks_valid() {
+        for t in benchmarks::all() {
+            t.validate().unwrap_or_else(|e| panic!("{}: {e}", t.name));
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut t = benchmarks::linear();
+        let n = t.n_components();
+        t.edges.push((n - 1, 1)); // back edge
+        assert!(matches!(t.validate(), Err(Error::Topology(_))));
+    }
+
+    #[test]
+    fn spout_with_input_rejected() {
+        let mut t = benchmarks::linear();
+        t.edges.push((1, 0));
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn unreachable_component_rejected() {
+        let mut t = benchmarks::linear();
+        t.components.push(Component {
+            name: "orphan".into(),
+            kind: ComponentKind::Bolt,
+            task_type: "lowCompute".into(),
+            alpha: 1.0,
+        });
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut t = benchmarks::linear();
+        let name = t.components[1].name.clone();
+        t.components[2].name = name;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn linear_gains_all_one() {
+        let t = benchmarks::linear();
+        let g = t.rate_gains().unwrap();
+        for v in g {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn diamond_gain_sums_at_sink() {
+        let t = benchmarks::diamond();
+        let g = t.rate_gains().unwrap();
+        // sink receives a full copy from each parallel branch
+        let sink = t.n_components() - 1;
+        let branches = t.upstream(sink).len() as f64;
+        assert!((g[sink] - branches).abs() < 1e-12, "gain={}", g[sink]);
+    }
+
+    #[test]
+    fn star_multi_spout_gain() {
+        let t = benchmarks::star();
+        let g = t.rate_gains().unwrap();
+        let center = t
+            .components
+            .iter()
+            .position(|c| c.name == "center")
+            .unwrap();
+        // every spout contributes R0 to the center
+        assert!((g[center] - t.spouts().len() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_scales_gain() {
+        let mut t = benchmarks::linear();
+        for c in &mut t.components {
+            c.alpha = 0.5;
+        }
+        let g = t.rate_gains().unwrap();
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!((g[1] - 0.5).abs() < 1e-12);
+        assert!((g[2] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topo_order_is_topological() {
+        for t in benchmarks::all() {
+            let order = t.topo_order().unwrap();
+            let pos: std::collections::HashMap<usize, usize> =
+                order.iter().enumerate().map(|(p, &i)| (i, p)).collect();
+            for &(a, b) in &t.edges {
+                assert!(pos[&a] < pos[&b], "{}: edge ({a},{b}) violates order", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn longest_path_linear() {
+        let t = benchmarks::linear();
+        assert_eq!(t.longest_path().unwrap(), t.n_components() - 1);
+    }
+
+    #[test]
+    fn minimal_etg() {
+        let t = benchmarks::diamond();
+        let e = Etg::minimal(&t);
+        assert_eq!(e.total_tasks(), t.n_components());
+    }
+}

@@ -1,0 +1,127 @@
+//! Wall-clock benchmark harness (in-tree criterion substitute).
+//!
+//! Each `benches/*.rs` target is a plain binary (`harness = false`) that
+//! calls [`run`] per measured case: warmup iterations, then timed
+//! iterations with mean / p50 / p95 / min reporting, plus a simple
+//! throughput figure when the case processes a known number of items.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+
+    /// Items/second at the mean latency.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs and print the report line.
+pub fn run(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        min: samples[0],
+    };
+    println!("{}", m.report());
+    m
+}
+
+/// Time a single execution of `f`, returning (result, elapsed).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Pretty table printer used by the figure-regeneration benches: rows of
+/// `(label, values...)` with a header.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_sane_stats() {
+        let m = run("noop", 2, 16, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.iters, 16);
+        assert!(m.min <= m.p50);
+        assert!(m.p50 <= m.p95);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(100),
+            p50: Duration::from_millis(100),
+            p95: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+        };
+        assert!((m.throughput(50.0) - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_once_returns_result() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

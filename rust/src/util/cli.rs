@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser for the launcher.
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; unknown flags are an error so typos fail fast.
+
+use std::collections::HashMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) given the set of flags
+    /// that take values and the set of boolean flags.
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        value_flags: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if bool_flags.contains(&name.as_str()) {
+                    if inline.is_some() {
+                        return Err(Error::Config(format!("--{name} takes no value")));
+                    }
+                    out.bools.push(name);
+                } else if value_flags.contains(&name.as_str()) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?,
+                    };
+                    out.flags.insert(name, v);
+                } else {
+                    return Err(Error::Config(format!("unknown flag --{name}")));
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            sv(&["bench", "fig3", "--rate", "8", "--verbose", "--out=x.json"]),
+            &["rate", "out"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["bench", "fig3"]);
+        assert_eq!(a.get("rate"), Some("8"));
+        assert_eq!(a.get("out"), Some("x.json"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(sv(&["--nope"]), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(sv(&["--rate"]), &["rate"], &[]).is_err());
+    }
+
+    #[test]
+    fn numeric_accessors() {
+        let a = Args::parse(sv(&["--rate", "2.5", "--n", "7"]), &["rate", "n"], &[]).unwrap();
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 7);
+        assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
+        let bad = Args::parse(sv(&["--n", "x"]), &["n"], &[]).unwrap();
+        assert!(bad.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn bool_with_value_rejected() {
+        assert!(Args::parse(sv(&["--verbose=1"]), &[], &["verbose"]).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! In-tree utility layer.
+//!
+//! This image builds fully offline from a fixed vendor set (xla + anyhow
+//! and their transitive deps); the usual ecosystem crates (serde, clap,
+//! criterion, proptest, rand, tokio) are not available.  The pieces of
+//! them this project needs are implemented here, small and tested:
+//!
+//! * [`json`]  — JSON parse/serialize (configs, `artifacts/dims.json`).
+//! * [`cli`]   — flag/positional argument parsing for the launcher.
+//! * [`rng`]   — SplitMix64 PRNG (deterministic sampling & workloads).
+//! * [`bench`] — wall-clock benchmark harness used by `benches/*`.
+//! * [`prop`]  — minimal property-testing loop (randomized inputs with
+//!   seed reporting on failure).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

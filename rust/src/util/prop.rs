@@ -1,0 +1,60 @@
+//! Minimal property-testing loop (in-tree proptest substitute).
+//!
+//! [`check`] runs a property over `cases` randomized inputs drawn from a
+//! caller-supplied generator; on failure it panics with the case seed so
+//! the exact input can be replayed (`PROP_SEED=<seed> cargo test ...`).
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Base seed (override with `PROP_SEED` to replay a failure).
+pub fn base_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+/// Run `property(gen(rng))` for `cases` seeds; panic with the failing
+/// seed and case description on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, PROP_SEED={base}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 32, |r| (r.range(0, 100), r.range(0, 100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 4, |r| r.range(0, 9), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,136 @@
+//! Engine ↔ scheduler ↔ predictor integration: run real schedules on the
+//! stream engine and check the measured numbers track the model — the
+//! implementation-vs-simulation loop of paper §6.3 — plus failure
+//! injection (overload, misconfiguration).
+
+use std::time::Duration;
+
+use hstorm::cluster::presets;
+use hstorm::engine::{self, EngineConfig};
+use hstorm::predict::{Evaluator, Placement};
+use hstorm::scheduler::default_rr::DefaultScheduler;
+use hstorm::scheduler::hetero::HeteroScheduler;
+use hstorm::scheduler::Scheduler;
+use hstorm::simulator;
+use hstorm::topology::{benchmarks, Etg};
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        duration: Duration::from_millis(900),
+        warmup: Duration::from_millis(300),
+        time_scale: 0.2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn hetero_schedule_runs_at_certified_rate() {
+    let (cluster, db) = presets::paper_cluster();
+    for top in benchmarks::micro() {
+        let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate, &cfg()).unwrap();
+        // measured throughput within 20% of the model in a short window
+        let rel = (rep.throughput - s.eval.throughput).abs() / s.eval.throughput;
+        assert!(
+            rel < 0.20,
+            "{}: measured {} vs predicted {} (rel {rel:.2})",
+            top.name,
+            rep.throughput,
+            s.eval.throughput
+        );
+        // certified rate must not melt the engine: modest shedding only
+        assert!(
+            (rep.shed as f64) < 0.05 * rep.emitted_rate * rep.window + 50.0,
+            "{}: shed {} of ~{}",
+            top.name,
+            rep.shed,
+            rep.emitted_rate * rep.window
+        );
+    }
+}
+
+#[test]
+fn engine_matches_analytic_simulator() {
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::diamond();
+    let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+    let sim = simulator::simulate(&top, &cluster, &db, &s.placement, Some(s.rate)).unwrap();
+    let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate, &cfg()).unwrap();
+    let rel = (rep.throughput - sim.throughput).abs() / sim.throughput;
+    // the paper reports <= 13% impl-vs-sim difference
+    assert!(rel < 0.15, "impl {} vs sim {} (rel {rel:.2})", rep.throughput, sim.throughput);
+}
+
+#[test]
+fn proposed_beats_default_on_engine() {
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::linear();
+    let ours = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+    let etg = Etg { counts: ours.placement.counts() };
+    let def = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &db).unwrap();
+    let ours_rep = engine::run(&top, &cluster, &db, &ours.placement, ours.rate, &cfg()).unwrap();
+    let def_rep = engine::run(&top, &cluster, &db, &def.placement, def.rate, &cfg()).unwrap();
+    assert!(
+        ours_rep.throughput > def_rep.throughput,
+        "proposed {} <= default {}",
+        ours_rep.throughput,
+        def_rep.throughput
+    );
+}
+
+#[test]
+fn overload_injection_degrades_gracefully() {
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::linear();
+    let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+    // drive the certified schedule at 3x its rate: engine must saturate
+    // (shed) but never crash or deadlock
+    let hot = EngineConfig { max_pending: 64, ..cfg() };
+    let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate * 3.0, &hot).unwrap();
+    assert!(rep.shed > 0, "expected load shedding at 3x rate");
+    // throughput still close to the certified capacity (within 30%)
+    let rel = (rep.throughput - s.eval.throughput).abs() / s.eval.throughput;
+    assert!(rel < 0.30, "capacity collapsed: {} vs {}", rep.throughput, s.eval.throughput);
+}
+
+#[test]
+fn noise_injection_keeps_prediction_close() {
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::star();
+    let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+    let noisy = EngineConfig { noise: 0.15, ..cfg() };
+    let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate, &noisy).unwrap();
+    let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+    let pred = ev.evaluate(&s.placement, s.rate).unwrap();
+    for m in 0..cluster.n_machines() {
+        let err = (rep.util[m] - pred.util[m]).abs();
+        assert!(err < 15.0, "machine {m}: {err} pp error under 15% noise");
+    }
+}
+
+#[test]
+fn misconfigured_placement_rejected() {
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::linear();
+    // empty placement
+    let p = Placement::empty(top.n_components(), cluster.n_machines());
+    assert!(engine::run(&top, &cluster, &db, &p, 10.0, &cfg()).is_err());
+    // wrong shape
+    let p = Placement::empty(top.n_components() + 1, cluster.n_machines());
+    assert!(engine::run(&top, &cluster, &db, &p, 10.0, &cfg()).is_err());
+}
+
+#[test]
+fn zero_rate_runs_and_reports_met_only() {
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::linear();
+    let mut p = Placement::empty(top.n_components(), cluster.n_machines());
+    for c in 0..top.n_components() {
+        p.x[c][c % 3] = 1;
+    }
+    let rep = engine::run(&top, &cluster, &db, &p, 0.0, &cfg()).unwrap();
+    assert_eq!(rep.shed, 0);
+    assert!(rep.throughput < 5.0, "throughput {} at zero rate", rep.throughput);
+    // MET background burn still shows up as nonzero utilization
+    assert!(rep.util.iter().any(|u| *u > 0.5), "no MET burn visible: {:?}", rep.util);
+}

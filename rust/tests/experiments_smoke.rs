@@ -1,0 +1,104 @@
+//! Smoke the full experiment harness in fast mode: every figure/table
+//! regenerator must produce a well-formed result with the paper's
+//! qualitative shape (who wins, roughly by how much).
+
+use hstorm::experiments::{complexity, fig10, fig3, fig6, fig7, fig8, fig9};
+
+fn pct(cell: &str) -> f64 {
+    cell.trim_end_matches('%').parse().unwrap()
+}
+
+#[test]
+fn fig3_motivation_shape() {
+    let r = fig3::run(true).unwrap();
+    assert_eq!(r.rows.len(), 3);
+    // optimal never loses; the gap is remarkable on at least one topology
+    let mut max_gap = 0.0f64;
+    for row in &r.rows {
+        let gap = pct(&row[3]);
+        assert!(gap >= -0.1, "optimal lost on {}", row[0]);
+        max_gap = max_gap.max(gap);
+    }
+    assert!(max_gap > 20.0, "motivation gap only {max_gap}%");
+}
+
+#[test]
+fn fig6_accuracy_headline() {
+    let r = fig6::run(true).unwrap();
+    // the accuracy note must report > 90% mean accuracy (paper: > 92%)
+    let note = r.notes.iter().find(|n| n.contains("mean accuracy")).expect("accuracy note");
+    let acc: f64 = note
+        .rsplit_once("= ")
+        .unwrap()
+        .1
+        .trim_end_matches('%')
+        .parse()
+        .unwrap();
+    assert!(acc > 90.0, "prediction accuracy {acc}%");
+}
+
+#[test]
+fn fig7_reports_both_topologies() {
+    let r = fig7::run(true).unwrap();
+    assert!(r.rows.iter().any(|row| row[0] == "rolling-count"));
+    assert!(r.rows.iter().any(|row| row[0] == "unique-visitor"));
+    // exactly one optimal marker per topology
+    for t in ["rolling-count", "unique-visitor"] {
+        let optimal_marks = r
+            .rows
+            .iter()
+            .filter(|row| row[0] == t && row[3].contains("optimal"))
+            .count();
+        assert_eq!(optimal_marks, 1, "{t}: {optimal_marks} optimal markers");
+    }
+}
+
+#[test]
+fn fig8_ordering_holds() {
+    let r = fig8::run(true).unwrap();
+    assert_eq!(r.rows.len(), 9);
+    for chunk in r.rows.chunks(3) {
+        let def: f64 = chunk[0][3].parse().unwrap(); // sim column
+        let ours: f64 = chunk[1][3].parse().unwrap();
+        let opt: f64 = chunk[2][3].parse().unwrap();
+        assert!(ours >= def * 0.999, "{}: proposed sim < default sim", chunk[0][0]);
+        assert!(opt >= ours * 0.999, "{}: optimal sim < proposed sim", chunk[0][0]);
+    }
+}
+
+#[test]
+fn fig9_has_all_cells() {
+    let r = fig9::run(true).unwrap();
+    assert_eq!(r.rows.len(), 9);
+    for row in &r.rows {
+        assert_eq!(row.len(), 6); // topology, scheduler, 3 machines, total
+    }
+}
+
+#[test]
+fn fig10_and_table5_consistent() {
+    let cells = fig10::cells(true).unwrap();
+    assert_eq!(cells.len(), 6); // fast: 2 scenarios x 3 topologies
+    for c in &cells {
+        assert!(c.ours_thpt >= c.def_thpt, "scenario {} {}", c.scenario, c.topology);
+        assert!(c.tasks >= 4);
+    }
+    let t5 = fig10::table5(true).unwrap();
+    assert_eq!(t5.rows.len(), 2);
+}
+
+#[test]
+fn complexity_counts_match_paper() {
+    let r = complexity::run(true).unwrap();
+    let row = r.rows.iter().find(|row| row[0].contains("count vectors")).unwrap();
+    assert!(row[1].contains("27405"), "{}", row[1]);
+}
+
+#[test]
+fn results_serialize_to_json() {
+    let r = fig3::run(true).unwrap();
+    let v = r.to_json();
+    let text = hstorm::util::json::to_string_pretty(&v);
+    let back = hstorm::util::json::parse(&text).unwrap();
+    assert_eq!(back.str_field("id").unwrap(), "fig3");
+}

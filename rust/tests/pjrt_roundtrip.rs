@@ -1,0 +1,137 @@
+//! Integration: the PJRT-compiled AOT scorer must agree with the native
+//! evaluator on identical inputs, and the full schedulers must produce
+//! the same results through either backend.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); tests are skipped
+//! with a notice if the artifacts are missing so `cargo test` stays
+//! usable before the first build.
+
+use hstorm::cluster::presets;
+use hstorm::predict::Placement;
+use hstorm::runtime::scorer::{NativeScorer, PjRtScorer, PlacementScorer};
+use hstorm::runtime::PjRtRuntime;
+use hstorm::scheduler::hetero::HeteroScheduler;
+use hstorm::scheduler::optimal::OptimalScheduler;
+use hstorm::scheduler::Scheduler;
+use hstorm::topology::benchmarks;
+use hstorm::util::rng::Rng;
+
+fn runtime() -> Option<PjRtRuntime> {
+    match PjRtRuntime::cpu_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn random_placement(rng: &mut Rng, n_comp: usize, n_machines: usize) -> Placement {
+    let mut p = Placement::empty(n_comp, n_machines);
+    for c in 0..n_comp {
+        let k = rng.range(1, 3);
+        for _ in 0..k {
+            p.x[c][rng.range(0, n_machines - 1)] += 1;
+        }
+    }
+    p
+}
+
+#[test]
+fn pjrt_matches_native_on_random_placements() {
+    let Some(rt) = runtime() else { return };
+    let (cluster, db) = presets::paper_cluster();
+    for top in benchmarks::all() {
+        let pjrt = PjRtScorer::new(&rt, &top, &cluster, &db).unwrap();
+        let native = NativeScorer::new(&top, &cluster, &db).unwrap();
+        let mut rng = Rng::new(0xABCD);
+        let n = top.n_components();
+        let m = cluster.n_machines();
+        let placements: Vec<Placement> =
+            (0..64).map(|_| random_placement(&mut rng, n, m)).collect();
+        let rates: Vec<f64> = (0..64).map(|_| rng.range_f64(1.0, 400.0)).collect();
+        let got = pjrt.score_batch(&placements, &rates).unwrap();
+        let want = native.score_batch(&placements, &rates).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.feasible, w.feasible, "{} case {i}: feasibility", top.name);
+            let rel = (g.throughput - w.throughput).abs() / w.throughput.max(1.0);
+            assert!(rel < 1e-4, "{} case {i}: thpt {} vs {}", top.name, g.throughput, w.throughput);
+            for (mu, (gu, wu)) in g.util.iter().zip(&w.util).enumerate() {
+                assert!(
+                    (gu - wu).abs() < 0.05 + wu.abs() * 1e-4,
+                    "{} case {i} machine {mu}: util {gu} vs {wu}",
+                    top.name
+                );
+            }
+            for (c, (gi, wi)) in g.ir_comp.iter().zip(&w.ir_comp).enumerate() {
+                assert!(
+                    (gi - wi).abs() < 0.01 + wi.abs() * 1e-4,
+                    "{} case {i} comp {c}: ir {gi} vs {wi}",
+                    top.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_single_candidate_path() {
+    let Some(rt) = runtime() else { return };
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::linear();
+    let pjrt = PjRtScorer::new(&rt, &top, &cluster, &db).unwrap();
+    let native = NativeScorer::new(&top, &cluster, &db).unwrap();
+    let mut p = Placement::empty(top.n_components(), cluster.n_machines());
+    for c in 0..top.n_components() {
+        p.x[c][c % 3] = 1;
+    }
+    let g = pjrt.score_one(&p, 100.0).unwrap();
+    let w = native.score_one(&p, 100.0).unwrap();
+    assert_eq!(g.feasible, w.feasible);
+    assert!((g.throughput - w.throughput).abs() < 0.05);
+}
+
+#[test]
+fn hetero_schedule_same_via_pjrt_and_native() {
+    let Some(rt) = runtime() else { return };
+    let (cluster, db) = presets::paper_cluster();
+    for top in benchmarks::micro() {
+        let hs = HeteroScheduler::default();
+        let native = hs.schedule(&top, &cluster, &db).unwrap();
+        let pjrt_scorer = PjRtScorer::new(&rt, &top, &cluster, &db).unwrap();
+        let pjrt = hs.schedule_with_scorer(&top, &cluster, &db, &pjrt_scorer).unwrap();
+        assert_eq!(
+            pjrt.placement.counts(),
+            native.placement.counts(),
+            "{}: instance counts differ between backends",
+            top.name
+        );
+        let rel = (pjrt.rate - native.rate).abs() / native.rate;
+        assert!(rel < 1e-3, "{}: rate {} vs {}", top.name, pjrt.rate, native.rate);
+    }
+}
+
+#[test]
+fn optimal_search_via_pjrt_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (cluster, db) = presets::paper_cluster();
+    let top = benchmarks::rolling_count();
+    let os = OptimalScheduler { max_instances_per_component: 2, ..Default::default() };
+    let native = os.schedule(&top, &cluster, &db).unwrap();
+    let scorer = PjRtScorer::new(&rt, &top, &cluster, &db).unwrap();
+    let pjrt = os.schedule_with_scorer(&top, &cluster, &db, &scorer).unwrap();
+    let rel = (pjrt.rate - native.rate).abs() / native.rate;
+    assert!(rel < 1e-3, "rate {} vs {}", pjrt.rate, native.rate);
+    assert_eq!(pjrt.placement.counts(), native.placement.counts());
+}
+
+#[test]
+fn work_kernel_runs() {
+    let Some(rt) = runtime() else { return };
+    let wk = rt.work_kernel().unwrap();
+    let out = wk.run(&vec![0.25f32; hstorm::runtime::dims::WORK_N]).unwrap();
+    assert_eq!(out.len(), hstorm::runtime::dims::WORK_N);
+    assert!(out.iter().all(|v| v.is_finite()));
+    // burn() chains invocations without error
+    wk.burn(10).unwrap();
+}

@@ -1,0 +1,259 @@
+//! Property tests over the scheduler invariants (in-tree prop harness —
+//! see `hstorm::util::prop`): random topologies, random heterogeneous
+//! clusters, random profiles; the paper's §4.2 constraints must hold for
+//! every schedule any of the schedulers produce.
+
+use hstorm::cluster::profile::{ProfileDb, TaskProfile};
+use hstorm::cluster::Cluster;
+use hstorm::predict::Evaluator;
+use hstorm::scheduler::default_rr::DefaultScheduler;
+use hstorm::scheduler::hetero::HeteroScheduler;
+use hstorm::scheduler::optimal::OptimalScheduler;
+use hstorm::scheduler::Scheduler;
+use hstorm::topology::builder::TopologyBuilder;
+use hstorm::topology::{Etg, Topology};
+use hstorm::util::prop;
+use hstorm::util::rng::Rng;
+
+/// A random layered DAG: 1-2 spouts, 1-3 layers of bolts, random edges
+/// guaranteeing reachability.
+fn random_topology(rng: &mut Rng) -> Topology {
+    let task_types = ["lowCompute", "midCompute", "highCompute"];
+    let n_spouts = rng.range(1, 2);
+    let mut b = TopologyBuilder::new("prop-top");
+    let mut prev_layer: Vec<String> = Vec::new();
+    for s in 0..n_spouts {
+        let name = format!("spout-{s}");
+        b = b.spout(&name, "spout", 1.0);
+        prev_layer.push(name);
+    }
+    let layers = rng.range(1, 3);
+    let mut idx = 0;
+    for _ in 0..layers {
+        let width = rng.range(1, 2);
+        let mut layer = Vec::new();
+        for _ in 0..width {
+            let name = format!("bolt-{idx}");
+            idx += 1;
+            // every bolt gets >= 1 upstream parent from the previous layer
+            let parent = prev_layer[rng.range(0, prev_layer.len() - 1)].clone();
+            let mut parents = vec![parent];
+            if prev_layer.len() > 1 && rng.chance(0.4) {
+                let extra = prev_layer[rng.range(0, prev_layer.len() - 1)].clone();
+                if !parents.contains(&extra) {
+                    parents.push(extra);
+                }
+            }
+            let prefs: Vec<&str> = parents.iter().map(|p| p.as_str()).collect();
+            let alpha = rng.range_f64(0.5, 1.5);
+            b = b.bolt(&name, task_types[rng.range(0, 2)], alpha, &prefs);
+            layer.push(name);
+        }
+        prev_layer = layer;
+    }
+    b.build().expect("generated topology is valid")
+}
+
+/// A random heterogeneous cluster (1-3 types, 1-2 machines each) plus
+/// profiles covering every task type.
+fn random_cluster(rng: &mut Rng) -> (Cluster, ProfileDb) {
+    let n_types = rng.range(1, 3);
+    let mut cluster = Cluster::new("prop-cluster");
+    for t in 0..n_types {
+        let tid = cluster.add_type(&format!("type-{t}"), "synthetic");
+        cluster.add_machines(tid, rng.range(1, 2), &format!("type-{t}"));
+    }
+    let mut db = ProfileDb::new();
+    for tt in ["spout", "lowCompute", "midCompute", "highCompute"] {
+        let base = match tt {
+            "spout" => 0.005,
+            "lowCompute" => rng.range_f64(0.03, 0.08),
+            "midCompute" => rng.range_f64(0.08, 0.15),
+            _ => rng.range_f64(0.15, 0.35),
+        };
+        for t in 0..n_types {
+            let scale = rng.range_f64(0.8, 2.2);
+            db.insert(
+                tt,
+                &format!("type-{t}"),
+                TaskProfile { e: base * scale, met: rng.range_f64(0.5, 3.0) },
+            );
+        }
+    }
+    (cluster, db)
+}
+
+type Case = (Topology, Cluster, ProfileDb);
+
+fn gen_case(rng: &mut Rng) -> Brief {
+    let top = random_topology(rng);
+    let (cluster, db) = random_cluster(rng);
+    Brief((top, cluster, db))
+}
+
+/// Placement/Evaluator Debug output is huge; keep case rendering small.
+struct Brief(Case);
+
+impl std::fmt::Debug for Brief {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "topology {} comps, cluster {} machines/{} types",
+            self.0 .0.n_components(),
+            self.0 .1.n_machines(),
+            self.0 .1.n_types()
+        )
+    }
+}
+
+#[test]
+fn hetero_schedule_never_overutilizes() {
+    prop::check(
+        "hetero-no-overutilization",
+        prop::default_cases(),
+        gen_case,
+        |Brief((top, cluster, db))| {
+            let s = HeteroScheduler::default()
+                .schedule(top, cluster, db)
+                .map_err(|e| format!("schedule failed: {e}"))?;
+            let ev = Evaluator::new(top, cluster, db).map_err(|e| e.to_string())?;
+            let eval = ev.evaluate(&s.placement, s.rate).map_err(|e| e.to_string())?;
+            for (m, u) in eval.util.iter().enumerate() {
+                if *u > cluster.machines[m].cap + 1e-6 {
+                    return Err(format!("machine {m} at {u}% > cap"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hetero_every_component_has_instance() {
+    prop::check(
+        "hetero-min-one-instance",
+        prop::default_cases(),
+        gen_case,
+        |Brief((top, cluster, db))| {
+            let s = HeteroScheduler::default()
+                .schedule(top, cluster, db)
+                .map_err(|e| format!("schedule failed: {e}"))?;
+            for (c, n) in s.placement.counts().iter().enumerate() {
+                if *n == 0 {
+                    return Err(format!("component {c} has no instance"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hetero_beats_or_matches_default_rr() {
+    prop::check(
+        "hetero-vs-default",
+        prop::default_cases() / 2,
+        gen_case,
+        |Brief((top, cluster, db))| {
+            let ours = HeteroScheduler::default()
+                .schedule(top, cluster, db)
+                .map_err(|e| format!("schedule failed: {e}"))?;
+            let etg = Etg { counts: ours.placement.counts() };
+            let def = DefaultScheduler::with_etg(etg)
+                .schedule(top, cluster, db)
+                .map_err(|e| format!("default failed: {e}"))?;
+            if ours.eval.throughput < def.eval.throughput * 0.999 {
+                return Err(format!(
+                    "proposed {} < default {}",
+                    ours.eval.throughput, def.eval.throughput
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hetero_deterministic() {
+    prop::check("hetero-deterministic", prop::default_cases() / 4, gen_case, |Brief((top, cluster, db))| {
+        let a = HeteroScheduler::default().schedule(top, cluster, db).map_err(|e| e.to_string())?;
+        let b = HeteroScheduler::default().schedule(top, cluster, db).map_err(|e| e.to_string())?;
+        if a.placement != b.placement {
+            return Err("placements differ across identical runs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rr_preserves_counts_and_balance() {
+    prop::check(
+        "rr-counts-balance",
+        prop::default_cases(),
+        |rng| {
+            let case = gen_case(rng);
+            let counts: Vec<usize> =
+                (0..case.0 .0.n_components()).map(|_| rng.range(1, 4)).collect();
+            (case, counts)
+        },
+        |(Brief((top, cluster, _db)), counts)| {
+            let etg = Etg { counts: counts.clone() };
+            let p = DefaultScheduler::assign(top, cluster, &etg).map_err(|e| e.to_string())?;
+            if p.counts() != *counts {
+                return Err("RR changed instance counts".into());
+            }
+            // RR balance: machine task counts differ by at most 1
+            let tasks: Vec<usize> = (0..cluster.n_machines()).map(|m| p.tasks_on(m)).collect();
+            let (lo, hi) = (tasks.iter().min().unwrap(), tasks.iter().max().unwrap());
+            if hi - lo > 1 {
+                return Err(format!("RR imbalance: {tasks:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn optimal_upper_bounds_heuristic_on_small_cases() {
+    prop::check(
+        "optimal-upper-bound",
+        8, // exhaustive search is heavy; a handful of cases suffices
+        gen_case,
+        |Brief((top, cluster, db))| {
+            let ours = HeteroScheduler::default()
+                .schedule(top, cluster, db)
+                .map_err(|e| e.to_string())?;
+            // sampled search (+ heuristic seeding, the default) keeps the
+            // random design spaces tractable while preserving the
+            // optimal >= heuristic invariant
+            let opt = OptimalScheduler::sampled(1500, 42)
+                .schedule(top, cluster, db)
+                .map_err(|e| e.to_string())?;
+            if opt.eval.throughput < ours.eval.throughput * 0.999 {
+                return Err(format!(
+                    "optimal {} < heuristic {}",
+                    opt.eval.throughput, ours.eval.throughput
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn max_stable_rate_is_a_boundary() {
+    prop::check("rate-boundary", prop::default_cases(), gen_case, |Brief((top, cluster, db))| {
+        let s = HeteroScheduler::default().schedule(top, cluster, db).map_err(|e| e.to_string())?;
+        let ev = Evaluator::new(top, cluster, db).map_err(|e| e.to_string())?;
+        let r = ev.max_stable_rate(&s.placement).map_err(|e| e.to_string())?;
+        let at = ev.evaluate(&s.placement, r).map_err(|e| e.to_string())?;
+        let above = ev.evaluate(&s.placement, r * 1.01).map_err(|e| e.to_string())?;
+        if !at.feasible {
+            return Err(format!("infeasible at its own max rate {r}"));
+        }
+        if above.feasible {
+            return Err(format!("still feasible 1% above max rate {r}"));
+        }
+        Ok(())
+    });
+}
