@@ -1,0 +1,42 @@
+//! Control-loop micro-benchmark: steps/sec of the online control plane
+//! over virtual time.  The loop is purely analytic — no wall-clock
+//! sleeping — so thousand-step traces must run in milliseconds; this
+//! bench keeps that property honest across cluster scales and policies.
+//! Run: cargo bench --bench controller  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::cluster::scenarios;
+use hstorm::controller::{self, traces, ControllerConfig, Policy};
+use hstorm::topology::benchmarks;
+use hstorm::util::bench;
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let iters = if fast { 3 } else { 20 };
+    let steps = 1000usize;
+    let top = benchmarks::linear();
+
+    for scenario_id in [1usize, 2] {
+        let (cluster, db) = scenarios::by_id(scenario_id).expect("scenario").build();
+        let cfg = ControllerConfig::default();
+        for (policy, label) in [
+            (Policy::Static, "static"),
+            (Policy::Reactive, "reactive"),
+            (Policy::Oracle, "oracle"),
+        ] {
+            let trace = traces::diurnal(&top, &cluster, steps, 42);
+            let m = bench::run(
+                &format!("control loop {steps} steps, scenario {scenario_id}, {label}"),
+                1,
+                iters,
+                || {
+                    controller::run_policy(&top, &cluster, &db, &trace, policy, &cfg)
+                        .expect("control loop runs");
+                },
+            );
+            println!(
+                "  -> {:.0} virtual steps/sec",
+                m.throughput(steps as f64)
+            );
+        }
+    }
+}

@@ -53,6 +53,16 @@ pub fn by_id(id: usize) -> Option<Scenario> {
     SCENARIOS.iter().copied().find(|s| s.id == id)
 }
 
+/// One-line summary of the valid scenarios for CLI error messages,
+/// e.g. `1=small(6), 2=medium(30), 3=large(180)`.
+pub fn describe_all() -> String {
+    SCENARIOS
+        .iter()
+        .map(|s| format!("{}={}({})", s.id, s.label, s.total_machines()))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +88,13 @@ mod tests {
     fn by_id_lookup() {
         assert_eq!(by_id(3).unwrap().label, "large");
         assert!(by_id(4).is_none());
+    }
+
+    #[test]
+    fn describe_all_lists_every_scenario() {
+        let d = describe_all();
+        for s in SCENARIOS {
+            assert!(d.contains(&format!("{}={}", s.id, s.label)), "{d}");
+        }
     }
 }

@@ -1,0 +1,617 @@
+//! Online control plane: trace-driven elastic scheduling over virtual
+//! time (paper §4.2/§8 — the scheduler is fast enough to *re*-run
+//! whenever cluster state changes; this subsystem is what drives it
+//! against a changing world).
+//!
+//! A [`traces::Trace`] replays offered load and cluster events over
+//! virtual time (one [`traces::TraceStep`] per virtual second — the loop
+//! is purely analytic, it never sleeps).  At each step the controller
+//! re-evaluates the current placement with the [`Evaluator`] and decides
+//! whether to invoke the heterogeneity-aware scheduler again.
+//!
+//! ## Policies
+//!
+//! * [`Policy::Static`] — schedule once at t=0, never again.  Machines
+//!   that leave take their task instances with them (the placement is
+//!   tracked by machine *name*, so a machine that later rejoins gets its
+//!   pinned instances back — Storm's behavior for a supervisor bounce
+//!   without rebalance).
+//! * [`Policy::Reactive`] — the controller proper: reschedules on breach
+//!   conditions, subject to a cooldown (see below).
+//! * [`Policy::Oracle`] — clairvoyant comparator: takes a scheduling
+//!   decision every step with zero cooldown.  Re-planning an unchanged
+//!   world returns the cached plan (the scheduler is deterministic), so
+//!   the oracle's decision count is the step count while its migration
+//!   cost only accrues when the plan actually changes.
+//!
+//! ## Breach conditions (reactive)
+//!
+//! 1. **Dead machine** — a [`traces::ClusterEvent::Leave`] for a machine
+//!    in the cluster forces an immediate reschedule through the
+//!    [`crate::scheduler::reschedule::after_failure`] path (survivor
+//!    cluster + fresh schedule in one step), regardless of cooldown.
+//! 2. **Infeasible placement** — the offered rate exceeds the current
+//!    placement's max stable rate (tuple-overloading state, including
+//!    capacity 0 when a component lost all instances).  Reschedules
+//!    immediately, **overriding cooldown**.
+//! 3. **Utilization outside the hysteresis band** — the load factor
+//!    `offered / capacity` is above `band_hi` (preemptive scale-up) or
+//!    below `band_lo` (consolidation).  Cooldown-gated: after any
+//!    reschedule, band breaches are suppressed for `cooldown_steps`
+//!    steps, preventing thrash.
+//!
+//! Conditions 2 and 3 additionally require the world to have changed
+//! since the last scheduling decision: the scheduler is deterministic,
+//! so re-planning an unchanged world cannot produce a different
+//! placement and would only inflate the decision count.
+//!
+//! ## Migration cost
+//!
+//! Every reschedule charges `migration_cost` virtual seconds of spout
+//! downtime per task instance newly started or moved (state transfer +
+//! executor restart), capped at the step length.  Delivered load for the
+//! reschedule step shrinks proportionally, so eager policies pay for
+//! their agility and `delivered` compares honestly across policies.
+
+pub mod report;
+pub mod traces;
+
+use std::collections::HashMap;
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::{Cluster, Machine};
+use crate::predict::{Evaluator, Placement};
+use crate::scheduler::hetero::HeteroScheduler;
+use crate::scheduler::{reschedule, Schedule, Scheduler};
+use crate::topology::Topology;
+use crate::{Error, Result};
+
+use report::{ControlReport, PolicyReport, StepRow};
+use traces::{ClusterEvent, Trace};
+
+/// Control policies compared head-to-head.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Static,
+    Reactive,
+    Oracle,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 3] = [Policy::Static, Policy::Reactive, Policy::Oracle];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Static => "static",
+            Policy::Reactive => "reactive",
+            Policy::Oracle => "oracle",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Policy> {
+        Policy::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// Controller tunables.
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Steps a band breach is suppressed after any reschedule.
+    pub cooldown_steps: usize,
+    /// Hysteresis band on the load factor `offered / capacity`.
+    pub band_lo: f64,
+    pub band_hi: f64,
+    /// Virtual seconds of spout downtime per migrated task instance.
+    pub migration_cost: f64,
+    /// Virtual length of one trace step, seconds.
+    pub step_seconds: f64,
+    /// The scheduler reschedules go through.
+    pub scheduler: HeteroScheduler,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            cooldown_steps: 10,
+            band_lo: 0.25,
+            band_hi: 0.9,
+            migration_cost: 0.02,
+            step_seconds: 1.0,
+            scheduler: HeteroScheduler::default(),
+        }
+    }
+}
+
+/// Cluster + profiles as they evolve over the trace; `version` bumps on
+/// every applied event and keys the schedule/evaluator caches.
+#[derive(Debug, Clone)]
+struct World {
+    cluster: Cluster,
+    profiles: ProfileDb,
+    version: u64,
+}
+
+impl World {
+    fn new(cluster: Cluster, profiles: ProfileDb) -> Self {
+        World { cluster, profiles, version: 0 }
+    }
+
+    fn machine_index(&self, name: &str) -> Option<usize> {
+        self.cluster.machines.iter().position(|m| m.name == name)
+    }
+
+    fn remove_machine(&mut self, name: &str) {
+        if let Some(idx) = self.machine_index(name) {
+            self.cluster.machines.remove(idx);
+            self.version += 1;
+        }
+    }
+
+    fn adopt_cluster(&mut self, cluster: Cluster) {
+        self.cluster = cluster;
+        self.version += 1;
+    }
+
+    /// Apply a Join or Drift event.  Leave is policy-dependent (plain
+    /// removal for static, the failure path for the others) and handled
+    /// by the control loop, not here.  Returns whether anything changed.
+    fn apply(&mut self, ev: &ClusterEvent) -> Result<bool> {
+        match ev {
+            ClusterEvent::Leave { .. } => Ok(false),
+            ClusterEvent::Join { machine, machine_type } => {
+                if self.machine_index(machine).is_some() {
+                    return Ok(false); // already present
+                }
+                let type_id = self
+                    .cluster
+                    .types
+                    .iter()
+                    .position(|t| &t.name == machine_type)
+                    .ok_or_else(|| {
+                        Error::Cluster(format!("join references unknown type '{machine_type}'"))
+                    })?;
+                self.cluster.machines.push(Machine {
+                    name: machine.clone(),
+                    type_id,
+                    cap: 100.0,
+                });
+                self.version += 1;
+                Ok(true)
+            }
+            ClusterEvent::Drift { task_type, machine_type, factor } => {
+                let mut p = self.profiles.get(task_type, machine_type)?;
+                p.e *= factor.max(1e-9);
+                self.profiles.insert(task_type, machine_type, p);
+                self.version += 1;
+                Ok(true)
+            }
+        }
+    }
+}
+
+/// A placement keyed by machine *name*, so it survives cluster
+/// membership changes: columns for vanished machines are dropped on
+/// projection and restored if the machine rejoins under the same name.
+#[derive(Debug, Clone)]
+struct NamedPlacement {
+    machines: Vec<String>,
+    x: Vec<Vec<usize>>,
+}
+
+impl NamedPlacement {
+    fn capture(p: &Placement, cluster: &Cluster) -> Self {
+        debug_assert_eq!(p.n_machines(), cluster.n_machines());
+        NamedPlacement {
+            machines: cluster.machines.iter().map(|m| m.name.clone()).collect(),
+            x: p.x.clone(),
+        }
+    }
+
+    /// Align to `cluster`'s current machine list by name.
+    fn project(&self, cluster: &Cluster) -> Placement {
+        let idx: HashMap<&str, usize> =
+            self.machines.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+        let mut p = Placement::empty(self.x.len(), cluster.n_machines());
+        for (m, mach) in cluster.machines.iter().enumerate() {
+            if let Some(&j) = idx.get(mach.name.as_str()) {
+                for c in 0..self.x.len() {
+                    p.x[c][m] = self.x[c][j];
+                }
+            }
+        }
+        p
+    }
+
+    /// Max stable rate of this placement on the current world, 0 when a
+    /// component has lost all its instances or the rate is unbounded.
+    fn capacity(&self, ev: &Evaluator, cluster: &Cluster) -> Result<f64> {
+        let p = self.project(cluster);
+        if p.counts().iter().any(|&n| n == 0) {
+            return Ok(0.0);
+        }
+        ev.max_stable_rate_or_zero(&p)
+    }
+}
+
+/// Task instances newly started or moved going from `old` to `new`
+/// (per component, per machine name: `max(0, new - old)` summed).
+fn migrated_tasks(old: &NamedPlacement, new: &NamedPlacement) -> usize {
+    let old_idx: HashMap<&str, usize> =
+        old.machines.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
+    let mut moved = 0usize;
+    for (c, row) in new.x.iter().enumerate() {
+        for (j, &k_new) in row.iter().enumerate() {
+            let k_old = old_idx
+                .get(new.machines[j].as_str())
+                .map_or(0, |&oj| old.x.get(c).map_or(0, |r| r[oj]));
+            moved += k_new.saturating_sub(k_old);
+        }
+    }
+    moved
+}
+
+/// Replay `trace` under one policy and return its aggregates.
+pub fn run_policy(
+    top: &Topology,
+    cluster: &Cluster,
+    profiles: &ProfileDb,
+    trace: &Trace,
+    policy: Policy,
+    cfg: &ControllerConfig,
+) -> Result<PolicyReport> {
+    let initial = cfg.scheduler.schedule(top, cluster, profiles)?;
+    run_policy_from(top, cluster, profiles, trace, policy, cfg, initial)
+}
+
+/// [`run_policy`] with the day-zero schedule precomputed (so a
+/// multi-policy comparison pays for it once).
+fn run_policy_from(
+    top: &Topology,
+    cluster: &Cluster,
+    profiles: &ProfileDb,
+    trace: &Trace,
+    policy: Policy,
+    cfg: &ControllerConfig,
+    initial: Schedule,
+) -> Result<PolicyReport> {
+    let sched = &cfg.scheduler;
+    let base_rate = initial.rate;
+
+    let mut world = World::new(cluster.clone(), profiles.clone());
+    let mut np = NamedPlacement::capture(&initial.placement, &world.cluster);
+    let mut cur: Schedule = initial;
+    let mut scheduled_version = world.version;
+    let mut evaluator = Evaluator::new(top, &world.cluster, &world.profiles)?;
+    let mut evaluator_version = world.version;
+    let mut cooldown = 0usize;
+    let mut rep = PolicyReport::new(policy.name());
+
+    for step in &trace.steps {
+        let offered = step.offered * base_rate;
+        let mut migrated_step = 0usize;
+        let mut resched_step = false;
+
+        // 1. apply this step's cluster events
+        for ev in &step.events {
+            match ev {
+                ClusterEvent::Leave { machine } => {
+                    let known = world.machine_index(machine).is_some();
+                    if !known || world.cluster.n_machines() == 1 {
+                        continue;
+                    }
+                    if policy == Policy::Static {
+                        world.remove_machine(machine);
+                    } else {
+                        // dead machine: forced breach through the
+                        // failure-rescheduling path (survivors + fresh
+                        // schedule in one step, ignoring cooldown)
+                        let r = reschedule::after_failure(
+                            top,
+                            &world.cluster,
+                            &world.profiles,
+                            &cur,
+                            machine,
+                            sched,
+                        )?;
+                        world.adopt_cluster(r.cluster);
+                        let new_np = NamedPlacement::capture(&r.schedule.placement, &world.cluster);
+                        migrated_step += migrated_tasks(&np, &new_np);
+                        np = new_np;
+                        cur = r.schedule;
+                        scheduled_version = world.version;
+                        rep.reschedules += 1;
+                        resched_step = true;
+                        cooldown = cfg.cooldown_steps;
+                    }
+                }
+                other => {
+                    world.apply(other)?;
+                }
+            }
+        }
+
+        // 2. refresh the evaluator if the world changed
+        if evaluator_version != world.version {
+            evaluator = Evaluator::new(top, &world.cluster, &world.profiles)?;
+            evaluator_version = world.version;
+        }
+        let mut capacity = np.capacity(&evaluator, &world.cluster)?;
+
+        // 3. breach detection / scheduling decision
+        let dirty = scheduled_version != world.version;
+        let decide = match policy {
+            Policy::Static => false,
+            Policy::Oracle => true,
+            Policy::Reactive => {
+                let infeasible = offered > capacity * (1.0 + 1e-9);
+                let load =
+                    if capacity > 0.0 { offered / capacity } else { f64::INFINITY };
+                let band = load > cfg.band_hi || load < cfg.band_lo;
+                dirty && (infeasible || (band && cooldown == 0))
+            }
+        };
+        if decide {
+            rep.reschedules += 1;
+            if dirty {
+                let s = sched.schedule(top, &world.cluster, &world.profiles)?;
+                let new_np = NamedPlacement::capture(&s.placement, &world.cluster);
+                migrated_step += migrated_tasks(&np, &new_np);
+                np = new_np;
+                cur = s;
+                scheduled_version = world.version;
+                capacity = np.capacity(&evaluator, &world.cluster)?;
+                cooldown = cfg.cooldown_steps;
+                resched_step = true;
+            }
+            // !dirty (oracle only): the cached plan is already optimal
+        } else if !resched_step {
+            // tick the cooldown only on steps with no reschedule, so a
+            // leave-forced reschedule gets its full cooldown window
+            cooldown = cooldown.saturating_sub(1);
+        }
+
+        // 4. delivery accounting with migration downtime
+        let dt = cfg.step_seconds;
+        let downtime = (cfg.migration_cost * migrated_step as f64).min(dt);
+        let delivered = offered.min(capacity) * (1.0 - downtime / dt);
+        rep.offered_volume += offered * dt;
+        rep.delivered_volume += delivered * dt;
+        if delivered + 1e-9 < offered {
+            rep.slo_violation_secs += dt;
+        }
+        rep.tasks_migrated += migrated_step;
+        rep.rows.push(StepRow {
+            t: step.t,
+            offered,
+            capacity,
+            delivered,
+            rescheduled: resched_step,
+            migrated: migrated_step,
+            events: step.events.len(),
+        });
+    }
+    rep.steps = trace.steps.len();
+    Ok(rep)
+}
+
+/// Replay `trace` under each policy and assemble the head-to-head
+/// [`ControlReport`].
+pub fn run_trace(
+    top: &Topology,
+    cluster: &Cluster,
+    profiles: &ProfileDb,
+    trace: &Trace,
+    policies: &[Policy],
+    cfg: &ControllerConfig,
+) -> Result<ControlReport> {
+    let initial = cfg.scheduler.schedule(top, cluster, profiles)?;
+    let mut out = ControlReport {
+        trace: trace.name.clone(),
+        seed: trace.seed,
+        steps: trace.n_steps(),
+        topology: top.name.clone(),
+        cluster: cluster.name.clone(),
+        base_rate: initial.rate,
+        policies: Vec::with_capacity(policies.len()),
+    };
+    for &p in policies {
+        out.policies.push(run_policy_from(
+            top,
+            cluster,
+            profiles,
+            trace,
+            p,
+            cfg,
+            initial.clone(),
+        )?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+    use traces::TraceStep;
+
+    fn setup() -> (Topology, Cluster, ProfileDb) {
+        let (cluster, db) = presets::paper_cluster();
+        (benchmarks::linear(), cluster, db)
+    }
+
+    fn manual_trace(steps: Vec<TraceStep>) -> Trace {
+        Trace { name: "manual".into(), seed: 0, steps }
+    }
+
+    fn step(t: usize, offered: f64, events: Vec<ClusterEvent>) -> TraceStep {
+        TraceStep { t: t as f64, offered, events }
+    }
+
+    fn join(name: &str) -> ClusterEvent {
+        ClusterEvent::Join { machine: name.into(), machine_type: "pentium".into() }
+    }
+
+    fn drift(factor: f64) -> ClusterEvent {
+        ClusterEvent::Drift {
+            task_type: "highCompute".into(),
+            machine_type: "core-i5".into(),
+            factor,
+        }
+    }
+
+    #[test]
+    fn infeasibility_triggers_reschedule_despite_cooldown() {
+        let (top, cluster, db) = setup();
+        // step 0: a join makes the world dirty while offered load exceeds
+        // capacity (1.2x the certified base rate) -> hard breach.
+        // step 1: another join plus an even higher offered rate while the
+        // step-0 cooldown is still active -> must reschedule anyway.
+        let trace = manual_trace(vec![
+            step(0, 1.2, vec![join("extra-0")]),
+            step(1, 2.5, vec![join("extra-1")]),
+            step(2, 0.8, vec![]),
+        ]);
+        let cfg = ControllerConfig { cooldown_steps: 50, ..Default::default() };
+        let rep = run_policy(&top, &cluster, &db, &trace, Policy::Reactive, &cfg).unwrap();
+        assert!(rep.rows[0].rescheduled, "step 0 infeasibility must reschedule");
+        assert!(rep.rows[1].rescheduled, "infeasibility must override cooldown");
+        assert_eq!(rep.reschedules, 2);
+        // the joined pentiums raise capacity above the initial base rate
+        assert!(
+            rep.rows[0].capacity > rep.rows[2].offered,
+            "capacity {} should exceed base-rate offered {}",
+            rep.rows[0].capacity,
+            rep.rows[2].offered
+        );
+    }
+
+    #[test]
+    fn cooldown_suppresses_back_to_back_band_reschedules() {
+        let (top, cluster, db) = setup();
+        // low offered load (band_lo breach) with a drift event every step
+        // keeping the world dirty: only the first breach and the first
+        // breach after cooldown expiry may reschedule.
+        let steps: Vec<TraceStep> =
+            (0..8).map(|i| step(i, 0.1, vec![drift(0.99)])).collect();
+        let trace = manual_trace(steps);
+        let cfg = ControllerConfig { cooldown_steps: 3, ..Default::default() };
+        let rep = run_policy(&top, &cluster, &db, &trace, Policy::Reactive, &cfg).unwrap();
+        assert!(rep.rows[0].rescheduled, "first band breach reschedules");
+        for i in 1..=3 {
+            assert!(!rep.rows[i].rescheduled, "step {i} must be suppressed by cooldown");
+        }
+        assert!(rep.rows[4].rescheduled, "cooldown expired, breach fires again");
+        assert_eq!(rep.reschedules, 2);
+    }
+
+    #[test]
+    fn unchanged_world_never_reschedules() {
+        let (top, cluster, db) = setup();
+        // offered load swings far outside the band but nothing about the
+        // cluster changes: a deterministic scheduler cannot improve on
+        // its own plan, so no decisions are taken.
+        let trace = manual_trace(vec![
+            step(0, 0.1, vec![]),
+            step(1, 1.5, vec![]),
+            step(2, 0.05, vec![]),
+        ]);
+        let cfg = ControllerConfig::default();
+        let rep = run_policy(&top, &cluster, &db, &trace, Policy::Reactive, &cfg).unwrap();
+        assert_eq!(rep.reschedules, 0);
+        assert!(rep.slo_violation_secs >= 1.0, "the 1.5x step sheds load");
+    }
+
+    #[test]
+    fn machine_leave_reuses_after_failure_path() {
+        let (top, cluster, db) = setup();
+        let cfg = ControllerConfig::default();
+        let sched = &cfg.scheduler;
+        let before = sched.schedule(&top, &cluster, &db).unwrap();
+        let expect = reschedule::after_failure(&top, &cluster, &db, &before, "pentium-0", sched)
+            .unwrap();
+
+        let trace = manual_trace(vec![
+            step(0, 0.5, vec![]),
+            step(1, 0.5, vec![ClusterEvent::Leave { machine: "pentium-0".into() }]),
+            step(2, 0.5, vec![]),
+        ]);
+        let rep = run_policy(&top, &cluster, &db, &trace, Policy::Reactive, &cfg).unwrap();
+        assert!(rep.rows[1].rescheduled, "leave forces a reschedule");
+        assert_eq!(rep.reschedules, 1);
+        // the controller's post-leave capacity is exactly what the
+        // failure path certifies on the survivors
+        assert!(
+            (rep.rows[1].capacity - expect.schedule.rate).abs() < 1e-6,
+            "controller capacity {} vs after_failure rate {}",
+            rep.rows[1].capacity,
+            expect.schedule.rate
+        );
+        assert!(rep.rows[1].migrated > 0, "surviving machines absorb the dead machine's tasks");
+    }
+
+    #[test]
+    fn static_loses_tasks_on_leave_and_recovers_on_rejoin() {
+        let (top, cluster, db) = setup();
+        let cfg = ControllerConfig::default();
+        let trace = manual_trace(vec![
+            step(0, 0.5, vec![]),
+            step(1, 0.5, vec![ClusterEvent::Leave { machine: "pentium-0".into() }]),
+            step(2, 0.5, vec![]),
+            step(3, 0.5, vec![join("pentium-0")]),
+            step(4, 0.5, vec![]),
+        ]);
+        let rep = run_policy(&top, &cluster, &db, &trace, Policy::Static, &cfg).unwrap();
+        assert_eq!(rep.reschedules, 0);
+        assert_eq!(rep.tasks_migrated, 0);
+        assert!(
+            rep.rows[1].capacity < rep.rows[0].capacity,
+            "losing a loaded machine must cost static capacity"
+        );
+        assert!(
+            (rep.rows[4].capacity - rep.rows[0].capacity).abs() < 1e-6,
+            "pinned instances return with the rejoined machine"
+        );
+    }
+
+    #[test]
+    fn oracle_decides_every_step() {
+        let (top, cluster, db) = setup();
+        let cfg = ControllerConfig::default();
+        let trace = traces::constant(20, 3);
+        let rep = run_policy(&top, &cluster, &db, &trace, Policy::Oracle, &cfg).unwrap();
+        assert_eq!(rep.reschedules, 20);
+        // nothing changed, so nothing migrated after t=0
+        assert_eq!(rep.tasks_migrated, 0);
+    }
+
+    #[test]
+    fn deterministic_same_seed_identical_report() {
+        let (top, cluster, db) = setup();
+        let cfg = ControllerConfig::default();
+        let t1 = traces::by_name("bursty", &top, &cluster, 120, 77).unwrap();
+        let t2 = traces::by_name("bursty", &top, &cluster, 120, 77).unwrap();
+        let a = run_trace(&top, &cluster, &db, &t1, &Policy::ALL, &cfg).unwrap();
+        let b = run_trace(&top, &cluster, &db, &t2, &Policy::ALL, &cfg).unwrap();
+        let ja = crate::util::json::to_string_pretty(&a.to_json());
+        let jb = crate::util::json::to_string_pretty(&b.to_json());
+        assert_eq!(ja, jb, "same seed must reproduce the identical report");
+    }
+
+    #[test]
+    fn constant_trace_all_policies_deliver_fully() {
+        let (top, cluster, db) = setup();
+        let cfg = ControllerConfig::default();
+        let trace = traces::constant(30, 5);
+        let rep = run_trace(&top, &cluster, &db, &trace, &Policy::ALL, &cfg).unwrap();
+        for p in &rep.policies {
+            assert!(
+                p.delivered_pct() > 99.9,
+                "{}: delivered only {:.2}% on a feasible constant trace",
+                p.policy,
+                p.delivered_pct()
+            );
+            assert!(p.slo_violation_secs < 1e-9, "{}", p.policy);
+        }
+    }
+}

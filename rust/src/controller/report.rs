@@ -1,0 +1,225 @@
+//! Control-plane reporting: per-step rows and per-policy aggregates, so
+//! a static schedule, the reactive controller and the clairvoyant oracle
+//! can be compared head-to-head on the same trace.
+//!
+//! Volumes are integrals over virtual time (tuples = tuples/s × s).  The
+//! headline comparison is **delivered vs offered load**; secondary
+//! columns quantify the cost of elasticity: SLO-violation seconds (any
+//! step where some offered load was not delivered), scheduling decisions
+//! taken, and tasks migrated (each charged as spout downtime by the
+//! controller's migration-cost model).
+
+use crate::util::json::{self, Value};
+
+/// One step of one policy's run.
+#[derive(Debug, Clone)]
+pub struct StepRow {
+    /// Virtual time (s).
+    pub t: f64,
+    /// Offered topology input rate (tuples/s, denormalized).
+    pub offered: f64,
+    /// Max stable rate of the policy's current placement on the current
+    /// world (tuples/s).
+    pub capacity: f64,
+    /// Rate actually delivered this step (tuples/s), after clipping to
+    /// capacity and charging migration downtime.
+    pub delivered: f64,
+    /// Whether a scheduling decision changed the placement this step.
+    pub rescheduled: bool,
+    /// Tasks migrated this step.
+    pub migrated: usize,
+    /// Cluster events that fired this step.
+    pub events: usize,
+}
+
+impl StepRow {
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("t", json::num(self.t)),
+            ("offered", json::num(self.offered)),
+            ("capacity", json::num(self.capacity)),
+            ("delivered", json::num(self.delivered)),
+            ("rescheduled", Value::Bool(self.rescheduled)),
+            ("migrated", json::num(self.migrated as f64)),
+            ("events", json::num(self.events as f64)),
+        ])
+    }
+}
+
+/// Aggregates for one policy over a whole trace.
+#[derive(Debug, Clone)]
+pub struct PolicyReport {
+    pub policy: &'static str,
+    pub steps: usize,
+    /// ∫ offered dt, tuples.
+    pub offered_volume: f64,
+    /// ∫ delivered dt, tuples.
+    pub delivered_volume: f64,
+    /// Virtual seconds during which delivered < offered.
+    pub slo_violation_secs: f64,
+    /// Scheduling decisions taken (the oracle takes one per step).
+    pub reschedules: usize,
+    /// Total task instances newly started or moved by reschedules.
+    pub tasks_migrated: usize,
+    pub rows: Vec<StepRow>,
+}
+
+impl PolicyReport {
+    pub fn new(policy: &'static str) -> Self {
+        PolicyReport {
+            policy,
+            steps: 0,
+            offered_volume: 0.0,
+            delivered_volume: 0.0,
+            slo_violation_secs: 0.0,
+            reschedules: 0,
+            tasks_migrated: 0,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Delivered share of offered load, percent.
+    pub fn delivered_pct(&self) -> f64 {
+        if self.offered_volume > 0.0 {
+            self.delivered_volume / self.offered_volume * 100.0
+        } else {
+            100.0
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("policy", json::s(self.policy)),
+            ("steps", json::num(self.steps as f64)),
+            ("offered_volume", json::num(self.offered_volume)),
+            ("delivered_volume", json::num(self.delivered_volume)),
+            ("delivered_pct", json::num(self.delivered_pct())),
+            ("slo_violation_secs", json::num(self.slo_violation_secs)),
+            ("reschedules", json::num(self.reschedules as f64)),
+            ("tasks_migrated", json::num(self.tasks_migrated as f64)),
+            ("rows", json::arr(self.rows.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+}
+
+/// The head-to-head comparison for one (trace, topology, cluster).
+#[derive(Debug, Clone)]
+pub struct ControlReport {
+    pub trace: String,
+    pub seed: u64,
+    pub steps: usize,
+    pub topology: String,
+    pub cluster: String,
+    /// Initial certified rate the trace's normalized profile scales by.
+    pub base_rate: f64,
+    pub policies: Vec<PolicyReport>,
+}
+
+impl ControlReport {
+    /// Render the aggregate comparison for the terminal.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "\n=== control — trace '{}' ({} steps, seed {}) on '{}' @ '{}' (base rate {:.1} tuple/s) ===\n",
+            self.trace, self.steps, self.seed, self.topology, self.cluster, self.base_rate
+        );
+        out.push_str(&format!(
+            "{:<10} {:>14} {:>14} {:>10} {:>8} {:>12} {:>9}\n",
+            "policy", "offered(tup)", "delivered(tup)", "deliv %", "SLO-s", "reschedules", "migrated"
+        ));
+        out.push_str(&"-".repeat(84));
+        out.push('\n');
+        for p in &self.policies {
+            out.push_str(&format!(
+                "{:<10} {:>14.0} {:>14.0} {:>9.1}% {:>8.0} {:>12} {:>9}\n",
+                p.policy,
+                p.offered_volume,
+                p.delivered_volume,
+                p.delivered_pct(),
+                p.slo_violation_secs,
+                p.reschedules,
+                p.tasks_migrated
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("trace", json::s(&self.trace)),
+            ("seed", json::num(self.seed as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("topology", json::s(&self.topology)),
+            ("cluster", json::s(&self.cluster)),
+            ("base_rate", json::num(self.base_rate)),
+            ("policies", json::arr(self.policies.iter().map(|p| p.to_json()).collect())),
+        ])
+    }
+
+    /// Look a policy's aggregates up by name.
+    pub fn policy(&self, name: &str) -> Option<&PolicyReport> {
+        self.policies.iter().find(|p| p.policy == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ControlReport {
+        let mut p = PolicyReport::new("reactive");
+        p.steps = 2;
+        p.offered_volume = 200.0;
+        p.delivered_volume = 150.0;
+        p.slo_violation_secs = 1.0;
+        p.reschedules = 1;
+        p.tasks_migrated = 3;
+        p.rows.push(StepRow {
+            t: 0.0,
+            offered: 100.0,
+            capacity: 75.0,
+            delivered: 75.0,
+            rescheduled: true,
+            migrated: 3,
+            events: 1,
+        });
+        ControlReport {
+            trace: "diurnal".into(),
+            seed: 42,
+            steps: 2,
+            topology: "linear".into(),
+            cluster: "paper-table2".into(),
+            base_rate: 100.0,
+            policies: vec![p],
+        }
+    }
+
+    #[test]
+    fn delivered_pct_math() {
+        let r = sample();
+        assert!((r.policies[0].delivered_pct() - 75.0).abs() < 1e-9);
+        assert!((PolicyReport::new("static").delivered_pct() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_names_all_policies() {
+        let r = sample();
+        let text = r.render();
+        assert!(text.contains("diurnal"));
+        assert!(text.contains("reactive"));
+        assert!(text.contains("75.0%"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = sample();
+        let text = json::to_string_pretty(&r.to_json());
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.str_field("trace").unwrap(), "diurnal");
+        let pol = &back.get("policies").unwrap().as_arr().unwrap()[0];
+        assert_eq!(pol.num_field("reschedules").unwrap(), 1.0);
+        assert_eq!(
+            pol.get("rows").unwrap().as_arr().unwrap()[0].get("rescheduled").unwrap().as_bool(),
+            Some(true)
+        );
+    }
+}

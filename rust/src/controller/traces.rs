@@ -1,0 +1,336 @@
+//! Workload traces: rate profiles over virtual time, interleaved with
+//! cluster events.
+//!
+//! A [`Trace`] is a seeded, deterministic sequence of [`TraceStep`]s.
+//! Offered rates are **normalized** — `offered` is a multiple of the
+//! initial schedule's certified rate — so the same trace shape stresses
+//! any (topology, cluster) pair proportionally.  Cluster events model the
+//! world changing under the scheduler: machines leaving and (re)joining,
+//! and per-type profile drift (the measured `e_ij` of a task type on a
+//! machine type changing over time, e.g. co-tenant interference easing
+//! or worsening).
+//!
+//! Named generators ([`by_name`]):
+//!
+//! * `constant` — flat 0.8× load, no events (baseline / sanity).
+//! * `diurnal`  — two sinusoidal day cycles between ~0.4× and ~1.3×,
+//!   with a machine outage across the middle third, a favorable
+//!   profile-drift episode, and its late reversal.
+//! * `ramp`     — linear ramp 0.3× → 1.4× with a capacity expansion
+//!   (machine join) at the midpoint.
+//! * `bursty`   — ~0.55× baseline with seeded flash crowds (short
+//!   windows at 1.05×–1.45×) plus one machine leave/rejoin churn pair.
+
+use crate::cluster::Cluster;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// A change in cluster state at some trace step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    /// Machine `machine` (by name) leaves the cluster (failure or
+    /// decommission).
+    Leave { machine: String },
+    /// A machine named `machine` of existing type `machine_type` joins
+    /// (scale-out or a repaired node returning).
+    Join { machine: String, machine_type: String },
+    /// Profile drift: scale the per-tuple cost `e` of `task_type` on
+    /// `machine_type` by `factor` (< 1 speeds the pair up, > 1 slows it
+    /// down).
+    Drift { task_type: String, machine_type: String, factor: f64 },
+}
+
+/// One step of virtual time.
+#[derive(Debug, Clone)]
+pub struct TraceStep {
+    /// Virtual time, seconds since trace start.
+    pub t: f64,
+    /// Offered topology input rate, as a multiple of the initial
+    /// certified rate (1.0 = exactly the capacity of the day-zero
+    /// schedule).
+    pub offered: f64,
+    /// Cluster events applied at the start of this step.
+    pub events: Vec<ClusterEvent>,
+}
+
+/// A deterministic workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub seed: u64,
+    pub steps: Vec<TraceStep>,
+}
+
+impl Trace {
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total cluster events across all steps.
+    pub fn n_events(&self) -> usize {
+        self.steps.iter().map(|s| s.events.len()).sum()
+    }
+}
+
+/// Trace names accepted by [`by_name`] (CLI error surfaces).
+pub const NAMES: [&str; 4] = ["constant", "diurnal", "ramp", "bursty"];
+
+/// Look a trace generator up by name.
+pub fn by_name(
+    name: &str,
+    top: &Topology,
+    cluster: &Cluster,
+    steps: usize,
+    seed: u64,
+) -> Option<Trace> {
+    match name {
+        "constant" => Some(constant(steps, seed)),
+        "diurnal" => Some(diurnal(top, cluster, steps, seed)),
+        "ramp" => Some(ramp(cluster, steps, seed)),
+        "bursty" => Some(bursty(cluster, steps, seed)),
+        _ => None,
+    }
+}
+
+/// ±2% seeded multiplicative jitter (real offered load is never smooth).
+fn jitter(rng: &mut Rng) -> f64 {
+    1.0 + 0.04 * (rng.f64() - 0.5)
+}
+
+/// Flat 0.8× load, no cluster events.
+pub fn constant(steps: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let steps = (0..steps.max(1))
+        .map(|i| TraceStep { t: i as f64, offered: 0.8 * jitter(&mut rng), events: Vec::new() })
+        .collect();
+    Trace { name: "constant".into(), seed, steps }
+}
+
+/// Two sinusoidal day cycles (~0.4×..1.3×) with a mid-trace outage of
+/// the cluster's first machine (the profile-fastest one, which the
+/// scheduler loads heavily), a favorable drift episode on the heaviest
+/// task type, and its late reversal.
+pub fn diurnal(top: &Topology, cluster: &Cluster, steps: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let n = steps.max(8);
+    let victim = cluster.machines[0].name.clone();
+    let victim_type = cluster.types[cluster.machines[0].type_id].name.clone();
+    let heavy_task = top.components.last().expect("topology has components").task_type.clone();
+    let drift_type = cluster.types.last().expect("cluster has types").name.clone();
+
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // two full cycles over the trace
+        let phase = 4.0 * std::f64::consts::PI * i as f64 / n as f64;
+        let offered = ((0.85 + 0.45 * phase.sin()) * jitter(&mut rng)).max(0.05);
+        let mut events = Vec::new();
+        if i == n / 4 {
+            events.push(ClusterEvent::Drift {
+                task_type: heavy_task.clone(),
+                machine_type: drift_type.clone(),
+                factor: 0.8,
+            });
+        }
+        if i == n / 3 {
+            events.push(ClusterEvent::Leave { machine: victim.clone() });
+        }
+        if i == 2 * n / 3 {
+            events.push(ClusterEvent::Join {
+                machine: victim.clone(),
+                machine_type: victim_type.clone(),
+            });
+        }
+        if i == 7 * n / 8 {
+            events.push(ClusterEvent::Drift {
+                task_type: heavy_task.clone(),
+                machine_type: drift_type.clone(),
+                factor: 1.25,
+            });
+        }
+        out.push(TraceStep { t: i as f64, offered, events });
+    }
+    Trace { name: "diurnal".into(), seed, steps: out }
+}
+
+/// Linear ramp 0.3× → 1.4× with a machine join (same type as the
+/// cluster's first machine) at the midpoint — the capacity expansion a
+/// static schedule can never use.
+pub fn ramp(cluster: &Cluster, steps: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let n = steps.max(4);
+    let join_type = cluster.types[cluster.machines[0].type_id].name.clone();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let frac = i as f64 / (n - 1) as f64;
+        let offered = ((0.3 + 1.1 * frac) * jitter(&mut rng)).max(0.05);
+        let mut events = Vec::new();
+        if i == n / 2 {
+            events.push(ClusterEvent::Join {
+                machine: "elastic-0".into(),
+                machine_type: join_type.clone(),
+            });
+        }
+        out.push(TraceStep { t: i as f64, offered, events });
+    }
+    Trace { name: "ramp".into(), seed, steps: out }
+}
+
+/// ~0.55× baseline with seeded flash crowds — short windows at
+/// 1.05×–1.45× — plus one leave/rejoin churn pair of the cluster's
+/// first (profile-fastest, hence heavily loaded) machine.  One flash
+/// crowd is guaranteed to land inside the outage window regardless of
+/// seed, so policies that cannot re-plan around the dead machine are
+/// exposed on every seed.
+pub fn bursty(cluster: &Cluster, steps: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let n = steps.max(12);
+
+    // one churn pair at a seeded point in the first half
+    let victim = cluster.machines[0].name.clone();
+    let victim_type = cluster.types[cluster.machines[0].type_id].name.clone();
+    let leave_at = n / 4 + rng.range(0, n / 4);
+    let rejoin_at = leave_at + n / 6;
+
+    // flash-crowd schedule: expected ~4 random bursts, plus one pinned
+    // inside the outage
+    let mut boost = vec![1.0f64; n];
+    let mut i = 0usize;
+    while i < n {
+        if rng.chance(4.0 / n as f64) {
+            let len = rng.range(n / 25 + 1, n / 12 + 2);
+            let amp = rng.range_f64(1.9, 2.6); // × the 0.55 baseline
+            for b in boost.iter_mut().skip(i).take(len) {
+                *b = amp;
+            }
+            i += len;
+        } else {
+            i += 1;
+        }
+    }
+    for b in boost.iter_mut().skip(leave_at + 1).take(n / 12 + 1) {
+        *b = 2.4;
+    }
+
+    let mut out = Vec::with_capacity(n);
+    for (i, amp) in boost.iter().enumerate() {
+        let offered = (0.55 * amp * jitter(&mut rng)).max(0.05);
+        let mut events = Vec::new();
+        if i == leave_at {
+            events.push(ClusterEvent::Leave { machine: victim.clone() });
+        }
+        if i == rejoin_at {
+            events.push(ClusterEvent::Join {
+                machine: victim.clone(),
+                machine_type: victim_type.clone(),
+            });
+        }
+        out.push(TraceStep { t: i as f64, offered, events });
+    }
+    Trace { name: "bursty".into(), seed, steps: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    fn setup() -> (Topology, Cluster) {
+        let (cluster, _) = presets::paper_cluster();
+        (benchmarks::linear(), cluster)
+    }
+
+    #[test]
+    fn by_name_covers_all_names() {
+        let (top, cluster) = setup();
+        for name in NAMES {
+            let t = by_name(name, &top, &cluster, 100, 7).unwrap();
+            assert_eq!(t.name, name);
+            assert_eq!(t.n_steps(), 100);
+        }
+        assert!(by_name("nope", &top, &cluster, 100, 7).is_none());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let (top, cluster) = setup();
+        for name in NAMES {
+            let a = by_name(name, &top, &cluster, 200, 42).unwrap();
+            let b = by_name(name, &top, &cluster, 200, 42).unwrap();
+            for (sa, sb) in a.steps.iter().zip(&b.steps) {
+                assert_eq!(sa.offered, sb.offered, "{name}");
+                assert_eq!(sa.events, sb.events, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (top, cluster) = setup();
+        let a = bursty(&cluster, 300, 1);
+        let b = bursty(&cluster, 300, 2);
+        assert!(
+            a.steps.iter().zip(&b.steps).any(|(x, y)| x.offered != y.offered),
+            "seeds 1 and 2 produced identical bursty traces"
+        );
+        let _ = top;
+    }
+
+    #[test]
+    fn diurnal_has_outage_drift_and_rejoin() {
+        let (top, cluster) = setup();
+        let t = diurnal(&top, &cluster, 240, 9);
+        let leaves =
+            t.steps.iter().flat_map(|s| &s.events).filter(|e| matches!(e, ClusterEvent::Leave { .. }));
+        let joins =
+            t.steps.iter().flat_map(|s| &s.events).filter(|e| matches!(e, ClusterEvent::Join { .. }));
+        let drifts =
+            t.steps.iter().flat_map(|s| &s.events).filter(|e| matches!(e, ClusterEvent::Drift { .. }));
+        assert_eq!(leaves.count(), 1);
+        assert_eq!(joins.count(), 1);
+        assert_eq!(drifts.count(), 2);
+        for s in &t.steps {
+            assert!(s.offered > 0.0 && s.offered < 1.45, "offered {}", s.offered);
+        }
+    }
+
+    #[test]
+    fn ramp_rises_and_expands() {
+        let (_, cluster) = setup();
+        let t = ramp(&cluster, 200, 11);
+        assert!(t.steps.last().unwrap().offered > t.steps[0].offered * 2.0);
+        assert!(t
+            .steps
+            .iter()
+            .flat_map(|s| &s.events)
+            .any(|e| matches!(e, ClusterEvent::Join { .. })));
+    }
+
+    #[test]
+    fn bursty_always_has_a_flash_crowd_and_churn() {
+        let (_, cluster) = setup();
+        for seed in [0, 1, 2, 3, 99] {
+            let t = bursty(&cluster, 300, seed);
+            assert!(
+                t.steps.iter().any(|s| s.offered > 1.0),
+                "seed {seed}: no flash crowd above 1.0x"
+            );
+            assert!(
+                t.steps
+                    .iter()
+                    .flat_map(|s| &s.events)
+                    .any(|e| matches!(e, ClusterEvent::Leave { .. })),
+                "seed {seed}: no churn"
+            );
+        }
+    }
+
+    #[test]
+    fn constant_is_flat_and_eventless() {
+        let t = constant(50, 5);
+        assert_eq!(t.n_events(), 0);
+        for s in &t.steps {
+            assert!((s.offered - 0.8).abs() < 0.02);
+        }
+    }
+}

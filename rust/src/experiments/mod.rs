@@ -16,12 +16,14 @@
 //! | table5   | Table 5        | [`fig10::table5`]  |
 //! | space    | §3 complexity  | [`complexity::run`]|
 //! | ablation | design choices | [`ablation::run`]  |
+//! | elastic  | control plane  | [`elastic::run`]   |
 //!
 //! `fast: true` shrinks engine windows/design spaces so the whole suite
 //! runs in seconds (used by tests); benches use `fast: false`.
 
 pub mod ablation;
 pub mod complexity;
+pub mod elastic;
 pub mod fig10;
 pub mod fig3;
 pub mod fig6;

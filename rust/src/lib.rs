@@ -8,8 +8,11 @@
 //!   cluster model, the paper's scheduler (Alg. 1 + Alg. 2), the Storm
 //!   default Round-Robin baseline, the optimal exhaustive comparator, a
 //!   tokio stream-processing engine (the "real cluster" substitute), a
-//!   large-scale analytic simulator, and the experiment harness that
-//!   regenerates every figure/table of the paper's evaluation.
+//!   large-scale analytic simulator, an online control plane
+//!   ([`controller`]) that replays workload traces over virtual time and
+//!   keeps the topology scheduled as machines churn and profiles drift,
+//!   and the experiment harness that regenerates every figure/table of
+//!   the paper's evaluation.
 //! * **L2 (python/compile/model.py)** — the placement-evaluation model
 //!   (rate propagation, eq. 6; CPU prediction, eq. 5; feasibility +
 //!   throughput) as a JAX graph, AOT-lowered to HLO text at build time.
@@ -36,6 +39,7 @@
 
 pub mod cluster;
 pub mod config;
+pub mod controller;
 pub mod engine;
 pub mod error;
 pub mod experiments;

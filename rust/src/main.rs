@@ -5,14 +5,16 @@
 //!                 [--scheduler hetero|default|optimal] [--pjrt] [--r0 8]
 //! hstorm run      --topology linear [--rate 100] [--seconds 4] [--pjrt-compute]
 //! hstorm simulate --topology linear --scenario 2
+//! hstorm control  --trace diurnal --scenario 2 [--policy reactive] [--steps 600]
 //! hstorm profile  [--task highCompute] [--machine pentium]
-//! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|all> [--fast] [--json out.json]
+//! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|elastic|all> [--fast] [--json out.json]
 //! hstorm config   --config exp.json            # run a JSON experiment
 //! ```
 
 use std::process::ExitCode;
 
 use hstorm::cluster::{presets, scenarios};
+use hstorm::controller::{self, ControllerConfig, Policy};
 use hstorm::engine::{self, ComputeMode, EngineConfig};
 use hstorm::experiments;
 use hstorm::profiling;
@@ -29,7 +31,7 @@ use hstorm::{Error, Result};
 
 const VALUE_FLAGS: &[&str] = &[
     "topology", "scenario", "scheduler", "r0", "rate", "seconds", "task", "machine", "json",
-    "config", "max-instances", "time-scale",
+    "config", "max-instances", "time-scale", "trace", "steps", "seed", "policy", "cooldown",
 ];
 const BOOL_FLAGS: &[&str] = &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help"];
 
@@ -39,11 +41,19 @@ commands:
   schedule  --topology T [--scenario 1..3] [--scheduler hetero|default|optimal] [--pjrt] [--r0 8]
   run       --topology T [--rate R] [--seconds S] [--time-scale X] [--pjrt-compute]
   simulate  --topology T [--scenario 1..3] [--scheduler ...]
+  control   --trace constant|diurnal|ramp|bursty [--topology T] [--scenario 1..3]
+            [--policy static|reactive|oracle|all] [--steps 600] [--seed 42]
+            [--cooldown 10] [--json out.json]
   profile   [--task highCompute] [--machine pentium]
-  bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|all [--fast] [--json out.json]
+  bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|all [--fast] [--json out.json]
   config    --config exp.json
 
-topologies: linear diamond star rolling-count unique-visitor";
+topologies: linear diamond star rolling-count unique-visitor
+
+control replays a workload trace over virtual time (no sleeping) and
+compares how a static schedule, the reactive controller and a
+clairvoyant oracle keep up with rate swings, machine churn and profile
+drift; see the controller module docs for breach/cooldown semantics.";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -66,6 +76,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "schedule" => cmd_schedule(&args),
         "run" => cmd_run(&args),
         "simulate" => cmd_simulate(&args),
+        "control" => cmd_control(&args),
         "profile" => cmd_profile(&args),
         "bench" => cmd_bench(&args),
         "config" => cmd_config(&args),
@@ -77,8 +88,18 @@ fn load_cluster(
     args: &Args,
 ) -> Result<(hstorm::cluster::Cluster, hstorm::cluster::profile::ProfileDb)> {
     if let Some(s) = args.get("scenario") {
-        let id: usize = s.parse().map_err(|_| Error::Config("--scenario must be 1..3".into()))?;
-        let sc = scenarios::by_id(id).ok_or_else(|| Error::Config(format!("no scenario {id}")))?;
+        let id: usize = s.parse().map_err(|_| {
+            Error::Config(format!(
+                "--scenario: '{s}' is not a number (valid: {})",
+                scenarios::describe_all()
+            ))
+        })?;
+        let sc = scenarios::by_id(id).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown scenario '{id}' (valid: {})",
+                scenarios::describe_all()
+            ))
+        })?;
         Ok(sc.build())
     } else {
         Ok(presets::paper_cluster())
@@ -88,9 +109,7 @@ fn load_cluster(
 fn load_topology(args: &Args) -> Result<hstorm::topology::Topology> {
     let name = args.get_or("topology", "linear");
     benchmarks::by_name(name).ok_or_else(|| {
-        Error::Config(format!(
-            "unknown topology '{name}' (linear|diamond|star|rolling-count|unique-visitor)"
-        ))
+        Error::Config(format!("unknown topology '{name}' (valid: {})", benchmarks::NAMES.join("|")))
     })
 }
 
@@ -225,6 +244,49 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_control(args: &Args) -> Result<()> {
+    let top = load_topology(args)?;
+    let (cluster, db) = load_cluster(args)?;
+    let steps = args.get_usize("steps", 600)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let trace_name = args.get_or("trace", "diurnal");
+    let trace = controller::traces::by_name(trace_name, &top, &cluster, steps, seed)
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "unknown trace '{trace_name}' (valid: {})",
+                controller::traces::NAMES.join("|")
+            ))
+        })?;
+    let policy_arg = args.get_or("policy", "all");
+    let policies: Vec<Policy> = if policy_arg == "all" {
+        Policy::ALL.to_vec()
+    } else {
+        vec![Policy::by_name(policy_arg).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown policy '{policy_arg}' (valid: static|reactive|oracle|all)"
+            ))
+        })?]
+    };
+    let cfg = ControllerConfig {
+        cooldown_steps: args.get_usize("cooldown", ControllerConfig::default().cooldown_steps)?,
+        ..Default::default()
+    };
+    println!(
+        "replaying trace '{}' ({} steps) on '{}' @ '{}' ...",
+        trace.name,
+        trace.n_steps(),
+        top.name,
+        cluster.name
+    );
+    let report = controller::run_trace(&top, &cluster, &db, &trace, &policies, &cfg)?;
+    println!("{}", report.render());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, json::to_string_pretty(&report.to_json()))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_profile(args: &Args) -> Result<()> {
     let (cluster, truth) = presets::paper_cluster();
     let task = args.get_or("task", "highCompute");
@@ -249,7 +311,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let fast = args.has("fast");
     let mut results = Vec::new();
     let ids: Vec<&str> = if which == "all" {
-        vec!["fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "table5", "space", "ablation"]
+        vec![
+            "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "table5", "space", "ablation",
+            "elastic",
+        ]
     } else {
         vec![which]
     };
@@ -264,6 +329,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "table5" => experiments::fig10::table5(fast)?,
             "space" => experiments::complexity::run(fast)?,
             "ablation" => experiments::ablation::run(fast)?,
+            "elastic" => experiments::elastic::run(fast)?,
             other => return Err(Error::Config(format!("unknown experiment '{other}'"))),
         };
         println!("{}", r.render());

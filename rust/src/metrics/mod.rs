@@ -46,14 +46,18 @@ impl Gauge {
 /// service time — the engine-side `e_ij` measurement.
 #[derive(Debug, Default)]
 pub struct MeanStat {
-    sum_us: AtomicU64,
+    sum_ns: AtomicU64,
     count: AtomicU64,
 }
 
 impl MeanStat {
-    /// Record one observation in seconds.
+    /// Record one observation in seconds.  Accumulated in nanoseconds,
+    /// rounded to nearest: the old micro-unit truncation dropped
+    /// sub-microsecond observations entirely while still incrementing
+    /// `count`, biasing the measured mean (the engine-side `e_ij`)
+    /// downward.
     pub fn observe(&self, seconds: f64) {
-        self.sum_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.sum_ns.fetch_add((seconds * 1e9).round() as u64, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -67,11 +71,11 @@ impl MeanStat {
         if n == 0 {
             return None;
         }
-        Some(self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64)
+        Some(self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64)
     }
 
     pub fn reset(&self) {
-        self.sum_us.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
         self.count.store(0, Ordering::Relaxed);
     }
 }
@@ -171,6 +175,23 @@ mod tests {
         assert!((m.mean().unwrap() - 0.015).abs() < 1e-6);
         m.reset();
         assert!(m.mean().is_none());
+    }
+
+    #[test]
+    fn mean_stat_keeps_sub_microsecond_observations() {
+        // 0.3 µs observations: micro-unit truncation recorded 0 for
+        // every one (while still counting them), collapsing the mean
+        // to zero; nanosecond accumulation preserves them exactly
+        let m = MeanStat::default();
+        for _ in 0..10 {
+            m.observe(0.3e-6);
+        }
+        assert_eq!(m.count(), 10);
+        assert!((m.mean().unwrap() - 0.3e-6).abs() < 1e-12, "{:?}", m.mean());
+        // microsecond-scale values survive unchanged
+        let m2 = MeanStat::default();
+        m2.observe(1.6e-6);
+        assert!((m2.mean().unwrap() - 1.6e-6).abs() < 1e-12, "{:?}", m2.mean());
     }
 
     #[test]

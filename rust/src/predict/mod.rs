@@ -195,6 +195,17 @@ impl Evaluator {
         Ok(best)
     }
 
+    /// [`max_stable_rate`](Self::max_stable_rate) clamped to an
+    /// operating point: a placement whose utilization slope is zero on
+    /// every machine has an unbounded symbolic rate (`∞`); callers that
+    /// need a concrete rate to run at treat that as 0 — nothing real can
+    /// be certified.  Shared by the schedulers, the simulator and the
+    /// control plane.
+    pub fn max_stable_rate_or_zero(&self, p: &Placement) -> Result<f64> {
+        let r = self.max_stable_rate(p)?;
+        Ok(if r.is_finite() { r } else { 0.0 })
+    }
+
     /// Throughput at a placement's max stable rate — the objective the
     /// optimal scheduler maximizes (`Σ_c gain_c * R0*`).
     pub fn best_throughput(&self, p: &Placement) -> Result<f64> {
@@ -396,6 +407,30 @@ mod tests {
         let ev = Evaluator::new(&t, &c, &db).unwrap();
         let p = one_per_machine(&ev);
         assert_eq!(ev.max_stable_rate(&p).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn max_stable_rate_or_zero_clamps_unbounded() {
+        // zero per-tuple cost everywhere -> the symbolic rate is infinite
+        let (t, c, _) = setup();
+        let mut db = crate::cluster::profile::ProfileDb::new();
+        for task in ["spout", "lowCompute", "midCompute", "highCompute"] {
+            for mt in ["pentium", "core-i3", "core-i5"] {
+                db.insert(task, mt, crate::cluster::profile::TaskProfile { e: 0.0, met: 1.0 });
+            }
+        }
+        let ev = Evaluator::new(&t, &c, &db).unwrap();
+        let p = one_per_machine(&ev);
+        assert!(ev.max_stable_rate(&p).unwrap().is_infinite());
+        assert_eq!(ev.max_stable_rate_or_zero(&p).unwrap(), 0.0);
+        // finite rates pass through untouched
+        let (t2, c2, db2) = setup();
+        let ev2 = Evaluator::new(&t2, &c2, &db2).unwrap();
+        let p2 = one_per_machine(&ev2);
+        assert_eq!(
+            ev2.max_stable_rate_or_zero(&p2).unwrap(),
+            ev2.max_stable_rate(&p2).unwrap()
+        );
     }
 
     #[test]

@@ -68,8 +68,7 @@ pub trait Scheduler {
 /// Finish a schedule from a placement: certify its max stable rate and
 /// evaluate there (shared by the RR baseline and the optimal search).
 pub(crate) fn finish(ev: &Evaluator, placement: Placement) -> Result<Schedule> {
-    let rate = ev.max_stable_rate(&placement)?;
-    let rate = if rate.is_finite() { rate } else { 0.0 };
+    let rate = ev.max_stable_rate_or_zero(&placement)?;
     let eval = ev.evaluate(&placement, rate)?;
     Ok(Schedule { placement, rate, eval })
 }

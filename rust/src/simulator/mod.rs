@@ -59,14 +59,7 @@ pub fn simulate(
     let ev = Evaluator::new(top, cluster, profiles)?;
     let rate = match rate_override {
         Some(r) => r,
-        None => {
-            let r = ev.max_stable_rate(placement)?;
-            if r.is_finite() {
-                r
-            } else {
-                0.0
-            }
-        }
+        None => ev.max_stable_rate_or_zero(placement)?,
     };
     let eval = ev.evaluate(placement, rate)?;
     let counts = placement.counts();
@@ -189,6 +182,51 @@ mod tests {
         let only_pentium = weighted_utilization(&top, &cluster, &db, &[90.0, 0.0, 0.0]).unwrap();
         let only_i3 = weighted_utilization(&top, &cluster, &db, &[0.0, 90.0, 0.0]).unwrap();
         assert!(only_pentium > only_i3, "{only_pentium} vs {only_i3}");
+    }
+
+    #[test]
+    fn weighted_util_bounded_by_extremes() {
+        // eq. 7 is a convex combination of per-type means, so it can
+        // never leave the [min, max] envelope of the inputs
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        for utils in [[12.0, 77.0, 41.0], [0.0, 0.0, 95.0], [33.3, 33.3, 33.3]] {
+            let w = weighted_utilization(&top, &cluster, &db, &utils).unwrap();
+            let lo = utils.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = utils.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(w >= lo - 1e-9 && w <= hi + 1e-9, "{utils:?} -> {w}");
+        }
+    }
+
+    #[test]
+    fn weighted_util_single_machine_type_is_plain_mean() {
+        // one machine type: its weight is 1, so eq. 7 collapses to the
+        // plain mean over the machines
+        let (cluster, db) = presets::homogeneous_cluster(4);
+        let top = benchmarks::linear();
+        let w = weighted_utilization(&top, &cluster, &db, &[10.0, 20.0, 30.0, 40.0]).unwrap();
+        assert!((w - 25.0).abs() < 1e-9, "{w}");
+    }
+
+    #[test]
+    fn weighted_util_single_task_type_uniform_speed_is_plain_mean() {
+        // a single task type whose profiled speed is identical on every
+        // machine type makes the type weights uniform; with one machine
+        // per type that is again the plain mean
+        use crate::cluster::profile::{ProfileDb, TaskProfile};
+        use crate::topology::builder::TopologyBuilder;
+        let (cluster, _) = presets::paper_cluster();
+        let top = TopologyBuilder::new("mono")
+            .spout("s", "uni", 1.0)
+            .bolt("b", "uni", 1.0, &["s"])
+            .build()
+            .unwrap();
+        let mut db = ProfileDb::new();
+        for mt in ["pentium", "core-i3", "core-i5"] {
+            db.insert("uni", mt, TaskProfile { e: 0.1, met: 1.0 });
+        }
+        let w = weighted_utilization(&top, &cluster, &db, &[30.0, 60.0, 90.0]).unwrap();
+        assert!((w - 60.0).abs() < 1e-9, "{w}");
     }
 
     #[test]

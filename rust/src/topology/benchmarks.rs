@@ -85,6 +85,10 @@ pub fn micro() -> Vec<Topology> {
     vec![linear(), diamond(), star()]
 }
 
+/// Canonical names accepted by [`by_name`] (CLI error surfaces list
+/// these so typos fail with the valid options).
+pub const NAMES: [&str; 5] = ["linear", "diamond", "star", "rolling-count", "unique-visitor"];
+
 /// Look a benchmark up by name (CLI/config surface).
 pub fn by_name(name: &str) -> Option<Topology> {
     match name {
@@ -108,6 +112,14 @@ mod tests {
             assert_eq!(got.n_components(), t.n_components());
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn names_const_matches_by_name() {
+        for name in NAMES {
+            assert!(by_name(name).is_some(), "NAMES lists unknown topology '{name}'");
+        }
+        assert_eq!(NAMES.len(), all().len());
     }
 
     #[test]

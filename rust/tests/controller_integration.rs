@@ -1,0 +1,75 @@
+//! End-to-end acceptance of the online control plane: the CLI-shaped
+//! diurnal replay on the Table-4 small scenario must (a) run a >= 500
+//! step trace in analytic virtual time (no sleeping — wall-clock far
+//! under the trace's 500 virtual seconds), (b) have the reactive policy
+//! deliver strictly more total load than the static schedule, and
+//! (c) take fewer scheduling decisions than the clairvoyant oracle.
+
+use std::time::Instant;
+
+use hstorm::cluster::scenarios;
+use hstorm::controller::{self, traces, ControllerConfig, Policy};
+use hstorm::topology::benchmarks;
+
+#[test]
+fn diurnal_scenario1_head_to_head() {
+    let top = benchmarks::linear();
+    let (cluster, db) = scenarios::by_id(1).unwrap().build();
+    let trace = traces::by_name("diurnal", &top, &cluster, 500, 42).unwrap();
+    assert!(trace.n_steps() >= 500);
+
+    let started = Instant::now();
+    let report =
+        controller::run_trace(&top, &cluster, &db, &trace, &Policy::ALL, &ControllerConfig::default())
+            .unwrap();
+    let elapsed = started.elapsed();
+    // 500 virtual seconds of trace; any wall-clock sleeping would blow
+    // this bound by orders of magnitude even in debug builds
+    assert!(elapsed.as_secs_f64() < 30.0, "control loop slept? took {elapsed:?}");
+
+    let stat = report.policy("static").unwrap();
+    let reac = report.policy("reactive").unwrap();
+    let orac = report.policy("oracle").unwrap();
+
+    assert!(
+        reac.delivered_volume > stat.delivered_volume,
+        "reactive ({:.0}) must deliver strictly more than static ({:.0})",
+        reac.delivered_volume,
+        stat.delivered_volume
+    );
+    assert!(
+        reac.reschedules < orac.reschedules,
+        "reactive ({}) must decide less often than the oracle ({})",
+        reac.reschedules,
+        orac.reschedules
+    );
+    // the oracle replans every step
+    assert!(orac.reschedules >= trace.n_steps());
+    // nobody outdelivers what was offered
+    for p in &report.policies {
+        assert!(p.delivered_volume <= p.offered_volume * (1.0 + 1e-9), "{}", p.policy);
+    }
+}
+
+#[test]
+fn bursty_flash_crowds_expose_static_on_every_topology() {
+    // churn + flash crowds on the paper's 3-machine cluster: the reactive
+    // controller must keep its edge on every benchmark topology
+    use hstorm::cluster::presets;
+    let (cluster, db) = presets::paper_cluster();
+    let cfg = ControllerConfig::default();
+    for top in benchmarks::micro() {
+        let trace = traces::by_name("bursty", &top, &cluster, 240, 7).unwrap();
+        let report =
+            controller::run_trace(&top, &cluster, &db, &trace, &Policy::ALL, &cfg).unwrap();
+        let stat = report.policy("static").unwrap();
+        let reac = report.policy("reactive").unwrap();
+        assert!(
+            reac.delivered_volume > stat.delivered_volume,
+            "{}: reactive {:.0} <= static {:.0}",
+            top.name,
+            reac.delivered_volume,
+            stat.delivered_volume
+        );
+    }
+}
