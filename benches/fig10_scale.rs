@@ -5,8 +5,7 @@
 
 use hstorm::cluster::scenarios::SCENARIOS;
 use hstorm::experiments::fig10;
-use hstorm::scheduler::hetero::HeteroScheduler;
-use hstorm::scheduler::Scheduler;
+use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
 use hstorm::topology::benchmarks;
 use hstorm::util::bench;
 
@@ -17,16 +16,19 @@ fn main() {
     println!("[fig10_scale] regenerated in {dt:?} (fast={fast})\n");
 
     // scheduler latency per scenario size (small/medium/large)
+    let hetero = registry::create("hetero", &PolicyParams::default()).expect("hetero registered");
+    let req = ScheduleRequest::max_throughput();
     for s in SCENARIOS.iter().take(if fast { 2 } else { 3 }) {
         let (cluster, db) = s.build();
         let top = benchmarks::diamond();
+        let problem = Problem::new(&top, &cluster, &db).expect("problem");
         let iters = if s.total_machines() > 100 { 3 } else { 10 };
         bench::run(
             &format!("hetero schedule, scenario {} ({} machines)", s.id, s.total_machines()),
             1,
             iters,
             || {
-                HeteroScheduler::default().schedule(&top, &cluster, &db).expect("schedules");
+                hetero.schedule(&problem, &req).expect("schedules");
             },
         );
     }

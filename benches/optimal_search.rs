@@ -10,7 +10,7 @@ use hstorm::predict::Placement;
 use hstorm::runtime::scorer::{NativeScorer, PjRtScorer, PlacementScorer};
 use hstorm::runtime::PjRtRuntime;
 use hstorm::scheduler::optimal::OptimalScheduler;
-use hstorm::scheduler::Scheduler;
+use hstorm::scheduler::{Problem, ScheduleRequest, Scheduler};
 use hstorm::topology::benchmarks;
 use hstorm::util::bench;
 use hstorm::util::rng::Rng;
@@ -63,7 +63,10 @@ fn main() {
     // the full bounded optimal search, end to end
     let os = OptimalScheduler { max_instances_per_component: if fast { 2 } else { 3 }, ..Default::default() };
     let space = os.design_space_size(n, m);
-    let (s, dt) = bench::time_once(|| os.schedule(&top, &cluster, &db).expect("optimal schedules"));
+    let problem = Problem::new(&top, &cluster, &db).expect("problem");
+    let (s, dt) = bench::time_once(|| {
+        os.schedule(&problem, &ScheduleRequest::max_throughput()).expect("optimal schedules")
+    });
     println!(
         "full optimal search over {space} placements: {dt:?} -> rate {:.1} t/s (paper's comparator: hours)",
         s.rate

@@ -1,19 +1,21 @@
 //! Micro-benchmarks of the scheduling hot paths (the §Perf targets in
-//! EXPERIMENTS.md): evaluator, closed-form max-rate, FirstAssignment,
-//! full hetero schedule, and the refinement pass, across cluster sizes.
+//! EXPERIMENTS.md): evaluator, closed-form max-rate, problem
+//! construction, full hetero schedule, and the RR baseline, across
+//! cluster sizes.
 //! Run: cargo bench --bench scheduler_micro  [HSTORM_FAST=1 for quick mode]
 
 use hstorm::cluster::{presets, scenarios};
 use hstorm::predict::{Evaluator, Placement};
-use hstorm::scheduler::default_rr::DefaultScheduler;
-use hstorm::scheduler::hetero::HeteroScheduler;
-use hstorm::scheduler::Scheduler;
-use hstorm::topology::{benchmarks, Etg};
+use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
+use hstorm::topology::benchmarks;
 use hstorm::util::bench;
 
 fn main() {
     let fast = std::env::var("HSTORM_FAST").is_ok();
     let iters = if fast { 50 } else { 500 };
+    let req = ScheduleRequest::max_throughput();
+    let hetero = registry::create("hetero", &PolicyParams::default()).expect("hetero registered");
+    let default = registry::create("default", &PolicyParams::default()).expect("default registered");
 
     // paper cluster (3 machines)
     let (cluster, db) = presets::paper_cluster();
@@ -30,26 +32,30 @@ fn main() {
     bench::run("max_stable_rate closed form", 10, iters * 10, || {
         ev.max_stable_rate(&p).expect("rate");
     });
-    bench::run("hetero schedule (paper cluster)", 2, iters / 5, || {
-        HeteroScheduler::default().schedule(&top, &cluster, &db).expect("schedules");
+    bench::run("problem build (validate + expand profiles)", 10, iters * 10, || {
+        Problem::new(&top, &cluster, &db).expect("problem");
     });
-    bench::run("default RR schedule (paper cluster)", 2, iters, || {
-        DefaultScheduler::with_etg(Etg { counts: vec![1, 2, 2, 2, 2] })
-            .schedule(&top, &cluster, &db)
-            .expect("schedules");
+    let problem = Problem::new(&top, &cluster, &db).expect("problem");
+    bench::run("hetero schedule (paper cluster)", 2, iters / 5, || {
+        hetero.schedule(&problem, &req).expect("schedules");
+    });
+    bench::run("default RR schedule (paper cluster, proposed ETG)", 2, iters / 5, || {
+        default.schedule(&problem, &req).expect("schedules");
     });
 
     // medium scenario (30 machines)
     let (c30, db30) = scenarios::by_id(2).unwrap().build();
+    let p30 = Problem::new(&top, &c30, &db30).expect("problem");
     bench::run("hetero schedule (30 machines)", 1, (iters / 25).max(3), || {
-        HeteroScheduler::default().schedule(&top, &c30, &db30).expect("schedules");
+        hetero.schedule(&p30, &req).expect("schedules");
     });
 
     if !fast {
         // large scenario (180 machines)
         let (c180, db180) = scenarios::by_id(3).unwrap().build();
+        let p180 = Problem::new(&top, &c180, &db180).expect("problem");
         bench::run("hetero schedule (180 machines)", 1, 3, || {
-            HeteroScheduler::default().schedule(&top, &c180, &db180).expect("schedules");
+            hetero.schedule(&p180, &req).expect("schedules");
         });
     }
 }

@@ -11,8 +11,8 @@ use hstorm::config::{
     ClusterConfig, ComponentConfig, ExperimentConfig, MachineGroupConfig, ProfileRowConfig,
     TopologyConfig,
 };
-use hstorm::scheduler::hetero::HeteroScheduler;
-use hstorm::scheduler::Scheduler;
+use hstorm::resolve;
+use hstorm::scheduler::{PolicyParams, Problem, ScheduleRequest};
 
 fn main() -> hstorm::Result<()> {
     // an IoT-style ingest pipeline: two sensor spouts -> parse -> enrich
@@ -45,14 +45,19 @@ fn main() -> hstorm::Result<()> {
     cfg.save(&path)?;
     println!("wrote {}", path.display());
 
-    // the downstream-user path: load + schedule
+    // the downstream-user path: load + schedule through the same
+    // resolver the CLI and the JSON runner use
     let loaded = ExperimentConfig::load(&path)?;
     let top = loaded.topology.to_topology()?;
     let cluster = loaded.cluster.to_cluster()?;
     let db = loaded.profile_db();
-    db.check_coverage(&top, &cluster)?;
 
-    let s = HeteroScheduler { r0: loaded.r0, ..Default::default() }.schedule(&top, &cluster, &db)?;
+    let problem = Problem::new(&top, &cluster, &db)?; // validates coverage once
+    let sched = resolve::policy(
+        &loaded.scheduler,
+        &PolicyParams { r0: loaded.r0, ..Default::default() },
+    )?;
+    let s = sched.schedule(&problem, &ScheduleRequest::max_throughput())?;
     println!("\nscheduled '{}' on '{}':", top.name, cluster.name);
     println!("  certified rate       {:.1} tuple/s", s.rate);
     println!("  predicted throughput {:.1} tuple/s", s.eval.throughput);

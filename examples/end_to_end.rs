@@ -26,10 +26,8 @@ use hstorm::engine::{self, EngineConfig};
 use hstorm::profiling;
 use hstorm::runtime::scorer::PjRtScorer;
 use hstorm::runtime::PjRtRuntime;
-use hstorm::scheduler::default_rr::DefaultScheduler;
-use hstorm::scheduler::hetero::HeteroScheduler;
-use hstorm::scheduler::Scheduler;
-use hstorm::topology::{benchmarks, Etg};
+use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
+use hstorm::topology::benchmarks;
 
 fn main() -> hstorm::Result<()> {
     println!("== hstorm end-to-end driver ==\n");
@@ -67,11 +65,15 @@ fn main() -> hstorm::Result<()> {
     let mut gains = Vec::new();
     let mut pred_errs = Vec::new();
     for top in benchmarks::micro() {
-        let scorer = PjRtScorer::new(&rt, &top, &cluster, &profiles)?;
-        let hs = HeteroScheduler::default();
-        let ours = hs.schedule_with_scorer(&top, &cluster, &profiles, &scorer)?;
-        let etg = Etg { counts: ours.placement.counts() };
-        let default = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &profiles)?;
+        // one Problem per topology, with the PJRT scorer attached: every
+        // placement evaluation of the search runs through the AOT model
+        let problem = Problem::new(&top, &cluster, &profiles)?
+            .with_scorer(Box::new(PjRtScorer::new(&rt, &top, &cluster, &profiles)?));
+        let req = ScheduleRequest::max_throughput();
+        let ours = registry::create("hetero", &PolicyParams::default())?.schedule(&problem, &req)?;
+        // "default" re-derives the same ETG internally (§6.3 protocol)
+        let default =
+            registry::create("default", &PolicyParams::default())?.schedule(&problem, &req)?;
 
         // ---- 3. run on the engine ---------------------------------------------
         println!("\n[3/4] running '{}' on the engine (proposed @ {:.0} t/s, default @ {:.0} t/s)...",

@@ -1,16 +1,14 @@
 //! Quickstart: schedule the Linear micro-benchmark on the paper's
-//! Table-2 heterogeneous cluster with the proposed algorithm and print
-//! the resulting execution topology graph.
+//! Table-2 heterogeneous cluster through the `Problem`/`ScheduleRequest`
+//! API and print the resulting execution topology graph.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use hstorm::cluster::presets;
-use hstorm::scheduler::default_rr::DefaultScheduler;
-use hstorm::scheduler::hetero::HeteroScheduler;
-use hstorm::scheduler::Scheduler;
-use hstorm::topology::{benchmarks, Etg};
+use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
+use hstorm::topology::benchmarks;
 
 fn main() -> hstorm::Result<()> {
     let top = benchmarks::linear();
@@ -20,16 +18,22 @@ fn main() -> hstorm::Result<()> {
     println!("topology '{}' ({} components), cluster '{}' ({} machines)\n",
         top.name, top.n_components(), cluster.name, cluster.n_machines());
 
+    // One Problem, validated once; policies resolve by name from the
+    // registry and serve requests against it.
+    let problem = Problem::new(&top, &cluster, &profiles)?;
+    let req = ScheduleRequest::max_throughput();
+
     // The paper's scheduler: builds the ETG *and* the assignment.
-    let ours = HeteroScheduler::default().schedule(&top, &cluster, &profiles)?;
+    let ours = registry::create("hetero", &PolicyParams::default())?.schedule(&problem, &req)?;
     println!("proposed scheduler:");
     println!("  certified input rate  {:.1} tuple/s", ours.rate);
     println!("  predicted throughput  {:.1} tuple/s", ours.eval.throughput);
+    println!("  provenance            {}", ours.provenance.render());
     print!("{}", ours.describe(&top, &cluster));
 
-    // Storm's default: same instance counts, Round-Robin placement.
-    let etg = Etg { counts: ours.placement.counts() };
-    let default = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &profiles)?;
+    // Storm's default: same instance counts (fair-comparison protocol
+    // built into the registry's "default" policy), Round-Robin placement.
+    let default = registry::create("default", &PolicyParams::default())?.schedule(&problem, &req)?;
     println!("\nStorm default scheduler (same ETG, Round-Robin):");
     println!("  max stable rate       {:.1} tuple/s", default.rate);
     println!("  predicted throughput  {:.1} tuple/s", default.eval.throughput);

@@ -68,18 +68,33 @@ impl ProfileDb {
     }
 
     /// Verify the DB covers every `(component, machine type)` pair a
-    /// topology/cluster combination will ask for.
+    /// topology/cluster combination will ask for.  On failure the error
+    /// lists **every** missing pair (component with its task type ×
+    /// machine type), not just the first, so a half-filled profile table
+    /// is fixable in one round trip.
     pub fn check_coverage(
         &self,
         top: &crate::topology::Topology,
         cluster: &crate::cluster::Cluster,
     ) -> Result<()> {
+        let mut missing: Vec<String> = Vec::new();
         for c in &top.components {
             for t in &cluster.types {
-                self.get(&c.task_type, &t.name)?;
+                if self.get(&c.task_type, &t.name).is_err() {
+                    missing.push(format!("({} [task '{}'], {})", c.name, c.task_type, t.name));
+                }
             }
         }
-        Ok(())
+        if missing.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Cluster(format!(
+                "profile db misses {} (component, machine type) pair{}: {}",
+                missing.len(),
+                if missing.len() == 1 { "" } else { "s" },
+                missing.join(", ")
+            )))
+        }
     }
 
     /// Per-machine expanded tables for the AOT scorer: `e_m[c][m]` and
@@ -134,6 +149,34 @@ mod tests {
         for t in benchmarks::micro() {
             db.check_coverage(&t, &cluster).unwrap();
         }
+    }
+
+    #[test]
+    fn coverage_error_lists_every_missing_pair() {
+        let (cluster, full) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        // rebuild the DB without highCompute anywhere and without
+        // midCompute on the pentium type
+        let mut db = ProfileDb::new();
+        for tt in ["spout", "lowCompute", "midCompute"] {
+            for mt in ["pentium", "core-i3", "core-i5"] {
+                if tt == "midCompute" && mt == "pentium" {
+                    continue;
+                }
+                db.insert(tt, mt, full.get(tt, mt).unwrap());
+            }
+        }
+        let err = db.check_coverage(&top, &cluster).unwrap_err().to_string();
+        // all four missing pairs appear in one message
+        for pair in [
+            "[task 'midCompute'], pentium",
+            "[task 'highCompute'], pentium",
+            "[task 'highCompute'], core-i3",
+            "[task 'highCompute'], core-i5",
+        ] {
+            assert!(err.contains(pair), "missing pair '{pair}' not listed in: {err}");
+        }
+        assert!(err.contains("4 (component, machine type) pairs"), "{err}");
     }
 
     #[test]

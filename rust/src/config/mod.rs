@@ -224,7 +224,11 @@ pub struct ExperimentConfig {
     pub profiles: Vec<ProfileRowConfig>,
     /// Initial topology input rate R0 (tuple/s).
     pub r0: f64,
-    /// Scheduler: "default" | "hetero" | "optimal".
+    /// Scheduler policy, validated against
+    /// [`crate::scheduler::registry`] at parse time — the same names
+    /// (and aliases) the CLI's `--scheduler` accepts, so the two entry
+    /// points cannot drift.  Note `"default"` follows the paper's §6.3
+    /// fair-comparison protocol (Round-Robin over the proposed ETG).
     pub scheduler: String,
 }
 
@@ -239,16 +243,19 @@ impl ExperimentConfig {
                 met: r.opt("met").and_then(|m| m.as_f64()).unwrap_or(0.0),
             });
         }
+        let scheduler = v
+            .opt("scheduler")
+            .and_then(|s| s.as_str())
+            .unwrap_or("hetero")
+            .to_string();
+        // reject unknown policy names at parse time, with the valid set
+        crate::scheduler::registry::canonical(&scheduler)?;
         Ok(ExperimentConfig {
             topology: TopologyConfig::from_json(v.get("topology")?)?,
             cluster: ClusterConfig::from_json(v.get("cluster")?)?,
             profiles,
             r0: v.opt("r0").and_then(|r| r.as_f64()).unwrap_or(8.0),
-            scheduler: v
-                .opt("scheduler")
-                .and_then(|s| s.as_str())
-                .unwrap_or("hetero")
-                .to_string(),
+            scheduler,
         })
     }
 
@@ -402,5 +409,16 @@ mod tests {
     fn missing_required_field_rejected() {
         assert!(ExperimentConfig::parse("{}").is_err());
         assert!(ExperimentConfig::parse(r#"{"topology": {"name": "x"}}"#).is_err());
+    }
+
+    #[test]
+    fn unknown_scheduler_rejected_at_parse_time() {
+        let bad = sample_json().replace("\"hetero\"", "\"round-robin-9000\"");
+        let err = ExperimentConfig::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("round-robin-9000"), "{err}");
+        assert!(err.contains("hetero"), "error should list registry names: {err}");
+        // registry aliases are accepted
+        let alias = sample_json().replace("\"hetero\"", "\"default-rr\"");
+        assert!(ExperimentConfig::parse(&alias).is_ok());
     }
 }

@@ -6,8 +6,10 @@
 //! A [`traces::Trace`] replays offered load and cluster events over
 //! virtual time (one [`traces::TraceStep`] per virtual second — the loop
 //! is purely analytic, it never sleeps).  At each step the controller
-//! re-evaluates the current placement with the [`Evaluator`] and decides
-//! whether to invoke the heterogeneity-aware scheduler again.
+//! re-evaluates the current placement against its cached
+//! [`Problem`] (rebuilt only when the world actually changes) and
+//! decides whether to issue a new [`ScheduleRequest`] to the scheduler
+//! policy resolved once, by name, through [`crate::scheduler::registry`].
 //!
 //! ## Policies
 //!
@@ -27,9 +29,11 @@
 //! ## Breach conditions (reactive)
 //!
 //! 1. **Dead machine** — a [`traces::ClusterEvent::Leave`] for a machine
-//!    in the cluster forces an immediate reschedule through the
-//!    [`crate::scheduler::reschedule::after_failure`] path (survivor
-//!    cluster + fresh schedule in one step), regardless of cooldown.
+//!    in the cluster forces an immediate reschedule through
+//!    [`crate::scheduler::reschedule::after_failure`] — an
+//!    excluded-machine request on the *current* problem (zero tasks land
+//!    on the dead machine), after which the machine is dropped from the
+//!    tracked world — regardless of cooldown.
 //! 2. **Infeasible placement** — the offered rate exceeds the current
 //!    placement's max stable rate (tuple-overloading state, including
 //!    capacity 0 when a component lost all instances).  Reschedules
@@ -60,9 +64,8 @@ use std::collections::HashMap;
 
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::{Cluster, Machine};
-use crate::predict::{Evaluator, Placement};
-use crate::scheduler::hetero::HeteroScheduler;
-use crate::scheduler::{reschedule, Schedule, Scheduler};
+use crate::predict::Placement;
+use crate::scheduler::{registry, reschedule, PolicyParams, Problem, Schedule, ScheduleRequest, Scheduler};
 use crate::topology::Topology;
 use crate::{Error, Result};
 
@@ -105,8 +108,10 @@ pub struct ControllerConfig {
     pub migration_cost: f64,
     /// Virtual length of one trace step, seconds.
     pub step_seconds: f64,
-    /// The scheduler reschedules go through.
-    pub scheduler: HeteroScheduler,
+    /// Registry name of the scheduler reschedules go through.
+    pub scheduler_policy: String,
+    /// Tunables handed to the policy factory.
+    pub scheduler_params: PolicyParams,
 }
 
 impl Default for ControllerConfig {
@@ -117,13 +122,21 @@ impl Default for ControllerConfig {
             band_hi: 0.9,
             migration_cost: 0.02,
             step_seconds: 1.0,
-            scheduler: HeteroScheduler::default(),
+            scheduler_policy: "hetero".into(),
+            scheduler_params: PolicyParams::default(),
         }
     }
 }
 
+impl ControllerConfig {
+    /// Resolve the configured scheduler through the registry.
+    pub fn scheduler(&self) -> Result<Box<dyn Scheduler>> {
+        registry::create(&self.scheduler_policy, &self.scheduler_params)
+    }
+}
+
 /// Cluster + profiles as they evolve over the trace; `version` bumps on
-/// every applied event and keys the schedule/evaluator caches.
+/// every applied event and keys the problem/schedule caches.
 #[derive(Debug, Clone)]
 struct World {
     cluster: Cluster,
@@ -147,14 +160,10 @@ impl World {
         }
     }
 
-    fn adopt_cluster(&mut self, cluster: Cluster) {
-        self.cluster = cluster;
-        self.version += 1;
-    }
-
     /// Apply a Join or Drift event.  Leave is policy-dependent (plain
-    /// removal for static, the failure path for the others) and handled
-    /// by the control loop, not here.  Returns whether anything changed.
+    /// removal for static, the excluded-machine request for the others)
+    /// and handled by the control loop, not here.  Returns whether
+    /// anything changed.
     fn apply(&mut self, ev: &ClusterEvent) -> Result<bool> {
         match ev {
             ClusterEvent::Leave { .. } => Ok(false),
@@ -224,12 +233,12 @@ impl NamedPlacement {
 
     /// Max stable rate of this placement on the current world, 0 when a
     /// component has lost all its instances or the rate is unbounded.
-    fn capacity(&self, ev: &Evaluator, cluster: &Cluster) -> Result<f64> {
-        let p = self.project(cluster);
+    fn capacity(&self, problem: &Problem) -> Result<f64> {
+        let p = self.project(problem.cluster());
         if p.counts().iter().any(|&n| n == 0) {
             return Ok(0.0);
         }
-        ev.max_stable_rate_or_zero(&p)
+        problem.evaluator().max_stable_rate_or_zero(&p)
     }
 }
 
@@ -259,12 +268,17 @@ pub fn run_policy(
     policy: Policy,
     cfg: &ControllerConfig,
 ) -> Result<PolicyReport> {
-    let initial = cfg.scheduler.schedule(top, cluster, profiles)?;
-    run_policy_from(top, cluster, profiles, trace, policy, cfg, initial)
+    let sched = cfg.scheduler()?;
+    let problem = Problem::new(top, cluster, profiles)?;
+    let initial = sched.schedule(&problem, &ScheduleRequest::max_throughput())?;
+    run_policy_from(top, cluster, profiles, trace, policy, cfg, sched.as_ref(), &problem, initial)
 }
 
-/// [`run_policy`] with the day-zero schedule precomputed (so a
-/// multi-policy comparison pays for it once).
+/// [`run_policy`] with the scheduler resolved and the day-zero problem +
+/// schedule precomputed (so a multi-policy comparison pays for them
+/// once).  `day_zero` serves requests until the world first changes;
+/// after that the loop owns a rebuilt [`Problem`] per world version.
+#[allow(clippy::too_many_arguments)]
 fn run_policy_from(
     top: &Topology,
     cluster: &Cluster,
@@ -272,17 +286,18 @@ fn run_policy_from(
     trace: &Trace,
     policy: Policy,
     cfg: &ControllerConfig,
+    sched: &dyn Scheduler,
+    day_zero: &Problem,
     initial: Schedule,
 ) -> Result<PolicyReport> {
-    let sched = &cfg.scheduler;
     let base_rate = initial.rate;
 
     let mut world = World::new(cluster.clone(), profiles.clone());
     let mut np = NamedPlacement::capture(&initial.placement, &world.cluster);
     let mut cur: Schedule = initial;
     let mut scheduled_version = world.version;
-    let mut evaluator = Evaluator::new(top, &world.cluster, &world.profiles)?;
-    let mut evaluator_version = world.version;
+    let mut rebuilt: Option<Problem> = None;
+    let mut problem_version = world.version;
     let mut cooldown = 0usize;
     let mut rep = PolicyReport::new(policy.name());
 
@@ -303,21 +318,22 @@ fn run_policy_from(
                         world.remove_machine(machine);
                     } else {
                         // dead machine: forced breach through the
-                        // failure-rescheduling path (survivors + fresh
-                        // schedule in one step, ignoring cooldown)
-                        let r = reschedule::after_failure(
-                            top,
-                            &world.cluster,
-                            &world.profiles,
-                            &cur,
-                            machine,
-                            sched,
-                        )?;
-                        world.adopt_cluster(r.cluster);
-                        let new_np = NamedPlacement::capture(&r.schedule.placement, &world.cluster);
+                        // failure-rescheduling path — an excluded-machine
+                        // request on the current problem, ignoring
+                        // cooldown; the machine leaves the tracked world
+                        // right after.
+                        if problem_version != world.version {
+                            rebuilt = Some(Problem::new(top, &world.cluster, &world.profiles)?);
+                            problem_version = world.version;
+                        }
+                        let problem = rebuilt.as_ref().unwrap_or(day_zero);
+                        let r = reschedule::after_failure(problem, &cur, machine, sched)?;
+                        let new_np =
+                            NamedPlacement::capture(&r.schedule.placement, &world.cluster);
                         migrated_step += migrated_tasks(&np, &new_np);
                         np = new_np;
                         cur = r.schedule;
+                        world.remove_machine(machine);
                         scheduled_version = world.version;
                         rep.reschedules += 1;
                         resched_step = true;
@@ -330,12 +346,13 @@ fn run_policy_from(
             }
         }
 
-        // 2. refresh the evaluator if the world changed
-        if evaluator_version != world.version {
-            evaluator = Evaluator::new(top, &world.cluster, &world.profiles)?;
-            evaluator_version = world.version;
+        // 2. refresh the cached problem if the world changed
+        if problem_version != world.version {
+            rebuilt = Some(Problem::new(top, &world.cluster, &world.profiles)?);
+            problem_version = world.version;
         }
-        let mut capacity = np.capacity(&evaluator, &world.cluster)?;
+        let problem = rebuilt.as_ref().unwrap_or(day_zero);
+        let mut capacity = np.capacity(problem)?;
 
         // 3. breach detection / scheduling decision
         let dirty = scheduled_version != world.version;
@@ -353,13 +370,13 @@ fn run_policy_from(
         if decide {
             rep.reschedules += 1;
             if dirty {
-                let s = sched.schedule(top, &world.cluster, &world.profiles)?;
+                let s = sched.schedule(problem, &ScheduleRequest::max_throughput())?;
                 let new_np = NamedPlacement::capture(&s.placement, &world.cluster);
                 migrated_step += migrated_tasks(&np, &new_np);
                 np = new_np;
                 cur = s;
                 scheduled_version = world.version;
-                capacity = np.capacity(&evaluator, &world.cluster)?;
+                capacity = np.capacity(problem)?;
                 cooldown = cfg.cooldown_steps;
                 resched_step = true;
             }
@@ -404,7 +421,9 @@ pub fn run_trace(
     policies: &[Policy],
     cfg: &ControllerConfig,
 ) -> Result<ControlReport> {
-    let initial = cfg.scheduler.schedule(top, cluster, profiles)?;
+    let sched = cfg.scheduler()?;
+    let problem = Problem::new(top, cluster, profiles)?;
+    let initial = sched.schedule(&problem, &ScheduleRequest::max_throughput())?;
     let mut out = ControlReport {
         trace: trace.name.clone(),
         seed: trace.seed,
@@ -422,6 +441,8 @@ pub fn run_trace(
             trace,
             p,
             cfg,
+            sched.as_ref(),
+            &problem,
             initial.clone(),
         )?);
     }
@@ -458,6 +479,15 @@ mod tests {
             machine_type: "core-i5".into(),
             factor,
         }
+    }
+
+    #[test]
+    fn unknown_scheduler_policy_rejected() {
+        let (top, cluster, db) = setup();
+        let cfg = ControllerConfig { scheduler_policy: "ghost".into(), ..Default::default() };
+        let trace = manual_trace(vec![step(0, 0.5, vec![])]);
+        let err = run_policy(&top, &cluster, &db, &trace, Policy::Static, &cfg).unwrap_err();
+        assert!(err.to_string().contains("hetero"), "should list valid policies: {err}");
     }
 
     #[test]
@@ -526,10 +556,11 @@ mod tests {
     fn machine_leave_reuses_after_failure_path() {
         let (top, cluster, db) = setup();
         let cfg = ControllerConfig::default();
-        let sched = &cfg.scheduler;
-        let before = sched.schedule(&top, &cluster, &db).unwrap();
-        let expect = reschedule::after_failure(&top, &cluster, &db, &before, "pentium-0", sched)
-            .unwrap();
+        let sched = cfg.scheduler().unwrap();
+        let problem = Problem::new(&top, &cluster, &db).unwrap();
+        let before = sched.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+        let expect =
+            reschedule::after_failure(&problem, &before, "pentium-0", sched.as_ref()).unwrap();
 
         let trace = manual_trace(vec![
             step(0, 0.5, vec![]),
@@ -540,7 +571,7 @@ mod tests {
         assert!(rep.rows[1].rescheduled, "leave forces a reschedule");
         assert_eq!(rep.reschedules, 1);
         // the controller's post-leave capacity is exactly what the
-        // failure path certifies on the survivors
+        // excluded-machine request certifies
         assert!(
             (rep.rows[1].capacity - expect.schedule.rate).abs() < 1e-6,
             "controller capacity {} vs after_failure rate {}",

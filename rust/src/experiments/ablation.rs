@@ -12,9 +12,7 @@
 
 use crate::cluster::presets;
 use crate::cluster::profile::{ProfileDb, TaskProfile};
-use crate::predict::Evaluator;
-use crate::scheduler::hetero::HeteroScheduler;
-use crate::scheduler::Scheduler;
+use crate::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
 use crate::topology::benchmarks;
 use crate::Result;
 
@@ -51,12 +49,16 @@ pub fn run(_fast: bool) -> Result<ExperimentResult> {
     );
     let types = ["pentium", "core-i3", "core-i5"];
     let tasks = ["spout", "lowCompute", "midCompute", "highCompute"];
+    let req = ScheduleRequest::max_throughput();
+    let hetero = registry::create("hetero", &PolicyParams::default())?;
+    let no_refine_sched =
+        registry::create("hetero", &PolicyParams { refine: false, ..Default::default() })?;
     for top in benchmarks::micro() {
-        let ev = Evaluator::new(&top, &cluster, &db)?;
+        let problem = Problem::new(&top, &cluster, &db)?;
+        let ev = problem.evaluator();
 
-        let full = HeteroScheduler::default().schedule(&top, &cluster, &db)?;
-        let no_refine = HeteroScheduler { refine: false, ..Default::default() }
-            .schedule(&top, &cluster, &db)?;
+        let full = hetero.schedule(&problem, &req)?;
+        let no_refine = no_refine_sched.schedule(&problem, &req)?;
 
         // same placement, weighted-grouping semantics
         let weighted_rate = ev.max_stable_rate_weighted(&full.placement)?;
@@ -66,7 +68,8 @@ pub fn run(_fast: bool) -> Result<ExperimentResult> {
         // schedule decided with a heterogeneity-blind profile, evaluated
         // against the true machine costs
         let blind_db = blind_profiles(&db, &types, &tasks);
-        let blind = HeteroScheduler::default().schedule(&top, &cluster, &blind_db)?;
+        let blind_problem = Problem::new(&top, &cluster, &blind_db)?;
+        let blind = hetero.schedule(&blind_problem, &req)?;
         let blind_true_rate = ev.max_stable_rate(&blind.placement)?;
         let blind_thpt = blind_true_rate.min(1e12) * gain_sum;
 

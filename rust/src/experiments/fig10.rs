@@ -9,10 +9,9 @@
 
 use crate::cluster::scenarios::{Scenario, SCENARIOS};
 use crate::scheduler::default_rr::DefaultScheduler;
-use crate::scheduler::hetero::HeteroScheduler;
-use crate::scheduler::Scheduler;
+use crate::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
 use crate::simulator;
-use crate::topology::{benchmarks, Etg};
+use crate::topology::Etg;
 use crate::Result;
 
 use super::{f1, f2, pct, ExperimentResult};
@@ -51,9 +50,10 @@ impl ScaleCell {
 
 fn run_cell(s: &Scenario, topology: &str) -> Result<ScaleCell> {
     let (cluster, db) = s.build();
-    let top = benchmarks::by_name(topology)
-        .ok_or_else(|| crate::Error::Config(format!("unknown topology {topology}")))?;
-    let ours = HeteroScheduler::default().schedule(&top, &cluster, &db)?;
+    let top = crate::resolve::topology(topology)?;
+    let problem = Problem::new(&top, &cluster, &db)?;
+    let hetero = registry::create("hetero", &PolicyParams::default())?;
+    let ours = hetero.schedule(&problem, &ScheduleRequest::max_throughput())?;
     let etg = Etg { counts: ours.placement.counts() };
     let def_placement = DefaultScheduler::assign(&top, &cluster, &etg)?;
 

@@ -9,9 +9,7 @@
 //! placements of that ETG.
 
 use crate::cluster::presets;
-use crate::scheduler::default_rr::DefaultScheduler;
-use crate::scheduler::optimal::{OptimalScheduler, SearchSpace};
-use crate::scheduler::Scheduler;
+use crate::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
 use crate::topology::benchmarks;
 use crate::Result;
 
@@ -24,16 +22,25 @@ pub fn run(fast: bool) -> Result<ExperimentResult> {
         "default vs optimal throughput, minimal ETG (tuples/s, model)",
         &["topology", "default", "optimal", "gap"],
     );
-    for top in benchmarks::micro() {
-        let def = DefaultScheduler::minimal().schedule(&top, &cluster, &db)?;
-        // one instance per component: search placements only
-        let opt = OptimalScheduler {
+    // §3 setting: both policies place the bare user graph (one instance
+    // per component); optimal searches placements only
+    let def_sched = registry::create(
+        "default",
+        &PolicyParams { minimal_etg: true, ..Default::default() },
+    )?;
+    let opt_sched = registry::create(
+        "optimal",
+        &PolicyParams {
             max_instances_per_component: 1,
-            space: SearchSpace::Exhaustive,
             seed_heuristics: false,
             ..Default::default()
-        }
-        .schedule(&top, &cluster, &db)?;
+        },
+    )?;
+    let req = ScheduleRequest::max_throughput();
+    for top in benchmarks::micro() {
+        let problem = Problem::new(&top, &cluster, &db)?;
+        let def = def_sched.schedule(&problem, &req)?;
+        let opt = opt_sched.schedule(&problem, &req)?;
         let gap = (opt.eval.throughput - def.eval.throughput) / def.eval.throughput * 100.0;
         out.row(vec![
             top.name.clone(),

@@ -9,10 +9,8 @@
 //! run to see how close its chosen pair gets to the best pair.
 
 use crate::cluster::presets;
-use crate::predict::Evaluator;
 use crate::scheduler::default_rr::DefaultScheduler;
-use crate::scheduler::hetero::HeteroScheduler;
-use crate::scheduler::Scheduler;
+use crate::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
 use crate::topology::{benchmarks, Etg, Topology};
 use crate::Result;
 
@@ -32,7 +30,8 @@ pub struct PairSweep {
 
 fn sweep(top: &Topology, max_n: usize) -> Result<PairSweep> {
     let (cluster, db) = presets::paper_cluster();
-    let ev = Evaluator::new(top, &cluster, &db)?;
+    let problem = Problem::new(top, &cluster, &db)?;
+    let ev = problem.evaluator();
     let mut grid = Vec::new();
     let mut best = (1, 1, 0.0f64);
     for x in 1..=max_n {
@@ -49,7 +48,8 @@ fn sweep(top: &Topology, max_n: usize) -> Result<PairSweep> {
     // The proposed algorithm's chosen counts, credited with its own
     // placement (the algorithm outputs counts *and* assignment; RR'ing
     // its counts would punish it for the default scheduler's blindness).
-    let ours_sched = HeteroScheduler::default().schedule(top, &cluster, &db)?;
+    let hetero = registry::create("hetero", &PolicyParams::default())?;
+    let ours_sched = hetero.schedule(&problem, &ScheduleRequest::max_throughput())?;
     let counts = ours_sched.placement.counts();
     let (ox, oy) = (counts[1], counts[2]);
     let ours_thpt = ev.best_throughput(&ours_sched.placement)?;

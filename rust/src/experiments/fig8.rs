@@ -11,11 +11,8 @@
 
 use crate::cluster::presets;
 use crate::engine::{self, EngineConfig};
-use crate::scheduler::default_rr::DefaultScheduler;
-use crate::scheduler::hetero::HeteroScheduler;
-use crate::scheduler::optimal::OptimalScheduler;
-use crate::scheduler::{Schedule, Scheduler};
-use crate::topology::{benchmarks, Etg};
+use crate::scheduler::{registry, PolicyParams, Problem, Schedule, ScheduleRequest};
+use crate::topology::benchmarks;
 use crate::Result;
 
 use super::{f1, pct, ExperimentResult};
@@ -45,12 +42,16 @@ pub fn compare(topology: &str, fast: bool) -> Result<(Vec<Cell>, Vec<Schedule>)>
         EngineConfig::default()
     };
 
-    let ours = HeteroScheduler::default().schedule(&top, &cluster, &db)?;
-    let etg = Etg { counts: ours.placement.counts() };
-    let def = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &db)?;
-    let max_inst = if fast { 2 } else { 3 };
-    let opt = OptimalScheduler { max_instances_per_component: max_inst, ..Default::default() }
-        .schedule(&top, &cluster, &db)?;
+    let problem = Problem::new(&top, &cluster, &db)?;
+    let req = ScheduleRequest::max_throughput();
+    let params = PolicyParams {
+        max_instances_per_component: if fast { 2 } else { 3 },
+        ..Default::default()
+    };
+    // "default" places the proposed ETG round-robin (§6.3 protocol)
+    let ours = registry::create("hetero", &params)?.schedule(&problem, &req)?;
+    let def = registry::create("default", &params)?.schedule(&problem, &req)?;
+    let opt = registry::create("optimal", &params)?.schedule(&problem, &req)?;
 
     let mut cells = Vec::new();
     for (name, s) in [("default", &def), ("proposed", &ours), ("optimal", &opt)] {

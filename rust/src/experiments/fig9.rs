@@ -8,11 +8,8 @@
 
 use crate::cluster::presets;
 use crate::engine::{self, EngineConfig};
-use crate::scheduler::default_rr::DefaultScheduler;
-use crate::scheduler::hetero::HeteroScheduler;
-use crate::scheduler::optimal::OptimalScheduler;
-use crate::scheduler::Scheduler;
-use crate::topology::{benchmarks, Etg};
+use crate::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
+use crate::topology::benchmarks;
 use crate::Result;
 
 use super::{f1, ExperimentResult};
@@ -40,13 +37,16 @@ pub fn run(fast: bool) -> Result<ExperimentResult> {
         &headers,
     );
 
+    let params = PolicyParams {
+        max_instances_per_component: if fast { 2 } else { 3 },
+        ..Default::default()
+    };
+    let req = ScheduleRequest::max_throughput();
     for top in benchmarks::micro() {
-        let ours = HeteroScheduler::default().schedule(&top, &cluster, &db)?;
-        let etg = Etg { counts: ours.placement.counts() };
-        let def = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &db)?;
-        let max_inst = if fast { 2 } else { 3 };
-        let opt = OptimalScheduler { max_instances_per_component: max_inst, ..Default::default() }
-            .schedule(&top, &cluster, &db)?;
+        let problem = Problem::new(&top, &cluster, &db)?;
+        let ours = registry::create("hetero", &params)?.schedule(&problem, &req)?;
+        let def = registry::create("default", &params)?.schedule(&problem, &req)?;
+        let opt = registry::create("optimal", &params)?.schedule(&problem, &req)?;
         for (name, s) in [("default", &def), ("proposed", &ours), ("optimal", &opt)] {
             let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate, &cfg)?;
             let mut row = vec![top.name.clone(), name.to_string()];

@@ -25,17 +25,47 @@
 //!
 //! ## Quickstart
 //!
+//! Scheduling is one API everywhere: build a [`scheduler::Problem`]
+//! (the topology + cluster + profiles triple, validated once, caching
+//! the expanded evaluation tables), resolve a policy by name through
+//! [`scheduler::registry`], and issue a [`scheduler::ScheduleRequest`]
+//! (an objective plus constraints):
+//!
 //! ```no_run
 //! use hstorm::cluster::presets;
-//! use hstorm::scheduler::{hetero::HeteroScheduler, Scheduler};
+//! use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
 //! use hstorm::topology::benchmarks;
 //!
 //! let top = benchmarks::linear();
 //! let (cluster, profiles) = presets::paper_cluster();
-//! let sched = HeteroScheduler::default();
-//! let out = sched.schedule(&top, &cluster, &profiles).unwrap();
-//! println!("rate={} thpt={}", out.rate, out.eval.throughput);
+//! let problem = Problem::new(&top, &cluster, &profiles).unwrap();
+//! let sched = registry::create("hetero", &PolicyParams::default()).unwrap();
+//! let out = sched.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+//! println!("rate={} thpt={} [{}]", out.rate, out.eval.throughput, out.provenance.render());
 //! ```
+//!
+//! Constraints ride on the request — rescheduling around a drained
+//! machine is the same call with that machine excluded:
+//!
+//! ```no_run
+//! # use hstorm::cluster::presets;
+//! # use hstorm::scheduler::{registry, Constraints, Objective, PolicyParams, Problem, ScheduleRequest};
+//! # use hstorm::topology::benchmarks;
+//! # let top = benchmarks::linear();
+//! # let (cluster, profiles) = presets::paper_cluster();
+//! # let problem = Problem::new(&top, &cluster, &profiles).unwrap();
+//! # let sched = registry::create("hetero", &PolicyParams::default()).unwrap();
+//! let req = ScheduleRequest::new(Objective::MaxThroughput)
+//!     .with_constraints(Constraints::new().exclude_machine("i3-0").reserve_headroom(10.0));
+//! let out = sched.schedule(&problem, &req).unwrap();
+//! assert_eq!(out.placement.tasks_on(1), 0); // nothing lands on i3-0
+//! ```
+//!
+//! Objectives beyond the paper's max-throughput:
+//! `Objective::MinMachinesAtRate(r)` packs the fewest machines that
+//! still sustain `r` tuples/s, `Objective::BalancedUtilization` breaks
+//! throughput ties toward the smallest utilization spread — see the
+//! [`scheduler::request`] module docs for exact semantics.
 
 pub mod cluster;
 pub mod config;
@@ -46,6 +76,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod predict;
 pub mod profiling;
+pub mod resolve;
 pub mod runtime;
 pub mod scheduler;
 pub mod simulator;

@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! hstorm schedule --topology linear [--scenario 1|--paper-cluster] \
-//!                 [--scheduler hetero|default|optimal] [--pjrt] [--r0 8]
+//!                 [--scheduler hetero|default|optimal] [--objective max-throughput] \
+//!                 [--exclude m1,m2] [--headroom 10] [--pjrt] [--r0 8]
+//! hstorm schedule --list-policies
 //! hstorm run      --topology linear [--rate 100] [--seconds 4] [--pjrt-compute]
 //! hstorm simulate --topology linear --scenario 2
 //! hstorm control  --trace diurnal --scenario 2 [--policy reactive] [--steps 600]
@@ -13,18 +15,16 @@
 
 use std::process::ExitCode;
 
-use hstorm::cluster::{presets, scenarios};
 use hstorm::controller::{self, ControllerConfig, Policy};
 use hstorm::engine::{self, ComputeMode, EngineConfig};
 use hstorm::experiments;
 use hstorm::profiling;
+use hstorm::resolve;
 use hstorm::runtime::scorer::PjRtScorer;
 use hstorm::runtime::PjRtRuntime;
-use hstorm::scheduler::default_rr::DefaultScheduler;
-use hstorm::scheduler::hetero::HeteroScheduler;
-use hstorm::scheduler::optimal::OptimalScheduler;
-use hstorm::scheduler::{Schedule, Scheduler};
-use hstorm::topology::benchmarks;
+use hstorm::scheduler::{
+    registry, Constraints, Objective, PolicyParams, Problem, Schedule, ScheduleRequest,
+};
 use hstorm::util::cli::Args;
 use hstorm::util::json;
 use hstorm::{Error, Result};
@@ -32,23 +32,35 @@ use hstorm::{Error, Result};
 const VALUE_FLAGS: &[&str] = &[
     "topology", "scenario", "scheduler", "r0", "rate", "seconds", "task", "machine", "json",
     "config", "max-instances", "time-scale", "trace", "steps", "seed", "policy", "cooldown",
+    "objective", "exclude", "headroom",
 ];
-const BOOL_FLAGS: &[&str] = &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help"];
+const BOOL_FLAGS: &[&str] = &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies"];
 
 const USAGE: &str = "hstorm — heterogeneity-aware stream scheduling (Nasiri et al. 2020 repro)
 
 commands:
-  schedule  --topology T [--scenario 1..3] [--scheduler hetero|default|optimal] [--pjrt] [--r0 8]
+  schedule  --topology T [--scenario 1..3] [--scheduler hetero|default|optimal]
+            [--objective max-throughput|min-machines:RATE|balanced]
+            [--exclude m1,m2] [--headroom PCT] [--pjrt] [--r0 8]
+            [--max-instances 3] | --list-policies
   run       --topology T [--rate R] [--seconds S] [--time-scale X] [--pjrt-compute]
   simulate  --topology T [--scenario 1..3] [--scheduler ...]
   control   --trace constant|diurnal|ramp|bursty [--topology T] [--scenario 1..3]
-            [--policy static|reactive|oracle|all] [--steps 600] [--seed 42]
-            [--cooldown 10] [--json out.json]
+            [--policy static|reactive|oracle|all] [--scheduler hetero|default|optimal]
+            [--steps 600] [--seed 42] [--cooldown 10] [--json out.json]
   profile   [--task highCompute] [--machine pentium]
   bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|all [--fast] [--json out.json]
   config    --config exp.json
 
 topologies: linear diamond star rolling-count unique-visitor
+
+scheduling is one API everywhere: a Problem (topology + cluster +
+profiles, validated once) scheduled under a ScheduleRequest (objective +
+constraints), by a policy resolved from the registry —
+`--list-policies` prints the registered names.  --exclude reschedules
+around drained machines (zero tasks land there); --headroom keeps CPU
+budget free on every machine; min-machines:RATE packs the fewest
+machines that still sustain RATE tuple/s.
 
 control replays a workload trace over virtual time (no sleeping) and
 compares how a static schedule, the reactive controller and a
@@ -84,33 +96,41 @@ fn run(argv: Vec<String>) -> Result<()> {
     }
 }
 
-fn load_cluster(
-    args: &Args,
-) -> Result<(hstorm::cluster::Cluster, hstorm::cluster::profile::ProfileDb)> {
-    if let Some(s) = args.get("scenario") {
-        let id: usize = s.parse().map_err(|_| {
-            Error::Config(format!(
-                "--scenario: '{s}' is not a number (valid: {})",
-                scenarios::describe_all()
-            ))
-        })?;
-        let sc = scenarios::by_id(id).ok_or_else(|| {
-            Error::Config(format!(
-                "unknown scenario '{id}' (valid: {})",
-                scenarios::describe_all()
-            ))
-        })?;
-        Ok(sc.build())
-    } else {
-        Ok(presets::paper_cluster())
-    }
+/// Policy tunables from the command line.
+fn params_from_args(args: &Args) -> Result<PolicyParams> {
+    Ok(PolicyParams {
+        r0: args.get_f64("r0", 8.0)?,
+        max_instances_per_component: args.get_usize("max-instances", 3)?,
+        ..Default::default()
+    })
 }
 
-fn load_topology(args: &Args) -> Result<hstorm::topology::Topology> {
-    let name = args.get_or("topology", "linear");
-    benchmarks::by_name(name).ok_or_else(|| {
-        Error::Config(format!("unknown topology '{name}' (valid: {})", benchmarks::NAMES.join("|")))
-    })
+/// Objective + constraints from the command line.
+fn request_from_args(args: &Args) -> Result<ScheduleRequest> {
+    let objective = match args.get("objective") {
+        None | Some("max-throughput") => Objective::MaxThroughput,
+        Some("balanced") | Some("balanced-utilization") => Objective::BalancedUtilization,
+        Some(o) => match o.strip_prefix("min-machines:") {
+            Some(rate) => Objective::MinMachinesAtRate(rate.parse().map_err(|_| {
+                Error::Config(format!("--objective min-machines:RATE: '{rate}' is not a number"))
+            })?),
+            None => {
+                return Err(Error::Config(format!(
+                    "unknown objective '{o}' (valid: max-throughput|min-machines:RATE|balanced)"
+                )))
+            }
+        },
+    };
+    let mut constraints = Constraints::new();
+    if let Some(list) = args.get("exclude") {
+        constraints = constraints
+            .exclude_machines(list.split(',').map(str::trim).filter(|s| !s.is_empty()));
+    }
+    let headroom = args.get_f64("headroom", 0.0)?;
+    if headroom != 0.0 {
+        constraints = constraints.reserve_headroom(headroom);
+    }
+    Ok(ScheduleRequest::new(objective).with_constraints(constraints))
 }
 
 fn make_schedule(
@@ -119,41 +139,13 @@ fn make_schedule(
     cluster: &hstorm::cluster::Cluster,
     db: &hstorm::cluster::profile::ProfileDb,
 ) -> Result<Schedule> {
-    let which = args.get_or("scheduler", "hetero");
-    let r0 = args.get_f64("r0", 8.0)?;
-    let use_pjrt = args.has("pjrt");
-    match which {
-        "hetero" => {
-            let hs = HeteroScheduler { r0, ..Default::default() };
-            if use_pjrt {
-                let rt = PjRtRuntime::cpu_default()?;
-                let scorer = PjRtScorer::new(&rt, top, cluster, db)?;
-                hs.schedule_with_scorer(top, cluster, db, &scorer)
-            } else {
-                hs.schedule(top, cluster, db)
-            }
-        }
-        "default" => {
-            // default places the proposed ETG (the paper's fair-comparison
-            // protocol: counts come from our algorithm, placement is RR)
-            let ours = HeteroScheduler { r0, ..Default::default() }.schedule(top, cluster, db)?;
-            let etg = hstorm::topology::Etg { counts: ours.placement.counts() };
-            DefaultScheduler::with_etg(etg).schedule(top, cluster, db)
-        }
-        "optimal" => {
-            let max_inst = args.get_usize("max-instances", 3)?;
-            let os =
-                OptimalScheduler { max_instances_per_component: max_inst, ..Default::default() };
-            if use_pjrt {
-                let rt = PjRtRuntime::cpu_default()?;
-                let scorer = PjRtScorer::new(&rt, top, cluster, db)?;
-                os.schedule_with_scorer(top, cluster, db, &scorer)
-            } else {
-                os.schedule(top, cluster, db)
-            }
-        }
-        other => Err(Error::Config(format!("unknown scheduler '{other}'"))),
+    let mut problem = Problem::new(top, cluster, db)?;
+    if args.has("pjrt") {
+        let rt = PjRtRuntime::cpu_default()?;
+        problem = problem.with_scorer(Box::new(PjRtScorer::new(&rt, top, cluster, db)?));
     }
+    let sched = resolve::policy(args.get_or("scheduler", "hetero"), &params_from_args(args)?)?;
+    sched.schedule(&problem, &request_from_args(args)?)
 }
 
 fn print_schedule(
@@ -164,6 +156,7 @@ fn print_schedule(
     println!("scheduler certified rate : {:.1} tuple/s", s.rate);
     println!("predicted throughput     : {:.1} tuple/s", s.eval.throughput);
     println!("total tasks              : {}", s.placement.total_tasks());
+    println!("provenance               : {}", s.provenance.render());
     println!("assignment:");
     print!("{}", s.describe(top, cluster));
     println!("predicted machine utilization:");
@@ -176,8 +169,12 @@ fn print_schedule(
 }
 
 fn cmd_schedule(args: &Args) -> Result<()> {
-    let top = load_topology(args)?;
-    let (cluster, db) = load_cluster(args)?;
+    if args.has("list-policies") {
+        print!("{}", registry::describe_all());
+        return Ok(());
+    }
+    let top = resolve::topology(args.get_or("topology", "linear"))?;
+    let (cluster, db) = resolve::cluster(args.get("scenario"))?;
     let s = make_schedule(args, &top, &cluster, &db)?;
     println!(
         "topology: {}   cluster: {} ({} machines)",
@@ -190,8 +187,8 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let top = load_topology(args)?;
-    let (cluster, db) = load_cluster(args)?;
+    let top = resolve::topology(args.get_or("topology", "linear"))?;
+    let (cluster, db) = resolve::cluster(args.get("scenario"))?;
     let s = make_schedule(args, &top, &cluster, &db)?;
     let rate = args.get_f64("rate", s.rate)?;
     let seconds = args.get_f64("seconds", 4.0)?;
@@ -225,8 +222,8 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let top = load_topology(args)?;
-    let (cluster, db) = load_cluster(args)?;
+    let top = resolve::topology(args.get_or("topology", "linear"))?;
+    let (cluster, db) = resolve::cluster(args.get("scenario"))?;
     let s = make_schedule(args, &top, &cluster, &db)?;
     let rep = hstorm::simulator::simulate(&top, &cluster, &db, &s.placement, None)?;
     println!("simulated rate        : {:.1} tuple/s", rep.rate);
@@ -245,8 +242,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_control(args: &Args) -> Result<()> {
-    let top = load_topology(args)?;
-    let (cluster, db) = load_cluster(args)?;
+    let top = resolve::topology(args.get_or("topology", "linear"))?;
+    let (cluster, db) = resolve::cluster(args.get("scenario"))?;
     let steps = args.get_usize("steps", 600)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let trace_name = args.get_or("trace", "diurnal");
@@ -267,8 +264,11 @@ fn cmd_control(args: &Args) -> Result<()> {
             ))
         })?]
     };
+    // the scheduler name is validated by the registry inside the run
     let cfg = ControllerConfig {
         cooldown_steps: args.get_usize("cooldown", ControllerConfig::default().cooldown_steps)?,
+        scheduler_policy: args.get_or("scheduler", "hetero").to_string(),
+        scheduler_params: params_from_args(args)?,
         ..Default::default()
     };
     println!(
@@ -288,7 +288,7 @@ fn cmd_control(args: &Args) -> Result<()> {
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {
-    let (cluster, truth) = presets::paper_cluster();
+    let (cluster, truth) = resolve::cluster(None)?;
     let task = args.get_or("task", "highCompute");
     let machine = args.get_or("machine", "pentium");
     let cfg = EngineConfig::default();
@@ -351,16 +351,12 @@ fn cmd_config(args: &Args) -> Result<()> {
     let top = cfg.topology.to_topology()?;
     let cluster = cfg.cluster.to_cluster()?;
     let db = cfg.profile_db();
-    db.check_coverage(&top, &cluster)?;
     println!("loaded experiment: topology '{}' on cluster '{}'", top.name, cluster.name);
-    let s = match cfg.scheduler.as_str() {
-        "hetero" => {
-            HeteroScheduler { r0: cfg.r0, ..Default::default() }.schedule(&top, &cluster, &db)?
-        }
-        "default" => DefaultScheduler::minimal().schedule(&top, &cluster, &db)?,
-        "optimal" => OptimalScheduler::default().schedule(&top, &cluster, &db)?,
-        other => return Err(Error::Config(format!("unknown scheduler '{other}' in config"))),
-    };
+    // same resolver as the CLI's --scheduler: names cannot drift
+    let problem = Problem::new(&top, &cluster, &db)?;
+    let params = PolicyParams { r0: cfg.r0, ..Default::default() };
+    let sched = resolve::policy(&cfg.scheduler, &params)?;
+    let s = sched.schedule(&problem, &ScheduleRequest::max_throughput())?;
     print_schedule(&s, &top, &cluster);
     Ok(())
 }

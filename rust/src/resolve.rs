@@ -1,0 +1,83 @@
+//! Shared name → object resolvers for every user-facing entry point.
+//!
+//! The CLI (`hstorm schedule --scheduler ... --topology ... --scenario
+//! ...`) and the JSON config runner (`"scheduler": ...`) used to each
+//! carry their own lookup-and-error code, which drifted independently.
+//! Both now resolve through this module: topology names via
+//! [`crate::topology::benchmarks`], cluster scenarios via
+//! [`crate::cluster::scenarios`], and scheduler policies via
+//! [`crate::scheduler::registry`] — one spelling of every name, one
+//! error message listing the valid options.
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::{presets, scenarios, Cluster};
+use crate::scheduler::{registry, PolicyParams, Scheduler};
+use crate::topology::{benchmarks, Topology};
+use crate::{Error, Result};
+
+/// Resolve a benchmark topology by name.
+pub fn topology(name: &str) -> Result<Topology> {
+    benchmarks::by_name(name).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown topology '{name}' (valid: {})",
+            benchmarks::NAMES.join("|")
+        ))
+    })
+}
+
+/// Resolve a cluster: `Some(scenario_id)` picks a Table-4 scenario,
+/// `None` the paper's Table-2 cluster.
+pub fn cluster(scenario: Option<&str>) -> Result<(Cluster, ProfileDb)> {
+    match scenario {
+        Some(s) => {
+            let id: usize = s.parse().map_err(|_| {
+                Error::Config(format!(
+                    "--scenario: '{s}' is not a number (valid: {})",
+                    scenarios::describe_all()
+                ))
+            })?;
+            let sc = scenarios::by_id(id).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown scenario '{id}' (valid: {})",
+                    scenarios::describe_all()
+                ))
+            })?;
+            Ok(sc.build())
+        }
+        None => Ok(presets::paper_cluster()),
+    }
+}
+
+/// Resolve a scheduler policy by registry name (or alias).
+pub fn policy(name: &str, params: &PolicyParams) -> Result<Box<dyn Scheduler>> {
+    registry::create(name, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_by_name_or_listed_error() {
+        assert_eq!(topology("linear").unwrap().name, "linear");
+        let err = topology("moebius").unwrap_err().to_string();
+        assert!(err.contains("linear"), "{err}");
+    }
+
+    #[test]
+    fn cluster_default_and_scenarios() {
+        let (c, _) = cluster(None).unwrap();
+        assert_eq!(c.n_machines(), 3);
+        let (c1, _) = cluster(Some("1")).unwrap();
+        assert!(c1.n_machines() > 3);
+        assert!(cluster(Some("99")).is_err());
+        assert!(cluster(Some("one")).is_err());
+    }
+
+    #[test]
+    fn policy_resolves_via_registry() {
+        let p = policy("hetero", &PolicyParams::default()).unwrap();
+        assert_eq!(p.name(), "hetero");
+        assert!(policy("bogus", &PolicyParams::default()).is_err());
+    }
+}

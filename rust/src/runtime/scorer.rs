@@ -263,6 +263,14 @@ impl NativeScorer {
         Ok(NativeScorer { ev: Evaluator::new(top, cluster, profiles)? })
     }
 
+    /// Wrap an already-built (possibly capacity-adjusted) evaluator —
+    /// the path [`crate::scheduler::Problem`] uses so constrained
+    /// requests score against headroom-reduced budgets without
+    /// re-expanding profiles.
+    pub fn from_evaluator(ev: Evaluator) -> Self {
+        NativeScorer { ev }
+    }
+
     pub fn evaluator(&self) -> &Evaluator {
         &self.ev
     }

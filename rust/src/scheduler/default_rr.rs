@@ -6,42 +6,81 @@
 //! Round-Robin over the available machines, "regardless of their
 //! computing power" — exactly the behavior Fig. 2c illustrates.
 //!
-//! The counts are an *input* here (in Storm the user sets them).  For the
-//! paper's comparisons the counts come from the proposed scheduler's ETG
-//! (the methodology of §6.3: "we first run our algorithm to determine the
-//! number of instances... now we can fairly compare only the
-//! effectiveness of scheduling policies").
+//! Where the counts come from is the [`EtgSource`]:
+//!
+//! * [`EtgSource::Proposed`] — the paper's §6.3 fair-comparison
+//!   protocol ("we first run our algorithm to determine the number of
+//!   instances... now we can fairly compare only the effectiveness of
+//!   scheduling policies"): the proposed scheduler picks the counts,
+//!   Round-Robin places them.  This is what the registry's `default`
+//!   policy builds.
+//! * [`EtgSource::Minimal`] — one instance per component, matching a
+//!   user who submits the bare user graph (the §3 motivation setting).
+//! * [`EtgSource::Fixed`] — caller-provided counts.
+//!
+//! Constraints are honored by the assignment itself: the Round-Robin
+//! deal skips machines a component may not use, and instance caps clamp
+//! the ETG before placement.
 
-use super::{finish, Schedule, Scheduler};
-use crate::cluster::profile::ProfileDb;
+use super::problem::ResolvedConstraints;
+use super::{apply_objective, finish, Problem, Provenance, Schedule, ScheduleRequest, Scheduler};
 use crate::cluster::Cluster;
-use crate::predict::{Evaluator, Placement};
+use crate::predict::Placement;
+use crate::scheduler::hetero::HeteroScheduler;
 use crate::topology::{Etg, Topology};
 use crate::{Error, Result};
+
+/// Where the instance counts the Round-Robin places come from.
+#[derive(Debug, Clone)]
+pub enum EtgSource {
+    /// One instance per component (bare user graph).
+    Minimal,
+    /// Counts chosen by the proposed scheduler (fair-comparison
+    /// protocol); the inner scheduler runs under the same constraints.
+    Proposed(HeteroScheduler),
+    /// Caller-provided counts.
+    Fixed(Etg),
+}
 
 /// Round-Robin baseline.
 #[derive(Debug, Clone)]
 pub struct DefaultScheduler {
-    /// Instance counts to place.  `None` = minimal ETG (one per
-    /// component), matching a user who submits the bare user graph.
-    pub etg: Option<Etg>,
+    pub etg: EtgSource,
 }
 
 impl DefaultScheduler {
     /// Place the minimal ETG (1 instance per component).
     pub fn minimal() -> Self {
-        DefaultScheduler { etg: None }
+        DefaultScheduler { etg: EtgSource::Minimal }
+    }
+
+    /// Place the ETG the proposed scheduler chooses (§6.3 protocol).
+    pub fn proposed(inner: HeteroScheduler) -> Self {
+        DefaultScheduler { etg: EtgSource::Proposed(inner) }
     }
 
     /// Place a caller-provided ETG.
     pub fn with_etg(etg: Etg) -> Self {
-        DefaultScheduler { etg: Some(etg) }
+        DefaultScheduler { etg: EtgSource::Fixed(etg) }
     }
 
     /// The pure assignment step, usable without profiles: executors are
     /// enumerated component-major (Storm's executor list order) and dealt
     /// to machines cyclically.
     pub fn assign(top: &Topology, cluster: &Cluster, etg: &Etg) -> Result<Placement> {
+        let rc = ResolvedConstraints::unconstrained(top.n_components(), cluster.n_machines());
+        Self::assign_constrained(top, cluster, etg, &rc)
+    }
+
+    /// [`assign`](Self::assign) under constraints: the cyclic deal skips
+    /// machines the component may not use (excluded or pinned away), so
+    /// the next allowed machine in Round-Robin order takes the executor.
+    pub fn assign_constrained(
+        top: &Topology,
+        cluster: &Cluster,
+        etg: &Etg,
+        rc: &ResolvedConstraints,
+    ) -> Result<Placement> {
         if etg.counts.len() != top.n_components() {
             return Err(Error::Schedule(format!(
                 "ETG has {} counts for {} components",
@@ -54,27 +93,82 @@ impl DefaultScheduler {
         let mut next = 0usize;
         for (c, &count) in etg.counts.iter().enumerate() {
             for _ in 0..count {
-                p.x[c][next % m] += 1;
-                next += 1;
+                let mut placed = false;
+                for _ in 0..m {
+                    let cand = next % m;
+                    next += 1;
+                    if rc.allows(c, cand) {
+                        p.x[c][cand] += 1;
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    return Err(Error::Schedule(format!(
+                        "component {c}: no allowed machine for Round-Robin placement",
+                    )));
+                }
             }
         }
         Ok(p)
+    }
+
+    /// Resolve this policy's ETG for a request, clamping counts to the
+    /// constraints' per-component instance caps.  Returns the counts and
+    /// the number of placements any inner scheduler evaluated.
+    fn resolve_etg(
+        &self,
+        problem: &Problem,
+        req: &ScheduleRequest,
+        rc: &ResolvedConstraints,
+    ) -> Result<(Etg, u64)> {
+        let (mut etg, inner_evals) = match &self.etg {
+            EtgSource::Minimal => (Etg::minimal(problem.topology()), 0),
+            EtgSource::Fixed(e) => (e.clone(), 0),
+            EtgSource::Proposed(hs) => {
+                let inner = hs.schedule(
+                    problem,
+                    &ScheduleRequest::max_throughput().with_constraints(req.constraints.clone()),
+                )?;
+                (
+                    Etg { counts: inner.placement.counts() },
+                    inner.provenance.placements_evaluated,
+                )
+            }
+        };
+        for (c, count) in etg.counts.iter_mut().enumerate() {
+            *count = (*count).min(rc.max_instances[c]).max(1);
+        }
+        Ok((etg, inner_evals))
     }
 }
 
 impl Scheduler for DefaultScheduler {
     fn name(&self) -> &'static str {
-        "default-rr"
+        "default"
     }
 
-    fn schedule(&self, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Schedule> {
-        let etg = self.etg.clone().unwrap_or_else(|| Etg::minimal(top));
-        let placement = Self::assign(top, cluster, &etg)?;
-        let ev = Evaluator::new(top, cluster, profiles)?;
+    fn schedule(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule> {
+        let started = std::time::Instant::now();
+        let rc = problem.resolve(&req.constraints)?;
+        let ev = problem.constrained_evaluator(&rc);
+        let (etg, mut evaluated) = self.resolve_etg(problem, req, &rc)?;
+        let placement =
+            Self::assign_constrained(problem.topology(), problem.cluster(), &etg, &rc)?;
         // Storm does not certify a rate; for throughput comparisons the
         // baseline gets credit for the largest rate its placement can
         // sustain (most favorable interpretation for the baseline).
-        finish(&ev, placement)
+        let s = finish(&ev, placement)?;
+        evaluated += 1;
+        let mut s = apply_objective(&ev, &rc, &req.objective, s, usize::MAX, &mut evaluated)?;
+        s.provenance = Provenance {
+            policy: self.name().into(),
+            objective: req.objective.describe(),
+            placements_evaluated: evaluated,
+            backend: "native".into(),
+            wall: started.elapsed(),
+        };
+        Ok(s)
     }
 }
 
@@ -82,7 +176,13 @@ impl Scheduler for DefaultScheduler {
 mod tests {
     use super::*;
     use crate::cluster::presets;
+    use crate::scheduler::Constraints;
     use crate::topology::benchmarks;
+
+    fn problem(top: &Topology) -> Problem {
+        let (cluster, db) = presets::paper_cluster();
+        Problem::new(top, &cluster, &db).unwrap()
+    }
 
     #[test]
     fn rr_deals_cyclically() {
@@ -121,12 +221,43 @@ mod tests {
     }
 
     #[test]
+    fn rr_skips_excluded_machines() {
+        let top = benchmarks::linear();
+        let pr = problem(&top);
+        let rc = pr.resolve(&Constraints::new().exclude_machine("pentium-0")).unwrap();
+        let etg = Etg { counts: vec![2, 2, 2, 2] };
+        let p =
+            DefaultScheduler::assign_constrained(&top, pr.cluster(), &etg, &rc).unwrap();
+        assert_eq!(p.tasks_on(0), 0, "excluded machine took tasks");
+        assert_eq!(p.counts(), etg.counts, "exclusion must not change counts");
+    }
+
+    #[test]
     fn schedule_is_feasible() {
-        let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::diamond();
-        let s = DefaultScheduler::minimal().schedule(&top, &cluster, &db).unwrap();
+        let pr = problem(&top);
+        let s = DefaultScheduler::minimal()
+            .schedule(&pr, &ScheduleRequest::max_throughput())
+            .unwrap();
         assert!(s.eval.feasible);
         assert!(s.rate > 0.0);
+        assert_eq!(s.provenance.policy, "default");
+    }
+
+    #[test]
+    fn proposed_source_matches_two_step_protocol() {
+        let top = benchmarks::linear();
+        let pr = problem(&top);
+        let hs = HeteroScheduler::default();
+        let ours = hs.schedule(&pr, &ScheduleRequest::max_throughput()).unwrap();
+        let two_step = DefaultScheduler::with_etg(Etg { counts: ours.placement.counts() })
+            .schedule(&pr, &ScheduleRequest::max_throughput())
+            .unwrap();
+        let one_step = DefaultScheduler::proposed(hs)
+            .schedule(&pr, &ScheduleRequest::max_throughput())
+            .unwrap();
+        assert_eq!(one_step.placement, two_step.placement);
+        assert!((one_step.rate - two_step.rate).abs() < 1e-9);
     }
 
     #[test]

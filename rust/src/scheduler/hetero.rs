@@ -23,13 +23,17 @@
 //! the intent — retry from the stable state with a finer step — and
 //! guarantees termination (documented in DESIGN.md).
 //!
-//! Placement evaluations go through a [`PlacementScorer`], so the same
-//! algorithm runs against the PJRT-compiled AOT model (the production
-//! path) or the native mirror.
+//! Request constraints are honored *inside* the search: Alg. 1 and the
+//! host selection skip excluded/pinned-away machines, instance growth
+//! stops at a component's `max_instances` cap, and over-utilization is
+//! judged against headroom-reduced budgets.  Placement evaluations go
+//! through a [`PlacementScorer`], so the same algorithm runs against the
+//! PJRT-compiled AOT model (the production path) or the native mirror.
 
-use super::{Schedule, Scheduler};
-use crate::cluster::profile::ProfileDb;
-use crate::cluster::Cluster;
+use std::time::Instant;
+
+use super::problem::ResolvedConstraints;
+use super::{apply_objective, Problem, Provenance, Schedule, ScheduleRequest, Scheduler};
 use crate::predict::{Evaluation, Evaluator, Placement};
 use crate::runtime::scorer::{NativeScorer, PlacementScorer, ScoreRow};
 use crate::topology::Topology;
@@ -72,7 +76,13 @@ impl HeteroScheduler {
     /// `b_m`, so every candidate prune/move is scored in O(machines)
     /// without cloning the placement (§Perf in EXPERIMENTS.md: this took
     /// the 180-machine schedule from ~712 ms to the recorded figure).
-    fn refine_placement(&self, ev: &Evaluator, mut p: Placement) -> Result<Placement> {
+    fn refine_placement(
+        &self,
+        ev: &Evaluator,
+        rc: &ResolvedConstraints,
+        mut p: Placement,
+        evaluated: &mut u64,
+    ) -> Result<Placement> {
         let n_m = ev.n_machines();
         let n_c = p.n_components();
 
@@ -110,6 +120,7 @@ impl HeteroScheduler {
                 }
             }
             let mut best_rate = rate_with(&a, &b, &|_| (0.0, 0.0));
+            *evaluated += 1;
             let mut improved = false;
 
             // (a) prune: removing one instance of c from machine `drop_m`
@@ -135,6 +146,7 @@ impl HeteroScheduler {
                         )
                     };
                     let r = rate_with(&a, &b, &adj);
+                    *evaluated += 1;
                     if r > best_rate * (1.0 + 1e-9) {
                         p.x[c][drop_m] -= 1;
                         improved = true;
@@ -154,7 +166,10 @@ impl HeteroScheduler {
                         continue;
                     }
                     for to in 0..n_m {
-                        if to == from || p.tasks_on(to) >= self.max_tasks_per_machine {
+                        if to == from
+                            || !rc.allows(c, to)
+                            || p.tasks_on(to) >= self.max_tasks_per_machine
+                        {
                             continue;
                         }
                         let adj = |m: usize| -> (f64, f64) {
@@ -167,6 +182,7 @@ impl HeteroScheduler {
                             }
                         };
                         let r = rate_with(&a, &b, &adj);
+                        *evaluated += 1;
                         if r > best_rate * (1.0 + 1e-9) {
                             p.x[c][from] -= 1;
                             p.x[c][to] += 1;
@@ -191,14 +207,20 @@ impl HeteroScheduler {
     }
 
     /// Alg. 1: one instance per component on its least-TCU machine
-    /// (among machines still under the per-worker task bound `k_j`).
-    pub fn first_assignment(&self, ev: &Evaluator, top: &Topology) -> Result<Placement> {
+    /// (among machines the constraints allow for the component and that
+    /// stay under the per-worker task bound `k_j`).
+    pub fn first_assignment(
+        &self,
+        ev: &Evaluator,
+        top: &Topology,
+        rc: &ResolvedConstraints,
+    ) -> Result<Placement> {
         let order = top.topo_order()?;
         let mut p = Placement::empty(ev.n_components(), ev.n_machines());
         for &c in &order {
             let mut best: Option<(usize, f64)> = None;
             for m in 0..ev.n_machines() {
-                if p.tasks_on(m) >= self.max_tasks_per_machine {
+                if !rc.allows(c, m) || p.tasks_on(m) >= self.max_tasks_per_machine {
                     continue;
                 }
                 let tcu = ev.tcu_one(c, m, 1, self.r0);
@@ -208,7 +230,8 @@ impl HeteroScheduler {
             }
             let (best_m, _) = best.ok_or_else(|| {
                 Error::Schedule(format!(
-                    "cluster slots exhausted during FirstAssignment (k_j = {})",
+                    "no allowed machine with free slots for component {c} during FirstAssignment \
+                     (k_j = {}, constraints applied)",
                     self.max_tasks_per_machine
                 ))
             })?;
@@ -235,20 +258,27 @@ impl HeteroScheduler {
     }
 
     /// Find the most suitable machine for a new instance of component
-    /// `c`: among machines that (a) stay under their task bound and
-    /// (b) stay within capacity *after* the instance is added (evaluated
-    /// through the scorer, so rate re-sharing is accounted for), pick the
-    /// one giving the new instance the least TCU.
+    /// `c`: among allowed machines that (a) stay under their task bound
+    /// and (b) stay within capacity *after* the instance is added
+    /// (evaluated through the scorer, so rate re-sharing is accounted
+    /// for), pick the one giving the new instance the least TCU.
+    /// Returns `None` when no host qualifies or the component already
+    /// sits at its instance cap.
     fn best_host(
         &self,
         ev: &Evaluator,
+        rc: &ResolvedConstraints,
         scorer: &dyn PlacementScorer,
         p: &Placement,
         c: usize,
         rate: f64,
+        evaluated: &mut u64,
     ) -> Result<Option<(usize, Placement)>> {
         let n_machines = ev.n_machines();
         let n_before = p.count(c);
+        if n_before >= rc.max_instances[c] {
+            return Ok(None); // instance cap reached: treat as "no capacity"
+        }
         let n_after = n_before + 1;
 
         if scorer.backend() == "native" {
@@ -257,12 +287,13 @@ impl HeteroScheduler {
             // re-shares n -> n+1), so each candidate is O(1) given one base
             // evaluation — no placement clones (§Perf).
             let base = scorer.score_one(p, rate)?;
+            *evaluated += 1;
             let ir = ev.gains[c] * rate;
             let share_old = ir / n_before.max(1) as f64;
             let share_new = ir / n_after as f64;
             let mut best: Option<(usize, f64)> = None;
             for m in 0..n_machines {
-                if p.tasks_on(m) >= self.max_tasks_per_machine {
+                if !rc.allows(c, m) || p.tasks_on(m) >= self.max_tasks_per_machine {
                     continue;
                 }
                 let k = p.x[c][m] as f64;
@@ -290,7 +321,7 @@ impl HeteroScheduler {
         // (a single scorer_b256 execution).
         let mut cands: Vec<(usize, Placement)> = Vec::new();
         for m in 0..n_machines {
-            if p.tasks_on(m) >= self.max_tasks_per_machine {
+            if !rc.allows(c, m) || p.tasks_on(m) >= self.max_tasks_per_machine {
                 continue;
             }
             let mut q = p.clone();
@@ -303,6 +334,7 @@ impl HeteroScheduler {
         let placements: Vec<Placement> = cands.iter().map(|(_, q)| q.clone()).collect();
         let rates = vec![rate; placements.len()];
         let rows = scorer.score_batch(&placements, &rates)?;
+        *evaluated += rows.len() as u64;
         let mut best: Option<(usize, f64, usize)> = None; // (machine, score, cand idx)
         for (i, ((m, _), row)) in cands.iter().zip(&rows).enumerate() {
             // the host itself must end up within budget
@@ -331,37 +363,41 @@ impl HeteroScheduler {
             .map(|(m, _)| m)
     }
 
-    /// Alg. 2 with a pluggable scorer.
-    pub fn schedule_with_scorer(
+    /// Alg. 1 + Alg. 2 + refinement: the constrained max-throughput
+    /// search, returning the placement and its certified rate.
+    fn maximize(
         &self,
+        ev: &Evaluator,
         top: &Topology,
-        cluster: &Cluster,
-        profiles: &ProfileDb,
+        cluster: &crate::cluster::Cluster,
+        rc: &ResolvedConstraints,
         scorer: &dyn PlacementScorer,
-    ) -> Result<Schedule> {
-        let ev = Evaluator::new(top, cluster, profiles)?;
-        let mut placement = self.first_assignment(&ev, top)?;
+        evaluated: &mut u64,
+    ) -> Result<(Placement, f64)> {
+        let mut placement = self.first_assignment(ev, top, rc)?;
         let mut scale = 1.0f64;
         let mut current_ir = self.r0;
         let mut final_state: Option<(Placement, f64)> = None;
 
         for _ in 0..self.max_iterations {
             let row = scorer.score_one(&placement, current_ir)?;
-            match self.first_over(&ev, &row) {
+            *evaluated += 1;
+            match self.first_over(ev, &row) {
                 None => {
                     // stable: checkpoint and raise the rate
                     final_state = Some((placement.clone(), current_ir));
                     current_ir += current_ir / scale;
                 }
                 Some(m_over) => {
-                    let hottest = self.hottest_on(&ev, &placement, m_over, current_ir)
+                    let hottest = self
+                        .hottest_on(ev, &placement, m_over, current_ir)
                         .ok_or_else(|| Error::Schedule("over-utilized machine hosts no tasks".into()))?;
-                    match self.best_host(&ev, scorer, &placement, hottest, current_ir)? {
+                    match self.best_host(ev, rc, scorer, &placement, hottest, current_ir, evaluated)? {
                         Some((_, q)) => {
                             placement = q;
                         }
                         None => {
-                            // no capacity left anywhere
+                            // no capacity left anywhere (or caps reached)
                             if current_ir > scale {
                                 if let Some((fp, fr)) = &final_state {
                                     scale *= 2.0;
@@ -370,7 +406,8 @@ impl HeteroScheduler {
                                 } else {
                                     // initial rate was never feasible
                                     return Err(Error::Schedule(format!(
-                                        "initial rate R0={} infeasible on this cluster",
+                                        "initial rate R0={} infeasible on this cluster under the \
+                                         request's constraints",
                                         self.r0
                                     )));
                                 }
@@ -383,31 +420,79 @@ impl HeteroScheduler {
             }
         }
 
-        let (mut placement, mut rate) = final_state
-            .ok_or_else(|| Error::Schedule("no stable schedule found".into()))?;
+        let (mut placement, mut rate) =
+            final_state.ok_or_else(|| Error::Schedule("no stable schedule found".into()))?;
         if self.refine {
-            placement = self.refine_placement(&ev, placement)?;
+            placement = self.refine_placement(ev, rc, placement, evaluated)?;
             // Also refine from the Round-Robin assignment of the same ETG:
             // greedy growth can land in a local optimum the RR seed
             // escapes, and this guarantees the proposed schedule never
             // loses to the default scheduler on its own instance counts.
             let etg = crate::topology::Etg { counts: placement.counts() };
-            if let Ok(rr) = crate::scheduler::default_rr::DefaultScheduler::assign(top, cluster, &etg) {
-                let rr_refined = self.refine_placement(&ev, rr)?;
+            if let Ok(rr) =
+                crate::scheduler::default_rr::DefaultScheduler::assign_constrained(top, cluster, &etg, rc)
+            {
+                let rr_refined = self.refine_placement(ev, rc, rr, evaluated)?;
                 if ev.max_stable_rate(&rr_refined)? > ev.max_stable_rate(&placement)? {
                     placement = rr_refined;
                 }
             }
             rate = ev.max_stable_rate(&placement)?.max(rate);
         }
+        Ok((placement, rate))
+    }
+
+    /// Solve an already-resolved request against one scorer.
+    fn solve(
+        &self,
+        problem: &Problem,
+        req: &ScheduleRequest,
+        rc: &ResolvedConstraints,
+        ev: &Evaluator,
+        scorer: &dyn PlacementScorer,
+    ) -> Result<Schedule> {
+        let started = Instant::now();
+        let mut evaluated = 0u64;
+        let (placement, rate) =
+            self.maximize(ev, problem.topology(), problem.cluster(), rc, scorer, &mut evaluated)?;
         let row = scorer.score_one(&placement, rate)?;
+        evaluated += 1;
         let eval = Evaluation {
             util: row.util,
             throughput: row.throughput,
             feasible: row.feasible,
             ir_comp: row.ir_comp,
         };
-        Ok(Schedule { placement, rate, eval })
+        let s = Schedule { placement, rate, eval, provenance: Provenance::default() };
+        let mut s = apply_objective(
+            ev,
+            rc,
+            &req.objective,
+            s,
+            self.max_tasks_per_machine,
+            &mut evaluated,
+        )?;
+        s.provenance = Provenance {
+            policy: self.name().into(),
+            objective: req.objective.describe(),
+            placements_evaluated: evaluated,
+            backend: scorer.backend().into(),
+            wall: started.elapsed(),
+        };
+        Ok(s)
+    }
+
+    /// Solve the request with an explicit scorer (the PJRT path in
+    /// production; tests cross-check it against the native mirror).
+    pub fn schedule_with_scorer(
+        &self,
+        problem: &Problem,
+        req: &ScheduleRequest,
+        scorer: &dyn PlacementScorer,
+    ) -> Result<Schedule> {
+        let rc = problem.resolve(&req.constraints)?;
+        let ev = problem.constrained_evaluator(&rc);
+        self.solve(problem, req, &rc, &ev, scorer)
     }
 }
 
@@ -416,9 +501,16 @@ impl Scheduler for HeteroScheduler {
         "hetero"
     }
 
-    fn schedule(&self, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Schedule> {
-        let scorer = NativeScorer::new(top, cluster, profiles)?;
-        self.schedule_with_scorer(top, cluster, profiles, &scorer)
+    fn schedule(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule> {
+        let rc = problem.resolve(&req.constraints)?;
+        let ev = problem.constrained_evaluator(&rc);
+        match problem.scorer() {
+            Some(scorer) => self.solve(problem, req, &rc, &ev, scorer),
+            None => {
+                let scorer = NativeScorer::from_evaluator(ev.into_owned());
+                self.solve(problem, req, &rc, scorer.evaluator(), &scorer)
+            }
+        }
     }
 }
 
@@ -426,34 +518,52 @@ impl Scheduler for HeteroScheduler {
 mod tests {
     use super::*;
     use crate::cluster::presets;
+    use crate::scheduler::Constraints;
     use crate::topology::benchmarks;
 
-    fn run(top: &Topology) -> (Schedule, Evaluator) {
+    fn problem(top: &Topology) -> Problem {
         let (cluster, db) = presets::paper_cluster();
-        let ev = Evaluator::new(top, &cluster, &db).unwrap();
-        let s = HeteroScheduler::default().schedule(top, &cluster, &db).unwrap();
-        (s, ev)
+        Problem::new(top, &cluster, &db).unwrap()
+    }
+
+    fn run(top: &Topology) -> (Schedule, Problem) {
+        let p = problem(top);
+        let s = HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        (s, p)
     }
 
     #[test]
     fn first_assignment_prefers_least_tcu() {
-        let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
-        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+        let p = problem(&top);
+        let rc = p.resolve(&Constraints::new()).unwrap();
         let hs = HeteroScheduler::default();
-        let p = hs.first_assignment(&ev, &top).unwrap();
+        let pl = hs.first_assignment(p.evaluator(), &top, &rc).unwrap();
         // Table 3: the Pentium worker (machine 0) has the lowest e for
         // every micro-benchmark task type, so everything starts there.
         for c in 0..top.n_components() {
-            assert_eq!(p.x[c][0], 1, "component {c}");
-            assert_eq!(p.count(c), 1);
+            assert_eq!(pl.x[c][0], 1, "component {c}");
+            assert_eq!(pl.count(c), 1);
+        }
+    }
+
+    #[test]
+    fn first_assignment_respects_exclusion() {
+        let top = benchmarks::linear();
+        let p = problem(&top);
+        let rc = p.resolve(&Constraints::new().exclude_machine("pentium-0")).unwrap();
+        let hs = HeteroScheduler::default();
+        let pl = hs.first_assignment(p.evaluator(), &top, &rc).unwrap();
+        for c in 0..top.n_components() {
+            assert_eq!(pl.x[c][0], 0, "component {c} landed on the excluded pentium");
         }
     }
 
     #[test]
     fn schedule_is_feasible_and_saturating() {
         for top in benchmarks::micro() {
-            let (s, ev) = run(&top);
+            let (s, p) = run(&top);
+            let ev = p.evaluator();
             assert!(s.eval.feasible, "{}: infeasible result", top.name);
             assert!(s.rate >= 8.0, "{}: rate {}", top.name, s.rate);
             // every component keeps >= 1 instance
@@ -464,6 +574,10 @@ mod tests {
             for (m, u) in s.eval.util.iter().enumerate() {
                 assert!(*u <= ev.cap[m] + 1e-6, "{}: machine {m} at {u}%", top.name);
             }
+            // provenance is stamped
+            assert_eq!(s.provenance.policy, "hetero");
+            assert_eq!(s.provenance.backend, "native");
+            assert!(s.provenance.placements_evaluated > 0);
         }
     }
 
@@ -471,11 +585,14 @@ mod tests {
     fn beats_default_rr_on_micro() {
         use crate::scheduler::default_rr::DefaultScheduler;
         use crate::topology::Etg;
-        let (cluster, db) = presets::paper_cluster();
         for top in benchmarks::micro() {
-            let ours = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+            let p = problem(&top);
+            let ours =
+                HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
             let etg = Etg { counts: ours.placement.counts() };
-            let rr = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &db).unwrap();
+            let rr = DefaultScheduler::with_etg(etg)
+                .schedule(&p, &ScheduleRequest::max_throughput())
+                .unwrap();
             assert!(
                 ours.eval.throughput >= rr.eval.throughput * 0.999,
                 "{}: ours {} < rr {}",
@@ -488,29 +605,43 @@ mod tests {
 
     #[test]
     fn respects_task_bound() {
-        let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
+        let p = problem(&top);
         let hs = HeteroScheduler { max_tasks_per_machine: 2, ..Default::default() };
-        let s = hs.schedule(&top, &cluster, &db).unwrap();
-        for m in 0..cluster.n_machines() {
+        let s = hs.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        for m in 0..p.cluster().n_machines() {
             assert!(s.placement.tasks_on(m) <= 2);
         }
     }
 
     #[test]
-    fn infeasible_r0_errors() {
-        let (cluster, db) = presets::paper_cluster();
+    fn respects_instance_cap() {
         let top = benchmarks::linear();
+        let p = problem(&top);
+        let high =
+            top.components.iter().position(|c| c.task_type == "highCompute").unwrap();
+        let name = top.components[high].name.clone();
+        let req = ScheduleRequest::max_throughput()
+            .with_constraints(Constraints::new().max_instances(&name, 1));
+        let s = HeteroScheduler::default().schedule(&p, &req).unwrap();
+        assert_eq!(s.placement.count(high), 1, "instance cap ignored");
+        assert!(s.eval.feasible);
+    }
+
+    #[test]
+    fn infeasible_r0_errors() {
+        let top = benchmarks::linear();
+        let p = problem(&top);
         let hs = HeteroScheduler { r0: 1e9, max_tasks_per_machine: 4, ..Default::default() };
-        assert!(hs.schedule(&top, &cluster, &db).is_err());
+        assert!(hs.schedule(&p, &ScheduleRequest::max_throughput()).is_err());
     }
 
     #[test]
     fn deterministic() {
-        let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::diamond();
-        let a = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
-        let b = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let p = problem(&top);
+        let a = HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let b = HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
         assert_eq!(a.placement, b.placement);
         assert!((a.rate - b.rate).abs() < 1e-9);
     }

@@ -1,30 +1,88 @@
-//! Schedulers (paper §5 + §6 comparators).
+//! Schedulers (paper §5 + §6 comparators) behind one request API.
+//!
+//! The unit of work is a [`Problem`] (topology + cluster + profiles,
+//! validated once, owning the cached [`Evaluator`] tables and an
+//! optional PJRT scorer) scheduled under a [`ScheduleRequest`]
+//! (an [`Objective`] plus [`Constraints`]).  Policies implement
+//!
+//! ```ignore
+//! fn schedule(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule>
+//! ```
+//!
+//! and are constructed by name through [`registry`] — the single place a
+//! policy string resolves, shared by the CLI, the JSON config runner,
+//! the experiment harness and the control plane.
 //!
 //! * [`default_rr::DefaultScheduler`] — Storm's default Round-Robin task
 //!   assignment (the baseline the paper beats).
 //! * [`hetero::HeteroScheduler`] — the paper's contribution: Alg. 1
 //!   (`FirstAssignment`) + Alg. 2 (`MaximizeThroughput`).
-//! * [`optimal::OptimalScheduler`] — exhaustive search over the placement
-//!   design space (the paper's upper-bound comparator), batch-scored
-//!   through the AOT model.
+//! * [`optimal::OptimalScheduler`] — exhaustive/sampled search over the
+//!   placement design space (the paper's upper-bound comparator),
+//!   batch-scored through the AOT model.
 //!
-//! All three produce a [`Schedule`]: a placement, the topology input rate
-//! it sustains, and the predicted evaluation at that rate.
+//! All three honor the request's constraints inside their search
+//! (excluded machines host nothing, pins restrict candidate hosts,
+//! instance caps bound growth, reserved headroom shrinks machine
+//! budgets) and serve every objective — see the
+//! [`request`] module docs for the exact objective semantics.
+//!
+//! A [`Schedule`] carries the placement, the certified topology input
+//! rate, the predicted evaluation at that rate, and [`Provenance`]
+//! (which policy, which objective, how many placements were evaluated,
+//! through which scoring backend, in how much wall time).
 
 pub mod default_rr;
 pub mod hetero;
 pub mod optimal;
+pub mod problem;
+pub mod registry;
+pub mod request;
 pub mod reschedule;
 
-use crate::cluster::profile::ProfileDb;
+pub use problem::{Problem, ResolvedConstraints};
+pub use registry::PolicyParams;
+pub use request::{Constraints, Objective, ScheduleRequest};
+
+use std::time::Duration;
+
 use crate::cluster::Cluster;
 use crate::predict::{Evaluation, Evaluator, Placement};
 use crate::topology::Topology;
-use crate::Result;
+use crate::{Error, Result};
+
+/// How a [`Schedule`] came to be.
+#[derive(Debug, Clone, Default)]
+pub struct Provenance {
+    /// Registry name of the policy that produced it.
+    pub policy: String,
+    /// Rendered objective ([`Objective::describe`]).
+    pub objective: String,
+    /// Candidate placements evaluated during the search.
+    pub placements_evaluated: u64,
+    /// Scoring backend the search ran through ("native" / "pjrt").
+    pub backend: String,
+    /// Wall-clock time spent inside the scheduler.
+    pub wall: Duration,
+}
+
+impl Provenance {
+    /// One-line rendering for CLI output and reports.
+    pub fn render(&self) -> String {
+        format!(
+            "policy={} objective={} backend={} evaluated={} wall={:.1}ms",
+            self.policy,
+            self.objective,
+            self.backend,
+            self.placements_evaluated,
+            self.wall.as_secs_f64() * 1e3
+        )
+    }
+}
 
 /// A scheduler's output: the execution topology graph (implied by the
-/// placement's instance counts), its task assignment, and the topology
-/// input rate the scheduler certifies.
+/// placement's instance counts), its task assignment, the topology
+/// input rate the scheduler certifies, and provenance.
 #[derive(Debug, Clone)]
 pub struct Schedule {
     pub placement: Placement,
@@ -32,6 +90,8 @@ pub struct Schedule {
     pub rate: f64,
     /// Predicted evaluation at `rate`.
     pub eval: Evaluation,
+    /// Who produced this schedule, and how.
+    pub provenance: Provenance,
 }
 
 impl Schedule {
@@ -54,23 +114,223 @@ impl Schedule {
         }
         out
     }
+
+    /// Machines hosting at least one task instance.
+    pub fn machines_used(&self) -> usize {
+        (0..self.placement.n_machines())
+            .filter(|&m| self.placement.tasks_on(m) > 0)
+            .count()
+    }
 }
 
-/// Common scheduler interface.
+/// Common scheduler interface: solve `problem` under `req`.
+///
+/// Implementations certify that the returned `rate` is feasible under
+/// the prediction model *with the request's constraints applied* (zero
+/// tasks on excluded machines, pins respected, instance counts within
+/// their caps, utilization within the headroom-reduced budgets).
 pub trait Scheduler {
+    /// Registry name of this policy.
     fn name(&self) -> &'static str;
 
-    /// Produce a schedule for the triple.  Implementations certify the
-    /// returned `rate` is feasible under the prediction model.
-    fn schedule(&self, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Schedule>;
+    fn schedule(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule>;
 }
 
 /// Finish a schedule from a placement: certify its max stable rate and
-/// evaluate there (shared by the RR baseline and the optimal search).
+/// evaluate there (shared by every policy; provenance is stamped by the
+/// caller).
 pub(crate) fn finish(ev: &Evaluator, placement: Placement) -> Result<Schedule> {
     let rate = ev.max_stable_rate_or_zero(&placement)?;
     let eval = ev.evaluate(&placement, rate)?;
-    Ok(Schedule { placement, rate, eval })
+    Ok(Schedule { placement, rate, eval, provenance: Provenance::default() })
+}
+
+/// Utilization spread (max − min predicted utilization over non-excluded
+/// machines) of `p` at rate `r` — the tie-breaker
+/// [`Objective::BalancedUtilization`] minimizes.
+pub(crate) fn util_spread(
+    ev: &Evaluator,
+    rc: &ResolvedConstraints,
+    p: &Placement,
+    r: f64,
+) -> Result<f64> {
+    let eval = ev.evaluate(p, r)?;
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (m, &u) in eval.util.iter().enumerate() {
+        if rc.excluded[m] {
+            continue;
+        }
+        lo = lo.min(u);
+        hi = hi.max(u);
+    }
+    Ok(if hi >= lo { hi - lo } else { 0.0 })
+}
+
+/// Greedy machine consolidation for [`Objective::MinMachinesAtRate`]:
+/// repeatedly drain the used machine with the fewest tasks by moving its
+/// instances onto other already-used, allowed machines, as long as the
+/// certified rate stays `>= target`.
+pub(crate) fn consolidate_machines(
+    ev: &Evaluator,
+    rc: &ResolvedConstraints,
+    mut p: Placement,
+    target: f64,
+    max_tasks_per_machine: usize,
+    evaluated: &mut u64,
+) -> Result<Placement> {
+    let n_comp = p.n_components();
+    let n_m = p.n_machines();
+    loop {
+        let mut used: Vec<(usize, usize)> = (0..n_m)
+            .filter_map(|m| {
+                let t = p.tasks_on(m);
+                (t > 0).then_some((t, m))
+            })
+            .collect();
+        if used.len() <= 1 {
+            return Ok(p);
+        }
+        used.sort_unstable();
+        let mut drained = false;
+        'victims: for &(_, d) in &used {
+            let targets: Vec<usize> = used
+                .iter()
+                .map(|&(_, m)| m)
+                .filter(|&m| m != d && !rc.excluded[m])
+                .collect();
+            let mut trial = p.clone();
+            for c in 0..n_comp {
+                while trial.x[c][d] > 0 {
+                    let mut best: Option<(usize, f64)> = None;
+                    for &t in &targets {
+                        if !rc.allows(c, t) || trial.tasks_on(t) >= max_tasks_per_machine {
+                            continue;
+                        }
+                        trial.x[c][d] -= 1;
+                        trial.x[c][t] += 1;
+                        let r = ev.max_stable_rate_or_zero(&trial)?;
+                        *evaluated += 1;
+                        trial.x[c][t] -= 1;
+                        trial.x[c][d] += 1;
+                        if r + 1e-9 >= target && best.map_or(true, |(_, br)| r > br) {
+                            best = Some((t, r));
+                        }
+                    }
+                    match best {
+                        Some((t, _)) => {
+                            trial.x[c][d] -= 1;
+                            trial.x[c][t] += 1;
+                        }
+                        None => continue 'victims, // this machine cannot drain
+                    }
+                }
+            }
+            p = trial;
+            drained = true;
+            break;
+        }
+        if !drained {
+            return Ok(p);
+        }
+    }
+}
+
+/// Hill-climb for [`Objective::BalancedUtilization`]: single-instance
+/// moves that keep the certified rate (never worse) and strictly shrink
+/// the utilization spread at that rate.
+pub(crate) fn balance_utilization(
+    ev: &Evaluator,
+    rc: &ResolvedConstraints,
+    mut p: Placement,
+    max_tasks_per_machine: usize,
+    evaluated: &mut u64,
+) -> Result<Placement> {
+    let n_comp = p.n_components();
+    let n_m = p.n_machines();
+    let mut best_rate = ev.max_stable_rate_or_zero(&p)?;
+    let mut best_spread = util_spread(ev, rc, &p, best_rate)?;
+    *evaluated += 1;
+    for _sweep in 0..64 {
+        let mut improved = false;
+        for c in 0..n_comp {
+            for from in 0..n_m {
+                if p.x[c][from] == 0 {
+                    continue;
+                }
+                for to in 0..n_m {
+                    if to == from
+                        || !rc.allows(c, to)
+                        || p.tasks_on(to) >= max_tasks_per_machine
+                    {
+                        continue;
+                    }
+                    p.x[c][from] -= 1;
+                    p.x[c][to] += 1;
+                    let r = ev.max_stable_rate_or_zero(&p)?;
+                    *evaluated += 1;
+                    let better = r + 1e-9 >= best_rate && {
+                        let s = util_spread(ev, rc, &p, r)?;
+                        if s + 1e-9 < best_spread {
+                            best_rate = best_rate.max(r);
+                            best_spread = s;
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    if better {
+                        improved = true;
+                        if p.x[c][from] == 0 {
+                            break;
+                        }
+                    } else {
+                        p.x[c][to] -= 1;
+                        p.x[c][from] += 1;
+                    }
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    Ok(p)
+}
+
+/// Apply the request's objective to a max-throughput schedule — the
+/// shared post-pass used by the heuristic policies (the optimal search
+/// compares candidates objective-aware instead).  Preserves provenance;
+/// the returned schedule is re-certified through `ev`.
+pub(crate) fn apply_objective(
+    ev: &Evaluator,
+    rc: &ResolvedConstraints,
+    objective: &Objective,
+    s: Schedule,
+    max_tasks_per_machine: usize,
+    evaluated: &mut u64,
+) -> Result<Schedule> {
+    match objective {
+        Objective::MaxThroughput => Ok(s),
+        Objective::MinMachinesAtRate(target) => {
+            if s.rate + 1e-9 < *target {
+                return Err(Error::Schedule(format!(
+                    "objective infeasible: certified rate {:.3} < requested rate {:.3}",
+                    s.rate, target
+                )));
+            }
+            let p = consolidate_machines(ev, rc, s.placement, *target, max_tasks_per_machine, evaluated)?;
+            let mut out = finish(ev, p)?;
+            out.provenance = s.provenance;
+            Ok(out)
+        }
+        Objective::BalancedUtilization => {
+            let p = balance_utilization(ev, rc, s.placement, max_tasks_per_machine, evaluated)?;
+            let mut out = finish(ev, p)?;
+            out.provenance = s.provenance;
+            Ok(out)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -79,33 +339,165 @@ mod tests {
     use crate::cluster::presets;
     use crate::topology::benchmarks;
 
+    fn problem() -> Problem {
+        let (cluster, db) = presets::paper_cluster();
+        Problem::new(&benchmarks::linear(), &cluster, &db).unwrap()
+    }
+
     #[test]
     fn describe_lists_all_components() {
-        let (cluster, db) = presets::paper_cluster();
-        let top = benchmarks::linear();
-        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
-        let mut p = Placement::empty(top.n_components(), cluster.n_machines());
-        for c in 0..top.n_components() {
-            p.x[c][0] = 1;
+        let p = problem();
+        let ev = p.evaluator();
+        let mut pl = Placement::empty(p.topology().n_components(), p.cluster().n_machines());
+        for c in 0..p.topology().n_components() {
+            pl.x[c][0] = 1;
         }
-        let s = finish(&ev, p).unwrap();
-        let d = s.describe(&top, &cluster);
-        for comp in &top.components {
+        let s = finish(ev, pl).unwrap();
+        let d = s.describe(p.topology(), p.cluster());
+        for comp in &p.topology().components {
             assert!(d.contains(&comp.name), "missing {}", comp.name);
         }
+        assert_eq!(s.machines_used(), 1);
     }
 
     #[test]
     fn finish_rate_is_feasible_boundary() {
-        let (cluster, db) = presets::paper_cluster();
-        let top = benchmarks::linear();
-        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
-        let mut p = Placement::empty(top.n_components(), cluster.n_machines());
-        for c in 0..top.n_components() {
-            p.x[c][c % 3] = 1;
+        let p = problem();
+        let ev = p.evaluator();
+        let mut pl = Placement::empty(p.topology().n_components(), p.cluster().n_machines());
+        for c in 0..p.topology().n_components() {
+            pl.x[c][c % 3] = 1;
         }
-        let s = finish(&ev, p).unwrap();
+        let s = finish(ev, pl).unwrap();
         assert!(s.eval.feasible);
         assert!(s.rate > 0.0);
+    }
+
+    #[test]
+    fn provenance_renders_fields() {
+        let pv = Provenance {
+            policy: "hetero".into(),
+            objective: "max-throughput".into(),
+            placements_evaluated: 42,
+            backend: "native".into(),
+            wall: Duration::from_millis(3),
+        };
+        let line = pv.render();
+        for needle in ["hetero", "max-throughput", "native", "42"] {
+            assert!(line.contains(needle), "{line}");
+        }
+    }
+
+    /// Acceptance: every registered policy honors machine exclusion
+    /// under the max-throughput objective — feasible schedule, zero
+    /// tasks on the excluded machine.
+    #[test]
+    fn every_policy_honors_exclusion() {
+        let p = problem();
+        let req = ScheduleRequest::max_throughput()
+            .with_constraints(Constraints::new().exclude_machine("i3-0"));
+        let excluded = p.cluster().machines.iter().position(|m| m.name == "i3-0").unwrap();
+        // small search bound keeps the optimal policy fast in debug mode
+        let params = PolicyParams { max_instances_per_component: 2, ..Default::default() };
+        for info in registry::policies() {
+            let sched = registry::create(info.name, &params).unwrap();
+            let s = sched.schedule(&p, &req).unwrap_or_else(|e| {
+                panic!("{}: schedule failed under exclusion: {e}", info.name)
+            });
+            assert!(s.eval.feasible, "{}: infeasible", info.name);
+            assert!(s.rate > 0.0, "{}: rate 0", info.name);
+            assert_eq!(
+                s.placement.tasks_on(excluded),
+                0,
+                "{}: placed tasks on the excluded machine",
+                info.name
+            );
+            assert_eq!(s.provenance.policy, info.name);
+        }
+    }
+
+    #[test]
+    fn min_machines_objective_consolidates() {
+        let p = problem();
+        let hetero = registry::create("hetero", &PolicyParams::default()).unwrap();
+        let max = hetero.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        // ask for a rate the paper cluster can serve on fewer machines
+        let target = max.rate * 0.3;
+        let req = ScheduleRequest::new(Objective::MinMachinesAtRate(target));
+        let s = hetero.schedule(&p, &req).unwrap();
+        assert!(s.rate + 1e-9 >= target, "rate {} below target {target}", s.rate);
+        assert!(
+            s.machines_used() <= max.machines_used(),
+            "consolidation used more machines ({}) than max-throughput ({})",
+            s.machines_used(),
+            max.machines_used()
+        );
+        // an unattainable target errors instead of silently under-delivering
+        let req = ScheduleRequest::new(Objective::MinMachinesAtRate(max.rate * 100.0));
+        assert!(hetero.schedule(&p, &req).is_err());
+    }
+
+    #[test]
+    fn balanced_objective_never_loses_rate() {
+        let p = problem();
+        let hetero = registry::create("hetero", &PolicyParams::default()).unwrap();
+        let max = hetero.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let bal = hetero
+            .schedule(&p, &ScheduleRequest::new(Objective::BalancedUtilization))
+            .unwrap();
+        assert!(
+            bal.rate + 1e-6 >= max.rate,
+            "balanced rate {} < max-throughput rate {}",
+            bal.rate,
+            max.rate
+        );
+        let rc = p.resolve(&Constraints::new()).unwrap();
+        let s_max = util_spread(p.evaluator(), &rc, &max.placement, max.rate).unwrap();
+        let s_bal = util_spread(p.evaluator(), &rc, &bal.placement, bal.rate).unwrap();
+        assert!(
+            s_bal <= s_max + 1e-6,
+            "balanced spread {s_bal} worse than max-throughput spread {s_max}"
+        );
+    }
+
+    #[test]
+    fn headroom_lowers_certified_rate() {
+        let p = problem();
+        let hetero = registry::create("hetero", &PolicyParams::default()).unwrap();
+        let free = hetero.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let req = ScheduleRequest::max_throughput()
+            .with_constraints(Constraints::new().reserve_headroom(30.0));
+        let held = hetero.schedule(&p, &req).unwrap();
+        assert!(
+            held.rate < free.rate,
+            "30pp headroom should cost rate: {} vs {}",
+            held.rate,
+            free.rate
+        );
+        // utilization at the certified rate stays under the reduced budget
+        let rc = p.resolve(&req.constraints).unwrap();
+        let ev = p.constrained_evaluator(&rc);
+        let eval = ev.evaluate(&held.placement, held.rate).unwrap();
+        for (m, u) in eval.util.iter().enumerate() {
+            assert!(*u <= ev.cap[m] + 1e-6, "machine {m} at {u}% > reduced cap");
+        }
+    }
+
+    #[test]
+    fn pinned_component_stays_put() {
+        let p = problem();
+        let spout = 0;
+        let req = ScheduleRequest::max_throughput()
+            .with_constraints(Constraints::new().pin_component("spout", ["i5-0"]));
+        let i5 = p.cluster().machines.iter().position(|m| m.name == "i5-0").unwrap();
+        for name in ["hetero", "default"] {
+            let sched = registry::create(name, &PolicyParams::default()).unwrap();
+            let s = sched.schedule(&p, &req).unwrap();
+            assert_eq!(
+                s.placement.count(spout),
+                s.placement.x[spout][i5],
+                "{name}: pinned component left its machine"
+            );
+        }
     }
 }

@@ -3,13 +3,20 @@
 //!
 //! For every candidate placement (instance counts per component ×
 //! distribution over machines) the search computes the largest feasible
-//! topology input rate and keeps the placement with the highest
-//! throughput.  The paper uses this brute-force comparator to bound how
-//! far the heuristic is from optimal (within 4% worst case), and to
-//! motivate the heuristic in the first place: the search that took the
-//! paper's Xeon server ~18 h for 27,405 possibilities is exactly the
-//! loop below, which we make tractable by scoring candidates in batches
-//! of 256 through the AOT-compiled evaluation model (L1 Pallas scorer).
+//! topology input rate and keeps the best candidate **under the
+//! request's objective** — highest rate for `MaxThroughput`, fewest used
+//! machines (then highest rate) among candidates sustaining the target
+//! for `MinMachinesAtRate`, and smallest utilization spread among
+//! rate-ties for `BalancedUtilization`.  Constraints shrink the space
+//! itself: per-component rows only distribute instances over allowed
+//! machines, and counts stop at the component's cap.
+//!
+//! The paper uses this brute-force comparator to bound how far the
+//! heuristic is from optimal (within 4% worst case), and to motivate the
+//! heuristic in the first place: the search that took the paper's Xeon
+//! server ~18 h for 27,405 possibilities is exactly the loop below,
+//! which we make tractable by scoring candidates in batches of 256
+//! through the AOT-compiled evaluation model (L1 Pallas scorer).
 //!
 //! Scoring uses the linearity of eq. 5 in `R0`: one batched evaluation at
 //! `R0 = 1` yields each machine's utilization slope `a_m` (after
@@ -17,12 +24,12 @@
 //! natively), giving the closed form `R0* = min_m (cap_m - b_m) / a_m`
 //! per candidate — one PJRT execution scores 256 placements exactly.
 
-use super::{finish, Schedule, Scheduler};
-use crate::cluster::profile::ProfileDb;
-use crate::cluster::Cluster;
+use std::time::Instant;
+
+use super::problem::ResolvedConstraints;
+use super::{finish, util_spread, Objective, Problem, Provenance, Schedule, ScheduleRequest, Scheduler};
 use crate::predict::{Evaluator, Placement};
 use crate::runtime::scorer::{NativeScorer, PlacementScorer};
-use crate::topology::Topology;
 use crate::{Error, Result};
 
 /// How to traverse the design space.
@@ -80,14 +87,24 @@ fn placements_of(k: u64, m: u64) -> u128 {
     binom(k + m - 1, m - 1)
 }
 
+/// The best candidate seen so far, under one objective.
+struct Best {
+    placement: Placement,
+    rate: f64,
+    /// Machines hosting tasks (MinMachinesAtRate key).
+    used: usize,
+    /// Utilization spread at `rate` (BalancedUtilization tie-breaker).
+    spread: f64,
+}
+
 impl OptimalScheduler {
     pub fn sampled(candidates: usize, seed: u64) -> Self {
         OptimalScheduler { space: SearchSpace::Sampled { candidates, seed }, ..Default::default() }
     }
 
-    /// Size of the exhaustive design space for `n_comp` components on
-    /// `m` machines with 1..=max instances each — the paper's eq. 1
-    /// combinatorics, used by the §3 motivation bench.
+    /// Size of the *unconstrained* exhaustive design space for `n_comp`
+    /// components on `m` machines with 1..=max instances each — the
+    /// paper's eq. 1 combinatorics, used by the §3 motivation bench.
     pub fn design_space_size(&self, n_comp: usize, m: usize) -> u128 {
         let per_comp: u128 = (1..=self.max_instances_per_component as u64)
             .map(|k| placements_of(k, m as u64))
@@ -113,33 +130,44 @@ impl OptimalScheduler {
         rec(k, 0, m, &mut Vec::with_capacity(m), out);
     }
 
-    /// All per-component placement rows (counts 1..=max distributed over
-    /// machines).
-    fn component_rows(&self, m: usize) -> Vec<Vec<usize>> {
-        let mut rows = Vec::new();
-        for k in 1..=self.max_instances_per_component {
-            Self::compositions(k, m, &mut rows);
+    /// Placement rows for component `c`: counts `1..=min(bound, cap_c)`
+    /// distributed over the machines the constraints allow it, scattered
+    /// back to full cluster width.
+    fn component_rows(&self, c: usize, n_m: usize, rc: &ResolvedConstraints) -> Vec<Vec<usize>> {
+        let allowed: Vec<usize> = (0..n_m).filter(|&m| rc.allows(c, m)).collect();
+        let k_max = self.max_instances_per_component.min(rc.max_instances[c]);
+        let mut packed = Vec::new();
+        for k in 1..=k_max {
+            Self::compositions(k, allowed.len(), &mut packed);
         }
-        rows
+        packed
+            .into_iter()
+            .map(|row| {
+                let mut full = vec![0usize; n_m];
+                for (slot, &count) in row.iter().enumerate() {
+                    full[allowed[slot]] = count;
+                }
+                full
+            })
+            .collect()
     }
 
-    /// Visit every placement in the cartesian product, streaming into
-    /// `sink` (returns Err to stop early).
+    /// Visit every placement in the cartesian product of the
+    /// per-component rows, streaming into `sink`.
     fn enumerate(
-        &self,
-        n_comp: usize,
-        rows: &[Vec<usize>],
+        rows: &[Vec<Vec<usize>>],
         sink: &mut dyn FnMut(Placement) -> Result<()>,
     ) -> Result<()> {
+        let n_comp = rows.len();
         let mut idx = vec![0usize; n_comp];
         loop {
-            let p = Placement { x: idx.iter().map(|&i| rows[i].clone()).collect() };
+            let p = Placement { x: idx.iter().enumerate().map(|(c, &i)| rows[c][i].clone()).collect() };
             sink(p)?;
             // odometer increment
             let mut d = 0;
             loop {
                 idx[d] += 1;
-                if idx[d] < rows.len() {
+                if idx[d] < rows[d].len() {
                     break;
                 }
                 idx[d] = 0;
@@ -183,90 +211,177 @@ impl OptimalScheduler {
         Ok(out)
     }
 
-    /// Search with a pluggable scorer (the PJRT path in production).
-    pub fn schedule_with_scorer(
+    /// Objective-aware candidate comparison: fold `(p, r)` into `best`.
+    fn consider(
+        ev: &Evaluator,
+        rc: &ResolvedConstraints,
+        objective: &Objective,
+        best: &mut Option<Best>,
+        p: Placement,
+        r: f64,
+    ) -> Result<()> {
+        match objective {
+            Objective::MaxThroughput => {
+                if best.as_ref().map_or(true, |b| r > b.rate) {
+                    *best = Some(Best { placement: p, rate: r, used: 0, spread: 0.0 });
+                }
+            }
+            Objective::MinMachinesAtRate(target) => {
+                if r + 1e-9 < *target {
+                    return Ok(());
+                }
+                let used = (0..p.n_machines()).filter(|&m| p.tasks_on(m) > 0).count();
+                let take = best
+                    .as_ref()
+                    .map_or(true, |b| used < b.used || (used == b.used && r > b.rate));
+                if take {
+                    *best = Some(Best { placement: p, rate: r, used, spread: 0.0 });
+                }
+            }
+            Objective::BalancedUtilization => {
+                let decisively_better = best.as_ref().map_or(true, |b| r > b.rate * (1.0 + 1e-9));
+                let rate_tie = best
+                    .as_ref()
+                    .map_or(false, |b| !decisively_better && r >= b.rate * (1.0 - 1e-9));
+                if decisively_better || rate_tie {
+                    let spread = util_spread(ev, rc, &p, r)?;
+                    let take = decisively_better
+                        || best.as_ref().map_or(true, |b| spread + 1e-9 < b.spread);
+                    if take {
+                        *best = Some(Best { placement: p, rate: r, used: 0, spread });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The search proper, over an already-resolved request.
+    fn search(
         &self,
-        top: &Topology,
-        cluster: &Cluster,
-        profiles: &ProfileDb,
+        problem: &Problem,
+        req: &ScheduleRequest,
+        rc: &ResolvedConstraints,
+        ev: &Evaluator,
         scorer: &dyn PlacementScorer,
     ) -> Result<Schedule> {
-        let ev = Evaluator::new(top, cluster, profiles)?;
+        let started = Instant::now();
+        let top = problem.topology();
         let n_comp = top.n_components();
-        let m = cluster.n_machines();
+        let n_m = problem.cluster().n_machines();
+        let mut evaluated: u64 = 0;
 
-        let mut best: Option<(Placement, f64)> = None;
+        let mut best: Option<Best> = None;
         let mut buf: Vec<Placement> = Vec::with_capacity(256);
-        let flush = |buf: &mut Vec<Placement>, best: &mut Option<(Placement, f64)>| -> Result<()> {
+        let flush = |buf: &mut Vec<Placement>,
+                     best: &mut Option<Best>,
+                     evaluated: &mut u64|
+         -> Result<()> {
             if buf.is_empty() {
                 return Ok(());
             }
-            let stars = self.rate_stars(&ev, scorer, buf)?;
+            let stars = self.rate_stars(ev, scorer, buf)?;
+            *evaluated += buf.len() as u64;
             for (p, r) in buf.drain(..).zip(stars) {
-                if best.as_ref().map_or(true, |(_, br)| r > *br) {
-                    *best = Some((p, r));
-                }
+                Self::consider(ev, rc, &req.objective, best, p, r)?;
             }
             Ok(())
         };
 
         if self.seed_heuristics {
             // include the heuristics' solutions in the candidate set
+            // (scheduled under the same constraints, max-throughput)
             use crate::scheduler::default_rr::DefaultScheduler;
             use crate::scheduler::hetero::HeteroScheduler;
-            if let Ok(h) = HeteroScheduler::default().schedule(top, cluster, profiles) {
+            let seed_req =
+                ScheduleRequest::max_throughput().with_constraints(req.constraints.clone());
+            if let Ok(h) = HeteroScheduler::default().schedule(problem, &seed_req) {
                 let etg = crate::topology::Etg { counts: h.placement.counts() };
-                if let Ok(rr) = DefaultScheduler::assign(top, cluster, &etg) {
+                if let Ok(rr) =
+                    DefaultScheduler::assign_constrained(top, problem.cluster(), &etg, rc)
+                {
                     buf.push(rr);
                 }
                 buf.push(h.placement);
-                flush(&mut buf, &mut best)?;
+                flush(&mut buf, &mut best, &mut evaluated)?;
             }
         }
 
         match &self.space {
             SearchSpace::Exhaustive => {
-                let size = self.design_space_size(n_comp, m);
+                let rows: Vec<Vec<Vec<usize>>> =
+                    (0..n_comp).map(|c| self.component_rows(c, n_m, rc)).collect();
+                let size = rows
+                    .iter()
+                    .fold(1u128, |acc, r| acc.saturating_mul(r.len() as u128));
                 if size > self.enumeration_limit as u128 {
                     return Err(Error::Schedule(format!(
                         "design space has {size} placements (> limit {}); use SearchSpace::Sampled",
                         self.enumeration_limit
                     )));
                 }
-                let rows = self.component_rows(m);
-                self.enumerate(n_comp, &rows, &mut |p| {
+                Self::enumerate(&rows, &mut |p| {
                     buf.push(p);
                     if buf.len() == 256 {
-                        flush(&mut buf, &mut best)?;
+                        flush(&mut buf, &mut best, &mut evaluated)?;
                     }
                     Ok(())
                 })?;
-                flush(&mut buf, &mut best)?;
+                flush(&mut buf, &mut best, &mut evaluated)?;
             }
             SearchSpace::Sampled { candidates, seed } => {
                 let mut rng = crate::util::rng::Rng::new(*seed);
+                let allowed: Vec<Vec<usize>> = (0..n_comp)
+                    .map(|c| (0..n_m).filter(|&m| rc.allows(c, m)).collect())
+                    .collect();
                 for _ in 0..*candidates {
-                    let mut p = Placement::empty(n_comp, m);
-                    for c in 0..n_comp {
-                        let k = rng.range(1, self.max_instances_per_component);
+                    let mut p = Placement::empty(n_comp, n_m);
+                    for (c, hosts) in allowed.iter().enumerate() {
+                        let k_max = self.max_instances_per_component.min(rc.max_instances[c]);
+                        let k = rng.range(1, k_max.max(1));
                         for _ in 0..k {
-                            p.x[c][rng.range(0, m - 1)] += 1;
+                            p.x[c][hosts[rng.range(0, hosts.len() - 1)]] += 1;
                         }
                     }
                     buf.push(p);
                     if buf.len() == 256 {
-                        flush(&mut buf, &mut best)?;
+                        flush(&mut buf, &mut best, &mut evaluated)?;
                     }
                 }
-                flush(&mut buf, &mut best)?;
+                flush(&mut buf, &mut best, &mut evaluated)?;
             }
         }
 
-        let (placement, r_star) = best.ok_or_else(|| Error::Schedule("empty design space".into()))?;
-        if r_star <= 0.0 {
+        let best = best.ok_or_else(|| match req.objective {
+            Objective::MinMachinesAtRate(t) => Error::Schedule(format!(
+                "no placement in the design space sustains rate {t:.3}"
+            )),
+            _ => Error::Schedule("empty design space".into()),
+        })?;
+        if best.rate <= 0.0 {
             return Err(Error::Schedule("no feasible placement in the design space".into()));
         }
-        finish(&ev, placement)
+        let mut s = finish(ev, best.placement)?;
+        s.provenance = Provenance {
+            policy: self.name().into(),
+            objective: req.objective.describe(),
+            placements_evaluated: evaluated,
+            backend: scorer.backend().into(),
+            wall: started.elapsed(),
+        };
+        Ok(s)
+    }
+
+    /// Search with a pluggable scorer (the PJRT path in production).
+    pub fn schedule_with_scorer(
+        &self,
+        problem: &Problem,
+        req: &ScheduleRequest,
+        scorer: &dyn PlacementScorer,
+    ) -> Result<Schedule> {
+        let rc = problem.resolve(&req.constraints)?;
+        let ev = problem.constrained_evaluator(&rc);
+        self.search(problem, req, &rc, &ev, scorer)
     }
 }
 
@@ -275,9 +390,16 @@ impl Scheduler for OptimalScheduler {
         "optimal"
     }
 
-    fn schedule(&self, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Schedule> {
-        let scorer = NativeScorer::new(top, cluster, profiles)?;
-        self.schedule_with_scorer(top, cluster, profiles, &scorer)
+    fn schedule(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule> {
+        let rc = problem.resolve(&req.constraints)?;
+        let ev = problem.constrained_evaluator(&rc);
+        match problem.scorer() {
+            Some(scorer) => self.search(problem, req, &rc, &ev, scorer),
+            None => {
+                let scorer = NativeScorer::from_evaluator(ev.into_owned());
+                self.search(problem, req, &rc, scorer.evaluator(), &scorer)
+            }
+        }
     }
 }
 
@@ -286,7 +408,13 @@ mod tests {
     use super::*;
     use crate::cluster::presets;
     use crate::scheduler::hetero::HeteroScheduler;
-    use crate::topology::benchmarks;
+    use crate::scheduler::Constraints;
+    use crate::topology::{benchmarks, Topology};
+
+    fn problem(top: &Topology) -> Problem {
+        let (cluster, db) = presets::paper_cluster();
+        Problem::new(top, &cluster, &db).unwrap()
+    }
 
     #[test]
     fn binom_basics() {
@@ -311,21 +439,37 @@ mod tests {
     #[test]
     fn design_space_size_matches_rows() {
         let o = OptimalScheduler::default();
-        let rows = o.component_rows(3);
+        let rc = ResolvedConstraints::unconstrained(4, 3);
+        let rows = o.component_rows(0, 3, &rc);
         let per_comp = rows.len() as u128;
         assert_eq!(o.design_space_size(4, 3), per_comp.pow(4));
     }
 
     #[test]
+    fn constrained_rows_exclude_machines() {
+        let o = OptimalScheduler { max_instances_per_component: 2, ..Default::default() };
+        let top = benchmarks::linear();
+        let p = problem(&top);
+        let rc = p.resolve(&Constraints::new().exclude_machine("i3-0")).unwrap();
+        for c in 0..top.n_components() {
+            for row in o.component_rows(c, 3, &rc) {
+                assert_eq!(row[1], 0, "row {row:?} uses the excluded machine");
+                assert!(row.iter().sum::<usize>() >= 1);
+            }
+        }
+    }
+
+    #[test]
     fn optimal_at_least_as_good_as_hetero() {
-        let (cluster, db) = presets::paper_cluster();
         for top in benchmarks::micro() {
+            let p = problem(&top);
             // max 2 instances keeps the debug-mode enumeration small; the
             // >= property is guaranteed by heuristic seeding regardless.
             let opt = OptimalScheduler { max_instances_per_component: 2, ..Default::default() }
-                .schedule(&top, &cluster, &db)
+                .schedule(&p, &ScheduleRequest::max_throughput())
                 .unwrap();
-            let het = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+            let het =
+                HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
             assert!(
                 opt.eval.throughput >= het.eval.throughput * 0.999,
                 "{}: optimal {} < hetero {}",
@@ -334,37 +478,68 @@ mod tests {
                 het.eval.throughput
             );
             assert!(opt.eval.feasible);
+            assert!(opt.provenance.placements_evaluated > 0);
         }
+    }
+
+    #[test]
+    fn min_machines_objective_prefers_fewer_hosts() {
+        let top = benchmarks::linear();
+        let p = problem(&top);
+        let o = OptimalScheduler { max_instances_per_component: 2, ..Default::default() };
+        let max = o.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let target = max.rate * 0.25;
+        let s = o
+            .schedule(&p, &ScheduleRequest::new(Objective::MinMachinesAtRate(target)))
+            .unwrap();
+        assert!(s.rate + 1e-9 >= target);
+        assert!(s.machines_used() <= max.machines_used());
+        // unattainable target errors
+        assert!(o
+            .schedule(&p, &ScheduleRequest::new(Objective::MinMachinesAtRate(max.rate * 50.0)))
+            .is_err());
     }
 
     #[test]
     fn oversize_space_rejected() {
         let (cluster, db) = presets::homogeneous_cluster(8);
         let top = benchmarks::diamond();
+        let p = Problem::new(&top, &cluster, &db).unwrap();
         let o = OptimalScheduler {
             max_instances_per_component: 6,
             enumeration_limit: 1000,
+            seed_heuristics: false,
             ..Default::default()
         };
-        assert!(o.schedule(&top, &cluster, &db).is_err());
+        assert!(o.schedule(&p, &ScheduleRequest::max_throughput()).is_err());
     }
 
     #[test]
     fn sampled_mode_returns_feasible() {
-        let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
+        let p = problem(&top);
         let o = OptimalScheduler::sampled(500, 42);
-        let s = o.schedule(&top, &cluster, &db).unwrap();
+        let s = o.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
         assert!(s.eval.feasible);
         assert!(s.rate > 0.0);
     }
 
     #[test]
     fn sampled_deterministic_by_seed() {
-        let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
-        let a = OptimalScheduler::sampled(200, 7).schedule(&top, &cluster, &db).unwrap();
-        let b = OptimalScheduler::sampled(200, 7).schedule(&top, &cluster, &db).unwrap();
+        let p = problem(&top);
+        let a = OptimalScheduler::sampled(200, 7).schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let b = OptimalScheduler::sampled(200, 7).schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
         assert_eq!(a.placement, b.placement);
+    }
+
+    #[test]
+    fn sampled_respects_exclusion() {
+        let top = benchmarks::linear();
+        let p = problem(&top);
+        let req = ScheduleRequest::max_throughput()
+            .with_constraints(Constraints::new().exclude_machine("pentium-0"));
+        let s = OptimalScheduler::sampled(300, 9).schedule(&p, &req).unwrap();
+        assert_eq!(s.placement.tasks_on(0), 0);
     }
 }

@@ -1,0 +1,342 @@
+//! The scheduling [`Problem`]: one validated (topology, cluster,
+//! profiles) triple, owning the expensive derived state every policy
+//! needs — the expanded [`Evaluator`] tables and, optionally, a
+//! PJRT-backed batch scorer.
+//!
+//! Building a `Problem` validates the triple exactly once (topology
+//! structure, cluster shape, profile coverage); every subsequent
+//! [`Scheduler::schedule`](super::Scheduler::schedule) call reuses the
+//! cached tables instead of re-expanding profiles — which is the whole
+//! life of the online controller: many requests, one world.
+
+use std::borrow::Cow;
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::predict::Evaluator;
+use crate::runtime::scorer::PlacementScorer;
+use crate::topology::Topology;
+use crate::{Error, Result};
+
+use super::request::Constraints;
+
+/// A validated scheduling problem with cached evaluation state.
+pub struct Problem {
+    top: Topology,
+    cluster: Cluster,
+    profiles: ProfileDb,
+    evaluator: Evaluator,
+    scorer: Option<Box<dyn PlacementScorer>>,
+}
+
+impl Problem {
+    /// Validate the triple once and cache the expanded profile tables.
+    pub fn new(top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Self> {
+        // Evaluator::new validates topology + cluster + coverage.
+        let evaluator = Evaluator::new(top, cluster, profiles)?;
+        Ok(Problem {
+            top: top.clone(),
+            cluster: cluster.clone(),
+            profiles: profiles.clone(),
+            evaluator,
+            scorer: None,
+        })
+    }
+
+    /// Attach a placement scorer (typically the PJRT AOT scorer built by
+    /// [`crate::runtime::scorer::PjRtScorer::new`]); schedulers that
+    /// support batch scoring will use it instead of the native mirror.
+    pub fn with_scorer(mut self, scorer: Box<dyn PlacementScorer>) -> Self {
+        self.scorer = Some(scorer);
+        self
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.top
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn profiles(&self) -> &ProfileDb {
+        &self.profiles
+    }
+
+    /// The cached evaluation tables (unconstrained capacities).
+    pub fn evaluator(&self) -> &Evaluator {
+        &self.evaluator
+    }
+
+    /// The attached batch scorer, if any.
+    pub fn scorer(&self) -> Option<&dyn PlacementScorer> {
+        self.scorer.as_deref()
+    }
+
+    /// Name of the scoring backend requests will run through.
+    pub fn scoring_backend(&self) -> &'static str {
+        self.scorer.as_deref().map_or("native", |s| s.backend())
+    }
+
+    fn machine_index(&self, name: &str) -> Result<usize> {
+        self.cluster
+            .machines
+            .iter()
+            .position(|m| m.name == name)
+            .ok_or_else(|| {
+                Error::Schedule(format!(
+                    "constraint references unknown machine '{name}' (cluster '{}' has: {})",
+                    self.cluster.name,
+                    self.cluster
+                        .machines
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    fn component_index(&self, name: &str) -> Result<usize> {
+        self.top
+            .components
+            .iter()
+            .position(|c| c.name == name)
+            .ok_or_else(|| {
+                Error::Schedule(format!(
+                    "constraint references unknown component '{name}' (topology '{}' has: {})",
+                    self.top.name,
+                    self.top
+                        .components
+                        .iter()
+                        .map(|c| c.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    /// Resolve name-keyed [`Constraints`] into index form, rejecting
+    /// unknown names, non-positive instance caps, out-of-range headroom,
+    /// and constraint sets that leave some component with no allowed
+    /// machine.
+    pub fn resolve(&self, c: &Constraints) -> Result<ResolvedConstraints> {
+        let n_comp = self.top.n_components();
+        let n_machines = self.cluster.n_machines();
+        let mut rc = ResolvedConstraints::unconstrained(n_comp, n_machines);
+
+        if !(0.0..100.0).contains(&c.headroom_pct) {
+            return Err(Error::Schedule(format!(
+                "reserved headroom must be in [0, 100); got {}",
+                c.headroom_pct
+            )));
+        }
+        rc.headroom_pct = c.headroom_pct;
+
+        for name in &c.excluded_machines {
+            let m = self.machine_index(name)?;
+            rc.excluded[m] = true;
+        }
+        if rc.excluded.iter().all(|&e| e) && n_machines > 0 {
+            return Err(Error::Schedule("every machine is excluded".into()));
+        }
+
+        for (comp, machines) in &c.pins {
+            let ci = self.component_index(comp)?;
+            let mut allowed = vec![false; n_machines];
+            for mname in machines {
+                allowed[self.machine_index(mname)?] = true;
+            }
+            for (m, slot) in rc.pinned[ci].iter_mut().enumerate() {
+                *slot = *slot && allowed[m];
+            }
+        }
+
+        for (comp, n) in &c.max_instances {
+            let ci = self.component_index(comp)?;
+            if *n == 0 {
+                return Err(Error::Schedule(format!(
+                    "max_instances for component '{comp}' must be >= 1 (every component keeps an instance)"
+                )));
+            }
+            rc.max_instances[ci] = rc.max_instances[ci].min(*n);
+        }
+
+        for (ci, comp) in self.top.components.iter().enumerate() {
+            if (0..n_machines).all(|m| !rc.allows(ci, m)) {
+                return Err(Error::Schedule(format!(
+                    "constraints leave component '{}' with no allowed machine (pins ∩ non-excluded = ∅)",
+                    comp.name
+                )));
+            }
+        }
+        Ok(rc)
+    }
+
+    /// The evaluator the request actually schedules against: capacities
+    /// shrunk by the reserved headroom (excluded machines keep their
+    /// budget — they simply host nothing, enforced by the search).
+    /// Without headroom this borrows the cached tables; only a headroom
+    /// request pays for a modified clone.
+    pub fn constrained_evaluator(&self, rc: &ResolvedConstraints) -> Cow<'_, Evaluator> {
+        if rc.headroom_pct <= 0.0 {
+            return Cow::Borrowed(&self.evaluator);
+        }
+        let mut ev = self.evaluator.clone();
+        for cap in &mut ev.cap {
+            *cap = (*cap - rc.headroom_pct).max(0.0);
+        }
+        Cow::Owned(ev)
+    }
+}
+
+/// [`Constraints`] resolved to component/machine indices.
+#[derive(Debug, Clone)]
+pub struct ResolvedConstraints {
+    /// Machines that must host zero instances.
+    pub excluded: Vec<bool>,
+    /// Per component: machines its instances may use (`true` = allowed
+    /// by pinning; exclusion is applied on top in [`Self::allows`]).
+    pinned: Vec<Vec<bool>>,
+    /// Per component: instance-count ceiling.
+    pub max_instances: Vec<usize>,
+    /// CPU percentage points reserved on every machine.
+    pub headroom_pct: f64,
+}
+
+impl ResolvedConstraints {
+    /// No restrictions: everything allowed, unbounded counts.
+    pub fn unconstrained(n_comp: usize, n_machines: usize) -> Self {
+        ResolvedConstraints {
+            excluded: vec![false; n_machines],
+            pinned: vec![vec![true; n_machines]; n_comp],
+            max_instances: vec![usize::MAX; n_comp],
+            headroom_pct: 0.0,
+        }
+    }
+
+    /// May component `c` place an instance on machine `m`?
+    #[inline]
+    pub fn allows(&self, c: usize, m: usize) -> bool {
+        !self.excluded[m] && self.pinned[c][m]
+    }
+
+    /// Indices of excluded machines (for reporting).
+    pub fn excluded_indices(&self) -> Vec<usize> {
+        self.excluded
+            .iter()
+            .enumerate()
+            .filter_map(|(m, &e)| e.then_some(m))
+            .collect()
+    }
+
+    /// True when the constraints restrict nothing.
+    pub fn is_trivial(&self) -> bool {
+        self.headroom_pct == 0.0
+            && self.excluded.iter().all(|&e| !e)
+            && self.pinned.iter().all(|row| row.iter().all(|&a| a))
+            && self.max_instances.iter().all(|&n| n == usize::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    fn problem() -> Problem {
+        let (cluster, db) = presets::paper_cluster();
+        Problem::new(&benchmarks::linear(), &cluster, &db).unwrap()
+    }
+
+    #[test]
+    fn new_validates_and_caches() {
+        let p = problem();
+        assert_eq!(p.evaluator().n_components(), p.topology().n_components());
+        assert_eq!(p.scoring_backend(), "native");
+    }
+
+    #[test]
+    fn resolve_trivial() {
+        let p = problem();
+        let rc = p.resolve(&Constraints::new()).unwrap();
+        assert!(rc.is_trivial());
+        for c in 0..p.topology().n_components() {
+            for m in 0..p.cluster().n_machines() {
+                assert!(rc.allows(c, m));
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_exclusion_and_pins() {
+        let p = problem();
+        let rc = p
+            .resolve(
+                &Constraints::new()
+                    .exclude_machine("i3-0")
+                    .pin_component("spout", ["pentium-0", "i3-0"])
+                    .max_instances("spout", 2),
+            )
+            .unwrap();
+        assert!(!rc.is_trivial());
+        let i3 = p.cluster().machines.iter().position(|m| m.name == "i3-0").unwrap();
+        let pent = p.cluster().machines.iter().position(|m| m.name == "pentium-0").unwrap();
+        let spout = p.topology().components.iter().position(|c| c.name == "spout").unwrap();
+        assert!(rc.excluded[i3]);
+        assert_eq!(rc.excluded_indices(), vec![i3]);
+        // pinned to {pentium-0, i3-0}, but i3-0 is excluded
+        assert!(rc.allows(spout, pent));
+        assert!(!rc.allows(spout, i3));
+        assert_eq!(rc.max_instances[spout], 2);
+        // other components untouched by the pin
+        for m in 0..p.cluster().n_machines() {
+            if m != i3 {
+                assert!(rc.allows(1, m));
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_names() {
+        let p = problem();
+        let err = p.resolve(&Constraints::new().exclude_machine("ghost")).unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+        assert!(err.to_string().contains("pentium-0"), "error should list valid machines: {err}");
+        assert!(p.resolve(&Constraints::new().pin_component("nope", ["pentium-0"])).is_err());
+        assert!(p.resolve(&Constraints::new().max_instances("spout", 0)).is_err());
+        assert!(p.resolve(&Constraints::new().reserve_headroom(100.0)).is_err());
+        assert!(p.resolve(&Constraints::new().reserve_headroom(-1.0)).is_err());
+    }
+
+    #[test]
+    fn resolve_rejects_unsatisfiable_sets() {
+        let p = problem();
+        // pin a component onto an excluded machine only
+        let c = Constraints::new().exclude_machine("pentium-0").pin_component("spout", ["pentium-0"]);
+        assert!(p.resolve(&c).is_err());
+        // exclude everything
+        let c = Constraints::new().exclude_machines(["pentium-0", "i3-0", "i5-0"]);
+        match p.resolve(&c) {
+            Err(e) => assert!(e.to_string().contains("excluded"), "{e}"),
+            Ok(_) => panic!("excluding every machine must be rejected"),
+        }
+    }
+
+    #[test]
+    fn constrained_evaluator_applies_headroom() {
+        let p = problem();
+        let rc = p.resolve(&Constraints::new().reserve_headroom(25.0)).unwrap();
+        let ev = p.constrained_evaluator(&rc);
+        assert!(matches!(ev, Cow::Owned(_)));
+        for (m, cap) in ev.cap.iter().enumerate() {
+            assert!((cap - (p.evaluator().cap[m] - 25.0)).abs() < 1e-12);
+        }
+        // trivial constraints share the cached tables, capacities intact
+        let rc0 = p.resolve(&Constraints::new()).unwrap();
+        let ev0 = p.constrained_evaluator(&rc0);
+        assert!(matches!(ev0, Cow::Borrowed(_)));
+        assert_eq!(ev0.cap, p.evaluator().cap);
+    }
+}

@@ -1,0 +1,192 @@
+//! Policy registry: the single place a scheduler *name* resolves to an
+//! implementation.
+//!
+//! The CLI (`--scheduler`), the JSON config runner (`"scheduler":`),
+//! the experiment harness and the control plane all construct policies
+//! through [`create`], so the set of valid names — and their spellings —
+//! cannot drift between entry points.  `hstorm schedule --list-policies`
+//! prints [`describe_all`].
+
+use super::default_rr::{DefaultScheduler, EtgSource};
+use super::hetero::HeteroScheduler;
+use super::optimal::{OptimalScheduler, SearchSpace};
+use super::Scheduler;
+use crate::{Error, Result};
+
+/// Tunables a policy factory may consume.  Every field has the
+/// documented default; policies ignore the fields that do not apply to
+/// them (e.g. `r0` is meaningless to the optimal search).
+#[derive(Debug, Clone)]
+pub struct PolicyParams {
+    /// Initial topology input rate `R0` for Alg. 2 (hetero; also the
+    /// hetero pass inside the default policy's fair-comparison ETG).
+    pub r0: f64,
+    /// Post-pass refinement on/off (hetero).
+    pub refine: bool,
+    /// Upper bound on executors per worker, the paper's `k_j` (hetero).
+    pub max_tasks_per_machine: usize,
+    /// Instance-count bound on the design space (optimal).
+    pub max_instances_per_component: usize,
+    /// Seed the optimal search with the heuristics' solutions (optimal).
+    pub seed_heuristics: bool,
+    /// `Some((candidates, seed))` switches the optimal search to
+    /// uniform sampling (optimal).
+    pub sampled: Option<(usize, u64)>,
+    /// Place the minimal user graph instead of the proposed scheduler's
+    /// ETG (default policy; the paper's §6.3 fair-comparison protocol
+    /// uses the proposed ETG, which is the default here).
+    pub minimal_etg: bool,
+}
+
+impl Default for PolicyParams {
+    fn default() -> Self {
+        PolicyParams {
+            r0: 8.0,
+            refine: true,
+            max_tasks_per_machine: 32,
+            max_instances_per_component: 3,
+            seed_heuristics: true,
+            sampled: None,
+            minimal_etg: false,
+        }
+    }
+}
+
+/// One registry row.
+pub struct PolicyInfo {
+    /// Canonical name ([`Scheduler::name`] of the built policy).
+    pub name: &'static str,
+    /// Accepted alternative spellings.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `--list-policies`.
+    pub summary: &'static str,
+    factory: fn(&PolicyParams) -> Box<dyn Scheduler>,
+}
+
+fn make_hetero(p: &PolicyParams) -> HeteroScheduler {
+    HeteroScheduler {
+        r0: p.r0,
+        max_tasks_per_machine: p.max_tasks_per_machine,
+        refine: p.refine,
+        ..Default::default()
+    }
+}
+
+static POLICIES: &[PolicyInfo] = &[
+    PolicyInfo {
+        name: "hetero",
+        aliases: &["proposed"],
+        summary: "the paper's heterogeneity-aware scheduler (Alg. 1 + Alg. 2 + refinement)",
+        factory: |p| Box::new(make_hetero(p)),
+    },
+    PolicyInfo {
+        name: "default",
+        aliases: &["default-rr", "rr"],
+        summary: "Storm's Round-Robin baseline (places the proposed ETG unless minimal_etg)",
+        factory: |p| {
+            let source = if p.minimal_etg {
+                EtgSource::Minimal
+            } else {
+                EtgSource::Proposed(make_hetero(p))
+            };
+            Box::new(DefaultScheduler { etg: source })
+        },
+    },
+    PolicyInfo {
+        name: "optimal",
+        aliases: &["exhaustive"],
+        summary: "bounded exhaustive/sampled search over the placement design space",
+        factory: |p| {
+            Box::new(OptimalScheduler {
+                max_instances_per_component: p.max_instances_per_component,
+                space: match p.sampled {
+                    Some((candidates, seed)) => SearchSpace::Sampled { candidates, seed },
+                    None => SearchSpace::Exhaustive,
+                },
+                seed_heuristics: p.seed_heuristics,
+                ..Default::default()
+            })
+        },
+    },
+];
+
+/// Every registered policy, canonical-name order.
+pub fn policies() -> &'static [PolicyInfo] {
+    POLICIES
+}
+
+/// Canonical policy names.
+pub fn names() -> Vec<&'static str> {
+    POLICIES.iter().map(|p| p.name).collect()
+}
+
+/// Resolve `name` (canonical or alias) to its canonical name.
+pub fn canonical(name: &str) -> Result<&'static str> {
+    POLICIES
+        .iter()
+        .find(|p| p.name == name || p.aliases.contains(&name))
+        .map(|p| p.name)
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "unknown scheduler policy '{name}' (valid: {})",
+                names().join("|")
+            ))
+        })
+}
+
+/// Construct the policy registered under `name` (canonical or alias).
+pub fn create(name: &str, params: &PolicyParams) -> Result<Box<dyn Scheduler>> {
+    let canon = canonical(name)?;
+    let info = POLICIES.iter().find(|p| p.name == canon).expect("canonical name registered");
+    Ok((info.factory)(params))
+}
+
+/// Multi-line listing for `hstorm schedule --list-policies`.
+pub fn describe_all() -> String {
+    let mut out = String::from("registered scheduling policies:\n");
+    for p in POLICIES {
+        let aliases = if p.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", p.aliases.join(", "))
+        };
+        out.push_str(&format!("  {:<10}{aliases}\n      {}\n", p.name, p.summary));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_and_aliases_resolve() {
+        assert_eq!(canonical("hetero").unwrap(), "hetero");
+        assert_eq!(canonical("proposed").unwrap(), "hetero");
+        assert_eq!(canonical("default-rr").unwrap(), "default");
+        assert_eq!(canonical("rr").unwrap(), "default");
+        assert_eq!(canonical("exhaustive").unwrap(), "optimal");
+        let err = canonical("round-robin").unwrap_err().to_string();
+        assert!(err.contains("hetero") && err.contains("optimal"), "{err}");
+    }
+
+    #[test]
+    fn create_builds_named_policy() {
+        for info in policies() {
+            let s = create(info.name, &PolicyParams::default()).unwrap();
+            assert_eq!(s.name(), info.name);
+            for alias in info.aliases {
+                assert_eq!(create(alias, &PolicyParams::default()).unwrap().name(), info.name);
+            }
+        }
+        assert!(create("nope", &PolicyParams::default()).is_err());
+    }
+
+    #[test]
+    fn describe_all_mentions_every_policy() {
+        let d = describe_all();
+        for info in policies() {
+            assert!(d.contains(info.name), "{d}");
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Scheduling requests: *what* to optimize ([`Objective`]) under *which*
+//! restrictions ([`Constraints`]).
+//!
+//! A [`ScheduleRequest`] is the second argument of
+//! [`Scheduler::schedule`](super::Scheduler::schedule); the first is the
+//! validated [`Problem`](super::Problem).  Splitting the two follows the
+//! request-with-constraints shape of R-Storm and of Shukla & Simmhan's
+//! model-driven scheduler: the problem is built (and validated) once,
+//! while requests vary over its lifetime — the control plane issues a
+//! new request per breach, never a new problem unless the world changed.
+//!
+//! ## Objective semantics
+//!
+//! * [`Objective::MaxThroughput`] — the paper's objective: certify the
+//!   largest topology input rate the placement sustains (eq. 5
+//!   feasibility on every machine) and report throughput at that rate.
+//! * [`Objective::MinMachinesAtRate`]`(r)` — the smallest set of
+//!   machines that still sustains input rate `r`.  Heuristic policies
+//!   schedule for max throughput first (erroring if even that certifies
+//!   below `r`), then greedily drain machines — moving every instance of
+//!   the emptiest machine onto other *already-used* machines — while the
+//!   certified rate stays `>= r`.  The optimal search compares
+//!   candidates by (fewest used machines, then highest rate) among
+//!   those sustaining `r`.
+//! * [`Objective::BalancedUtilization`] — max throughput first, ties
+//!   broken toward the smallest utilization spread (max − min predicted
+//!   utilization over non-excluded machines at the certified rate).
+//!   Balance never sacrifices certified rate: heuristics hill-climb
+//!   single-instance moves that keep the rate and strictly shrink the
+//!   spread; the optimal search breaks rate ties by spread.
+//!
+//! ## Constraint semantics
+//!
+//! * `exclude_machine(name)` — the machine hosts **zero** task
+//!   instances.  This is how drained/failed machines are rescheduled
+//!   around ([`super::reschedule`]).
+//! * `pin_component(component, machines)` — every instance of the named
+//!   component is placed on one of the listed machines.
+//! * `max_instances(component, n)` — the component's instance count
+//!   stays `<= n` (`n >= 1`; every component always keeps at least one
+//!   instance).
+//! * `reserve_headroom(pct)` — every machine keeps `pct` percentage
+//!   points of CPU budget free: schedulers see `cap_m − pct` instead of
+//!   `cap_m` when certifying rates and checking over-utilization.
+//!
+//! Constraints name components and machines by their string names; they
+//! are resolved against the [`Problem`](super::Problem) (and unknown
+//! names rejected with the valid options) at schedule time.
+
+/// What a [`ScheduleRequest`] asks the scheduler to optimize.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Objective {
+    /// Maximize the certified topology input rate (the paper's eq. 2).
+    MaxThroughput,
+    /// Use as few machines as possible while sustaining the given
+    /// topology input rate (tuples/s).
+    MinMachinesAtRate(f64),
+    /// Maximize throughput, then minimize the utilization spread.
+    BalancedUtilization,
+}
+
+impl Objective {
+    /// Human-readable form, recorded in [`super::Provenance`].
+    pub fn describe(&self) -> String {
+        match self {
+            Objective::MaxThroughput => "max-throughput".into(),
+            Objective::MinMachinesAtRate(r) => format!("min-machines@{r:.1}"),
+            Objective::BalancedUtilization => "balanced-utilization".into(),
+        }
+    }
+}
+
+/// Placement restrictions, named by component/machine strings and
+/// resolved against a [`Problem`](super::Problem) at schedule time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Constraints {
+    pub(crate) excluded_machines: Vec<String>,
+    /// `(component, allowed machines)`.
+    pub(crate) pins: Vec<(String, Vec<String>)>,
+    /// `(component, max instance count)`.
+    pub(crate) max_instances: Vec<(String, usize)>,
+    /// CPU percentage points kept free on every machine.
+    pub(crate) headroom_pct: f64,
+}
+
+impl Constraints {
+    pub fn new() -> Self {
+        Constraints::default()
+    }
+
+    /// True when no restriction is set.
+    pub fn is_empty(&self) -> bool {
+        self.excluded_machines.is_empty()
+            && self.pins.is_empty()
+            && self.max_instances.is_empty()
+            && self.headroom_pct == 0.0
+    }
+
+    /// The named machine hosts zero task instances.
+    pub fn exclude_machine(mut self, machine: impl Into<String>) -> Self {
+        self.excluded_machines.push(machine.into());
+        self
+    }
+
+    /// Exclude several machines at once.
+    pub fn exclude_machines<I, S>(mut self, machines: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.excluded_machines.extend(machines.into_iter().map(Into::into));
+        self
+    }
+
+    /// Restrict every instance of `component` to the listed machines.
+    pub fn pin_component<I, S>(mut self, component: impl Into<String>, machines: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.pins
+            .push((component.into(), machines.into_iter().map(Into::into).collect()));
+        self
+    }
+
+    /// Cap `component` at `n` instances (`n >= 1`).
+    pub fn max_instances(mut self, component: impl Into<String>, n: usize) -> Self {
+        self.max_instances.push((component.into(), n));
+        self
+    }
+
+    /// Keep `pct` percentage points of CPU budget free on every machine.
+    pub fn reserve_headroom(mut self, pct: f64) -> Self {
+        self.headroom_pct = pct;
+        self
+    }
+}
+
+/// One scheduling request: an objective plus constraints.
+///
+/// ```no_run
+/// use hstorm::scheduler::{Constraints, Objective, ScheduleRequest};
+///
+/// let req = ScheduleRequest::new(Objective::MaxThroughput)
+///     .with_constraints(Constraints::new().exclude_machine("i3-0").reserve_headroom(10.0));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleRequest {
+    pub objective: Objective,
+    pub constraints: Constraints,
+}
+
+impl Default for ScheduleRequest {
+    fn default() -> Self {
+        ScheduleRequest::max_throughput()
+    }
+}
+
+impl ScheduleRequest {
+    pub fn new(objective: Objective) -> Self {
+        ScheduleRequest { objective, constraints: Constraints::default() }
+    }
+
+    /// The common case: maximize throughput, no constraints.
+    pub fn max_throughput() -> Self {
+        ScheduleRequest::new(Objective::MaxThroughput)
+    }
+
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    pub fn with_constraints(mut self, constraints: Constraints) -> Self {
+        self.constraints = constraints;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates() {
+        let c = Constraints::new()
+            .exclude_machine("a")
+            .exclude_machines(["b", "c"])
+            .pin_component("bolt", ["a"])
+            .max_instances("bolt", 2)
+            .reserve_headroom(5.0);
+        assert_eq!(c.excluded_machines, vec!["a", "b", "c"]);
+        assert_eq!(c.pins.len(), 1);
+        assert_eq!(c.max_instances, vec![("bolt".to_string(), 2)]);
+        assert_eq!(c.headroom_pct, 5.0);
+        assert!(!c.is_empty());
+        assert!(Constraints::new().is_empty());
+    }
+
+    #[test]
+    fn objective_describe_is_stable() {
+        assert_eq!(Objective::MaxThroughput.describe(), "max-throughput");
+        assert_eq!(Objective::MinMachinesAtRate(120.0).describe(), "min-machines@120.0");
+        assert_eq!(Objective::BalancedUtilization.describe(), "balanced-utilization");
+    }
+
+    #[test]
+    fn request_default_is_max_throughput() {
+        let r = ScheduleRequest::default();
+        assert_eq!(r.objective, Objective::MaxThroughput);
+        assert!(r.constraints.is_empty());
+    }
+}

@@ -1,97 +1,122 @@
-//! Failure rescheduling (paper §4.2 & §8): "in case of machine failure,
-//! a slow scheduler leads the cluster to tuple overloading state...
-//! during the execution, by any change in the cluster state this
-//! algorithm can be used to recalculate the new number of instances and
-//! their suitable assignment."
+//! Failure/drain rescheduling (paper §4.2 & §8): "in case of machine
+//! failure, a slow scheduler leads the cluster to tuple overloading
+//! state... during the execution, by any change in the cluster state
+//! this algorithm can be used to recalculate the new number of instances
+//! and their suitable assignment."
 //!
-//! [`after_failure`] removes the failed worker from the cluster and
-//! re-runs the heterogeneity-aware scheduler on the survivors — the
-//! whole point being that it finishes in microseconds-to-milliseconds
-//! (see `benches/scheduler_micro.rs`), where the exhaustive comparator
-//! would strand the cluster for hours.
+//! Losing (or draining) a machine is just a scheduling request with that
+//! machine excluded: [`after_failure`] issues
+//! `Objective::MaxThroughput` + `Constraints::exclude_machine` on the
+//! *same* [`Problem`] — no cluster surgery, no profile re-expansion —
+//! and returns a schedule of unchanged shape with zero tasks on the dead
+//! machine.  The whole point is that this finishes in
+//! microseconds-to-milliseconds (see `benches/scheduler_micro.rs`),
+//! where the exhaustive comparator would strand the cluster for hours.
 
-use crate::cluster::profile::ProfileDb;
-use crate::cluster::Cluster;
-use crate::topology::Topology;
+use super::{Constraints, Problem, Schedule, ScheduleRequest, Scheduler};
 use crate::{Error, Result};
-
-use super::hetero::HeteroScheduler;
-use super::{Schedule, Scheduler};
 
 /// Outcome of a failure-rescheduling step.
 #[derive(Debug, Clone)]
 pub struct Reschedule {
-    /// The surviving cluster (failed machine removed).
-    pub cluster: Cluster,
-    /// The recomputed schedule on the survivors.
+    /// The recomputed schedule: same (component × machine) shape as the
+    /// problem, zero tasks on every excluded machine.
     pub schedule: Schedule,
+    /// Machines excluded from the new schedule.
+    pub excluded: Vec<String>,
     /// Throughput retained vs the pre-failure schedule (1.0 = all).
     pub retained: f64,
 }
 
-/// Remove `failed` (by machine name) and recompute the schedule.
+/// Reschedule around one failed/drained machine.
 pub fn after_failure(
-    top: &Topology,
-    cluster: &Cluster,
-    profiles: &ProfileDb,
+    problem: &Problem,
     before: &Schedule,
     failed: &str,
-    scheduler: &HeteroScheduler,
+    policy: &dyn Scheduler,
 ) -> Result<Reschedule> {
-    let idx = cluster
-        .machines
-        .iter()
-        .position(|m| m.name == failed)
-        .ok_or_else(|| Error::Cluster(format!("unknown machine '{failed}'")))?;
-    if cluster.n_machines() == 1 {
-        return Err(Error::Cluster("cannot lose the only worker".into()));
-    }
-    let mut survivors = cluster.clone();
-    survivors.machines.remove(idx);
-    survivors.name = format!("{}-minus-{failed}", cluster.name);
-    survivors.validate()?;
+    after_failures(problem, before, &[failed], policy)
+}
 
-    let schedule = scheduler.schedule(top, &survivors, profiles)?;
+/// Reschedule around any number of failed/drained machines.
+pub fn after_failures(
+    problem: &Problem,
+    before: &Schedule,
+    failed: &[&str],
+    policy: &dyn Scheduler,
+) -> Result<Reschedule> {
+    if failed.is_empty() {
+        return Err(Error::Cluster("no machine named to reschedule around".into()));
+    }
+    if failed.len() >= problem.cluster().n_machines() {
+        return Err(Error::Cluster("cannot lose every worker".into()));
+    }
+    let req = ScheduleRequest::max_throughput()
+        .with_constraints(Constraints::new().exclude_machines(failed.iter().copied()));
+    // unknown machine names are rejected by constraint resolution
+    let schedule = policy.schedule(problem, &req)?;
     let retained = if before.eval.throughput > 0.0 {
         schedule.eval.throughput / before.eval.throughput
     } else {
         1.0
     };
-    Ok(Reschedule { cluster: survivors, schedule, retained })
+    Ok(Reschedule {
+        schedule,
+        excluded: failed.iter().map(|s| s.to_string()).collect(),
+        retained,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::presets;
-    use crate::scheduler::Scheduler;
+    use crate::scheduler::hetero::HeteroScheduler;
     use crate::topology::benchmarks;
 
-    #[test]
-    fn reschedule_survives_machine_loss() {
+    fn setup() -> (Problem, Schedule, HeteroScheduler) {
         let (cluster, db) = presets::paper_cluster();
-        let top = benchmarks::linear();
+        let problem = Problem::new(&benchmarks::linear(), &cluster, &db).unwrap();
         let hs = HeteroScheduler::default();
-        let before = hs.schedule(&top, &cluster, &db).unwrap();
-        let r = after_failure(&top, &cluster, &db, &before, "i3-0", &hs).unwrap();
-        assert_eq!(r.cluster.n_machines(), 2);
+        let before = hs.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+        (problem, before, hs)
+    }
+
+    #[test]
+    fn excluded_machine_hosts_zero_tasks() {
+        let (problem, before, hs) = setup();
+        let idx = problem.cluster().machines.iter().position(|m| m.name == "i3-0").unwrap();
+        let r = after_failure(&problem, &before, "i3-0", &hs).unwrap();
+        // shape unchanged, dead machine empty
+        assert_eq!(r.schedule.placement.n_machines(), problem.cluster().n_machines());
+        assert_eq!(r.schedule.placement.tasks_on(idx), 0);
+        assert_eq!(r.excluded, vec!["i3-0"]);
+    }
+
+    #[test]
+    fn reschedule_is_feasible_at_a_lower_rate() {
+        let (problem, before, hs) = setup();
+        let r = after_failure(&problem, &before, "i3-0", &hs).unwrap();
         assert!(r.schedule.eval.feasible);
+        assert!(r.schedule.rate > 0.0);
+        // losing a worker cannot raise the certified rate
+        assert!(
+            r.schedule.rate <= before.rate + 1e-9,
+            "post-failure rate {} exceeds pre-failure rate {}",
+            r.schedule.rate,
+            before.rate
+        );
         // losing 1 of 3 workers keeps a meaningful share of throughput
         assert!(r.retained > 0.3, "retained only {:.2}", r.retained);
         assert!(r.retained < 1.0, "throughput should drop after failure");
-        // no instance may remain on the failed machine (shape shrank)
-        assert_eq!(r.schedule.placement.n_machines(), 2);
     }
 
     #[test]
     fn losing_the_strongest_costs_more() {
-        let (cluster, db) = presets::paper_cluster();
-        let top = benchmarks::linear();
-        let hs = HeteroScheduler::default();
-        let before = hs.schedule(&top, &cluster, &db).unwrap();
+        let (problem, before, hs) = setup();
         // Table 3 makes the Pentium the per-tuple fastest worker here
-        let lose_fast = after_failure(&top, &cluster, &db, &before, "pentium-0", &hs).unwrap();
-        let lose_slow = after_failure(&top, &cluster, &db, &before, "i3-0", &hs).unwrap();
+        let lose_fast = after_failure(&problem, &before, "pentium-0", &hs).unwrap();
+        let lose_slow = after_failure(&problem, &before, "i3-0", &hs).unwrap();
         assert!(
             lose_fast.retained <= lose_slow.retained + 1e-9,
             "losing the fast worker ({}) should cost >= losing the slow one ({})",
@@ -102,39 +127,43 @@ mod tests {
 
     #[test]
     fn unknown_machine_rejected() {
-        let (cluster, db) = presets::paper_cluster();
-        let top = benchmarks::linear();
-        let hs = HeteroScheduler::default();
-        let before = hs.schedule(&top, &cluster, &db).unwrap();
-        assert!(after_failure(&top, &cluster, &db, &before, "ghost", &hs).is_err());
+        let (problem, before, hs) = setup();
+        assert!(after_failure(&problem, &before, "ghost", &hs).is_err());
     }
 
     #[test]
     fn cannot_lose_last_worker() {
         let (cluster, db) = presets::homogeneous_cluster(1);
-        let top = benchmarks::linear();
+        let problem = Problem::new(&benchmarks::linear(), &cluster, &db).unwrap();
         let hs = HeteroScheduler::default();
-        let before = hs.schedule(&top, &cluster, &db).unwrap();
+        let before = hs.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
         let name = cluster.machines[0].name.clone();
-        assert!(after_failure(&top, &cluster, &db, &before, &name, &hs).is_err());
+        assert!(after_failure(&problem, &before, &name, &hs).is_err());
     }
 
     #[test]
-    fn cascading_failures() {
-        // lose machines one by one in a Table-4 small scenario; every
-        // intermediate schedule must stay feasible
+    fn cascading_failures_stay_feasible() {
+        // exclude machines one by one in a Table-4 small scenario; every
+        // intermediate schedule must stay feasible with the excluded
+        // machines empty
         use crate::cluster::scenarios;
-        let (mut cluster, db) = scenarios::by_id(1).unwrap().build();
+        let (cluster, db) = scenarios::by_id(1).unwrap().build();
         let top = benchmarks::diamond();
+        let problem = Problem::new(&top, &cluster, &db).unwrap();
         let hs = HeteroScheduler::default();
-        let mut schedule = hs.schedule(&top, &cluster, &db).unwrap();
-        for _ in 0..3 {
-            let victim = cluster.machines[0].name.clone();
-            let r = after_failure(&top, &cluster, &db, &schedule, &victim, &hs).unwrap();
+        let mut schedule = hs.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+        let mut gone: Vec<String> = Vec::new();
+        for k in 0..3 {
+            gone.push(cluster.machines[k].name.clone());
+            let names: Vec<&str> = gone.iter().map(|s| s.as_str()).collect();
+            let r = after_failures(&problem, &schedule, &names, &hs).unwrap();
             assert!(r.schedule.eval.feasible);
-            cluster = r.cluster;
+            for name in &gone {
+                let idx =
+                    cluster.machines.iter().position(|m| &m.name == name).unwrap();
+                assert_eq!(r.schedule.placement.tasks_on(idx), 0, "{name} still hosts tasks");
+            }
             schedule = r.schedule;
         }
-        assert_eq!(cluster.n_machines(), 3);
     }
 }

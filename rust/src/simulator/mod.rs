@@ -142,14 +142,23 @@ pub fn weighted_utilization(
 mod tests {
     use super::*;
     use crate::cluster::presets;
-    use crate::scheduler::{hetero::HeteroScheduler, Scheduler};
+    use crate::scheduler::{hetero::HeteroScheduler, Problem, ScheduleRequest, Scheduler};
     use crate::topology::benchmarks;
+
+    fn hetero_schedule(
+        top: &crate::topology::Topology,
+        cluster: &Cluster,
+        db: &ProfileDb,
+    ) -> crate::scheduler::Schedule {
+        let problem = Problem::new(top, cluster, db).unwrap();
+        HeteroScheduler::default().schedule(&problem, &ScheduleRequest::max_throughput()).unwrap()
+    }
 
     #[test]
     fn simulate_hetero_schedule() {
         let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
-        let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let s = hetero_schedule(&top, &cluster, &db);
         let rep = simulate(&top, &cluster, &db, &s.placement, None).unwrap();
         assert!(rep.throughput > 0.0);
         assert!(rep.rate > 0.0);
@@ -233,7 +242,7 @@ mod tests {
     fn rate_override_respected() {
         let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
-        let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let s = hetero_schedule(&top, &cluster, &db);
         let rep = simulate(&top, &cluster, &db, &s.placement, Some(10.0)).unwrap();
         assert!((rep.rate - 10.0).abs() < 1e-12);
         // linear topology with alpha=1: throughput = n_comp * rate
@@ -245,7 +254,7 @@ mod tests {
         use crate::cluster::scenarios;
         let (cluster, db) = scenarios::by_id(1).unwrap().build();
         let top = benchmarks::diamond();
-        let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let s = hetero_schedule(&top, &cluster, &db);
         let rep = simulate(&top, &cluster, &db, &s.placement, None).unwrap();
         assert!(rep.throughput > 0.0);
         assert_eq!(rep.nodes.len(), 6);

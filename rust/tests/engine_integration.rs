@@ -10,9 +10,9 @@ use hstorm::engine::{self, EngineConfig};
 use hstorm::predict::{Evaluator, Placement};
 use hstorm::scheduler::default_rr::DefaultScheduler;
 use hstorm::scheduler::hetero::HeteroScheduler;
-use hstorm::scheduler::Scheduler;
+use hstorm::scheduler::{Problem, Schedule, ScheduleRequest, Scheduler};
 use hstorm::simulator;
-use hstorm::topology::{benchmarks, Etg};
+use hstorm::topology::{benchmarks, Etg, Topology};
 
 fn cfg() -> EngineConfig {
     EngineConfig {
@@ -23,11 +23,20 @@ fn cfg() -> EngineConfig {
     }
 }
 
+fn hetero(top: &Topology) -> (Schedule, hstorm::cluster::Cluster, hstorm::cluster::profile::ProfileDb)
+{
+    let (cluster, db) = presets::paper_cluster();
+    let problem = Problem::new(top, &cluster, &db).unwrap();
+    let s = HeteroScheduler::default()
+        .schedule(&problem, &ScheduleRequest::max_throughput())
+        .unwrap();
+    (s, cluster, db)
+}
+
 #[test]
 fn hetero_schedule_runs_at_certified_rate() {
-    let (cluster, db) = presets::paper_cluster();
     for top in benchmarks::micro() {
-        let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+        let (s, cluster, db) = hetero(&top);
         let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate, &cfg()).unwrap();
         // measured throughput within 20% of the model in a short window
         let rel = (rep.throughput - s.eval.throughput).abs() / s.eval.throughput;
@@ -51,9 +60,8 @@ fn hetero_schedule_runs_at_certified_rate() {
 
 #[test]
 fn engine_matches_analytic_simulator() {
-    let (cluster, db) = presets::paper_cluster();
     let top = benchmarks::diamond();
-    let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+    let (s, cluster, db) = hetero(&top);
     let sim = simulator::simulate(&top, &cluster, &db, &s.placement, Some(s.rate)).unwrap();
     let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate, &cfg()).unwrap();
     let rel = (rep.throughput - sim.throughput).abs() / sim.throughput;
@@ -63,11 +71,13 @@ fn engine_matches_analytic_simulator() {
 
 #[test]
 fn proposed_beats_default_on_engine() {
-    let (cluster, db) = presets::paper_cluster();
     let top = benchmarks::linear();
-    let ours = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+    let (ours, cluster, db) = hetero(&top);
+    let problem = Problem::new(&top, &cluster, &db).unwrap();
     let etg = Etg { counts: ours.placement.counts() };
-    let def = DefaultScheduler::with_etg(etg).schedule(&top, &cluster, &db).unwrap();
+    let def = DefaultScheduler::with_etg(etg)
+        .schedule(&problem, &ScheduleRequest::max_throughput())
+        .unwrap();
     let ours_rep = engine::run(&top, &cluster, &db, &ours.placement, ours.rate, &cfg()).unwrap();
     let def_rep = engine::run(&top, &cluster, &db, &def.placement, def.rate, &cfg()).unwrap();
     assert!(
@@ -80,9 +90,8 @@ fn proposed_beats_default_on_engine() {
 
 #[test]
 fn overload_injection_degrades_gracefully() {
-    let (cluster, db) = presets::paper_cluster();
     let top = benchmarks::linear();
-    let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+    let (s, cluster, db) = hetero(&top);
     // drive the certified schedule at 3x its rate: engine must saturate
     // (shed) but never crash or deadlock
     let hot = EngineConfig { max_pending: 64, ..cfg() };
@@ -95,9 +104,8 @@ fn overload_injection_degrades_gracefully() {
 
 #[test]
 fn noise_injection_keeps_prediction_close() {
-    let (cluster, db) = presets::paper_cluster();
     let top = benchmarks::star();
-    let s = HeteroScheduler::default().schedule(&top, &cluster, &db).unwrap();
+    let (s, cluster, db) = hetero(&top);
     let noisy = EngineConfig { noise: 0.15, ..cfg() };
     let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate, &noisy).unwrap();
     let ev = Evaluator::new(&top, &cluster, &db).unwrap();

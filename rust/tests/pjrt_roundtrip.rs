@@ -12,7 +12,7 @@ use hstorm::runtime::scorer::{NativeScorer, PjRtScorer, PlacementScorer};
 use hstorm::runtime::PjRtRuntime;
 use hstorm::scheduler::hetero::HeteroScheduler;
 use hstorm::scheduler::optimal::OptimalScheduler;
-use hstorm::scheduler::Scheduler;
+use hstorm::scheduler::{Problem, ScheduleRequest, Scheduler};
 use hstorm::topology::benchmarks;
 use hstorm::util::rng::Rng;
 
@@ -95,11 +95,15 @@ fn pjrt_single_candidate_path() {
 fn hetero_schedule_same_via_pjrt_and_native() {
     let Some(rt) = runtime() else { return };
     let (cluster, db) = presets::paper_cluster();
+    let req = ScheduleRequest::max_throughput();
     for top in benchmarks::micro() {
         let hs = HeteroScheduler::default();
-        let native = hs.schedule(&top, &cluster, &db).unwrap();
+        let problem = Problem::new(&top, &cluster, &db).unwrap();
+        let native = hs.schedule(&problem, &req).unwrap();
+        assert_eq!(native.provenance.backend, "native");
         let pjrt_scorer = PjRtScorer::new(&rt, &top, &cluster, &db).unwrap();
-        let pjrt = hs.schedule_with_scorer(&top, &cluster, &db, &pjrt_scorer).unwrap();
+        let pjrt = hs.schedule_with_scorer(&problem, &req, &pjrt_scorer).unwrap();
+        assert_eq!(pjrt.provenance.backend, "pjrt");
         assert_eq!(
             pjrt.placement.counts(),
             native.placement.counts(),
@@ -116,10 +120,12 @@ fn optimal_search_via_pjrt_matches_native() {
     let Some(rt) = runtime() else { return };
     let (cluster, db) = presets::paper_cluster();
     let top = benchmarks::rolling_count();
+    let req = ScheduleRequest::max_throughput();
     let os = OptimalScheduler { max_instances_per_component: 2, ..Default::default() };
-    let native = os.schedule(&top, &cluster, &db).unwrap();
+    let problem = Problem::new(&top, &cluster, &db).unwrap();
+    let native = os.schedule(&problem, &req).unwrap();
     let scorer = PjRtScorer::new(&rt, &top, &cluster, &db).unwrap();
-    let pjrt = os.schedule_with_scorer(&top, &cluster, &db, &scorer).unwrap();
+    let pjrt = os.schedule_with_scorer(&problem, &req, &scorer).unwrap();
     let rel = (pjrt.rate - native.rate).abs() / native.rate;
     assert!(rel < 1e-3, "rate {} vs {}", pjrt.rate, native.rate);
     assert_eq!(pjrt.placement.counts(), native.placement.counts());

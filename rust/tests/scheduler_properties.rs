@@ -1,15 +1,15 @@
 //! Property tests over the scheduler invariants (in-tree prop harness —
 //! see `hstorm::util::prop`): random topologies, random heterogeneous
 //! clusters, random profiles; the paper's §4.2 constraints must hold for
-//! every schedule any of the schedulers produce.
+//! every schedule any of the schedulers produce, and request constraints
+//! (machine exclusion) must hold on arbitrary worlds.
 
 use hstorm::cluster::profile::{ProfileDb, TaskProfile};
 use hstorm::cluster::Cluster;
-use hstorm::predict::Evaluator;
 use hstorm::scheduler::default_rr::DefaultScheduler;
 use hstorm::scheduler::hetero::HeteroScheduler;
 use hstorm::scheduler::optimal::OptimalScheduler;
-use hstorm::scheduler::Scheduler;
+use hstorm::scheduler::{Constraints, Problem, Schedule, ScheduleRequest, Scheduler};
 use hstorm::topology::builder::TopologyBuilder;
 use hstorm::topology::{Etg, Topology};
 use hstorm::util::prop;
@@ -106,6 +106,13 @@ impl std::fmt::Debug for Brief {
     }
 }
 
+fn schedule_hetero(top: &Topology, cluster: &Cluster, db: &ProfileDb) -> Result<Schedule, String> {
+    let problem = Problem::new(top, cluster, db).map_err(|e| e.to_string())?;
+    HeteroScheduler::default()
+        .schedule(&problem, &ScheduleRequest::max_throughput())
+        .map_err(|e| format!("schedule failed: {e}"))
+}
+
 #[test]
 fn hetero_schedule_never_overutilizes() {
     prop::check(
@@ -113,11 +120,10 @@ fn hetero_schedule_never_overutilizes() {
         prop::default_cases(),
         gen_case,
         |Brief((top, cluster, db))| {
-            let s = HeteroScheduler::default()
-                .schedule(top, cluster, db)
-                .map_err(|e| format!("schedule failed: {e}"))?;
-            let ev = Evaluator::new(top, cluster, db).map_err(|e| e.to_string())?;
-            let eval = ev.evaluate(&s.placement, s.rate).map_err(|e| e.to_string())?;
+            let s = schedule_hetero(top, cluster, db)?;
+            let problem = Problem::new(top, cluster, db).map_err(|e| e.to_string())?;
+            let eval =
+                problem.evaluator().evaluate(&s.placement, s.rate).map_err(|e| e.to_string())?;
             for (m, u) in eval.util.iter().enumerate() {
                 if *u > cluster.machines[m].cap + 1e-6 {
                     return Err(format!("machine {m} at {u}% > cap"));
@@ -135,9 +141,7 @@ fn hetero_every_component_has_instance() {
         prop::default_cases(),
         gen_case,
         |Brief((top, cluster, db))| {
-            let s = HeteroScheduler::default()
-                .schedule(top, cluster, db)
-                .map_err(|e| format!("schedule failed: {e}"))?;
+            let s = schedule_hetero(top, cluster, db)?;
             for (c, n) in s.placement.counts().iter().enumerate() {
                 if *n == 0 {
                     return Err(format!("component {c} has no instance"));
@@ -155,12 +159,14 @@ fn hetero_beats_or_matches_default_rr() {
         prop::default_cases() / 2,
         gen_case,
         |Brief((top, cluster, db))| {
+            let problem = Problem::new(top, cluster, db).map_err(|e| e.to_string())?;
+            let req = ScheduleRequest::max_throughput();
             let ours = HeteroScheduler::default()
-                .schedule(top, cluster, db)
+                .schedule(&problem, &req)
                 .map_err(|e| format!("schedule failed: {e}"))?;
             let etg = Etg { counts: ours.placement.counts() };
             let def = DefaultScheduler::with_etg(etg)
-                .schedule(top, cluster, db)
+                .schedule(&problem, &req)
                 .map_err(|e| format!("default failed: {e}"))?;
             if ours.eval.throughput < def.eval.throughput * 0.999 {
                 return Err(format!(
@@ -176,13 +182,44 @@ fn hetero_beats_or_matches_default_rr() {
 #[test]
 fn hetero_deterministic() {
     prop::check("hetero-deterministic", prop::default_cases() / 4, gen_case, |Brief((top, cluster, db))| {
-        let a = HeteroScheduler::default().schedule(top, cluster, db).map_err(|e| e.to_string())?;
-        let b = HeteroScheduler::default().schedule(top, cluster, db).map_err(|e| e.to_string())?;
+        let a = schedule_hetero(top, cluster, db)?;
+        let b = schedule_hetero(top, cluster, db)?;
         if a.placement != b.placement {
             return Err("placements differ across identical runs".into());
         }
         Ok(())
     });
+}
+
+#[test]
+fn excluded_machine_never_hosts_tasks() {
+    prop::check(
+        "exclusion-honored",
+        prop::default_cases() / 2,
+        gen_case,
+        |Brief((top, cluster, db))| {
+            if cluster.n_machines() < 2 {
+                return Ok(()); // nothing to exclude
+            }
+            let problem = Problem::new(top, cluster, db).map_err(|e| e.to_string())?;
+            let victim = cluster.machines[0].name.clone();
+            let req = ScheduleRequest::max_throughput()
+                .with_constraints(Constraints::new().exclude_machine(&victim));
+            let s = HeteroScheduler::default()
+                .schedule(&problem, &req)
+                .map_err(|e| format!("constrained schedule failed: {e}"))?;
+            if s.placement.tasks_on(0) != 0 {
+                return Err(format!(
+                    "excluded machine '{victim}' hosts {} tasks",
+                    s.placement.tasks_on(0)
+                ));
+            }
+            if !s.eval.feasible {
+                return Err("constrained schedule infeasible".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -220,14 +257,16 @@ fn optimal_upper_bounds_heuristic_on_small_cases() {
         8, // exhaustive search is heavy; a handful of cases suffices
         gen_case,
         |Brief((top, cluster, db))| {
+            let problem = Problem::new(top, cluster, db).map_err(|e| e.to_string())?;
+            let req = ScheduleRequest::max_throughput();
             let ours = HeteroScheduler::default()
-                .schedule(top, cluster, db)
+                .schedule(&problem, &req)
                 .map_err(|e| e.to_string())?;
             // sampled search (+ heuristic seeding, the default) keeps the
             // random design spaces tractable while preserving the
             // optimal >= heuristic invariant
             let opt = OptimalScheduler::sampled(1500, 42)
-                .schedule(top, cluster, db)
+                .schedule(&problem, &req)
                 .map_err(|e| e.to_string())?;
             if opt.eval.throughput < ours.eval.throughput * 0.999 {
                 return Err(format!(
@@ -243,8 +282,9 @@ fn optimal_upper_bounds_heuristic_on_small_cases() {
 #[test]
 fn max_stable_rate_is_a_boundary() {
     prop::check("rate-boundary", prop::default_cases(), gen_case, |Brief((top, cluster, db))| {
-        let s = HeteroScheduler::default().schedule(top, cluster, db).map_err(|e| e.to_string())?;
-        let ev = Evaluator::new(top, cluster, db).map_err(|e| e.to_string())?;
+        let s = schedule_hetero(top, cluster, db)?;
+        let problem = Problem::new(top, cluster, db).map_err(|e| e.to_string())?;
+        let ev = problem.evaluator();
         let r = ev.max_stable_rate(&s.placement).map_err(|e| e.to_string())?;
         let at = ev.evaluate(&s.placement, r).map_err(|e| e.to_string())?;
         let above = ev.evaluate(&s.placement, r * 1.01).map_err(|e| e.to_string())?;
