@@ -1,0 +1,72 @@
+//! Bench: discrete-event simulator throughput — how many virtual tuples
+//! per wall second the event loop sustains across cluster scales and
+//! service models — plus the `accuracy` experiment end to end.
+//! Run: cargo bench --bench event_sim  [HSTORM_FAST=1 for quick mode]
+
+use hstorm::cluster::{presets, scenarios};
+use hstorm::experiments::accuracy;
+use hstorm::predict::Placement;
+use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
+use hstorm::simulator::event::{self, EventSimConfig, ServiceModel};
+use hstorm::topology::benchmarks;
+use hstorm::util::bench;
+
+fn sim_case(
+    name: &str,
+    problem: &Problem,
+    placement: &Placement,
+    rate: f64,
+    service: ServiceModel,
+    horizon: f64,
+) {
+    let cfg = EventSimConfig { horizon, warmup: horizon / 5.0, service, ..Default::default() };
+    let (rep, dt) =
+        bench::time_once(|| event::simulate(problem, placement, rate, &cfg).expect("event sim"));
+    let tuples = rep.throughput * (rep.horizon - rep.warmup);
+    let per_wall_s = tuples / dt.as_secs_f64().max(1e-9);
+    println!(
+        "{name:<52} {tuples:>9.0} tuples in {dt:>10.1?}  ({per_wall_s:>9.0} tuples/wall-s)  {}",
+        rep.verdict()
+    );
+}
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let horizon = if fast { 10.0 } else { 40.0 };
+
+    let top = benchmarks::linear();
+    let (cluster, db) = presets::paper_cluster();
+    let problem = Problem::new(&top, &cluster, &db).expect("problem");
+    let hetero = registry::create("hetero", &PolicyParams::default()).expect("policy");
+    let s = hetero.schedule(&problem, &ScheduleRequest::max_throughput()).expect("schedule");
+    let p9 = s.rate * 0.9;
+    let det = ServiceModel::Deterministic;
+    let exp = ServiceModel::Exponential;
+    sim_case("paper / linear / deterministic @0.9x", &problem, &s.placement, p9, det, horizon);
+    sim_case("paper / linear / exponential   @0.9x", &problem, &s.placement, p9, exp, horizon);
+    sim_case(
+        "paper / linear / deterministic @1.3x (overload)",
+        &problem,
+        &s.placement,
+        s.rate * 1.3,
+        det,
+        horizon,
+    );
+
+    let (cluster2, db2) = scenarios::by_id(2).expect("scenario 2").build();
+    let top2 = benchmarks::diamond();
+    let problem2 = Problem::new(&top2, &cluster2, &db2).expect("problem");
+    let s2 = hetero.schedule(&problem2, &ScheduleRequest::max_throughput()).expect("schedule");
+    sim_case(
+        "scenario-2 (30 machines) / diamond / exponential @0.9x",
+        &problem2,
+        &s2.placement,
+        s2.rate * 0.9,
+        ServiceModel::Exponential,
+        horizon,
+    );
+
+    let (r, dt) = bench::time_once(|| accuracy::run(fast).expect("accuracy experiment"));
+    println!("{}", r.render());
+    println!("accuracy experiment wall time: {dt:?}");
+}

@@ -7,8 +7,7 @@
 use hstorm::cluster::presets;
 use hstorm::experiments::complexity;
 use hstorm::predict::Placement;
-use hstorm::runtime::scorer::{NativeScorer, PjRtScorer, PlacementScorer};
-use hstorm::runtime::PjRtRuntime;
+use hstorm::runtime::scorer::{NativeScorer, PlacementScorer};
 use hstorm::scheduler::optimal::OptimalScheduler;
 use hstorm::scheduler::{Problem, ScheduleRequest, Scheduler};
 use hstorm::topology::benchmarks;
@@ -49,16 +48,24 @@ fn main() {
     });
     println!("  native: {:.0} candidates/s", mn.throughput(256.0));
 
-    match PjRtRuntime::cpu_default() {
-        Ok(rt) => {
-            let pjrt = PjRtScorer::new(&rt, &top, &cluster, &db).expect("pjrt scorer");
-            let mp = bench::run("score 256 candidates (pjrt AOT)", 3, if fast { 20 } else { 100 }, || {
-                pjrt.score_batch(&batch, &rates).expect("scores");
-            });
-            println!("  pjrt:   {:.0} candidates/s", mp.throughput(256.0));
+    #[cfg(feature = "pjrt")]
+    {
+        use hstorm::runtime::scorer::PjRtScorer;
+        use hstorm::runtime::PjRtRuntime;
+        match PjRtRuntime::cpu_default() {
+            Ok(rt) => {
+                let pjrt = PjRtScorer::new(&rt, &top, &cluster, &db).expect("pjrt scorer");
+                let iters = if fast { 20 } else { 100 };
+                let mp = bench::run("score 256 candidates (pjrt AOT)", 3, iters, || {
+                    pjrt.score_batch(&batch, &rates).expect("scores");
+                });
+                println!("  pjrt:   {:.0} candidates/s", mp.throughput(256.0));
+            }
+            Err(e) => println!("  (pjrt scorer skipped: {e})"),
         }
-        Err(e) => println!("  (pjrt scorer skipped: {e})"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("  (pjrt scorer skipped: built without the `pjrt` feature)");
 
     // the full bounded optimal search, end to end
     let os = OptimalScheduler { max_instances_per_component: if fast { 2 } else { 3 }, ..Default::default() };

@@ -24,6 +24,8 @@ pub enum ComputeMode {
     Simulated,
     /// Execute the AOT `work.hlo.txt` kernel repeatedly — real compute
     /// through PJRT on the data path.  The value is the artifacts dir.
+    /// Only available with the `pjrt` cargo feature.
+    #[cfg(feature = "pjrt")]
     Pjrt { artifacts_dir: String },
 }
 
@@ -49,6 +51,7 @@ pub(crate) struct MachineCtx {
 /// Executes service time; abstracts Simulated vs Pjrt burning.
 enum Burner {
     Sleep { owed: f64 },
+    #[cfg(feature = "pjrt")]
     Pjrt { kernel: crate::runtime::WorkKernel, secs_per_call: f64 },
 }
 
@@ -56,6 +59,7 @@ impl Burner {
     fn new(mode: &ComputeMode) -> Self {
         match mode {
             ComputeMode::Simulated => Burner::Sleep { owed: 0.0 },
+            #[cfg(feature = "pjrt")]
             ComputeMode::Pjrt { artifacts_dir } => {
                 // Each machine thread owns its own PJRT client + compiled
                 // kernel (the xla handles are not Send).
@@ -87,6 +91,7 @@ impl Burner {
                     *owed -= t.elapsed().as_secs_f64();
                 }
             }
+            #[cfg(feature = "pjrt")]
             Burner::Pjrt { kernel, secs_per_call } => {
                 let calls = (secs / *secs_per_call).ceil().max(1.0) as usize;
                 kernel.burn(calls).expect("work kernel burn");

@@ -1,0 +1,144 @@
+//! `accuracy` — the paper's §6.2 prediction-accuracy claim, validated
+//! in-repo: for every (scenario, topology, policy) cell, schedule, then
+//! **measure** per-machine CPU utilization with the discrete-event
+//! simulator at 90% of the certified rate and table the
+//! predicted-vs-simulated error.
+//!
+//! The paper reports > 92% accuracy (worst diff < 8 pp) against its
+//! physical Storm cluster; the event simulator is this repo's
+//! measurement substrate at scales the wall-clock engine cannot reach
+//! (the engine-based counterpart is [`super::fig6`]).  Deterministic
+//! service keeps the comparison about the *model* (eq. 5/6 vs realized
+//! queueing), not sampling noise; each row also carries the event-sim
+//! p99 latency and stability verdict, which the analytic model cannot
+//! produce at all.
+
+use crate::cluster::{presets, scenarios};
+use crate::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
+use crate::simulator::event::{self, EventSimConfig, ServiceModel};
+use crate::Result;
+
+use super::{f1, f2, ExperimentResult};
+
+/// Fraction of each schedule's certified max stable rate the event
+/// simulation runs at (safely sub-saturation, as in the paper's sweeps).
+const RATE_FRACTION: f64 = 0.9;
+
+pub fn run(fast: bool) -> Result<ExperimentResult> {
+    let mut out = ExperimentResult::new(
+        "accuracy",
+        "predicted vs event-simulated CPU utilization (percentage points)",
+        &[
+            "scenario", "topology", "policy", "rate", "mean |err|", "max |err|",
+            "p99 latency (ms)", "verdict",
+        ],
+    );
+    let scenario_ids: Vec<Option<usize>> = if fast {
+        vec![None, Some(1)]
+    } else {
+        vec![None, Some(1), Some(2), Some(3)]
+    };
+    let topologies: Vec<&str> =
+        if fast { vec!["linear", "diamond"] } else { vec!["linear", "diamond", "star"] };
+    let policies = ["hetero", "default"];
+    let cfg = EventSimConfig {
+        horizon: if fast { 12.0 } else { 40.0 },
+        warmup: if fast { 2.0 } else { 8.0 },
+        service: ServiceModel::Deterministic,
+        ..Default::default()
+    };
+
+    let mut all_errs: Vec<f64> = Vec::new();
+    for sid in &scenario_ids {
+        let (cluster, db, label) = match sid {
+            None => {
+                let (c, d) = presets::paper_cluster();
+                (c, d, "paper".to_string())
+            }
+            Some(id) => {
+                let sc = scenarios::by_id(*id).expect("known scenario id");
+                let (c, d) = sc.build();
+                (c, d, format!("{} ({})", sc.id, sc.label))
+            }
+        };
+        for tname in &topologies {
+            let top = crate::resolve::topology(tname)?;
+            let problem = Problem::new(&top, &cluster, &db)?;
+            for pol in &policies {
+                let sched = registry::create(pol, &PolicyParams::default())?;
+                let s = sched.schedule(&problem, &ScheduleRequest::max_throughput())?;
+                let rate = s.rate * RATE_FRACTION;
+                if rate <= 0.0 {
+                    continue;
+                }
+                let pred = problem.evaluator().evaluate(&s.placement, rate)?;
+                let rep = event::simulate(&problem, &s.placement, rate, &cfg)?;
+                let mut mean_err = 0.0;
+                let mut max_err = 0.0f64;
+                for (p, g) in pred.util.iter().zip(&rep.util) {
+                    let err = (p - g).abs();
+                    all_errs.push(err);
+                    mean_err += err;
+                    max_err = max_err.max(err);
+                }
+                mean_err /= pred.util.len().max(1) as f64;
+                out.row(vec![
+                    label.clone(),
+                    tname.to_string(),
+                    pol.to_string(),
+                    f1(rate),
+                    f2(mean_err),
+                    f2(max_err),
+                    rep.latency.as_ref().map_or("-".to_string(), |l| f2(l.p99 * 1e3)),
+                    if rep.backpressure { "diverging" } else { "stable" }.to_string(),
+                ]);
+            }
+        }
+    }
+
+    let mean = all_errs.iter().sum::<f64>() / all_errs.len().max(1) as f64;
+    let max = all_errs.iter().cloned().fold(0.0, f64::max);
+    out.note(format!(
+        "prediction accuracy: mean |err| = {mean:.2} pp, max |err| = {max:.2} pp over {} machine \
+         readings -> mean accuracy = {:.1}% (paper §6.2: > 92%, worst diff < 8 pp)",
+        all_errs.len(),
+        100.0 - mean
+    ));
+    out.note(format!(
+        "measured by the discrete-event simulator at {:.0}% of each certified rate, \
+         deterministic service",
+        RATE_FRACTION * 100.0
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    // One shared run: scheduling + event-simulating 8 cells is the most
+    // expensive unit-test payload in the crate, so headline and per-row
+    // checks share it.
+    #[test]
+    fn accuracy_headline_and_cells_beat_paper_claim() {
+        let r = super::run(true).unwrap();
+        // fast mode: 2 scenarios x 2 topologies x 2 policies
+        assert_eq!(r.rows.len(), 8, "{:?}", r.rows);
+        let note = r.notes.iter().find(|n| n.contains("mean accuracy")).expect("accuracy note");
+        let acc: f64 = note
+            .rsplit_once("= ")
+            .unwrap()
+            .1
+            .split('%')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(acc > 92.0, "event-sim prediction accuracy only {acc}%: {note}");
+        for row in &r.rows {
+            assert_eq!(row[7], "stable", "{row:?}");
+            let max_err: f64 = row[5].parse().unwrap();
+            assert!(max_err < 8.0, "worst-case diff above the paper's 8 pp: {row:?}");
+            // every cell reports a finite latency figure
+            assert_ne!(row[6], "-", "{row:?}");
+        }
+    }
+}

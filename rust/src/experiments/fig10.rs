@@ -57,8 +57,8 @@ fn run_cell(s: &Scenario, topology: &str) -> Result<ScaleCell> {
     let etg = Etg { counts: ours.placement.counts() };
     let def_placement = DefaultScheduler::assign(&top, &cluster, &etg)?;
 
-    let ours_rep = simulator::simulate(&top, &cluster, &db, &ours.placement, None)?;
-    let def_rep = simulator::simulate(&top, &cluster, &db, &def_placement, None)?;
+    let ours_rep = simulator::simulate(&problem, &ours.placement, None)?;
+    let def_rep = simulator::simulate(&problem, &def_placement, None)?;
     Ok(ScaleCell {
         scenario: s.id,
         topology: topology.to_string(),

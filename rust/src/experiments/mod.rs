@@ -5,23 +5,25 @@
 //! render.  The DESIGN.md experiment index maps each paper artifact to
 //! its function here:
 //!
-//! | id       | paper artifact | function           |
-//! |----------|----------------|--------------------|
-//! | fig3     | Fig. 3         | [`fig3::run`]      |
-//! | fig6     | Fig. 6 (+92%)  | [`fig6::run`]      |
-//! | fig7     | Fig. 7         | [`fig7::run`]      |
-//! | fig8     | Fig. 8         | [`fig8::run`]      |
-//! | fig9     | Fig. 9         | [`fig9::run`]      |
-//! | fig10    | Fig. 10 + T4   | [`fig10::run`]     |
-//! | table5   | Table 5        | [`fig10::table5`]  |
-//! | space    | §3 complexity  | [`complexity::run`]|
-//! | ablation | design choices | [`ablation::run`]  |
-//! | elastic  | control plane  | [`elastic::run`]   |
+//! | id       | paper artifact      | function           |
+//! |----------|---------------------|--------------------|
+//! | fig3     | Fig. 3              | [`fig3::run`]      |
+//! | fig6     | Fig. 6 (+92%)       | [`fig6::run`]      |
+//! | fig7     | Fig. 7              | [`fig7::run`]      |
+//! | fig8     | Fig. 8              | [`fig8::run`]      |
+//! | fig9     | Fig. 9              | [`fig9::run`]      |
+//! | fig10    | Fig. 10 + T4        | [`fig10::run`]     |
+//! | table5   | Table 5             | [`fig10::table5`]  |
+//! | space    | §3 complexity       | [`complexity::run`]|
+//! | ablation | design choices      | [`ablation::run`]  |
+//! | elastic  | control plane       | [`elastic::run`]   |
+//! | accuracy | §6.2 (event-sim)    | [`accuracy::run`]  |
 //!
 //! `fast: true` shrinks engine windows/design spaces so the whole suite
 //! runs in seconds (used by tests); benches use `fast: false`.
 
 pub mod ablation;
+pub mod accuracy;
 pub mod complexity;
 pub mod elastic;
 pub mod fig10;

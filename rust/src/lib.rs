@@ -7,12 +7,14 @@
 //! * **L3 (this crate)** — the coordinator: topology model, heterogeneous
 //!   cluster model, the paper's scheduler (Alg. 1 + Alg. 2), the Storm
 //!   default Round-Robin baseline, the optimal exhaustive comparator, a
-//!   tokio stream-processing engine (the "real cluster" substitute), a
-//!   large-scale analytic simulator, an online control plane
-//!   ([`controller`]) that replays workload traces over virtual time and
-//!   keeps the topology scheduled as machines churn and profiles drift,
-//!   and the experiment harness that regenerates every figure/table of
-//!   the paper's evaluation.
+//!   threaded stream-processing engine (the "real cluster" substitute), two
+//!   large-scale simulators (the closed-form analytic model and a
+//!   discrete-event tuple-level simulator, [`simulator::event`], that
+//!   adds latency percentiles, queue dynamics and backpressure
+//!   verdicts), an online control plane ([`controller`]) that replays
+//!   workload traces over virtual time and keeps the topology scheduled
+//!   as machines churn and profiles drift, and the experiment harness
+//!   that regenerates every figure/table of the paper's evaluation.
 //! * **L2 (python/compile/model.py)** — the placement-evaluation model
 //!   (rate propagation, eq. 6; CPU prediction, eq. 5; feasibility +
 //!   throughput) as a JAX graph, AOT-lowered to HLO text at build time.
@@ -22,6 +24,11 @@
 //!
 //! Python never runs at schedule or serve time: `make artifacts` lowers
 //! the model once; [`runtime`] loads and executes the HLO via PJRT.
+//! PJRT execution is optional — it lives behind the off-by-default
+//! `pjrt` cargo feature (the default build is pure `std` and evaluates
+//! everything through the exact native mirror; see the [`runtime`]
+//! module docs for how the in-repo `xla` stub keeps the feature
+//! type-checking outside the vendor image).
 //!
 //! ## Quickstart
 //!

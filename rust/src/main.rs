@@ -6,10 +6,11 @@
 //!                 [--exclude m1,m2] [--headroom 10] [--pjrt] [--r0 8]
 //! hstorm schedule --list-policies
 //! hstorm run      --topology linear [--rate 100] [--seconds 4] [--pjrt-compute]
-//! hstorm simulate --topology linear --scenario 2
+//! hstorm simulate --topology linear --scenario 2 [--mode analytic|event]
 //! hstorm control  --trace diurnal --scenario 2 [--policy reactive] [--steps 600]
 //! hstorm profile  [--task highCompute] [--machine pentium]
-//! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|elastic|all> [--fast] [--json out.json]
+//! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy|all>
+//!                 [--fast] [--json out.json]
 //! hstorm config   --config exp.json            # run a JSON experiment
 //! ```
 
@@ -20,11 +21,10 @@ use hstorm::engine::{self, ComputeMode, EngineConfig};
 use hstorm::experiments;
 use hstorm::profiling;
 use hstorm::resolve;
-use hstorm::runtime::scorer::PjRtScorer;
-use hstorm::runtime::PjRtRuntime;
 use hstorm::scheduler::{
     registry, Constraints, Objective, PolicyParams, Problem, Schedule, ScheduleRequest,
 };
+use hstorm::simulator::event::{EventSimConfig, ServiceModel};
 use hstorm::util::cli::Args;
 use hstorm::util::json;
 use hstorm::{Error, Result};
@@ -32,9 +32,10 @@ use hstorm::{Error, Result};
 const VALUE_FLAGS: &[&str] = &[
     "topology", "scenario", "scheduler", "r0", "rate", "seconds", "task", "machine", "json",
     "config", "max-instances", "time-scale", "trace", "steps", "seed", "policy", "cooldown",
-    "objective", "exclude", "headroom",
+    "objective", "exclude", "headroom", "mode", "horizon", "service", "probe",
 ];
-const BOOL_FLAGS: &[&str] = &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies"];
+const BOOL_FLAGS: &[&str] =
+    &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies"];
 
 const USAGE: &str = "hstorm — heterogeneity-aware stream scheduling (Nasiri et al. 2020 repro)
 
@@ -44,12 +45,15 @@ commands:
             [--exclude m1,m2] [--headroom PCT] [--pjrt] [--r0 8]
             [--max-instances 3] | --list-policies
   run       --topology T [--rate R] [--seconds S] [--time-scale X] [--pjrt-compute]
-  simulate  --topology T [--scenario 1..3] [--scheduler ...]
+  simulate  --topology T [--scenario 1..3] [--mode analytic|event] [--rate R]
+            [--horizon SECS] [--service exp|det] [--seed N] [--scheduler ...]
   control   --trace constant|diurnal|ramp|bursty [--topology T] [--scenario 1..3]
             [--policy static|reactive|oracle|all] [--scheduler hetero|default|optimal]
-            [--steps 600] [--seed 42] [--cooldown 10] [--json out.json]
+            [--probe analytic|event] [--steps 600] [--seed 42] [--cooldown 10]
+            [--json out.json]
   profile   [--task highCompute] [--machine pentium]
-  bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|all [--fast] [--json out.json]
+  bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy|all
+            [--fast] [--json out.json]
   config    --config exp.json
 
 topologies: linear diamond star rolling-count unique-visitor
@@ -62,10 +66,19 @@ around drained machines (zero tasks land there); --headroom keeps CPU
 budget free on every machine; min-machines:RATE packs the fewest
 machines that still sustain RATE tuple/s.
 
+simulate --mode event runs the placement through the discrete-event
+tuple simulator instead of the closed-form model: per-task FIFO queues,
+seeded service-time draws (--service exp|det), shuffle-grouped fan-out —
+reporting end-to-end latency percentiles, queue growth and a
+stable/DIVERGING backpressure verdict.  --rate defaults to 90% of the
+certified max; pass a rate above it to watch the queues diverge.
+
 control replays a workload trace over virtual time (no sleeping) and
 compares how a static schedule, the reactive controller and a
 clairvoyant oracle keep up with rate swings, machine churn and profile
-drift; see the controller module docs for breach/cooldown semantics.";
+drift; --probe event feeds breach detection from short event-sim probes
+(backpressure verdicts) instead of the closed form; see the controller
+module docs for breach/cooldown semantics.";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -133,19 +146,59 @@ fn request_from_args(args: &Args) -> Result<ScheduleRequest> {
     Ok(ScheduleRequest::new(objective).with_constraints(constraints))
 }
 
-fn make_schedule(
+/// Attach the PJRT AOT scorer to a problem (`--pjrt`).
+#[cfg(feature = "pjrt")]
+fn attach_pjrt(problem: Problem) -> Result<Problem> {
+    use hstorm::runtime::scorer::PjRtScorer;
+    use hstorm::runtime::PjRtRuntime;
+    let rt = PjRtRuntime::cpu_default()?;
+    let scorer = PjRtScorer::new(&rt, problem.topology(), problem.cluster(), problem.profiles())?;
+    Ok(problem.with_scorer(Box::new(scorer)))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn attach_pjrt(_problem: Problem) -> Result<Problem> {
+    Err(Error::Config(
+        "--pjrt: this binary was built without the `pjrt` cargo feature; rebuild with \
+         `cargo build --features pjrt` against the vendored xla crate"
+            .into(),
+    ))
+}
+
+/// Engine compute mode for `--pjrt-compute`.
+#[cfg(feature = "pjrt")]
+fn pjrt_compute() -> Result<ComputeMode> {
+    Ok(ComputeMode::Pjrt {
+        artifacts_dir: std::env::var("HSTORM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    })
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_compute() -> Result<ComputeMode> {
+    Err(Error::Config(
+        "--pjrt-compute: this binary was built without the `pjrt` cargo feature; rebuild with \
+         `cargo build --features pjrt` against the vendored xla crate"
+            .into(),
+    ))
+}
+
+fn build_problem(
     args: &Args,
     top: &hstorm::topology::Topology,
     cluster: &hstorm::cluster::Cluster,
     db: &hstorm::cluster::profile::ProfileDb,
-) -> Result<Schedule> {
-    let mut problem = Problem::new(top, cluster, db)?;
+) -> Result<Problem> {
+    let problem = Problem::new(top, cluster, db)?;
     if args.has("pjrt") {
-        let rt = PjRtRuntime::cpu_default()?;
-        problem = problem.with_scorer(Box::new(PjRtScorer::new(&rt, top, cluster, db)?));
+        attach_pjrt(problem)
+    } else {
+        Ok(problem)
     }
+}
+
+fn make_schedule(args: &Args, problem: &Problem) -> Result<Schedule> {
     let sched = resolve::policy(args.get_or("scheduler", "hetero"), &params_from_args(args)?)?;
-    sched.schedule(&problem, &request_from_args(args)?)
+    sched.schedule(problem, &request_from_args(args)?)
 }
 
 fn print_schedule(
@@ -175,7 +228,8 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     }
     let top = resolve::topology(args.get_or("topology", "linear"))?;
     let (cluster, db) = resolve::cluster(args.get("scenario"))?;
-    let s = make_schedule(args, &top, &cluster, &db)?;
+    let problem = build_problem(args, &top, &cluster, &db)?;
+    let s = make_schedule(args, &problem)?;
     println!(
         "topology: {}   cluster: {} ({} machines)",
         top.name,
@@ -189,20 +243,14 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let top = resolve::topology(args.get_or("topology", "linear"))?;
     let (cluster, db) = resolve::cluster(args.get("scenario"))?;
-    let s = make_schedule(args, &top, &cluster, &db)?;
+    let problem = build_problem(args, &top, &cluster, &db)?;
+    let s = make_schedule(args, &problem)?;
     let rate = args.get_f64("rate", s.rate)?;
     let seconds = args.get_f64("seconds", 4.0)?;
     let cfg = EngineConfig {
         duration: std::time::Duration::from_secs_f64(seconds),
         time_scale: args.get_f64("time-scale", 1.0)?,
-        compute: if args.has("pjrt-compute") {
-            ComputeMode::Pjrt {
-                artifacts_dir: std::env::var("HSTORM_ARTIFACTS")
-                    .unwrap_or_else(|_| "artifacts".into()),
-            }
-        } else {
-            ComputeMode::Simulated
-        },
+        compute: if args.has("pjrt-compute") { pjrt_compute()? } else { ComputeMode::Simulated },
         ..Default::default()
     };
     println!("running '{}' on engine at {rate:.1} tuple/s for {seconds}s ...", top.name);
@@ -221,22 +269,99 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn service_from_args(args: &Args) -> Result<ServiceModel> {
+    match args.get_or("service", "exp") {
+        "exp" | "exponential" => Ok(ServiceModel::Exponential),
+        "det" | "deterministic" => Ok(ServiceModel::Deterministic),
+        other => Err(Error::Config(format!("unknown --service '{other}' (valid: exp|det)"))),
+    }
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let top = resolve::topology(args.get_or("topology", "linear"))?;
     let (cluster, db) = resolve::cluster(args.get("scenario"))?;
-    let s = make_schedule(args, &top, &cluster, &db)?;
-    let rep = hstorm::simulator::simulate(&top, &cluster, &db, &s.placement, None)?;
-    println!("simulated rate        : {:.1} tuple/s", rep.rate);
-    println!("simulated throughput  : {:.1} tuple/s", rep.throughput);
-    println!("weighted utilization  : {:.1}%   mean: {:.1}%", rep.weighted_util, rep.mean_util);
-    for n in rep.nodes.iter().take(12) {
-        println!(
-            "  {:<14} {:<10} tasks {:>3}  util {:>5.1}%  thpt {:>8.1}",
-            n.machine, n.machine_type, n.tasks, n.util, n.throughput
-        );
-    }
-    if rep.nodes.len() > 12 {
-        println!("  ... {} more nodes", rep.nodes.len() - 12);
+    let problem = build_problem(args, &top, &cluster, &db)?;
+    let s = make_schedule(args, &problem)?;
+    match args.get_or("mode", "analytic") {
+        "analytic" => {
+            // honor --rate in analytic mode too (defaults to the
+            // placement's max stable rate when absent)
+            let rate_override = match args.get("rate") {
+                Some(_) => Some(args.get_f64("rate", 0.0)?),
+                None => None,
+            };
+            let rep = hstorm::simulator::simulate(&problem, &s.placement, rate_override)?;
+            println!("simulated rate        : {:.1} tuple/s", rep.rate);
+            println!("simulated throughput  : {:.1} tuple/s", rep.throughput);
+            println!(
+                "weighted utilization  : {:.1}%   mean: {:.1}%",
+                rep.weighted_util, rep.mean_util
+            );
+            for n in rep.nodes.iter().take(12) {
+                println!(
+                    "  {:<14} {:<10} tasks {:>3}  util {:>5.1}%  thpt {:>8.1}",
+                    n.machine, n.machine_type, n.tasks, n.util, n.throughput
+                );
+            }
+            if rep.nodes.len() > 12 {
+                println!("  ... {} more nodes", rep.nodes.len() - 12);
+            }
+        }
+        "event" => {
+            let defaults = EventSimConfig::default();
+            let horizon = args.get_f64("horizon", defaults.horizon)?;
+            let cfg = EventSimConfig {
+                horizon,
+                warmup: (horizon / 5.0).min(5.0),
+                seed: args.get_usize("seed", defaults.seed as usize)? as u64,
+                service: service_from_args(args)?,
+                ..defaults
+            };
+            let rate = args.get_f64("rate", s.rate * 0.9)?;
+            let rep = hstorm::simulator::event::simulate(&problem, &s.placement, rate, &cfg)?;
+            let pred = problem.evaluator().evaluate(&s.placement, rate)?;
+            println!(
+                "event-sim rate        : {:.1} tuple/s (certified max {:.1}, horizon {:.0}s)",
+                rep.rate, s.rate, rep.horizon
+            );
+            println!("simulated throughput  : {:.1} tuple/s", rep.throughput);
+            println!(
+                "weighted utilization  : {:.1}%   mean: {:.1}%",
+                rep.weighted_util, rep.mean_util
+            );
+            match &rep.latency {
+                Some(l) => println!(
+                    "latency p50/p95/p99   : {:.2} / {:.2} / {:.2} ms  (mean {:.2}, max {:.2}, \
+                     {} tuples)",
+                    l.p50 * 1e3,
+                    l.p95 * 1e3,
+                    l.p99 * 1e3,
+                    l.mean * 1e3,
+                    l.max * 1e3,
+                    l.samples
+                ),
+                None => println!("latency p50/p95/p99   : no sink completions inside the window"),
+            }
+            println!(
+                "max queue depth       : {} tuples   growth {:+.1} tuples/s   shed {}",
+                rep.max_queue, rep.queue_growth, rep.shed
+            );
+            println!("verdict               : {}", rep.verdict());
+            for (m, u) in rep.util.iter().enumerate().take(12) {
+                println!(
+                    "  {:<14} util {:>5.1}%  (predicted {:>5.1}%)",
+                    cluster.machines[m].name, u, pred.util[m]
+                );
+            }
+            if rep.util.len() > 12 {
+                println!("  ... {} more machines", rep.util.len() - 12);
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown --mode '{other}' (valid: analytic|event)"
+            )))
+        }
     }
     Ok(())
 }
@@ -269,6 +394,15 @@ fn cmd_control(args: &Args) -> Result<()> {
         cooldown_steps: args.get_usize("cooldown", ControllerConfig::default().cooldown_steps)?,
         scheduler_policy: args.get_or("scheduler", "hetero").to_string(),
         scheduler_params: params_from_args(args)?,
+        event_probe: match args.get_or("probe", "analytic") {
+            "analytic" => None,
+            "event" => Some(EventSimConfig::probe()),
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown --probe '{other}' (valid: analytic|event)"
+                )))
+            }
+        },
         ..Default::default()
     };
     println!(
@@ -313,7 +447,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let ids: Vec<&str> = if which == "all" {
         vec![
             "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "table5", "space", "ablation",
-            "elastic",
+            "elastic", "accuracy",
         ]
     } else {
         vec![which]
@@ -330,6 +464,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "space" => experiments::complexity::run(fast)?,
             "ablation" => experiments::ablation::run(fast)?,
             "elastic" => experiments::elastic::run(fast)?,
+            "accuracy" => experiments::accuracy::run(fast)?,
             other => return Err(Error::Config(format!("unknown experiment '{other}'"))),
         };
         println!("{}", r.render());

@@ -12,24 +12,37 @@
 //!
 //! Python is never loaded here; the binary is self-contained once
 //! `artifacts/` exists.
+//!
+//! Everything touching the `xla` bindings lives behind the off-by-default
+//! `pjrt` cargo feature: a plain `cargo build` compiles only [`dims`] and
+//! the native side of [`scorer`], so the crate needs no XLA toolchain.
+//! Building `--features pjrt` outside the vendor image resolves `xla` to
+//! the in-repo stub (`rust/xla-stub`) — the code type-checks, and every
+//! PJRT entry point fails at runtime with a "stub" error the callers
+//! already treat as "PJRT unavailable".
 
 pub mod dims;
 pub mod scorer;
 
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
+#[cfg(feature = "pjrt")]
 use crate::{Error, Result};
 
+#[cfg(feature = "pjrt")]
 fn xerr(e: xla::Error) -> Error {
     Error::Runtime(e.to_string())
 }
 
 /// A PJRT client plus the artifacts directory it loads from.
+#[cfg(feature = "pjrt")]
 pub struct PjRtRuntime {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjRtRuntime {
     /// CPU client over `artifacts_dir`; validates `dims.json` up front.
     pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
@@ -78,11 +91,13 @@ impl PjRtRuntime {
 }
 
 /// A compiled HLO module ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with literal inputs; unwraps the jax `return_tuple=True`
     /// wrapper and returns the flat output literals.
@@ -113,10 +128,12 @@ impl Executable {
 /// The engine's per-tuple compute body (`bolt_work` in model.py): a small
 /// fixed-shape vector function executed `k` times per tuple, `k` scaled
 /// by the component's profiled cost.
+#[cfg(feature = "pjrt")]
 pub struct WorkKernel {
     exe: Executable,
 }
 
+#[cfg(feature = "pjrt")]
 impl WorkKernel {
     /// One invocation over a `WORK_N`-vector.
     pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
@@ -144,6 +161,7 @@ impl WorkKernel {
 }
 
 /// Convert a row-major f64 tensor into a shaped f32 literal.
+#[cfg(feature = "pjrt")]
 pub(crate) fn literal_f32(data: &[f64], shape: &[i64]) -> Result<xla::Literal> {
     let flat: Vec<f32> = data.iter().map(|&v| v as f32).collect();
     let n: i64 = shape.iter().product();

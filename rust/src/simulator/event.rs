@@ -1,0 +1,714 @@
+//! Discrete-event, tuple-level simulator — the queueing companion to the
+//! analytic model in [`super`].
+//!
+//! Where [`super::simulate`] answers "what utilization does eq. 5 predict
+//! at rate R0", this module *runs* the placement: every task instance is
+//! a FIFO queue, every machine a single server that round-robins over its
+//! hosted tasks, service times come from the same `ProfileDb` means the
+//! predictor reads (optionally exponentially distributed around them,
+//! deterministic by seed via [`crate::util::rng`]), and tuples fan out
+//! along the topology DAG under shuffle grouping with the eq.-6
+//! fractional-α accumulator.  That buys the axes the closed form cannot
+//! express: end-to-end latency percentiles, queue occupancy over time,
+//! and an explicit backpressure verdict at rates the analytic model calls
+//! unstable.
+//!
+//! ## Unit conventions
+//!
+//! A machine's CPU budget is `cap[m]` %·s per second and per-instance MET
+//! overhead drains it constantly, so the budget left for tuple work is
+//! `cap[m] − ΣMET`.  One tuple of component `c` costs `e[c][m]` %·s,
+//! hence a wall-clock service time of `e / (cap − ΣMET)` seconds — the
+//! machine's busy fraction reaches 1 exactly when eq. 5 utilization
+//! reaches `cap`.  Measured utilization is reported back in eq.-5 units
+//! (`busy_fraction · (cap − ΣMET) + ΣMET`), directly comparable to
+//! [`crate::predict::Evaluator::evaluate`] predictions — the basis of
+//! the `accuracy` experiment ([`crate::experiments::accuracy`]).
+//!
+//! Arrivals are deterministic (one external tuple per spout every `1/R0`
+//! seconds); [`ServiceModel`] chooses whether service draws equal their
+//! mean or are exponential around it.  Both modes are exactly
+//! reproducible from [`EventSimConfig::seed`].
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::predict::Placement;
+use crate::scheduler::Problem;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+use super::stats;
+use super::weighted_utilization;
+
+/// How service times relate to their profiled means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceModel {
+    /// Every draw equals the mean (zero queueing noise; tightest match
+    /// to the analytic model, used by the `accuracy` experiment).
+    Deterministic,
+    /// Exponentially distributed around the mean (realistic queueing
+    /// variance; latency tails grow as load approaches saturation).
+    Exponential,
+}
+
+/// Event-simulator tunables.
+#[derive(Debug, Clone)]
+pub struct EventSimConfig {
+    /// Virtual horizon, seconds.
+    pub horizon: f64,
+    /// Warmup cut before measurement starts, seconds (`< horizon`).
+    pub warmup: f64,
+    pub seed: u64,
+    pub service: ServiceModel,
+    /// Spouts shed external tuples once this many are in flight — a
+    /// memory guard for far-over-saturation runs; any shedding is
+    /// itself reported as backpressure.
+    pub max_in_flight: usize,
+}
+
+impl Default for EventSimConfig {
+    fn default() -> Self {
+        EventSimConfig {
+            horizon: 30.0,
+            warmup: 5.0,
+            seed: 0xE5EED,
+            service: ServiceModel::Exponential,
+            max_in_flight: 200_000,
+        }
+    }
+}
+
+impl EventSimConfig {
+    /// Short-horizon configuration for per-step control-plane probes
+    /// (see [`crate::controller::ControllerConfig::event_probe`]).
+    /// Exponential service on purpose: a deterministic run at an
+    /// analytically feasible rate is stable by construction, so only
+    /// service variance lets the probe flag queueing the closed form
+    /// cannot see.
+    pub fn probe() -> Self {
+        EventSimConfig {
+            horizon: 6.0,
+            warmup: 1.0,
+            service: ServiceModel::Exponential,
+            ..Default::default()
+        }
+    }
+}
+
+/// End-to-end latency of tuples that completed at a sink component
+/// inside the measurement window, seconds.
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    pub samples: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Measured results of one event-simulation run.
+#[derive(Debug, Clone)]
+pub struct EventReport {
+    /// Topology input rate per spout, tuples/s.
+    pub rate: f64,
+    pub horizon: f64,
+    pub warmup: f64,
+    pub seed: u64,
+    /// Tuples processed per second summed over all tasks inside the
+    /// window (the paper's eq.-2 throughput objective).
+    pub throughput: f64,
+    /// Per-component processing rates, tuples/s.
+    pub comp_rate: Vec<f64>,
+    /// Eq.-5-comparable utilization per machine, percent.
+    pub util: Vec<f64>,
+    pub mean_util: f64,
+    /// Eq.-7 weighted overall utilization, percent.
+    pub weighted_util: f64,
+    /// Sink latency percentiles; `None` when nothing reached a sink
+    /// inside the window.
+    pub latency: Option<LatencySummary>,
+    /// `(virtual time, total queued tuples)` samples across the horizon.
+    pub queue_samples: Vec<(f64, usize)>,
+    /// Peak total queue depth observed.
+    pub max_queue: usize,
+    /// External tuples shed by the in-flight guard.
+    pub shed: u64,
+    /// Queue-depth growth between the first and last post-warmup third,
+    /// tuples/s (≈0 when stable, positive under backpressure).
+    pub queue_growth: f64,
+    /// True when queues grow without bound at this rate.
+    pub backpressure: bool,
+}
+
+impl EventReport {
+    /// One-line stability verdict for CLI output and reports.
+    pub fn verdict(&self) -> &'static str {
+        if self.backpressure {
+            "DIVERGING (backpressure: queues grow without bound)"
+        } else {
+            "stable"
+        }
+    }
+}
+
+/// Tuple currently in service on a machine.
+struct Current {
+    task: usize,
+    birth: f64,
+}
+
+/// One task instance: its home, its FIFO queue of tuple birth times,
+/// and its deterministic routing state.
+struct TaskState {
+    comp: usize,
+    machine: usize,
+    queue: VecDeque<f64>,
+    /// Mean wall-clock service time on the hosting machine, seconds
+    /// (`∞` when MET alone exceeds the machine budget).
+    svc_mean: f64,
+    /// Fractional-α accumulator (eq. 6 semantics, per producer task).
+    acc: f64,
+    /// Shuffle cursors, index-aligned with `downstream[comp]`.
+    cursors: Vec<usize>,
+    /// Tuples processed inside the measurement window.
+    done: u64,
+}
+
+/// One machine: a single server draining its hosted tasks round-robin.
+struct MachineState {
+    tasks: Vec<usize>,
+    rr: usize,
+    current: Option<Current>,
+    /// Busy seconds inside the measurement window.
+    busy: f64,
+    /// `cap − ΣMET`, %·s per second of budget left for tuple work.
+    budget: f64,
+    met_total: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    /// External arrival for spout stream `spout` (index into the
+    /// topology's spout list).
+    Arrival { spout: usize },
+    /// The machine's in-service tuple completes.
+    Finish { machine: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    // BinaryHeap is a max-heap; invert so the earliest (time, seq) pops
+    // first — seq makes simultaneous events deterministic.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct Sim<'a> {
+    cfg: &'a EventSimConfig,
+    tasks: Vec<TaskState>,
+    machines: Vec<MachineState>,
+    /// Task ids per component.
+    tasks_of: Vec<Vec<usize>>,
+    downstream: Vec<Vec<usize>>,
+    is_sink: Vec<bool>,
+    alpha: Vec<f64>,
+    /// External-arrival shuffle cursor per spout component.
+    route: Vec<usize>,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    rng: Rng,
+    in_flight: usize,
+    queued: usize,
+    max_queue: usize,
+    shed: u64,
+    latencies: Vec<f64>,
+}
+
+impl Sim<'_> {
+    fn push(&mut self, t: f64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Event { t, seq: self.seq, kind });
+    }
+
+    fn draw_service(&mut self, mean: f64) -> f64 {
+        match self.cfg.service {
+            ServiceModel::Deterministic => mean,
+            ServiceModel::Exponential => {
+                let u = self.rng.f64();
+                -(1.0 - u).ln() * mean
+            }
+        }
+    }
+
+    /// Queue a tuple on `task` and wake its machine if idle.
+    fn enqueue(&mut self, task: usize, birth: f64, now: f64) {
+        self.tasks[task].queue.push_back(birth);
+        self.queued += 1;
+        self.in_flight += 1;
+        if self.queued > self.max_queue {
+            self.max_queue = self.queued;
+        }
+        let m = self.tasks[task].machine;
+        if self.machines[m].current.is_none() {
+            self.start_service(m, now);
+        }
+    }
+
+    /// Pop the next tuple (round-robin over hosted tasks) into service.
+    /// No-op while a tuple is already being served: `finish` calls this
+    /// unconditionally after fan-out, and a same-machine fan-out enqueue
+    /// may already have restarted the server — starting again would
+    /// overwrite `current` and drop the in-service tuple.
+    fn start_service(&mut self, m: usize, now: f64) {
+        if self.machines[m].current.is_some() {
+            return;
+        }
+        if self.machines[m].budget <= 0.0 {
+            return; // MET alone exceeds the CPU budget: nothing ever serves
+        }
+        let n = self.machines[m].tasks.len();
+        for i in 0..n {
+            let idx = (self.machines[m].rr + i) % n;
+            let t = self.machines[m].tasks[idx];
+            let Some(birth) = self.tasks[t].queue.pop_front() else { continue };
+            self.queued -= 1;
+            self.machines[m].rr = (idx + 1) % n;
+            let svc = self.draw_service(self.tasks[t].svc_mean);
+            let end = now + svc;
+            // busy-time overlap with the measurement window
+            let lo = now.max(self.cfg.warmup);
+            let hi = end.min(self.cfg.horizon);
+            if hi > lo {
+                self.machines[m].busy += hi - lo;
+            }
+            self.machines[m].current = Some(Current { task: t, birth });
+            self.push(end, EventKind::Finish { machine: m });
+            return;
+        }
+    }
+
+    /// Complete the in-service tuple: account, fan out, serve the next.
+    fn finish(&mut self, m: usize, now: f64) {
+        let Some(cur) = self.machines[m].current.take() else { return };
+        let t = cur.task;
+        let c = self.tasks[t].comp;
+        self.in_flight -= 1;
+        if now > self.cfg.warmup && now <= self.cfg.horizon {
+            self.tasks[t].done += 1;
+            if self.is_sink[c] {
+                self.latencies.push(now - cur.birth);
+            }
+        }
+        // fan out along the DAG (shuffle grouping, fractional α); every
+        // subscribed consumer component receives the full stream
+        self.tasks[t].acc += self.alpha[c];
+        let emit = self.tasks[t].acc as usize;
+        self.tasks[t].acc -= emit as f64;
+        if emit > 0 {
+            for di in 0..self.downstream[c].len() {
+                let d = self.downstream[c][di];
+                for _ in 0..emit {
+                    let n_inst = self.tasks_of[d].len();
+                    let slot = self.tasks[t].cursors[di] % n_inst;
+                    self.tasks[t].cursors[di] = self.tasks[t].cursors[di].wrapping_add(1);
+                    let target = self.tasks_of[d][slot];
+                    self.enqueue(target, cur.birth, now);
+                }
+            }
+        }
+        self.start_service(m, now);
+    }
+
+    /// Inject one external tuple into spout component `comp`.
+    fn arrival(&mut self, comp: usize, now: f64) {
+        if self.in_flight >= self.cfg.max_in_flight {
+            self.shed += 1;
+            return;
+        }
+        let n_inst = self.tasks_of[comp].len();
+        let slot = self.route[comp] % n_inst;
+        self.route[comp] = self.route[comp].wrapping_add(1);
+        let target = self.tasks_of[comp][slot];
+        self.enqueue(target, now, now);
+    }
+}
+
+/// Run the discrete-event simulation of `placement` at topology input
+/// rate `rate` (tuples/s per spout, the analytic model's `R0`).
+pub fn simulate(
+    problem: &Problem,
+    placement: &Placement,
+    rate: f64,
+    cfg: &EventSimConfig,
+) -> Result<EventReport> {
+    let top = problem.topology();
+    let ev = problem.evaluator();
+    let n_comp = top.n_components();
+    let n_machines = problem.cluster().n_machines();
+    if placement.n_components() != n_comp || placement.n_machines() != n_machines {
+        return Err(Error::Schedule(format!(
+            "placement shape {}x{} != problem {}x{}",
+            placement.n_components(),
+            placement.n_machines(),
+            n_comp,
+            n_machines
+        )));
+    }
+    if placement.counts().iter().any(|&n| n == 0) {
+        return Err(Error::Schedule("placement misses a component".into()));
+    }
+    if !rate.is_finite() || rate <= 0.0 {
+        return Err(Error::Schedule(format!(
+            "event simulation needs a positive finite rate; got {rate}"
+        )));
+    }
+    if !(cfg.warmup >= 0.0 && cfg.horizon > cfg.warmup && cfg.horizon.is_finite()) {
+        return Err(Error::Schedule(format!(
+            "event simulation needs 0 <= warmup < horizon (finite); got warmup {} horizon {}",
+            cfg.warmup, cfg.horizon
+        )));
+    }
+    if cfg.max_in_flight == 0 {
+        return Err(Error::Schedule("max_in_flight must be >= 1".into()));
+    }
+
+    // ---- static tables ---------------------------------------------------
+    let mut met_total = vec![0.0f64; n_machines];
+    for c in 0..n_comp {
+        for m in 0..n_machines {
+            met_total[m] += placement.x[c][m] as f64 * ev.met_m[c][m];
+        }
+    }
+    let downstream: Vec<Vec<usize>> = (0..n_comp).map(|c| top.downstream(c)).collect();
+    let is_sink: Vec<bool> = downstream.iter().map(|d| d.is_empty()).collect();
+    let alpha: Vec<f64> = top.components.iter().map(|c| c.alpha).collect();
+    let spouts = top.spouts();
+
+    // ---- flatten the placement into task instances -----------------------
+    let mut tasks: Vec<TaskState> = Vec::with_capacity(placement.total_tasks());
+    let mut tasks_of: Vec<Vec<usize>> = vec![Vec::new(); n_comp];
+    let mut hosted: Vec<Vec<usize>> = vec![Vec::new(); n_machines];
+    for c in 0..n_comp {
+        for m in 0..n_machines {
+            for _ in 0..placement.x[c][m] {
+                let budget = ev.cap[m] - met_total[m];
+                let id = tasks.len();
+                tasks.push(TaskState {
+                    comp: c,
+                    machine: m,
+                    queue: VecDeque::new(),
+                    svc_mean: if budget > 0.0 { ev.e_m[c][m] / budget } else { f64::INFINITY },
+                    acc: 0.0,
+                    cursors: vec![0; downstream[c].len()],
+                    done: 0,
+                });
+                tasks_of[c].push(id);
+                hosted[m].push(id);
+            }
+        }
+    }
+    let machines: Vec<MachineState> = (0..n_machines)
+        .map(|m| MachineState {
+            tasks: hosted[m].clone(),
+            rr: 0,
+            current: None,
+            busy: 0.0,
+            budget: ev.cap[m] - met_total[m],
+            met_total: met_total[m],
+        })
+        .collect();
+
+    let mut sim = Sim {
+        cfg,
+        tasks,
+        machines,
+        tasks_of,
+        downstream,
+        is_sink,
+        alpha,
+        route: vec![0; n_comp],
+        heap: BinaryHeap::new(),
+        seq: 0,
+        rng: Rng::new(cfg.seed),
+        in_flight: 0,
+        queued: 0,
+        max_queue: 0,
+        shed: 0,
+        latencies: Vec::new(),
+    };
+
+    // seed the arrival streams, phase-staggered so multi-spout
+    // topologies do not inject in lockstep
+    let inter = 1.0 / rate;
+    for i in 0..spouts.len() {
+        let t0 = inter * (i as f64 + 1.0) / spouts.len() as f64;
+        sim.push(t0, EventKind::Arrival { spout: i });
+    }
+
+    // ---- event loop ------------------------------------------------------
+    let n_samples = 64usize;
+    let sample_dt = cfg.horizon / n_samples as f64;
+    let mut sample_k = 1usize;
+    let mut queue_samples: Vec<(f64, usize)> = Vec::with_capacity(n_samples);
+    while let Some(event) = sim.heap.pop() {
+        let now = event.t;
+        while sample_k <= n_samples && sample_k as f64 * sample_dt <= now {
+            queue_samples.push((sample_k as f64 * sample_dt, sim.queued));
+            sample_k += 1;
+        }
+        if now > cfg.horizon {
+            break;
+        }
+        match event.kind {
+            EventKind::Arrival { spout } => {
+                sim.arrival(spouts[spout], now);
+                let next = now + inter;
+                if next <= cfg.horizon {
+                    sim.push(next, EventKind::Arrival { spout });
+                }
+            }
+            EventKind::Finish { machine } => sim.finish(machine, now),
+        }
+    }
+    while sample_k <= n_samples {
+        queue_samples.push((sample_k as f64 * sample_dt, sim.queued));
+        sample_k += 1;
+    }
+
+    // ---- report ----------------------------------------------------------
+    let window = cfg.horizon - cfg.warmup;
+    let mut done_comp = vec![0u64; n_comp];
+    for t in &sim.tasks {
+        done_comp[t.comp] += t.done;
+    }
+    let comp_rate: Vec<f64> = done_comp.iter().map(|&d| d as f64 / window).collect();
+    let throughput: f64 = comp_rate.iter().sum();
+
+    let mut util = Vec::with_capacity(n_machines);
+    for ms in &sim.machines {
+        let frac = (ms.busy / window).clamp(0.0, 1.0);
+        util.push(frac * ms.budget.max(0.0) + ms.met_total);
+    }
+    let mean_util = util.iter().sum::<f64>() / util.len().max(1) as f64;
+    let weighted_util =
+        weighted_utilization(top, problem.cluster(), problem.profiles(), &util)?;
+
+    sim.latencies.sort_by(f64::total_cmp);
+    let latency = if sim.latencies.is_empty() {
+        None
+    } else {
+        Some(LatencySummary {
+            samples: sim.latencies.len(),
+            mean: stats::mean(&sim.latencies),
+            p50: stats::percentile(&sim.latencies, 50.0),
+            p95: stats::percentile(&sim.latencies, 95.0),
+            p99: stats::percentile(&sim.latencies, 99.0),
+            max: *sim.latencies.last().unwrap(),
+        })
+    };
+
+    // verdict: compare queue depth over the first vs last post-warmup
+    // third — a stationary queue keeps them comparable, an unstable one
+    // grows linearly
+    let meas: Vec<(f64, usize)> =
+        queue_samples.iter().copied().filter(|&(t, _)| t >= cfg.warmup).collect();
+    let (queue_growth, diverging) = if meas.len() >= 6 {
+        let k = meas.len() / 3;
+        let head: Vec<f64> = meas[..k].iter().map(|&(_, q)| q as f64).collect();
+        let tail: Vec<f64> = meas[meas.len() - k..].iter().map(|&(_, q)| q as f64).collect();
+        let head_mean = stats::mean(&head);
+        let tail_mean = stats::mean(&tail);
+        let span = (meas[meas.len() - 1].0 - meas[0].0) * 2.0 / 3.0;
+        let growth = if span > 0.0 { (tail_mean - head_mean) / span } else { 0.0 };
+        (growth, tail_mean > 2.0 * head_mean + 10.0)
+    } else {
+        (0.0, false)
+    };
+    let backpressure = diverging || sim.shed > 0;
+
+    Ok(EventReport {
+        rate,
+        horizon: cfg.horizon,
+        warmup: cfg.warmup,
+        seed: cfg.seed,
+        throughput,
+        comp_rate,
+        util,
+        mean_util,
+        weighted_util,
+        latency,
+        queue_samples,
+        max_queue: sim.max_queue,
+        shed: sim.shed,
+        queue_growth,
+        backpressure,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::scheduler::{registry, PolicyParams, Problem, Schedule, ScheduleRequest};
+    use crate::topology::benchmarks;
+    use crate::topology::builder::TopologyBuilder;
+
+    fn hetero(top: crate::topology::Topology) -> (Problem, Schedule) {
+        let (cluster, db) = presets::paper_cluster();
+        let problem = Problem::new(&top, &cluster, &db).unwrap();
+        let s = registry::create("hetero", &PolicyParams::default())
+            .unwrap()
+            .schedule(&problem, &ScheduleRequest::max_throughput())
+            .unwrap();
+        (problem, s)
+    }
+
+    fn det(horizon: f64, warmup: f64) -> EventSimConfig {
+        EventSimConfig {
+            horizon,
+            warmup,
+            service: ServiceModel::Deterministic,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sub_saturation_matches_prediction() {
+        let (problem, s) = hetero(benchmarks::linear());
+        let rate = s.rate * 0.5;
+        let rep = simulate(&problem, &s.placement, rate, &det(20.0, 4.0)).unwrap();
+        let pred = problem.evaluator().evaluate(&s.placement, rate).unwrap();
+        // throughput: 4 components with gain 1 -> 4 * rate
+        let want = 4.0 * rate;
+        let rel = (rep.throughput - want).abs() / want;
+        assert!(rel < 0.05, "throughput {} vs {want} (rel {rel:.3})", rep.throughput);
+        // per-machine utilization tracks eq. 5 closely in deterministic mode
+        for (m, (got, exp)) in rep.util.iter().zip(&pred.util).enumerate() {
+            assert!((got - exp).abs() < 3.0, "machine {m}: {got} vs {exp}");
+        }
+        assert!(!rep.backpressure, "spurious backpressure at 50% load");
+        let lat = rep.latency.expect("sink completions recorded");
+        assert!(lat.samples > 100, "only {} latency samples", lat.samples);
+        assert!(lat.p50 > 0.0 && lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
+        assert!(lat.p99 <= lat.max, "p99 {} above max {}", lat.p99, lat.max);
+    }
+
+    #[test]
+    fn above_max_stable_rate_diverges() {
+        let (problem, s) = hetero(benchmarks::linear());
+        let rate = s.rate * 1.4;
+        let rep = simulate(&problem, &s.placement, rate, &det(16.0, 3.0)).unwrap();
+        assert!(rep.backpressure, "no backpressure verdict at 1.4x the max stable rate");
+        assert!(rep.verdict().contains("DIVERGING"), "{}", rep.verdict());
+        assert!(rep.queue_growth > 0.0 || rep.shed > 0, "growth {}", rep.queue_growth);
+        assert!(rep.max_queue > 100, "max queue only {}", rep.max_queue);
+        // the simulated cluster cannot keep up with the offered stream
+        assert!(rep.throughput < 4.0 * rate * 0.995, "kept up at {}", rep.throughput);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let (problem, s) = hetero(benchmarks::diamond());
+        let cfg = EventSimConfig { horizon: 10.0, warmup: 2.0, seed: 77, ..Default::default() };
+        let a = simulate(&problem, &s.placement, s.rate * 0.8, &cfg).unwrap();
+        let b = simulate(&problem, &s.placement, s.rate * 0.8, &cfg).unwrap();
+        assert_eq!(a.throughput, b.throughput);
+        assert_eq!(a.max_queue, b.max_queue);
+        assert_eq!(a.latency.as_ref().unwrap().p99, b.latency.as_ref().unwrap().p99);
+        assert_eq!(a.queue_samples, b.queue_samples);
+    }
+
+    #[test]
+    fn latency_grows_with_load_under_exponential_service() {
+        let (problem, s) = hetero(benchmarks::linear());
+        let cfg = EventSimConfig { horizon: 20.0, warmup: 4.0, ..Default::default() };
+        let low = simulate(&problem, &s.placement, s.rate * 0.3, &cfg).unwrap();
+        let high = simulate(&problem, &s.placement, s.rate * 0.9, &cfg).unwrap();
+        let (l, h) = (low.latency.unwrap(), high.latency.unwrap());
+        assert!(
+            h.mean > l.mean,
+            "queueing should raise mean latency: {} at 90% vs {} at 30%",
+            h.mean,
+            l.mean
+        );
+        assert!(h.p99 > l.p99, "p99 {} at 90% vs {} at 30%", h.p99, l.p99);
+    }
+
+    #[test]
+    fn alpha_scales_downstream_rates() {
+        // spout with α = 2 doubles the bolt's stream (eq. 6)
+        let top = TopologyBuilder::new("amplify")
+            .spout("s", "spout", 2.0)
+            .bolt("b", "lowCompute", 1.0, &["s"])
+            .build()
+            .unwrap();
+        let (problem, s) = hetero(top);
+        let rate = s.rate * 0.5;
+        let rep = simulate(&problem, &s.placement, rate, &det(20.0, 4.0)).unwrap();
+        let ratio = rep.comp_rate[1] / rep.comp_rate[0].max(1e-9);
+        assert!((ratio - 2.0).abs() < 0.1, "bolt/spout rate ratio {ratio}");
+    }
+
+    #[test]
+    fn in_flight_guard_sheds_and_reports() {
+        let (problem, s) = hetero(benchmarks::linear());
+        let cfg = EventSimConfig {
+            max_in_flight: 64,
+            ..det(10.0, 2.0)
+        };
+        let rep = simulate(&problem, &s.placement, s.rate * 1.5, &cfg).unwrap();
+        assert!(rep.shed > 0, "guard never shed");
+        assert!(rep.backpressure, "shedding must count as backpressure");
+        assert!(rep.max_queue <= 64 + 1, "guard leaked: {}", rep.max_queue);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let (problem, s) = hetero(benchmarks::linear());
+        // empty placement misses components
+        let empty = Placement::empty(4, 3);
+        assert!(simulate(&problem, &empty, 10.0, &det(10.0, 2.0)).is_err());
+        // non-positive rate
+        assert!(simulate(&problem, &s.placement, 0.0, &det(10.0, 2.0)).is_err());
+        // warmup >= horizon
+        assert!(simulate(&problem, &s.placement, 10.0, &det(2.0, 2.0)).is_err());
+        // non-finite horizon would spin the event loop forever
+        assert!(simulate(&problem, &s.placement, 10.0, &det(f64::INFINITY, 2.0)).is_err());
+        // shape mismatch
+        let bad = Placement::empty(2, 3);
+        assert!(simulate(&problem, &bad, 10.0, &det(10.0, 2.0)).is_err());
+    }
+
+    #[test]
+    fn queue_samples_cover_horizon() {
+        let (problem, s) = hetero(benchmarks::linear());
+        let rep = simulate(&problem, &s.placement, s.rate * 0.4, &det(12.0, 2.0)).unwrap();
+        assert_eq!(rep.queue_samples.len(), 64);
+        let (t_first, _) = rep.queue_samples[0];
+        let (t_last, _) = *rep.queue_samples.last().unwrap();
+        assert!(t_first > 0.0);
+        assert!((t_last - 12.0).abs() < 1e-9, "last sample at {t_last}");
+    }
+}

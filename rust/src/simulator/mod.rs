@@ -1,21 +1,35 @@
-//! Analytic large-scale simulator (paper §6.3).
+//! Simulators (paper §6.3): the closed-form analytic model and its
+//! discrete-event companion.
 //!
-//! Given a placement, the simulator reports per-node throughput and CPU
-//! utilization at the placement's max sustainable input rate, plus the
-//! paper's aggregate metrics: overall throughput (sum of task processing
-//! rates) and **weighted overall utilization** (eq. 7/8 — machines with
-//! more processing capacity weigh more, with weights derived from the
-//! profiling data `1/e_ij`).
+//! [`simulate`] is the faithful equivalent of the paper's
+//! Scheduling-Simulator repo — purely model-driven, no queueing: given a
+//! placement it reports per-node throughput and CPU utilization at the
+//! placement's max sustainable input rate, plus the paper's aggregate
+//! metrics (overall throughput, eq. 2, and **weighted overall
+//! utilization**, eq. 7/8 — machines with more processing capacity weigh
+//! more, with weights derived from the profiling data `1/e_ij`).
 //!
-//! This is the faithful equivalent of the paper's Scheduling-Simulator
-//! repo: purely model-driven, no queueing — the tokio engine
-//! ([`crate::engine`]) plays the role of the real cluster instead.
+//! [`event`] runs the same placement as a tuple-level discrete-event
+//! simulation (per-task FIFO queues, seeded service draws, shuffle
+//! fan-out), adding the axes the closed form cannot express: latency
+//! percentiles, queue occupancy over time and a backpressure verdict.
+//! The threaded engine ([`crate::engine`]) remains the wall-clock "real
+//! cluster" substitute; the event simulator is its virtual-time sibling
+//! for scales the engine cannot reach.
+//!
+//! Both entry points take the [`Problem`] the schedulers already hold,
+//! reusing its cached [`crate::predict::Evaluator`] tables instead of
+//! re-expanding profiles per call.
+
+pub mod event;
+pub mod stats;
 
 use std::collections::HashMap;
 
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::Cluster;
-use crate::predict::{Evaluator, Placement};
+use crate::predict::Placement;
+use crate::scheduler::Problem;
 use crate::topology::Topology;
 use crate::Result;
 
@@ -48,15 +62,17 @@ pub struct SimReport {
 
 /// Run the analytic simulation of `placement` at its max stable rate
 /// (or at `rate_override` if given — used for like-for-like comparisons
-/// where both schedulers must run the same input rate).
+/// where both schedulers must run the same input rate).  Evaluates
+/// through the problem's cached [`crate::predict::Evaluator`] — no
+/// per-call profile re-expansion.
 pub fn simulate(
-    top: &Topology,
-    cluster: &Cluster,
-    profiles: &ProfileDb,
+    problem: &Problem,
     placement: &Placement,
     rate_override: Option<f64>,
 ) -> Result<SimReport> {
-    let ev = Evaluator::new(top, cluster, profiles)?;
+    let top = problem.topology();
+    let cluster = problem.cluster();
+    let ev = problem.evaluator();
     let rate = match rate_override {
         Some(r) => r,
         None => ev.max_stable_rate_or_zero(placement)?,
@@ -84,7 +100,7 @@ pub fn simulate(
         });
     }
 
-    let weighted_util = weighted_utilization(top, cluster, profiles, &eval.util)?;
+    let weighted_util = weighted_utilization(top, cluster, problem.profiles(), &eval.util)?;
     let mean_util = eval.util.iter().sum::<f64>() / eval.util.len().max(1) as f64;
     Ok(SimReport { rate, throughput: eval.throughput, weighted_util, mean_util, nodes })
 }
@@ -149,17 +165,20 @@ mod tests {
         top: &crate::topology::Topology,
         cluster: &Cluster,
         db: &ProfileDb,
-    ) -> crate::scheduler::Schedule {
+    ) -> (Problem, crate::scheduler::Schedule) {
         let problem = Problem::new(top, cluster, db).unwrap();
-        HeteroScheduler::default().schedule(&problem, &ScheduleRequest::max_throughput()).unwrap()
+        let s = HeteroScheduler::default()
+            .schedule(&problem, &ScheduleRequest::max_throughput())
+            .unwrap();
+        (problem, s)
     }
 
     #[test]
     fn simulate_hetero_schedule() {
         let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
-        let s = hetero_schedule(&top, &cluster, &db);
-        let rep = simulate(&top, &cluster, &db, &s.placement, None).unwrap();
+        let (problem, s) = hetero_schedule(&top, &cluster, &db);
+        let rep = simulate(&problem, &s.placement, None).unwrap();
         assert!(rep.throughput > 0.0);
         assert!(rep.rate > 0.0);
         assert_eq!(rep.nodes.len(), cluster.n_machines());
@@ -242,8 +261,8 @@ mod tests {
     fn rate_override_respected() {
         let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
-        let s = hetero_schedule(&top, &cluster, &db);
-        let rep = simulate(&top, &cluster, &db, &s.placement, Some(10.0)).unwrap();
+        let (problem, s) = hetero_schedule(&top, &cluster, &db);
+        let rep = simulate(&problem, &s.placement, Some(10.0)).unwrap();
         assert!((rep.rate - 10.0).abs() < 1e-12);
         // linear topology with alpha=1: throughput = n_comp * rate
         assert!((rep.throughput - 40.0).abs() < 1e-6);
@@ -254,8 +273,8 @@ mod tests {
         use crate::cluster::scenarios;
         let (cluster, db) = scenarios::by_id(1).unwrap().build();
         let top = benchmarks::diamond();
-        let s = hetero_schedule(&top, &cluster, &db);
-        let rep = simulate(&top, &cluster, &db, &s.placement, None).unwrap();
+        let (problem, s) = hetero_schedule(&top, &cluster, &db);
+        let rep = simulate(&problem, &s.placement, None).unwrap();
         assert!(rep.throughput > 0.0);
         assert_eq!(rep.nodes.len(), 6);
     }

@@ -62,7 +62,8 @@ fn hetero_schedule_runs_at_certified_rate() {
 fn engine_matches_analytic_simulator() {
     let top = benchmarks::diamond();
     let (s, cluster, db) = hetero(&top);
-    let sim = simulator::simulate(&top, &cluster, &db, &s.placement, Some(s.rate)).unwrap();
+    let problem = Problem::new(&top, &cluster, &db).unwrap();
+    let sim = simulator::simulate(&problem, &s.placement, Some(s.rate)).unwrap();
     let rep = engine::run(&top, &cluster, &db, &s.placement, s.rate, &cfg()).unwrap();
     let rel = (rep.throughput - sim.throughput).abs() / sim.throughput;
     // the paper reports <= 13% impl-vs-sim difference

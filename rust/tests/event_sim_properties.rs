@@ -1,0 +1,138 @@
+//! Cross-validation properties: the discrete-event simulator must agree
+//! with the analytic model below saturation — steady-state throughput
+//! and per-machine utilization converge to the eq. 5/6 predictions — and
+//! must visibly diverge (backpressure verdict, growing queues) strictly
+//! above the analytic max stable rate.
+
+use hstorm::cluster::presets;
+use hstorm::scheduler::{registry, PolicyParams, Problem, Schedule, ScheduleRequest};
+use hstorm::simulator;
+use hstorm::simulator::event::{self, EventSimConfig, ServiceModel};
+use hstorm::topology::benchmarks;
+use hstorm::util::prop;
+
+fn hetero_on(top_idx: usize) -> (Problem, Schedule) {
+    let tops = benchmarks::all();
+    let top = &tops[top_idx % tops.len()];
+    let (cluster, db) = presets::paper_cluster();
+    let problem = Problem::new(top, &cluster, &db).unwrap();
+    let s = registry::create("hetero", &PolicyParams::default())
+        .unwrap()
+        .schedule(&problem, &ScheduleRequest::max_throughput())
+        .unwrap();
+    (problem, s)
+}
+
+#[test]
+fn event_sim_converges_to_analytic_below_saturation() {
+    prop::check(
+        "event-vs-analytic-sub-saturation",
+        6,
+        |rng| {
+            (
+                rng.range(0, benchmarks::NAMES.len() - 1), // topology
+                rng.range_f64(0.2, 0.75),                  // sub-saturation fraction
+                rng.chance(0.5),                           // exponential service?
+                rng.next_u64(),                            // sim seed
+            )
+        },
+        |&(t, frac, exponential, seed)| {
+            let (problem, s) = hetero_on(t);
+            let rate = s.rate * frac;
+            if rate <= 0.0 {
+                return Err("certified rate is 0".into());
+            }
+            let analytic = simulator::simulate(&problem, &s.placement, Some(rate))
+                .map_err(|e| e.to_string())?;
+            let cfg = EventSimConfig {
+                horizon: 16.0,
+                warmup: 4.0,
+                seed,
+                service: if exponential {
+                    ServiceModel::Exponential
+                } else {
+                    ServiceModel::Deterministic
+                },
+                ..Default::default()
+            };
+            let rep = event::simulate(&problem, &s.placement, rate, &cfg)
+                .map_err(|e| e.to_string())?;
+            let rel = (rep.throughput - analytic.throughput).abs()
+                / analytic.throughput.max(1e-9);
+            if rel > 0.08 {
+                return Err(format!(
+                    "throughput {} vs analytic {} (rel {rel:.3})",
+                    rep.throughput, analytic.throughput
+                ));
+            }
+            if rep.backpressure {
+                return Err(format!(
+                    "spurious backpressure verdict at {:.0}% of the max stable rate",
+                    frac * 100.0
+                ));
+            }
+            if rep.latency.is_none() {
+                return Err("no sink latency samples below saturation".into());
+            }
+            for m in 0..rep.util.len() {
+                let diff = (rep.util[m] - analytic.nodes[m].util).abs();
+                if diff > 6.0 {
+                    return Err(format!(
+                        "machine {m}: simulated util {:.2}% vs predicted {:.2}% ({diff:.2} pp)",
+                        rep.util[m], analytic.nodes[m].util
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn event_sim_diverges_above_max_stable_rate() {
+    prop::check(
+        "event-backpressure-above-saturation",
+        4,
+        |rng| {
+            (
+                rng.range(0, benchmarks::NAMES.len() - 1),
+                rng.range_f64(1.25, 1.7), // overload multiplier
+                rng.next_u64(),
+            )
+        },
+        |&(t, mult, seed)| {
+            let (problem, s) = hetero_on(t);
+            let rate = s.rate * mult;
+            let cfg = EventSimConfig {
+                horizon: 14.0,
+                warmup: 3.0,
+                seed,
+                service: ServiceModel::Deterministic,
+                ..Default::default()
+            };
+            let rep = event::simulate(&problem, &s.placement, rate, &cfg)
+                .map_err(|e| e.to_string())?;
+            if !rep.backpressure {
+                return Err(format!(
+                    "no backpressure at {mult:.2}x the analytic max stable rate \
+                     (queue growth {:.1}/s, max queue {})",
+                    rep.queue_growth, rep.max_queue
+                ));
+            }
+            if rep.queue_growth <= 0.0 && rep.shed == 0 {
+                return Err("diverging verdict without queue growth or shedding".into());
+            }
+            // the offered stream strictly exceeds what gets processed
+            let offered = simulator::simulate(&problem, &s.placement, Some(rate))
+                .map_err(|e| e.to_string())?
+                .throughput;
+            if rep.throughput >= offered {
+                return Err(format!(
+                    "simulated throughput {} kept up with an infeasible offered {}",
+                    rep.throughput, offered
+                ));
+            }
+            Ok(())
+        },
+    );
+}
