@@ -67,15 +67,47 @@ fn main() {
     #[cfg(not(feature = "pjrt"))]
     println!("  (pjrt scorer skipped: built without the `pjrt` feature)");
 
-    // the full bounded optimal search, end to end
-    let os = OptimalScheduler { max_instances_per_component: if fast { 2 } else { 3 }, ..Default::default() };
+    // the full bounded optimal search, end to end: naive batched engine
+    // vs the incremental kernel, single-threaded and sharded
+    let max_inst = if fast { 2 } else { 3 };
+    let os = OptimalScheduler {
+        max_instances_per_component: max_inst,
+        threads: 1,
+        ..Default::default()
+    };
     let space = os.design_space_size(n, m);
     let problem = Problem::new(&top, &cluster, &db).expect("problem");
-    let (s, dt) = bench::time_once(|| {
-        os.schedule(&problem, &ScheduleRequest::max_throughput()).expect("optimal schedules")
-    });
+    let req = ScheduleRequest::max_throughput();
+
+    let (naive, dt_naive) =
+        bench::time_once(|| os.schedule_naive(&problem, &req).expect("naive engine schedules"));
+    let (incr, dt_incr) =
+        bench::time_once(|| os.schedule(&problem, &req).expect("kernel engine schedules"));
+    let par_os = OptimalScheduler { threads: 0, ..os.clone() };
+    let (par, dt_par) =
+        bench::time_once(|| par_os.schedule(&problem, &req).expect("parallel kernel schedules"));
+
+    let cps = |s: &hstorm::scheduler::Schedule| {
+        s.provenance.placements_evaluated as f64 / s.provenance.wall.as_secs_f64().max(1e-9)
+    };
+    println!("full optimal search over {space} placements (paper's comparator: hours):");
     println!(
-        "full optimal search over {space} placements: {dt:?} -> rate {:.1} t/s (paper's comparator: hours)",
-        s.rate
+        "  naive batched engine       : {dt_naive:?} -> rate {:.1} t/s ({:.0} candidates/s)",
+        naive.rate,
+        cps(&naive)
     );
+    println!(
+        "  incremental kernel, 1 thr  : {dt_incr:?} -> rate {:.1} t/s ({:.0} candidates/s, {:.1}x)",
+        incr.rate,
+        cps(&incr),
+        cps(&incr) / cps(&naive)
+    );
+    println!(
+        "  incremental kernel, N thr  : {dt_par:?} -> rate {:.1} t/s ({:.0} candidates/s, {:.1}x)",
+        par.rate,
+        cps(&par),
+        cps(&par) / cps(&naive)
+    );
+    assert_eq!(naive.placement, incr.placement, "engines must select the same schedule");
+    assert_eq!(incr.placement, par.placement, "sharding must not change the schedule");
 }

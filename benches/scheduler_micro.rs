@@ -5,6 +5,7 @@
 //! Run: cargo bench --bench scheduler_micro  [HSTORM_FAST=1 for quick mode]
 
 use hstorm::cluster::{presets, scenarios};
+use hstorm::predict::kernel::{self, AccumState, DeltaEval};
 use hstorm::predict::{Evaluator, Placement};
 use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
 use hstorm::topology::benchmarks;
@@ -15,7 +16,8 @@ fn main() {
     let iters = if fast { 50 } else { 500 };
     let req = ScheduleRequest::max_throughput();
     let hetero = registry::create("hetero", &PolicyParams::default()).expect("hetero registered");
-    let default = registry::create("default", &PolicyParams::default()).expect("default registered");
+    let default =
+        registry::create("default", &PolicyParams::default()).expect("default registered");
 
     // paper cluster (3 machines)
     let (cluster, db) = presets::paper_cluster();
@@ -29,8 +31,32 @@ fn main() {
     bench::run("evaluate placement (5 comp x 3 machines)", 10, iters * 10, || {
         ev.evaluate(&p, 100.0).expect("evaluates");
     });
+    let mut counts_scratch = Vec::new();
+    bench::run("evaluate placement (kernel scratch reuse)", 10, iters * 10, || {
+        kernel::evaluate_with_scratch(&ev, &p, 100.0, &mut counts_scratch).expect("evaluates");
+    });
     bench::run("max_stable_rate closed form", 10, iters * 10, || {
         ev.max_stable_rate(&p).expect("rate");
+    });
+
+    // naive-vs-incremental single-candidate scoring: the closed form
+    // recomputed from scratch vs a kernel accumulator push/pop vs a
+    // DeltaEval move probe
+    let rows = kernel::rows_of_placement(&ev, &p);
+    let mut acc = AccumState::new(ev.n_machines());
+    // pre-push components n-1..1 in search order; the timed body pushes
+    // the innermost component's row (rows[0]) and pops it back off
+    for row in rows.iter().skip(1).rev() {
+        acc.push(row);
+    }
+    bench::run("kernel rate via row push/pop (1 row delta)", 10, iters * 10, || {
+        acc.push(&rows[0]);
+        std::hint::black_box(acc.rate(&ev.cap));
+        acc.pop();
+    });
+    let de = DeltaEval::new(&ev, &p).expect("delta state");
+    bench::run("DeltaEval move probe (O(M), no clone)", 10, iters * 10, || {
+        std::hint::black_box(de.rate_with_move(0, 0, 1));
     });
     bench::run("problem build (validate + expand profiles)", 10, iters * 10, || {
         Problem::new(&top, &cluster, &db).expect("problem");

@@ -32,8 +32,16 @@ fn main() -> hstorm::Result<()> {
         cluster: ClusterConfig {
             name: "edge-cluster".into(),
             groups: vec![
-                MachineGroupConfig { machine_type: "arm-edge".into(), description: "ARM edge node".into(), count: 2 },
-                MachineGroupConfig { machine_type: "xeon".into(), description: "Xeon server".into(), count: 1 },
+                MachineGroupConfig {
+                    machine_type: "arm-edge".into(),
+                    description: "ARM edge node".into(),
+                    count: 2,
+                },
+                MachineGroupConfig {
+                    machine_type: "xeon".into(),
+                    description: "Xeon server".into(),
+                    count: 1,
+                },
             ],
         },
         profiles: profile_rows(),

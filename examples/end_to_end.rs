@@ -76,9 +76,12 @@ fn main() -> hstorm::Result<()> {
             registry::create("default", &PolicyParams::default())?.schedule(&problem, &req)?;
 
         // ---- 3. run on the engine ---------------------------------------------
-        println!("\n[3/4] running '{}' on the engine (proposed @ {:.0} t/s, default @ {:.0} t/s)...",
-            top.name, ours.rate, default.rate);
-        let ours_rep = engine::run(&top, &cluster, &profiles, &ours.placement, ours.rate, &engine_cfg)?;
+        println!(
+            "\n[3/4] running '{}' on the engine (proposed @ {:.0} t/s, default @ {:.0} t/s)...",
+            top.name, ours.rate, default.rate
+        );
+        let ours_rep =
+            engine::run(&top, &cluster, &profiles, &ours.placement, ours.rate, &engine_cfg)?;
         let def_rep =
             engine::run(&top, &cluster, &profiles, &default.placement, default.rate, &engine_cfg)?;
 

@@ -36,7 +36,11 @@ impl TopologyConfig {
     pub fn from_json(v: &Value) -> Result<Self> {
         let name = v.str_field("name")?.to_string();
         let mut components = Vec::new();
-        for c in v.get("components")?.as_arr().ok_or_else(|| Error::Config("components must be an array".into()))? {
+        let comps = v
+            .get("components")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("components must be an array".into()))?;
+        for c in comps {
             components.push(ComponentConfig {
                 name: c.str_field("name")?.to_string(),
                 kind: c.str_field("kind")?.to_string(),
@@ -160,10 +164,18 @@ pub struct ClusterConfig {
 impl ClusterConfig {
     pub fn from_json(v: &Value) -> Result<Self> {
         let mut groups = Vec::new();
-        for g in v.get("groups")?.as_arr().ok_or_else(|| Error::Config("groups must be an array".into()))? {
+        let rows = v
+            .get("groups")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("groups must be an array".into()))?;
+        for g in rows {
             groups.push(MachineGroupConfig {
                 machine_type: g.str_field("machine_type")?.to_string(),
-                description: g.opt("description").and_then(|d| d.as_str()).unwrap_or("").to_string(),
+                description: g
+                    .opt("description")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("")
+                    .to_string(),
                 count: g
                     .get("count")?
                     .as_usize()
@@ -235,7 +247,11 @@ pub struct ExperimentConfig {
 impl ExperimentConfig {
     pub fn from_json(v: &Value) -> Result<Self> {
         let mut profiles = Vec::new();
-        for r in v.get("profiles")?.as_arr().ok_or_else(|| Error::Config("profiles must be an array".into()))? {
+        let rows = v
+            .get("profiles")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("profiles must be an array".into()))?;
+        for r in rows {
             profiles.push(ProfileRowConfig {
                 task_type: r.str_field("task_type")?.to_string(),
                 machine_type: r.str_field("machine_type")?.to_string(),

@@ -69,6 +69,7 @@ use std::collections::HashMap;
 
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::{Cluster, Machine};
+use crate::predict::kernel;
 use crate::predict::Placement;
 use crate::scheduler::{
     registry, reschedule, PolicyParams, Problem, Schedule, ScheduleRequest, Scheduler,
@@ -253,12 +254,38 @@ impl NamedPlacement {
 
     /// Max stable rate of this placement on the current world, 0 when a
     /// component has lost all its instances or the rate is unbounded.
+    /// Read off the kernel's incremental slope/intercept state
+    /// ([`kernel::DeltaEval`]), the same closed form the schedulers use.
     fn capacity(&self, problem: &Problem) -> Result<f64> {
         let p = self.project(problem.cluster());
-        if p.counts().iter().any(|&n| n == 0) {
-            return Ok(0.0);
+        Ok(kernel::DeltaEval::new(problem.evaluator(), &p)?.rate_or_zero())
+    }
+}
+
+/// Per-step capacity memo for the breach path: the placement's max
+/// stable rate only changes when the world version or the tracked
+/// placement does, so quiet steps read a cached scalar instead of
+/// re-deriving the closed form (`O(C·M)` + projection allocations) every
+/// virtual second.
+#[derive(Debug, Clone, Copy, Default)]
+struct CapacityCache {
+    key: Option<(u64, u64)>,
+    value: f64,
+}
+
+impl CapacityCache {
+    fn get(
+        &mut self,
+        np: &NamedPlacement,
+        problem: &Problem,
+        problem_version: u64,
+        np_epoch: u64,
+    ) -> Result<f64> {
+        if self.key != Some((problem_version, np_epoch)) {
+            self.value = np.capacity(problem)?;
+            self.key = Some((problem_version, np_epoch));
         }
-        problem.evaluator().max_stable_rate_or_zero(&p)
+        Ok(self.value)
     }
 }
 
@@ -314,6 +341,8 @@ fn run_policy_from(
 
     let mut world = World::new(cluster.clone(), profiles.clone());
     let mut np = NamedPlacement::capture(&initial.placement, &world.cluster);
+    let mut np_epoch = 0u64;
+    let mut cap_cache = CapacityCache::default();
     let mut cur: Schedule = initial;
     let mut scheduled_version = world.version;
     let mut rebuilt: Option<Problem> = None;
@@ -356,6 +385,7 @@ fn run_policy_from(
                             NamedPlacement::capture(&r.schedule.placement, &world.cluster);
                         migrated_step += migrated_tasks(&np, &new_np);
                         np = new_np;
+                        np_epoch += 1;
                         cur = r.schedule;
                         world.remove_machine(machine);
                         scheduled_version = world.version;
@@ -376,7 +406,7 @@ fn run_policy_from(
             problem_version = world.version;
         }
         let problem = rebuilt.as_ref().unwrap_or(day_zero);
-        let mut capacity = np.capacity(problem)?;
+        let mut capacity = cap_cache.get(&np, problem, problem_version, np_epoch)?;
 
         // 3. breach detection / scheduling decision
         let dirty = scheduled_version != world.version;
@@ -431,9 +461,10 @@ fn run_policy_from(
                 let new_np = NamedPlacement::capture(&s.placement, &world.cluster);
                 migrated_step += migrated_tasks(&np, &new_np);
                 np = new_np;
+                np_epoch += 1;
                 cur = s;
                 scheduled_version = world.version;
-                capacity = np.capacity(problem)?;
+                capacity = cap_cache.get(&np, problem, problem_version, np_epoch)?;
                 cooldown = cfg.cooldown_steps;
                 resched_step = true;
             }

@@ -119,12 +119,19 @@ impl ControlReport {
     /// Render the aggregate comparison for the terminal.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "\n=== control — trace '{}' ({} steps, seed {}) on '{}' @ '{}' (base rate {:.1} tuple/s) ===\n",
+            "\n=== control — trace '{}' ({} steps, seed {}) on '{}' @ '{}' \
+             (base rate {:.1} tuple/s) ===\n",
             self.trace, self.steps, self.seed, self.topology, self.cluster, self.base_rate
         );
         out.push_str(&format!(
             "{:<10} {:>14} {:>14} {:>10} {:>8} {:>12} {:>9}\n",
-            "policy", "offered(tup)", "delivered(tup)", "deliv %", "SLO-s", "reschedules", "migrated"
+            "policy",
+            "offered(tup)",
+            "delivered(tup)",
+            "deliv %",
+            "SLO-s",
+            "reschedules",
+            "migrated"
         ));
         out.push_str(&"-".repeat(84));
         out.push('\n');

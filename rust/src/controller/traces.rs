@@ -280,12 +280,10 @@ mod tests {
     fn diurnal_has_outage_drift_and_rejoin() {
         let (top, cluster) = setup();
         let t = diurnal(&top, &cluster, 240, 9);
-        let leaves =
-            t.steps.iter().flat_map(|s| &s.events).filter(|e| matches!(e, ClusterEvent::Leave { .. }));
-        let joins =
-            t.steps.iter().flat_map(|s| &s.events).filter(|e| matches!(e, ClusterEvent::Join { .. }));
-        let drifts =
-            t.steps.iter().flat_map(|s| &s.events).filter(|e| matches!(e, ClusterEvent::Drift { .. }));
+        let events = || t.steps.iter().flat_map(|s| &s.events);
+        let leaves = events().filter(|e| matches!(e, ClusterEvent::Leave { .. }));
+        let joins = events().filter(|e| matches!(e, ClusterEvent::Join { .. }));
+        let drifts = events().filter(|e| matches!(e, ClusterEvent::Drift { .. }));
         assert_eq!(leaves.count(), 1);
         assert_eq!(joins.count(), 1);
         assert_eq!(drifts.count(), 2);

@@ -94,8 +94,15 @@ pub fn run(_fast: bool) -> Result<ExperimentResult> {
             ),
         ]);
     }
-    out.note("weighted grouping applies speed-proportional stream shares to the proposed placement (paper §8 future work); it helps isolated instances and can hurt co-located ones");
-    out.note("hetero-blind: schedule computed from type-averaged profiles, evaluated on true costs — what ignoring heterogeneity costs");
+    out.note(
+        "weighted grouping applies speed-proportional stream shares to the proposed \
+         placement (paper §8 future work); it helps isolated instances and can hurt \
+         co-located ones",
+    );
+    out.note(
+        "hetero-blind: schedule computed from type-averaged profiles, evaluated on \
+         true costs — what ignoring heterogeneity costs",
+    );
     Ok(out)
 }
 

@@ -48,8 +48,14 @@ pub fn run(fast: bool) -> Result<ExperimentResult> {
             ]);
         }
     }
-    out.note("delivered %: share of the offered load volume actually delivered (capacity-clipped, minus migration downtime)");
-    out.note("static pins the day-zero placement; reactive reschedules on breach with cooldown; oracle takes a decision every step");
+    out.note(
+        "delivered %: share of the offered load volume actually delivered \
+         (capacity-clipped, minus migration downtime)",
+    );
+    out.note(
+        "static pins the day-zero placement; reactive reschedules on breach with \
+         cooldown; oracle takes a decision every step",
+    );
     Ok(out)
 }
 

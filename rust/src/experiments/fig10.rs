@@ -136,7 +136,10 @@ pub fn table5(fast: bool) -> Result<ExperimentResult> {
         }
         out.row(row);
     }
-    out.note("paper Table 5: ratios 1.03 .. 2.68, all > 1 (throughput grows faster than CPU spend)");
+    out.note(
+        "paper Table 5: ratios 1.03 .. 2.68, all > 1 (throughput grows faster than \
+         CPU spend)",
+    );
     Ok(out)
 }
 

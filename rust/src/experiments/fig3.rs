@@ -49,7 +49,10 @@ pub fn run(fast: bool) -> Result<ExperimentResult> {
             pct(gap),
         ]);
     }
-    out.note("paper Fig. 3 shows a remarkable gap between default and optimal on a heterogeneous cluster");
+    out.note(
+        "paper Fig. 3 shows a remarkable gap between default and optimal on a \
+         heterogeneous cluster",
+    );
     if fast {
         out.note("fast mode: identical here (fig3 is model-only)");
     }

@@ -137,7 +137,8 @@ pub fn run(fast: bool) -> Result<ExperimentResult> {
     let max_err = abs_errs.iter().cloned().fold(0.0, f64::max);
     let mean_err = abs_errs.iter().sum::<f64>() / abs_errs.len().max(1) as f64;
     out.note(format!(
-        "prediction accuracy: mean |err| = {mean_err:.2} pp, max |err| = {max_err:.2} pp over {} points",
+        "prediction accuracy: mean |err| = {mean_err:.2} pp, max |err| = {max_err:.2} pp \
+         over {} points",
         abs_errs.len()
     ));
     out.note(format!(

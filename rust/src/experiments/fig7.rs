@@ -77,7 +77,9 @@ pub fn run(fast: bool) -> Result<ExperimentResult> {
         }
         let delta = (s.ours.2 - s.best.2) / s.best.2 * 100.0;
         out.note(format!(
-            "{}: ours <{},{}> at {:.0} t/s (own placement) vs best RR pair <{},{}> at {:.0} t/s ({:+.1}%) — paper: chosen pair exact for RollingCount, 2% off for UniqueVisitor",
+            "{}: ours <{},{}> at {:.0} t/s (own placement) vs best RR pair <{},{}> at \
+             {:.0} t/s ({:+.1}%) — paper: chosen pair exact for RollingCount, 2% off for \
+             UniqueVisitor",
             s.topology, s.ours.0, s.ours.1, s.ours.2, s.best.0, s.best.1, s.best.2, delta
         ));
     }

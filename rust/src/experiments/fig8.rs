@@ -96,7 +96,10 @@ pub fn run(fast: bool) -> Result<ExperimentResult> {
             ]);
         }
     }
-    out.note("paper: proposed gives +7%..+44% over default and is within 4% of optimal; sim-vs-impl difference < 13%");
+    out.note(
+        "paper: proposed gives +7%..+44% over default and is within 4% of optimal; \
+         sim-vs-impl difference < 13%",
+    );
     Ok(out)
 }
 
@@ -118,7 +121,8 @@ mod tests {
         // engine within a loose factor of the model in fast mode
         for c in &cells {
             let rel = (c.engine_throughput - c.sim_throughput).abs() / c.sim_throughput;
-            assert!(rel < 0.35, "{}: impl {} sim {}", c.scheduler, c.engine_throughput, c.sim_throughput);
+            let (i, s) = (c.engine_throughput, c.sim_throughput);
+            assert!(rel < 0.35, "{}: impl {i} sim {s}", c.scheduler);
         }
     }
 }

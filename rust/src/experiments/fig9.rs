@@ -55,7 +55,10 @@ pub fn run(fast: bool) -> Result<ExperimentResult> {
             out.row(row);
         }
     }
-    out.note("paper: optimal has the highest total utilization; proposed exploits the strongest CPU better than default");
+    out.note(
+        "paper: optimal has the highest total utilization; proposed exploits the \
+         strongest CPU better than default",
+    );
     Ok(out)
 }
 

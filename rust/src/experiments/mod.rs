@@ -18,9 +18,12 @@
 //! | ablation | design choices      | [`ablation::run`]  |
 //! | elastic  | control plane       | [`elastic::run`]   |
 //! | accuracy | §6.2 (event-sim)    | [`accuracy::run`]  |
+//! | sched-perf | search-engine perf | [`sched_perf::run`]|
 //!
 //! `fast: true` shrinks engine windows/design spaces so the whole suite
-//! runs in seconds (used by tests); benches use `fast: false`.
+//! runs in seconds (used by tests); benches use `fast: false`.  Running
+//! `sched-perf` through the CLI additionally writes `BENCH_sched.json`
+//! (machine-readable candidates/s + wall time per scenario).
 
 pub mod ablation;
 pub mod accuracy;
@@ -32,6 +35,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod sched_perf;
 
 use crate::util::json::{self, Value};
 

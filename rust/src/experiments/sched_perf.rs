@@ -1,0 +1,195 @@
+//! Scheduler-search performance tracker (`hstorm bench sched-perf`).
+//!
+//! Races the optimal search's two engines over the exhaustive seed
+//! scenarios — the naive batched scorer (`O(C·M)` per candidate, nested
+//! `Vec` placements) against the incremental row-table kernel
+//! ([`crate::predict::kernel`]), single-threaded and sharded — and
+//! reports candidates/second, wall time and whether every engine
+//! selected the identical schedule.
+//!
+//! The CLI writes the machine-readable form to `BENCH_sched.json`
+//! whenever this experiment runs, and CI uploads it as an artifact, so
+//! the scheduling-perf trajectory is tracked run over run.  CI's
+//! perf-smoke step greps the rendered note
+//! `incremental >= naive candidates/s : PASS`.
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::{presets, scenarios, Cluster};
+use crate::scheduler::optimal::OptimalScheduler;
+use crate::scheduler::{Problem, Schedule, ScheduleRequest, Scheduler};
+use crate::topology::benchmarks;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::{f1, f2, ExperimentResult};
+
+/// One engine's measured run.
+struct EngineRun {
+    engine: &'static str,
+    schedule: Schedule,
+}
+
+impl EngineRun {
+    fn wall_s(&self) -> f64 {
+        self.schedule.provenance.wall.as_secs_f64().max(1e-9)
+    }
+
+    fn candidates_per_s(&self) -> f64 {
+        self.schedule.provenance.placements_evaluated as f64 / self.wall_s()
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("engine", json::s(self.engine)),
+            ("evaluated", json::num(self.schedule.provenance.placements_evaluated as f64)),
+            ("wall_s", json::num(self.wall_s())),
+            ("candidates_per_s", json::num(self.candidates_per_s())),
+            ("rate", json::num(self.schedule.rate)),
+        ])
+    }
+}
+
+/// One scenario of the race.
+struct Case {
+    name: &'static str,
+    cluster: Cluster,
+    db: ProfileDb,
+    max_instances: usize,
+}
+
+fn cases(fast: bool) -> Vec<Case> {
+    let (paper, paper_db) = presets::paper_cluster();
+    let (small, small_db) = scenarios::by_id(1).expect("scenario 1 registered").build();
+    vec![
+        Case {
+            name: "paper-cluster",
+            cluster: paper,
+            db: paper_db,
+            max_instances: if fast { 2 } else { 3 },
+        },
+        // the largest seed scenario the exhaustive search can enumerate
+        // (scenario 2/3 design spaces exceed the enumeration limit)
+        Case { name: "scenario1-small", cluster: small, db: small_db, max_instances: 2 },
+    ]
+}
+
+/// Run the race and return (rendered table, BENCH_sched.json payload).
+pub fn run_with_json(fast: bool) -> Result<(ExperimentResult, Value)> {
+    let mut out = ExperimentResult::new(
+        "sched-perf",
+        "optimal-search engines head-to-head (naive vs incremental kernel)",
+        &[
+            "scenario",
+            "engine",
+            "space",
+            "evaluated",
+            "wall",
+            "candidates/s",
+            "speedup",
+            "same schedule",
+        ],
+    );
+    let top = benchmarks::linear();
+    let req = ScheduleRequest::max_throughput();
+    let auto_threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let mut scenario_objs = Vec::new();
+    let mut min_speedup = f64::INFINITY;
+
+    for case in cases(fast) {
+        let problem = Problem::new(&top, &case.cluster, &case.db)?;
+        let single = OptimalScheduler {
+            max_instances_per_component: case.max_instances,
+            threads: 1,
+            ..Default::default()
+        };
+        let space = single.design_space_size(top.n_components(), case.cluster.n_machines());
+
+        let naive =
+            EngineRun { engine: "naive", schedule: single.schedule_naive(&problem, &req)? };
+        let incr = EngineRun { engine: "incremental", schedule: single.schedule(&problem, &req)? };
+        let parallel = EngineRun {
+            engine: "parallel",
+            schedule: OptimalScheduler { threads: 0, ..single.clone() }.schedule(&problem, &req)?,
+        };
+
+        let same = naive.schedule.placement == incr.schedule.placement
+            && incr.schedule.placement == parallel.schedule.placement;
+        let speedup_incr = incr.candidates_per_s() / naive.candidates_per_s();
+        let speedup_par = parallel.candidates_per_s() / naive.candidates_per_s();
+        min_speedup = min_speedup.min(speedup_incr);
+
+        for (run, speedup) in
+            [(&naive, 1.0), (&incr, speedup_incr), (&parallel, speedup_par)]
+        {
+            out.row(vec![
+                case.name.into(),
+                run.engine.into(),
+                space.to_string(),
+                run.schedule.provenance.placements_evaluated.to_string(),
+                format!("{:.1} ms", run.wall_s() * 1e3),
+                f1(run.candidates_per_s()),
+                format!("{}x", f2(speedup)),
+                if same { "yes" } else { "NO" }.into(),
+            ]);
+        }
+
+        scenario_objs.push(json::obj(vec![
+            ("name", json::s(case.name)),
+            ("machines", json::num(case.cluster.n_machines() as f64)),
+            ("max_instances", json::num(case.max_instances as f64)),
+            ("space", json::num(space as f64)),
+            ("naive", naive.to_json()),
+            ("incremental", incr.to_json()),
+            ("parallel", parallel.to_json()),
+            ("speedup_incremental", json::num(speedup_incr)),
+            ("speedup_parallel", json::num(speedup_par)),
+            ("same_schedule", json::bool(same)),
+        ]));
+    }
+
+    let verdict = if min_speedup >= 1.0 { "PASS" } else { "FAIL" };
+    out.note(format!(
+        "incremental >= naive candidates/s : {verdict} (min speedup {}x)",
+        f2(min_speedup)
+    ));
+    out.note(format!(
+        "parallel shards: {auto_threads} threads (identical schedule at any thread count)"
+    ));
+
+    let payload = json::obj(vec![
+        ("bench", json::s("sched-perf")),
+        ("fast", json::bool(fast)),
+        ("auto_threads", json::num(auto_threads as f64)),
+        ("min_speedup_incremental", json::num(min_speedup)),
+        ("verdict", json::s(verdict)),
+        ("scenarios", json::arr(scenario_objs)),
+    ]);
+    Ok((out, payload))
+}
+
+/// Experiment-harness entry point (table only).
+pub fn run(fast: bool) -> Result<ExperimentResult> {
+    run_with_json(fast).map(|(r, _)| r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_races_both_scenarios() {
+        let (r, v) = run_with_json(true).unwrap();
+        // 2 scenarios x 3 engines
+        assert_eq!(r.rows.len(), 6);
+        assert!(r.notes.iter().any(|n| n.contains("incremental >= naive")), "{:?}", r.notes);
+        let scenarios = v.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(scenarios.len(), 2);
+        for s in scenarios {
+            assert_eq!(
+                s.get("same_schedule").unwrap().as_bool(),
+                Some(true),
+                "engines must select the identical schedule"
+            );
+        }
+    }
+}

@@ -73,6 +73,21 @@
 //! still sustain `r` tuples/s, `Objective::BalancedUtilization` breaks
 //! throughput ties toward the smallest utilization spread — see the
 //! [`scheduler::request`] module docs for exact semantics.
+//!
+//! ## Scoring engine
+//!
+//! Candidate scoring is incremental ([`predict::kernel`]): per-component
+//! **row tables** hold each enumerated distribution's per-machine
+//! `(a, b)` slope/intercept contribution, the exhaustive optimal search
+//! composes candidates by pushing/popping rows into accumulators
+//! (`O(nnz)` per step, closed-form `R0*` read off the running state) and
+//! shards its outermost loop across threads with a deterministic merge —
+//! identical schedule at any thread count — while the hetero refinement
+//! and the control plane's breach check probe single-instance deltas in
+//! `O(M)` through [`predict::kernel::DeltaEval`].  `hstorm bench
+//! sched-perf` races the naive and incremental engines and writes the
+//! machine-readable `BENCH_sched.json` (candidates/s, wall time,
+//! speedups, same-schedule check per scenario).
 
 pub mod cluster;
 pub mod config;

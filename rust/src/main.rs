@@ -9,8 +9,8 @@
 //! hstorm simulate --topology linear --scenario 2 [--mode analytic|event]
 //! hstorm control  --trace diurnal --scenario 2 [--policy reactive] [--steps 600]
 //! hstorm profile  [--task highCompute] [--machine pentium]
-//! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy|all>
-//!                 [--fast] [--json out.json]
+//! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
+//!                  |sched-perf|all>  [--fast] [--json out.json]
 //! hstorm config   --config exp.json            # run a JSON experiment
 //! ```
 
@@ -52,8 +52,8 @@ commands:
             [--probe analytic|event] [--steps 600] [--seed 42] [--cooldown 10]
             [--json out.json]
   profile   [--task highCompute] [--machine pentium]
-  bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy|all
-            [--fast] [--json out.json]
+  bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
+            |sched-perf|all  [--fast] [--json out.json]
   config    --config exp.json
 
 topologies: linear diamond star rolling-count unique-visitor
@@ -78,7 +78,12 @@ compares how a static schedule, the reactive controller and a
 clairvoyant oracle keep up with rate swings, machine churn and profile
 drift; --probe event feeds breach detection from short event-sim probes
 (backpressure verdicts) instead of the closed form; see the controller
-module docs for breach/cooldown semantics.";
+module docs for breach/cooldown semantics.
+
+bench sched-perf races the optimal search's engines (naive batched
+scoring vs the incremental row-table kernel, single- and multi-threaded)
+over the exhaustive seed scenarios and writes BENCH_sched.json —
+candidates/s and wall time per scenario — next to the rendered table.";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -447,7 +452,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let ids: Vec<&str> = if which == "all" {
         vec![
             "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "table5", "space", "ablation",
-            "elastic", "accuracy",
+            "elastic", "accuracy", "sched-perf",
         ]
     } else {
         vec![which]
@@ -465,6 +470,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "ablation" => experiments::ablation::run(fast)?,
             "elastic" => experiments::elastic::run(fast)?,
             "accuracy" => experiments::accuracy::run(fast)?,
+            "sched-perf" => {
+                // also emit the machine-readable perf trajectory file
+                // CI uploads (see experiments::sched_perf module docs)
+                let (r, v) = experiments::sched_perf::run_with_json(fast)?;
+                std::fs::write("BENCH_sched.json", json::to_string_pretty(&v))?;
+                println!("wrote BENCH_sched.json");
+                r
+            }
             other => return Err(Error::Config(format!("unknown experiment '{other}'"))),
         };
         println!("{}", r.render());

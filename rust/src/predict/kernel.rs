@@ -1,0 +1,728 @@
+//! Incremental candidate-scoring engine: the hot-loop counterpart of the
+//! naive [`Evaluator`] paths.
+//!
+//! The schedulers explore placements that differ from their neighbours in
+//! exactly one component row (the exhaustive search) or one instance (the
+//! refinement passes and the control plane), yet the naive paths re-derive
+//! every machine's utilization slope/intercept from scratch in `O(C·M)`
+//! per candidate, with nested-`Vec` placements and a `counts()` allocation
+//! per call.  This module keeps that linear structure *incremental*:
+//!
+//! * [`PlacementBuf`] — a flat, row-major instance-count arena (`x[c*M+m]`)
+//!   used inside the hot loops; the public [`Placement`] stays the API
+//!   type, with cheap conversion at the boundary.
+//! * [`Row`] / [`RowTable`] — for each enumerated distribution of `k`
+//!   instances of component `c`, its per-machine `(a_m, b_m)`
+//!   slope/intercept contribution, computed **once**.  A candidate is
+//!   then a choice of one row per component, and its closed-form
+//!   `R0* = min_m (cap_m - b_m)/a_m` is read off running accumulators.
+//! * [`AccumState`] — per-machine `(a, b, tasks)` accumulators with an
+//!   undo log, so a depth-first enumeration composes candidates by
+//!   pushing/popping rows in `O(nnz)` per step.  Pops restore the saved
+//!   words bit-for-bit (no floating-point subtraction), so deep searches
+//!   accumulate zero drift.
+//! * [`DeltaEval`] — single-placement incremental state for the hetero
+//!   scheduler's refinement and the controller's breach path: probing a
+//!   one-instance move/add/remove is `O(M)`, applying one recomputes only
+//!   the affected machine columns.
+//!
+//! Eq. 5 linearity is the whole trick (see [`Evaluator::max_stable_rate`]):
+//! `util_m(R0) = a_m·R0 + b_m` with
+//! `a_m = Σ_c x[c][m]·e[c][m]·gain_c/n_c` and `b_m = Σ_c x[c][m]·met[c][m]`,
+//! and a component row with `k` total instances contributes
+//! `a_m += x·e·gain/k`, `b_m += x·met` — independent of every other
+//! component, which is what makes row tables composable.
+
+use super::{Evaluation, Evaluator, Placement};
+use crate::{Error, Result};
+
+/// Flat, row-major placement arena: `x[c * n_machines + m]` = instances
+/// of component `c` on machine `m`.  The hot-loop twin of [`Placement`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementBuf {
+    n_comp: usize,
+    n_machines: usize,
+    x: Vec<u32>,
+}
+
+impl PlacementBuf {
+    /// All-zero buffer.
+    pub fn empty(n_comp: usize, n_machines: usize) -> Self {
+        PlacementBuf { n_comp, n_machines, x: vec![0; n_comp * n_machines] }
+    }
+
+    /// Copy a nested-`Vec` placement into flat form.
+    pub fn from_placement(p: &Placement) -> Self {
+        let n_comp = p.n_components();
+        let n_machines = p.n_machines();
+        let mut x = Vec::with_capacity(n_comp * n_machines);
+        for row in &p.x {
+            x.extend(row.iter().map(|&k| k as u32));
+        }
+        PlacementBuf { n_comp, n_machines, x }
+    }
+
+    /// Materialize back into the public API type.
+    pub fn to_placement(&self) -> Placement {
+        Placement {
+            x: (0..self.n_comp)
+                .map(|c| self.row(c).iter().map(|&k| k as usize).collect())
+                .collect(),
+        }
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.n_comp
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.n_machines
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, m: usize) -> u32 {
+        self.x[c * self.n_machines + m]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, m: usize, k: u32) {
+        self.x[c * self.n_machines + m] = k;
+    }
+
+    /// Component `c`'s machine row as a contiguous slice.
+    #[inline]
+    pub fn row(&self, c: usize) -> &[u32] {
+        &self.x[c * self.n_machines..(c + 1) * self.n_machines]
+    }
+
+    /// Total instances of component `c`.
+    pub fn count(&self, c: usize) -> u32 {
+        self.row(c).iter().sum()
+    }
+
+    /// Tasks hosted on machine `m`.
+    pub fn tasks_on(&self, m: usize) -> u32 {
+        (0..self.n_comp).map(|c| self.get(c, m)).sum()
+    }
+}
+
+/// One machine's contribution from one component row.
+#[derive(Debug, Clone, Copy)]
+pub struct RowTerm {
+    /// Machine index.
+    pub m: u32,
+    /// Instances of the component on that machine.
+    pub count: u32,
+    /// Slope contribution `count · e[c][m] · gain_c / k`.
+    pub a: f64,
+    /// Intercept contribution `count · met[c][m]`.
+    pub b: f64,
+}
+
+/// One enumerated distribution of `k` instances of a component, as its
+/// sparse per-machine `(a, b)` contributions.
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Total instances in this row.
+    pub k: u32,
+    /// Per-machine terms (machines with zero instances are absent).
+    pub terms: Vec<RowTerm>,
+}
+
+impl Row {
+    /// Build the term list for component `c` from a full-width count row.
+    pub fn build(ev: &Evaluator, c: usize, counts: &[usize]) -> Row {
+        let k: usize = counts.iter().sum();
+        let kf = k.max(1) as f64;
+        let terms = counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(m, &n)| RowTerm {
+                m: m as u32,
+                count: n as u32,
+                a: n as f64 * ev.e_m[c][m] * ev.gains[c] / kf,
+                b: n as f64 * ev.met_m[c][m],
+            })
+            .collect();
+        Row { k: k as u32, terms }
+    }
+}
+
+/// Precomputed rows for one component: every distribution the search may
+/// pick for it, with slope/intercept terms ready to push.
+#[derive(Debug, Clone)]
+pub struct RowTable {
+    pub rows: Vec<Row>,
+}
+
+impl RowTable {
+    /// Build from the enumerated full-width count rows of one component.
+    pub fn build(ev: &Evaluator, c: usize, rows: &[Vec<usize>]) -> RowTable {
+        RowTable { rows: rows.iter().map(|r| Row::build(ev, c, r)).collect() }
+    }
+}
+
+/// Undo-log entry: one machine's state before a push touched it.
+#[derive(Debug, Clone, Copy)]
+struct Saved {
+    m: u32,
+    a: f64,
+    b: f64,
+    tasks: u32,
+}
+
+/// One push's undo frame.
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    saved_start: usize,
+    used: usize,
+}
+
+/// Per-machine slope/intercept/task accumulators with exact push/pop.
+///
+/// `pop` restores the exact words saved by the matching `push` (no
+/// arithmetic), so an enumeration of any depth is drift-free: the state
+/// after `push(r); pop()` is bit-identical to the state before.
+#[derive(Debug, Clone)]
+pub struct AccumState {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    tasks: Vec<u32>,
+    /// Machines currently hosting at least one task.
+    used: usize,
+    saved: Vec<Saved>,
+    frames: Vec<Frame>,
+}
+
+impl AccumState {
+    pub fn new(n_machines: usize) -> Self {
+        AccumState {
+            a: vec![0.0; n_machines],
+            b: vec![0.0; n_machines],
+            tasks: vec![0; n_machines],
+            used: 0,
+            saved: Vec::with_capacity(64),
+            frames: Vec::with_capacity(16),
+        }
+    }
+
+    /// Machines hosting at least one task under the pushed rows.
+    pub fn machines_used(&self) -> usize {
+        self.used
+    }
+
+    pub fn depth(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Add one component row: `O(nnz)` — only the row's machines move.
+    pub fn push(&mut self, row: &Row) {
+        self.frames.push(Frame { saved_start: self.saved.len(), used: self.used });
+        for t in &row.terms {
+            let m = t.m as usize;
+            self.saved.push(Saved { m: t.m, a: self.a[m], b: self.b[m], tasks: self.tasks[m] });
+            self.a[m] += t.a;
+            self.b[m] += t.b;
+            if self.tasks[m] == 0 {
+                self.used += 1;
+            }
+            self.tasks[m] += t.count;
+        }
+    }
+
+    /// Undo the most recent [`push`](Self::push), restoring saved words
+    /// bit-for-bit.
+    pub fn pop(&mut self) {
+        let f = self.frames.pop().expect("pop without matching push");
+        for s in self.saved.drain(f.saved_start..).rev() {
+            let m = s.m as usize;
+            self.a[m] = s.a;
+            self.b[m] = s.b;
+            self.tasks[m] = s.tasks;
+        }
+        self.used = f.used;
+    }
+
+    /// Closed-form max stable rate of the composed candidate:
+    /// `min_m (cap_m - b_m)/a_m`, `0` when MET alone breaks a budget or
+    /// no machine has a positive slope (nothing real can be certified).
+    pub fn rate(&self, cap: &[f64]) -> f64 {
+        let mut best = f64::INFINITY;
+        for m in 0..self.a.len() {
+            if self.b[m] > cap[m] + 1e-9 {
+                return 0.0;
+            }
+            if self.a[m] > 0.0 {
+                best = best.min((cap[m] - self.b[m]) / self.a[m]);
+            }
+        }
+        if best.is_finite() {
+            best
+        } else {
+            0.0
+        }
+    }
+
+    /// Utilization spread (max − min over non-excluded machines) at rate
+    /// `r`, from the linear form `util_m = a_m·r + b_m`.
+    pub fn spread(&self, excluded: &[bool], r: f64) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for m in 0..self.a.len() {
+            if excluded[m] {
+                continue;
+            }
+            let u = self.a[m] * r + self.b[m];
+            lo = lo.min(u);
+            hi = hi.max(u);
+        }
+        if hi >= lo {
+            hi - lo
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Synthesize the per-component rows of an arbitrary placement (one row
+/// per component, same term arithmetic as [`RowTable::build`]), so seeded
+/// candidates score bit-identically to enumerated ones that happen to
+/// contain the same distribution.
+pub fn rows_of_placement(ev: &Evaluator, p: &Placement) -> Vec<Row> {
+    (0..p.n_components()).map(|c| Row::build(ev, c, &p.x[c])).collect()
+}
+
+/// [`Evaluator::evaluate`] with the per-call `counts` allocation hoisted
+/// into a caller-provided scratch buffer — the batch-scoring entry point
+/// ([`crate::runtime::scorer::NativeScorer`] loops this over candidates
+/// with one scratch for the whole batch).  Arithmetic is identical to the
+/// naive path, operation for operation.
+pub fn evaluate_with_scratch(
+    ev: &Evaluator,
+    p: &Placement,
+    r0: f64,
+    counts: &mut Vec<usize>,
+) -> Result<Evaluation> {
+    if p.n_components() != ev.n_components() || p.n_machines() != ev.n_machines() {
+        return Err(Error::Schedule(format!(
+            "placement shape {}x{} != problem {}x{}",
+            p.n_components(),
+            p.n_machines(),
+            ev.n_components(),
+            ev.n_machines()
+        )));
+    }
+    counts.clear();
+    counts.extend((0..p.n_components()).map(|c| p.count(c)));
+    let ir_comp = ev.rates(r0);
+    let mut util = vec![0.0f64; ev.n_machines()];
+    for c in 0..ev.n_components() {
+        let n_c = counts[c].max(1) as f64;
+        let ir_task = ir_comp[c] / n_c;
+        for m in 0..ev.n_machines() {
+            let k = p.x[c][m] as f64;
+            if k > 0.0 {
+                util[m] += k * (ev.e_m[c][m] * ir_task + ev.met_m[c][m]);
+            }
+        }
+    }
+    let over = util.iter().zip(&ev.cap).any(|(u, c)| *u > *c + 1e-6);
+    let missing = counts.iter().any(|&n| n == 0);
+    let throughput = ir_comp.iter().sum();
+    Ok(Evaluation { util, throughput, feasible: !over && !missing, ir_comp })
+}
+
+/// Incremental single-placement evaluation state: per-machine `(a, b)`
+/// kept in sync with a [`PlacementBuf`], so probing a one-instance
+/// move/add/remove is `O(M)` (one pass over the adjusted closed form) and
+/// applying one recomputes only the affected machine columns — no
+/// placement clones, no `counts()` allocations.
+///
+/// Used by the hetero scheduler's refinement sweeps and by the control
+/// plane's per-step capacity (breach) check.
+#[derive(Debug, Clone)]
+pub struct DeltaEval<'e> {
+    ev: &'e Evaluator,
+    x: PlacementBuf,
+    counts: Vec<u32>,
+    a: Vec<f64>,
+    b: Vec<f64>,
+}
+
+impl<'e> DeltaEval<'e> {
+    /// Build the incremental state for `p` (shape-checked).
+    pub fn new(ev: &'e Evaluator, p: &Placement) -> Result<Self> {
+        if p.n_components() != ev.n_components() || p.n_machines() != ev.n_machines() {
+            return Err(Error::Schedule(format!(
+                "placement shape {}x{} != problem {}x{}",
+                p.n_components(),
+                p.n_machines(),
+                ev.n_components(),
+                ev.n_machines()
+            )));
+        }
+        let x = PlacementBuf::from_placement(p);
+        let counts: Vec<u32> = (0..x.n_components()).map(|c| x.count(c)).collect();
+        let mut de = DeltaEval {
+            ev,
+            a: vec![0.0; x.n_machines()],
+            b: vec![0.0; x.n_machines()],
+            x,
+            counts,
+        };
+        for m in 0..de.x.n_machines() {
+            de.recompute_machine(m);
+        }
+        Ok(de)
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, m: usize) -> u32 {
+        self.x.get(c, m)
+    }
+
+    #[inline]
+    pub fn count(&self, c: usize) -> u32 {
+        self.counts[c]
+    }
+
+    pub fn tasks_on(&self, m: usize) -> u32 {
+        self.x.tasks_on(m)
+    }
+
+    /// The tracked placement, materialized.
+    pub fn placement(&self) -> Placement {
+        self.x.to_placement()
+    }
+
+    /// Rebuild machine `m`'s `(a, b)` column from the placement — exact
+    /// recomputation, so applied deltas never accumulate drift.
+    fn recompute_machine(&mut self, m: usize) {
+        let mut a = 0.0f64;
+        let mut b = 0.0f64;
+        for c in 0..self.x.n_components() {
+            let k = self.x.get(c, m) as f64;
+            if k > 0.0 {
+                a += k * self.ev.e_m[c][m] * self.ev.gains[c] / self.counts[c].max(1) as f64;
+                b += k * self.ev.met_m[c][m];
+            }
+        }
+        self.a[m] = a;
+        self.b[m] = b;
+    }
+
+    /// Closed-form max stable rate of the current placement.  `∞` when no
+    /// machine has positive slope (symbolically unbounded), `0` when MET
+    /// alone breaks a budget.
+    pub fn rate(&self) -> f64 {
+        self.rate_adjusted(|_| (0.0, 0.0))
+    }
+
+    /// [`rate`](Self::rate) clamped to an operating point (`∞` → `0`) and
+    /// `0` when a component has no instance — the control plane's
+    /// capacity semantics ([`Evaluator::max_stable_rate_or_zero`]).
+    pub fn rate_or_zero(&self) -> f64 {
+        if self.counts.iter().any(|&n| n == 0) {
+            return 0.0;
+        }
+        let r = self.rate();
+        if r.is_finite() {
+            r
+        } else {
+            0.0
+        }
+    }
+
+    /// Closed form with a per-machine `(Δa, Δb)` adjustment applied on
+    /// the fly — the shared probe kernel.
+    fn rate_adjusted(&self, adj: impl Fn(usize) -> (f64, f64)) -> f64 {
+        let mut best = f64::INFINITY;
+        for m in 0..self.a.len() {
+            let (da, db) = adj(m);
+            let bm = self.b[m] + db;
+            if bm > self.ev.cap[m] + 1e-9 {
+                return 0.0;
+            }
+            let am = self.a[m] + da;
+            if am > 0.0 {
+                best = best.min((self.ev.cap[m] - bm) / am);
+            }
+        }
+        best
+    }
+
+    /// Rate if one instance of `c` moved `from → to` (share unchanged:
+    /// only the two endpoints' columns adjust).
+    pub fn rate_with_move(&self, c: usize, from: usize, to: usize) -> f64 {
+        let share = self.ev.gains[c] / self.counts[c].max(1) as f64;
+        self.rate_adjusted(|m| {
+            if m == from {
+                (-self.ev.e_m[c][m] * share, -self.ev.met_m[c][m])
+            } else if m == to {
+                (self.ev.e_m[c][m] * share, self.ev.met_m[c][m])
+            } else {
+                (0.0, 0.0)
+            }
+        })
+    }
+
+    /// Apply the move probed by [`rate_with_move`](Self::rate_with_move).
+    pub fn apply_move(&mut self, c: usize, from: usize, to: usize) {
+        debug_assert!(self.x.get(c, from) > 0);
+        self.x.set(c, from, self.x.get(c, from) - 1);
+        self.x.set(c, to, self.x.get(c, to) + 1);
+        self.recompute_machine(from);
+        self.recompute_machine(to);
+    }
+
+    /// Rate if one instance of `c` were removed from machine `drop_m`
+    /// (the stream re-shares over `n-1` instances: every machine hosting
+    /// `c` adjusts its slope).
+    pub fn rate_removing(&self, c: usize, drop_m: usize) -> f64 {
+        let n = self.counts[c];
+        debug_assert!(n > 1, "removing the last instance of a component");
+        let share_old = self.ev.gains[c] / n as f64;
+        let share_new = self.ev.gains[c] / (n - 1) as f64;
+        self.rate_adjusted(|m| {
+            let k_old = self.x.get(c, m) as f64;
+            if k_old == 0.0 {
+                return (0.0, 0.0);
+            }
+            let k_new = k_old - if m == drop_m { 1.0 } else { 0.0 };
+            (
+                self.ev.e_m[c][m] * (k_new * share_new - k_old * share_old),
+                -if m == drop_m { self.ev.met_m[c][m] } else { 0.0 },
+            )
+        })
+    }
+
+    /// Apply the removal probed by [`rate_removing`](Self::rate_removing).
+    pub fn apply_remove(&mut self, c: usize, drop_m: usize) {
+        debug_assert!(self.x.get(c, drop_m) > 0);
+        self.x.set(c, drop_m, self.x.get(c, drop_m) - 1);
+        self.counts[c] -= 1;
+        for m in 0..self.x.n_machines() {
+            if self.x.get(c, m) > 0 || m == drop_m {
+                self.recompute_machine(m);
+            }
+        }
+    }
+
+    /// Rate if one instance of `c` were added on machine `add_m` (the
+    /// stream re-shares over `n+1` instances).
+    pub fn rate_adding(&self, c: usize, add_m: usize) -> f64 {
+        let n = self.counts[c];
+        let share_old = self.ev.gains[c] / n.max(1) as f64;
+        let share_new = self.ev.gains[c] / (n + 1) as f64;
+        self.rate_adjusted(|m| {
+            let k_old = self.x.get(c, m) as f64;
+            let k_new = k_old + if m == add_m { 1.0 } else { 0.0 };
+            if k_new == 0.0 {
+                return (0.0, 0.0);
+            }
+            // components with n = 0 contribute no slope yet: k_old·share_old
+            // is 0 either way
+            (
+                self.ev.e_m[c][m] * (k_new * share_new - k_old * share_old),
+                if m == add_m { self.ev.met_m[c][m] } else { 0.0 },
+            )
+        })
+    }
+
+    /// Apply the addition probed by [`rate_adding`](Self::rate_adding).
+    pub fn apply_add(&mut self, c: usize, add_m: usize) {
+        self.x.set(c, add_m, self.x.get(c, add_m) + 1);
+        self.counts[c] += 1;
+        for m in 0..self.x.n_machines() {
+            if self.x.get(c, m) > 0 {
+                self.recompute_machine(m);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+    use crate::util::rng::Rng;
+
+    fn setup() -> Evaluator {
+        let (c, db) = presets::paper_cluster();
+        Evaluator::new(&benchmarks::linear(), &c, &db).unwrap()
+    }
+
+    fn random_placement(rng: &mut Rng, n_comp: usize, n_m: usize) -> Placement {
+        let mut p = Placement::empty(n_comp, n_m);
+        for c in 0..n_comp {
+            for _ in 0..rng.range(1, 3) {
+                p.x[c][rng.range(0, n_m - 1)] += 1;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn buf_roundtrips() {
+        let mut rng = Rng::new(7);
+        for _ in 0..32 {
+            let p = random_placement(&mut rng, 4, 3);
+            let buf = PlacementBuf::from_placement(&p);
+            assert_eq!(buf.to_placement(), p);
+            for c in 0..4 {
+                assert_eq!(buf.count(c) as usize, p.count(c));
+            }
+            for m in 0..3 {
+                assert_eq!(buf.tasks_on(m) as usize, p.tasks_on(m));
+            }
+        }
+    }
+
+    #[test]
+    fn pushed_rows_match_closed_form() {
+        let ev = setup();
+        let mut rng = Rng::new(11);
+        for _ in 0..64 {
+            let p = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+            let rows = rows_of_placement(&ev, &p);
+            let mut acc = AccumState::new(ev.n_machines());
+            // push in the search's order (outermost component last index)
+            for row in rows.iter().rev() {
+                acc.push(row);
+            }
+            let want = ev.max_stable_rate_or_zero(&p).unwrap();
+            assert!(
+                (acc.rate(&ev.cap) - want).abs() < 1e-9,
+                "{} vs {want}",
+                acc.rate(&ev.cap)
+            );
+            assert_eq!(
+                acc.machines_used(),
+                (0..ev.n_machines()).filter(|&m| p.tasks_on(m) > 0).count()
+            );
+        }
+    }
+
+    #[test]
+    fn pop_restores_state_bit_for_bit() {
+        let ev = setup();
+        let mut rng = Rng::new(23);
+        let base = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+        let rows = rows_of_placement(&ev, &base);
+        let mut acc = AccumState::new(ev.n_machines());
+        acc.push(&rows[3]);
+        acc.push(&rows[2]);
+        let snapshot = acc.clone();
+        // a deep excursion, then unwind
+        for _ in 0..50 {
+            let extra = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+            for row in rows_of_placement(&ev, &extra) {
+                acc.push(&row);
+            }
+            for _ in 0..ev.n_components() {
+                acc.pop();
+            }
+        }
+        assert_eq!(acc.a, snapshot.a, "slope accumulators drifted");
+        assert_eq!(acc.b, snapshot.b, "intercept accumulators drifted");
+        assert_eq!(acc.tasks, snapshot.tasks);
+        assert_eq!(acc.machines_used(), snapshot.machines_used());
+    }
+
+    #[test]
+    fn evaluate_with_scratch_matches_naive() {
+        let ev = setup();
+        let mut rng = Rng::new(31);
+        let mut counts = Vec::new();
+        for _ in 0..32 {
+            let p = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+            let r0 = rng.range_f64(1.0, 300.0);
+            let a = ev.evaluate(&p, r0).unwrap();
+            let b = evaluate_with_scratch(&ev, &p, r0, &mut counts).unwrap();
+            assert_eq!(a.feasible, b.feasible);
+            assert_eq!(a.util, b.util, "scratch path must be arithmetic-identical");
+            assert_eq!(a.ir_comp, b.ir_comp);
+        }
+        // shape mismatch still rejected
+        let bad = Placement::empty(2, 3);
+        assert!(evaluate_with_scratch(&ev, &bad, 1.0, &mut counts).is_err());
+    }
+
+    #[test]
+    fn delta_probes_match_full_recompute() {
+        let ev = setup();
+        let mut rng = Rng::new(47);
+        for _ in 0..24 {
+            let p = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+            let de = DeltaEval::new(&ev, &p).unwrap();
+            assert!((de.rate_or_zero() - ev.max_stable_rate_or_zero(&p).unwrap()).abs() < 1e-9);
+
+            // probe a move and cross-check against a cloned placement
+            let c = rng.range(0, ev.n_components() - 1);
+            let from = (0..ev.n_machines()).find(|&m| p.x[c][m] > 0).unwrap();
+            let to = (from + 1) % ev.n_machines();
+            let mut q = p.clone();
+            q.x[c][from] -= 1;
+            q.x[c][to] += 1;
+            let want = ev.max_stable_rate_or_zero(&q).unwrap();
+            let probe = de.rate_with_move(c, from, to);
+            let probe = if probe.is_finite() { probe } else { 0.0 };
+            assert!((probe - want).abs() < 1e-9, "move probe {probe} vs {want}");
+        }
+    }
+
+    #[test]
+    fn delta_apply_chain_stays_exact() {
+        let ev = setup();
+        let mut rng = Rng::new(59);
+        let p = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+        let mut de = DeltaEval::new(&ev, &p).unwrap();
+        for step in 0..64 {
+            let c = rng.range(0, ev.n_components() - 1);
+            match rng.range(0, 2) {
+                0 => {
+                    let from = (0..ev.n_machines()).find(|&m| de.get(c, m) > 0).unwrap();
+                    let to = rng.range(0, ev.n_machines() - 1);
+                    if to != from {
+                        de.apply_move(c, from, to);
+                    }
+                }
+                1 => de.apply_add(c, rng.range(0, ev.n_machines() - 1)),
+                _ => {
+                    if de.count(c) > 1 {
+                        let m = (0..ev.n_machines()).find(|&m| de.get(c, m) > 0).unwrap();
+                        de.apply_remove(c, m);
+                    }
+                }
+            }
+            let q = de.placement();
+            let want = ev.max_stable_rate_or_zero(&q).unwrap();
+            assert!(
+                (de.rate_or_zero() - want).abs() < 1e-9,
+                "drift after {step} applies: {} vs {want}",
+                de.rate_or_zero()
+            );
+        }
+    }
+
+    #[test]
+    fn delta_add_and_remove_probe_resharing() {
+        let ev = setup();
+        let mut p = Placement::empty(4, 3);
+        for c in 0..4 {
+            p.x[c][c % 3] = 1;
+        }
+        p.x[3][0] = 1; // highCompute on 2 machines
+        let de = DeltaEval::new(&ev, &p).unwrap();
+        let mut q = p.clone();
+        q.x[3][1] += 1;
+        let want_add = ev.max_stable_rate_or_zero(&q).unwrap();
+        assert!((de.rate_adding(3, 1) - want_add).abs() < 1e-9);
+        let mut q = p.clone();
+        q.x[3][0] -= 1;
+        let want_rm = ev.max_stable_rate_or_zero(&q).unwrap();
+        assert!((de.rate_removing(3, 0) - want_rm).abs() < 1e-9);
+    }
+}

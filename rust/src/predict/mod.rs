@@ -12,6 +12,8 @@
 //! `util_m(R0) = a_m * R0 + b_m`, so the largest feasible rate is
 //! `min_m (cap_m - b_m) / a_m`.
 
+pub mod kernel;
+
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::Cluster;
 use crate::topology::Topology;
@@ -170,10 +172,10 @@ impl Evaluator {
     /// `R0* = min_m (cap_m - b_m) / a_m` (∞ if every a_m = 0, 0 if some
     /// machine is over budget on MET alone).
     pub fn max_stable_rate(&self, p: &Placement) -> Result<f64> {
-        if p.counts().iter().any(|&n| n == 0) {
+        let counts = p.counts();
+        if counts.iter().any(|&n| n == 0) {
             return Err(Error::Schedule("placement misses a component".into()));
         }
-        let counts = p.counts();
         let mut best = f64::INFINITY;
         for m in 0..self.n_machines {
             let mut a = 0.0f64;
@@ -274,27 +276,31 @@ impl Evaluator {
 
     /// [`max_stable_rate`](Self::max_stable_rate) under speed-weighted
     /// grouping (still closed form: shares are rate-independent).
+    /// Per-component shares are computed once and accumulated over the
+    /// machines, `O(C·M)` — not per `(m, c)` pair.
     pub fn max_stable_rate_weighted(&self, p: &Placement) -> Result<f64> {
         if p.counts().iter().any(|&n| n == 0) {
             return Err(Error::Schedule("placement misses a component".into()));
         }
-        let mut best = f64::INFINITY;
-        for m in 0..self.n_machines {
-            let mut a = 0.0f64;
-            let mut b = 0.0f64;
-            for c in 0..self.n_comp {
+        let mut a = vec![0.0f64; self.n_machines];
+        let mut b = vec![0.0f64; self.n_machines];
+        for c in 0..self.n_comp {
+            let shares = self.weighted_shares(p, c);
+            for m in 0..self.n_machines {
                 let k = p.x[c][m] as f64;
                 if k > 0.0 {
-                    let shares = self.weighted_shares(p, c);
-                    a += self.e_m[c][m] * self.gains[c] * shares[m];
-                    b += k * self.met_m[c][m];
+                    a[m] += self.e_m[c][m] * self.gains[c] * shares[m];
+                    b[m] += k * self.met_m[c][m];
                 }
             }
-            if b > self.cap[m] + 1e-9 {
+        }
+        let mut best = f64::INFINITY;
+        for m in 0..self.n_machines {
+            if b[m] > self.cap[m] + 1e-9 {
                 return Ok(0.0);
             }
-            if a > 0.0 {
-                best = best.min((self.cap[m] - b) / a);
+            if a[m] > 0.0 {
+                best = best.min((self.cap[m] - b[m]) / a[m]);
             }
         }
         Ok(best)
@@ -402,7 +408,8 @@ mod tests {
         let (t, c, mut db) = setup();
         // blow up MET for highCompute on every machine
         for mt in ["pentium", "core-i3", "core-i5"] {
-            db.insert("highCompute", mt, crate::cluster::profile::TaskProfile { e: 0.1, met: 200.0 });
+            let profile = crate::cluster::profile::TaskProfile { e: 0.1, met: 200.0 };
+            db.insert("highCompute", mt, profile);
         }
         let ev = Evaluator::new(&t, &c, &db).unwrap();
         let p = one_per_machine(&ev);
@@ -541,6 +548,48 @@ mod weighted_tests {
         let ra = ev.max_stable_rate(&p).unwrap();
         let rb = ev.max_stable_rate_weighted(&p).unwrap();
         assert!((ra - rb).abs() < 1e-9);
+    }
+
+    /// The old implementation recomputed `weighted_shares` inside the
+    /// nested `(m, c)` loop; the hoisted `O(C·M)` form must agree with
+    /// that reference exactly.
+    #[test]
+    fn weighted_rate_matches_per_pair_reference() {
+        fn reference(ev: &Evaluator, p: &Placement) -> f64 {
+            let mut best = f64::INFINITY;
+            for m in 0..ev.n_machines() {
+                let mut a = 0.0f64;
+                let mut b = 0.0f64;
+                for c in 0..ev.n_components() {
+                    let k = p.x[c][m] as f64;
+                    if k > 0.0 {
+                        let shares = ev.weighted_shares(p, c);
+                        a += ev.e_m[c][m] * ev.gains[c] * shares[m];
+                        b += k * ev.met_m[c][m];
+                    }
+                }
+                if b > ev.cap[m] + 1e-9 {
+                    return 0.0;
+                }
+                if a > 0.0 {
+                    best = best.min((ev.cap[m] - b) / a);
+                }
+            }
+            best
+        }
+        let ev = setup();
+        let mut rng = crate::util::rng::Rng::new(0x5EED);
+        for _ in 0..32 {
+            let mut p = Placement::empty(4, 3);
+            for c in 0..4 {
+                for _ in 0..rng.range(1, 3) {
+                    p.x[c][rng.range(0, 2)] += 1;
+                }
+            }
+            let got = ev.max_stable_rate_weighted(&p).unwrap();
+            let want = reference(&ev, &p);
+            assert!((got - want).abs() < 1e-9, "{got} vs {want} for {p:?}");
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ use super::dims::{B_BATCH, B_ONE};
 use super::{literal_f32, PjRtRuntime};
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::Cluster;
+use crate::predict::kernel;
 use crate::predict::{Evaluator, Placement};
 use crate::topology::Topology;
 use crate::{Error, Result};
@@ -97,7 +98,17 @@ impl ScorerProblem {
         for (mm, mach) in cluster.machines.iter().enumerate() {
             cap[mm] = mach.cap;
         }
-        Ok(ScorerProblem { n_comp: n, n_machines: m, adj, alpha, src_mask, e_m, met_m, cap, active })
+        Ok(ScorerProblem {
+            n_comp: n,
+            n_machines: m,
+            adj,
+            alpha,
+            src_mask,
+            e_m,
+            met_m,
+            cap,
+            active,
+        })
     }
 
     /// Flatten a placement into a padded `[C, M]` f32 block (written into
@@ -151,7 +162,12 @@ pub struct PjRtScorer {
 
 #[cfg(feature = "pjrt")]
 impl PjRtScorer {
-    pub fn new(rt: &PjRtRuntime, top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Self> {
+    pub fn new(
+        rt: &PjRtRuntime,
+        top: &Topology,
+        cluster: &Cluster,
+        profiles: &ProfileDb,
+    ) -> Result<Self> {
         let problem = ScorerProblem::new(top, cluster, profiles)?;
         let exe_batch = rt.load(&format!("scorer_b{B_BATCH}.hlo.txt"))?;
         let exe_one = rt.load(&format!("scorer_b{B_ONE}.hlo.txt"))?;
@@ -247,12 +263,21 @@ impl PlacementScorer for PjRtScorer {
             let remaining = candidates.len() - i;
             if remaining == 1 {
                 let refs = [&candidates[i]];
-                rows.extend(self.run_chunk(&self.exe_one, &self.statics, B_ONE, &refs, &r0s[i..i + 1])?);
+                let chunk =
+                    self.run_chunk(&self.exe_one, &self.statics, B_ONE, &refs, &r0s[i..i + 1])?;
+                rows.extend(chunk);
                 i += 1;
             } else {
                 let take = remaining.min(B_BATCH);
                 let refs: Vec<&Placement> = candidates[i..i + take].iter().collect();
-                rows.extend(self.run_chunk(&self.exe_batch, &self.statics, B_BATCH, &refs, &r0s[i..i + take])?);
+                let chunk = self.run_chunk(
+                    &self.exe_batch,
+                    &self.statics,
+                    B_BATCH,
+                    &refs,
+                    &r0s[i..i + take],
+                )?;
+                rows.extend(chunk);
                 i += take;
             }
         }
@@ -288,15 +313,21 @@ impl NativeScorer {
 }
 
 impl PlacementScorer for NativeScorer {
+    /// Batch evaluation over the kernel's shared tables: one `counts`
+    /// scratch serves the whole batch
+    /// ([`crate::predict::kernel::evaluate_with_scratch`] is
+    /// arithmetic-identical to [`Evaluator::evaluate`], so this stays the
+    /// exact oracle).
     fn score_batch(&self, candidates: &[Placement], r0s: &[f64]) -> Result<Vec<ScoreRow>> {
         if candidates.len() != r0s.len() {
             return Err(Error::Runtime("candidates/r0s length mismatch".into()));
         }
+        let mut counts = Vec::with_capacity(self.ev.n_components());
         candidates
             .iter()
             .zip(r0s)
             .map(|(p, &r0)| {
-                let e = self.ev.evaluate(p, r0)?;
+                let e = kernel::evaluate_with_scratch(&self.ev, p, r0, &mut counts)?;
                 Ok(ScoreRow {
                     util: e.util,
                     throughput: e.throughput,

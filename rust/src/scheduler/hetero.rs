@@ -34,6 +34,7 @@ use std::time::Instant;
 
 use super::problem::ResolvedConstraints;
 use super::{apply_objective, Problem, Provenance, Schedule, ScheduleRequest, Scheduler};
+use crate::predict::kernel;
 use crate::predict::{Evaluation, Evaluator, Placement};
 use crate::runtime::scorer::{NativeScorer, PlacementScorer, ScoreRow};
 use crate::topology::Topology;
@@ -58,7 +59,12 @@ pub struct HeteroScheduler {
 
 impl Default for HeteroScheduler {
     fn default() -> Self {
-        HeteroScheduler { r0: 8.0, max_tasks_per_machine: 32, max_iterations: 100_000, refine: true }
+        HeteroScheduler {
+            r0: 8.0,
+            max_tasks_per_machine: 32,
+            max_iterations: 100_000,
+            refine: true,
+        }
     }
 }
 
@@ -71,55 +77,27 @@ impl HeteroScheduler {
     /// stable rate (their MET cost exceeded their sharing benefit);
     /// (b) move single instances to better hosts while the rate improves.
     ///
-    /// Uses the eq.-5 linearity incrementally: per machine we maintain the
-    /// utilization slope `a_m = Σ x[c][m]·e[c][m]·gain_c/n_c` and MET load
-    /// `b_m`, so every candidate prune/move is scored in O(machines)
-    /// without cloning the placement (§Perf in EXPERIMENTS.md: this took
-    /// the 180-machine schedule from ~712 ms to the recorded figure).
+    /// Runs on [`kernel::DeltaEval`], the shared incremental eq.-5 state:
+    /// every candidate prune/move is probed in `O(machines)` against the
+    /// maintained per-machine slope/intercept, and an accepted delta
+    /// recomputes only the affected machine columns — no placement
+    /// clones, no `counts()` allocations (§Perf in EXPERIMENTS.md: this
+    /// took the 180-machine schedule from ~712 ms to the recorded
+    /// figure; the kernel rewires it onto the engine the optimal search
+    /// shares).
     fn refine_placement(
         &self,
         ev: &Evaluator,
         rc: &ResolvedConstraints,
-        mut p: Placement,
+        p: Placement,
         evaluated: &mut u64,
     ) -> Result<Placement> {
         let n_m = ev.n_machines();
         let n_c = p.n_components();
-
-        // closed-form rate from slope/intercept arrays with per-machine
-        // adjustments applied on the fly
-        let rate_with = |a: &[f64], b: &[f64], adj: &dyn Fn(usize) -> (f64, f64)| -> f64 {
-            let mut best = f64::INFINITY;
-            for m in 0..n_m {
-                let (da, db) = adj(m);
-                let bm = b[m] + db;
-                if bm > ev.cap[m] + 1e-9 {
-                    return 0.0;
-                }
-                let am = a[m] + da;
-                if am > 1e-15 {
-                    best = best.min((ev.cap[m] - bm) / am);
-                }
-            }
-            best
-        };
+        let mut de = kernel::DeltaEval::new(ev, &p)?;
 
         loop {
-            // rebuild the incremental state once per sweep (O(n·m))
-            let counts = p.counts();
-            let mut a = vec![0.0f64; n_m];
-            let mut b = vec![0.0f64; n_m];
-            for c in 0..n_c {
-                let share = ev.gains[c] / counts[c].max(1) as f64;
-                for m in 0..n_m {
-                    let k = p.x[c][m] as f64;
-                    if k > 0.0 {
-                        a[m] += k * ev.e_m[c][m] * share;
-                        b[m] += k * ev.met_m[c][m];
-                    }
-                }
-            }
-            let mut best_rate = rate_with(&a, &b, &|_| (0.0, 0.0));
+            let mut best_rate = de.rate();
             *evaluated += 1;
             let mut improved = false;
 
@@ -127,30 +105,19 @@ impl HeteroScheduler {
             // re-shares the stream over n-1 instances (slope of every
             // machine hosting c changes)
             'prune: for c in 0..n_c {
-                let n = p.count(c);
-                if n <= 1 {
+                if de.count(c) <= 1 {
                     continue;
                 }
-                let share_old = ev.gains[c] / n as f64;
-                let share_new = ev.gains[c] / (n - 1) as f64;
                 for drop_m in 0..n_m {
-                    if p.x[c][drop_m] == 0 {
+                    if de.get(c, drop_m) == 0 {
                         continue;
                     }
-                    let adj = |m: usize| -> (f64, f64) {
-                        let k_old = p.x[c][m] as f64;
-                        let k_new = k_old - if m == drop_m { 1.0 } else { 0.0 };
-                        (
-                            ev.e_m[c][m] * (k_new * share_new - k_old * share_old),
-                            -if m == drop_m { ev.met_m[c][m] } else { 0.0 },
-                        )
-                    };
-                    let r = rate_with(&a, &b, &adj);
+                    let r = de.rate_removing(c, drop_m);
                     *evaluated += 1;
                     if r > best_rate * (1.0 + 1e-9) {
-                        p.x[c][drop_m] -= 1;
+                        de.apply_remove(c, drop_m);
                         improved = true;
-                        break 'prune; // state arrays stale: restart sweep
+                        break 'prune; // shares changed: restart the sweep
                     }
                 }
             }
@@ -160,40 +127,24 @@ impl HeteroScheduler {
 
             // (b) single-instance moves (count unchanged: only from/to move)
             'moves: for c in 0..n_c {
-                let share = ev.gains[c] / counts[c].max(1) as f64;
                 for from in 0..n_m {
-                    if p.x[c][from] == 0 {
+                    if de.get(c, from) == 0 {
                         continue;
                     }
                     for to in 0..n_m {
                         if to == from
                             || !rc.allows(c, to)
-                            || p.tasks_on(to) >= self.max_tasks_per_machine
+                            || de.tasks_on(to) as usize >= self.max_tasks_per_machine
                         {
                             continue;
                         }
-                        let adj = |m: usize| -> (f64, f64) {
-                            if m == from {
-                                (-ev.e_m[c][m] * share, -ev.met_m[c][m])
-                            } else if m == to {
-                                (ev.e_m[c][m] * share, ev.met_m[c][m])
-                            } else {
-                                (0.0, 0.0)
-                            }
-                        };
-                        let r = rate_with(&a, &b, &adj);
+                        let r = de.rate_with_move(c, from, to);
                         *evaluated += 1;
                         if r > best_rate * (1.0 + 1e-9) {
-                            p.x[c][from] -= 1;
-                            p.x[c][to] += 1;
+                            de.apply_move(c, from, to);
                             best_rate = r;
-                            // a/b only changed on two machines: patch them
-                            a[from] -= ev.e_m[c][from] * share;
-                            b[from] -= ev.met_m[c][from];
-                            a[to] += ev.e_m[c][to] * share;
-                            b[to] += ev.met_m[c][to];
                             improved = true;
-                            if p.x[c][from] == 0 {
+                            if de.get(c, from) == 0 {
                                 continue 'moves;
                             }
                         }
@@ -201,7 +152,7 @@ impl HeteroScheduler {
                 }
             }
             if !improved {
-                return Ok(p);
+                return Ok(de.placement());
             }
         }
     }
@@ -389,10 +340,13 @@ impl HeteroScheduler {
                     current_ir += current_ir / scale;
                 }
                 Some(m_over) => {
-                    let hottest = self
-                        .hottest_on(ev, &placement, m_over, current_ir)
-                        .ok_or_else(|| Error::Schedule("over-utilized machine hosts no tasks".into()))?;
-                    match self.best_host(ev, rc, scorer, &placement, hottest, current_ir, evaluated)? {
+                    let hottest =
+                        self.hottest_on(ev, &placement, m_over, current_ir).ok_or_else(|| {
+                            Error::Schedule("over-utilized machine hosts no tasks".into())
+                        })?;
+                    let host =
+                        self.best_host(ev, rc, scorer, &placement, hottest, current_ir, evaluated)?;
+                    match host {
                         Some((_, q)) => {
                             placement = q;
                         }
@@ -430,7 +384,9 @@ impl HeteroScheduler {
             // loses to the default scheduler on its own instance counts.
             let etg = crate::topology::Etg { counts: placement.counts() };
             if let Ok(rr) =
-                crate::scheduler::default_rr::DefaultScheduler::assign_constrained(top, cluster, &etg, rc)
+                crate::scheduler::default_rr::DefaultScheduler::assign_constrained(
+                    top, cluster, &etg, rc,
+                )
             {
                 let rr_refined = self.refine_placement(ev, rc, rr, evaluated)?;
                 if ev.max_stable_rate(&rr_refined)? > ev.max_stable_rate(&placement)? {
@@ -528,7 +484,8 @@ mod tests {
 
     fn run(top: &Topology) -> (Schedule, Problem) {
         let p = problem(top);
-        let s = HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let s =
+            HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
         (s, p)
     }
 
@@ -587,8 +544,9 @@ mod tests {
         use crate::topology::Etg;
         for top in benchmarks::micro() {
             let p = problem(&top);
-            let ours =
-                HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+            let ours = HeteroScheduler::default()
+                .schedule(&p, &ScheduleRequest::max_throughput())
+                .unwrap();
             let etg = Etg { counts: ours.placement.counts() };
             let rr = DefaultScheduler::with_etg(etg)
                 .schedule(&p, &ScheduleRequest::max_throughput())
@@ -640,8 +598,10 @@ mod tests {
     fn deterministic() {
         let top = benchmarks::diamond();
         let p = problem(&top);
-        let a = HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
-        let b = HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let a =
+            HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let b =
+            HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
         assert_eq!(a.placement, b.placement);
         assert!((a.rate - b.rate).abs() < 1e-9);
     }

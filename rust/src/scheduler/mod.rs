@@ -319,7 +319,14 @@ pub(crate) fn apply_objective(
                     s.rate, target
                 )));
             }
-            let p = consolidate_machines(ev, rc, s.placement, *target, max_tasks_per_machine, evaluated)?;
+            let p = consolidate_machines(
+                ev,
+                rc,
+                s.placement,
+                *target,
+                max_tasks_per_machine,
+                evaluated,
+            )?;
             let mut out = finish(ev, p)?;
             out.provenance = s.provenance;
             Ok(out)

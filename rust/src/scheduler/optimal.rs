@@ -14,20 +14,35 @@
 //! The paper uses this brute-force comparator to bound how far the
 //! heuristic is from optimal (within 4% worst case), and to motivate the
 //! heuristic in the first place: the search that took the paper's Xeon
-//! server ~18 h for 27,405 possibilities is exactly the loop below,
-//! which we make tractable by scoring candidates in batches of 256
-//! through the AOT-compiled evaluation model (L1 Pallas scorer).
+//! server ~18 h for 27,405 possibilities is exactly the loop below.  Two
+//! engines make it tractable:
 //!
-//! Scoring uses the linearity of eq. 5 in `R0`: one batched evaluation at
-//! `R0 = 1` yields each machine's utilization slope `a_m` (after
-//! subtracting the placement's rate-independent MET load `b_m`, computed
-//! natively), giving the closed form `R0* = min_m (cap_m - b_m) / a_m`
-//! per candidate — one PJRT execution scores 256 placements exactly.
+//! * **Incremental kernel** (the default, [`crate::predict::kernel`]):
+//!   every distribution a component may take is precomputed once as its
+//!   per-machine `(a_m, b_m)` slope/intercept contribution
+//!   ([`RowTable`]); the exhaustive DFS then composes candidates by
+//!   pushing/popping rows into per-machine accumulators in `O(nnz)` and
+//!   reads the closed form `R0* = min_m (cap_m - b_m)/a_m` straight off
+//!   the running state — no per-candidate allocation, no `O(C·M)`
+//!   re-derivation.  The outermost component-row loop is sharded across
+//!   threads (`threads`, [`std::thread::scope`]); shard results merge in
+//!   enumeration order under the request's objective, so the parallel
+//!   search returns the *identical* schedule as the single-threaded one.
+//! * **Batched scorer** (the PJRT path, and the naive comparator): one
+//!   batched evaluation at `R0 = 1` yields each machine's utilization
+//!   slope `a_m` (after subtracting the placement's rate-independent MET
+//!   load `b_m`, computed natively) — one PJRT execution scores 256
+//!   placements exactly.  [`OptimalScheduler::schedule_naive`] pins this
+//!   engine on the native mirror so benches and the equivalence suite
+//!   can race the two.
 
 use std::time::Instant;
 
 use super::problem::ResolvedConstraints;
-use super::{finish, util_spread, Objective, Problem, Provenance, Schedule, ScheduleRequest, Scheduler};
+use super::{
+    finish, util_spread, Objective, Problem, Provenance, Schedule, ScheduleRequest, Scheduler,
+};
+use crate::predict::kernel::{self, AccumState, RowTable};
 use crate::predict::{Evaluator, Placement};
 use crate::runtime::scorer::{NativeScorer, PlacementScorer};
 use crate::{Error, Result};
@@ -56,6 +71,14 @@ pub struct OptimalScheduler {
     /// is by construction >= its heuristic; this keeps that property
     /// while the enumeration stays bounded).
     pub seed_heuristics: bool,
+    /// Worker threads for the exhaustive kernel search: `0` = one per
+    /// available core, `1` = sequential.  Shards split the outermost
+    /// component-row loop and merge deterministically, so the result is
+    /// identical at every thread count.  Design spaces of <= 4096
+    /// placements always run sequentially (spawns would dominate), and
+    /// so does `BalancedUtilization` (its epsilon-banded tie predicate
+    /// is not associative; the sequential fold is the spec).
+    pub threads: usize,
 }
 
 impl Default for OptimalScheduler {
@@ -65,6 +88,7 @@ impl Default for OptimalScheduler {
             space: SearchSpace::Exhaustive,
             enumeration_limit: 3_000_000,
             seed_heuristics: true,
+            threads: 0,
         }
     }
 }
@@ -97,6 +121,169 @@ struct Best {
     spread: f64,
 }
 
+/// Shared read-only state of one kernel search (borrowed by every shard).
+struct KernelCtx<'a> {
+    ev: &'a Evaluator,
+    rc: &'a ResolvedConstraints,
+    objective: &'a Objective,
+    /// Full-width count rows per component (placement materialization).
+    rows: &'a [Vec<Vec<usize>>],
+    /// The same rows as precomputed slope/intercept terms.
+    tables: &'a [RowTable],
+}
+
+impl KernelCtx<'_> {
+    /// Build the placement selected by one row index per component —
+    /// only paid when a candidate actually becomes the running best.
+    fn materialize(&self, sel: &[usize]) -> Placement {
+        Placement {
+            x: sel.iter().enumerate().map(|(c, &i)| self.rows[c][i].clone()).collect(),
+        }
+    }
+
+    /// Fold the candidate currently composed in `acc` into `best` under
+    /// the objective.  `make` materializes the placement lazily.
+    fn consider_scored(
+        &self,
+        acc: &AccumState,
+        make: impl FnOnce() -> Placement,
+        best: &mut Option<Best>,
+    ) {
+        let r = acc.rate(&self.ev.cap);
+        match self.objective {
+            Objective::MaxThroughput => {
+                if best.as_ref().map_or(true, |b| r > b.rate) {
+                    *best = Some(Best { placement: make(), rate: r, used: 0, spread: 0.0 });
+                }
+            }
+            Objective::MinMachinesAtRate(target) => {
+                if r + 1e-9 < *target {
+                    return;
+                }
+                let used = acc.machines_used();
+                let take = best
+                    .as_ref()
+                    .map_or(true, |b| used < b.used || (used == b.used && r > b.rate));
+                if take {
+                    *best = Some(Best { placement: make(), rate: r, used, spread: 0.0 });
+                }
+            }
+            Objective::BalancedUtilization => {
+                let decisively_better =
+                    best.as_ref().map_or(true, |b| r > b.rate * (1.0 + 1e-9));
+                let rate_tie = best
+                    .as_ref()
+                    .map_or(false, |b| !decisively_better && r >= b.rate * (1.0 - 1e-9));
+                if decisively_better || rate_tie {
+                    let spread = acc.spread(&self.rc.excluded, r);
+                    let take = decisively_better
+                        || best.as_ref().map_or(true, |b| spread + 1e-9 < b.spread);
+                    if take {
+                        *best = Some(Best { placement: make(), rate: r, used: 0, spread });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Score a seeded (non-enumerated) placement through the same row
+    /// arithmetic and push order as the enumeration, so a seed that ties
+    /// an enumerated twin compares bit-identically.
+    fn consider_seed(&self, p: Placement, best: &mut Option<Best>, evaluated: &mut u64) {
+        let rows = kernel::rows_of_placement(self.ev, &p);
+        let mut acc = AccumState::new(self.ev.n_machines());
+        for row in rows.iter().rev() {
+            acc.push(row);
+        }
+        *evaluated += 1;
+        self.consider_scored(&acc, || p, best);
+    }
+
+    /// Enumerate one contiguous slice of the outermost component's rows
+    /// (component `C-1`; component 0 varies fastest, matching the
+    /// batched engine's odometer order).
+    fn enum_shard(
+        &self,
+        outer: std::ops::Range<usize>,
+        best: &mut Option<Best>,
+        evaluated: &mut u64,
+    ) {
+        let n_comp = self.tables.len();
+        let mut acc = AccumState::new(self.ev.n_machines());
+        let mut sel = vec![0usize; n_comp];
+        for i in outer {
+            sel[n_comp - 1] = i;
+            acc.push(&self.tables[n_comp - 1].rows[i]);
+            if n_comp == 1 {
+                *evaluated += 1;
+                self.consider_scored(&acc, || self.materialize(&sel), best);
+            } else {
+                self.enum_level(n_comp - 2, &mut acc, &mut sel, best, evaluated);
+            }
+            acc.pop();
+        }
+    }
+
+    /// DFS over components `c..=0`, innermost component 0 at the leaves.
+    fn enum_level(
+        &self,
+        c: usize,
+        acc: &mut AccumState,
+        sel: &mut [usize],
+        best: &mut Option<Best>,
+        evaluated: &mut u64,
+    ) {
+        for (i, row) in self.tables[c].rows.iter().enumerate() {
+            sel[c] = i;
+            acc.push(row);
+            if c == 0 {
+                *evaluated += 1;
+                self.consider_scored(acc, || self.materialize(sel), best);
+            } else {
+                self.enum_level(c - 1, acc, sel, best, evaluated);
+            }
+            acc.pop();
+        }
+    }
+}
+
+/// Contiguous, balanced partition of `0..n` into `t` shards.
+fn shard_ranges(n: usize, t: usize) -> Vec<std::ops::Range<usize>> {
+    let base = n / t;
+    let rem = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Fold a shard's winner into the running best under the objective —
+/// the same strictly-better predicate as the in-shard fold, applied in
+/// shard (= enumeration) order.
+fn merge_best(objective: &Objective, cur: &mut Option<Best>, cand: Option<Best>) {
+    let Some(cand) = cand else { return };
+    let take = match cur.as_ref() {
+        None => true,
+        Some(b) => match objective {
+            Objective::MaxThroughput => cand.rate > b.rate,
+            Objective::MinMachinesAtRate(_) => {
+                cand.used < b.used || (cand.used == b.used && cand.rate > b.rate)
+            }
+            Objective::BalancedUtilization => {
+                cand.rate > b.rate * (1.0 + 1e-9)
+                    || (cand.rate >= b.rate * (1.0 - 1e-9) && cand.spread + 1e-9 < b.spread)
+            }
+        },
+    };
+    if take {
+        *cur = Some(cand);
+    }
+}
+
 impl OptimalScheduler {
     pub fn sampled(candidates: usize, seed: u64) -> Self {
         OptimalScheduler { space: SearchSpace::Sampled { candidates, seed }, ..Default::default() }
@@ -114,7 +301,13 @@ impl OptimalScheduler {
 
     /// Enumerate all distributions of `k` instances over `m` machines.
     fn compositions(k: usize, m: usize, out: &mut Vec<Vec<usize>>) {
-        fn rec(rest: usize, slot: usize, m: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        fn rec(
+            rest: usize,
+            slot: usize,
+            m: usize,
+            cur: &mut Vec<usize>,
+            out: &mut Vec<Vec<usize>>,
+        ) {
             if slot == m - 1 {
                 cur.push(rest);
                 out.push(cur.clone());
@@ -161,7 +354,9 @@ impl OptimalScheduler {
         let n_comp = rows.len();
         let mut idx = vec![0usize; n_comp];
         loop {
-            let p = Placement { x: idx.iter().enumerate().map(|(c, &i)| rows[c][i].clone()).collect() };
+            let p = Placement {
+                x: idx.iter().enumerate().map(|(c, &i)| rows[c][i].clone()).collect(),
+            };
             sink(p)?;
             // odometer increment
             let mut d = 0;
@@ -254,6 +449,124 @@ impl OptimalScheduler {
             }
         }
         Ok(())
+    }
+
+    /// The incremental kernel search: row tables + accumulator DFS,
+    /// optionally sharded across threads.  Enumeration visits candidates
+    /// in exactly the batched engine's odometer order (component 0's row
+    /// varies fastest), so the two engines select the same schedule.
+    fn search_kernel(
+        &self,
+        problem: &Problem,
+        req: &ScheduleRequest,
+        rc: &ResolvedConstraints,
+        ev: &Evaluator,
+    ) -> Result<Schedule> {
+        let started = Instant::now();
+        let top = problem.topology();
+        let n_comp = top.n_components();
+        let n_m = problem.cluster().n_machines();
+        let mut evaluated: u64 = 0;
+        let mut best: Option<Best> = None;
+
+        let rows: Vec<Vec<Vec<usize>>> =
+            (0..n_comp).map(|c| self.component_rows(c, n_m, rc)).collect();
+        let size = rows.iter().fold(1u128, |acc, r| acc.saturating_mul(r.len() as u128));
+        if size > self.enumeration_limit as u128 {
+            return Err(Error::Schedule(format!(
+                "design space has {size} placements (> limit {}); use SearchSpace::Sampled",
+                self.enumeration_limit
+            )));
+        }
+        let tables: Vec<RowTable> =
+            (0..n_comp).map(|c| RowTable::build(ev, c, &rows[c])).collect();
+        let ctx = KernelCtx { ev, rc, objective: &req.objective, rows: &rows, tables: &tables };
+
+        if self.seed_heuristics {
+            // include the heuristics' solutions in the candidate set, in
+            // the same order the batched engine scores them (RR first)
+            use crate::scheduler::default_rr::DefaultScheduler;
+            use crate::scheduler::hetero::HeteroScheduler;
+            let seed_req =
+                ScheduleRequest::max_throughput().with_constraints(req.constraints.clone());
+            if let Ok(h) = HeteroScheduler::default().schedule(problem, &seed_req) {
+                let etg = crate::topology::Etg { counts: h.placement.counts() };
+                if let Ok(rr) =
+                    DefaultScheduler::assign_constrained(top, problem.cluster(), &etg, rc)
+                {
+                    ctx.consider_seed(rr, &mut best, &mut evaluated);
+                }
+                ctx.consider_seed(h.placement, &mut best, &mut evaluated);
+            }
+        }
+
+        let outer_rows = tables[n_comp - 1].rows.len();
+        // tiny spaces stay sequential: thread spawns would dominate the
+        // search itself (the controller re-plans micro spaces every step)
+        let threads = if size <= 4096 {
+            1
+        } else {
+            match req.objective {
+                Objective::BalancedUtilization => 1,
+                _ => {
+                    let want = if self.threads == 0 {
+                        std::thread::available_parallelism().map_or(1, |n| n.get())
+                    } else {
+                        self.threads
+                    };
+                    want.clamp(1, outer_rows.max(1))
+                }
+            }
+        };
+
+        if threads <= 1 {
+            ctx.enum_shard(0..outer_rows, &mut best, &mut evaluated);
+        } else {
+            let shards: Vec<(Option<Best>, u64)> = std::thread::scope(|s| {
+                let handles: Vec<_> = shard_ranges(outer_rows, threads)
+                    .into_iter()
+                    .map(|range| {
+                        let ctx = &ctx;
+                        s.spawn(move || {
+                            let mut b = None;
+                            let mut n = 0u64;
+                            ctx.enum_shard(range, &mut b, &mut n);
+                            (b, n)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("optimal search shard panicked"))
+                    .collect()
+            });
+            // fold shard winners in enumeration order: a later shard only
+            // replaces the running best when strictly better, which is
+            // exactly the sequential first-wins fold
+            for (shard_best, n) in shards {
+                evaluated += n;
+                merge_best(&req.objective, &mut best, shard_best);
+            }
+        }
+
+        let best = best.ok_or_else(|| match req.objective {
+            Objective::MinMachinesAtRate(t) => Error::Schedule(format!(
+                "no placement in the design space sustains rate {t:.3}"
+            )),
+            _ => Error::Schedule("empty design space".into()),
+        })?;
+        if best.rate <= 0.0 {
+            return Err(Error::Schedule("no feasible placement in the design space".into()));
+        }
+        let mut s = finish(ev, best.placement)?;
+        s.provenance = Provenance {
+            policy: self.name().into(),
+            objective: req.objective.describe(),
+            placements_evaluated: evaluated,
+            backend: "kernel".into(),
+            wall: started.elapsed(),
+        };
+        Ok(s)
     }
 
     /// The search proper, over an already-resolved request.
@@ -383,6 +696,16 @@ impl OptimalScheduler {
         let ev = problem.constrained_evaluator(&rc);
         self.search(problem, req, &rc, &ev, scorer)
     }
+
+    /// Force the naive batched engine on the native mirror — the
+    /// comparator the equivalence suite and `bench sched-perf` race the
+    /// incremental kernel against.
+    pub fn schedule_naive(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule> {
+        let rc = problem.resolve(&req.constraints)?;
+        let ev = problem.constrained_evaluator(&rc);
+        let scorer = NativeScorer::from_evaluator(ev.into_owned());
+        self.search(problem, req, &rc, scorer.evaluator(), &scorer)
+    }
 }
 
 impl Scheduler for OptimalScheduler {
@@ -394,11 +717,16 @@ impl Scheduler for OptimalScheduler {
         let rc = problem.resolve(&req.constraints)?;
         let ev = problem.constrained_evaluator(&rc);
         match problem.scorer() {
+            // an attached scorer (PJRT) owns candidate evaluation
             Some(scorer) => self.search(problem, req, &rc, &ev, scorer),
-            None => {
-                let scorer = NativeScorer::from_evaluator(ev.into_owned());
-                self.search(problem, req, &rc, scorer.evaluator(), &scorer)
-            }
+            None => match &self.space {
+                // the incremental kernel is the native exhaustive engine
+                SearchSpace::Exhaustive => self.search_kernel(problem, req, &rc, &ev),
+                SearchSpace::Sampled { .. } => {
+                    let scorer = NativeScorer::from_evaluator(ev.into_owned());
+                    self.search(problem, req, &rc, scorer.evaluator(), &scorer)
+                }
+            },
         }
     }
 }
@@ -468,8 +796,9 @@ mod tests {
             let opt = OptimalScheduler { max_instances_per_component: 2, ..Default::default() }
                 .schedule(&p, &ScheduleRequest::max_throughput())
                 .unwrap();
-            let het =
-                HeteroScheduler::default().schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+            let het = HeteroScheduler::default()
+                .schedule(&p, &ScheduleRequest::max_throughput())
+                .unwrap();
             assert!(
                 opt.eval.throughput >= het.eval.throughput * 0.999,
                 "{}: optimal {} < hetero {}",
@@ -515,6 +844,61 @@ mod tests {
     }
 
     #[test]
+    fn kernel_matches_naive_engine() {
+        for top in benchmarks::micro() {
+            let p = problem(&top);
+            let o = OptimalScheduler {
+                max_instances_per_component: 2,
+                threads: 1,
+                ..Default::default()
+            };
+            let k = o.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+            let n = o.schedule_naive(&p, &ScheduleRequest::max_throughput()).unwrap();
+            assert_eq!(k.placement, n.placement, "{}: engines disagree", top.name);
+            assert_eq!(k.rate, n.rate, "{}: finish() certifies both", top.name);
+            assert_eq!(k.provenance.placements_evaluated, n.provenance.placements_evaluated);
+            assert_eq!(k.provenance.backend, "kernel");
+            assert_eq!(n.provenance.backend, "native");
+        }
+    }
+
+    #[test]
+    fn parallel_search_identical_to_sequential() {
+        let top = benchmarks::diamond();
+        let p = problem(&top);
+        let single = OptimalScheduler {
+            max_instances_per_component: 2,
+            threads: 1,
+            ..Default::default()
+        };
+        let want = single.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        for threads in [2, 3, 8] {
+            let par = OptimalScheduler { threads, ..single.clone() };
+            let got = par.schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+            assert_eq!(got.placement, want.placement, "{threads} threads diverged");
+            assert_eq!(got.rate, want.rate);
+            assert_eq!(
+                got.provenance.placements_evaluated,
+                want.provenance.placements_evaluated
+            );
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for (n, t) in [(10, 3), (7, 7), (5, 2), (12, 5)] {
+            let ranges = shard_ranges(n, t);
+            assert_eq!(ranges.len(), t);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
     fn sampled_mode_returns_feasible() {
         let top = benchmarks::linear();
         let p = problem(&top);
@@ -528,8 +912,12 @@ mod tests {
     fn sampled_deterministic_by_seed() {
         let top = benchmarks::linear();
         let p = problem(&top);
-        let a = OptimalScheduler::sampled(200, 7).schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
-        let b = OptimalScheduler::sampled(200, 7).schedule(&p, &ScheduleRequest::max_throughput()).unwrap();
+        let a = OptimalScheduler::sampled(200, 7)
+            .schedule(&p, &ScheduleRequest::max_throughput())
+            .unwrap();
+        let b = OptimalScheduler::sampled(200, 7)
+            .schedule(&p, &ScheduleRequest::max_throughput())
+            .unwrap();
         assert_eq!(a.placement, b.placement);
     }
 

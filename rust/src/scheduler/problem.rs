@@ -156,7 +156,8 @@ impl Problem {
             let ci = self.component_index(comp)?;
             if *n == 0 {
                 return Err(Error::Schedule(format!(
-                    "max_instances for component '{comp}' must be >= 1 (every component keeps an instance)"
+                    "max_instances for component '{comp}' must be >= 1 (every \
+                     component keeps an instance)"
                 )));
             }
             rc.max_instances[ci] = rc.max_instances[ci].min(*n);
@@ -165,7 +166,8 @@ impl Problem {
         for (ci, comp) in self.top.components.iter().enumerate() {
             if (0..n_machines).all(|m| !rc.allows(ci, m)) {
                 return Err(Error::Schedule(format!(
-                    "constraints leave component '{}' with no allowed machine (pins ∩ non-excluded = ∅)",
+                    "constraints leave component '{}' with no allowed machine \
+                     (pins ∩ non-excluded = ∅)",
                     comp.name
                 )));
             }
@@ -314,7 +316,8 @@ mod tests {
     fn resolve_rejects_unsatisfiable_sets() {
         let p = problem();
         // pin a component onto an excluded machine only
-        let c = Constraints::new().exclude_machine("pentium-0").pin_component("spout", ["pentium-0"]);
+        let c =
+            Constraints::new().exclude_machine("pentium-0").pin_component("spout", ["pentium-0"]);
         assert!(p.resolve(&c).is_err());
         // exclude everything
         let c = Constraints::new().exclude_machines(["pentium-0", "i3-0", "i5-0"]);

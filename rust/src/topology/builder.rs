@@ -26,7 +26,12 @@ pub struct TopologyBuilder {
 
 impl TopologyBuilder {
     pub fn new(name: impl Into<String>) -> Self {
-        TopologyBuilder { name: name.into(), components: Vec::new(), edges: Vec::new(), errors: Vec::new() }
+        TopologyBuilder {
+            name: name.into(),
+            components: Vec::new(),
+            edges: Vec::new(),
+            errors: Vec::new(),
+        }
     }
 
     fn index_of(&self, name: &str) -> Option<usize> {

@@ -251,8 +251,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-')
-        {
+        let numeric = |c: u8| {
+            c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-'
+        };
+        while matches!(self.peek(), Some(c) if numeric(c)) {
             self.pos += 1;
         }
         std::str::from_utf8(&self.bytes[start..self.pos])
@@ -352,6 +354,10 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
 
 pub fn num(v: f64) -> Value {
     Value::Num(v)
+}
+
+pub fn bool(v: bool) -> Value {
+    Value::Bool(v)
 }
 
 pub fn s(v: impl Into<String>) -> Value {

@@ -31,7 +31,8 @@ pub fn check<T: std::fmt::Debug>(
         let input = gen(&mut rng);
         if let Err(msg) = property(&input) {
             panic!(
-                "property '{name}' failed (case {case}, PROP_SEED={base}):\n  input: {input:?}\n  {msg}"
+                "property '{name}' failed (case {case}, PROP_SEED={base}):\n  \
+                 input: {input:?}\n  {msg}"
             );
         }
     }

@@ -19,9 +19,9 @@ fn diurnal_scenario1_head_to_head() {
     assert!(trace.n_steps() >= 500);
 
     let started = Instant::now();
+    let cfg = ControllerConfig::default();
     let report =
-        controller::run_trace(&top, &cluster, &db, &trace, &Policy::ALL, &ControllerConfig::default())
-            .unwrap();
+        controller::run_trace(&top, &cluster, &db, &trace, &Policy::ALL, &cfg).unwrap();
     let elapsed = started.elapsed();
     // 500 virtual seconds of trace; any wall-clock sleeping would blow
     // this bound by orders of magnitude even in debug builds

@@ -23,8 +23,9 @@ fn cfg() -> EngineConfig {
     }
 }
 
-fn hetero(top: &Topology) -> (Schedule, hstorm::cluster::Cluster, hstorm::cluster::profile::ProfileDb)
-{
+type World = (Schedule, hstorm::cluster::Cluster, hstorm::cluster::profile::ProfileDb);
+
+fn hetero(top: &Topology) -> World {
     let (cluster, db) = presets::paper_cluster();
     let problem = Problem::new(top, &cluster, &db).unwrap();
     let s = HeteroScheduler::default()

@@ -1,0 +1,241 @@
+//! Equivalence suite for the incremental scoring kernel
+//! (`hstorm::predict::kernel`): the flat/incremental paths must agree
+//! with the naive `Evaluator` on arbitrary placements, and the kernel
+//! optimal search must select the identical schedule as the naive
+//! batched engine — single-threaded and at every shard count.
+
+use hstorm::cluster::profile::ProfileDb;
+use hstorm::cluster::{presets, scenarios, Cluster};
+use hstorm::predict::kernel::{self, AccumState, DeltaEval};
+use hstorm::predict::{Evaluator, Placement};
+use hstorm::scheduler::optimal::OptimalScheduler;
+use hstorm::scheduler::{Objective, Problem, ScheduleRequest, Scheduler};
+use hstorm::topology::{benchmarks, Topology};
+use hstorm::util::rng::Rng;
+
+/// Every (topology, cluster) pair the suite sweeps: all 5 evaluation
+/// topologies on the paper cluster and the small Table-4 scenario.
+fn worlds() -> Vec<(Topology, Cluster, ProfileDb)> {
+    let mut out = Vec::new();
+    for top in benchmarks::all() {
+        let (c, db) = presets::paper_cluster();
+        out.push((top.clone(), c, db));
+        let (c, db) = scenarios::by_id(1).unwrap().build();
+        out.push((top, c, db));
+    }
+    out
+}
+
+fn random_placement(rng: &mut Rng, n_comp: usize, n_m: usize) -> Placement {
+    let mut p = Placement::empty(n_comp, n_m);
+    for c in 0..n_comp {
+        for _ in 0..rng.range(1, 4) {
+            p.x[c][rng.range(0, n_m - 1)] += 1;
+        }
+    }
+    p
+}
+
+/// Incremental/flat scoring agrees with the naive `Evaluator` within
+/// 1e-9 on randomized placements across all 5 topologies, both shuffle
+/// and speed-weighted grouping.
+#[test]
+fn kernel_scoring_matches_naive_evaluator() {
+    let mut rng = Rng::new(0xE0_1234);
+    let mut counts = Vec::new();
+    for (top, cluster, db) in worlds() {
+        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+        for _ in 0..40 {
+            let p = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+            let want = ev.max_stable_rate_or_zero(&p).unwrap();
+
+            // (1) row-table accumulators, pushed in search order
+            let mut acc = AccumState::new(ev.n_machines());
+            for row in kernel::rows_of_placement(&ev, &p).iter().rev() {
+                acc.push(row);
+            }
+            let got = acc.rate(&ev.cap);
+            assert!((got - want).abs() < 1e-9, "{}: accum {got} vs naive {want}", top.name);
+
+            // (2) delta-evaluation state
+            let de = DeltaEval::new(&ev, &p).unwrap();
+            assert!(
+                (de.rate_or_zero() - want).abs() < 1e-9,
+                "{}: delta {} vs naive {want}",
+                top.name,
+                de.rate_or_zero()
+            );
+
+            // (3) scratch-reusing evaluation is arithmetic-identical
+            let r0 = rng.range_f64(1.0, 200.0);
+            let a = ev.evaluate(&p, r0).unwrap();
+            let b = kernel::evaluate_with_scratch(&ev, &p, r0, &mut counts).unwrap();
+            assert_eq!(a.util, b.util, "{}", top.name);
+            assert_eq!(a.feasible, b.feasible);
+
+            // (4) weighted grouping (hoisted shares) stays a boundary
+            let rw = ev.max_stable_rate_weighted(&p).unwrap();
+            if rw.is_finite() && rw > 0.0 {
+                assert!(ev.evaluate_weighted(&p, rw).unwrap().feasible, "{}", top.name);
+                assert!(!ev.evaluate_weighted(&p, rw * 1.01).unwrap().feasible, "{}", top.name);
+            }
+        }
+    }
+}
+
+/// Delta probes (move/add/remove) agree with from-scratch evaluation of
+/// the mutated placement, and applied chains never drift.
+#[test]
+fn delta_evaluation_matches_from_scratch() {
+    let mut rng = Rng::new(0xDE_17A);
+    for (top, cluster, db) in worlds() {
+        let ev = Evaluator::new(&top, &cluster, &db).unwrap();
+        let p = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+        let mut de = DeltaEval::new(&ev, &p).unwrap();
+        for _ in 0..30 {
+            let c = rng.range(0, ev.n_components() - 1);
+            let m = rng.range(0, ev.n_machines() - 1);
+            match rng.range(0, 2) {
+                0 => {
+                    let from = (0..ev.n_machines()).find(|&m| de.get(c, m) > 0).unwrap();
+                    if from != m {
+                        let probe = de.rate_with_move(c, from, m);
+                        de.apply_move(c, from, m);
+                        let live = de.rate();
+                        assert!(
+                            (probe - live).abs() < 1e-9
+                                || (!probe.is_finite() && !live.is_finite()),
+                            "{}: move probe {probe} vs applied {live}",
+                            top.name
+                        );
+                    }
+                }
+                1 => {
+                    let probe = de.rate_adding(c, m);
+                    de.apply_add(c, m);
+                    let live = de.rate();
+                    assert!(
+                        (probe - live).abs() < 1e-9 || (!probe.is_finite() && !live.is_finite()),
+                        "{}: add probe {probe} vs applied {live}",
+                        top.name
+                    );
+                }
+                _ => {
+                    if de.count(c) > 1 {
+                        let host = (0..ev.n_machines()).find(|&m| de.get(c, m) > 0).unwrap();
+                        let probe = de.rate_removing(c, host);
+                        de.apply_remove(c, host);
+                        let live = de.rate();
+                        assert!(
+                            (probe - live).abs() < 1e-9
+                                || (!probe.is_finite() && !live.is_finite()),
+                            "{}: remove probe {probe} vs applied {live}",
+                            top.name
+                        );
+                    }
+                }
+            }
+            let want = ev.max_stable_rate_or_zero(&de.placement()).unwrap();
+            assert!(
+                (de.rate_or_zero() - want).abs() < 1e-9,
+                "{}: drifted to {} vs {want}",
+                top.name,
+                de.rate_or_zero()
+            );
+        }
+    }
+}
+
+/// The kernel exhaustive search and the naive batched engine select the
+/// identical schedule (placement and certified rate) under both search
+/// objectives, on the paper cluster across the micro topologies.
+#[test]
+fn optimal_engines_select_identical_schedule() {
+    let (cluster, db) = presets::paper_cluster();
+    let o = OptimalScheduler {
+        max_instances_per_component: 2,
+        threads: 1,
+        ..Default::default()
+    };
+    for top in benchmarks::micro() {
+        let problem = Problem::new(&top, &cluster, &db).unwrap();
+        let max_req = ScheduleRequest::max_throughput();
+        let k = o.schedule(&problem, &max_req).unwrap();
+        let n = o.schedule_naive(&problem, &max_req).unwrap();
+        assert_eq!(k.placement, n.placement, "{}: max-throughput engines disagree", top.name);
+        assert_eq!(k.rate, n.rate, "{}", top.name);
+        assert_eq!(
+            k.provenance.placements_evaluated, n.provenance.placements_evaluated,
+            "{}: engines enumerated different candidate counts",
+            top.name
+        );
+
+        let min_req = ScheduleRequest::new(Objective::MinMachinesAtRate(k.rate * 0.25));
+        let km = o.schedule(&problem, &min_req).unwrap();
+        let nm = o.schedule_naive(&problem, &min_req).unwrap();
+        assert_eq!(km.placement, nm.placement, "{}: min-machines engines disagree", top.name);
+        assert_eq!(km.rate, nm.rate, "{}", top.name);
+    }
+}
+
+/// Same identity on the largest exhaustively-searchable seed scenario
+/// (Table 4 scenario 1, 6 machines: 531k placements for the linear
+/// topology at <= 2 instances per component).
+#[test]
+fn optimal_engines_agree_on_scenario1() {
+    let (cluster, db) = scenarios::by_id(1).unwrap().build();
+    let top = benchmarks::linear();
+    let problem = Problem::new(&top, &cluster, &db).unwrap();
+    let o = OptimalScheduler {
+        max_instances_per_component: 2,
+        threads: 1,
+        ..Default::default()
+    };
+    let k = o.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+    let n = o.schedule_naive(&problem, &ScheduleRequest::max_throughput()).unwrap();
+    assert_eq!(k.placement, n.placement, "engines disagree on scenario 1");
+    assert_eq!(k.rate, n.rate);
+}
+
+/// The parallel optimal search returns the identical schedule (placement
+/// + rate, bit for bit) as the single-threaded path, for every seed
+/// scenario the exhaustive search can enumerate and at several shard
+/// counts.
+#[test]
+fn parallel_search_identical_at_every_thread_count() {
+    let clusters: Vec<(Cluster, ProfileDb)> =
+        vec![presets::paper_cluster(), scenarios::by_id(1).unwrap().build()];
+    for (cluster, db) in clusters {
+        let top = benchmarks::linear();
+        let problem = Problem::new(&top, &cluster, &db).unwrap();
+        for objective in [
+            Objective::MaxThroughput,
+            Objective::MinMachinesAtRate(50.0),
+        ] {
+            let req = ScheduleRequest::new(objective);
+            let single = OptimalScheduler {
+                max_instances_per_component: 2,
+                threads: 1,
+                ..Default::default()
+            };
+            let want = single.schedule(&problem, &req).unwrap();
+            for threads in [2, 5, 16] {
+                let got = OptimalScheduler { threads, ..single.clone() }
+                    .schedule(&problem, &req)
+                    .unwrap();
+                assert_eq!(
+                    got.placement, want.placement,
+                    "{} threads diverged on {} ({})",
+                    threads,
+                    cluster.name,
+                    req.objective.describe()
+                );
+                assert_eq!(got.rate, want.rate);
+                assert_eq!(
+                    got.provenance.placements_evaluated,
+                    want.provenance.placements_evaluated
+                );
+            }
+        }
+    }
+}

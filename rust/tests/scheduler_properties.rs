@@ -181,7 +181,8 @@ fn hetero_beats_or_matches_default_rr() {
 
 #[test]
 fn hetero_deterministic() {
-    prop::check("hetero-deterministic", prop::default_cases() / 4, gen_case, |Brief((top, cluster, db))| {
+    let cases = prop::default_cases() / 4;
+    prop::check("hetero-deterministic", cases, gen_case, |Brief((top, cluster, db))| {
         let a = schedule_hetero(top, cluster, db)?;
         let b = schedule_hetero(top, cluster, db)?;
         if a.placement != b.placement {
