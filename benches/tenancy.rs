@@ -1,0 +1,7 @@
+//! Multi-tenant scheduling comparison (joint vs incremental admission
+//! vs isolated partitions) in full mode: `cargo bench --bench tenancy`.
+
+fn main() {
+    let r = hstorm::experiments::tenancy::run(false).expect("tenancy experiment");
+    println!("{}", r.render());
+}

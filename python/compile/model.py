@@ -50,7 +50,9 @@ def evaluate_placements(x, adj, alpha, src_mask, r0, e_m, met_m, cap, active,
       x:        f32[B, C, M] instances of component c on machine m.
       adj:      f32[C, C]    adj[i, j] = 1 iff component i feeds j.
       alpha:    f32[C]       tuple division ratio per component (eq. 6).
-      src_mask: f32[C]       1.0 at spout components.
+      src_mask: f32[C]       input-rate weight at spout components
+                             (1.0 classically; multi-tenant merges scale a
+                             tenant's spouts by its rate-weight), 0 elsewhere.
       r0:       f32[B]       topology input rate per candidate.
       e_m:      f32[C, M]    per-tuple cost of c on machine m (%·s/tuple).
       met_m:    f32[C, M]    per-instance overhead of c on machine m (%).

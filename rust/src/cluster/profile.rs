@@ -97,6 +97,57 @@ impl ProfileDb {
         }
     }
 
+    /// [`check_coverage`](Self::check_coverage) for a whole multi-tenant
+    /// workload sharing this profile db: verify every tenant's
+    /// `(component, machine type)` demand in **one pass**, reporting all
+    /// missing `(tenant, component, machine type)` triples at once.
+    /// Tenants sharing this db also share its gaps, so each missing
+    /// `(task type, machine type)` pair is listed once with every
+    /// affected `tenant/component` named — not repeated per tenant.
+    pub fn check_coverage_many(
+        &self,
+        tenants: &[(&str, &crate::topology::Topology)],
+        cluster: &crate::cluster::Cluster,
+    ) -> Result<()> {
+        // (task_type, machine_type) -> tenant/component demand sites
+        let mut missing: Vec<((String, String), Vec<String>)> = Vec::new();
+        for (tenant, top) in tenants {
+            for c in &top.components {
+                for t in &cluster.types {
+                    if self.get(&c.task_type, &t.name).is_ok() {
+                        continue;
+                    }
+                    let key = (c.task_type.clone(), t.name.clone());
+                    let site = format!("{tenant}/{}", c.name);
+                    match missing.iter_mut().find(|(k, _)| *k == key) {
+                        Some((_, sites)) => {
+                            if !sites.contains(&site) {
+                                sites.push(site);
+                            }
+                        }
+                        None => missing.push((key, vec![site])),
+                    }
+                }
+            }
+        }
+        if missing.is_empty() {
+            return Ok(());
+        }
+        let triples: usize = missing.iter().map(|(_, s)| s.len()).sum();
+        let lines: Vec<String> = missing
+            .iter()
+            .map(|((tt, mt), sites)| format!("(task '{tt}', {mt}) wanted by {}", sites.join(", ")))
+            .collect();
+        Err(Error::Cluster(format!(
+            "profile db misses {} (tenant, component, machine type) triple{} across {} pair{}: {}",
+            triples,
+            if triples == 1 { "" } else { "s" },
+            missing.len(),
+            if missing.len() == 1 { "" } else { "s" },
+            lines.join("; ")
+        )))
+    }
+
     /// Per-machine expanded tables for the AOT scorer: `e_m[c][m]` and
     /// `met_m[c][m]` (the Rust side does the type gather so the kernel
     /// sees dense tables; see python/compile/kernels/score.py).
@@ -177,6 +228,37 @@ mod tests {
             assert!(err.contains(pair), "missing pair '{pair}' not listed in: {err}");
         }
         assert!(err.contains("4 (component, machine type) pairs"), "{err}");
+    }
+
+    #[test]
+    fn coverage_many_dedupes_across_tenants_sharing_the_db() {
+        let (cluster, full) = presets::paper_cluster();
+        // rebuild without highCompute anywhere: both tenants placing a
+        // highCompute component hit the same gap
+        let mut db = ProfileDb::new();
+        for tt in ["spout", "lowCompute", "midCompute"] {
+            for mt in ["pentium", "core-i3", "core-i5"] {
+                db.insert(tt, mt, full.get(tt, mt).unwrap());
+            }
+        }
+        let a = benchmarks::linear(); // component "high"
+        let b = benchmarks::diamond(); // component "sink"
+        let err = db
+            .check_coverage_many(&[("search", &a), ("ads", &b)], &cluster)
+            .unwrap_err()
+            .to_string();
+        // one line per missing (task type, machine type) pair, naming
+        // every tenant/component that wants it
+        for mt in ["pentium", "core-i3", "core-i5"] {
+            assert!(err.contains(&format!("(task 'highCompute', {mt})")), "{err}");
+        }
+        assert!(err.contains("search/high"), "{err}");
+        assert!(err.contains("ads/sink"), "{err}");
+        // 2 tenants x 3 machine types = 6 triples over 3 pairs
+        assert!(err.contains("6 (tenant, component, machine type) triples"), "{err}");
+        assert!(err.contains("3 pairs"), "{err}");
+        // full coverage passes in one call
+        full.check_coverage_many(&[("search", &a), ("ads", &b)], &cluster).unwrap();
     }
 
     #[test]

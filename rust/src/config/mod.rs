@@ -21,6 +21,9 @@ pub struct ComponentConfig {
     pub kind: String,
     pub task_type: String,
     pub alpha: f64,
+    /// Input-rate weight (spouts; see
+    /// [`crate::topology::Component::weight`]).  Defaults to 1.0.
+    pub weight: f64,
     /// Names of upstream components (empty for spouts).
     pub parents: Vec<String>,
 }
@@ -46,6 +49,7 @@ impl TopologyConfig {
                 kind: c.str_field("kind")?.to_string(),
                 task_type: c.str_field("task_type")?.to_string(),
                 alpha: c.opt("alpha").and_then(|a| a.as_f64()).unwrap_or(1.0),
+                weight: c.opt("weight").and_then(|w| w.as_f64()).unwrap_or(1.0),
                 parents: c
                     .opt("parents")
                     .and_then(|p| p.as_arr())
@@ -70,6 +74,7 @@ impl TopologyConfig {
                                 ("kind", json::s(&c.kind)),
                                 ("task_type", json::s(&c.task_type)),
                                 ("alpha", json::num(c.alpha)),
+                                ("weight", json::num(c.weight)),
                                 (
                                     "parents",
                                     json::arr(c.parents.iter().map(|p| json::s(p)).collect()),
@@ -101,6 +106,7 @@ impl TopologyConfig {
                 kind,
                 task_type: c.task_type.clone(),
                 alpha: c.alpha,
+                weight: c.weight,
             });
         }
         for (i, c) in self.components.iter().enumerate() {
@@ -135,6 +141,7 @@ impl TopologyConfig {
                     },
                     task_type: c.task_type.clone(),
                     alpha: c.alpha,
+                    weight: c.weight,
                     parents: top
                         .upstream(i)
                         .iter()
@@ -228,6 +235,19 @@ pub struct ProfileRowConfig {
     pub met: f64,
 }
 
+impl ProfileRowConfig {
+    /// Parse one row (shared by [`ExperimentConfig`] and the per-tenant
+    /// rows of [`WorkloadConfig`], so the schema cannot drift).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ProfileRowConfig {
+            task_type: v.str_field("task_type")?.to_string(),
+            machine_type: v.str_field("machine_type")?.to_string(),
+            e: v.num_field("e")?,
+            met: v.opt("met").and_then(|m| m.as_f64()).unwrap_or(0.0),
+        })
+    }
+}
+
 /// A full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -252,12 +272,7 @@ impl ExperimentConfig {
             .as_arr()
             .ok_or_else(|| Error::Config("profiles must be an array".into()))?;
         for r in rows {
-            profiles.push(ProfileRowConfig {
-                task_type: r.str_field("task_type")?.to_string(),
-                machine_type: r.str_field("machine_type")?.to_string(),
-                e: r.num_field("e")?,
-                met: r.opt("met").and_then(|m| m.as_f64()).unwrap_or(0.0),
-            });
+            profiles.push(ProfileRowConfig::from_json(r)?);
         }
         let scheduler = v
             .opt("scheduler")
@@ -319,6 +334,200 @@ impl ExperimentConfig {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path, json::to_string_pretty(&self.to_json()))?;
         Ok(())
+    }
+}
+
+/// One tenant row in a workload config: a topology (benchmark name or
+/// inline [`TopologyConfig`]), a rate-weight, optional per-tenant
+/// profile rows (defaulting to the shared db the caller resolves), and
+/// an optional arrival/departure schedule for the workload controller.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    pub name: String,
+    /// Benchmark name (`"linear"`, ...) when `topology_inline` is
+    /// `None`.
+    pub topology: String,
+    pub topology_inline: Option<TopologyConfig>,
+    pub weight: f64,
+    /// First virtual step the tenant asks to run (controller).
+    pub admit_at: usize,
+    /// Step the tenant is drained (controller).
+    pub drain_at: Option<usize>,
+    /// Per-tenant profile rows; `None` = the shared profile db.
+    pub profiles: Option<Vec<ProfileRowConfig>>,
+}
+
+/// A multi-tenant workload description (`hstorm schedule --workload`).
+///
+/// ```json
+/// {
+///   "name": "prod-mix",
+///   "tenants": [
+///     { "name": "search", "topology": "linear", "weight": 1.0 },
+///     { "name": "ads", "topology": "rolling-count", "weight": 2.0,
+///       "admit_at": 120, "drain_at": 400 }
+///   ]
+/// }
+/// ```
+///
+/// `topology` is a benchmark name or an inline topology object (same
+/// schema as [`TopologyConfig`]); `weight` defaults to 1.0, `admit_at`
+/// to 0.  The cluster and shared profiles come from the CLI
+/// (`--scenario` / the paper presets), with per-tenant `profiles` rows
+/// overriding the shared db for that tenant.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub name: String,
+    pub tenants: Vec<TenantConfig>,
+}
+
+impl WorkloadConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let name = v.str_field("name")?.to_string();
+        let rows = v
+            .get("tenants")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("tenants must be an array".into()))?;
+        if rows.is_empty() {
+            return Err(Error::Config("workload config has no tenants".into()));
+        }
+        let mut tenants = Vec::with_capacity(rows.len());
+        for t in rows {
+            let top_field = t.get("topology")?;
+            let (topology, topology_inline) = match top_field.as_str() {
+                Some(name) => (name.to_string(), None),
+                None => {
+                    let inline = TopologyConfig::from_json(top_field)?;
+                    (inline.name.clone(), Some(inline))
+                }
+            };
+            let profiles = match t.opt("profiles").and_then(|p| p.as_arr()) {
+                None => None,
+                Some(rows) => {
+                    let mut out = Vec::with_capacity(rows.len());
+                    for r in rows {
+                        out.push(ProfileRowConfig::from_json(r)?);
+                    }
+                    Some(out)
+                }
+            };
+            let name = t.str_field("name")?.to_string();
+            let admit_at = t.opt("admit_at").and_then(|a| a.as_usize()).unwrap_or(0);
+            let drain_at = t.opt("drain_at").and_then(|d| d.as_usize());
+            if let Some(d) = drain_at {
+                if d <= admit_at {
+                    return Err(Error::Config(format!(
+                        "tenant '{name}': drain_at {d} must be after admit_at {admit_at}"
+                    )));
+                }
+            }
+            tenants.push(TenantConfig {
+                name,
+                topology,
+                topology_inline,
+                weight: t.opt("weight").and_then(|w| w.as_f64()).unwrap_or(1.0),
+                admit_at,
+                drain_at,
+                profiles,
+            });
+        }
+        Ok(WorkloadConfig { name, tenants })
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            (
+                "tenants",
+                json::arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            let mut fields = vec![
+                                ("name", json::s(&t.name)),
+                                (
+                                    "topology",
+                                    match &t.topology_inline {
+                                        Some(inline) => inline.to_json(),
+                                        None => json::s(&t.topology),
+                                    },
+                                ),
+                                ("weight", json::num(t.weight)),
+                                ("admit_at", json::num(t.admit_at as f64)),
+                            ];
+                            if let Some(d) = t.drain_at {
+                                fields.push(("drain_at", json::num(d as f64)));
+                            }
+                            if let Some(rows) = &t.profiles {
+                                fields.push((
+                                    "profiles",
+                                    json::arr(
+                                        rows.iter()
+                                            .map(|r| {
+                                                json::obj(vec![
+                                                    ("task_type", json::s(&r.task_type)),
+                                                    ("machine_type", json::s(&r.machine_type)),
+                                                    ("e", json::num(r.e)),
+                                                    ("met", json::num(r.met)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ));
+                            }
+                            json::obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Materialize the workload against a shared profile db (tenants
+    /// with inline `profiles` rows get their own db; everyone else
+    /// shares `shared` by `Arc`, so coverage gaps dedupe across them).
+    pub fn to_workload(
+        &self,
+        shared: &std::sync::Arc<ProfileDb>,
+    ) -> Result<crate::scheduler::Workload> {
+        let mut w = crate::scheduler::Workload::new(self.name.clone());
+        for t in &self.tenants {
+            let top = match &t.topology_inline {
+                Some(inline) => inline.to_topology()?,
+                None => crate::topology::benchmarks::by_name(&t.topology).ok_or_else(|| {
+                    Error::Config(format!(
+                        "tenant '{}': unknown topology '{}' (valid: {})",
+                        t.name,
+                        t.topology,
+                        crate::topology::benchmarks::NAMES.join("|")
+                    ))
+                })?,
+            };
+            let db = match &t.profiles {
+                None => shared.clone(),
+                Some(rows) => {
+                    let mut db = ProfileDb::new();
+                    for r in rows {
+                        db.insert(
+                            &r.task_type,
+                            &r.machine_type,
+                            TaskProfile { e: r.e, met: r.met },
+                        );
+                    }
+                    std::sync::Arc::new(db)
+                }
+            };
+            w = w.tenant(&t.name, top, db, t.weight);
+        }
+        Ok(w)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
     }
 }
 
@@ -425,6 +634,110 @@ mod tests {
     fn missing_required_field_rejected() {
         assert!(ExperimentConfig::parse("{}").is_err());
         assert!(ExperimentConfig::parse(r#"{"topology": {"name": "x"}}"#).is_err());
+    }
+
+    #[test]
+    fn component_weight_roundtrips() {
+        let mut t = benchmarks::linear();
+        t.components[0].weight = 2.5;
+        let cfg = TopologyConfig::from_topology(&t);
+        assert_eq!(cfg.components[0].weight, 2.5);
+        let text = json::to_string_pretty(&cfg.to_json());
+        let back = TopologyConfig::from_json(&json::parse(&text).unwrap()).unwrap();
+        let top = back.to_topology().unwrap();
+        assert_eq!(top.components[0].weight, 2.5);
+        // absent weight defaults to 1.0
+        let plain = TopologyConfig::from_topology(&benchmarks::linear());
+        assert_eq!(plain.components[0].weight, 1.0);
+    }
+
+    fn workload_json() -> &'static str {
+        r#"{
+  "name": "prod-mix",
+  "tenants": [
+    { "name": "search", "topology": "linear" },
+    { "name": "ads", "topology": "rolling-count", "weight": 2.0,
+      "admit_at": 120, "drain_at": 400 }
+  ]
+}"#
+    }
+
+    #[test]
+    fn workload_config_parses_and_materializes() {
+        let cfg = WorkloadConfig::parse(workload_json()).unwrap();
+        assert_eq!(cfg.name, "prod-mix");
+        assert_eq!(cfg.tenants.len(), 2);
+        assert_eq!(cfg.tenants[0].weight, 1.0);
+        assert_eq!(cfg.tenants[0].admit_at, 0);
+        assert_eq!(cfg.tenants[1].weight, 2.0);
+        assert_eq!(cfg.tenants[1].admit_at, 120);
+        assert_eq!(cfg.tenants[1].drain_at, Some(400));
+        let (_, db) = crate::cluster::presets::paper_cluster();
+        let shared = std::sync::Arc::new(db);
+        let w = cfg.to_workload(&shared).unwrap();
+        assert_eq!(w.n_tenants(), 2);
+        assert_eq!(w.tenants[0].topology.n_components(), 4);
+        assert_eq!(w.tenants[1].weight, 2.0);
+        // both tenants share the one db Arc
+        assert!(std::sync::Arc::ptr_eq(&w.tenants[0].profiles, &w.tenants[1].profiles));
+        w.validate().unwrap();
+    }
+
+    #[test]
+    fn workload_config_roundtrips_and_rejects_bad_input() {
+        let cfg = WorkloadConfig::parse(workload_json()).unwrap();
+        let text = json::to_string_pretty(&cfg.to_json());
+        let back = WorkloadConfig::parse(&text).unwrap();
+        assert_eq!(back.tenants.len(), 2);
+        assert_eq!(back.tenants[1].drain_at, Some(400));
+        // unknown benchmark name fails at materialization with options
+        let bad = workload_json().replace("\"linear\"", "\"moebius\"");
+        let cfg = WorkloadConfig::parse(&bad).unwrap();
+        let (_, db) = crate::cluster::presets::paper_cluster();
+        let err = cfg.to_workload(&std::sync::Arc::new(db)).unwrap_err().to_string();
+        assert!(err.contains("moebius") && err.contains("linear"), "{err}");
+        // empty tenant list rejected at parse time
+        assert!(WorkloadConfig::parse(r#"{"name":"x","tenants":[]}"#).is_err());
+        // a drain before (or at) the admission step is a typo, not a
+        // tenant that silently never runs
+        let swapped = workload_json().replace("\"drain_at\": 400", "\"drain_at\": 100");
+        let err = WorkloadConfig::parse(&swapped).unwrap_err().to_string();
+        assert!(err.contains("drain_at"), "{err}");
+        assert!(err.contains("admit_at"), "{err}");
+    }
+
+    #[test]
+    fn workload_config_inline_topology_and_profiles() {
+        let text = r#"{
+  "name": "inline",
+  "tenants": [
+    { "name": "t0",
+      "topology": {
+        "name": "tiny",
+        "components": [
+          { "name": "src", "kind": "spout", "task_type": "gen" },
+          { "name": "work", "kind": "bolt", "task_type": "crunch",
+            "parents": ["src"] }
+        ]
+      },
+      "profiles": [
+        { "task_type": "gen", "machine_type": "pentium", "e": 0.004, "met": 1.0 },
+        { "task_type": "gen", "machine_type": "core-i3", "e": 0.007, "met": 1.0 },
+        { "task_type": "gen", "machine_type": "core-i5", "e": 0.006, "met": 1.0 },
+        { "task_type": "crunch", "machine_type": "pentium", "e": 0.1, "met": 2.0 },
+        { "task_type": "crunch", "machine_type": "core-i3", "e": 0.2, "met": 2.0 },
+        { "task_type": "crunch", "machine_type": "core-i5", "e": 0.15, "met": 2.0 }
+      ]
+    }
+  ]
+}"#;
+        let cfg = WorkloadConfig::parse(text).unwrap();
+        let (cluster, db) = crate::cluster::presets::paper_cluster();
+        let w = cfg.to_workload(&std::sync::Arc::new(db)).unwrap();
+        // the inline tenant carries its own profile db and passes
+        // coverage against the paper cluster's machine types
+        w.check_coverage(&cluster).unwrap();
+        assert_eq!(w.tenants[0].topology.n_components(), 2);
     }
 
     #[test]

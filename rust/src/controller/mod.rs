@@ -61,9 +61,14 @@
 //! executor restart), capped at the step length.  Delivered load for the
 //! reschedule step shrinks proportionally, so eager policies pay for
 //! their agility and `delivered` compares honestly across policies.
+//!
+//! Multi-tenant control — admitting, draining and re-planning many
+//! topologies on one shared cluster over per-tenant traces — lives in
+//! [`workload`] ([`workload::run_workload`]).
 
 pub mod report;
 pub mod traces;
+pub mod workload;
 
 use std::collections::HashMap;
 

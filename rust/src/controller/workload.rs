@@ -1,0 +1,608 @@
+//! Multi-tenant control loop: admit, drain and re-plan many topologies
+//! on one shared cluster over virtual time.
+//!
+//! Where [`super::run_policy`] drives a single topology against cluster
+//! churn, this loop drives a [`WorkloadProblem`]'s tenant set against
+//! **tenant** churn:
+//!
+//! * **Per-tenant traces** — each tenant replays its own offered-rate
+//!   profile (a named [`super::traces`] generator seeded per tenant, so
+//!   tenants peak at different times).  The cluster itself stays fixed;
+//!   machine churn remains the single-tenant controller's domain.
+//! * **Admission** ("admit tenant at step t") — tenants present at
+//!   step 0 are co-planned **jointly** (each certified at its weighted
+//!   share of the day-zero scale); a tenant arriving later is admitted
+//!   through [`WorkloadProblem::admit`]: scheduled against the
+//!   residual capacity residents leave, residents untouched (no
+//!   migration).  A denied tenant retries every following step until
+//!   capacity frees up or its drain point passes.
+//! * **Eviction** ("drain tenant") — the tenant's placement is dropped
+//!   at its drain step; the freed capacity is redistributed at the
+//!   next joint re-plan.
+//! * **Per-tenant breach detection** — a tenant whose offered rate
+//!   exceeds its certified rate is breached.  Re-planning is only
+//!   useful when the active set changed since the last joint schedule
+//!   (the scheduler is deterministic), so breaches force a joint
+//!   re-plan of the active set when it is **stale** (an admission or
+//!   drain happened), overriding cooldown; the utilization band
+//!   (`Σ offered / Σ certified` outside `[band_lo, band_hi]`) triggers
+//!   the same re-plan cooldown-gated.
+//!
+//! Joint re-plans go through [`WorkloadProblem::subset`] +
+//! [`WorkloadProblem::schedule_joint`] — every tenant is re-certified
+//! at its weighted share of the new scale — and charge migration
+//! downtime per tenant exactly like the single-tenant loop: newly
+//! started instances cost `migration_cost` virtual seconds of spout
+//! downtime, capped at the step length.
+
+use crate::predict::Placement;
+use crate::scheduler::workload::{TenantSchedule, WorkloadProblem};
+use crate::scheduler::ScheduleRequest;
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+use super::traces;
+use super::ControllerConfig;
+
+/// When a tenant enters and leaves the shared cluster.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantPlan {
+    /// First step the tenant asks to run (0 = present from the start).
+    pub admit_at: usize,
+    /// Step the tenant is drained, if any.
+    pub drain_at: Option<usize>,
+}
+
+/// One virtual step of one tenant's run.
+#[derive(Debug, Clone)]
+pub struct TenantStepRow {
+    pub t: f64,
+    /// Offered rate, tuples/s (the tenant's own stream).
+    pub offered: f64,
+    /// Certified rate of the tenant's current placement, tuples/s.
+    pub capacity: f64,
+    /// Delivered after capacity clipping and migration downtime.
+    pub delivered: f64,
+    /// An admission or joint re-plan changed this tenant's placement.
+    pub rescheduled: bool,
+    pub migrated: usize,
+}
+
+impl TenantStepRow {
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("t", json::num(self.t)),
+            ("offered", json::num(self.offered)),
+            ("capacity", json::num(self.capacity)),
+            ("delivered", json::num(self.delivered)),
+            ("rescheduled", Value::Bool(self.rescheduled)),
+            ("migrated", json::num(self.migrated as f64)),
+        ])
+    }
+}
+
+/// One tenant's aggregates over the whole run.
+#[derive(Debug, Clone)]
+pub struct TenantControlReport {
+    pub name: String,
+    pub weight: f64,
+    pub admit_at: usize,
+    pub drain_at: Option<usize>,
+    /// Step the tenant actually entered (admission may be delayed by
+    /// denials); `None` when it never got in.
+    pub admitted_at: Option<usize>,
+    /// Admission attempts that were denied for lack of capacity.
+    pub denied_attempts: usize,
+    /// Certified rate at admission — the base its trace multiples
+    /// scale by.
+    pub base_rate: f64,
+    pub offered_volume: f64,
+    pub delivered_volume: f64,
+    pub slo_violation_secs: f64,
+    pub tasks_migrated: usize,
+    pub rows: Vec<TenantStepRow>,
+}
+
+impl TenantControlReport {
+    /// Delivered share of offered load, percent.
+    pub fn delivered_pct(&self) -> f64 {
+        if self.offered_volume > 0.0 {
+            self.delivered_volume / self.offered_volume * 100.0
+        } else {
+            100.0
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("tenant", json::s(&self.name)),
+            ("weight", json::num(self.weight)),
+            ("admit_at", json::num(self.admit_at as f64)),
+            (
+                "drain_at",
+                self.drain_at.map_or(Value::Null, |d| json::num(d as f64)),
+            ),
+            (
+                "admitted_at",
+                self.admitted_at.map_or(Value::Null, |d| json::num(d as f64)),
+            ),
+            ("denied_attempts", json::num(self.denied_attempts as f64)),
+            ("base_rate", json::num(self.base_rate)),
+            ("offered_volume", json::num(self.offered_volume)),
+            ("delivered_volume", json::num(self.delivered_volume)),
+            ("delivered_pct", json::num(self.delivered_pct())),
+            ("slo_violation_secs", json::num(self.slo_violation_secs)),
+            ("tasks_migrated", json::num(self.tasks_migrated as f64)),
+            ("rows", json::arr(self.rows.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+}
+
+/// The whole multi-tenant run.
+#[derive(Debug, Clone)]
+pub struct WorkloadControlReport {
+    pub workload: String,
+    pub trace: String,
+    pub seed: u64,
+    pub steps: usize,
+    /// Joint re-plans of the active set.
+    pub reschedules: usize,
+    pub admissions: usize,
+    pub drains: usize,
+    pub tenants: Vec<TenantControlReport>,
+}
+
+impl WorkloadControlReport {
+    pub fn tenant(&self, name: &str) -> Option<&TenantControlReport> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    /// Render the aggregate comparison for the terminal.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "\n=== workload control — '{}' on trace '{}' ({} steps, seed {}) ===\n",
+            self.workload, self.trace, self.steps, self.seed
+        );
+        out.push_str(&format!(
+            "{:<12} {:>7} {:>8} {:>10} {:>10} {:>8} {:>8} {:>9}\n",
+            "tenant", "admit", "drain", "base", "deliv %", "SLO-s", "denied", "migrated"
+        ));
+        out.push_str(&"-".repeat(80));
+        out.push('\n');
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "{:<12} {:>7} {:>8} {:>10.1} {:>9.1}% {:>8.0} {:>8} {:>9}\n",
+                t.name,
+                t.admitted_at.map_or("-".to_string(), |s| s.to_string()),
+                t.drain_at.map_or("-".to_string(), |s| s.to_string()),
+                t.base_rate,
+                t.delivered_pct(),
+                t.slo_violation_secs,
+                t.denied_attempts,
+                t.tasks_migrated
+            ));
+        }
+        out.push_str(&format!(
+            "joint re-plans: {}   admissions: {}   drains: {}\n",
+            self.reschedules, self.admissions, self.drains
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("workload", json::s(&self.workload)),
+            ("trace", json::s(&self.trace)),
+            ("seed", json::num(self.seed as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("reschedules", json::num(self.reschedules as f64)),
+            ("admissions", json::num(self.admissions as f64)),
+            ("drains", json::num(self.drains as f64)),
+            ("tenants", json::arr(self.tenants.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+}
+
+/// Task instances newly started going `old → new` (same machine list —
+/// the cluster is fixed here).
+fn started_tasks(old: &Placement, new: &Placement) -> usize {
+    let mut n = 0usize;
+    for (row_old, row_new) in old.x.iter().zip(&new.x) {
+        for (k_old, k_new) in row_old.iter().zip(row_new) {
+            n += k_new.saturating_sub(*k_old);
+        }
+    }
+    n
+}
+
+/// Replay per-tenant offered-rate traces against the workload over
+/// `steps` virtual steps.  `plans` is index-aligned with the
+/// workload's tenants; `trace_name` picks the rate-profile shape (each
+/// tenant seeded `seed + index`, cluster events ignored — the cluster
+/// is fixed).
+pub fn run_workload(
+    wp: &WorkloadProblem,
+    plans: &[TenantPlan],
+    trace_name: &str,
+    steps: usize,
+    seed: u64,
+    cfg: &ControllerConfig,
+) -> Result<WorkloadControlReport> {
+    let n = wp.n_tenants();
+    if plans.len() != n {
+        return Err(Error::Config(format!(
+            "{} tenant plans for {} tenants",
+            plans.len(),
+            n
+        )));
+    }
+    let sched = cfg.scheduler()?;
+    let req = ScheduleRequest::max_throughput();
+
+    // per-tenant offered-rate profiles (cluster events are ignored)
+    let mut offered_profiles: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for (i, tp) in wp.tenants().iter().enumerate() {
+        let trace = traces::by_name(
+            trace_name,
+            tp.problem.topology(),
+            wp.cluster(),
+            steps,
+            seed + i as u64,
+        )
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "unknown trace '{trace_name}' (valid: {})",
+                traces::NAMES.join("|")
+            ))
+        })?;
+        offered_profiles.push(trace.steps.iter().map(|s| s.offered).collect());
+    }
+
+    let mut reports: Vec<TenantControlReport> = wp
+        .tenants()
+        .iter()
+        .zip(plans)
+        .map(|(tp, plan)| TenantControlReport {
+            name: tp.name.clone(),
+            weight: tp.weight,
+            admit_at: plan.admit_at,
+            drain_at: plan.drain_at,
+            admitted_at: None,
+            denied_attempts: 0,
+            base_rate: 0.0,
+            offered_volume: 0.0,
+            delivered_volume: 0.0,
+            slo_violation_secs: 0.0,
+            tasks_migrated: 0,
+            rows: Vec::new(),
+        })
+        .collect();
+
+    let mut schedules: Vec<Option<TenantSchedule>> = vec![None; n];
+    let mut reschedules = 0usize;
+    let mut admissions = 0usize;
+    let mut drains = 0usize;
+    let mut cooldown = 0usize;
+    let mut stale = false;
+    // per-active-set subproblem memo: validation, per-tenant evaluators
+    // and the merged problem only depend on the tenant set, so each set
+    // (day zero, post-admission, post-drain, ...) is built exactly once
+    // across the whole run
+    let mut subproblems: std::collections::HashMap<Vec<usize>, WorkloadProblem> =
+        std::collections::HashMap::new();
+
+    // day zero: co-plan everyone present at t=0 jointly (fair weighted
+    // shares); when the joint bound is exceeded the step-0 admission
+    // path below picks them up one by one instead
+    let day_zero: Vec<usize> = (0..n)
+        .filter(|&i| plans[i].admit_at == 0 && plans[i].drain_at != Some(0))
+        .collect();
+    if !day_zero.is_empty() {
+        let sub = match subproblems.entry(day_zero.clone()) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => e.insert(wp.subset(&day_zero)?),
+        };
+        if let Ok(ws) = sub.schedule_joint(sched.as_ref(), &req) {
+            for (slot, &i) in day_zero.iter().enumerate() {
+                let ts = ws.tenants[slot].clone();
+                reports[i].admitted_at = Some(0);
+                reports[i].base_rate = ts.schedule.rate;
+                schedules[i] = Some(ts);
+            }
+        }
+    }
+
+    for step in 0..steps {
+        let dt = cfg.step_seconds;
+        let mut migrated: Vec<usize> = vec![0; n];
+        let mut touched: Vec<bool> = vec![false; n];
+        let mut replanned = false;
+
+        // 1. drains scheduled for this step
+        for i in 0..n {
+            if plans[i].drain_at == Some(step) && schedules[i].is_some() {
+                schedules[i] = None;
+                drains += 1;
+                stale = true;
+            }
+        }
+
+        // 2. admissions (first attempt at admit_at, retried on denial)
+        for i in 0..n {
+            let wants_in = schedules[i].is_none()
+                && reports[i].admitted_at.is_none()
+                && step >= plans[i].admit_at
+                && plans[i].drain_at.map_or(true, |d| step < d);
+            if !wants_in {
+                continue;
+            }
+            let residents: Vec<TenantSchedule> =
+                schedules.iter().flatten().cloned().collect();
+            match wp.admit(&residents, i, sched.as_ref(), &req) {
+                Ok(ts) => {
+                    migrated[i] += ts.schedule.placement.total_tasks();
+                    reports[i].admitted_at = Some(step);
+                    reports[i].base_rate = ts.schedule.rate;
+                    schedules[i] = Some(ts);
+                    touched[i] = true;
+                    admissions += 1;
+                    stale = true;
+                    cooldown = cfg.cooldown_steps;
+                }
+                Err(_) => {
+                    reports[i].denied_attempts += 1;
+                }
+            }
+        }
+
+        // 3. offered rates + breach detection over the active set
+        let mut offered: Vec<f64> = vec![0.0; n];
+        let mut sum_offered = 0.0;
+        let mut sum_capacity = 0.0;
+        let mut breach = false;
+        for i in 0..n {
+            let Some(ts) = &schedules[i] else { continue };
+            offered[i] = offered_profiles[i][step] * reports[i].base_rate;
+            sum_offered += offered[i];
+            sum_capacity += ts.schedule.rate;
+            if offered[i] > ts.schedule.rate * (1.0 + 1e-9) {
+                breach = true;
+            }
+        }
+        let load = if sum_capacity > 0.0 { sum_offered / sum_capacity } else { 0.0 };
+        let band = sum_capacity > 0.0 && (load > cfg.band_hi || load < cfg.band_lo);
+
+        // 4. joint re-plan of the active set: only useful when the set
+        // changed since the last plan (deterministic scheduler);
+        // breaches override cooldown, the band is cooldown-gated
+        if stale && (breach || (band && cooldown == 0)) {
+            let active: Vec<usize> =
+                (0..n).filter(|&i| schedules[i].is_some()).collect();
+            if !active.is_empty() {
+                let sub = match subproblems.entry(active.clone()) {
+                    std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                    std::collections::hash_map::Entry::Vacant(e) => e.insert(wp.subset(&active)?),
+                };
+                match sub.schedule_joint(sched.as_ref(), &req) {
+                    Ok(ws) => {
+                        for (slot, &i) in active.iter().enumerate() {
+                            let new = &ws.tenants[slot];
+                            let old = schedules[i].as_ref().expect("active tenant scheduled");
+                            let moved =
+                                started_tasks(&old.schedule.placement, &new.schedule.placement);
+                            if moved > 0 {
+                                migrated[i] += moved;
+                                touched[i] = true;
+                            }
+                            schedules[i] = Some(new.clone());
+                        }
+                        reschedules += 1;
+                        replanned = true;
+                        stale = false;
+                        cooldown = cfg.cooldown_steps;
+                    }
+                    Err(_) => {
+                        // joint bound exceeded (oversized active set):
+                        // keep the incremental placements as they are
+                        stale = false;
+                    }
+                }
+            } else {
+                stale = false;
+            }
+        } else if !touched.iter().any(|&t| t) {
+            // tick the cooldown only on quiet steps (no admission, and
+            // this branch is mutually exclusive with the re-plan above),
+            // so scheduling actions get their full suppression window
+            cooldown = cooldown.saturating_sub(1);
+        }
+
+        // 5. delivery accounting per active tenant
+        for i in 0..n {
+            let Some(ts) = &schedules[i] else { continue };
+            let capacity = ts.schedule.rate;
+            let downtime = (cfg.migration_cost * migrated[i] as f64).min(dt);
+            let delivered = offered[i].min(capacity) * (1.0 - downtime / dt);
+            reports[i].offered_volume += offered[i] * dt;
+            reports[i].delivered_volume += delivered * dt;
+            if delivered + 1e-9 < offered[i] {
+                reports[i].slo_violation_secs += dt;
+            }
+            reports[i].tasks_migrated += migrated[i];
+            reports[i].rows.push(TenantStepRow {
+                t: step as f64,
+                offered: offered[i],
+                capacity,
+                delivered,
+                rescheduled: touched[i] || replanned,
+                migrated: migrated[i],
+            });
+        }
+    }
+
+    Ok(WorkloadControlReport {
+        workload: wp.workload().name.clone(),
+        trace: trace_name.to_string(),
+        seed,
+        steps,
+        reschedules,
+        admissions,
+        drains,
+        tenants: reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::scheduler::workload::Workload;
+    use crate::topology::benchmarks;
+    use std::sync::Arc;
+
+    fn duo(scenario: bool) -> WorkloadProblem {
+        let (cluster, db) = if scenario {
+            crate::cluster::scenarios::by_id(1).unwrap().build()
+        } else {
+            presets::paper_cluster()
+        };
+        let db = Arc::new(db);
+        let w = Workload::new("duo")
+            .tenant("search", benchmarks::linear(), db.clone(), 1.0)
+            .tenant("ads", benchmarks::rolling_count(), db.clone(), 1.0);
+        WorkloadProblem::new(w, &cluster).unwrap()
+    }
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig::default()
+    }
+
+    #[test]
+    fn plans_must_align_with_tenants() {
+        let wp = duo(false);
+        let err = run_workload(&wp, &[TenantPlan::default()], "constant", 10, 1, &cfg())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tenant plans"), "{err}");
+        assert!(run_workload(
+            &wp,
+            &[TenantPlan::default(), TenantPlan::default()],
+            "nope",
+            10,
+            1,
+            &cfg()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn day_zero_tenants_are_jointly_planned() {
+        let wp = duo(true);
+        let plans = [TenantPlan::default(), TenantPlan::default()];
+        let rep = run_workload(&wp, &plans, "constant", 40, 7, &cfg()).unwrap();
+        // co-planned at t=0: no incremental admissions, no denials
+        assert_eq!(rep.admissions, 0);
+        assert_eq!(rep.drains, 0);
+        for t in &rep.tenants {
+            assert_eq!(t.admitted_at, Some(0), "{}", t.name);
+            assert_eq!(t.denied_attempts, 0, "{}", t.name);
+            assert_eq!(t.rows.len(), 40, "{}", t.name);
+            assert!(t.base_rate > 0.0);
+            // constant 0.8x load on a fresh joint plan is always served
+            assert!(t.delivered_pct() > 95.0, "{}: {:.1}%", t.name, t.delivered_pct());
+        }
+        // equal weights: the day-zero joint plan certifies equal rates
+        let a = rep.tenants[0].base_rate;
+        let b = rep.tenants[1].base_rate;
+        assert!((a - b).abs() < 1e-6, "joint day zero must split {a} vs {b} evenly");
+    }
+
+    #[test]
+    fn late_admission_never_migrates_residents() {
+        let wp = duo(true);
+        let plans = [
+            TenantPlan::default(),
+            TenantPlan { admit_at: 10, drain_at: None },
+        ];
+        let rep = run_workload(&wp, &plans, "constant", 30, 3, &cfg()).unwrap();
+        let ads = rep.tenant("ads").unwrap();
+        let search = rep.tenant("search").unwrap();
+        assert_eq!(search.rows.len(), 30);
+        match ads.admitted_at {
+            Some(t_admit) => {
+                // admitted into the residual the resident left: the
+                // resident's row at that step shows zero migration
+                assert!(t_admit >= 10);
+                assert_eq!(
+                    search.rows[t_admit].migrated, 0,
+                    "admission must not move resident tasks"
+                );
+                assert_eq!(ads.rows.len(), 30 - t_admit);
+                assert!(ads.base_rate > 0.0);
+            }
+            None => {
+                // the resident saturated the cluster: every attempt
+                // from step 10 on was denied, resident untouched
+                assert_eq!(ads.denied_attempts, 20);
+                assert!(ads.rows.is_empty());
+                assert_eq!(search.tasks_migrated, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn drain_frees_capacity_and_breach_replans() {
+        let wp = duo(true);
+        // both tenants share the cluster at day zero (equal joint
+        // shares); ads leaves at step 15, and when search's ramping
+        // demand later exceeds its old share, the stale active set is
+        // re-planned jointly and search absorbs the freed machines
+        let plans = [
+            TenantPlan::default(),
+            TenantPlan { admit_at: 0, drain_at: Some(15) },
+        ];
+        let mut c = cfg();
+        c.cooldown_steps = 2;
+        let rep = run_workload(&wp, &plans, "ramp", 120, 11, &c).unwrap();
+        assert_eq!(rep.drains, 1);
+        let ads = rep.tenant("ads").unwrap();
+        assert_eq!(ads.rows.len(), 15, "drained tenant stops accruing rows");
+        let search = rep.tenant("search").unwrap();
+        assert_eq!(search.rows.len(), 120);
+        // the ramp breaches search's day-zero share -> joint re-plan
+        assert!(rep.reschedules >= 1, "stale active set never re-planned");
+        // capacity after the re-plan clearly exceeds the shared slice
+        let before = search.rows[..15].iter().map(|r| r.capacity).fold(0.0, f64::max);
+        let after = search.rows[40..].iter().map(|r| r.capacity).fold(0.0, f64::max);
+        assert!(
+            after > before * 1.05,
+            "freed capacity not redistributed: {after} vs {before}"
+        );
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let wp = duo(true);
+        let plans = [
+            TenantPlan::default(),
+            TenantPlan { admit_at: 5, drain_at: Some(60) },
+        ];
+        let a = run_workload(&wp, &plans, "diurnal", 80, 42, &cfg()).unwrap();
+        let b = run_workload(&wp, &plans, "diurnal", 80, 42, &cfg()).unwrap();
+        assert_eq!(
+            json::to_string_pretty(&a.to_json()),
+            json::to_string_pretty(&b.to_json())
+        );
+    }
+
+    #[test]
+    fn render_names_every_tenant() {
+        let wp = duo(false);
+        let plans = [TenantPlan::default(), TenantPlan::default()];
+        let rep = run_workload(&wp, &plans, "constant", 10, 1, &cfg()).unwrap();
+        let text = rep.render();
+        assert!(text.contains("search"), "{text}");
+        assert!(text.contains("ads"), "{text}");
+        assert!(text.contains("joint re-plans"), "{text}");
+    }
+}

@@ -208,7 +208,8 @@ pub fn run(
     for &c in &spouts {
         let n_inst = tasks[c].len();
         // wall-clock emission rate: virtual rate compressed by time_scale
-        let rate_per_inst = r0 / n_inst as f64 / cfg.time_scale;
+        // (weighted spouts receive `weight · R0` — see Component::weight)
+        let rate_per_inst = r0 * top.components[c].weight / n_inst as f64 / cfg.time_scale;
         for slot in 0..n_inst {
             let machine = tasks[c][slot];
             let tx = senders[machine].clone();

@@ -19,11 +19,14 @@
 //! | elastic  | control plane       | [`elastic::run`]   |
 //! | accuracy | §6.2 (event-sim)    | [`accuracy::run`]  |
 //! | sched-perf | search-engine perf | [`sched_perf::run`]|
+//! | tenancy  | multi-tenant modes  | [`tenancy::run`]   |
 //!
 //! `fast: true` shrinks engine windows/design spaces so the whole suite
 //! runs in seconds (used by tests); benches use `fast: false`.  Running
-//! `sched-perf` through the CLI additionally writes `BENCH_sched.json`
-//! (machine-readable candidates/s + wall time per scenario).
+//! `sched-perf` / `tenancy` through the CLI additionally writes
+//! `BENCH_sched.json` / `BENCH_tenancy.json` (machine-readable
+//! candidates/s + wall time per scenario, respectively
+//! joint-vs-incremental-vs-isolated numbers per tenant mix).
 
 pub mod ablation;
 pub mod accuracy;
@@ -36,6 +39,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod sched_perf;
+pub mod tenancy;
 
 use crate::util::json::{self, Value};
 

@@ -1,0 +1,227 @@
+//! Multi-tenancy experiment: joint vs incremental-admission vs isolated
+//! scheduling of 2–4-tenant mixes of the five benchmark topologies on
+//! the paper cluster and the Table-4 scenario clusters.
+//!
+//! For each mix the three modes of
+//! [`WorkloadProblem`](crate::scheduler::WorkloadProblem) run under the
+//! hetero policy and report the workload **scale** (the largest `R`
+//! with every tenant certified at `w_t · R`), the weighted throughput
+//! at proportional rates (`scale · Σ w_t · gain_t`), the total
+//! predicted throughput at the certified (possibly uneven) rates, and
+//! machines used.  The headline the CI pipeline greps: joint
+//! scheduling — statistical multiplexing over all shared machines —
+//! must dominate the isolated machine-partition baseline on weighted
+//! throughput for every mix.
+
+use std::sync::Arc;
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::{presets, scenarios, Cluster};
+use crate::scheduler::{
+    registry, PolicyParams, ScheduleRequest, TenancyMode, Workload, WorkloadProblem,
+    WorkloadSchedule,
+};
+use crate::topology::benchmarks;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::{f1, ExperimentResult};
+
+/// One tenant mix: cluster label, (topology, weight) pairs.
+struct Mix {
+    cluster: &'static str,
+    tenants: &'static [(&'static str, f64)],
+}
+
+const MIXES: &[Mix] = &[
+    Mix { cluster: "paper", tenants: &[("linear", 1.0), ("rolling-count", 1.0)] },
+    Mix { cluster: "paper", tenants: &[("star", 1.0), ("unique-visitor", 2.0)] },
+    Mix {
+        cluster: "paper",
+        tenants: &[("linear", 1.0), ("rolling-count", 1.0), ("unique-visitor", 1.0)],
+    },
+    Mix {
+        cluster: "scenario1",
+        tenants: &[("linear", 1.0), ("star", 1.0), ("unique-visitor", 2.0)],
+    },
+    Mix {
+        cluster: "scenario1",
+        tenants: &[
+            ("linear", 1.0),
+            ("star", 1.0),
+            ("rolling-count", 1.0),
+            ("unique-visitor", 1.0),
+        ],
+    },
+];
+
+/// The medium scenario joins in full mode only.
+const FULL_MIXES: &[Mix] = &[Mix {
+    cluster: "scenario2",
+    tenants: &[
+        ("linear", 1.0),
+        ("star", 1.0),
+        ("rolling-count", 1.0),
+        ("unique-visitor", 1.0),
+    ],
+}];
+
+fn cluster_by_label(label: &str) -> (Cluster, ProfileDb) {
+    match label {
+        "paper" => presets::paper_cluster(),
+        "scenario1" => scenarios::by_id(1).expect("scenario 1 exists").build(),
+        "scenario2" => scenarios::by_id(2).expect("scenario 2 exists").build(),
+        other => unreachable!("unknown cluster label {other}"),
+    }
+}
+
+fn mix_label(mix: &Mix) -> String {
+    mix.tenants
+        .iter()
+        .map(|(t, w)| if *w == 1.0 { t.to_string() } else { format!("{t}x{w}") })
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+fn build_problem(mix: &Mix) -> Result<WorkloadProblem> {
+    let (cluster, db) = cluster_by_label(mix.cluster);
+    let db = Arc::new(db);
+    let mut w = Workload::new(mix_label(mix));
+    for (i, (top, weight)) in mix.tenants.iter().enumerate() {
+        let topology = benchmarks::by_name(top).expect("benchmark topology exists");
+        w = w.tenant(format!("t{i}-{top}"), topology, db.clone(), *weight);
+    }
+    WorkloadProblem::new(w, cluster)
+}
+
+fn mode_json(ws: &WorkloadSchedule) -> Value {
+    json::obj(vec![
+        ("scale", json::num(ws.scale)),
+        ("weighted_throughput", json::num(ws.weighted_throughput)),
+        ("total_throughput", json::num(ws.total_throughput())),
+        ("machines_used", json::num(ws.machines_used() as f64)),
+        ("denied", json::num(ws.denied.len() as f64)),
+        ("feasible", Value::Bool(ws.feasible)),
+    ])
+}
+
+pub fn run(fast: bool) -> Result<ExperimentResult> {
+    run_with_json(fast).map(|(r, _)| r)
+}
+
+/// Run the experiment and also return the machine-readable JSON the CLI
+/// writes to `BENCH_tenancy.json` (uploaded by the CI experiments job).
+pub fn run_with_json(fast: bool) -> Result<(ExperimentResult, Value)> {
+    let mut out = ExperimentResult::new(
+        "tenancy",
+        "multi-tenant scheduling: joint vs incremental admission vs isolated partitions \
+         (hetero policy)",
+        &[
+            "cluster", "tenants", "mode", "scale", "weighted thpt", "total thpt", "machines",
+            "denied",
+        ],
+    );
+    let sched = registry::create("hetero", &PolicyParams::default())?;
+    let req = ScheduleRequest::max_throughput();
+
+    let mixes: Vec<&Mix> = if fast {
+        MIXES.iter().collect()
+    } else {
+        MIXES.iter().chain(FULL_MIXES.iter()).collect()
+    };
+
+    let mut joint_ge_isolated = true;
+    let mut joint_ge_incremental = true;
+    let mut mix_rows = Vec::new();
+    for mix in &mixes {
+        let wp = build_problem(mix)?;
+        let joint = wp.schedule_joint(sched.as_ref(), &req)?;
+        let incremental = wp.schedule_incremental(sched.as_ref(), &req)?;
+        let isolated = wp.schedule_isolated(sched.as_ref(), &req)?;
+        joint_ge_isolated &=
+            joint.weighted_throughput >= isolated.weighted_throughput * (1.0 - 1e-9);
+        joint_ge_incremental &=
+            joint.weighted_throughput >= incremental.weighted_throughput * (1.0 - 1e-9);
+        for ws in [&joint, &incremental, &isolated] {
+            out.row(vec![
+                mix.cluster.to_string(),
+                mix_label(mix),
+                ws.mode.name().to_string(),
+                f1(ws.scale),
+                f1(ws.weighted_throughput),
+                f1(ws.total_throughput()),
+                ws.machines_used().to_string(),
+                ws.denied.len().to_string(),
+            ]);
+        }
+        mix_rows.push(json::obj(vec![
+            ("cluster", json::s(mix.cluster)),
+            ("tenants", json::s(&mix_label(mix))),
+            (TenancyMode::Joint.name(), mode_json(&joint)),
+            (TenancyMode::Incremental.name(), mode_json(&incremental)),
+            (TenancyMode::Isolated.name(), mode_json(&isolated)),
+        ]));
+    }
+
+    out.note(format!(
+        "joint >= isolated weighted throughput : {}",
+        if joint_ge_isolated { "PASS" } else { "FAIL" }
+    ));
+    out.note(format!(
+        "joint >= incremental weighted throughput : {}",
+        if joint_ge_incremental { "PASS" } else { "FAIL" }
+    ));
+    out.note(
+        "scale: largest R with every tenant certified at weight*R; weighted thpt = \
+         scale * sum(weight * gain); incremental admits in workload order against \
+         residual capacity (denied = tenants it could not host)",
+    );
+    let v = json::obj(vec![
+        ("id", json::s("tenancy")),
+        ("fast", Value::Bool(fast)),
+        ("policy", json::s("hetero")),
+        ("joint_ge_isolated", Value::Bool(joint_ge_isolated)),
+        ("joint_ge_incremental", Value::Bool(joint_ge_incremental)),
+        ("mixes", json::arr(mix_rows)),
+    ]);
+    Ok((out, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_cover_every_mix_and_mode() {
+        let (r, v) = run_with_json(true).unwrap();
+        assert_eq!(r.rows.len(), MIXES.len() * 3);
+        for row in &r.rows {
+            assert_eq!(row.len(), 8);
+        }
+        assert_eq!(
+            v.get("mixes").unwrap().as_arr().unwrap().len(),
+            MIXES.len()
+        );
+    }
+
+    #[test]
+    fn joint_dominates_isolated_partitions() {
+        let (r, v) = run_with_json(true).unwrap();
+        assert_eq!(v.get("joint_ge_isolated").unwrap().as_bool(), Some(true));
+        assert!(
+            r.notes.iter().any(|n| n == "joint >= isolated weighted throughput : PASS"),
+            "{:?}",
+            r.notes
+        );
+    }
+
+    #[test]
+    fn every_joint_mode_is_feasible() {
+        let (_, v) = run_with_json(true).unwrap();
+        for mix in v.get("mixes").unwrap().as_arr().unwrap() {
+            let joint = mix.get("joint").unwrap();
+            assert_eq!(joint.get("feasible").unwrap().as_bool(), Some(true));
+            assert!(joint.get("scale").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+}

@@ -74,6 +74,56 @@
 //! throughput ties toward the smallest utilization spread — see the
 //! [`scheduler::request`] module docs for exact semantics.
 //!
+//! ## Multi-tenant workloads
+//!
+//! Many topologies share one cluster through a
+//! [`scheduler::Workload`]: named tenants, each a (topology, profiles,
+//! rate-weight) triple.  A [`scheduler::WorkloadProblem`] validates
+//! every tenant once (per-tenant evaluators over a single shared
+//! `Arc<Cluster>`), then any registry policy schedules them **jointly**
+//! (all tenants co-planned at proportional weighted rates) or by
+//! **incremental admission** (each tenant placed against the residual
+//! capacity residents leave, residents untouched).  A one-tenant
+//! workload is exactly the `Problem` path — identical placement,
+//! identical certified rate:
+//!
+//! ```no_run
+//! # use hstorm::cluster::presets;
+//! # use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
+//! # use hstorm::scheduler::{Workload, WorkloadProblem};
+//! # use hstorm::topology::benchmarks;
+//! # use std::sync::Arc;
+//! let (cluster, profiles) = presets::paper_cluster();
+//! let profiles = Arc::new(profiles);
+//! let sched = registry::create("hetero", &PolicyParams::default()).unwrap();
+//! let req = ScheduleRequest::max_throughput();
+//!
+//! // classic single-tenant path...
+//! let problem = Problem::new(&benchmarks::linear(), &cluster, profiles.as_ref()).unwrap();
+//! let solo = sched.schedule(&problem, &req).unwrap();
+//!
+//! // ...and the same topology as a one-tenant workload: same schedule
+//! let wl = Workload::new("solo").tenant("only", benchmarks::linear(), profiles.clone(), 1.0);
+//! let wp = WorkloadProblem::new(wl, &cluster).unwrap();
+//! let ws = wp.schedule_joint(sched.as_ref(), &req).unwrap();
+//! assert_eq!(ws.tenants[0].schedule.placement, solo.placement);
+//!
+//! // two tenants share the machines; tenant rates follow their weights
+//! let wl = Workload::new("duo")
+//!     .tenant("search", benchmarks::linear(), profiles.clone(), 1.0)
+//!     .tenant("ads", benchmarks::rolling_count(), profiles.clone(), 2.0);
+//! let wp = WorkloadProblem::new(wl, &cluster).unwrap();
+//! let ws = wp.schedule_joint(sched.as_ref(), &req).unwrap();
+//! println!("scale={} ads runs at {}", ws.scale, ws.tenant("ads").unwrap().schedule.rate);
+//! ```
+//!
+//! The event simulator runs merged placements natively (co-located
+//! tenants share each machine's round-robin server;
+//! [`simulator::event::simulate_grouped`] reports per-tenant
+//! throughput/latency/backpressure) and the control plane admits,
+//! drains and re-plans tenants over per-tenant traces
+//! ([`controller::workload::run_workload`]).
+//!
 //! ## Scoring engine
 //!
 //! Candidate scoring is incremental ([`predict::kernel`]): per-component

@@ -32,7 +32,8 @@ use hstorm::{Error, Result};
 const VALUE_FLAGS: &[&str] = &[
     "topology", "scenario", "scheduler", "r0", "rate", "seconds", "task", "machine", "json",
     "config", "max-instances", "time-scale", "trace", "steps", "seed", "policy", "cooldown",
-    "objective", "exclude", "headroom", "mode", "horizon", "service", "probe",
+    "objective", "exclude", "headroom", "mode", "horizon", "service", "probe", "workload",
+    "tenancy",
 ];
 const BOOL_FLAGS: &[&str] =
     &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies"];
@@ -44,16 +45,17 @@ commands:
             [--objective max-throughput|min-machines:RATE|balanced]
             [--exclude m1,m2] [--headroom PCT] [--pjrt] [--r0 8]
             [--max-instances 3] | --list-policies
+            | --workload w.json [--tenancy joint|incremental|isolated]
   run       --topology T [--rate R] [--seconds S] [--time-scale X] [--pjrt-compute]
   simulate  --topology T [--scenario 1..3] [--mode analytic|event] [--rate R]
             [--horizon SECS] [--service exp|det] [--seed N] [--scheduler ...]
   control   --trace constant|diurnal|ramp|bursty [--topology T] [--scenario 1..3]
             [--policy static|reactive|oracle|all] [--scheduler hetero|default|optimal]
             [--probe analytic|event] [--steps 600] [--seed 42] [--cooldown 10]
-            [--json out.json]
+            [--json out.json] | --workload w.json [--trace ...] [--steps N]
   profile   [--task highCompute] [--machine pentium]
   bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
-            |sched-perf|all  [--fast] [--json out.json]
+            |sched-perf|tenancy|all  [--fast] [--json out.json]
   config    --config exp.json
 
 topologies: linear diamond star rolling-count unique-visitor
@@ -65,6 +67,16 @@ constraints), by a policy resolved from the registry —
 around drained machines (zero tasks land there); --headroom keeps CPU
 budget free on every machine; min-machines:RATE packs the fewest
 machines that still sustain RATE tuple/s.
+
+schedule --workload places a multi-tenant workload (a JSON file naming
+tenants: topology, rate-weight, optional admit/drain steps — see the
+config module docs) on one shared cluster.  --tenancy picks the mode:
+joint co-plans all tenants at proportional weighted rates, incremental
+admits them one at a time against residual capacity (residents are
+never touched), isolated is the no-sharing machine-partition baseline.
+control --workload replays per-tenant traces with online admission,
+draining and breach-driven joint re-plans; bench tenancy compares the
+three modes across tenant mixes and writes BENCH_tenancy.json.
 
 simulate --mode event runs the placement through the discrete-event
 tuple simulator instead of the closed-form model: per-task FIFO queues,
@@ -226,10 +238,73 @@ fn print_schedule(
     }
 }
 
+/// Load a workload config and materialize it against the CLI-resolved
+/// cluster (`--scenario` or the paper presets supply the shared
+/// profile db).
+fn load_workload(
+    args: &Args,
+    path: &str,
+) -> Result<(hstorm::config::WorkloadConfig, hstorm::scheduler::WorkloadProblem)> {
+    let cfg = hstorm::config::WorkloadConfig::load(path)?;
+    let (cluster, db) = resolve::cluster(args.get("scenario"))?;
+    let workload = cfg.to_workload(&std::sync::Arc::new(db))?;
+    let wp = hstorm::scheduler::WorkloadProblem::new(workload, cluster)?;
+    Ok((cfg, wp))
+}
+
+fn cmd_schedule_workload(args: &Args, path: &str) -> Result<()> {
+    use hstorm::scheduler::TenancyMode;
+    let (_, wp) = load_workload(args, path)?;
+    let mode_name = args.get_or("tenancy", "joint");
+    let mode = TenancyMode::by_name(mode_name).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown --tenancy '{mode_name}' (valid: joint|incremental|isolated)"
+        ))
+    })?;
+    let sched = resolve::policy(args.get_or("scheduler", "hetero"), &params_from_args(args)?)?;
+    let req = request_from_args(args)?;
+    let ws = match mode {
+        TenancyMode::Joint => wp.schedule_joint(sched.as_ref(), &req)?,
+        TenancyMode::Incremental => wp.schedule_incremental(sched.as_ref(), &req)?,
+        TenancyMode::Isolated => wp.schedule_isolated(sched.as_ref(), &req)?,
+    };
+    println!(
+        "workload: {} ({} tenants)   cluster: {} ({} machines)   mode: {}",
+        wp.workload().name,
+        wp.n_tenants(),
+        wp.cluster().name,
+        wp.cluster().n_machines(),
+        ws.mode.name()
+    );
+    println!(
+        "workload scale           : {:.1} (weighted thpt {:.1}, total thpt {:.1} tuple/s)",
+        ws.scale,
+        ws.weighted_throughput,
+        ws.total_throughput()
+    );
+    println!("machines used            : {}", ws.machines_used());
+    if !ws.denied.is_empty() {
+        println!("admission denied         : {}", ws.denied.join(", "));
+    }
+    println!("provenance               : {}", ws.provenance.render());
+    print!("{}", ws.describe(&wp));
+    println!("combined machine utilization (predicted):");
+    for (m, u) in ws.util.iter().enumerate().take(12) {
+        println!("  {:<12} {:>5.1}%", wp.cluster().machines[m].name, u);
+    }
+    if ws.util.len() > 12 {
+        println!("  ... {} more machines", ws.util.len() - 12);
+    }
+    Ok(())
+}
+
 fn cmd_schedule(args: &Args) -> Result<()> {
     if args.has("list-policies") {
         print!("{}", registry::describe_all());
         return Ok(());
+    }
+    if let Some(path) = args.get("workload") {
+        return cmd_schedule_workload(args, path);
     }
     let top = resolve::topology(args.get_or("topology", "linear"))?;
     let (cluster, db) = resolve::cluster(args.get("scenario"))?;
@@ -371,7 +446,42 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_control_workload(args: &Args, path: &str) -> Result<()> {
+    use hstorm::controller::workload::{run_workload, TenantPlan};
+    let (cfg_file, wp) = load_workload(args, path)?;
+    let plans: Vec<TenantPlan> = cfg_file
+        .tenants
+        .iter()
+        .map(|t| TenantPlan { admit_at: t.admit_at, drain_at: t.drain_at })
+        .collect();
+    let steps = args.get_usize("steps", 600)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let trace_name = args.get_or("trace", "diurnal");
+    let ctl = ControllerConfig {
+        cooldown_steps: args.get_usize("cooldown", ControllerConfig::default().cooldown_steps)?,
+        scheduler_policy: args.get_or("scheduler", "hetero").to_string(),
+        scheduler_params: params_from_args(args)?,
+        ..Default::default()
+    };
+    println!(
+        "replaying per-tenant '{trace_name}' traces over workload '{}' ({} tenants, {} steps)...",
+        wp.workload().name,
+        wp.n_tenants(),
+        steps
+    );
+    let report = run_workload(&wp, &plans, trace_name, steps, seed, &ctl)?;
+    println!("{}", report.render());
+    if let Some(out) = args.get("json") {
+        std::fs::write(out, json::to_string_pretty(&report.to_json()))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_control(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("workload") {
+        return cmd_control_workload(args, path);
+    }
     let top = resolve::topology(args.get_or("topology", "linear"))?;
     let (cluster, db) = resolve::cluster(args.get("scenario"))?;
     let steps = args.get_usize("steps", 600)?;
@@ -452,7 +562,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let ids: Vec<&str> = if which == "all" {
         vec![
             "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "table5", "space", "ablation",
-            "elastic", "accuracy", "sched-perf",
+            "elastic", "accuracy", "sched-perf", "tenancy",
         ]
     } else {
         vec![which]
@@ -476,6 +586,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 let (r, v) = experiments::sched_perf::run_with_json(fast)?;
                 std::fs::write("BENCH_sched.json", json::to_string_pretty(&v))?;
                 println!("wrote BENCH_sched.json");
+                r
+            }
+            "tenancy" => {
+                let (r, v) = experiments::tenancy::run_with_json(fast)?;
+                std::fs::write("BENCH_tenancy.json", json::to_string_pretty(&v))?;
+                println!("wrote BENCH_tenancy.json");
                 r
             }
             other => return Err(Error::Config(format!("unknown experiment '{other}'"))),

@@ -130,6 +130,25 @@ pub struct Row {
 }
 
 impl Row {
+    /// A rate-independent load row: pure per-machine intercepts
+    /// (`a = 0`, `b = load[m]`), no tasks.  This is how resident
+    /// tenants enter a candidate search in incremental admission — their
+    /// utilization at their certified rates does not scale with the
+    /// candidate's rate, so it offsets the intercepts and the closed
+    /// form becomes `R0* = min_m (cap_m − load_m − b_m)/a_m`, exactly
+    /// the residual-capacity view
+    /// [`Problem::constrained_evaluator`](crate::scheduler::Problem::constrained_evaluator)
+    /// expresses by shrinking `cap`.
+    pub fn fixed_load(load: &[f64]) -> Row {
+        let terms = load
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0.0)
+            .map(|(m, &b)| RowTerm { m: m as u32, count: 0, a: 0.0, b })
+            .collect();
+        Row { k: 0, terms }
+    }
+
     /// Build the term list for component `c` from a full-width count row.
     pub fn build(ev: &Evaluator, c: usize, counts: &[usize]) -> Row {
         let k: usize = counts.iter().sum();
@@ -224,7 +243,9 @@ impl AccumState {
             self.saved.push(Saved { m: t.m, a: self.a[m], b: self.b[m], tasks: self.tasks[m] });
             self.a[m] += t.a;
             self.b[m] += t.b;
-            if self.tasks[m] == 0 {
+            // zero-count terms (fixed resident load) reserve budget
+            // without occupying the machine
+            if t.count > 0 && self.tasks[m] == 0 {
                 self.used += 1;
             }
             self.tasks[m] += t.count;
@@ -629,6 +650,38 @@ mod tests {
         assert_eq!(acc.b, snapshot.b, "intercept accumulators drifted");
         assert_eq!(acc.tasks, snapshot.tasks);
         assert_eq!(acc.machines_used(), snapshot.machines_used());
+    }
+
+    #[test]
+    fn fixed_load_offsets_match_cap_reduction() {
+        // Pushing a resident-load row offsets the intercepts; reducing
+        // the capacities instead must certify the same rate — the two
+        // spellings of the residual-capacity view.
+        let ev = setup();
+        let mut rng = Rng::new(101);
+        for _ in 0..32 {
+            let p = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+            let load: Vec<f64> =
+                (0..ev.n_machines()).map(|_| rng.range_f64(0.0, 60.0)).collect();
+            // (a) intercept offsets through the accumulator
+            let mut acc = AccumState::new(ev.n_machines());
+            acc.push(&Row::fixed_load(&load));
+            assert_eq!(acc.machines_used(), 0, "fixed load must not occupy machines");
+            for row in rows_of_placement(&ev, &p).iter().rev() {
+                acc.push(row);
+            }
+            let offset_rate = acc.rate(&ev.cap);
+            // (b) the same residual as reduced capacities
+            let mut reduced = ev.clone();
+            for (m, cap) in reduced.cap.iter_mut().enumerate() {
+                *cap = (*cap - load[m]).max(0.0);
+            }
+            let want = reduced.max_stable_rate_or_zero(&p).unwrap();
+            assert!(
+                (offset_rate - want).abs() < 1e-9,
+                "offset {offset_rate} vs reduced-cap {want}"
+            );
+        }
     }
 
     #[test]

@@ -83,7 +83,9 @@ impl ScorerProblem {
             alpha[i] = comp.alpha;
             active[i] = 1.0;
             if comp.kind == crate::topology::ComponentKind::Spout {
-                src_mask[i] = 1.0;
+                // the model seeds spout rates as `src_mask * R0`, so the
+                // input-rate weight rides in the mask (1.0 classically)
+                src_mask[i] = comp.weight;
             }
         }
         let mut e_m = vec![0.0; c_pad * m_pad];

@@ -159,7 +159,15 @@ impl HeteroScheduler {
 
     /// Alg. 1: one instance per component on its least-TCU machine
     /// (among machines the constraints allow for the component and that
-    /// stay under the per-worker task bound `k_j`).
+    /// stay under the per-worker task bound `k_j`).  Machines whose
+    /// remaining budget cannot absorb the instance's TCU at `R0` are
+    /// deprioritized: with the usual budgets (caps near 100 and seed
+    /// TCUs of a few points at the default `R0`) every machine fits and
+    /// the selection is exactly the paper's, but under reserved
+    /// residual capacities (incremental tenant admission) — or extreme
+    /// headroom requests that leave less budget than one seed TCU —
+    /// the seed avoids starting on a machine that is already full,
+    /// falling back to plain least-TCU only when nothing fits.
     pub fn first_assignment(
         &self,
         ev: &Evaluator,
@@ -168,18 +176,25 @@ impl HeteroScheduler {
     ) -> Result<Placement> {
         let order = top.topo_order()?;
         let mut p = Placement::empty(ev.n_components(), ev.n_machines());
+        let mut seeded = vec![0.0f64; ev.n_machines()]; // util of placed seeds at R0
         for &c in &order {
-            let mut best: Option<(usize, f64)> = None;
+            let mut best_fit: Option<(usize, f64)> = None;
+            let mut best_any: Option<(usize, f64)> = None;
             for m in 0..ev.n_machines() {
                 if !rc.allows(c, m) || p.tasks_on(m) >= self.max_tasks_per_machine {
                     continue;
                 }
                 let tcu = ev.tcu_one(c, m, 1, self.r0);
-                if best.map_or(true, |(_, t)| tcu < t) {
-                    best = Some((m, tcu));
+                if best_any.map_or(true, |(_, t)| tcu < t) {
+                    best_any = Some((m, tcu));
+                }
+                if seeded[m] + tcu <= ev.cap[m] + 1e-9
+                    && best_fit.map_or(true, |(_, t)| tcu < t)
+                {
+                    best_fit = Some((m, tcu));
                 }
             }
-            let (best_m, _) = best.ok_or_else(|| {
+            let (best_m, tcu) = best_fit.or(best_any).ok_or_else(|| {
                 Error::Schedule(format!(
                     "no allowed machine with free slots for component {c} during FirstAssignment \
                      (k_j = {}, constraints applied)",
@@ -187,6 +202,7 @@ impl HeteroScheduler {
                 ))
             })?;
             p.x[c][best_m] = 1;
+            seeded[best_m] += tcu;
         }
         Ok(p)
     }

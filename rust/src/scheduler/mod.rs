@@ -31,6 +31,12 @@
 //! rate, the predicted evaluation at that rate, and [`Provenance`]
 //! (which policy, which objective, how many placements were evaluated,
 //! through which scoring backend, in how much wall time).
+//!
+//! Many topologies on one shared cluster go through [`workload`]: a
+//! [`Workload`] names its tenants, a [`WorkloadProblem`] validates them
+//! all once, and the same policies schedule them jointly (merged
+//! problem, weighted shared scale) or by incremental admission against
+//! residual capacity — see the module docs for the exact semantics.
 
 pub mod default_rr;
 pub mod hetero;
@@ -39,10 +45,14 @@ pub mod problem;
 pub mod registry;
 pub mod request;
 pub mod reschedule;
+pub mod workload;
 
-pub use problem::{Problem, ResolvedConstraints};
+pub use problem::{IntoCow, Problem, ResolvedConstraints};
 pub use registry::PolicyParams;
 pub use request::{Constraints, Objective, ScheduleRequest};
+pub use workload::{
+    TenancyMode, TenantSchedule, TenantSpec, Workload, WorkloadProblem, WorkloadSchedule,
+};
 
 use std::time::Duration;
 
@@ -67,6 +77,18 @@ pub struct Provenance {
 }
 
 impl Provenance {
+    /// Fold another run's provenance into this one: identity fields
+    /// (policy, objective, backend) take the latest value, counters
+    /// (placements evaluated, wall time) accumulate — how multi-run
+    /// schedules (per-tenant workload modes) aggregate provenance.
+    pub fn absorb(&mut self, other: &Provenance) {
+        self.policy = other.policy.clone();
+        self.objective = other.objective.clone();
+        self.backend = other.backend.clone();
+        self.placements_evaluated += other.placements_evaluated;
+        self.wall += other.wall;
+    }
+
     /// One-line rendering for CLI output and reports.
     pub fn render(&self) -> String {
         format!(

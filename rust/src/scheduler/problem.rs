@@ -10,6 +10,7 @@
 //! life of the online controller: many requests, one world.
 
 use std::borrow::Cow;
+use std::sync::Arc;
 
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::Cluster;
@@ -20,27 +21,75 @@ use crate::{Error, Result};
 
 use super::request::Constraints;
 
+/// Borrowed-or-owned constructor inputs: [`Problem::new`] accepts `&T`
+/// (cloned exactly once, the classic call shape), `T` (moved in, no
+/// copy) or an explicit [`Cow`].  `std` has no blanket
+/// `From<&T> for Cow<T>`, so this small local trait supplies the
+/// conversion without breaking existing `Problem::new(&top, ...)` calls.
+pub trait IntoCow<'a, T: Clone + 'a> {
+    fn into_cow(self) -> Cow<'a, T>;
+}
+
+impl<'a, T: Clone + 'a> IntoCow<'a, T> for &'a T {
+    fn into_cow(self) -> Cow<'a, T> {
+        Cow::Borrowed(self)
+    }
+}
+
+impl<'a, T: Clone + 'a> IntoCow<'a, T> for T {
+    fn into_cow(self) -> Cow<'a, T> {
+        Cow::Owned(self)
+    }
+}
+
+impl<'a, T: Clone + 'a> IntoCow<'a, T> for Cow<'a, T> {
+    fn into_cow(self) -> Cow<'a, T> {
+        self
+    }
+}
+
 /// A validated scheduling problem with cached evaluation state.
+///
+/// The triple is held behind [`Arc`]s so many problems can share one
+/// world without copies — the multi-tenant path
+/// ([`super::workload::WorkloadProblem`]) builds one `Arc<Cluster>` and
+/// M tenant problems against it ([`Problem::from_shared`]).
 pub struct Problem {
-    top: Topology,
-    cluster: Cluster,
-    profiles: ProfileDb,
+    top: Arc<Topology>,
+    cluster: Arc<Cluster>,
+    profiles: Arc<ProfileDb>,
     evaluator: Evaluator,
     scorer: Option<Box<dyn PlacementScorer>>,
 }
 
 impl Problem {
     /// Validate the triple once and cache the expanded profile tables.
-    pub fn new(top: &Topology, cluster: &Cluster, profiles: &ProfileDb) -> Result<Self> {
+    /// Accepts borrowed or owned values ([`IntoCow`]): a borrowed input
+    /// is cloned exactly once here, an owned input moves in without a
+    /// copy.
+    pub fn new<'a>(
+        top: impl IntoCow<'a, Topology>,
+        cluster: impl IntoCow<'a, Cluster>,
+        profiles: impl IntoCow<'a, ProfileDb>,
+    ) -> Result<Self> {
+        Self::from_shared(
+            Arc::new(top.into_cow().into_owned()),
+            Arc::new(cluster.into_cow().into_owned()),
+            Arc::new(profiles.into_cow().into_owned()),
+        )
+    }
+
+    /// [`new`](Self::new) over already-shared parts: M problems built
+    /// from the same `Arc<Cluster>`/`Arc<ProfileDb>` share one copy of
+    /// the world (only the per-problem [`Evaluator`] tables are owned).
+    pub fn from_shared(
+        top: Arc<Topology>,
+        cluster: Arc<Cluster>,
+        profiles: Arc<ProfileDb>,
+    ) -> Result<Self> {
         // Evaluator::new validates topology + cluster + coverage.
-        let evaluator = Evaluator::new(top, cluster, profiles)?;
-        Ok(Problem {
-            top: top.clone(),
-            cluster: cluster.clone(),
-            profiles: profiles.clone(),
-            evaluator,
-            scorer: None,
-        })
+        let evaluator = Evaluator::new(&top, &cluster, &profiles)?;
+        Ok(Problem { top, cluster, profiles, evaluator, scorer: None })
     }
 
     /// Attach a placement scorer (typically the PJRT AOT scorer built by
@@ -133,6 +182,16 @@ impl Problem {
         }
         rc.headroom_pct = c.headroom_pct;
 
+        for (name, pct) in &c.reserved_loads {
+            if !(pct.is_finite() && *pct >= 0.0) {
+                return Err(Error::Schedule(format!(
+                    "reserved load on '{name}' must be finite and >= 0; got {pct}"
+                )));
+            }
+            let m = self.machine_index(name)?;
+            rc.reserved[m] += pct;
+        }
+
         for name in &c.excluded_machines {
             let m = self.machine_index(name)?;
             rc.excluded[m] = true;
@@ -176,17 +235,22 @@ impl Problem {
     }
 
     /// The evaluator the request actually schedules against: capacities
-    /// shrunk by the reserved headroom (excluded machines keep their
-    /// budget — they simply host nothing, enforced by the search).
-    /// Without headroom this borrows the cached tables; only a headroom
-    /// request pays for a modified clone.
+    /// shrunk by the reserved headroom and by any per-machine reserved
+    /// loads (excluded machines keep their budget — they simply host
+    /// nothing, enforced by the search).  Per-machine reservations are
+    /// how incremental tenant admission sees residents: the load the
+    /// already-scheduled tenants put on each machine is reserved, so
+    /// every closed-form rate the kernels derive reads
+    /// `(cap_m − resident_m − b_m)/a_m` — the residual-capacity view.
+    /// Without headroom or reservations this borrows the cached tables;
+    /// only a capacity-modifying request pays for a clone.
     pub fn constrained_evaluator(&self, rc: &ResolvedConstraints) -> Cow<'_, Evaluator> {
-        if rc.headroom_pct <= 0.0 {
+        if rc.headroom_pct <= 0.0 && rc.reserved.iter().all(|&r| r <= 0.0) {
             return Cow::Borrowed(&self.evaluator);
         }
         let mut ev = self.evaluator.clone();
-        for cap in &mut ev.cap {
-            *cap = (*cap - rc.headroom_pct).max(0.0);
+        for (m, cap) in ev.cap.iter_mut().enumerate() {
+            *cap = (*cap - rc.headroom_pct - rc.reserved[m]).max(0.0);
         }
         Cow::Owned(ev)
     }
@@ -204,6 +268,9 @@ pub struct ResolvedConstraints {
     pub max_instances: Vec<usize>,
     /// CPU percentage points reserved on every machine.
     pub headroom_pct: f64,
+    /// Per-machine CPU percentage points already spoken for (resident
+    /// tenants' load in incremental admission).
+    pub reserved: Vec<f64>,
 }
 
 impl ResolvedConstraints {
@@ -214,6 +281,7 @@ impl ResolvedConstraints {
             pinned: vec![vec![true; n_machines]; n_comp],
             max_instances: vec![usize::MAX; n_comp],
             headroom_pct: 0.0,
+            reserved: vec![0.0; n_machines],
         }
     }
 
@@ -235,6 +303,7 @@ impl ResolvedConstraints {
     /// True when the constraints restrict nothing.
     pub fn is_trivial(&self) -> bool {
         self.headroom_pct == 0.0
+            && self.reserved.iter().all(|&r| r == 0.0)
             && self.excluded.iter().all(|&e| !e)
             && self.pinned.iter().all(|row| row.iter().all(|&a| a))
             && self.max_instances.iter().all(|&n| n == usize::MAX)
@@ -325,6 +394,63 @@ mod tests {
             Err(e) => assert!(e.to_string().contains("excluded"), "{e}"),
             Ok(_) => panic!("excluding every machine must be rejected"),
         }
+    }
+
+    #[test]
+    fn construction_takes_borrowed_owned_and_shared() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        // borrowed (the classic shape): inputs cloned once
+        let a = Problem::new(&top, &cluster, &db).unwrap();
+        // owned: moved in without a copy
+        let b = Problem::new(top.clone(), cluster.clone(), db.clone()).unwrap();
+        assert_eq!(a.evaluator().cap, b.evaluator().cap);
+        // shared: two problems over one Arc'd cluster — no world copies
+        let cluster = std::sync::Arc::new(cluster);
+        let db = std::sync::Arc::new(db);
+        let c = Problem::from_shared(
+            std::sync::Arc::new(benchmarks::linear()),
+            cluster.clone(),
+            db.clone(),
+        )
+        .unwrap();
+        let d = Problem::from_shared(
+            std::sync::Arc::new(benchmarks::diamond()),
+            cluster.clone(),
+            db.clone(),
+        )
+        .unwrap();
+        assert!(std::ptr::eq(c.cluster(), d.cluster()), "cluster must be shared, not copied");
+        assert!(std::ptr::eq(c.profiles(), d.profiles()));
+    }
+
+    #[test]
+    fn reserved_load_shrinks_named_machine_budget() {
+        let p = problem();
+        let rc = p
+            .resolve(
+                &Constraints::new()
+                    .reserve_machine_load("pentium-0", 40.0)
+                    .reserve_machine_load("i3-0", 15.0)
+                    .reserve_machine_load("i3-0", 5.0),
+            )
+            .unwrap();
+        assert!(!rc.is_trivial());
+        let ev = p.constrained_evaluator(&rc);
+        assert!(matches!(ev, Cow::Owned(_)));
+        assert!((ev.cap[0] - (p.evaluator().cap[0] - 40.0)).abs() < 1e-12);
+        // repeated reservations on one machine accumulate
+        assert!((ev.cap[1] - (p.evaluator().cap[1] - 20.0)).abs() < 1e-12);
+        assert_eq!(ev.cap[2], p.evaluator().cap[2]);
+        // over-reservation clamps at zero rather than going negative
+        let rc = p.resolve(&Constraints::new().reserve_machine_load("i5-0", 500.0)).unwrap();
+        assert_eq!(p.constrained_evaluator(&rc).cap[2], 0.0);
+        // invalid inputs rejected
+        assert!(p.resolve(&Constraints::new().reserve_machine_load("ghost", 1.0)).is_err());
+        assert!(p.resolve(&Constraints::new().reserve_machine_load("i3-0", -1.0)).is_err());
+        assert!(p
+            .resolve(&Constraints::new().reserve_machine_load("i3-0", f64::NAN))
+            .is_err());
     }
 
     #[test]

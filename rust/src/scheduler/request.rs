@@ -42,6 +42,12 @@
 //! * `reserve_headroom(pct)` — every machine keeps `pct` percentage
 //!   points of CPU budget free: schedulers see `cap_m − pct` instead of
 //!   `cap_m` when certifying rates and checking over-utilization.
+//! * `reserve_machine_load(machine, pct)` — `pct` points of the named
+//!   machine's budget are already spoken for.  This is the
+//!   residual-capacity constraint behind incremental tenant admission
+//!   ([`super::workload`]): resident tenants' predicted load at their
+//!   certified rates is reserved machine by machine, so the admitted
+//!   tenant's closed-form rates read `(cap_m − resident_m − b_m)/a_m`.
 //!
 //! Constraints name components and machines by their string names; they
 //! are resolved against the [`Problem`](super::Problem) (and unknown
@@ -81,6 +87,10 @@ pub struct Constraints {
     pub(crate) max_instances: Vec<(String, usize)>,
     /// CPU percentage points kept free on every machine.
     pub(crate) headroom_pct: f64,
+    /// `(machine, CPU percentage points already spoken for)` — resident
+    /// load the scheduler must plan around (incremental tenant
+    /// admission); repeated entries for one machine accumulate.
+    pub(crate) reserved_loads: Vec<(String, f64)>,
 }
 
 impl Constraints {
@@ -94,6 +104,7 @@ impl Constraints {
             && self.pins.is_empty()
             && self.max_instances.is_empty()
             && self.headroom_pct == 0.0
+            && self.reserved_loads.is_empty()
     }
 
     /// The named machine hosts zero task instances.
@@ -132,6 +143,16 @@ impl Constraints {
     /// Keep `pct` percentage points of CPU budget free on every machine.
     pub fn reserve_headroom(mut self, pct: f64) -> Self {
         self.headroom_pct = pct;
+        self
+    }
+
+    /// Mark `pct` percentage points of the named machine's budget as
+    /// already spoken for — the residual-capacity constraint incremental
+    /// tenant admission schedules under (residents' predicted load at
+    /// their certified rates is reserved machine by machine).  Repeated
+    /// calls for one machine accumulate.
+    pub fn reserve_machine_load(mut self, machine: impl Into<String>, pct: f64) -> Self {
+        self.reserved_loads.push((machine.into(), pct));
         self
     }
 }
@@ -188,13 +209,16 @@ mod tests {
             .exclude_machines(["b", "c"])
             .pin_component("bolt", ["a"])
             .max_instances("bolt", 2)
-            .reserve_headroom(5.0);
+            .reserve_headroom(5.0)
+            .reserve_machine_load("a", 12.5);
         assert_eq!(c.excluded_machines, vec!["a", "b", "c"]);
         assert_eq!(c.pins.len(), 1);
         assert_eq!(c.max_instances, vec![("bolt".to_string(), 2)]);
         assert_eq!(c.headroom_pct, 5.0);
+        assert_eq!(c.reserved_loads, vec![("a".to_string(), 12.5)]);
         assert!(!c.is_empty());
         assert!(Constraints::new().is_empty());
+        assert!(!Constraints::new().reserve_machine_load("a", 1.0).is_empty());
     }
 
     #[test]

@@ -142,6 +142,62 @@ mod tests {
     }
 
     #[test]
+    fn two_simultaneous_failures_empty_both_machines() {
+        use crate::cluster::scenarios;
+        let (cluster, db) = scenarios::by_id(1).unwrap().build();
+        let problem = Problem::new(&benchmarks::linear(), &cluster, &db).unwrap();
+        let hs = HeteroScheduler::default();
+        let before = hs.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+        let dead = ["pentium-0", "i5-1"];
+        let r = after_failures(&problem, &before, &dead, &hs).unwrap();
+        assert!(r.schedule.eval.feasible);
+        assert!(r.schedule.rate > 0.0);
+        assert!(r.schedule.rate <= before.rate + 1e-9);
+        assert_eq!(r.schedule.placement.n_machines(), cluster.n_machines());
+        for name in dead {
+            let idx = cluster.machines.iter().position(|m| m.name == name).unwrap();
+            assert_eq!(r.schedule.placement.tasks_on(idx), 0, "{name} still hosts tasks");
+        }
+        assert_eq!(r.excluded, dead.to_vec());
+    }
+
+    /// Killing two machines composes with multi-tenant exclusion: the
+    /// failure request on the merged workload problem keeps **every**
+    /// tenant's slice off both dead machines while every tenant keeps
+    /// at least one instance per component.
+    #[test]
+    fn two_failures_compose_with_workload_tenants() {
+        use crate::cluster::scenarios;
+        use crate::scheduler::workload::{Workload, WorkloadProblem};
+        use std::sync::Arc;
+
+        let (cluster, db) = scenarios::by_id(1).unwrap().build();
+        let db = Arc::new(db);
+        let w = Workload::new("duo")
+            .tenant("search", benchmarks::linear(), db.clone(), 1.0)
+            .tenant("ads", benchmarks::rolling_count(), db.clone(), 1.0);
+        let wp = WorkloadProblem::new(w, &cluster).unwrap();
+        let merged = wp.merged().unwrap();
+        let hs = HeteroScheduler::default();
+        let before = hs.schedule(merged, &ScheduleRequest::max_throughput()).unwrap();
+        let dead = ["pentium-1", "i3-0"];
+        let r = after_failures(merged, &before, &dead, &hs).unwrap();
+        assert!(r.schedule.eval.feasible);
+        let dead_idx: Vec<usize> = dead
+            .iter()
+            .map(|n| cluster.machines.iter().position(|m| &m.name == n).unwrap())
+            .collect();
+        for (t, part) in wp.split_placement(&r.schedule.placement).iter().enumerate() {
+            for &m in &dead_idx {
+                assert_eq!(part.tasks_on(m), 0, "tenant {t} still on dead machine {m}");
+            }
+            for c in 0..part.n_components() {
+                assert!(part.count(c) >= 1, "tenant {t} lost component {c}");
+            }
+        }
+    }
+
+    #[test]
     fn cascading_failures_stay_feasible() {
         // exclude machines one by one in a Table-4 small scenario; every
         // intermediate schedule must stay feasible with the excluded

@@ -1,0 +1,957 @@
+//! Multi-tenant workloads: many topologies scheduled on one shared
+//! cluster.
+//!
+//! The paper schedules a single application graph, but a production
+//! Storm deployment runs many topologies concurrently on shared
+//! machines — the setting R-Storm (Peng et al.) and "Scheduling Storms
+//! and Streams in the Cloud" (Ghaderi et al.) treat as the real
+//! scheduling problem.  A [`Workload`] is an ordered set of named
+//! tenants, each a (topology, profiles, rate-weight) triple; a
+//! [`WorkloadProblem`] validates all tenants once against one shared
+//! [`Cluster`], caching a per-tenant [`Problem`] (each with its own
+//! [`Evaluator`](crate::predict::Evaluator) tables, all sharing a single
+//! `Arc<Cluster>` — no per-tenant world copies) plus the merged joint
+//! problem.
+//!
+//! ## Rate-weights
+//!
+//! Tenant rates are coupled proportionally: at workload **scale** `R`,
+//! tenant `t` runs at `w_t · R`.  Eq.-5 linearity makes the shared
+//! capacity constraint a single closed form —
+//! `Σ_t (a_t,m · w_t R + b_t,m) ≤ cap_m` — so the largest feasible
+//! scale is again `min_m (cap_m − B_m)/A_m`, and every existing policy
+//! maximizes it unmodified on the merged problem.
+//!
+//! ## Scheduling modes
+//!
+//! * **Joint** ([`WorkloadProblem::schedule_joint`]) — all tenants
+//!   scheduled together.  The workload merges into one disjoint-union
+//!   topology (components namespaced `tenant/component`, tenant
+//!   rate-weights folded into the spouts' input-rate weights — see
+//!   [`crate::topology::Component::weight`]), and any registry policy
+//!   maximizes the shared scale under shared eq.-5 machine capacity.
+//!   The objective is the weighted sum of per-tenant max stable rates
+//!   along the weight direction.  Bounded by the AOT component limit
+//!   ([`crate::runtime::dims::MAX_COMPONENTS`]); larger workloads use
+//!   incremental admission, which scales per tenant.
+//! * **Incremental admission**
+//!   ([`WorkloadProblem::schedule_incremental`] /
+//!   [`WorkloadProblem::admit`]) — tenants admitted one at a time, each
+//!   scheduled against the **residual capacity** residents leave: the
+//!   residents' predicted load at their certified rates is reserved
+//!   machine by machine
+//!   ([`Constraints::reserve_machine_load`](super::Constraints::reserve_machine_load)),
+//!   so the kernel's row-table/`DeltaEval` arithmetic certifies
+//!   `min_m (cap_m − resident_m − b_m)/a_m` — per-machine intercepts
+//!   offset by resident load (see
+//!   [`Row::fixed_load`](crate::predict::kernel::Row::fixed_load)).
+//!   Residents are never touched: admission is cheap and
+//!   migration-free, the online path for "admit tenant at step t".
+//! * **Isolated** ([`WorkloadProblem::schedule_isolated`]) — the
+//!   no-sharing baseline: machines are partitioned round-robin across
+//!   tenants and each tenant is scheduled alone on its partition.  The
+//!   `tenancy` experiment compares all three.
+//!
+//! A one-tenant `Workload` is the degenerate case: joint, incremental
+//! and isolated all reduce to exactly the single-tenant [`Problem`]
+//! path — same placement, same certified rate (the equivalence suite in
+//! `rust/tests/workload_equivalence.rs` pins this).
+
+use std::sync::Arc;
+
+use crate::cluster::profile::ProfileDb;
+use crate::cluster::Cluster;
+use crate::predict::Placement;
+use crate::topology::{Component, ComponentKind, Topology};
+use crate::{Error, Result};
+
+use super::problem::IntoCow;
+use super::{Problem, Provenance, Schedule, ScheduleRequest, Scheduler};
+
+/// One tenant: a named (topology, profiles, rate-weight) triple.
+#[derive(Clone)]
+pub struct TenantSpec {
+    /// Unique tenant name (no '/'; it namespaces merged components).
+    pub name: String,
+    pub topology: Arc<Topology>,
+    /// Profile database — tenants typically share one `Arc`.
+    pub profiles: Arc<ProfileDb>,
+    /// Rate-weight: at workload scale `R` this tenant runs at
+    /// `weight · R` tuples/s.
+    pub weight: f64,
+}
+
+/// An ordered set of named tenants over one shared cluster.
+#[derive(Clone, Default)]
+pub struct Workload {
+    pub name: String,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>) -> Self {
+        Workload { name: name.into(), tenants: Vec::new() }
+    }
+
+    /// Add a tenant (builder style).  The topology moves in; profiles
+    /// are shared by `Arc` so M tenants reading one db keep one copy.
+    pub fn tenant(
+        mut self,
+        name: impl Into<String>,
+        topology: Topology,
+        profiles: Arc<ProfileDb>,
+        weight: f64,
+    ) -> Self {
+        self.tenants.push(TenantSpec {
+            name: name.into(),
+            topology: Arc::new(topology),
+            profiles,
+            weight,
+        });
+        self
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Structural validation: at least one tenant, unique '/'-free
+    /// names, finite positive weights.  Topology/profile validation is
+    /// per-tenant, at [`WorkloadProblem::new`] time.
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants.is_empty() {
+            return Err(Error::Config("workload has no tenants".into()));
+        }
+        for t in &self.tenants {
+            if t.name.is_empty() || t.name.contains('/') {
+                return Err(Error::Config(format!(
+                    "tenant name '{}' invalid (must be non-empty, without '/')",
+                    t.name
+                )));
+            }
+            if !(t.weight.is_finite() && t.weight > 0.0) {
+                return Err(Error::Config(format!(
+                    "tenant '{}' rate-weight {} must be finite and > 0",
+                    t.name, t.weight
+                )));
+            }
+        }
+        let mut names: Vec<&str> = self.tenants.iter().map(|t| t.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.tenants.len() {
+            return Err(Error::Config("duplicate tenant names".into()));
+        }
+        Ok(())
+    }
+
+    /// Verify profile coverage for every tenant in one pass, reporting
+    /// **all** missing (tenant, component, machine type) triples at
+    /// once.  Tenants sharing a profile db (same `Arc`) are checked as
+    /// one group through
+    /// [`ProfileDb::check_coverage_many`], so a shared gap is listed
+    /// once with every affected tenant named.
+    pub fn check_coverage(&self, cluster: &Cluster) -> Result<()> {
+        let mut groups: Vec<(&Arc<ProfileDb>, Vec<(&str, &Topology)>)> = Vec::new();
+        for t in &self.tenants {
+            match groups.iter_mut().find(|(db, _)| Arc::ptr_eq(db, &t.profiles)) {
+                Some((_, members)) => members.push((t.name.as_str(), &t.topology)),
+                None => groups.push((&t.profiles, vec![(t.name.as_str(), &t.topology)])),
+            }
+        }
+        let mut errors = Vec::new();
+        for (db, members) in &groups {
+            if let Err(e) = db.check_coverage_many(members, cluster) {
+                errors.push(e.to_string());
+            }
+        }
+        if errors.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Cluster(errors.join("; ")))
+        }
+    }
+}
+
+/// One tenant's validated state inside a [`WorkloadProblem`].
+pub struct TenantProblem {
+    pub name: String,
+    pub weight: f64,
+    /// The tenant's own problem (cached evaluator), sharing the
+    /// workload's `Arc<Cluster>`.
+    pub problem: Problem,
+    /// Σ of the tenant's own eq.-6 rate gains (weight excluded): its
+    /// throughput per unit of its own input rate.
+    pub gain_sum: f64,
+}
+
+/// A validated multi-tenant scheduling problem over one shared cluster.
+pub struct WorkloadProblem {
+    workload: Workload,
+    cluster: Arc<Cluster>,
+    tenants: Vec<TenantProblem>,
+    /// Merged joint problem; `None` when the disjoint union exceeds the
+    /// AOT component bound (incremental admission still works).
+    merged: Option<Problem>,
+    /// Component index ranges per tenant inside the merged topology.
+    spans: Vec<std::ops::Range<usize>>,
+}
+
+impl WorkloadProblem {
+    /// Validate every tenant once against the shared cluster and cache
+    /// per-tenant evaluators plus the merged joint problem.
+    pub fn new<'a>(workload: Workload, cluster: impl IntoCow<'a, Cluster>) -> Result<Self> {
+        Self::with_cluster_arc(workload, Arc::new(cluster.into_cow().into_owned()))
+    }
+
+    /// [`new`](Self::new) over an already-shared cluster (no copy) —
+    /// what [`subset`](Self::subset) and the workload controller use to
+    /// derive problems over the same world.
+    pub fn with_cluster_arc(workload: Workload, cluster: Arc<Cluster>) -> Result<Self> {
+        workload.validate()?;
+        // aggregated coverage first: one error names every missing
+        // (tenant, component, machine type) triple
+        workload.check_coverage(&cluster)?;
+
+        let mut tenants = Vec::with_capacity(workload.n_tenants());
+        let mut spans = Vec::with_capacity(workload.n_tenants());
+        let mut next = 0usize;
+        for spec in &workload.tenants {
+            let problem = Problem::from_shared(
+                spec.topology.clone(),
+                cluster.clone(),
+                spec.profiles.clone(),
+            )?;
+            let gain_sum = spec.topology.rate_gains()?.iter().sum();
+            spans.push(next..next + spec.topology.n_components());
+            next += spec.topology.n_components();
+            tenants.push(TenantProblem {
+                name: spec.name.clone(),
+                weight: spec.weight,
+                problem,
+                gain_sum,
+            });
+        }
+
+        let merged = if next <= crate::runtime::dims::MAX_COMPONENTS {
+            let (top, profiles) = Self::merge(&workload, &cluster)?;
+            Some(Problem::from_shared(Arc::new(top), cluster.clone(), Arc::new(profiles))?)
+        } else {
+            None
+        };
+
+        Ok(WorkloadProblem { workload, cluster, tenants, merged, spans })
+    }
+
+    /// A derived problem over a subset of this workload's tenants (by
+    /// index, in the given order), sharing the same `Arc<Cluster>` —
+    /// how the workload controller re-plans the currently-active tenant
+    /// set after admissions and drains.
+    pub fn subset(&self, idx: &[usize]) -> Result<WorkloadProblem> {
+        let mut w = Workload::new(self.workload.name.clone());
+        for &i in idx {
+            let spec = self.workload.tenants.get(i).ok_or_else(|| {
+                Error::Schedule(format!("subset index {i} out of range"))
+            })?;
+            w.tenants.push(spec.clone());
+        }
+        Self::with_cluster_arc(w, self.cluster.clone())
+    }
+
+    /// Disjoint-union topology + namespaced profile db for the joint
+    /// path.  Components become `tenant/component`, task types
+    /// `tenant/task_type` (so tenants with conflicting profile rows
+    /// cannot collide), and each tenant's spouts carry
+    /// `spout.weight · tenant.weight` as their input-rate weight — one
+    /// shared `R0` then drives tenant `t` at `w_t · R0`.
+    fn merge(workload: &Workload, cluster: &Cluster) -> Result<(Topology, ProfileDb)> {
+        let mut components = Vec::new();
+        let mut edges = Vec::new();
+        let mut profiles = ProfileDb::new();
+        let mut base = 0usize;
+        for spec in &workload.tenants {
+            for c in &spec.topology.components {
+                components.push(Component {
+                    name: format!("{}/{}", spec.name, c.name),
+                    kind: c.kind,
+                    task_type: format!("{}/{}", spec.name, c.task_type),
+                    alpha: c.alpha,
+                    weight: if c.kind == ComponentKind::Spout {
+                        c.weight * spec.weight
+                    } else {
+                        c.weight
+                    },
+                });
+                for t in &cluster.types {
+                    let p = spec.profiles.get(&c.task_type, &t.name)?;
+                    profiles.insert(&format!("{}/{}", spec.name, c.task_type), &t.name, p);
+                }
+            }
+            for &(a, b) in &spec.topology.edges {
+                edges.push((base + a, base + b));
+            }
+            base += spec.topology.n_components();
+        }
+        let top = Topology { name: workload.name.clone(), components, edges };
+        top.validate()?;
+        Ok((top, profiles))
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// The shared cluster's `Arc`, for building further problems over
+    /// the same world without copies.
+    pub fn cluster_arc(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn tenants(&self) -> &[TenantProblem] {
+        &self.tenants
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&TenantProblem> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    /// The merged joint problem (errors when the disjoint union exceeds
+    /// the AOT component bound — use incremental admission there).
+    pub fn merged(&self) -> Result<&Problem> {
+        self.merged.as_ref().ok_or_else(|| {
+            Error::Schedule(format!(
+                "workload '{}' has {} merged components, above the joint-mode bound of {}; \
+                 schedule it with incremental admission instead",
+                self.workload.name,
+                self.spans.last().map_or(0, |s| s.end),
+                crate::runtime::dims::MAX_COMPONENTS
+            ))
+        })
+    }
+
+    /// Component index range of tenant `i` inside the merged topology.
+    pub fn tenant_span(&self, i: usize) -> std::ops::Range<usize> {
+        self.spans[i].clone()
+    }
+
+    /// `(tenant name, merged component indices)` per tenant — the
+    /// grouping the event simulator reports per-tenant stats by.
+    pub fn event_groups(&self) -> Vec<(String, Vec<usize>)> {
+        self.tenants
+            .iter()
+            .zip(&self.spans)
+            .map(|(t, span)| (t.name.clone(), span.clone().collect()))
+            .collect()
+    }
+
+    /// Slice a merged placement into per-tenant placements.
+    pub fn split_placement(&self, merged: &Placement) -> Vec<Placement> {
+        self.spans
+            .iter()
+            .map(|span| Placement { x: merged.x[span.clone()].to_vec() })
+            .collect()
+    }
+
+    /// Concatenate per-tenant placements back into merged component
+    /// order (tenants must appear in workload order).
+    pub fn merged_placement(&self, ws: &WorkloadSchedule) -> Placement {
+        let mut x = Vec::with_capacity(self.spans.last().map_or(0, |s| s.end));
+        for ts in &ws.tenants {
+            x.extend(ts.schedule.placement.x.iter().cloned());
+        }
+        Placement { x }
+    }
+
+    /// The shared residual-capacity view: per-machine utilization the
+    /// given resident schedules occupy at their certified rates (what
+    /// [`admit`](Self::admit) reserves before scheduling a new tenant).
+    pub fn residual_load(&self, residents: &[TenantSchedule]) -> Result<Vec<f64>> {
+        let mut load = vec![0.0f64; self.cluster.n_machines()];
+        for r in residents {
+            let tp = self.tenant(&r.tenant).ok_or_else(|| {
+                Error::Schedule(format!("resident '{}' is not in this workload", r.tenant))
+            })?;
+            let eval = tp.problem.evaluator().evaluate(&r.schedule.placement, r.schedule.rate)?;
+            for (m, u) in eval.util.iter().enumerate() {
+                load[m] += u;
+            }
+        }
+        Ok(load)
+    }
+
+    /// Combined per-machine predicted utilization of a set of tenant
+    /// schedules at their certified rates.
+    pub fn combined_util(&self, tenants: &[TenantSchedule]) -> Result<Vec<f64>> {
+        self.residual_load(tenants)
+    }
+
+    /// Schedule all tenants together on the merged problem: one policy
+    /// run maximizes the shared scale, then the placement splits back
+    /// into per-tenant schedules (tenant `t` certified at
+    /// `w_t · scale`, evaluated through its own cached evaluator).
+    ///
+    /// Request constraints resolve against the **merged** namespace:
+    /// machines keep their names, components are `tenant/component`.
+    pub fn schedule_joint(
+        &self,
+        policy: &dyn Scheduler,
+        req: &ScheduleRequest,
+    ) -> Result<WorkloadSchedule> {
+        let merged = self.merged()?;
+        let s = policy.schedule(merged, req)?;
+        let scale = s.rate;
+        let parts = self.split_placement(&s.placement);
+        let mut tenants = Vec::with_capacity(self.tenants.len());
+        for (tp, placement) in self.tenants.iter().zip(parts) {
+            let rate = tp.weight * scale;
+            let eval = tp.problem.evaluator().evaluate(&placement, rate)?;
+            tenants.push(TenantSchedule {
+                tenant: tp.name.clone(),
+                weight: tp.weight,
+                schedule: Schedule { placement, rate, eval, provenance: s.provenance.clone() },
+            });
+        }
+        self.finish(TenancyMode::Joint, tenants, s.provenance)
+    }
+
+    /// Admit tenant `idx` against the residual capacity the given
+    /// residents leave: their load at certified rates is reserved
+    /// machine by machine and the tenant is scheduled alone on what
+    /// remains.  Residents are not touched — no migration, the online
+    /// admission path.  Errors when the residual cannot host the tenant
+    /// at all (admission denied).
+    pub fn admit(
+        &self,
+        residents: &[TenantSchedule],
+        idx: usize,
+        policy: &dyn Scheduler,
+        req: &ScheduleRequest,
+    ) -> Result<TenantSchedule> {
+        let tp = self.tenants.get(idx).ok_or_else(|| {
+            Error::Schedule(format!("tenant index {idx} out of range"))
+        })?;
+        let load = self.residual_load(residents)?;
+        let mut constraints = req.constraints.clone();
+        for (m, l) in load.iter().enumerate() {
+            if *l > 1e-12 {
+                let name = &self.cluster.machines[m].name;
+                constraints = constraints.reserve_machine_load(name, *l);
+            }
+        }
+        let tenant_req = req.clone().with_constraints(constraints);
+        let s = policy.schedule(&tp.problem, &tenant_req).map_err(|e| {
+            Error::Schedule(format!(
+                "admission denied for tenant '{}' against the residual capacity: {e}",
+                tp.name
+            ))
+        })?;
+        Ok(TenantSchedule { tenant: tp.name.clone(), weight: tp.weight, schedule: s })
+    }
+
+    /// Schedule tenants one at a time in workload order, each admitted
+    /// against the residual capacity of those before it (greedy,
+    /// order-dependent; each tenant certifies its own residual max
+    /// rate).  A tenant the residual cannot host at all is **denied**:
+    /// it stays out (rate 0, empty placement) and is listed in
+    /// [`WorkloadSchedule::denied`] — the rest of the workload still
+    /// schedules.  A one-tenant workload reduces exactly to the
+    /// single-tenant [`Problem`] path.
+    pub fn schedule_incremental(
+        &self,
+        policy: &dyn Scheduler,
+        req: &ScheduleRequest,
+    ) -> Result<WorkloadSchedule> {
+        // Surface configuration errors (unknown machine/component names
+        // in the request's constraints) loudly up front — the per-tenant
+        // loop below deliberately swallows scheduling failures as
+        // capacity denials, and a typo must not masquerade as one.
+        for tp in &self.tenants {
+            tp.problem.resolve(&req.constraints)?;
+        }
+        let mut admitted: Vec<TenantSchedule> = Vec::with_capacity(self.tenants.len());
+        let mut denied = Vec::new();
+        let mut provenance = Provenance::default();
+        for idx in 0..self.tenants.len() {
+            match self.admit(&admitted, idx, policy, req) {
+                Ok(ts) => {
+                    provenance.absorb(&ts.schedule.provenance);
+                    admitted.push(ts);
+                }
+                Err(_) => {
+                    let tp = &self.tenants[idx];
+                    let placement = Placement::empty(
+                        tp.problem.topology().n_components(),
+                        self.cluster.n_machines(),
+                    );
+                    let eval = tp.problem.evaluator().evaluate(&placement, 0.0)?;
+                    denied.push(tp.name.clone());
+                    admitted.push(TenantSchedule {
+                        tenant: tp.name.clone(),
+                        weight: tp.weight,
+                        schedule: Schedule {
+                            placement,
+                            rate: 0.0,
+                            eval,
+                            provenance: Provenance::default(),
+                        },
+                    });
+                }
+            }
+        }
+        let mut ws = self.finish(TenancyMode::Incremental, admitted, provenance)?;
+        ws.denied = denied;
+        Ok(ws)
+    }
+
+    /// The no-sharing baseline: machines partitioned round-robin across
+    /// tenants (tenant `i` owns machines `m` with `m % K == i`), each
+    /// tenant scheduled alone on its slice.  Errors when there are
+    /// fewer machines than tenants.
+    pub fn schedule_isolated(
+        &self,
+        policy: &dyn Scheduler,
+        req: &ScheduleRequest,
+    ) -> Result<WorkloadSchedule> {
+        let k = self.tenants.len();
+        let n_m = self.cluster.n_machines();
+        if n_m < k {
+            return Err(Error::Schedule(format!(
+                "isolated mode needs >= 1 machine per tenant ({k} tenants, {n_m} machines)"
+            )));
+        }
+        let mut out = Vec::with_capacity(k);
+        let mut provenance = Provenance::default();
+        for (i, tp) in self.tenants.iter().enumerate() {
+            let foreign: Vec<String> = self
+                .cluster
+                .machines
+                .iter()
+                .enumerate()
+                .filter(|(m, _)| (k > 1) && (m % k != i))
+                .map(|(_, mach)| mach.name.clone())
+                .collect();
+            let constraints = req.constraints.clone().exclude_machines(foreign);
+            let s = policy.schedule(&tp.problem, &req.clone().with_constraints(constraints))?;
+            provenance.absorb(&s.provenance);
+            out.push(TenantSchedule { tenant: tp.name.clone(), weight: tp.weight, schedule: s });
+        }
+        self.finish(TenancyMode::Isolated, out, provenance)
+    }
+
+    /// Assemble the workload-level schedule: scale, combined predicted
+    /// utilization and feasibility at the certified rates.
+    fn finish(
+        &self,
+        mode: TenancyMode,
+        tenants: Vec<TenantSchedule>,
+        provenance: Provenance,
+    ) -> Result<WorkloadSchedule> {
+        let scale = tenants
+            .iter()
+            .map(|t| t.schedule.rate / t.weight)
+            .fold(f64::INFINITY, f64::min)
+            .max(0.0);
+        let scale = if scale.is_finite() { scale } else { 0.0 };
+        // each tenant's eval already holds its per-machine utilization
+        // at its certified rate; summing the cached vectors avoids a
+        // redundant O(T·C·M) re-evaluation per mode
+        let mut util = vec![0.0f64; self.cluster.n_machines()];
+        for t in &tenants {
+            for (m, u) in t.schedule.eval.util.iter().enumerate() {
+                util[m] += u;
+            }
+        }
+        let over = util
+            .iter()
+            .zip(self.cluster.machines.iter())
+            .any(|(u, m)| *u > m.cap + 1e-6);
+        let feasible = !over && tenants.iter().all(|t| t.schedule.eval.feasible);
+        let gain: f64 = self.tenants.iter().map(|t| t.weight * t.gain_sum).sum();
+        let weighted_throughput = scale * gain;
+        Ok(WorkloadSchedule {
+            mode,
+            scale,
+            weighted_throughput,
+            tenants,
+            util,
+            feasible,
+            denied: Vec::new(),
+            provenance,
+        })
+    }
+}
+
+/// Which multi-tenant scheduling mode produced a [`WorkloadSchedule`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenancyMode {
+    Joint,
+    Incremental,
+    Isolated,
+}
+
+impl TenancyMode {
+    pub const ALL: [TenancyMode; 3] =
+        [TenancyMode::Joint, TenancyMode::Incremental, TenancyMode::Isolated];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenancyMode::Joint => "joint",
+            TenancyMode::Incremental => "incremental",
+            TenancyMode::Isolated => "isolated",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<TenancyMode> {
+        TenancyMode::ALL.iter().copied().find(|m| m.name() == name)
+    }
+}
+
+/// One tenant's slice of a workload schedule: its placement on the
+/// shared cluster and its certified rate (`schedule.rate` is the
+/// tenant's own input rate, tuples/s).
+#[derive(Debug, Clone)]
+pub struct TenantSchedule {
+    pub tenant: String,
+    pub weight: f64,
+    pub schedule: Schedule,
+}
+
+/// All tenants' placements on the shared cluster, plus workload-level
+/// aggregates.
+#[derive(Debug, Clone)]
+pub struct WorkloadSchedule {
+    pub mode: TenancyMode,
+    /// Workload scale: the largest `R` with every tenant certified at
+    /// `>= w_t · R` (for joint mode, exactly the merged certified
+    /// rate).  0 when some tenant was denied any rate.
+    pub scale: f64,
+    /// Throughput the workload delivers at proportional rates
+    /// `w_t · scale`: `scale · Σ_t w_t · gain_sum_t` — the headline the
+    /// `tenancy` experiment compares across modes.
+    pub weighted_throughput: f64,
+    pub tenants: Vec<TenantSchedule>,
+    /// Combined predicted per-machine utilization at the certified
+    /// rates, percent.
+    pub util: Vec<f64>,
+    /// No shared machine over budget and every tenant's own evaluation
+    /// feasible (a denied tenant's empty placement makes this false).
+    pub feasible: bool,
+    /// Tenants incremental admission could not host at all (rate 0,
+    /// empty placement); always empty for joint/isolated.
+    pub denied: Vec<String>,
+    /// Aggregated provenance (joint: the merged search; incremental /
+    /// isolated: per-tenant runs summed).
+    pub provenance: Provenance,
+}
+
+impl WorkloadSchedule {
+    pub fn tenant(&self, name: &str) -> Option<&TenantSchedule> {
+        self.tenants.iter().find(|t| t.tenant == name)
+    }
+
+    /// Machines hosting at least one instance of any tenant.
+    pub fn machines_used(&self) -> usize {
+        let n_m = self.util.len();
+        (0..n_m)
+            .filter(|&m| self.tenants.iter().any(|t| t.schedule.placement.tasks_on(m) > 0))
+            .count()
+    }
+
+    /// Σ of tenants' predicted throughput at their certified rates
+    /// (unlike [`weighted_throughput`](Self::weighted_throughput) this
+    /// credits incremental admission's uneven rates).
+    pub fn total_throughput(&self) -> f64 {
+        self.tenants.iter().map(|t| t.schedule.eval.throughput).sum()
+    }
+
+    /// Render per-tenant assignments for CLI output.
+    pub fn describe(&self, wp: &WorkloadProblem) -> String {
+        let mut out = String::new();
+        for ts in &self.tenants {
+            let tp = wp.tenant(&ts.tenant).expect("schedule tenant in problem");
+            out.push_str(&format!(
+                "tenant '{}' (weight {:.2}): rate {:.1} tuple/s, throughput {:.1} tuple/s\n",
+                ts.tenant, ts.weight, ts.schedule.rate, ts.schedule.eval.throughput
+            ));
+            out.push_str(&ts.schedule.describe(tp.problem.topology(), wp.cluster()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::scheduler::{registry, PolicyParams};
+    use crate::topology::benchmarks;
+
+    fn shared_db() -> (Cluster, Arc<ProfileDb>) {
+        let (cluster, db) = presets::paper_cluster();
+        (cluster, Arc::new(db))
+    }
+
+    fn hetero() -> Box<dyn Scheduler> {
+        registry::create("hetero", &PolicyParams::default()).unwrap()
+    }
+
+    fn duo() -> WorkloadProblem {
+        let (cluster, db) = shared_db();
+        let w = Workload::new("duo")
+            .tenant("search", benchmarks::linear(), db.clone(), 1.0)
+            .tenant("ads", benchmarks::rolling_count(), db.clone(), 1.0);
+        WorkloadProblem::new(w, &cluster).unwrap()
+    }
+
+    #[test]
+    fn validate_rejects_bad_workloads() {
+        let (_, db) = shared_db();
+        assert!(Workload::new("empty").validate().is_err());
+        let dup = Workload::new("dup")
+            .tenant("a", benchmarks::linear(), db.clone(), 1.0)
+            .tenant("a", benchmarks::star(), db.clone(), 1.0);
+        assert!(dup.validate().is_err());
+        let slash = Workload::new("s").tenant("a/b", benchmarks::linear(), db.clone(), 1.0);
+        assert!(slash.validate().is_err());
+        let w0 = Workload::new("w").tenant("a", benchmarks::linear(), db.clone(), 0.0);
+        assert!(w0.validate().is_err());
+    }
+
+    #[test]
+    fn tenant_problems_share_one_cluster() {
+        let wp = duo();
+        let a = wp.tenants()[0].problem.cluster();
+        let b = wp.tenants()[1].problem.cluster();
+        assert!(std::ptr::eq(a, b), "tenants must share one cluster copy");
+        assert!(std::ptr::eq(a, wp.cluster()));
+    }
+
+    #[test]
+    fn merged_topology_namespaces_tenants() {
+        let wp = duo();
+        let merged = wp.merged().unwrap();
+        assert_eq!(merged.topology().n_components(), 4 + 3);
+        assert!(merged
+            .topology()
+            .components
+            .iter()
+            .any(|c| c.name == "search/spout" && c.task_type == "search/spout"));
+        assert!(merged.topology().components.iter().any(|c| c.name == "ads/split"));
+        assert_eq!(wp.tenant_span(0), 0..4);
+        assert_eq!(wp.tenant_span(1), 4..7);
+        // merged gains mirror each tenant's own gains (weights 1)
+        let g = merged.topology().rate_gains().unwrap();
+        let ga = benchmarks::linear().rate_gains().unwrap();
+        let gb = benchmarks::rolling_count().rate_gains().unwrap();
+        for (i, want) in ga.iter().chain(gb.iter()).enumerate() {
+            assert!((g[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn joint_shares_capacity_and_splits_back() {
+        let wp = duo();
+        let ws = wp.schedule_joint(hetero().as_ref(), &ScheduleRequest::max_throughput()).unwrap();
+        assert_eq!(ws.mode, TenancyMode::Joint);
+        assert!(ws.scale > 0.0);
+        assert!(ws.feasible, "joint schedule must be feasible at certified rates");
+        for ts in &ws.tenants {
+            assert!((ts.schedule.rate - ts.weight * ws.scale).abs() < 1e-9);
+            assert!(ts.schedule.eval.feasible);
+        }
+        // combined predicted utilization within every machine budget
+        for (m, u) in ws.util.iter().enumerate() {
+            assert!(*u <= wp.cluster().machines[m].cap + 1e-6, "machine {m} at {u}%");
+        }
+        // the split placements concatenate back to the merged placement
+        let merged = wp.merged_placement(&ws);
+        assert_eq!(merged.n_components(), 7);
+        assert_eq!(
+            merged.total_tasks(),
+            ws.tenants.iter().map(|t| t.schedule.placement.total_tasks()).sum::<usize>()
+        );
+        assert!(ws.weighted_throughput > 0.0);
+    }
+
+    #[test]
+    fn heavier_weight_shifts_rates_toward_the_tenant() {
+        let (cluster, db) = shared_db();
+        let even = WorkloadProblem::new(
+            Workload::new("even")
+                .tenant("a", benchmarks::linear(), db.clone(), 1.0)
+                .tenant("b", benchmarks::unique_visitor(), db.clone(), 1.0),
+            &cluster,
+        )
+        .unwrap();
+        let skew = WorkloadProblem::new(
+            Workload::new("skew")
+                .tenant("a", benchmarks::linear(), db.clone(), 1.0)
+                .tenant("b", benchmarks::unique_visitor(), db.clone(), 3.0),
+            &cluster,
+        )
+        .unwrap();
+        let req = ScheduleRequest::max_throughput();
+        let e = even.schedule_joint(hetero().as_ref(), &req).unwrap();
+        let s = skew.schedule_joint(hetero().as_ref(), &req).unwrap();
+        // b's rate relative to a's triples under the 3x weight
+        let ratio_even = e.tenants[1].schedule.rate / e.tenants[0].schedule.rate;
+        let ratio_skew = s.tenants[1].schedule.rate / s.tenants[0].schedule.rate;
+        assert!((ratio_even - 1.0).abs() < 1e-9);
+        assert!((ratio_skew - 3.0).abs() < 1e-9);
+        // and the shared scale pays for it
+        assert!(s.scale < e.scale, "3x tenant b must lower the shared scale");
+    }
+
+    #[test]
+    fn incremental_never_touches_residents() {
+        let wp = duo();
+        let policy = hetero();
+        let req = ScheduleRequest::max_throughput();
+        let solo =
+            policy.schedule(&wp.tenants()[0].problem, &req).expect("tenant 0 solo schedule");
+        let ws = wp.schedule_incremental(policy.as_ref(), &req).unwrap();
+        assert_eq!(ws.mode, TenancyMode::Incremental);
+        // tenant 0 is scheduled exactly as if alone (no residents yet)
+        assert_eq!(ws.tenants[0].schedule.placement, solo.placement);
+        assert!((ws.tenants[0].schedule.rate - solo.rate).abs() < 1e-9);
+        // whatever was admitted fits in the residual: combined within caps
+        for (m, u) in ws.util.iter().enumerate() {
+            assert!(*u <= wp.cluster().machines[m].cap + 1e-6, "machine {m} at {u}%");
+        }
+        for ts in &ws.tenants {
+            if ts.schedule.rate > 0.0 {
+                assert!(ts.schedule.eval.feasible, "admitted tenant '{}' infeasible", ts.tenant);
+            }
+        }
+    }
+
+    #[test]
+    fn admission_to_a_full_cluster_is_denied_cleanly() {
+        let (cluster, db) = {
+            let (c, db) = presets::homogeneous_cluster(1);
+            (c, Arc::new(db))
+        };
+        let w = Workload::new("overfull")
+            .tenant("a", benchmarks::linear(), db.clone(), 1.0)
+            .tenant("b", benchmarks::linear(), db.clone(), 1.0);
+        let wp = WorkloadProblem::new(w, &cluster).unwrap();
+        let req = ScheduleRequest::max_throughput();
+        // the explicit admission API reports the denial as an error...
+        let first = wp.admit(&[], 0, hetero().as_ref(), &req).unwrap();
+        let err =
+            wp.admit(&[first], 1, hetero().as_ref(), &req).unwrap_err().to_string();
+        assert!(err.contains("admission denied"), "{err}");
+        assert!(err.contains("'b'"), "{err}");
+        // ...while the batch path keeps the rest of the workload and
+        // lists the denied tenant at rate 0
+        let ws = wp.schedule_incremental(hetero().as_ref(), &req).unwrap();
+        assert_eq!(ws.denied, vec!["b".to_string()]);
+        assert_eq!(ws.tenants[1].schedule.rate, 0.0);
+        assert_eq!(ws.tenants[1].schedule.placement.total_tasks(), 0);
+        assert!(ws.tenants[0].schedule.rate > 0.0);
+        assert_eq!(ws.scale, 0.0);
+        assert!(!ws.feasible);
+    }
+
+    #[test]
+    fn isolated_partitions_machines() {
+        let wp = duo();
+        let ws =
+            wp.schedule_isolated(hetero().as_ref(), &ScheduleRequest::max_throughput()).unwrap();
+        assert_eq!(ws.mode, TenancyMode::Isolated);
+        // tenant i only uses machines m with m % 2 == i
+        for (i, ts) in ws.tenants.iter().enumerate() {
+            for m in 0..wp.cluster().n_machines() {
+                if m % 2 != i {
+                    assert_eq!(
+                        ts.schedule.placement.tasks_on(m),
+                        0,
+                        "tenant {i} leaked onto foreign machine {m}"
+                    );
+                }
+            }
+        }
+        // more tenants than machines is rejected
+        let (cluster, db) = {
+            let (c, db) = presets::homogeneous_cluster(1);
+            (c, Arc::new(db))
+        };
+        let w = Workload::new("crowded")
+            .tenant("a", benchmarks::linear(), db.clone(), 1.0)
+            .tenant("b", benchmarks::linear(), db.clone(), 1.0);
+        let wp = WorkloadProblem::new(w, &cluster).unwrap();
+        assert!(wp
+            .schedule_isolated(hetero().as_ref(), &ScheduleRequest::max_throughput())
+            .is_err());
+    }
+
+    #[test]
+    fn joint_beats_isolated_on_the_paper_cluster() {
+        // statistical multiplexing: sharing all three heterogeneous
+        // machines must beat a hard 2/1 partition on weighted throughput
+        let wp = duo();
+        let req = ScheduleRequest::max_throughput();
+        let joint = wp.schedule_joint(hetero().as_ref(), &req).unwrap();
+        let isolated = wp.schedule_isolated(hetero().as_ref(), &req).unwrap();
+        assert!(
+            joint.weighted_throughput >= isolated.weighted_throughput * (1.0 - 1e-9),
+            "joint {} < isolated {}",
+            joint.weighted_throughput,
+            isolated.weighted_throughput
+        );
+    }
+
+    #[test]
+    fn oversized_workload_reports_joint_bound_but_keeps_tenant_problems() {
+        let (cluster, db) = shared_db();
+        let mut w = Workload::new("big");
+        for i in 0..5 {
+            w = w.tenant(format!("t{i}"), benchmarks::diamond(), db.clone(), 1.0);
+        }
+        // 5 x 5 = 25 components > MAX_COMPONENTS
+        let wp = WorkloadProblem::new(w, &cluster).unwrap();
+        let err = wp.merged().unwrap_err().to_string();
+        assert!(err.contains("incremental"), "{err}");
+        assert_eq!(wp.n_tenants(), 5);
+        assert!(wp.tenants().iter().all(|t| t.problem.evaluator().n_components() == 5));
+    }
+
+    #[test]
+    fn coverage_error_names_tenant_triples() {
+        let (cluster, _) = presets::paper_cluster();
+        let mut db = ProfileDb::new();
+        // cover only the spout type
+        for mt in ["pentium", "core-i3", "core-i5"] {
+            db.insert(
+                "spout",
+                mt,
+                crate::cluster::profile::TaskProfile { e: 0.004, met: 1.0 },
+            );
+        }
+        let db = Arc::new(db);
+        let w = Workload::new("gappy")
+            .tenant("search", benchmarks::linear(), db.clone(), 1.0)
+            .tenant("ads", benchmarks::linear(), db.clone(), 1.0);
+        let err = WorkloadProblem::new(w, &cluster).unwrap_err().to_string();
+        assert!(err.contains("search/"), "{err}");
+        assert!(err.contains("ads/"), "{err}");
+        assert!(err.contains("tenant, component, machine type"), "{err}");
+    }
+
+    #[test]
+    fn event_groups_cover_all_components() {
+        let wp = duo();
+        let groups = wp.event_groups();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].1, vec![0, 1, 2, 3]);
+        assert_eq!(groups[1].1, vec![4, 5, 6]);
+    }
+}

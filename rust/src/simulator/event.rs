@@ -25,10 +25,22 @@
 //! [`crate::predict::Evaluator::evaluate`] predictions — the basis of
 //! the `accuracy` experiment ([`crate::experiments::accuracy`]).
 //!
-//! Arrivals are deterministic (one external tuple per spout every `1/R0`
-//! seconds); [`ServiceModel`] chooses whether service draws equal their
-//! mean or are exponential around it.  Both modes are exactly
+//! Arrivals are deterministic (one external tuple per spout every
+//! `1/(R0 · weight)` seconds — see
+//! [`crate::topology::Component::weight`]; classic topologies have
+//! weight 1); [`ServiceModel`] chooses whether service draws equal
+//! their mean or are exponential around it.  Both modes are exactly
 //! reproducible from [`EventSimConfig::seed`].
+//!
+//! ## Multi-tenant runs
+//!
+//! Co-located tenants share machine servers natively: a machine is one
+//! round-robin server over **all** hosted tasks regardless of which
+//! tenant owns them, so simulating a merged multi-tenant placement
+//! ([`crate::scheduler::WorkloadProblem`]) needs no special casing.
+//! [`simulate_grouped`] slices the run per component group (one group
+//! per tenant): per-tenant throughput, sink-latency percentiles, queue
+//! growth and backpressure verdicts on top of the cluster-wide report.
 
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -241,9 +253,14 @@ struct Sim<'a> {
     rng: Rng,
     in_flight: usize,
     queued: usize,
+    /// Queued tuples per component (per-tenant breakdowns slice this).
+    queued_comp: Vec<usize>,
     max_queue: usize,
     shed: u64,
-    latencies: Vec<f64>,
+    /// Shed external tuples per spout component.
+    shed_comp: Vec<u64>,
+    /// Sink latencies per component, seconds.
+    lat_comp: Vec<Vec<f64>>,
 }
 
 impl Sim<'_> {
@@ -266,6 +283,7 @@ impl Sim<'_> {
     fn enqueue(&mut self, task: usize, birth: f64, now: f64) {
         self.tasks[task].queue.push_back(birth);
         self.queued += 1;
+        self.queued_comp[self.tasks[task].comp] += 1;
         self.in_flight += 1;
         if self.queued > self.max_queue {
             self.max_queue = self.queued;
@@ -294,6 +312,7 @@ impl Sim<'_> {
             let t = self.machines[m].tasks[idx];
             let Some(birth) = self.tasks[t].queue.pop_front() else { continue };
             self.queued -= 1;
+            self.queued_comp[self.tasks[t].comp] -= 1;
             self.machines[m].rr = (idx + 1) % n;
             let svc = self.draw_service(self.tasks[t].svc_mean);
             let end = now + svc;
@@ -318,7 +337,7 @@ impl Sim<'_> {
         if now > self.cfg.warmup && now <= self.cfg.horizon {
             self.tasks[t].done += 1;
             if self.is_sink[c] {
-                self.latencies.push(now - cur.birth);
+                self.lat_comp[c].push(now - cur.birth);
             }
         }
         // fan out along the DAG (shuffle grouping, fractional α); every
@@ -345,6 +364,7 @@ impl Sim<'_> {
     fn arrival(&mut self, comp: usize, now: f64) {
         if self.in_flight >= self.cfg.max_in_flight {
             self.shed += 1;
+            self.shed_comp[comp] += 1;
             return;
         }
         let n_inst = self.tasks_of[comp].len();
@@ -355,14 +375,106 @@ impl Sim<'_> {
     }
 }
 
+/// One component group a grouped simulation reports on — for
+/// multi-tenant runs, one group per tenant
+/// ([`crate::scheduler::WorkloadProblem::event_groups`]).
+#[derive(Debug, Clone)]
+pub struct CompGroup {
+    pub name: String,
+    /// Component indices belonging to the group.
+    pub comps: Vec<usize>,
+}
+
+/// Per-group (per-tenant) slice of an event-simulation run.  Co-located
+/// groups share machine servers — one round-robin server per machine
+/// across all groups' tasks — so these numbers expose cross-tenant
+/// interference the per-tenant analytic models cannot see.
+#[derive(Debug, Clone)]
+pub struct GroupReport {
+    pub name: String,
+    /// Tuples processed per second summed over the group's tasks.
+    pub throughput: f64,
+    /// Sink latencies of the group's own components.
+    pub latency: Option<LatencySummary>,
+    /// Queue-depth growth of the group's queues, tuples/s.
+    pub queue_growth: f64,
+    /// Peak group queue depth at the sampling points.
+    pub max_queue: usize,
+    /// External tuples shed at the group's spouts.
+    pub shed: u64,
+    /// True when the group's queues grow without bound (or its spouts
+    /// shed) at this rate.
+    pub backpressure: bool,
+}
+
+impl GroupReport {
+    /// One-line stability verdict for CLI output and reports.
+    pub fn verdict(&self) -> &'static str {
+        if self.backpressure {
+            "DIVERGING"
+        } else {
+            "stable"
+        }
+    }
+}
+
+/// Queue-depth growth and divergence verdict from `(t, depth)` samples:
+/// compare the first vs last post-warmup third — a stationary queue
+/// keeps them comparable, an unstable one grows linearly.
+fn growth_verdict(samples: &[(f64, f64)], warmup: f64) -> (f64, bool) {
+    let meas: Vec<(f64, f64)> = samples.iter().copied().filter(|&(t, _)| t >= warmup).collect();
+    if meas.len() < 6 {
+        return (0.0, false);
+    }
+    let k = meas.len() / 3;
+    let head: Vec<f64> = meas[..k].iter().map(|&(_, q)| q).collect();
+    let tail: Vec<f64> = meas[meas.len() - k..].iter().map(|&(_, q)| q).collect();
+    let head_mean = stats::mean(&head);
+    let tail_mean = stats::mean(&tail);
+    let span = (meas[meas.len() - 1].0 - meas[0].0) * 2.0 / 3.0;
+    let growth = if span > 0.0 { (tail_mean - head_mean) / span } else { 0.0 };
+    (growth, tail_mean > 2.0 * head_mean + 10.0)
+}
+
+/// Latency summary of a sorted sample vector (`None` when empty).
+fn summarize_latency(sorted: &[f64]) -> Option<LatencySummary> {
+    if sorted.is_empty() {
+        return None;
+    }
+    Some(LatencySummary {
+        samples: sorted.len(),
+        mean: stats::mean(sorted),
+        p50: stats::percentile(sorted, 50.0),
+        p95: stats::percentile(sorted, 95.0),
+        p99: stats::percentile(sorted, 99.0),
+        max: *sorted.last().unwrap(),
+    })
+}
+
 /// Run the discrete-event simulation of `placement` at topology input
-/// rate `rate` (tuples/s per spout, the analytic model's `R0`).
+/// rate `rate` (tuples/s per spout scaled by each spout's input-rate
+/// weight, the analytic model's `R0`).
 pub fn simulate(
     problem: &Problem,
     placement: &Placement,
     rate: f64,
     cfg: &EventSimConfig,
 ) -> Result<EventReport> {
+    simulate_grouped(problem, placement, rate, cfg, &[]).map(|(report, _)| report)
+}
+
+/// [`simulate`], additionally reporting per-group slices (throughput,
+/// latency, queue growth, shed, backpressure per [`CompGroup`]) — the
+/// multi-tenant entry point: co-located tenants share every machine's
+/// single round-robin server, and this exposes who suffers when they
+/// interfere.
+pub fn simulate_grouped(
+    problem: &Problem,
+    placement: &Placement,
+    rate: f64,
+    cfg: &EventSimConfig,
+    groups: &[CompGroup],
+) -> Result<(EventReport, Vec<GroupReport>)> {
     let top = problem.topology();
     let ev = problem.evaluator();
     let n_comp = top.n_components();
@@ -392,6 +504,14 @@ pub fn simulate(
     }
     if cfg.max_in_flight == 0 {
         return Err(Error::Schedule("max_in_flight must be >= 1".into()));
+    }
+    for g in groups {
+        if let Some(&c) = g.comps.iter().find(|&&c| c >= n_comp) {
+            return Err(Error::Schedule(format!(
+                "group '{}' references component {c} (topology has {n_comp})",
+                g.name
+            )));
+        }
     }
 
     // ---- static tables ---------------------------------------------------
@@ -454,16 +574,21 @@ pub fn simulate(
         rng: Rng::new(cfg.seed),
         in_flight: 0,
         queued: 0,
+        queued_comp: vec![0; n_comp],
         max_queue: 0,
         shed: 0,
-        latencies: Vec::new(),
+        shed_comp: vec![0; n_comp],
+        lat_comp: vec![Vec::new(); n_comp],
     };
 
     // seed the arrival streams, phase-staggered so multi-spout
-    // topologies do not inject in lockstep
-    let inter = 1.0 / rate;
+    // topologies do not inject in lockstep; each spout arrives at
+    // `rate · weight` (input-rate weights — multi-tenant merges scale a
+    // tenant's spouts by its rate-weight)
+    let spout_inter: Vec<f64> =
+        spouts.iter().map(|&c| 1.0 / (rate * top.components[c].weight)).collect();
     for i in 0..spouts.len() {
-        let t0 = inter * (i as f64 + 1.0) / spouts.len() as f64;
+        let t0 = spout_inter[i] * (i as f64 + 1.0) / spouts.len() as f64;
         sim.push(t0, EventKind::Arrival { spout: i });
     }
 
@@ -472,10 +597,12 @@ pub fn simulate(
     let sample_dt = cfg.horizon / n_samples as f64;
     let mut sample_k = 1usize;
     let mut queue_samples: Vec<(f64, usize)> = Vec::with_capacity(n_samples);
+    let mut comp_samples: Vec<Vec<usize>> = Vec::with_capacity(n_samples);
     while let Some(event) = sim.heap.pop() {
         let now = event.t;
         while sample_k <= n_samples && sample_k as f64 * sample_dt <= now {
             queue_samples.push((sample_k as f64 * sample_dt, sim.queued));
+            comp_samples.push(sim.queued_comp.clone());
             sample_k += 1;
         }
         if now > cfg.horizon {
@@ -484,7 +611,7 @@ pub fn simulate(
         match event.kind {
             EventKind::Arrival { spout } => {
                 sim.arrival(spouts[spout], now);
-                let next = now + inter;
+                let next = now + spout_inter[spout];
                 if next <= cfg.horizon {
                     sim.push(next, EventKind::Arrival { spout });
                 }
@@ -494,6 +621,7 @@ pub fn simulate(
     }
     while sample_k <= n_samples {
         queue_samples.push((sample_k as f64 * sample_dt, sim.queued));
+        comp_samples.push(sim.queued_comp.clone());
         sample_k += 1;
     }
 
@@ -515,40 +643,44 @@ pub fn simulate(
     let weighted_util =
         weighted_utilization(top, problem.cluster(), problem.profiles(), &util)?;
 
-    sim.latencies.sort_by(f64::total_cmp);
-    let latency = if sim.latencies.is_empty() {
-        None
-    } else {
-        Some(LatencySummary {
-            samples: sim.latencies.len(),
-            mean: stats::mean(&sim.latencies),
-            p50: stats::percentile(&sim.latencies, 50.0),
-            p95: stats::percentile(&sim.latencies, 95.0),
-            p99: stats::percentile(&sim.latencies, 99.0),
-            max: *sim.latencies.last().unwrap(),
-        })
-    };
+    let mut all_lat: Vec<f64> = sim.lat_comp.iter().flatten().copied().collect();
+    all_lat.sort_by(f64::total_cmp);
+    let latency = summarize_latency(&all_lat);
 
-    // verdict: compare queue depth over the first vs last post-warmup
-    // third — a stationary queue keeps them comparable, an unstable one
-    // grows linearly
-    let meas: Vec<(f64, usize)> =
-        queue_samples.iter().copied().filter(|&(t, _)| t >= cfg.warmup).collect();
-    let (queue_growth, diverging) = if meas.len() >= 6 {
-        let k = meas.len() / 3;
-        let head: Vec<f64> = meas[..k].iter().map(|&(_, q)| q as f64).collect();
-        let tail: Vec<f64> = meas[meas.len() - k..].iter().map(|&(_, q)| q as f64).collect();
-        let head_mean = stats::mean(&head);
-        let tail_mean = stats::mean(&tail);
-        let span = (meas[meas.len() - 1].0 - meas[0].0) * 2.0 / 3.0;
-        let growth = if span > 0.0 { (tail_mean - head_mean) / span } else { 0.0 };
-        (growth, tail_mean > 2.0 * head_mean + 10.0)
-    } else {
-        (0.0, false)
-    };
+    let total_series: Vec<(f64, f64)> =
+        queue_samples.iter().map(|&(t, q)| (t, q as f64)).collect();
+    let (queue_growth, diverging) = growth_verdict(&total_series, cfg.warmup);
     let backpressure = diverging || sim.shed > 0;
 
-    Ok(EventReport {
+    // ---- per-group (per-tenant) slices -----------------------------------
+    let mut group_reports = Vec::with_capacity(groups.len());
+    for g in groups {
+        let g_thpt: f64 = g.comps.iter().map(|&c| comp_rate[c]).sum();
+        let mut g_lat: Vec<f64> =
+            g.comps.iter().flat_map(|&c| sim.lat_comp[c].iter().copied()).collect();
+        g_lat.sort_by(f64::total_cmp);
+        let series: Vec<(f64, f64)> = queue_samples
+            .iter()
+            .zip(&comp_samples)
+            .map(|(&(t, _), per_comp)| {
+                (t, g.comps.iter().map(|&c| per_comp[c] as f64).sum::<f64>())
+            })
+            .collect();
+        let (g_growth, g_diverging) = growth_verdict(&series, cfg.warmup);
+        let g_shed: u64 = g.comps.iter().map(|&c| sim.shed_comp[c]).sum();
+        let g_max = series.iter().map(|&(_, q)| q as usize).max().unwrap_or(0);
+        group_reports.push(GroupReport {
+            name: g.name.clone(),
+            throughput: g_thpt,
+            latency: summarize_latency(&g_lat),
+            queue_growth: g_growth,
+            max_queue: g_max,
+            shed: g_shed,
+            backpressure: g_diverging || g_shed > 0,
+        });
+    }
+
+    let report = EventReport {
         rate,
         horizon: cfg.horizon,
         warmup: cfg.warmup,
@@ -564,7 +696,8 @@ pub fn simulate(
         shed: sim.shed,
         queue_growth,
         backpressure,
-    })
+    };
+    Ok((report, group_reports))
 }
 
 #[cfg(test)]
@@ -699,6 +832,84 @@ mod tests {
         // shape mismatch
         let bad = Placement::empty(2, 3);
         assert!(simulate(&problem, &bad, 10.0, &det(10.0, 2.0)).is_err());
+    }
+
+    #[test]
+    fn weighted_spout_arrives_proportionally_faster() {
+        // same topology, spout weight 2: the spout (and its bolt) see
+        // twice the stream at the same nominal R0
+        let top1 = TopologyBuilder::new("w1")
+            .spout("s", "spout", 1.0)
+            .bolt("b", "lowCompute", 1.0, &["s"])
+            .build()
+            .unwrap();
+        let top2 = TopologyBuilder::new("w2")
+            .spout("s", "spout", 1.0)
+            .bolt("b", "lowCompute", 1.0, &["s"])
+            .input_weight("s", 2.0)
+            .build()
+            .unwrap();
+        let (p1, s1) = hetero(top1);
+        let (p2, _) = hetero(top2);
+        let rate = s1.rate * 0.3;
+        let a = simulate(&p1, &s1.placement, rate, &det(20.0, 4.0)).unwrap();
+        // reuse an equally-shaped placement for the weighted topology
+        let b = simulate(&p2, &s1.placement, rate, &det(20.0, 4.0)).unwrap();
+        let ratio = b.comp_rate[0] / a.comp_rate[0].max(1e-9);
+        assert!((ratio - 2.0).abs() < 0.1, "weighted spout rate ratio {ratio}");
+    }
+
+    #[test]
+    fn grouped_run_reports_per_tenant_slices() {
+        use crate::scheduler::{Workload, WorkloadProblem};
+        use std::sync::Arc;
+
+        let (cluster, db) = presets::paper_cluster();
+        let db = Arc::new(db);
+        let w = Workload::new("duo")
+            .tenant("search", benchmarks::linear(), db.clone(), 1.0)
+            .tenant("ads", benchmarks::rolling_count(), db.clone(), 2.0);
+        let wp = WorkloadProblem::new(w, &cluster).unwrap();
+        let sched = registry::create("hetero", &PolicyParams::default()).unwrap();
+        let ws = wp.schedule_joint(sched.as_ref(), &ScheduleRequest::max_throughput()).unwrap();
+        let groups: Vec<CompGroup> = wp
+            .event_groups()
+            .into_iter()
+            .map(|(name, comps)| CompGroup { name, comps })
+            .collect();
+        let merged = wp.merged_placement(&ws);
+        let rate = ws.scale * 0.5;
+        let (rep, slices) =
+            simulate_grouped(wp.merged().unwrap(), &merged, rate, &det(20.0, 4.0), &groups)
+                .unwrap();
+        assert_eq!(slices.len(), 2);
+        assert!(!rep.backpressure, "half the certified scale must be stable");
+        // per-tenant throughput: linear = 4 comps at 1x rate, rolling
+        // count = (1 + 1 + 1.5) gains at 2x rate
+        let want_search = 4.0 * rate;
+        let want_ads = 3.5 * 2.0 * rate;
+        let rel_s = (slices[0].throughput - want_search).abs() / want_search;
+        let rel_a = (slices[1].throughput - want_ads).abs() / want_ads;
+        assert!(rel_s < 0.08, "search thpt {} vs {want_search}", slices[0].throughput);
+        assert!(rel_a < 0.08, "ads thpt {} vs {want_ads}", slices[1].throughput);
+        // group slices sum to the cluster-wide throughput
+        let sum: f64 = slices.iter().map(|g| g.throughput).sum();
+        assert!((sum - rep.throughput).abs() < 1e-6);
+        // both tenants complete tuples at their sinks, stably
+        for g in &slices {
+            assert!(g.latency.is_some(), "{}: no sink latencies", g.name);
+            assert!(!g.backpressure, "{}: spurious backpressure", g.name);
+            assert_eq!(g.verdict(), "stable");
+        }
+    }
+
+    #[test]
+    fn grouped_rejects_out_of_range_components() {
+        let (problem, s) = hetero(benchmarks::linear());
+        let bad = [CompGroup { name: "x".into(), comps: vec![9] }];
+        assert!(
+            simulate_grouped(&problem, &s.placement, 10.0, &det(10.0, 2.0), &bad).is_err()
+        );
     }
 
     #[test]

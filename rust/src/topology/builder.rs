@@ -46,7 +46,19 @@ impl TopologyBuilder {
             kind: ComponentKind::Spout,
             task_type: task_type.into(),
             alpha,
+            weight: 1.0,
         });
+        self
+    }
+
+    /// Set the input-rate weight of an already-added component (see
+    /// [`Component::weight`]): the named spout's external stream arrives
+    /// at `weight · R0` instead of `R0`.
+    pub fn input_weight(mut self, name: &str, weight: f64) -> Self {
+        match self.index_of(name) {
+            Some(i) => self.components[i].weight = weight,
+            None => self.errors.push(format!("input_weight '{name}': unknown component")),
+        }
         self
     }
 
@@ -58,6 +70,7 @@ impl TopologyBuilder {
             kind: ComponentKind::Bolt,
             task_type: task_type.into(),
             alpha,
+            weight: 1.0,
         });
         for p in parents {
             match self.index_of(p) {
@@ -120,6 +133,22 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(t.upstream(2).len(), 2);
+    }
+
+    #[test]
+    fn input_weight_sets_spout_weight() {
+        let t = TopologyBuilder::new("t")
+            .spout("s", "spout", 1.0)
+            .bolt("a", "lowCompute", 1.0, &["s"])
+            .input_weight("s", 2.0)
+            .build()
+            .unwrap();
+        assert_eq!(t.components[0].weight, 2.0);
+        assert!(TopologyBuilder::new("t")
+            .spout("s", "spout", 1.0)
+            .input_weight("ghost", 2.0)
+            .build()
+            .is_err());
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub struct Component {
     /// Tuple division ratio α (paper eq. 6): average output tuples
     /// emitted per input tuple consumed.
     pub alpha: f64,
+    /// External input-rate weight: a spout's stream arrives at
+    /// `weight · R0` instead of `R0` (eq. 6 seeds `IR = weight` per unit
+    /// rate).  `1.0` for every classic single-tenant topology; the
+    /// multi-tenant merge ([`crate::scheduler::workload`]) scales each
+    /// tenant's spouts by the tenant's rate-weight so one shared `R0`
+    /// knob drives all tenants proportionally.  Ignored on bolts.
+    pub weight: f64,
 }
 
 /// A user topology graph: components + directed edges (paper Fig. 2a).
@@ -69,6 +76,14 @@ impl Topology {
         }
         if !self.components.iter().any(|c| c.kind == ComponentKind::Spout) {
             return Err(Error::Topology("no spout".into()));
+        }
+        for c in &self.components {
+            if !(c.weight.is_finite() && c.weight > 0.0) {
+                return Err(Error::Topology(format!(
+                    "component '{}' has input-rate weight {}; weights must be finite and > 0",
+                    c.name, c.weight
+                )));
+            }
         }
         for (i, c) in self.components.iter().enumerate() {
             if c.kind == ComponentKind::Spout && self.edges.iter().any(|&(_, b)| b == i) {
@@ -158,16 +173,18 @@ impl Topology {
 
     /// Per-component *rate gain*: the eq.-6 fixed point for R0 = 1, i.e.
     /// `IR_c = gain_c * R0` for any topology input rate.  Spouts have
-    /// gain 1 (each spout emits R0); a downstream component's gain is the
-    /// sum of its upstream components' `gain * alpha` (every subscribed
-    /// consumer group receives the full stream — Storm semantics).
+    /// gain equal to their input-rate [`Component::weight`] (each spout
+    /// receives `weight · R0`; classic topologies use weight 1); a
+    /// downstream component's gain is the sum of its upstream
+    /// components' `gain * alpha` (every subscribed consumer group
+    /// receives the full stream — Storm semantics).
     pub fn rate_gains(&self) -> Result<Vec<f64>> {
         let order = self.topo_order()?;
         let n = self.n_components();
         let mut gain = vec![0.0f64; n];
         for &i in &order {
             if self.components[i].kind == ComponentKind::Spout {
-                gain[i] = 1.0;
+                gain[i] = self.components[i].weight;
             }
             let out = gain[i] * self.components[i].alpha;
             for &(a, b) in &self.edges {
@@ -257,6 +274,7 @@ mod tests {
             kind: ComponentKind::Bolt,
             task_type: "lowCompute".into(),
             alpha: 1.0,
+            weight: 1.0,
         });
         assert!(t.validate().is_err());
     }
@@ -299,6 +317,34 @@ mod tests {
             .unwrap();
         // every spout contributes R0 to the center
         assert!((g[center] - t.spouts().len() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spout_weight_scales_gain() {
+        let mut t = benchmarks::linear();
+        t.components[0].weight = 2.5;
+        t.validate().unwrap();
+        let g = t.rate_gains().unwrap();
+        // the spout and everything downstream scale by the input weight
+        for v in g {
+            assert!((v - 2.5).abs() < 1e-12, "gain {v}");
+        }
+        // a weighted spout in a multi-spout topology scales only its
+        // own contribution
+        let mut s = benchmarks::star();
+        s.components[0].weight = 3.0;
+        let g = s.rate_gains().unwrap();
+        let center = s.components.iter().position(|c| c.name == "center").unwrap();
+        assert!((g[center] - 4.0).abs() < 1e-12, "center gain {}", g[center]);
+    }
+
+    #[test]
+    fn bad_weight_rejected() {
+        for w in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let mut t = benchmarks::linear();
+            t.components[0].weight = w;
+            assert!(t.validate().is_err(), "weight {w} accepted");
+        }
     }
 
     #[test]

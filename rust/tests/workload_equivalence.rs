@@ -1,0 +1,225 @@
+//! Acceptance suite for the multi-tenant refactor: a one-tenant
+//! [`Workload`] is the degenerate case and must be **bit-compatible**
+//! with the classic single-tenant [`Problem`] path — same placement,
+//! same certified rate (within 1e-9) — through every workload
+//! scheduling mode; and incremental-admission scoring through the
+//! kernel's residual-capacity offsets must match a naive
+//! merged-evaluator recompute within 1e-9.
+
+use std::sync::Arc;
+
+use hstorm::cluster::presets;
+use hstorm::predict::kernel::{self, AccumState, Row};
+use hstorm::scheduler::{
+    registry, PolicyParams, Problem, Schedule, ScheduleRequest, Scheduler, TenantSchedule,
+    Workload, WorkloadProblem,
+};
+use hstorm::topology::benchmarks;
+
+fn policies() -> Vec<(&'static str, Box<dyn Scheduler>)> {
+    // small instance bound keeps the optimal enumeration fast in debug
+    let small = PolicyParams { max_instances_per_component: 2, ..Default::default() };
+    vec![
+        ("hetero", registry::create("hetero", &PolicyParams::default()).unwrap()),
+        ("default", registry::create("default", &PolicyParams::default()).unwrap()),
+        ("optimal", registry::create("optimal", &small).unwrap()),
+    ]
+}
+
+/// Equivalence: single-tenant workload == Problem path, all 5
+/// topologies x paper cluster x max-throughput, joint and incremental
+/// (and the isolated baseline, which also degenerates) paths.
+#[test]
+fn single_tenant_workload_selects_the_identical_schedule() {
+    let (cluster, db) = presets::paper_cluster();
+    let shared = Arc::new(db.clone());
+    let req = ScheduleRequest::max_throughput();
+    for top in benchmarks::all() {
+        for (name, policy) in policies() {
+            let problem = Problem::new(&top, &cluster, &db).unwrap();
+            let want = policy.schedule(&problem, &req).unwrap();
+
+            let wp = WorkloadProblem::new(
+                Workload::new("solo").tenant("only", top.clone(), shared.clone(), 1.0),
+                &cluster,
+            )
+            .unwrap();
+            let runs = [
+                wp.schedule_joint(policy.as_ref(), &req).unwrap(),
+                wp.schedule_incremental(policy.as_ref(), &req).unwrap(),
+                wp.schedule_isolated(policy.as_ref(), &req).unwrap(),
+            ];
+            for ws in runs {
+                assert_eq!(ws.tenants.len(), 1);
+                let got = &ws.tenants[0].schedule;
+                assert_eq!(
+                    got.placement, want.placement,
+                    "{}/{name}/{}: placements differ",
+                    top.name,
+                    ws.mode.name()
+                );
+                assert!(
+                    (got.rate - want.rate).abs() < 1e-9,
+                    "{}/{name}/{}: rate {} vs {}",
+                    top.name,
+                    ws.mode.name(),
+                    got.rate,
+                    want.rate
+                );
+                assert!(
+                    (ws.scale - want.rate).abs() < 1e-9,
+                    "{}/{name}/{}: scale {} vs rate {}",
+                    top.name,
+                    ws.mode.name(),
+                    ws.scale,
+                    want.rate
+                );
+                assert!(ws.denied.is_empty());
+            }
+        }
+    }
+}
+
+/// A resident schedule pinned at a fraction of its certified rate (so
+/// the residual deterministically has room for a second tenant).
+fn resident_at(problem: &Problem, policy: &dyn Scheduler, frac: f64) -> Schedule {
+    let s = policy.schedule(problem, &ScheduleRequest::max_throughput()).unwrap();
+    let rate = s.rate * frac;
+    let eval = problem.evaluator().evaluate(&s.placement, rate).unwrap();
+    Schedule { placement: s.placement, rate, eval, provenance: s.provenance }
+}
+
+/// Acceptance: admission scoring through the kernel's residual-capacity
+/// offsets (per-machine intercepts offset by resident load) matches a
+/// naive merged-evaluator recompute within 1e-9.
+#[test]
+fn residual_admission_matches_naive_merged_recompute() {
+    let (cluster, db) = presets::paper_cluster();
+    let shared = Arc::new(db);
+    let hetero = registry::create("hetero", &PolicyParams::default()).unwrap();
+    let req = ScheduleRequest::max_throughput();
+    let pairs = [
+        (benchmarks::linear(), benchmarks::rolling_count()),
+        (benchmarks::star(), benchmarks::unique_visitor()),
+        (benchmarks::diamond(), benchmarks::rolling_count()),
+    ];
+    for (top_a, top_b) in pairs {
+        let wp = WorkloadProblem::new(
+            Workload::new("pair")
+                .tenant("resident", top_a.clone(), shared.clone(), 1.0)
+                .tenant("incoming", top_b.clone(), shared.clone(), 1.0),
+            &cluster,
+        )
+        .unwrap();
+
+        // resident runs at half its certified max: the residual has room
+        let resident_problem = &wp.tenants()[0].problem;
+        let resident_sched = resident_at(resident_problem, hetero.as_ref(), 0.5);
+        let resident = TenantSchedule {
+            tenant: "resident".into(),
+            weight: 1.0,
+            schedule: resident_sched,
+        };
+
+        let admitted =
+            wp.admit(&[resident.clone()], 1, hetero.as_ref(), &req).unwrap_or_else(|e| {
+                panic!("{}: admission must succeed at 50% residency: {e}", top_b.name)
+            });
+
+        // --- naive merged recompute: tenant b's slope/intercepts from its
+        // own evaluator, capacities reduced by the resident's utilization
+        let ev_a = resident_problem.evaluator();
+        let resident_util =
+            ev_a.evaluate(&resident.schedule.placement, resident.schedule.rate).unwrap().util;
+        let ev_b = wp.tenants()[1].problem.evaluator();
+        let p_b = &admitted.schedule.placement;
+        let counts = p_b.counts();
+        let mut naive = f64::INFINITY;
+        for m in 0..ev_b.n_machines() {
+            let mut a = 0.0f64;
+            let mut b = 0.0f64;
+            for c in 0..ev_b.n_components() {
+                let k = p_b.x[c][m] as f64;
+                if k > 0.0 {
+                    a += k * ev_b.e_m[c][m] * ev_b.gains[c] / counts[c] as f64;
+                    b += k * ev_b.met_m[c][m];
+                }
+            }
+            if a > 0.0 {
+                naive = naive.min((ev_b.cap[m] - resident_util[m] - b) / a);
+            }
+        }
+        assert!(
+            (admitted.schedule.rate - naive).abs() < 1e-9,
+            "{}: admitted rate {} vs naive residual recompute {}",
+            top_b.name,
+            admitted.schedule.rate,
+            naive
+        );
+
+        // --- and the kernel spelling: resident load as a fixed
+        // intercept-offset row pushed into the accumulator
+        let mut acc = AccumState::new(ev_b.n_machines());
+        acc.push(&Row::fixed_load(&resident_util));
+        for row in kernel::rows_of_placement(ev_b, p_b).iter().rev() {
+            acc.push(row);
+        }
+        assert!(
+            (acc.rate(&ev_b.cap) - naive).abs() < 1e-9,
+            "{}: kernel offset rate {} vs naive {}",
+            top_b.name,
+            acc.rate(&ev_b.cap),
+            naive
+        );
+
+        // the pair actually fits together: combined utilization at the
+        // certified rates stays within every machine budget
+        let combined = wp.combined_util(&[resident, admitted]).unwrap();
+        for (m, u) in combined.iter().enumerate() {
+            assert!(
+                *u <= wp.cluster().machines[m].cap + 1e-6,
+                "{}: machine {m} at {u}%",
+                top_b.name
+            );
+        }
+    }
+}
+
+/// Joint mode's combined utilization decomposes exactly into the
+/// per-tenant evaluations the workload schedule reports.
+#[test]
+fn joint_util_decomposes_per_tenant() {
+    let (cluster, db) = presets::paper_cluster();
+    let shared = Arc::new(db);
+    let hetero = registry::create("hetero", &PolicyParams::default()).unwrap();
+    let wp = WorkloadProblem::new(
+        Workload::new("duo")
+            .tenant("a", benchmarks::linear(), shared.clone(), 1.0)
+            .tenant("b", benchmarks::unique_visitor(), shared.clone(), 2.0),
+        &cluster,
+    )
+    .unwrap();
+    let ws = wp.schedule_joint(hetero.as_ref(), &ScheduleRequest::max_throughput()).unwrap();
+    // sum of per-tenant utils == reported combined util
+    let mut sum = vec![0.0f64; wp.cluster().n_machines()];
+    for ts in &ws.tenants {
+        for (m, u) in ts.schedule.eval.util.iter().enumerate() {
+            sum[m] += u;
+        }
+    }
+    for (m, (got, want)) in ws.util.iter().zip(&sum).enumerate() {
+        assert!((got - want).abs() < 1e-9, "machine {m}: {got} vs {want}");
+    }
+    // and the merged problem certifies the same combined picture: the
+    // merged evaluation at the shared scale matches the sum within fp
+    // association error
+    let merged_eval = wp
+        .merged()
+        .unwrap()
+        .evaluator()
+        .evaluate(&wp.merged_placement(&ws), ws.scale)
+        .unwrap();
+    for (m, (got, want)) in merged_eval.util.iter().zip(&sum).enumerate() {
+        assert!((got - want).abs() < 1e-6, "machine {m}: merged {got} vs sum {want}");
+    }
+}
