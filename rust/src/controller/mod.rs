@@ -358,8 +358,10 @@ fn run_policy_from(
     // but stable world re-probes only when the offered rate moves.
     let mut probe_memo: Option<(u64, u64, bool)> = None;
     let mut rep = PolicyReport::new(policy.name());
+    let step_hist = crate::obs::global().histogram("control.step_s");
 
     for step in &trace.steps {
+        let _step_span = crate::obs::Span::start(step_hist.clone());
         let offered = step.offered * base_rate;
         let mut migrated_step = 0usize;
         let mut resched_step = false;
@@ -385,7 +387,16 @@ fn run_policy_from(
                             problem_version = world.version;
                         }
                         let problem = rebuilt.as_ref().unwrap_or(day_zero);
+                        let replan_started = std::time::Instant::now();
                         let r = reschedule::after_failure(problem, &cur, machine, sched)?;
+                        if crate::obs::enabled() {
+                            crate::obs::global().journal().record(crate::obs::Event::Replanned {
+                                policy: policy.name().into(),
+                                step: step.t as usize,
+                                cause: "machine-leave".into(),
+                                latency_ms: replan_started.elapsed().as_secs_f64() * 1e3,
+                            });
+                        }
                         let new_np =
                             NamedPlacement::capture(&r.schedule.placement, &world.cluster);
                         migrated_step += migrated_tasks(&np, &new_np);
@@ -415,10 +426,10 @@ fn run_policy_from(
 
         // 3. breach detection / scheduling decision
         let dirty = scheduled_version != world.version;
-        let decide = match policy {
-            Policy::Static => false,
-            Policy::Oracle => true,
-            Policy::Reactive if !dirty => false,
+        let decide: Option<&'static str> = match policy {
+            Policy::Static => None,
+            Policy::Oracle => Some("oracle"),
+            Policy::Reactive if !dirty => None,
             Policy::Reactive => {
                 // The closed-form test is the guaranteed floor: a mild
                 // overload at low absolute rates grows queues too slowly
@@ -431,14 +442,25 @@ fn run_policy_from(
                 let load =
                     if capacity > 0.0 { offered / capacity } else { f64::INFINITY };
                 let band = load > cfg.band_hi || load < cfg.band_lo;
-                if analytic_breach || (band && cooldown == 0) {
-                    true
+                if analytic_breach {
+                    if crate::obs::enabled() {
+                        let journal = crate::obs::global().journal();
+                        journal.record(crate::obs::Event::BreachDetected {
+                            policy: policy.name().into(),
+                            step: step.t as usize,
+                            offered,
+                            capacity,
+                        });
+                    }
+                    Some("infeasible")
+                } else if band && cooldown == 0 {
+                    Some("band")
                 } else {
                     match &cfg.event_probe {
-                        None => false,
+                        None => None,
                         Some(probe) => {
                             let key = (world.version, offered.to_bits());
-                            match probe_memo {
+                            let verdict = match probe_memo {
                                 Some((v, o, verdict)) if (v, o) == key => verdict,
                                 _ => {
                                     let proj = np.project(problem.cluster());
@@ -453,16 +475,26 @@ fn run_policy_from(
                                     probe_memo = Some((key.0, key.1, verdict));
                                     verdict
                                 }
-                            }
+                            };
+                            verdict.then_some("probe")
                         }
                     }
                 }
             }
         };
-        if decide {
+        if let Some(cause) = decide {
             rep.reschedules += 1;
             if dirty {
+                let replan_started = std::time::Instant::now();
                 let s = sched.schedule(problem, &ScheduleRequest::max_throughput())?;
+                if crate::obs::enabled() {
+                    crate::obs::global().journal().record(crate::obs::Event::Replanned {
+                        policy: policy.name().into(),
+                        step: step.t as usize,
+                        cause: cause.into(),
+                        latency_ms: replan_started.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
                 let new_np = NamedPlacement::capture(&s.placement, &world.cluster);
                 migrated_step += migrated_tasks(&np, &new_np);
                 np = new_np;

@@ -312,7 +312,9 @@ pub fn run_workload(
         }
     }
 
+    let step_hist = crate::obs::global().histogram("workload.step_s");
     for step in 0..steps {
+        let _step_span = crate::obs::Span::start(step_hist.clone());
         let dt = cfg.step_seconds;
         let mut migrated: Vec<usize> = vec![0; n];
         let mut touched: Vec<bool> = vec![false; n];
@@ -348,9 +350,24 @@ pub fn run_workload(
                     admissions += 1;
                     stale = true;
                     cooldown = cfg.cooldown_steps;
+                    if crate::obs::enabled() {
+                        let journal = crate::obs::global().journal();
+                        journal.record(crate::obs::Event::AdmissionGranted {
+                            tenant: reports[i].name.clone(),
+                            step,
+                        });
+                    }
                 }
                 Err(_) => {
                     reports[i].denied_attempts += 1;
+                    if crate::obs::enabled() {
+                        let journal = crate::obs::global().journal();
+                        journal.record(crate::obs::Event::AdmissionDenied {
+                            tenant: reports[i].name.clone(),
+                            step,
+                            reason: "capacity".into(),
+                        });
+                    }
                 }
             }
         }
@@ -383,8 +400,18 @@ pub fn run_workload(
                     std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
                     std::collections::hash_map::Entry::Vacant(e) => e.insert(wp.subset(&active)?),
                 };
+                let replan_started = std::time::Instant::now();
                 match sub.schedule_joint(sched.as_ref(), &req) {
                     Ok(ws) => {
+                        if crate::obs::enabled() {
+                            let journal = crate::obs::global().journal();
+                            journal.record(crate::obs::Event::Replanned {
+                                policy: "workload".into(),
+                                step,
+                                cause: if breach { "infeasible".into() } else { "band".into() },
+                                latency_ms: replan_started.elapsed().as_secs_f64() * 1e3,
+                            });
+                        }
                         for (slot, &i) in active.iter().enumerate() {
                             let new = &ws.tenants[slot];
                             let old = schedules[i].as_ref().expect("active tenant scheduled");

@@ -138,6 +138,35 @@
 //! sched-perf` races the naive and incremental engines and writes the
 //! machine-readable `BENCH_sched.json` (candidates/s, wall time,
 //! speedups, same-schedule check per scenario).
+//!
+//! ## Observability
+//!
+//! The [`obs`] module is the cross-cutting telemetry layer: log-bucketed
+//! [`obs::Histogram`]s (p50/p95/p99/max, mergeable), RAII [`obs::Span`]
+//! timers, and a structured [`obs::Journal`] of typed decision events,
+//! all hanging off the shared [`metrics::Registry`] so engine counters
+//! and scheduler/controller/simulator telemetry export through one
+//! snapshot (`hstorm metrics`, `--metrics-out FILE`).  Telemetry is
+//! side-channel only — schedules, certified rates and reports are
+//! bit-identical with it on or off ([`obs::set_enabled`]).  The journal
+//! records:
+//!
+//! | event                  | emitted by            | payload                                  |
+//! |------------------------|-----------------------|------------------------------------------|
+//! | `search_started`       | every scheduler       | policy, components, machines             |
+//! | `candidate_pruned`     | search engines        | policy, count, reason                    |
+//! | `schedule_chosen`      | every scheduler       | policy, backend, rate, evaluated, pruned |
+//! | `runner_up`            | hetero/optimal        | policy, label, rate                      |
+//! | `breach_detected`      | controller            | policy, step, offered, capacity          |
+//! | `replanned`            | controller, workload  | policy, step, cause, latency ms          |
+//! | `admission_denied`     | workload controller   | tenant, step, reason                     |
+//! | `admission_granted`    | workload controller   | tenant, step                             |
+//! | `backpressure_verdict` | event simulator       | rate, backpressure, queue growth, shed   |
+//!
+//! `hstorm explain` turns this into a decision story: the eq.-5
+//! bottleneck chain (which component capped `R0*` on which machine,
+//! per-machine headroom breakdown — [`obs::explain`]) plus, for
+//! controller runs, the breach → re-plan timeline with latencies.
 
 pub mod cluster;
 pub mod config;
@@ -146,6 +175,7 @@ pub mod engine;
 pub mod error;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod predict;
 pub mod profiling;
 pub mod resolve;

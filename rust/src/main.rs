@@ -8,6 +8,8 @@
 //! hstorm run      --topology linear [--rate 100] [--seconds 4] [--pjrt-compute]
 //! hstorm simulate --topology linear --scenario 2 [--mode analytic|event]
 //! hstorm control  --trace diurnal --scenario 2 [--policy reactive] [--steps 600]
+//! hstorm explain  --topology linear [--scheduler hetero] [--trace diurnal]
+//! hstorm metrics  [--topology linear] [--format prom|json]
 //! hstorm profile  [--task highCompute] [--machine pentium]
 //! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
 //!                  |sched-perf|all>  [--fast] [--json out.json]
@@ -33,7 +35,7 @@ const VALUE_FLAGS: &[&str] = &[
     "topology", "scenario", "scheduler", "r0", "rate", "seconds", "task", "machine", "json",
     "config", "max-instances", "time-scale", "trace", "steps", "seed", "policy", "cooldown",
     "objective", "exclude", "headroom", "mode", "horizon", "service", "probe", "workload",
-    "tenancy",
+    "tenancy", "metrics-out", "format",
 ];
 const BOOL_FLAGS: &[&str] =
     &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies"];
@@ -53,10 +55,18 @@ commands:
             [--policy static|reactive|oracle|all] [--scheduler hetero|default|optimal]
             [--probe analytic|event] [--steps 600] [--seed 42] [--cooldown 10]
             [--json out.json] | --workload w.json [--trace ...] [--steps N]
+  explain   [--topology T] [--scenario 1..3] [--scheduler hetero|default|optimal]
+            [--objective ...] [--exclude ...] [--json out.json]
+            | --trace constant|diurnal|ramp|bursty [--steps N] [--seed N]
+  metrics   [--topology T] [--scenario 1..3] [--scheduler NAME] [--format prom|json]
   profile   [--task highCompute] [--machine pentium]
   bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
             |sched-perf|tenancy|all  [--fast] [--json out.json]
   config    --config exp.json
+
+every command also takes --metrics-out FILE: after a successful run the
+process-wide telemetry snapshot (metric rows + the structured decision
+journal) is written to FILE as JSON.
 
 topologies: linear diamond star rolling-count unique-visitor
 
@@ -95,7 +105,15 @@ module docs for breach/cooldown semantics.
 bench sched-perf races the optimal search's engines (naive batched
 scoring vs the incremental row-table kernel, single- and multi-threaded)
 over the exhaustive seed scenarios and writes BENCH_sched.json —
-candidates/s and wall time per scenario — next to the rendered table.";
+candidates/s and wall time per scenario — next to the rendered table.
+
+explain reconstructs the decision story of a schedule from the eq.-5
+model: which component capped R0* on which machine, residual headroom
+per machine, candidates evaluated vs pruned.  With --trace it replays
+the controller instead and renders each policy's breach -> re-plan
+timeline from the telemetry journal.  metrics schedules every registry
+policy once and dumps the resulting telemetry snapshot (--format prom
+for Prometheus text exposition, json for metrics + journal).";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -114,16 +132,119 @@ fn run(argv: Vec<String>) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     }
-    match args.positional[0].as_str() {
+    let result = match args.positional[0].as_str() {
         "schedule" => cmd_schedule(&args),
         "run" => cmd_run(&args),
         "simulate" => cmd_simulate(&args),
         "control" => cmd_control(&args),
+        "explain" => cmd_explain(&args),
+        "metrics" => cmd_metrics(&args),
         "profile" => cmd_profile(&args),
         "bench" => cmd_bench(&args),
         "config" => cmd_config(&args),
         other => Err(Error::Config(format!("unknown command '{other}' (try --help)"))),
+    };
+    if result.is_ok() {
+        if let Some(path) = args.get("metrics-out") {
+            let snap = hstorm::obs::json_snapshot(hstorm::obs::global());
+            std::fs::write(path, json::to_string_pretty(&snap))?;
+            println!("wrote {path}");
+        }
     }
+    result
+}
+
+/// Policies to explain/export: the one named by `--scheduler`, or every
+/// registered policy.
+fn policies_from_args(args: &Args) -> Vec<String> {
+    match args.get("scheduler") {
+        Some(one) => vec![one.to_string()],
+        None => registry::policies().iter().map(|i| i.name.to_string()).collect(),
+    }
+}
+
+fn cmd_explain(args: &Args) -> Result<()> {
+    let top = resolve::topology(args.get_or("topology", "linear"))?;
+    let (cluster, db) = resolve::cluster(args.get("scenario"))?;
+
+    if let Some(trace_name) = args.get("trace") {
+        // controller mode: replay the trace, then render each policy's
+        // breach -> re-plan timeline from the telemetry journal
+        let steps = args.get_usize("steps", 120)?;
+        let seed = args.get_usize("seed", 42)? as u64;
+        let trace = controller::traces::by_name(trace_name, &top, &cluster, steps, seed)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown trace '{trace_name}' (valid: {})",
+                    controller::traces::NAMES.join("|")
+                ))
+            })?;
+        let cfg = ControllerConfig {
+            scheduler_policy: args.get_or("scheduler", "hetero").to_string(),
+            scheduler_params: params_from_args(args)?,
+            ..Default::default()
+        };
+        println!(
+            "replaying trace '{}' ({} steps) on '{}' @ '{}' for the timeline ...",
+            trace.name,
+            trace.n_steps(),
+            top.name,
+            cluster.name
+        );
+        controller::run_trace(&top, &cluster, &db, &trace, &Policy::ALL, &cfg)?;
+        let entries = hstorm::obs::global().journal().entries();
+        for p in Policy::ALL {
+            println!("{}", hstorm::obs::explain::render_timeline(&entries, p.name()));
+        }
+        return Ok(());
+    }
+
+    let problem = build_problem(args, &top, &cluster, &db)?;
+    let req = request_from_args(args)?;
+    let params = params_from_args(args)?;
+    let rc = problem.resolve(&req.constraints)?;
+    let ev = problem.constrained_evaluator(&rc);
+    println!(
+        "topology: {}   cluster: {} ({} machines)",
+        top.name,
+        cluster.name,
+        cluster.n_machines()
+    );
+    let mut out = Vec::new();
+    for name in policies_from_args(args) {
+        let sched = resolve::policy(&name, &params)?;
+        let s = sched.schedule(&problem, &req)?;
+        let x = hstorm::obs::explain::analyze(&top, &cluster, &ev, &s);
+        println!("{}", hstorm::obs::explain::render(&x));
+        out.push(hstorm::obs::explain::to_json(&x));
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, json::to_string_pretty(&json::arr(out)))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    // each invocation is its own process, so populate the registry with
+    // one scheduling pass per policy before exporting
+    let top = resolve::topology(args.get_or("topology", "linear"))?;
+    let (cluster, db) = resolve::cluster(args.get("scenario"))?;
+    let problem = build_problem(args, &top, &cluster, &db)?;
+    let req = request_from_args(args)?;
+    let params = params_from_args(args)?;
+    for name in policies_from_args(args) {
+        resolve::policy(&name, &params)?.schedule(&problem, &req)?;
+    }
+    let reg = hstorm::obs::global();
+    match args.get_or("format", "prom") {
+        "prom" | "prometheus" => print!("{}", hstorm::obs::prometheus_text(reg)),
+        "json" => println!("{}", json::to_string_pretty(&hstorm::obs::json_snapshot(reg))),
+        other => {
+            return Err(Error::Config(format!("unknown --format '{other}' (valid: prom|json)")))
+        }
+    }
+    Ok(())
 }
 
 /// Policy tunables from the command line.

@@ -3,12 +3,19 @@
 //! Counters and gauges are atomic and cheap to update from the tokio hot
 //! path; snapshots are taken lock-free.  This replaces Storm's UI /
 //! `get_execute_ms_avg()` surface the paper's profiling step reads.
+//!
+//! The registry also owns the observability layer's named
+//! [`Histogram`]s and its event [`Journal`] (see [`crate::obs`]), so
+//! engine counters and scheduler/controller telemetry share one
+//! snapshot/export path.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use std::sync::RwLock;
+
+use crate::obs::{Histogram, Journal};
 
 /// Monotonic event counter.
 #[derive(Debug, Default)]
@@ -44,10 +51,19 @@ impl Gauge {
 
 /// Accumulates (sum, count) pairs for mean statistics, e.g. per-tuple
 /// service time — the engine-side `e_ij` measurement.
+///
+/// `sum_ns` and `count` live in two atomics, so a bare two-store
+/// `reset` could interleave with a concurrent `observe` (sum cleared,
+/// then the observation's add lands, then count cleared — the next
+/// mean is skewed by a half-applied sample).  A `RwLock<()>` keeps the
+/// pairs coherent: observers and readers share the read side (two
+/// relaxed atomic ops under an uncontended read lock), `reset` takes
+/// the write side and clears both fields with no observer in flight.
 #[derive(Debug, Default)]
 pub struct MeanStat {
     sum_ns: AtomicU64,
     count: AtomicU64,
+    reset_gate: RwLock<()>,
 }
 
 impl MeanStat {
@@ -57,6 +73,7 @@ impl MeanStat {
     /// `count`, biasing the measured mean (the engine-side `e_ij`)
     /// downward.
     pub fn observe(&self, seconds: f64) {
+        let _gate = self.reset_gate.read().unwrap();
         self.sum_ns.fetch_add((seconds * 1e9).round() as u64, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
@@ -67,14 +84,18 @@ impl MeanStat {
 
     /// Mean in seconds, or `None` with no observations.
     pub fn mean(&self) -> Option<f64> {
-        let n = self.count();
+        let _gate = self.reset_gate.read().unwrap();
+        let n = self.count.load(Ordering::Relaxed);
         if n == 0 {
             return None;
         }
         Some(self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64)
     }
 
+    /// Clear both accumulators coherently: no concurrent `observe` can
+    /// land between the two stores (regression-tested below).
     pub fn reset(&self) {
+        let _gate = self.reset_gate.write().unwrap();
         self.sum_ns.store(0, Ordering::Relaxed);
         self.count.store(0, Ordering::Relaxed);
     }
@@ -86,6 +107,8 @@ pub struct Registry {
     counters: Arc<RwLock<HashMap<String, Arc<Counter>>>>,
     gauges: Arc<RwLock<HashMap<String, Arc<Gauge>>>>,
     means: Arc<RwLock<HashMap<String, Arc<MeanStat>>>>,
+    hists: Arc<RwLock<HashMap<String, Arc<Histogram>>>>,
+    journal: Arc<Journal>,
 }
 
 impl Registry {
@@ -129,7 +152,31 @@ impl Registry {
             .clone()
     }
 
-    /// Snapshot all metrics as `(name, value)` rows, sorted by name.
+    /// Get or create a named log-bucketed histogram (see
+    /// [`crate::obs::Histogram`]).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if let Some(h) = self.hists.read().unwrap().get(name) {
+            return h.clone();
+        }
+        self.hists
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::default()))
+            .clone()
+    }
+
+    /// The registry's structured event journal.
+    pub fn journal(&self) -> &Journal {
+        &self.journal
+    }
+
+    /// Snapshot all metrics as `(name, value)` rows, sorted by name
+    /// and duplicate-free.  Histograms expand to `.count`, `.mean`,
+    /// `.p50`, `.p95`, `.p99` and `.max` rows.  When the same name is
+    /// registered under several metric kinds, the first in
+    /// counter > gauge > mean > histogram priority wins (the sort is
+    /// stable, so insertion order below is the tie-break).
     pub fn snapshot(&self) -> Vec<(String, f64)> {
         let mut rows: Vec<(String, f64)> = Vec::new();
         for (k, v) in self.counters.read().unwrap().iter() {
@@ -141,7 +188,16 @@ impl Registry {
         for (k, v) in self.means.read().unwrap().iter() {
             rows.push((format!("{k}.mean"), v.mean().unwrap_or(0.0)));
         }
+        for (k, v) in self.hists.read().unwrap().iter() {
+            rows.push((format!("{k}.count"), v.count() as f64));
+            rows.push((format!("{k}.mean"), v.mean()));
+            rows.push((format!("{k}.p50"), v.quantile(0.50)));
+            rows.push((format!("{k}.p95"), v.quantile(0.95)));
+            rows.push((format!("{k}.p99"), v.quantile(0.99)));
+            rows.push((format!("{k}.max"), v.max()));
+        }
         rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows.dedup_by(|a, b| a.0 == b.0);
         rows
     }
 }
@@ -195,13 +251,77 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_sorted() {
+    fn mean_stat_reset_is_coherent_under_concurrency() {
+        // regression: reset used to clear sum and count in two
+        // independent stores, so an observe landing between them left
+        // a half-applied sample skewing every later mean.  With the
+        // gate, any surviving (sum, count) pair must satisfy
+        // sum == count * value exactly.
+        let m = Arc::new(MeanStat::default());
+        let value = 0.5; // 5e8 ns: exactly representable, no rounding
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let m = m.clone();
+                scope.spawn(move || {
+                    for _ in 0..2_000 {
+                        m.observe(value);
+                    }
+                });
+            }
+            let m = m.clone();
+            scope.spawn(move || {
+                for _ in 0..500 {
+                    m.reset();
+                    if let Some(mean) = m.mean() {
+                        assert!((mean - value).abs() < 1e-12, "torn reset: mean {mean}");
+                    }
+                }
+            });
+        });
+        if let Some(mean) = m.mean() {
+            assert!((mean - value).abs() < 1e-12, "torn reset: final mean {mean}");
+        }
+    }
+
+    #[test]
+    fn snapshot_sorted_and_duplicate_free() {
         let r = Registry::new();
         r.counter("b").inc();
         r.gauge("a").set(1.0);
+        // same name registered as a counter AND a gauge: one row
+        // survives, and the counter (pushed first) wins
+        r.counter("dup").add(7);
+        r.gauge("dup").set(99.0);
+        r.histogram("h").observe(2.0);
         let snap = r.snapshot();
-        assert_eq!(snap[0].0, "a");
-        assert_eq!(snap[1].0, "b");
+        let names: Vec<&str> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "snapshot not sorted");
+        sorted.dedup();
+        assert_eq!(names.len(), sorted.len(), "snapshot has duplicate names");
+        let dup = snap.iter().find(|(n, _)| n == "dup").unwrap();
+        assert_eq!(dup.1, 7.0, "counter must win the name collision");
+    }
+
+    #[test]
+    fn histogram_rows_expand_in_snapshot() {
+        let r = Registry::new();
+        let h = r.histogram("lat_s");
+        h.observe(0.010);
+        h.observe(0.030);
+        let snap = r.snapshot();
+        let get = |suffix: &str| {
+            snap.iter()
+                .find(|(n, _)| n == &format!("lat_s.{suffix}"))
+                .unwrap_or_else(|| panic!("missing lat_s.{suffix}"))
+                .1
+        };
+        assert_eq!(get("count"), 2.0);
+        assert!((get("mean") - 0.020).abs() < 1e-12);
+        assert_eq!(get("max"), 0.030);
+        assert!(get("p50") >= 0.010 && get("p50") <= 0.030);
+        assert!(get("p99") >= get("p50"));
     }
 
     #[test]
@@ -210,5 +330,7 @@ mod tests {
         let r2 = r.clone();
         r.counter("x").inc();
         assert_eq!(r2.counter("x").get(), 1);
+        r.journal().record(crate::obs::Event::AdmissionGranted { tenant: "t".into(), step: 1 });
+        assert_eq!(r2.journal().len(), 1, "journal shared across clones");
     }
 }

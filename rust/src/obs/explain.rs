@@ -1,0 +1,374 @@
+//! Decision provenance: reconstruct *why* a schedule's certified rate
+//! is what it is, straight from the eq.-5 model.
+//!
+//! Per machine, utilization is linear in the topology input rate:
+//! `util_m(R0) = a_m * R0 + b_m` with
+//! `a_m = sum_c x[c][m] * e[c][m] * gain[c] / count[c]` (the rate
+//! slope) and `b_m = sum_c x[c][m] * met[c][m]` (the fixed MET floor).
+//! Each loaded machine therefore caps the rate at
+//! `(cap_m - b_m) / a_m`; the machine attaining the minimum is the
+//! **bottleneck**, and the component contributing the most slope on it
+//! is the vertex the paper's Alg. 2 would take the next instance from.
+//! `hstorm explain` renders that chain — bottleneck component, machine
+//! and residual headroom — plus the per-machine breakdown and the
+//! journal-backed search statistics.
+
+use crate::cluster::Cluster;
+use crate::predict::Evaluator;
+use crate::scheduler::Schedule;
+use crate::topology::Topology;
+use crate::util::json::{self, Value};
+
+use super::journal::{Entry, Event};
+
+/// One machine's linear eq.-5 decomposition at the certified rate.
+#[derive(Debug, Clone)]
+pub struct MachineBreakdown {
+    pub machine: String,
+    /// Rate slope `a_m` (utilization points per tuple/s).
+    pub slope: f64,
+    /// Fixed MET floor `b_m` (utilization points).
+    pub intercept: f64,
+    /// Utilization budget `cap_m`.
+    pub cap: f64,
+    /// The rate at which this machine saturates, `(cap - b) / a`;
+    /// `None` for unloaded machines (zero slope).
+    pub rate_cap: Option<f64>,
+    /// Predicted utilization at the schedule's certified rate.
+    pub util_at_rate: f64,
+    /// Residual budget at the certified rate (utilization points).
+    pub headroom: f64,
+    /// Tasks hosted.
+    pub tasks: usize,
+    /// Component contributing the most slope, with its share of `a_m`.
+    pub dominant: Option<(String, f64)>,
+}
+
+/// The machine/component pair that determined `R0*`.
+#[derive(Debug, Clone)]
+pub struct Bottleneck {
+    pub machine: String,
+    pub component: String,
+    /// Residual headroom on the bottleneck machine at `R0*` — ~0 by
+    /// construction, reported so the claim is checkable.
+    pub headroom: f64,
+    /// The rate this machine caps the topology at.
+    pub rate_cap: f64,
+}
+
+/// A schedule's full decision story.
+#[derive(Debug, Clone)]
+pub struct Explanation {
+    pub policy: String,
+    pub objective: String,
+    pub backend: String,
+    /// Certified max stable rate (tuples/s).
+    pub rate: f64,
+    /// Candidate placements the search evaluated (from `Provenance`).
+    pub evaluated: u64,
+    pub wall_ms: f64,
+    pub bottleneck: Option<Bottleneck>,
+    pub machines: Vec<MachineBreakdown>,
+}
+
+/// Decompose `schedule` against the eq.-5 model.  The evaluator must
+/// be the one the schedule was certified under (same constraint
+/// projection), which all CLI/default paths satisfy.
+pub fn analyze(
+    top: &Topology,
+    cluster: &Cluster,
+    ev: &Evaluator,
+    schedule: &Schedule,
+) -> Explanation {
+    let p = &schedule.placement;
+    let counts = p.counts();
+    let n_m = ev.n_machines();
+    let n_c = ev.n_components();
+
+    let mut machines = Vec::with_capacity(n_m);
+    let mut bottleneck: Option<Bottleneck> = None;
+    for m in 0..n_m {
+        let mut slope = 0.0;
+        let mut intercept = 0.0;
+        let mut dominant: Option<(usize, f64)> = None;
+        for c in 0..n_c {
+            if p.x[c][m] == 0 {
+                continue;
+            }
+            let contrib = p.x[c][m] as f64 * ev.e_m[c][m] * ev.gains[c] / counts[c].max(1) as f64;
+            slope += contrib;
+            intercept += p.x[c][m] as f64 * ev.met_m[c][m];
+            if dominant.map_or(true, |(_, best)| contrib > best) {
+                dominant = Some((c, contrib));
+            }
+        }
+        let rate_cap = if slope > 0.0 { Some((ev.cap[m] - intercept) / slope) } else { None };
+        let util_at_rate = slope * schedule.rate + intercept;
+        let row = MachineBreakdown {
+            machine: cluster.machines[m].name.clone(),
+            slope,
+            intercept,
+            cap: ev.cap[m],
+            rate_cap,
+            util_at_rate,
+            headroom: ev.cap[m] - util_at_rate,
+            tasks: p.tasks_on(m),
+            dominant: dominant.map(|(c, contrib)| {
+                (top.components[c].name.clone(), if slope > 0.0 { contrib / slope } else { 0.0 })
+            }),
+        };
+        if let (Some(rc), Some((comp, _))) = (row.rate_cap, row.dominant.as_ref()) {
+            if bottleneck.as_ref().map_or(true, |b| rc < b.rate_cap) {
+                bottleneck = Some(Bottleneck {
+                    machine: row.machine.clone(),
+                    component: comp.clone(),
+                    headroom: row.headroom,
+                    rate_cap: rc,
+                });
+            }
+        }
+        machines.push(row);
+    }
+
+    Explanation {
+        policy: schedule.provenance.policy.clone(),
+        objective: schedule.provenance.objective.clone(),
+        backend: schedule.provenance.backend.clone(),
+        rate: schedule.rate,
+        evaluated: schedule.provenance.placements_evaluated,
+        wall_ms: schedule.provenance.wall.as_secs_f64() * 1e3,
+        bottleneck,
+        machines,
+    }
+}
+
+/// Render an [`Explanation`] as the `hstorm explain` text block.
+pub fn render(x: &Explanation) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "explain · policy={} · objective={} · backend={}\n",
+        x.policy, x.objective, x.backend
+    ));
+    out.push_str(&format!("  certified rate R0*   : {:.3} tuples/s\n", x.rate));
+    out.push_str(&format!(
+        "  candidates evaluated : {}  (search wall {:.1} ms)\n",
+        x.evaluated, x.wall_ms
+    ));
+    match &x.bottleneck {
+        Some(b) => out.push_str(&format!(
+            "  bottleneck           : component '{}' on machine '{}' \
+             (caps R0* at {:.3}, residual headroom {:.2} pts)\n",
+            b.component, b.machine, b.rate_cap, b.headroom
+        )),
+        None => out.push_str("  bottleneck           : none (no machine carries rate load)\n"),
+    }
+    out.push_str(
+        "  machine          tasks   slope/r     fixed     util@R0*       cap   headroom\n",
+    );
+    for m in &x.machines {
+        let marker = match &x.bottleneck {
+            Some(b) if b.machine == m.machine => "  <- bottleneck",
+            _ => "",
+        };
+        let dom = match &m.dominant {
+            Some((c, share)) => format!("  [{} {:.0}% of slope]", c, share * 100.0),
+            None => String::new(),
+        };
+        out.push_str(&format!(
+            "  {:<15} {:>5}  {:>8.5}  {:>8.3}  {:>11.3}  {:>8.1}  {:>9.3}{dom}{marker}\n",
+            m.machine, m.tasks, m.slope, m.intercept, m.util_at_rate, m.cap, m.headroom
+        ));
+    }
+    out
+}
+
+/// Render the controller's breach -> re-plan timeline (plus admission
+/// decisions) for one policy from retained journal entries.
+pub fn render_timeline(entries: &[Entry], policy: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("timeline · policy={policy}\n"));
+    let mut any = false;
+    for e in entries {
+        let line = match &e.event {
+            Event::BreachDetected { policy: p, step, offered, capacity } if p == policy => {
+                Some(format!(
+                    "  step {step:>5}  breach     offered {offered:.2} > capacity {capacity:.2}"
+                ))
+            }
+            Event::Replanned { policy: p, step, cause, latency_ms } if p == policy => {
+                Some(format!(
+                    "  step {step:>5}  re-plan    cause={cause}  latency {latency_ms:.2} ms"
+                ))
+            }
+            Event::AdmissionDenied { tenant, step, reason } if policy == "workload" => {
+                Some(format!("  step {step:>5}  denied     tenant={tenant}  {reason}"))
+            }
+            Event::AdmissionGranted { tenant, step } if policy == "workload" => {
+                Some(format!("  step {step:>5}  admitted   tenant={tenant}"))
+            }
+            _ => None,
+        };
+        if let Some(l) = line {
+            out.push_str(&l);
+            out.push('\n');
+            any = true;
+        }
+    }
+    if !any {
+        out.push_str("  (no breach/re-plan/admission events recorded)\n");
+    }
+    out
+}
+
+/// JSON form of an [`Explanation`] (used by `hstorm explain --json`).
+pub fn to_json(x: &Explanation) -> Value {
+    let machines = x
+        .machines
+        .iter()
+        .map(|m| {
+            json::obj(vec![
+                ("machine", json::s(&m.machine)),
+                ("tasks", json::num(m.tasks as f64)),
+                ("slope", json::num(m.slope)),
+                ("intercept", json::num(m.intercept)),
+                ("cap", json::num(m.cap)),
+                ("rate_cap", m.rate_cap.map(json::num).unwrap_or(Value::Null)),
+                ("util_at_rate", json::num(m.util_at_rate)),
+                ("headroom", json::num(m.headroom)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("policy", json::s(&x.policy)),
+        ("objective", json::s(&x.objective)),
+        ("backend", json::s(&x.backend)),
+        ("rate", json::num(x.rate)),
+        ("evaluated", json::num(x.evaluated as f64)),
+        ("wall_ms", json::num(x.wall_ms)),
+        (
+            "bottleneck",
+            match &x.bottleneck {
+                Some(b) => json::obj(vec![
+                    ("machine", json::s(&b.machine)),
+                    ("component", json::s(&b.component)),
+                    ("headroom", json::num(b.headroom)),
+                    ("rate_cap", json::num(b.rate_cap)),
+                ]),
+                None => Value::Null,
+            },
+        ),
+        ("machines", Value::Arr(machines)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::scheduler::{hetero::HeteroScheduler, Problem, ScheduleRequest, Scheduler};
+    use crate::topology::benchmarks;
+
+    fn schedule_linear() -> (Problem, Schedule, Topology, Cluster) {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let problem = Problem::new(&top, &cluster, &db).unwrap();
+        let s = HeteroScheduler::default()
+            .schedule(&problem, &ScheduleRequest::max_throughput())
+            .unwrap();
+        (problem, s, top, cluster)
+    }
+
+    #[test]
+    fn bottleneck_machine_caps_the_certified_rate() {
+        let (problem, s, top, cluster) = schedule_linear();
+        let x = analyze(&top, &cluster, problem.evaluator(), &s);
+        let b = x.bottleneck.as_ref().expect("loaded schedule must have a bottleneck");
+        // the binding machine's rate cap IS the certified max stable rate
+        assert!(
+            (b.rate_cap - s.rate).abs() < 1e-6,
+            "bottleneck caps at {} but certified rate is {}",
+            b.rate_cap,
+            s.rate
+        );
+        // and its residual headroom at R0* is zero by construction
+        assert!(b.headroom.abs() < 1e-6, "headroom {}", b.headroom);
+        // every other loaded machine caps at a rate >= R0*
+        for m in &x.machines {
+            if let Some(rc) = m.rate_cap {
+                assert!(rc >= b.rate_cap - 1e-9, "{}: caps at {rc} < R0*", m.machine);
+            }
+        }
+    }
+
+    #[test]
+    fn explanation_mirrors_provenance() {
+        let (problem, s, top, cluster) = schedule_linear();
+        let x = analyze(&top, &cluster, problem.evaluator(), &s);
+        assert_eq!(x.policy, s.provenance.policy);
+        assert_eq!(x.evaluated, s.provenance.placements_evaluated);
+        assert_eq!(x.backend, s.provenance.backend);
+        assert_eq!(x.machines.len(), cluster.n_machines());
+    }
+
+    #[test]
+    fn render_names_bottleneck_component_machine_and_headroom() {
+        let (problem, s, top, cluster) = schedule_linear();
+        let x = analyze(&top, &cluster, problem.evaluator(), &s);
+        let text = render(&x);
+        let b = x.bottleneck.as_ref().unwrap();
+        assert!(text.contains("bottleneck"), "{text}");
+        assert!(text.contains(&format!("'{}'", b.component)), "{text}");
+        assert!(text.contains(&format!("'{}'", b.machine)), "{text}");
+        assert!(text.contains("residual headroom"), "{text}");
+        assert!(text.contains(&format!("candidates evaluated : {}", x.evaluated)), "{text}");
+    }
+
+    #[test]
+    fn to_json_roundtrips_the_key_fields() {
+        let (problem, s, top, cluster) = schedule_linear();
+        let x = analyze(&top, &cluster, problem.evaluator(), &s);
+        let v = to_json(&x);
+        assert_eq!(v.num_field("evaluated").unwrap(), x.evaluated as f64);
+        assert_eq!(v.str_field("policy").unwrap(), x.policy);
+        assert!(v.get("bottleneck").unwrap().str_field("machine").is_ok());
+    }
+
+    #[test]
+    fn timeline_renders_breach_and_replan_rows() {
+        let entries = vec![
+            Entry {
+                seq: 0,
+                event: Event::BreachDetected {
+                    policy: "reactive".into(),
+                    step: 12,
+                    offered: 140.0,
+                    capacity: 120.0,
+                },
+            },
+            Entry {
+                seq: 1,
+                event: Event::Replanned {
+                    policy: "reactive".into(),
+                    step: 12,
+                    cause: "infeasible".into(),
+                    latency_ms: 3.5,
+                },
+            },
+            Entry {
+                seq: 2,
+                event: Event::Replanned {
+                    policy: "oracle".into(),
+                    step: 3,
+                    cause: "oracle".into(),
+                    latency_ms: 1.0,
+                },
+            },
+        ];
+        let text = render_timeline(&entries, "reactive");
+        assert!(text.contains("breach"), "{text}");
+        assert!(text.contains("cause=infeasible"), "{text}");
+        assert!(!text.contains("oracle"), "other policies filtered out: {text}");
+        let empty = render_timeline(&entries, "static");
+        assert!(empty.contains("no breach"), "{empty}");
+    }
+}

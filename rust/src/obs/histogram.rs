@@ -1,0 +1,330 @@
+//! Log-bucketed histogram and RAII span timer.
+//!
+//! The histogram spends one atomic add per observation on a
+//! power-of-two bucket grid: 64 sub-buckets per octave over
+//! `2^-32 .. 2^32` (4096 buckets), giving ~1.1% relative quantile
+//! error across 19 decades — microsecond span timings and
+//! multi-second controller horizons share one layout.  Count, exact
+//! sum and exact min/max ride alongside the buckets, so `mean` and
+//! `max` are exact while `p50/p95/p99` are bucketed.  Everything is
+//! lock-free and mergeable, matching the shard-and-merge shape of the
+//! parallel kernel search.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Sub-buckets per octave (power of two so the index math is exact).
+const SUB: f64 = 64.0;
+/// Octaves below 1.0 covered by the grid.
+const OCTAVES_BELOW: f64 = 32.0;
+/// Total bucket count: 64 octaves x 64 sub-buckets.
+pub const N_BUCKETS: usize = 4096;
+
+/// Lock-free log-bucketed histogram of non-negative `f64` samples.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Exact sum, stored as `f64` bits and updated with a CAS loop.
+    sum_bits: AtomicU64,
+    /// Exact extremes as `f64` bits; valid because non-negative IEEE-754
+    /// doubles order the same as their bit patterns.
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+}
+
+fn bucket_of(v: f64) -> usize {
+    if v <= 0.0 || !v.is_finite() {
+        return if v.is_finite() { 0 } else { N_BUCKETS - 1 };
+    }
+    let idx = (v.log2() + OCTAVES_BELOW) * SUB;
+    (idx.max(0.0) as usize).min(N_BUCKETS - 1)
+}
+
+/// Geometric midpoint of bucket `i` — the representative a quantile
+/// lookup reports before clamping to the observed `[min, max]`.
+fn representative(i: usize) -> f64 {
+    ((i as f64 + 0.5) / SUB - OCTAVES_BELOW).exp2()
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.  Negative samples clamp to bucket zero; the
+    /// exact sum/min/max still see the clamped value so the invariants
+    /// `min <= mean <= max` and `p50 <= max` hold by construction.
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { return };
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.min_bits.fetch_min(v.to_bits(), Ordering::Relaxed);
+        self.max_bits.fetch_max(v.to_bits(), Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Exact mean; 0.0 with no samples.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Exact minimum; 0.0 with no samples.
+    pub fn min(&self) -> f64 {
+        let v = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        if v.is_finite() {
+            v
+        } else {
+            0.0
+        }
+    }
+
+    /// Exact maximum; 0.0 with no samples.
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`) over the bucket grid.
+    /// The bucket's geometric midpoint is clamped to the observed
+    /// `[min, max]`, so quantiles are monotone in `q`, `p100 == max`
+    /// exactly, and every quantile is positive when `min > 0`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return representative(i).clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Fold another histogram into this one (bucket-wise add, exact
+    /// sum/extremes combine).  Used by shard-and-merge consumers.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let v = theirs.load(Ordering::Relaxed);
+            if v > 0 {
+                mine.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        let n = other.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return;
+        }
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.min_bits.fetch_min(other.min_bits.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_bits.fetch_max(other.max_bits.load(Ordering::Relaxed), Ordering::Relaxed);
+        let add = other.sum();
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + add).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// RAII span timer: measures wall time from construction to drop and
+/// observes it (in seconds) into the backing histogram.  A span
+/// started while telemetry is disabled ([`super::enabled`]) is a
+/// no-op, so hot paths pay nothing for the disabled baseline.
+#[derive(Debug)]
+pub struct Span {
+    armed: Option<(Arc<Histogram>, Instant)>,
+}
+
+impl Span {
+    /// Start timing into `hist`, honoring the global telemetry switch.
+    pub fn start(hist: Arc<Histogram>) -> Span {
+        if super::enabled() {
+            Span { armed: Some((hist, Instant::now())) }
+        } else {
+            Span { armed: None }
+        }
+    }
+
+    /// A span that records nothing (explicit no-op).
+    pub fn disabled() -> Span {
+        Span { armed: None }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((hist, started)) = self.armed.take() {
+            hist.observe(started.elapsed().as_secs_f64());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_and_extremes_are_exact() {
+        let h = Histogram::new();
+        for v in [0.010, 0.020, 0.030] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 0.020).abs() < 1e-12);
+        assert_eq!(h.min(), 0.010);
+        assert_eq!(h.max(), 0.030);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bounded() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64 / 1000.0);
+        }
+        let mut last = 0.0;
+        for q in [0.10, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= last, "q{q}: {v} < {last}");
+            assert!(v >= h.min() && v <= h.max(), "q{q} out of range: {v}");
+            last = v;
+        }
+        assert_eq!(h.quantile(1.0), h.max());
+    }
+
+    #[test]
+    fn quantile_relative_error_within_bucket_width() {
+        // 64 sub-buckets per octave -> representative within ~1.1% of
+        // any sample in the bucket
+        let h = Histogram::new();
+        for i in 0..10_000 {
+            h.observe(1e-3 * (1.0 + i as f64 / 10_000.0));
+        }
+        let p50 = h.quantile(0.5);
+        let exact = 1.5e-3;
+        assert!((p50 - exact).abs() / exact < 0.02, "p50 {p50} vs {exact}");
+    }
+
+    #[test]
+    fn negative_and_zero_samples_clamp_to_floor_bucket() {
+        let h = Histogram::new();
+        h.observe(-1.0);
+        h.observe(0.0);
+        h.observe(5.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 5.0);
+        assert!(h.quantile(0.01) >= 0.0);
+    }
+
+    #[test]
+    fn merge_combines_counts_sums_and_extremes() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.observe(1.0);
+        a.observe(2.0);
+        b.observe(0.5);
+        b.observe(8.0);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 4);
+        assert!((a.sum() - 11.5).abs() < 1e-12);
+        assert_eq!(a.min(), 0.5);
+        assert_eq!(a.max(), 8.0);
+        // merging an empty histogram changes nothing
+        a.merge_from(&Histogram::new());
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.min(), 0.5);
+    }
+
+    #[test]
+    fn span_observes_elapsed_seconds_on_drop() {
+        let h = Arc::new(Histogram::new());
+        {
+            let _s = Span::start(h.clone());
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.max() >= 0.0);
+        // a disabled span records nothing
+        {
+            let _s = Span::disabled();
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn concurrent_observers_lose_nothing() {
+        let h = Arc::new(Histogram::new());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let h = h.clone();
+                scope.spawn(move || {
+                    for _ in 0..10_000 {
+                        h.observe(0.25);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 40_000);
+        assert!((h.sum() - 10_000.0).abs() < 1e-6);
+        assert_eq!(h.min(), 0.25);
+        assert_eq!(h.max(), 0.25);
+    }
+}

@@ -1,0 +1,325 @@
+//! Structured event journal: typed decision events in a bounded ring.
+//!
+//! Every layer that makes a decision worth explaining — the kernel
+//! search, the schedulers, the controllers, the event simulator —
+//! records a typed [`Event`].  The journal keeps the last
+//! [`RING_CAPACITY`] events in memory (each stamped with a monotonic
+//! sequence number) and can mirror them to a JSONL file sink.  Events
+//! carry no wall-clock timestamps: identical runs produce identical
+//! journals, which keeps the controller/workload determinism
+//! guarantees intact and makes journal dumps diff cleanly in CI.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Events retained in memory (older events fall off the ring; the
+/// JSONL sink, when attached, keeps everything).
+pub const RING_CAPACITY: usize = 4096;
+
+/// A decision event.  Numeric payloads are plain `f64`/`u64` so
+/// `to_json` is lossless through [`crate::util::json`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A scheduler began searching a design space.
+    SearchStarted { policy: String, components: usize, machines: usize },
+    /// Aggregate of candidates a search discarded (counted locally in
+    /// the DFS leaves, flushed once per search — no hot-path atomics).
+    CandidatePruned { policy: String, count: u64, reason: String },
+    /// A scheduler committed to a placement.
+    ScheduleChosen {
+        policy: String,
+        backend: String,
+        objective: String,
+        rate: f64,
+        evaluated: u64,
+        pruned: u64,
+        wall_ms: f64,
+    },
+    /// A candidate the search considered but did not choose.
+    RunnerUp { policy: String, label: String, rate: f64 },
+    /// Controller: offered load exceeded certified capacity.
+    BreachDetected { policy: String, step: usize, offered: f64, capacity: f64 },
+    /// Controller: a re-plan ran, with its cause and decision latency.
+    Replanned { policy: String, step: usize, cause: String, latency_ms: f64 },
+    /// Workload controller: a tenant admission was rejected.
+    AdmissionDenied { tenant: String, step: usize, reason: String },
+    /// Workload controller: a tenant was admitted.
+    AdmissionGranted { tenant: String, step: usize },
+    /// Event simulator: end-of-run stability verdict.
+    BackpressureVerdict { rate: f64, backpressure: bool, queue_growth: f64, shed: u64 },
+}
+
+impl Event {
+    /// Stable machine-readable discriminator.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::SearchStarted { .. } => "search_started",
+            Event::CandidatePruned { .. } => "candidate_pruned",
+            Event::ScheduleChosen { .. } => "schedule_chosen",
+            Event::RunnerUp { .. } => "runner_up",
+            Event::BreachDetected { .. } => "breach_detected",
+            Event::Replanned { .. } => "replanned",
+            Event::AdmissionDenied { .. } => "admission_denied",
+            Event::AdmissionGranted { .. } => "admission_granted",
+            Event::BackpressureVerdict { .. } => "backpressure_verdict",
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut pairs: Vec<(&str, Value)> = vec![("kind", json::s(self.kind()))];
+        match self {
+            Event::SearchStarted { policy, components, machines } => {
+                pairs.push(("policy", json::s(policy)));
+                pairs.push(("components", json::num(*components as f64)));
+                pairs.push(("machines", json::num(*machines as f64)));
+            }
+            Event::CandidatePruned { policy, count, reason } => {
+                pairs.push(("policy", json::s(policy)));
+                pairs.push(("count", json::num(*count as f64)));
+                pairs.push(("reason", json::s(reason)));
+            }
+            Event::ScheduleChosen {
+                policy,
+                backend,
+                objective,
+                rate,
+                evaluated,
+                pruned,
+                wall_ms,
+            } => {
+                pairs.push(("policy", json::s(policy)));
+                pairs.push(("backend", json::s(backend)));
+                pairs.push(("objective", json::s(objective)));
+                pairs.push(("rate", json::num(*rate)));
+                pairs.push(("evaluated", json::num(*evaluated as f64)));
+                pairs.push(("pruned", json::num(*pruned as f64)));
+                pairs.push(("wall_ms", json::num(*wall_ms)));
+            }
+            Event::RunnerUp { policy, label, rate } => {
+                pairs.push(("policy", json::s(policy)));
+                pairs.push(("label", json::s(label)));
+                pairs.push(("rate", json::num(*rate)));
+            }
+            Event::BreachDetected { policy, step, offered, capacity } => {
+                pairs.push(("policy", json::s(policy)));
+                pairs.push(("step", json::num(*step as f64)));
+                pairs.push(("offered", json::num(*offered)));
+                pairs.push(("capacity", json::num(*capacity)));
+            }
+            Event::Replanned { policy, step, cause, latency_ms } => {
+                pairs.push(("policy", json::s(policy)));
+                pairs.push(("step", json::num(*step as f64)));
+                pairs.push(("cause", json::s(cause)));
+                pairs.push(("latency_ms", json::num(*latency_ms)));
+            }
+            Event::AdmissionDenied { tenant, step, reason } => {
+                pairs.push(("tenant", json::s(tenant)));
+                pairs.push(("step", json::num(*step as f64)));
+                pairs.push(("reason", json::s(reason)));
+            }
+            Event::AdmissionGranted { tenant, step } => {
+                pairs.push(("tenant", json::s(tenant)));
+                pairs.push(("step", json::num(*step as f64)));
+            }
+            Event::BackpressureVerdict { rate, backpressure, queue_growth, shed } => {
+                pairs.push(("rate", json::num(*rate)));
+                pairs.push(("backpressure", json::bool(*backpressure)));
+                pairs.push(("queue_growth", json::num(*queue_growth)));
+                pairs.push(("shed", json::num(*shed as f64)));
+            }
+        }
+        json::obj(pairs)
+    }
+}
+
+/// One retained journal entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    /// Monotonic sequence number (never reused, survives ring eviction).
+    pub seq: u64,
+    pub event: Event,
+}
+
+impl Entry {
+    pub fn to_json(&self) -> Value {
+        let mut obj = match self.event.to_json() {
+            Value::Obj(o) => o,
+            other => {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("event".to_string(), other);
+                o
+            }
+        };
+        obj.insert("seq".to_string(), json::num(self.seq as f64));
+        Value::Obj(obj)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    ring: VecDeque<Entry>,
+    next_seq: u64,
+    sink: Option<File>,
+}
+
+/// Bounded in-memory event journal with an optional JSONL file sink.
+#[derive(Debug, Default)]
+pub struct Journal {
+    inner: Mutex<Inner>,
+}
+
+impl Journal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an event; evicts the oldest entry past [`RING_CAPACITY`]
+    /// and mirrors the event to the JSONL sink when one is attached.
+    pub fn record(&self, event: Event) {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        let entry = Entry { seq, event };
+        if let Some(sink) = inner.sink.as_mut() {
+            // one compact JSON object per line; sink errors must never
+            // take down the instrumented caller
+            let line = json::to_string_compact(&entry.to_json());
+            let _ = writeln!(sink, "{line}");
+        }
+        if inner.ring.len() == RING_CAPACITY {
+            inner.ring.pop_front();
+        }
+        inner.ring.push_back(entry);
+    }
+
+    /// Number of events currently retained (ring occupancy).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever recorded (monotonic, survives eviction).
+    pub fn total_recorded(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Copy of the retained entries, oldest first.
+    pub fn entries(&self) -> Vec<Entry> {
+        self.inner.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// Drop all retained entries (sequence numbers keep advancing).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().ring.clear();
+    }
+
+    /// Attach a JSONL sink; subsequent events are appended to `path`
+    /// as one JSON object per line.
+    pub fn set_sink(&self, path: &Path) -> Result<()> {
+        let file = File::create(path)
+            .map_err(|e| crate::Error::Config(format!("journal sink {}: {e}", path.display())))?;
+        self.inner.lock().unwrap().sink = Some(file);
+        Ok(())
+    }
+
+    /// Retained entries as a JSON array.
+    pub fn to_json(&self) -> Value {
+        Value::Arr(self.entries().iter().map(|e| e.to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chosen(policy: &str, evaluated: u64) -> Event {
+        Event::ScheduleChosen {
+            policy: policy.into(),
+            backend: "native".into(),
+            objective: "max-throughput".into(),
+            rate: 100.0,
+            evaluated,
+            pruned: 3,
+            wall_ms: 1.5,
+        }
+    }
+
+    #[test]
+    fn records_in_order_with_monotonic_seq() {
+        let j = Journal::new();
+        j.record(Event::SearchStarted { policy: "hetero".into(), components: 4, machines: 3 });
+        j.record(chosen("hetero", 42));
+        let entries = j.entries();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].seq, 0);
+        assert_eq!(entries[1].seq, 1);
+        assert_eq!(entries[0].event.kind(), "search_started");
+        assert_eq!(entries[1].event.kind(), "schedule_chosen");
+    }
+
+    #[test]
+    fn ring_evicts_oldest_but_keeps_seq() {
+        let j = Journal::new();
+        for i in 0..(RING_CAPACITY as u64 + 10) {
+            j.record(chosen("optimal", i));
+        }
+        assert_eq!(j.len(), RING_CAPACITY);
+        assert_eq!(j.total_recorded(), RING_CAPACITY as u64 + 10);
+        let first = &j.entries()[0];
+        assert_eq!(first.seq, 10, "oldest 10 entries evicted");
+    }
+
+    #[test]
+    fn event_json_is_typed_and_deterministic() {
+        let e = Event::Replanned {
+            policy: "reactive".into(),
+            step: 7,
+            cause: "band".into(),
+            latency_ms: 2.25,
+        };
+        let v = e.to_json();
+        assert_eq!(v.str_field("kind").unwrap(), "replanned");
+        assert_eq!(v.str_field("cause").unwrap(), "band");
+        assert_eq!(v.num_field("step").unwrap(), 7.0);
+        assert_eq!(v.to_string(), e.to_json().to_string());
+    }
+
+    #[test]
+    fn jsonl_sink_mirrors_every_event() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("hstorm_journal_sink_test.jsonl");
+        let j = Journal::new();
+        j.set_sink(&path).unwrap();
+        let denied =
+            Event::AdmissionDenied { tenant: "t1".into(), step: 3, reason: "capacity".into() };
+        j.record(denied);
+        j.record(Event::AdmissionGranted { tenant: "t2".into(), step: 4 });
+        drop(j);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.str_field("kind").unwrap(), "admission_denied");
+        assert_eq!(first.num_field("seq").unwrap(), 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn clear_keeps_sequence_monotonic() {
+        let j = Journal::new();
+        j.record(chosen("default", 1));
+        j.clear();
+        assert!(j.is_empty());
+        j.record(chosen("default", 2));
+        assert_eq!(j.entries()[0].seq, 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Unified observability: histograms, span timers, a structured event
+//! journal, and the decision-provenance `explain` renderer.
+//!
+//! Everything hangs off the existing [`crate::metrics::Registry`]: the
+//! registry owns named [`Histogram`]s and one [`Journal`] next to its
+//! counters/gauges/means, so engine metrics and scheduler telemetry
+//! share a single snapshot/export path.  The instrumented layers are:
+//!
+//! * the kernel DFS ([`crate::scheduler::optimal`] /
+//!   [`crate::predict::kernel`]) — candidates evaluated, candidates
+//!   pruned, row-table build time, search wall time;
+//! * the schedulers — per-policy timing and runner-up rates;
+//! * the controllers ([`crate::controller`]) — per-step decision
+//!   latency, breach / re-plan / admission events;
+//! * the event simulator ([`crate::simulator::event`]) — queue-depth
+//!   gauges, shed counters, latency histograms.
+//!
+//! Telemetry is side-channel only: nothing recorded here feeds back
+//! into placements, certified rates or report structs, so instrumented
+//! and uninstrumented runs produce identical schedules.  The global
+//! [`set_enabled`] switch turns every instrumentation site into a
+//! no-op, which is how the benches measure telemetry overhead.
+
+pub mod explain;
+pub mod histogram;
+pub mod journal;
+
+pub use histogram::{Histogram, Span};
+pub use journal::{Event, Journal};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use crate::metrics::Registry;
+use crate::util::json::{self, Value};
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// The process-wide registry all instrumentation sites write to.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Is telemetry collection on?  Instrumentation sites check this
+/// before touching histograms or the journal.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip telemetry collection globally (default: on).  The benches use
+/// the off position as the zero-overhead baseline.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Sanitize a dotted metric name into the Prometheus grammar
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`).
+fn prom_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if out.chars().next().map_or(true, |c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Prometheus-style text exposition of a registry snapshot.
+pub fn prometheus_text(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (name, value) in reg.snapshot() {
+        out.push_str(&format!("{} {}\n", prom_name(&name), value));
+    }
+    out
+}
+
+/// JSON snapshot: every metric row plus the retained journal entries.
+pub fn json_snapshot(reg: &Registry) -> Value {
+    let metrics = Value::Obj(
+        reg.snapshot().into_iter().map(|(name, value)| (name, json::num(value))).collect(),
+    );
+    json::obj(vec![("metrics", metrics), ("journal", reg.journal().to_json())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_is_shared() {
+        let c = global().counter("obs.test.shared");
+        c.inc();
+        assert_eq!(global().counter("obs.test.shared").get(), 1);
+    }
+
+    #[test]
+    fn prom_names_are_sanitized() {
+        assert_eq!(prom_name("sched.hetero.wall_s"), "sched_hetero_wall_s");
+        assert_eq!(prom_name("kernel.p50"), "kernel_p50");
+        assert_eq!(prom_name("9lives"), "_9lives");
+    }
+
+    #[test]
+    fn prometheus_text_has_one_line_per_row() {
+        let reg = Registry::new();
+        reg.counter("a.count").add(3);
+        reg.gauge("b.gauge").set(1.5);
+        let text = prometheus_text(&reg);
+        assert!(text.contains("a_count 3\n"), "{text}");
+        assert!(text.contains("b_gauge 1.5\n"), "{text}");
+        assert_eq!(text.lines().count(), reg.snapshot().len());
+    }
+
+    #[test]
+    fn json_snapshot_carries_metrics_and_journal() {
+        let reg = Registry::new();
+        reg.counter("x").inc();
+        reg.journal().record(Event::SearchStarted {
+            policy: "hetero".into(),
+            components: 4,
+            machines: 3,
+        });
+        let snap = json_snapshot(&reg);
+        assert_eq!(snap.get("metrics").unwrap().num_field("x").unwrap(), 1.0);
+        let journal = snap.get("journal").unwrap().as_arr().unwrap();
+        assert_eq!(journal.len(), 1);
+        assert_eq!(journal[0].str_field("kind").unwrap(), "search_started");
+    }
+}

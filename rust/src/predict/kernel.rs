@@ -177,8 +177,18 @@ pub struct RowTable {
 
 impl RowTable {
     /// Build from the enumerated full-width count rows of one component.
+    /// Table construction is the search's fixed setup cost; its wall
+    /// time lands in the `kernel.row_build_s` histogram when telemetry
+    /// is enabled.
     pub fn build(ev: &Evaluator, c: usize, rows: &[Vec<usize>]) -> RowTable {
-        RowTable { rows: rows.iter().map(|r| Row::build(ev, c, r)).collect() }
+        let started = std::time::Instant::now();
+        let table = RowTable { rows: rows.iter().map(|r| Row::build(ev, c, r)).collect() };
+        if crate::obs::enabled() {
+            crate::obs::global()
+                .histogram("kernel.row_build_s")
+                .observe(started.elapsed().as_secs_f64());
+        }
+        table
     }
 }
 

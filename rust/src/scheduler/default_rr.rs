@@ -150,6 +150,13 @@ impl Scheduler for DefaultScheduler {
 
     fn schedule(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule> {
         let started = std::time::Instant::now();
+        if crate::obs::enabled() {
+            crate::obs::global().journal().record(crate::obs::Event::SearchStarted {
+                policy: self.name().into(),
+                components: problem.topology().n_components(),
+                machines: problem.cluster().n_machines(),
+            });
+        }
         let rc = problem.resolve(&req.constraints)?;
         let ev = problem.constrained_evaluator(&rc);
         let (etg, mut evaluated) = self.resolve_etg(problem, req, &rc)?;
@@ -168,6 +175,7 @@ impl Scheduler for DefaultScheduler {
             backend: "native".into(),
             wall: started.elapsed(),
         };
+        crate::scheduler::record_schedule_telemetry(&s, 0);
         Ok(s)
     }
 }

@@ -425,6 +425,13 @@ impl HeteroScheduler {
     ) -> Result<Schedule> {
         let started = Instant::now();
         let mut evaluated = 0u64;
+        if crate::obs::enabled() {
+            crate::obs::global().journal().record(crate::obs::Event::SearchStarted {
+                policy: self.name().into(),
+                components: problem.topology().n_components(),
+                machines: problem.cluster().n_machines(),
+            });
+        }
         let (placement, rate) =
             self.maximize(ev, problem.topology(), problem.cluster(), rc, scorer, &mut evaluated)?;
         let row = scorer.score_one(&placement, rate)?;
@@ -435,6 +442,7 @@ impl HeteroScheduler {
             feasible: row.feasible,
             ir_comp: row.ir_comp,
         };
+        let pre_objective_rate = rate;
         let s = Schedule { placement, rate, eval, provenance: Provenance::default() };
         let mut s = apply_objective(
             ev,
@@ -451,6 +459,14 @@ impl HeteroScheduler {
             backend: scorer.backend().into(),
             wall: started.elapsed(),
         };
+        if crate::obs::enabled() && (pre_objective_rate - s.rate).abs() > 1e-9 {
+            crate::obs::global().journal().record(crate::obs::Event::RunnerUp {
+                policy: self.name().into(),
+                label: "pre-objective".into(),
+                rate: pre_objective_rate,
+            });
+        }
+        crate::scheduler::record_schedule_telemetry(&s, 0);
         Ok(s)
     }
 

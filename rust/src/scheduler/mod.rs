@@ -167,6 +167,38 @@ pub(crate) fn finish(ev: &Evaluator, placement: Placement) -> Result<Schedule> {
     Ok(Schedule { placement, rate, eval, provenance: Provenance::default() })
 }
 
+/// Flush one finished search into the global telemetry layer: the
+/// per-policy wall-time histogram, evaluated/pruned counters and the
+/// `candidate_pruned` / `schedule_chosen` journal events.  Called once
+/// per `schedule()` after provenance is stamped — no hot-path cost, and
+/// a no-op entirely when telemetry is disabled ([`crate::obs`]).
+pub(crate) fn record_schedule_telemetry(s: &Schedule, pruned: u64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let reg = crate::obs::global();
+    let pv = &s.provenance;
+    reg.histogram(&format!("sched.{}.wall_s", pv.policy)).observe(pv.wall.as_secs_f64());
+    reg.counter(&format!("sched.{}.evaluated", pv.policy)).add(pv.placements_evaluated);
+    reg.counter(&format!("sched.{}.pruned", pv.policy)).add(pruned);
+    if pruned > 0 {
+        reg.journal().record(crate::obs::Event::CandidatePruned {
+            policy: pv.policy.clone(),
+            count: pruned,
+            reason: "infeasible".into(),
+        });
+    }
+    reg.journal().record(crate::obs::Event::ScheduleChosen {
+        policy: pv.policy.clone(),
+        backend: pv.backend.clone(),
+        objective: pv.objective.clone(),
+        rate: s.rate,
+        evaluated: pv.placements_evaluated,
+        pruned,
+        wall_ms: pv.wall.as_secs_f64() * 1e3,
+    });
+}
+
 /// Utilization spread (max − min predicted utilization over non-excluded
 /// machines) of `p` at rate `r` — the tie-breaker
 /// [`Objective::BalancedUtilization`] minimizes.
@@ -400,6 +432,53 @@ mod tests {
         let s = finish(ev, pl).unwrap();
         assert!(s.eval.feasible);
         assert!(s.rate > 0.0);
+    }
+
+    #[test]
+    fn absorb_takes_latest_identity_and_accumulates_counters() {
+        let mut acc = Provenance {
+            policy: "hetero".into(),
+            objective: "max-throughput".into(),
+            placements_evaluated: 10,
+            backend: "native".into(),
+            wall: Duration::from_millis(5),
+        };
+        let other = Provenance {
+            policy: "optimal".into(),
+            objective: "balanced-utilization".into(),
+            placements_evaluated: 32,
+            backend: "pjrt".into(),
+            wall: Duration::from_millis(7),
+        };
+        acc.absorb(&other);
+        // identity fields follow the latest run...
+        assert_eq!(acc.policy, "optimal");
+        assert_eq!(acc.objective, "balanced-utilization");
+        assert_eq!(acc.backend, "pjrt");
+        // ...while the counters accumulate across runs
+        assert_eq!(acc.placements_evaluated, 42);
+        assert_eq!(acc.wall, Duration::from_millis(12));
+    }
+
+    #[test]
+    fn absorb_from_default_clears_identity_but_keeps_counters() {
+        // folding in a default provenance still overwrites identity
+        // fields (latest wins, even when "latest" is empty) — callers
+        // aggregating multi-run schedules must absorb stamped
+        // provenance only
+        let mut acc = Provenance {
+            policy: "hetero".into(),
+            objective: "max-throughput".into(),
+            placements_evaluated: 9,
+            backend: "native".into(),
+            wall: Duration::from_millis(3),
+        };
+        acc.absorb(&Provenance::default());
+        assert_eq!(acc.policy, "");
+        assert_eq!(acc.objective, "");
+        assert_eq!(acc.backend, "");
+        assert_eq!(acc.placements_evaluated, 9);
+        assert_eq!(acc.wall, Duration::from_millis(3));
     }
 
     #[test]

@@ -143,12 +143,14 @@ impl KernelCtx<'_> {
 
     /// Fold the candidate currently composed in `acc` into `best` under
     /// the objective.  `make` materializes the placement lazily.
+    /// Returns the candidate's `R0*` so leaves can count infeasible
+    /// (pruned) candidates without re-reading the accumulator.
     fn consider_scored(
         &self,
         acc: &AccumState,
         make: impl FnOnce() -> Placement,
         best: &mut Option<Best>,
-    ) {
+    ) -> f64 {
         let r = acc.rate(&self.ev.cap);
         match self.objective {
             Objective::MaxThroughput => {
@@ -158,7 +160,7 @@ impl KernelCtx<'_> {
             }
             Objective::MinMachinesAtRate(target) => {
                 if r + 1e-9 < *target {
-                    return;
+                    return r;
                 }
                 let used = acc.machines_used();
                 let take = best
@@ -184,29 +186,34 @@ impl KernelCtx<'_> {
                 }
             }
         }
+        r
     }
 
     /// Score a seeded (non-enumerated) placement through the same row
     /// arithmetic and push order as the enumeration, so a seed that ties
-    /// an enumerated twin compares bit-identically.
-    fn consider_seed(&self, p: Placement, best: &mut Option<Best>, evaluated: &mut u64) {
+    /// an enumerated twin compares bit-identically.  Returns the seed's
+    /// `R0*` (journaled as a runner-up candidate).
+    fn consider_seed(&self, p: Placement, best: &mut Option<Best>, evaluated: &mut u64) -> f64 {
         let rows = kernel::rows_of_placement(self.ev, &p);
         let mut acc = AccumState::new(self.ev.n_machines());
         for row in rows.iter().rev() {
             acc.push(row);
         }
         *evaluated += 1;
-        self.consider_scored(&acc, || p, best);
+        self.consider_scored(&acc, || p, best)
     }
 
     /// Enumerate one contiguous slice of the outermost component's rows
     /// (component `C-1`; component 0 varies fastest, matching the
-    /// batched engine's odometer order).
+    /// batched engine's odometer order).  `pruned` counts infeasible
+    /// leaves (`R0* = 0`) — a plain local counter, flushed to the
+    /// telemetry registry once per search, never perturbing `evaluated`.
     fn enum_shard(
         &self,
         outer: std::ops::Range<usize>,
         best: &mut Option<Best>,
         evaluated: &mut u64,
+        pruned: &mut u64,
     ) {
         let n_comp = self.tables.len();
         let mut acc = AccumState::new(self.ev.n_machines());
@@ -216,9 +223,11 @@ impl KernelCtx<'_> {
             acc.push(&self.tables[n_comp - 1].rows[i]);
             if n_comp == 1 {
                 *evaluated += 1;
-                self.consider_scored(&acc, || self.materialize(&sel), best);
+                if self.consider_scored(&acc, || self.materialize(&sel), best) <= 0.0 {
+                    *pruned += 1;
+                }
             } else {
-                self.enum_level(n_comp - 2, &mut acc, &mut sel, best, evaluated);
+                self.enum_level(n_comp - 2, &mut acc, &mut sel, best, evaluated, pruned);
             }
             acc.pop();
         }
@@ -232,15 +241,18 @@ impl KernelCtx<'_> {
         sel: &mut [usize],
         best: &mut Option<Best>,
         evaluated: &mut u64,
+        pruned: &mut u64,
     ) {
         for (i, row) in self.tables[c].rows.iter().enumerate() {
             sel[c] = i;
             acc.push(row);
             if c == 0 {
                 *evaluated += 1;
-                self.consider_scored(acc, || self.materialize(sel), best);
+                if self.consider_scored(acc, || self.materialize(sel), best) <= 0.0 {
+                    *pruned += 1;
+                }
             } else {
-                self.enum_level(c - 1, acc, sel, best, evaluated);
+                self.enum_level(c - 1, acc, sel, best, evaluated, pruned);
             }
             acc.pop();
         }
@@ -467,7 +479,15 @@ impl OptimalScheduler {
         let n_comp = top.n_components();
         let n_m = problem.cluster().n_machines();
         let mut evaluated: u64 = 0;
+        let mut pruned: u64 = 0;
         let mut best: Option<Best> = None;
+        if crate::obs::enabled() {
+            crate::obs::global().journal().record(crate::obs::Event::SearchStarted {
+                policy: self.name().into(),
+                components: n_comp,
+                machines: n_m,
+            });
+        }
 
         let rows: Vec<Vec<Vec<usize>>> =
             (0..n_comp).map(|c| self.component_rows(c, n_m, rc)).collect();
@@ -491,12 +511,24 @@ impl OptimalScheduler {
                 ScheduleRequest::max_throughput().with_constraints(req.constraints.clone());
             if let Ok(h) = HeteroScheduler::default().schedule(problem, &seed_req) {
                 let etg = crate::topology::Etg { counts: h.placement.counts() };
+                let mut seeds: Vec<(&str, f64)> = Vec::new();
                 if let Ok(rr) =
                     DefaultScheduler::assign_constrained(top, problem.cluster(), &etg, rc)
                 {
-                    ctx.consider_seed(rr, &mut best, &mut evaluated);
+                    seeds.push(("seed-rr", ctx.consider_seed(rr, &mut best, &mut evaluated)));
                 }
-                ctx.consider_seed(h.placement, &mut best, &mut evaluated);
+                let hr = ctx.consider_seed(h.placement, &mut best, &mut evaluated);
+                seeds.push(("seed-hetero", hr));
+                if crate::obs::enabled() {
+                    let journal = crate::obs::global().journal();
+                    for (label, rate) in seeds {
+                        journal.record(crate::obs::Event::RunnerUp {
+                            policy: self.name().into(),
+                            label: label.into(),
+                            rate,
+                        });
+                    }
+                }
             }
         }
 
@@ -520,9 +552,9 @@ impl OptimalScheduler {
         };
 
         if threads <= 1 {
-            ctx.enum_shard(0..outer_rows, &mut best, &mut evaluated);
+            ctx.enum_shard(0..outer_rows, &mut best, &mut evaluated, &mut pruned);
         } else {
-            let shards: Vec<(Option<Best>, u64)> = std::thread::scope(|s| {
+            let shards: Vec<(Option<Best>, u64, u64)> = std::thread::scope(|s| {
                 let handles: Vec<_> = shard_ranges(outer_rows, threads)
                     .into_iter()
                     .map(|range| {
@@ -530,8 +562,9 @@ impl OptimalScheduler {
                         s.spawn(move || {
                             let mut b = None;
                             let mut n = 0u64;
-                            ctx.enum_shard(range, &mut b, &mut n);
-                            (b, n)
+                            let mut pr = 0u64;
+                            ctx.enum_shard(range, &mut b, &mut n, &mut pr);
+                            (b, n, pr)
                         })
                     })
                     .collect();
@@ -543,8 +576,9 @@ impl OptimalScheduler {
             // fold shard winners in enumeration order: a later shard only
             // replaces the running best when strictly better, which is
             // exactly the sequential first-wins fold
-            for (shard_best, n) in shards {
+            for (shard_best, n, pr) in shards {
                 evaluated += n;
+                pruned += pr;
                 merge_best(&req.objective, &mut best, shard_best);
             }
         }
@@ -566,6 +600,7 @@ impl OptimalScheduler {
             backend: "kernel".into(),
             wall: started.elapsed(),
         };
+        super::record_schedule_telemetry(&s, pruned);
         Ok(s)
     }
 
@@ -583,18 +618,28 @@ impl OptimalScheduler {
         let n_comp = top.n_components();
         let n_m = problem.cluster().n_machines();
         let mut evaluated: u64 = 0;
+        let mut pruned: u64 = 0;
+        if crate::obs::enabled() {
+            crate::obs::global().journal().record(crate::obs::Event::SearchStarted {
+                policy: self.name().into(),
+                components: n_comp,
+                machines: n_m,
+            });
+        }
 
         let mut best: Option<Best> = None;
         let mut buf: Vec<Placement> = Vec::with_capacity(256);
         let flush = |buf: &mut Vec<Placement>,
                      best: &mut Option<Best>,
-                     evaluated: &mut u64|
+                     evaluated: &mut u64,
+                     pruned: &mut u64|
          -> Result<()> {
             if buf.is_empty() {
                 return Ok(());
             }
             let stars = self.rate_stars(ev, scorer, buf)?;
             *evaluated += buf.len() as u64;
+            *pruned += stars.iter().filter(|r| **r <= 0.0).count() as u64;
             for (p, r) in buf.drain(..).zip(stars) {
                 Self::consider(ev, rc, &req.objective, best, p, r)?;
             }
@@ -616,7 +661,7 @@ impl OptimalScheduler {
                     buf.push(rr);
                 }
                 buf.push(h.placement);
-                flush(&mut buf, &mut best, &mut evaluated)?;
+                flush(&mut buf, &mut best, &mut evaluated, &mut pruned)?;
             }
         }
 
@@ -636,11 +681,11 @@ impl OptimalScheduler {
                 Self::enumerate(&rows, &mut |p| {
                     buf.push(p);
                     if buf.len() == 256 {
-                        flush(&mut buf, &mut best, &mut evaluated)?;
+                        flush(&mut buf, &mut best, &mut evaluated, &mut pruned)?;
                     }
                     Ok(())
                 })?;
-                flush(&mut buf, &mut best, &mut evaluated)?;
+                flush(&mut buf, &mut best, &mut evaluated, &mut pruned)?;
             }
             SearchSpace::Sampled { candidates, seed } => {
                 let mut rng = crate::util::rng::Rng::new(*seed);
@@ -658,10 +703,10 @@ impl OptimalScheduler {
                     }
                     buf.push(p);
                     if buf.len() == 256 {
-                        flush(&mut buf, &mut best, &mut evaluated)?;
+                        flush(&mut buf, &mut best, &mut evaluated, &mut pruned)?;
                     }
                 }
-                flush(&mut buf, &mut best, &mut evaluated)?;
+                flush(&mut buf, &mut best, &mut evaluated, &mut pruned)?;
             }
         }
 
@@ -682,6 +727,7 @@ impl OptimalScheduler {
             backend: scorer.backend().into(),
             wall: started.elapsed(),
         };
+        super::record_schedule_telemetry(&s, pruned);
         Ok(s)
     }
 

@@ -436,18 +436,26 @@ fn growth_verdict(samples: &[(f64, f64)], warmup: f64) -> (f64, bool) {
     (growth, tail_mean > 2.0 * head_mean + 10.0)
 }
 
-/// Latency summary of a sorted sample vector (`None` when empty).
-fn summarize_latency(sorted: &[f64]) -> Option<LatencySummary> {
-    if sorted.is_empty() {
+/// Latency summary of a sample vector (`None` when empty), read off the
+/// observability layer's log-bucketed histogram
+/// ([`crate::obs::Histogram`]): mean and max are exact (tracked outside
+/// the buckets), percentiles are bucketed (~1% relative error, clamped
+/// to the observed range) — no sort, no O(n) copy per quantile.
+fn summarize_latency(samples: &[f64]) -> Option<LatencySummary> {
+    if samples.is_empty() {
         return None;
     }
+    let h = crate::obs::Histogram::new();
+    for &v in samples {
+        h.observe(v);
+    }
     Some(LatencySummary {
-        samples: sorted.len(),
-        mean: stats::mean(sorted),
-        p50: stats::percentile(sorted, 50.0),
-        p95: stats::percentile(sorted, 95.0),
-        p99: stats::percentile(sorted, 99.0),
-        max: *sorted.last().unwrap(),
+        samples: samples.len(),
+        mean: h.mean(),
+        p50: h.quantile(0.50),
+        p95: h.quantile(0.95),
+        p99: h.quantile(0.99),
+        max: h.max(),
     })
 }
 
@@ -643,8 +651,7 @@ pub fn simulate_grouped(
     let weighted_util =
         weighted_utilization(top, problem.cluster(), problem.profiles(), &util)?;
 
-    let mut all_lat: Vec<f64> = sim.lat_comp.iter().flatten().copied().collect();
-    all_lat.sort_by(f64::total_cmp);
+    let all_lat: Vec<f64> = sim.lat_comp.iter().flatten().copied().collect();
     let latency = summarize_latency(&all_lat);
 
     let total_series: Vec<(f64, f64)> =
@@ -652,13 +659,28 @@ pub fn simulate_grouped(
     let (queue_growth, diverging) = growth_verdict(&total_series, cfg.warmup);
     let backpressure = diverging || sim.shed > 0;
 
+    if crate::obs::enabled() {
+        let reg = crate::obs::global();
+        reg.gauge("sim.event.max_queue").set(sim.max_queue as f64);
+        reg.counter("sim.event.shed").add(sim.shed);
+        let h = reg.histogram("sim.event.latency_s");
+        for &v in &all_lat {
+            h.observe(v);
+        }
+        reg.journal().record(crate::obs::Event::BackpressureVerdict {
+            rate,
+            backpressure,
+            queue_growth,
+            shed: sim.shed,
+        });
+    }
+
     // ---- per-group (per-tenant) slices -----------------------------------
     let mut group_reports = Vec::with_capacity(groups.len());
     for g in groups {
         let g_thpt: f64 = g.comps.iter().map(|&c| comp_rate[c]).sum();
-        let mut g_lat: Vec<f64> =
+        let g_lat: Vec<f64> =
             g.comps.iter().flat_map(|&c| sim.lat_comp[c].iter().copied()).collect();
-        g_lat.sort_by(f64::total_cmp);
         let series: Vec<(f64, f64)> = queue_samples
             .iter()
             .zip(&comp_samples)

@@ -1,20 +1,9 @@
-//! Small statistics helpers shared by the simulators: nearest-rank
-//! percentiles over sorted samples and plain means.  Kept tiny and
-//! dependency-free (the usual stats crates are not in the vendor set —
-//! see [`crate::util`]).
-
-/// Nearest-rank percentile of an **ascending-sorted** slice.
-///
-/// `p` is in percent (`50.0` = median); the empty slice returns 0.0 so
-/// callers can render "no samples" rows without special-casing NaN.
-pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let n = sorted.len();
-    let rank = ((p / 100.0) * n as f64).ceil() as usize;
-    sorted[rank.clamp(1, n) - 1]
-}
+//! Small statistics helpers shared by the simulators.  Percentiles
+//! moved to the observability layer's log-bucketed
+//! [`crate::obs::Histogram`] (exact mean/max, mergeable, lock-free);
+//! only the plain mean remains here.  Kept tiny and dependency-free
+//! (the usual stats crates are not in the vendor set — see
+//! [`crate::util`]).
 
 /// Arithmetic mean; 0.0 on the empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -27,36 +16,6 @@ pub fn mean(xs: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn percentile_nearest_rank() {
-        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
-        assert_eq!(percentile(&xs, 50.0), 5.0);
-        assert_eq!(percentile(&xs, 95.0), 10.0);
-        assert_eq!(percentile(&xs, 99.0), 10.0);
-        assert_eq!(percentile(&xs, 10.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 10.0);
-    }
-
-    #[test]
-    fn percentile_extremes_and_empty() {
-        assert_eq!(percentile(&[], 50.0), 0.0);
-        assert_eq!(percentile(&[7.5], 1.0), 7.5);
-        assert_eq!(percentile(&[7.5], 99.0), 7.5);
-        // p = 0 clamps to the first element instead of underflowing
-        assert_eq!(percentile(&[3.0, 4.0], 0.0), 3.0);
-    }
-
-    #[test]
-    fn percentile_is_monotone_in_p() {
-        let xs = [0.5, 1.0, 2.5, 4.0, 9.0];
-        let mut last = f64::NEG_INFINITY;
-        for p in [1.0, 25.0, 50.0, 75.0, 95.0, 99.0] {
-            let v = percentile(&xs, p);
-            assert!(v >= last, "p{p}: {v} < {last}");
-            last = v;
-        }
-    }
 
     #[test]
     fn mean_basics() {

@@ -325,6 +325,42 @@ fn write_value(v: &Value, indent: usize, out: &mut String) {
     }
 }
 
+/// Serialize on one line with no whitespace — the JSONL form used by
+/// the observability journal sink ([`crate::obs::Journal`]).
+pub fn to_string_compact(v: &Value) -> String {
+    let mut s = String::new();
+    write_compact(v, &mut s);
+    s
+}
+
+fn write_compact(v: &Value, out: &mut String) {
+    match v {
+        Value::Null | Value::Bool(_) | Value::Num(_) | Value::Str(_) => write_value(v, 0, out),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, val)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_compact(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
 fn write_string(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {

@@ -1,0 +1,169 @@
+//! Acceptance tests for the observability layer and the `explain`
+//! decision-provenance surface: for every registered policy on the
+//! paper cluster, the explanation names the bottleneck (component,
+//! machine, residual headroom) that determines R0*, and the candidate
+//! counts it reports exactly match the schedule's [`Provenance`] and
+//! the journal's `schedule_chosen` event.
+
+use std::sync::Mutex;
+
+use hstorm::cluster::presets;
+use hstorm::obs;
+use hstorm::obs::explain;
+use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest, Scheduler};
+use hstorm::topology::benchmarks;
+
+/// Tests that read the process-global journal must not interleave.
+static JOURNAL_GATE: Mutex<()> = Mutex::new(());
+
+fn paper_problem() -> Problem {
+    let (cluster, db) = presets::paper_cluster();
+    Problem::new(&benchmarks::linear(), &cluster, &db).unwrap()
+}
+
+fn params() -> PolicyParams {
+    // small search bound keeps the optimal policy fast in debug mode
+    PolicyParams { max_instances_per_component: 2, ..Default::default() }
+}
+
+#[test]
+fn every_policy_explains_its_bottleneck() {
+    let problem = paper_problem();
+    let top = problem.topology().clone();
+    let cluster = problem.cluster().clone();
+    for info in registry::policies() {
+        let sched = registry::create(info.name, &params()).unwrap();
+        let s = sched.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+        let x = explain::analyze(&top, &cluster, problem.evaluator(), &s);
+
+        // candidates evaluated mirror provenance exactly
+        assert_eq!(
+            x.evaluated, s.provenance.placements_evaluated,
+            "{}: explain evaluated != provenance",
+            info.name
+        );
+        assert_eq!(x.policy, info.name);
+
+        // the bottleneck names the machine/component pair capping R0*
+        let b = x.bottleneck.as_ref().unwrap_or_else(|| panic!("{}: no bottleneck", info.name));
+        assert!(
+            cluster.machines.iter().any(|m| m.name == b.machine),
+            "{}: bottleneck machine '{}' not in cluster",
+            info.name,
+            b.machine
+        );
+        assert!(
+            top.components.iter().any(|c| c.name == b.component),
+            "{}: bottleneck component '{}' not in topology",
+            info.name,
+            b.component
+        );
+        assert!(
+            (b.rate_cap - s.rate).abs() < 1e-6,
+            "{}: bottleneck caps at {} but certified rate is {}",
+            info.name,
+            b.rate_cap,
+            s.rate
+        );
+        assert!(b.headroom.abs() < 1e-6, "{}: residual headroom {}", info.name, b.headroom);
+
+        // the rendered text carries the full decision story
+        let text = explain::render(&x);
+        for needle in [b.machine.as_str(), b.component.as_str(), "residual headroom"] {
+            assert!(text.contains(needle), "{}: missing '{needle}' in:\n{text}", info.name);
+        }
+        assert!(
+            text.contains(&format!("candidates evaluated : {}", x.evaluated)),
+            "{}:\n{text}",
+            info.name
+        );
+    }
+}
+
+#[test]
+fn journal_schedule_chosen_matches_provenance() {
+    let _gate = JOURNAL_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let problem = paper_problem();
+    for info in registry::policies() {
+        let sched = registry::create(info.name, &params()).unwrap();
+        let s = sched.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+        // the latest schedule_chosen for this policy is the one just
+        // recorded (other tests' events may precede it in the ring)
+        let entries = obs::global().journal().entries();
+        let chosen = entries
+            .iter()
+            .rev()
+            .find_map(|e| match &e.event {
+                obs::Event::ScheduleChosen { policy, evaluated, rate, .. }
+                    if policy == info.name =>
+                {
+                    Some((*evaluated, *rate))
+                }
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("{}: no schedule_chosen journaled", info.name));
+        assert_eq!(
+            chosen.0, s.provenance.placements_evaluated,
+            "{}: journal evaluated != provenance",
+            info.name
+        );
+        assert!((chosen.1 - s.rate).abs() < 1e-9, "{}: journal rate != schedule", info.name);
+    }
+}
+
+#[test]
+fn disabling_telemetry_changes_nothing_but_the_journal() {
+    let _gate = JOURNAL_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let problem = paper_problem();
+    let sched = registry::create("hetero", &params()).unwrap();
+    let on = sched.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+
+    obs::set_enabled(false);
+    let before = obs::global().journal().total_recorded();
+    let off = sched.schedule(&problem, &ScheduleRequest::max_throughput()).unwrap();
+    let after = obs::global().journal().total_recorded();
+    obs::set_enabled(true);
+
+    assert_eq!(before, after, "disabled telemetry must not journal");
+    assert_eq!(on.placement, off.placement, "telemetry must not change the placement");
+    assert_eq!(on.rate, off.rate, "telemetry must not change the certified rate");
+}
+
+#[test]
+fn explain_cli_names_bottleneck_and_writes_metrics() {
+    let dir = std::env::temp_dir();
+    let metrics_path = dir.join("hstorm_obs_explain_metrics.json");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_hstorm"))
+        .args([
+            "explain",
+            "--topology",
+            "linear",
+            "--max-instances",
+            "2",
+            "--metrics-out",
+            metrics_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn hstorm explain");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for needle in ["bottleneck", "residual headroom", "candidates evaluated"] {
+        assert!(stdout.contains(needle), "missing '{needle}' in:\n{stdout}");
+    }
+    // every registered policy got its own explain block
+    for info in registry::policies() {
+        assert!(stdout.contains(&format!("policy={}", info.name)), "{stdout}");
+    }
+
+    // --metrics-out dumped the telemetry snapshot of that process
+    let text = std::fs::read_to_string(&metrics_path).expect("metrics file written");
+    let v = hstorm::util::json::parse(&text).unwrap();
+    let metrics = v.get("metrics").unwrap();
+    assert!(metrics.num_field("sched.hetero.evaluated").unwrap() > 0.0);
+    let journal = v.get("journal").unwrap().as_arr().unwrap();
+    assert!(
+        journal.iter().any(|e| e.str_field("kind").is_ok_and(|k| k == "schedule_chosen")),
+        "journal missing schedule_chosen events"
+    );
+    let _ = std::fs::remove_file(&metrics_path);
+}
