@@ -1,0 +1,595 @@
+//! Deep invariant verifier over emitted schedules — `hstorm check`.
+//!
+//! Every correctness claim the schedulers make is re-derived here **from
+//! scratch**: utilization and the eq.-5 line `util_m(R0) = a_m·R0 + b_m`
+//! are rebuilt from the raw [`ProfileDb`](crate::cluster::profile::ProfileDb)
+//! entries and the topology's rate gains — not from the cached
+//! [`Evaluator`](crate::predict::Evaluator) tables and not from the
+//! search kernel's accumulators — so a bug in either of those layers
+//! cannot certify its own output.  The recomputation must agree with the
+//! schedule's reported evaluation within [`UTIL_TOL`] (relative).
+//!
+//! Checked invariants (see the crate docs for the full table):
+//!
+//! * every component has at least one instance;
+//! * instance counts respect the request's `max_instances` caps;
+//! * excluded machines host zero instances; pinned components stay on
+//!   their allowed machines;
+//! * per-machine load `a_m·rate + b_m ≤ cap_m − headroom − reserved_m`
+//!   (within [`CAP_TOL`], the evaluator's own feasibility slack);
+//! * the certified rate does not exceed the recomputed closed-form
+//!   maximum `min_m (cap_m − b_m)/a_m`;
+//! * the reported per-machine utilization and `feasible` flag match the
+//!   from-scratch recomputation;
+//! * workload schedules: per-tenant invariants, combined utilization
+//!   within the *unreduced* machine budgets, machine-disjoint placements
+//!   in isolated mode, and the workload scale equal to
+//!   `min_t rate_t / weight_t`;
+//! * determinism: re-running the provenance-named policy reproduces the
+//!   placement and certified rate bit-for-bit ([`validate_replay`]);
+//! * provenance: a matching `schedule_chosen` journal event exists
+//!   ([`validate_journal`]).
+//!
+//! Debug builds run the structural checks after every `schedule()` call
+//! (see `scheduler::debug_validate`); the CLI surface additionally runs
+//! the replay and journal checks.  Negative mutation tests in
+//! `rust/tests/check_invariants.rs` prove each corruption class maps to
+//! its own [`Violation`] variant.
+
+use crate::scheduler::{
+    registry, PolicyParams, Problem, Schedule, ScheduleRequest, TenancyMode, WorkloadProblem,
+    WorkloadSchedule,
+};
+use crate::Result;
+
+/// Relative tolerance for the from-scratch utilization recomputation
+/// agreeing with the schedule's reported evaluation.
+pub const UTIL_TOL: f64 = 1e-9;
+
+/// Absolute slack (percentage points / tuples-per-second) for capacity
+/// and rate-boundary checks — the evaluator's own feasibility slack.
+pub const CAP_TOL: f64 = 1e-6;
+
+/// One invariant violation, with a stable machine-readable code and
+/// enough payload to act on.  Every seeded corruption class in the
+/// mutation tests maps to a distinct variant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// The placement's shape disagrees with the problem's.
+    ShapeMismatch { got: (usize, usize), want: (usize, usize) },
+    /// A component has zero instances.
+    MissingComponent { component: String },
+    /// A component exceeds its `max_instances` cap.
+    InstanceCapExceeded { component: String, count: usize, max: usize },
+    /// An excluded machine hosts instances.
+    ExcludedMachine { machine: String, tasks: usize },
+    /// A pinned component has instances outside its allowed machines.
+    PinViolated { component: String, machine: String, instances: usize },
+    /// Recomputed load exceeds the constrained machine budget.
+    Overutilized { machine: String, util: f64, cap: f64 },
+    /// Reported utilization disagrees with the from-scratch value.
+    UtilMismatch { machine: String, reported: f64, recomputed: f64 },
+    /// The certified rate exceeds the recomputed eq.-5 maximum (or is
+    /// not a finite non-negative number).
+    RateInfeasible { certified: f64, max: f64 },
+    /// The reported `feasible` flag disagrees with the recomputation.
+    FeasibleFlagWrong { reported: bool, recomputed: bool },
+    /// Re-running the provenance-named policy produced a different
+    /// schedule.
+    ReplayDiverged { policy: String, detail: String },
+    /// The provenance does not match the telemetry journal (or names an
+    /// unknown tenant/policy).
+    ProvenanceInconsistent { detail: String },
+    /// Isolated-mode tenants share a machine.
+    TenantOverlap { machine: String, tenants: Vec<String> },
+    /// Combined tenant load exceeds a machine's unreduced budget.
+    CombinedOverutilized { machine: String, util: f64, cap: f64 },
+    /// The workload scale disagrees with `min_t rate_t / weight_t`.
+    ScaleMismatch { reported: f64, recomputed: f64 },
+}
+
+impl Violation {
+    /// Stable diagnostic code, one per corruption class.
+    pub fn code(&self) -> &'static str {
+        match self {
+            Violation::ShapeMismatch { .. } => "shape-mismatch",
+            Violation::MissingComponent { .. } => "missing-component",
+            Violation::InstanceCapExceeded { .. } => "instance-cap-exceeded",
+            Violation::ExcludedMachine { .. } => "excluded-machine",
+            Violation::PinViolated { .. } => "pin-violated",
+            Violation::Overutilized { .. } => "overutilized",
+            Violation::UtilMismatch { .. } => "util-mismatch",
+            Violation::RateInfeasible { .. } => "rate-infeasible",
+            Violation::FeasibleFlagWrong { .. } => "feasible-flag-wrong",
+            Violation::ReplayDiverged { .. } => "replay-diverged",
+            Violation::ProvenanceInconsistent { .. } => "provenance-inconsistent",
+            Violation::TenantOverlap { .. } => "tenant-overlap",
+            Violation::CombinedOverutilized { .. } => "combined-overutilized",
+            Violation::ScaleMismatch { .. } => "scale-mismatch",
+        }
+    }
+
+    /// One-line human rendering: `code: detail`.
+    pub fn render(&self) -> String {
+        match self {
+            Violation::ShapeMismatch { got, want } => format!(
+                "{}: placement is {}x{}, problem is {}x{}",
+                self.code(),
+                got.0,
+                got.1,
+                want.0,
+                want.1
+            ),
+            Violation::MissingComponent { component } => {
+                format!("{}: component '{component}' has zero instances", self.code())
+            }
+            Violation::InstanceCapExceeded { component, count, max } => format!(
+                "{}: component '{component}' has {count} instances (cap {max})",
+                self.code()
+            ),
+            Violation::ExcludedMachine { machine, tasks } => format!(
+                "{}: excluded machine '{machine}' hosts {tasks} instance(s)",
+                self.code()
+            ),
+            Violation::PinViolated { component, machine, instances } => format!(
+                "{}: component '{component}' has {instances} instance(s) on \
+                 disallowed machine '{machine}'",
+                self.code()
+            ),
+            Violation::Overutilized { machine, util, cap } => format!(
+                "{}: machine '{machine}' at {util:.6}% exceeds budget {cap:.6}%",
+                self.code()
+            ),
+            Violation::UtilMismatch { machine, reported, recomputed } => format!(
+                "{}: machine '{machine}' reports {reported:.12}% but recomputes \
+                 to {recomputed:.12}%",
+                self.code()
+            ),
+            Violation::RateInfeasible { certified, max } => format!(
+                "{}: certified rate {certified:.6} exceeds recomputed maximum {max:.6}",
+                self.code()
+            ),
+            Violation::FeasibleFlagWrong { reported, recomputed } => format!(
+                "{}: schedule reports feasible={reported} but recomputes to {recomputed}",
+                self.code()
+            ),
+            Violation::ReplayDiverged { policy, detail } => {
+                format!("{}: policy '{policy}' replay diverged ({detail})", self.code())
+            }
+            Violation::ProvenanceInconsistent { detail } => {
+                format!("{}: {detail}", self.code())
+            }
+            Violation::TenantOverlap { machine, tenants } => format!(
+                "{}: isolated-mode machine '{machine}' shared by tenants [{}]",
+                self.code(),
+                tenants.join(", ")
+            ),
+            Violation::CombinedOverutilized { machine, util, cap } => format!(
+                "{}: combined tenant load on '{machine}' at {util:.6}% exceeds \
+                 cap {cap:.6}%",
+                self.code()
+            ),
+            Violation::ScaleMismatch { reported, recomputed } => format!(
+                "{}: workload scale {reported:.9} != min_t rate_t/weight_t = {recomputed:.9}",
+                self.code()
+            ),
+        }
+    }
+}
+
+/// The outcome of a validation pass: empty means every invariant held.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub violations: Vec<Violation>,
+}
+
+impl Report {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Merge another report's findings into this one.
+    pub fn absorb(&mut self, other: Report) {
+        self.violations.extend(other.violations);
+    }
+
+    /// Multi-line rendering, one violation per line; "ok" when clean.
+    pub fn render(&self) -> String {
+        if self.violations.is_empty() {
+            "ok".to_string()
+        } else {
+            self.violations.iter().map(|v| v.render()).collect::<Vec<_>>().join("\n")
+        }
+    }
+}
+
+/// Per-machine `(a_m, b_m)` of the eq.-5 line `util_m(R0) = a_m·R0 +
+/// b_m`, rebuilt from the raw profile database — deliberately not from
+/// the problem's cached evaluator tables, so the check is independent
+/// of the code path being checked.
+fn eq5_lines(problem: &Problem, placement: &crate::predict::Placement) -> Result<Vec<(f64, f64)>> {
+    let top = problem.topology();
+    let cluster = problem.cluster();
+    let profiles = problem.profiles();
+    let gains = top.rate_gains()?;
+    let counts = placement.counts();
+    let n_m = cluster.n_machines();
+    let mut lines = vec![(0.0f64, 0.0f64); n_m];
+    for (c, comp) in top.components.iter().enumerate() {
+        let n_c = counts[c].max(1) as f64;
+        for (m, mach) in cluster.machines.iter().enumerate() {
+            let k = placement.x[c][m] as f64;
+            if k > 0.0 {
+                let p = profiles.get(&comp.task_type, &cluster.types[mach.type_id].name)?;
+                lines[m].0 += k * p.e * gains[c] / n_c;
+                lines[m].1 += k * p.met;
+            }
+        }
+    }
+    Ok(lines)
+}
+
+/// Validate a single-problem [`Schedule`] against every structural
+/// invariant.  Errors only on malformed inputs (unknown constraint
+/// names, missing profiles); invariant failures land in the report.
+pub fn validate(problem: &Problem, req: &ScheduleRequest, s: &Schedule) -> Result<Report> {
+    let top = problem.topology();
+    let cluster = problem.cluster();
+    let rc = problem.resolve(&req.constraints)?;
+    let n_comp = top.n_components();
+    let n_m = cluster.n_machines();
+    let mut v = Vec::new();
+
+    if s.placement.n_components() != n_comp
+        || s.placement.n_machines() != n_m
+        || s.eval.util.len() != n_m
+    {
+        v.push(Violation::ShapeMismatch {
+            got: (s.placement.n_components(), s.placement.n_machines()),
+            want: (n_comp, n_m),
+        });
+        return Ok(Report { violations: v });
+    }
+
+    // Constrained machine budgets, recomputed the same way
+    // `Problem::constrained_evaluator` derives them.
+    let cap: Vec<f64> = cluster
+        .machines
+        .iter()
+        .enumerate()
+        .map(|(m, mach)| (mach.cap - rc.headroom_pct - rc.reserved[m]).max(0.0))
+        .collect();
+
+    let counts = s.placement.counts();
+    for (c, comp) in top.components.iter().enumerate() {
+        if counts[c] == 0 {
+            v.push(Violation::MissingComponent { component: comp.name.clone() });
+        }
+        if counts[c] > rc.max_instances[c] {
+            v.push(Violation::InstanceCapExceeded {
+                component: comp.name.clone(),
+                count: counts[c],
+                max: rc.max_instances[c],
+            });
+        }
+        for m in 0..n_m {
+            if s.placement.x[c][m] > 0 && !rc.excluded[m] && !rc.allows(c, m) {
+                v.push(Violation::PinViolated {
+                    component: comp.name.clone(),
+                    machine: cluster.machines[m].name.clone(),
+                    instances: s.placement.x[c][m],
+                });
+            }
+        }
+    }
+    for m in 0..n_m {
+        if rc.excluded[m] && s.placement.tasks_on(m) > 0 {
+            v.push(Violation::ExcludedMachine {
+                machine: cluster.machines[m].name.clone(),
+                tasks: s.placement.tasks_on(m),
+            });
+        }
+    }
+
+    if !s.rate.is_finite() || s.rate < 0.0 {
+        v.push(Violation::RateInfeasible { certified: s.rate, max: f64::NAN });
+        return Ok(Report { violations: v });
+    }
+
+    // From-scratch eq.-5 recomputation at the certified rate.
+    let lines = eq5_lines(problem, &s.placement)?;
+    let mut over = false;
+    let mut max_rate = f64::INFINITY;
+    for (m, &(a, b)) in lines.iter().enumerate() {
+        let util = a * s.rate + b;
+        let reported = s.eval.util[m];
+        if (util - reported).abs() > UTIL_TOL * reported.abs().max(1.0) {
+            v.push(Violation::UtilMismatch {
+                machine: cluster.machines[m].name.clone(),
+                reported,
+                recomputed: util,
+            });
+        }
+        if util > cap[m] + CAP_TOL {
+            over = true;
+            v.push(Violation::Overutilized {
+                machine: cluster.machines[m].name.clone(),
+                util,
+                cap: cap[m],
+            });
+        }
+        if b > cap[m] + 1e-9 {
+            max_rate = 0.0;
+        } else if a > 0.0 {
+            max_rate = max_rate.min((cap[m] - b) / a);
+        }
+    }
+    let missing = counts.iter().any(|&n| n == 0);
+    if !missing && max_rate.is_finite() && s.rate > max_rate + CAP_TOL * max_rate.abs().max(1.0) {
+        v.push(Violation::RateInfeasible { certified: s.rate, max: max_rate });
+    }
+    let recomputed_feasible = !over && !missing;
+    if s.eval.feasible != recomputed_feasible {
+        v.push(Violation::FeasibleFlagWrong {
+            reported: s.eval.feasible,
+            recomputed: recomputed_feasible,
+        });
+    }
+    Ok(Report { violations: v })
+}
+
+/// Determinism replay: rebuild the provenance-named policy with the
+/// given params, re-run it on the same problem/request, and require the
+/// identical placement and certified rate (bit-for-bit — the policies
+/// are deterministic by construction).
+pub fn validate_replay(
+    problem: &Problem,
+    req: &ScheduleRequest,
+    s: &Schedule,
+    params: &PolicyParams,
+) -> Result<Report> {
+    let sched = registry::create(&s.provenance.policy, params)?;
+    let replay = sched.schedule(problem, req)?;
+    let mut v = Vec::new();
+    if replay.placement != s.placement {
+        v.push(Violation::ReplayDiverged {
+            policy: s.provenance.policy.clone(),
+            detail: format!(
+                "placements differ ({} vs {} total tasks)",
+                replay.placement.total_tasks(),
+                s.placement.total_tasks()
+            ),
+        });
+    } else if replay.rate.to_bits() != s.rate.to_bits() {
+        v.push(Violation::ReplayDiverged {
+            policy: s.provenance.policy.clone(),
+            detail: format!("rate {:.9} vs {:.9}", replay.rate, s.rate),
+        });
+    }
+    Ok(Report { violations: v })
+}
+
+/// Provenance-vs-journal consistency: the global journal must retain a
+/// `schedule_chosen` event matching this schedule's policy, evaluated
+/// count and certified rate.  A no-op report when telemetry is disabled
+/// (nothing was recorded to cross-check).
+pub fn validate_journal(s: &Schedule) -> Report {
+    if !crate::obs::enabled() {
+        return Report::default();
+    }
+    let entries = crate::obs::global().journal().entries();
+    let matched = entries.iter().rev().any(|e| match &e.event {
+        crate::obs::Event::ScheduleChosen { policy, evaluated, rate, .. } => {
+            *policy == s.provenance.policy
+                && *evaluated == s.provenance.placements_evaluated
+                && (*rate - s.rate).abs() <= UTIL_TOL * s.rate.abs().max(1.0)
+        }
+        _ => false,
+    });
+    let mut v = Vec::new();
+    if !matched {
+        v.push(Violation::ProvenanceInconsistent {
+            detail: format!(
+                "no schedule_chosen journal event matches policy '{}' \
+                 (evaluated {}, rate {:.3})",
+                s.provenance.policy, s.provenance.placements_evaluated, s.rate
+            ),
+        });
+    }
+    Report { violations: v }
+}
+
+/// Validate a [`WorkloadSchedule`]: per-tenant structural invariants,
+/// combined utilization within the shared cluster's unreduced budgets,
+/// machine-disjoint tenants in isolated mode, and the workload scale
+/// identity `scale = min_t rate_t / weight_t`.
+pub fn validate_workload(wp: &WorkloadProblem, ws: &WorkloadSchedule) -> Result<Report> {
+    let cluster = wp.cluster();
+    let n_m = cluster.n_machines();
+    let mut v = Vec::new();
+    let mut combined = vec![0.0f64; n_m];
+    let mut owners: Vec<Vec<String>> = vec![Vec::new(); n_m];
+    let mut scale = f64::INFINITY;
+    let mut all_feasible = true;
+
+    for ts in &ws.tenants {
+        let Some(tp) = wp.tenant(&ts.tenant) else {
+            v.push(Violation::ProvenanceInconsistent {
+                detail: format!("schedule names unknown tenant '{}'", ts.tenant),
+            });
+            continue;
+        };
+        all_feasible &= ts.schedule.eval.feasible;
+        if ts.weight > 0.0 {
+            scale = scale.min(ts.schedule.rate / ts.weight);
+        }
+        let denied = ws.denied.iter().any(|d| d == &ts.tenant);
+        if denied && ts.schedule.placement.total_tasks() == 0 {
+            continue; // a denied tenant's empty placement carries no load
+        }
+        // Per-tenant structural check against an unconstrained request:
+        // tenant loads must fit even the unreduced budgets, and the
+        // reported per-tenant evaluation must recompute exactly.  The
+        // feasible flag is mode-dependent (incremental tenants evaluate
+        // under reduced caps), so it is aggregated above instead.
+        let mut sub = validate(&tp.problem, &ScheduleRequest::max_throughput(), &ts.schedule)?;
+        sub.violations.retain(|x| !matches!(x, Violation::FeasibleFlagWrong { .. }));
+        v.extend(sub.violations);
+        let lines = eq5_lines(&tp.problem, &ts.schedule.placement)?;
+        for (m, &(a, b)) in lines.iter().enumerate() {
+            combined[m] += a * ts.schedule.rate + b;
+            if ts.schedule.placement.tasks_on(m) > 0 {
+                owners[m].push(ts.tenant.clone());
+            }
+        }
+    }
+
+    for m in 0..n_m {
+        let reported = ws.util[m];
+        if (combined[m] - reported).abs() > UTIL_TOL * reported.abs().max(1.0) {
+            v.push(Violation::UtilMismatch {
+                machine: cluster.machines[m].name.clone(),
+                reported,
+                recomputed: combined[m],
+            });
+        }
+        if combined[m] > cluster.machines[m].cap + CAP_TOL {
+            v.push(Violation::CombinedOverutilized {
+                machine: cluster.machines[m].name.clone(),
+                util: combined[m],
+                cap: cluster.machines[m].cap,
+            });
+        }
+        if matches!(ws.mode, TenancyMode::Isolated) && owners[m].len() > 1 {
+            v.push(Violation::TenantOverlap {
+                machine: cluster.machines[m].name.clone(),
+                tenants: owners[m].clone(),
+            });
+        }
+    }
+
+    let recomputed_scale = if scale.is_finite() { scale.max(0.0) } else { 0.0 };
+    if (ws.scale - recomputed_scale).abs() > UTIL_TOL * recomputed_scale.abs().max(1.0) {
+        v.push(Violation::ScaleMismatch { reported: ws.scale, recomputed: recomputed_scale });
+    }
+    let over = (0..n_m).any(|m| combined[m] > cluster.machines[m].cap + CAP_TOL);
+    let recomputed_feasible = !over && all_feasible && !ws.tenants.is_empty();
+    if ws.feasible != recomputed_feasible {
+        v.push(Violation::FeasibleFlagWrong {
+            reported: ws.feasible,
+            recomputed: recomputed_feasible,
+        });
+    }
+    Ok(Report { violations: v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::scheduler::Constraints;
+    use crate::topology::benchmarks;
+
+    fn problem() -> Problem {
+        let (cluster, db) = presets::paper_cluster();
+        Problem::new(&benchmarks::linear(), &cluster, &db).unwrap()
+    }
+
+    fn scheduled(req: &ScheduleRequest) -> (Problem, Schedule) {
+        let p = problem();
+        let s = registry::create("hetero", &PolicyParams::default())
+            .unwrap()
+            .schedule(&p, req)
+            .unwrap();
+        (p, s)
+    }
+
+    #[test]
+    fn clean_schedule_passes() {
+        let req = ScheduleRequest::max_throughput();
+        let (p, s) = scheduled(&req);
+        let report = validate(&p, &req, &s).unwrap();
+        assert!(report.passed(), "{}", report.render());
+        assert_eq!(report.render(), "ok");
+    }
+
+    #[test]
+    fn constrained_schedule_passes() {
+        let req = ScheduleRequest::max_throughput().with_constraints(
+            Constraints::new()
+                .exclude_machine("i3-0")
+                .pin_component("spout", ["i5-0"])
+                .reserve_headroom(10.0)
+                .reserve_machine_load("pentium-0", 5.0),
+        );
+        let (p, s) = scheduled(&req);
+        let report = validate(&p, &req, &s).unwrap();
+        assert!(report.passed(), "{}", report.render());
+    }
+
+    #[test]
+    fn overfilled_machine_is_flagged() {
+        let req = ScheduleRequest::max_throughput();
+        let (p, mut s) = scheduled(&req);
+        // inflate the certified rate far past the eq.-5 boundary but keep
+        // the reported eval consistent, isolating the capacity violation
+        s.rate *= 10.0;
+        s.eval = p.evaluator().evaluate(&s.placement, s.rate).unwrap();
+        let report = validate(&p, &req, &s).unwrap();
+        let codes: Vec<&str> = report.violations.iter().map(|x| x.code()).collect();
+        assert!(codes.contains(&"overutilized"), "{codes:?}");
+        assert!(codes.contains(&"rate-infeasible"), "{codes:?}");
+    }
+
+    #[test]
+    fn dropped_component_is_flagged() {
+        let req = ScheduleRequest::max_throughput();
+        let (p, mut s) = scheduled(&req);
+        for m in 0..s.placement.n_machines() {
+            s.placement.x[0][m] = 0;
+        }
+        let report = validate(&p, &req, &s).unwrap();
+        assert!(
+            report.violations.iter().any(|x| x.code() == "missing-component"),
+            "{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn tampered_util_is_flagged() {
+        let req = ScheduleRequest::max_throughput();
+        let (p, mut s) = scheduled(&req);
+        s.eval.util[0] += 1.0;
+        let report = validate(&p, &req, &s).unwrap();
+        assert!(
+            report.violations.iter().any(|x| x.code() == "util-mismatch"),
+            "{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn replay_reproduces_and_detects_divergence() {
+        let req = ScheduleRequest::max_throughput();
+        let (p, s) = scheduled(&req);
+        let params = PolicyParams::default();
+        assert!(validate_replay(&p, &req, &s, &params).unwrap().passed());
+        let mut tampered = s.clone();
+        tampered.rate += 1.0;
+        let report = validate_replay(&p, &req, &tampered, &params).unwrap();
+        assert!(report.violations.iter().any(|x| x.code() == "replay-diverged"));
+    }
+
+    #[test]
+    fn journal_check_matches_recorded_schedule() {
+        let req = ScheduleRequest::max_throughput();
+        let (_, s) = scheduled(&req);
+        if crate::obs::enabled() {
+            assert!(validate_journal(&s).passed());
+        }
+        let mut ghost = s;
+        ghost.provenance.policy = "never-ran".into();
+        assert!(!validate_journal(&ghost).passed());
+    }
+}

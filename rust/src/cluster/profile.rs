@@ -13,7 +13,7 @@
 //! one worker at `(100 - MET) / 0.1915 ≈ 500` tuples/s — consistent with
 //! the paper's Fig. 6 rate axis.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::{Error, Result};
 
@@ -27,9 +27,11 @@ pub struct TaskProfile {
 }
 
 /// `(task_type, machine_type) -> TaskProfile` with helpful errors.
+/// Ordered maps: `task_types` and coverage errors iterate the entries,
+/// so their output order must not depend on hasher state.
 #[derive(Debug, Clone, Default)]
 pub struct ProfileDb {
-    entries: HashMap<String, HashMap<String, TaskProfile>>,
+    entries: BTreeMap<String, BTreeMap<String, TaskProfile>>,
 }
 
 impl ProfileDb {

@@ -70,7 +70,7 @@ pub mod report;
 pub mod traces;
 pub mod workload;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::{Cluster, Machine};
@@ -244,7 +244,7 @@ impl NamedPlacement {
 
     /// Align to `cluster`'s current machine list by name.
     fn project(&self, cluster: &Cluster) -> Placement {
-        let idx: HashMap<&str, usize> =
+        let idx: BTreeMap<&str, usize> =
             self.machines.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
         let mut p = Placement::empty(self.x.len(), cluster.n_machines());
         for (m, mach) in cluster.machines.iter().enumerate() {
@@ -297,7 +297,7 @@ impl CapacityCache {
 /// Task instances newly started or moved going from `old` to `new`
 /// (per component, per machine name: `max(0, new - old)` summed).
 fn migrated_tasks(old: &NamedPlacement, new: &NamedPlacement) -> usize {
-    let old_idx: HashMap<&str, usize> =
+    let old_idx: BTreeMap<&str, usize> =
         old.machines.iter().enumerate().map(|(i, n)| (n.as_str(), i)).collect();
     let mut moved = 0usize;
     for (c, row) in new.x.iter().enumerate() {

@@ -288,8 +288,8 @@ pub fn run_workload(
     // and the merged problem only depend on the tenant set, so each set
     // (day zero, post-admission, post-drain, ...) is built exactly once
     // across the whole run
-    let mut subproblems: std::collections::HashMap<Vec<usize>, WorkloadProblem> =
-        std::collections::HashMap::new();
+    let mut subproblems: std::collections::BTreeMap<Vec<usize>, WorkloadProblem> =
+        std::collections::BTreeMap::new();
 
     // day zero: co-plan everyone present at t=0 jointly (fair weighted
     // shares); when the joint bound is exceeded the step-0 admission

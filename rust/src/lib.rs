@@ -167,7 +167,33 @@
 //! bottleneck chain (which component capped `R0*` on which machine,
 //! per-machine headroom breakdown — [`obs::explain`]) plus, for
 //! controller runs, the breach → re-plan timeline with latencies.
+//!
+//! ## Correctness & analysis
+//!
+//! The [`check`] module re-derives every schedule invariant **from
+//! scratch** (raw profile-db lookups, not the cached evaluator or the
+//! kernel accumulators) and is wired in three ways: `hstorm check` on
+//! the CLI, a debug-build hook after every `schedule()` call, and the
+//! mutation/property suite in `rust/tests/check_invariants.rs`.  The
+//! verified invariants:
+//!
+//! | invariant                 | statement                                                  |
+//! |---------------------------|------------------------------------------------------------|
+//! | component presence        | every component has ≥ 1 instance                           |
+//! | instance caps             | `count_c ≤ max_instances_c`                                |
+//! | exclusions                | excluded machines host zero instances                      |
+//! | pins                      | pinned components stay on their allowed machines           |
+//! | capacity                  | `a_m·rate + b_m ≤ cap_m − headroom − reserved_m` (+1e-6)   |
+//! | rate boundary             | `rate ≤ min_m (cap_m − b_m)/a_m`                           |
+//! | utilization agreement     | reported util == from-scratch recomputation (1e-9 rel.)    |
+//! | feasibility flag          | `eval.feasible` matches the recomputation                  |
+//! | tenant disjointness       | isolated-mode tenants never share a machine                |
+//! | combined capacity         | Σ tenant loads fit the unreduced machine budgets           |
+//! | workload scale            | `scale == min_t rate_t / weight_t`                         |
+//! | determinism               | replaying the provenance-named policy is bit-identical     |
+//! | provenance                | a matching `schedule_chosen` journal event exists          |
 
+pub mod check;
 pub mod cluster;
 pub mod config;
 pub mod controller;

@@ -10,6 +10,7 @@
 //! hstorm control  --trace diurnal --scenario 2 [--policy reactive] [--steps 600]
 //! hstorm explain  --topology linear [--scheduler hetero] [--trace diurnal]
 //! hstorm metrics  [--topology linear] [--format prom|json]
+//! hstorm check    [--topology linear|all] [--scheduler hetero|all] [--workload w.json]
 //! hstorm profile  [--task highCompute] [--machine pentium]
 //! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
 //!                  |sched-perf|all>  [--fast] [--json out.json]
@@ -59,6 +60,9 @@ commands:
             [--objective ...] [--exclude ...] [--json out.json]
             | --trace constant|diurnal|ramp|bursty [--steps N] [--seed N]
   metrics   [--topology T] [--scenario 1..3] [--scheduler NAME] [--format prom|json]
+  check     [--topology T|all] [--scenario 1..3] [--scheduler NAME|all]
+            [--objective ...] [--exclude ...] [--headroom PCT]
+            | --workload w.json [--tenancy joint|incremental|isolated|all]
   profile   [--task highCompute] [--machine pentium]
   bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
             |sched-perf|tenancy|all  [--fast] [--json out.json]
@@ -107,6 +111,20 @@ scoring vs the incremental row-table kernel, single- and multi-threaded)
 over the exhaustive seed scenarios and writes BENCH_sched.json —
 candidates/s and wall time per scenario — next to the rendered table.
 
+check re-derives every invariant of a schedule from scratch — raw
+profile lookups, not the cached evaluator — and verifies: every
+component placed, instance caps, exclusions and pins honored, per-
+machine load a*R0+b within capacity (headroom/reservations included),
+reported utilization matching the recomputation to 1e-9, the certified
+rate at most the recomputed bound, a bit-identical determinism replay
+of the provenance-named policy, and provenance consistency against the
+telemetry journal.  Defaults sweep every benchmark topology x every
+registered policy; --workload validates a multi-tenant schedule instead
+(tenant disjointness in isolated mode, combined capacity, scale =
+min rate/weight).  Exit status is nonzero on any violation, so it
+doubles as a CI smoke gate.  The same verifier runs automatically after
+every schedule() call in debug builds.
+
 explain reconstructs the decision story of a schedule from the eq.-5
 model: which component capped R0* on which machine, residual headroom
 per machine, candidates evaluated vs pruned.  With --trace it replays
@@ -139,6 +157,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "control" => cmd_control(&args),
         "explain" => cmd_explain(&args),
         "metrics" => cmd_metrics(&args),
+        "check" => cmd_check(&args),
         "profile" => cmd_profile(&args),
         "bench" => cmd_bench(&args),
         "config" => cmd_config(&args),
@@ -654,6 +673,104 @@ fn cmd_control(args: &Args) -> Result<()> {
         std::fs::write(path, json::to_string_pretty(&report.to_json()))?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Validate a multi-tenant workload schedule (per mode) from scratch.
+fn cmd_check_workload(args: &Args, path: &str) -> Result<()> {
+    use hstorm::scheduler::TenancyMode;
+    let (_, wp) = load_workload(args, path)?;
+    let mode_arg = args.get_or("tenancy", "all");
+    let modes: Vec<TenancyMode> = if mode_arg == "all" {
+        TenancyMode::ALL.to_vec()
+    } else {
+        vec![TenancyMode::by_name(mode_arg).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown --tenancy '{mode_arg}' (valid: joint|incremental|isolated|all)"
+            ))
+        })?]
+    };
+    let sched = resolve::policy(args.get_or("scheduler", "hetero"), &params_from_args(args)?)?;
+    let req = request_from_args(args)?;
+    let mut failed = 0usize;
+    for mode in &modes {
+        let ws = match mode {
+            TenancyMode::Joint => wp.schedule_joint(sched.as_ref(), &req)?,
+            TenancyMode::Incremental => wp.schedule_incremental(sched.as_ref(), &req)?,
+            TenancyMode::Isolated => wp.schedule_isolated(sched.as_ref(), &req)?,
+        };
+        let report = hstorm::check::validate_workload(&wp, &ws)?;
+        let verdict = if report.passed() { "ok" } else { "FAIL" };
+        println!(
+            "check workload '{}' mode {:<12} scale {:>8.1}  {verdict}",
+            wp.workload().name,
+            ws.mode.name(),
+            ws.scale
+        );
+        if !report.passed() {
+            println!("{}", report.render());
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        return Err(Error::Schedule(format!(
+            "check: {failed}/{} workload mode(s) violated invariants",
+            modes.len()
+        )));
+    }
+    println!("check: {} workload mode(s) clean", modes.len());
+    Ok(())
+}
+
+/// Re-derive and verify every schedule invariant from scratch
+/// ([`hstorm::check`]): structural validation, a bit-identical
+/// determinism replay, and journal/provenance consistency, over each
+/// requested topology x policy combination.
+fn cmd_check(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("workload") {
+        return cmd_check_workload(args, path);
+    }
+    let topo_arg = args.get_or("topology", "all");
+    let topologies: Vec<&str> = if topo_arg == "all" {
+        hstorm::topology::benchmarks::NAMES.to_vec()
+    } else {
+        vec![topo_arg]
+    };
+    let sched_arg = args.get_or("scheduler", "all");
+    let policies: Vec<&str> = if sched_arg == "all" {
+        registry::policies().iter().map(|i| i.name).collect()
+    } else {
+        vec![sched_arg]
+    };
+    let (cluster, db) = resolve::cluster(args.get("scenario"))?;
+    let req = request_from_args(args)?;
+    let params = params_from_args(args)?;
+    let mut failed = 0usize;
+    let mut combos = 0usize;
+    for tname in &topologies {
+        let top = resolve::topology(tname)?;
+        let problem = build_problem(args, &top, &cluster, &db)?;
+        for pname in &policies {
+            combos += 1;
+            let sched = resolve::policy(pname, &params)?;
+            let s = sched.schedule(&problem, &req)?;
+            let mut report = hstorm::check::validate(&problem, &req, &s)?;
+            report.absorb(hstorm::check::validate_replay(&problem, &req, &s, &params)?);
+            report.absorb(hstorm::check::validate_journal(&s));
+            let verdict = if report.passed() { "ok" } else { "FAIL" };
+            println!("check {tname:<16} {pname:<10} rate {:>10.1}  {verdict}", s.rate);
+            if !report.passed() {
+                println!("{}", report.render());
+                failed += 1;
+            }
+        }
+    }
+    if failed > 0 {
+        return Err(Error::Schedule(format!(
+            "check: {failed}/{combos} schedule(s) violated invariants"
+        )));
+    }
+    println!("check: {combos} schedule(s) clean (validate + replay + journal)");
     Ok(())
 }
 

@@ -1,0 +1,75 @@
+//! The [`MeanStat`] core: its atomics and reset gate imported through
+//! `super::sync_shim`, so the identical source file compiles against
+//! `std::sync` here and against `loom::sync` inside the `tools/loom`
+//! model-checking crate (which re-includes this file by `#[path]`).
+//! Keep this file free of `crate::`/`std::sync` paths — the registry
+//! plumbing and the unit tests live in the parent module.
+
+use super::sync_shim::{AtomicU64, Ordering, RwLock};
+
+/// Accumulates (sum, count) pairs for mean statistics, e.g. per-tuple
+/// service time — the engine-side `e_ij` measurement.
+///
+/// `sum_ns` and `count` live in two atomics, so a bare two-store
+/// `reset` could interleave with a concurrent `observe` (sum cleared,
+/// then the observation's add lands, then count cleared — the next
+/// mean is skewed by a half-applied sample).  A `RwLock<()>` keeps the
+/// pairs coherent: observers and readers share the read side (two
+/// relaxed atomic ops under an uncontended read lock), `reset` takes
+/// the write side and clears both fields with no observer in flight.
+#[derive(Debug)]
+pub struct MeanStat {
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+    reset_gate: RwLock<()>,
+}
+
+impl Default for MeanStat {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MeanStat {
+    pub fn new() -> Self {
+        MeanStat {
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            reset_gate: RwLock::new(()),
+        }
+    }
+
+    /// Record one observation in seconds.  Accumulated in nanoseconds,
+    /// rounded to nearest: the old micro-unit truncation dropped
+    /// sub-microsecond observations entirely while still incrementing
+    /// `count`, biasing the measured mean (the engine-side `e_ij`)
+    /// downward.
+    pub fn observe(&self, seconds: f64) {
+        let _gate = self.reset_gate.read().unwrap();
+        self.sum_ns.fetch_add((seconds * 1e9).round() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in seconds, or `None` with no observations.
+    pub fn mean(&self) -> Option<f64> {
+        let _gate = self.reset_gate.read().unwrap();
+        let n = self.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return None;
+        }
+        Some(self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64)
+    }
+
+    /// Clear both accumulators coherently: no concurrent `observe` can
+    /// land between the two stores (regression-tested in the parent
+    /// module, model-checked exhaustively under `tools/loom`).
+    pub fn reset(&self) {
+        let _gate = self.reset_gate.write().unwrap();
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}

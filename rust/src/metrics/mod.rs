@@ -9,11 +9,14 @@
 //! engine counters and scheduler/controller telemetry share one
 //! snapshot/export path.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Arc;
+mod meanstat_core;
+pub(crate) mod sync_shim;
 
-use std::sync::RwLock;
+pub use meanstat_core::MeanStat;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::obs::{Histogram, Journal};
 
@@ -49,65 +52,18 @@ impl Gauge {
     }
 }
 
-/// Accumulates (sum, count) pairs for mean statistics, e.g. per-tuple
-/// service time — the engine-side `e_ij` measurement.
+/// Named metric registry shared across engine actors.  The maps are
+/// `BTreeMap`s, not `HashMap`s: iteration order feeds [`snapshot`]
+/// (and through it every serialized export), and ordered maps keep
+/// that deterministic by construction rather than by a trailing sort.
 ///
-/// `sum_ns` and `count` live in two atomics, so a bare two-store
-/// `reset` could interleave with a concurrent `observe` (sum cleared,
-/// then the observation's add lands, then count cleared — the next
-/// mean is skewed by a half-applied sample).  A `RwLock<()>` keeps the
-/// pairs coherent: observers and readers share the read side (two
-/// relaxed atomic ops under an uncontended read lock), `reset` takes
-/// the write side and clears both fields with no observer in flight.
-#[derive(Debug, Default)]
-pub struct MeanStat {
-    sum_ns: AtomicU64,
-    count: AtomicU64,
-    reset_gate: RwLock<()>,
-}
-
-impl MeanStat {
-    /// Record one observation in seconds.  Accumulated in nanoseconds,
-    /// rounded to nearest: the old micro-unit truncation dropped
-    /// sub-microsecond observations entirely while still incrementing
-    /// `count`, biasing the measured mean (the engine-side `e_ij`)
-    /// downward.
-    pub fn observe(&self, seconds: f64) {
-        let _gate = self.reset_gate.read().unwrap();
-        self.sum_ns.fetch_add((seconds * 1e9).round() as u64, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    /// Mean in seconds, or `None` with no observations.
-    pub fn mean(&self) -> Option<f64> {
-        let _gate = self.reset_gate.read().unwrap();
-        let n = self.count.load(Ordering::Relaxed);
-        if n == 0 {
-            return None;
-        }
-        Some(self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64)
-    }
-
-    /// Clear both accumulators coherently: no concurrent `observe` can
-    /// land between the two stores (regression-tested below).
-    pub fn reset(&self) {
-        let _gate = self.reset_gate.write().unwrap();
-        self.sum_ns.store(0, Ordering::Relaxed);
-        self.count.store(0, Ordering::Relaxed);
-    }
-}
-
-/// Named metric registry shared across engine actors.
+/// [`snapshot`]: Registry::snapshot
 #[derive(Debug, Default, Clone)]
 pub struct Registry {
-    counters: Arc<RwLock<HashMap<String, Arc<Counter>>>>,
-    gauges: Arc<RwLock<HashMap<String, Arc<Gauge>>>>,
-    means: Arc<RwLock<HashMap<String, Arc<MeanStat>>>>,
-    hists: Arc<RwLock<HashMap<String, Arc<Histogram>>>>,
+    counters: Arc<RwLock<BTreeMap<String, Arc<Counter>>>>,
+    gauges: Arc<RwLock<BTreeMap<String, Arc<Gauge>>>>,
+    means: Arc<RwLock<BTreeMap<String, Arc<MeanStat>>>>,
+    hists: Arc<RwLock<BTreeMap<String, Arc<Histogram>>>>,
     journal: Arc<Journal>,
 }
 

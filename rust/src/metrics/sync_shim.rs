@@ -1,0 +1,11 @@
+//! Swappable synchronization primitives for the `metrics` atomic cores.
+//!
+//! [`super::meanstat_core`] imports its atomics and lock from
+//! `super::sync_shim` instead of `std::sync` directly, so the identical
+//! source file can be re-included by the out-of-workspace `tools/loom`
+//! crate under a loom-backed shim and model-checked without a
+//! `cfg(loom)` dependency in this crate's manifest or lockfile.  In the
+//! production build this module is a zero-cost re-export of `std`.
+
+pub use std::sync::atomic::{AtomicU64, Ordering};
+pub use std::sync::RwLock;

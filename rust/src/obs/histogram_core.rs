@@ -1,0 +1,193 @@
+//! The lock-free histogram core: every atomic operation of
+//! [`Histogram`], with its sync primitives imported through
+//! `super::sync_shim` so the identical source file compiles against
+//! `std::sync::atomic` here and against `loom::sync::atomic` inside the
+//! `tools/loom` model-checking crate (which re-includes this file by
+//! `#[path]`).  Keep this file free of `crate::`/`std::sync` paths and
+//! of anything but the histogram itself — the RAII [`super::Span`]
+//! timer and the unit tests live in [`super::histogram`].
+//!
+//! Min/max tracking uses explicit compare-exchange loops
+//! ([`atomic_min`]/[`atomic_max`]) rather than `fetch_min`/`fetch_max`
+//! so the core sticks to the primitive op set loom models.
+
+use super::sync_shim::{AtomicU64, Ordering};
+
+/// Sub-buckets per octave (power of two so the index math is exact).
+const SUB: f64 = 64.0;
+/// Octaves below 1.0 covered by the grid.
+const OCTAVES_BELOW: f64 = 32.0;
+/// Total bucket count: 64 octaves x 64 sub-buckets.
+pub const N_BUCKETS: usize = 4096;
+
+/// Lock-free log-bucketed histogram of non-negative `f64` samples.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Exact sum, stored as `f64` bits and updated with a CAS loop.
+    sum_bits: AtomicU64,
+    /// Exact extremes as `f64` bits; valid because non-negative IEEE-754
+    /// doubles order the same as their bit patterns.
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::with_buckets(N_BUCKETS)
+    }
+}
+
+fn bucket_of(v: f64) -> usize {
+    if v <= 0.0 || !v.is_finite() {
+        return if v.is_finite() { 0 } else { N_BUCKETS - 1 };
+    }
+    let idx = (v.log2() + OCTAVES_BELOW) * SUB;
+    (idx.max(0.0) as usize).min(N_BUCKETS - 1)
+}
+
+/// Geometric midpoint of bucket `i` — the representative a quantile
+/// lookup reports before clamping to the observed `[min, max]`.
+fn representative(i: usize) -> f64 {
+    ((i as f64 + 0.5) / SUB - OCTAVES_BELOW).exp2()
+}
+
+/// `cell = min(cell, v)` for bit-ordered words, via compare-exchange.
+fn atomic_min(cell: &AtomicU64, v: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while v < cur {
+        match cell.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// `cell = max(cell, v)` for bit-ordered words, via compare-exchange.
+fn atomic_max(cell: &AtomicU64, v: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while v > cur {
+        match cell.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// `cell += add` where `cell` holds `f64` bits, via compare-exchange.
+fn atomic_add_f64(cell: &AtomicU64, add: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + add).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A histogram with a reduced grid of `n` buckets (samples landing
+    /// past the grid clamp into the last bucket).  Production code uses
+    /// the full [`N_BUCKETS`] grid via [`new`](Self::new); the loom
+    /// models use tiny grids so the model checker tracks few atomics.
+    pub fn with_buckets(n: usize) -> Self {
+        Histogram {
+            buckets: (0..n.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    /// Record one sample.  Negative samples clamp to bucket zero; the
+    /// exact sum/min/max still see the clamped value so the invariants
+    /// `min <= mean <= max` and `p50 <= max` hold by construction.
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { return };
+        let i = bucket_of(v).min(self.buckets.len() - 1);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        atomic_min(&self.min_bits, v.to_bits());
+        atomic_max(&self.max_bits, v.to_bits());
+        atomic_add_f64(&self.sum_bits, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Exact mean; 0.0 with no samples.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Exact minimum; 0.0 with no samples.
+    pub fn min(&self) -> f64 {
+        let v = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        if v.is_finite() {
+            v
+        } else {
+            0.0
+        }
+    }
+
+    /// Exact maximum; 0.0 with no samples.
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`) over the bucket grid.
+    /// The bucket's geometric midpoint is clamped to the observed
+    /// `[min, max]`, so quantiles are monotone in `q`, `p100 == max`
+    /// exactly, and every quantile is positive when `min > 0`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return representative(i).clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Fold another histogram into this one (bucket-wise add, exact
+    /// sum/extremes combine).  Used by shard-and-merge consumers.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let v = theirs.load(Ordering::Relaxed);
+            if v > 0 {
+                mine.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        let n = other.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return;
+        }
+        self.count.fetch_add(n, Ordering::Relaxed);
+        atomic_min(&self.min_bits, other.min_bits.load(Ordering::Relaxed));
+        atomic_max(&self.max_bits, other.max_bits.load(Ordering::Relaxed));
+        atomic_add_f64(&self.sum_bits, other.sum());
+    }
+}

@@ -23,7 +23,9 @@
 
 pub mod explain;
 pub mod histogram;
+mod histogram_core;
 pub mod journal;
+pub(crate) mod sync_shim;
 
 pub use histogram::{Histogram, Span};
 pub use journal::{Event, Journal};

@@ -1,0 +1,10 @@
+//! Swappable synchronization primitives for the `obs` atomic cores.
+//!
+//! [`super::histogram_core`] imports its atomics from `super::sync_shim`
+//! instead of `std::sync` directly, so the exact same source file can be
+//! re-included by the out-of-workspace `tools/loom` crate under a
+//! loom-backed shim (`loom::sync::atomic`) and model-checked without a
+//! `cfg(loom)` dependency in this crate's manifest or lockfile.  In the
+//! production build this module is a zero-cost re-export of `std`.
+
+pub use std::sync::atomic::{AtomicU64, Ordering};

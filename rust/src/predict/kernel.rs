@@ -222,6 +222,9 @@ pub struct AccumState {
     used: usize,
     saved: Vec<Saved>,
     frames: Vec<Frame>,
+    /// Pre-push digests, popped and re-checked by `pop` (debug builds).
+    #[cfg(debug_assertions)]
+    fp_stack: Vec<u64>,
 }
 
 impl AccumState {
@@ -233,7 +236,26 @@ impl AccumState {
             used: 0,
             saved: Vec::with_capacity(64),
             frames: Vec::with_capacity(16),
+            #[cfg(debug_assertions)]
+            fp_stack: Vec::with_capacity(16),
         }
+    }
+
+    /// FNV-1a digest over every accumulator word — `a`/`b` bit patterns,
+    /// task counts and `used` — so debug builds can prove `pop` restored
+    /// the exact pre-push state, not merely an arithmetically close one.
+    #[cfg(debug_assertions)]
+    fn fingerprint(&self) -> u64 {
+        fn mix(h: u64, w: u64) -> u64 {
+            (h ^ w).wrapping_mul(0x0000_0100_0000_01b3)
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for m in 0..self.a.len() {
+            h = mix(h, self.a[m].to_bits());
+            h = mix(h, self.b[m].to_bits());
+            h = mix(h, u64::from(self.tasks[m]));
+        }
+        mix(h, self.used as u64)
     }
 
     /// Machines hosting at least one task under the pushed rows.
@@ -247,6 +269,8 @@ impl AccumState {
 
     /// Add one component row: `O(nnz)` — only the row's machines move.
     pub fn push(&mut self, row: &Row) {
+        #[cfg(debug_assertions)]
+        self.fp_stack.push(self.fingerprint());
         self.frames.push(Frame { saved_start: self.saved.len(), used: self.used });
         for t in &row.terms {
             let m = t.m as usize;
@@ -273,6 +297,15 @@ impl AccumState {
             self.tasks[m] = s.tasks;
         }
         self.used = f.used;
+        #[cfg(debug_assertions)]
+        {
+            let want = self.fp_stack.pop();
+            debug_assert_eq!(
+                Some(self.fingerprint()),
+                want,
+                "pop did not restore the accumulator state bit-for-bit"
+            );
+        }
     }
 
     /// Closed-form max stable rate of the composed candidate:
@@ -499,12 +532,24 @@ impl<'e> DeltaEval<'e> {
     }
 
     /// Apply the move probed by [`rate_with_move`](Self::rate_with_move).
+    ///
+    /// Debug builds re-probe before mutating and assert the post-apply
+    /// recomputed rate matches the probe — the probe/apply pair must
+    /// never drift, or refinement would chase phantom improvements.
     pub fn apply_move(&mut self, c: usize, from: usize, to: usize) {
         debug_assert!(self.x.get(c, from) > 0);
+        #[cfg(debug_assertions)]
+        let probe = if from != to { self.rate_with_move(c, from, to) } else { self.rate() };
         self.x.set(c, from, self.x.get(c, from) - 1);
         self.x.set(c, to, self.x.get(c, to) + 1);
         self.recompute_machine(from);
         self.recompute_machine(to);
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            probe_matches(probe, self.rate()),
+            "apply_move({c}, {from}->{to}): probed rate {probe} vs recomputed {}",
+            self.rate()
+        );
     }
 
     /// Rate if one instance of `c` were removed from machine `drop_m`
@@ -531,6 +576,8 @@ impl<'e> DeltaEval<'e> {
     /// Apply the removal probed by [`rate_removing`](Self::rate_removing).
     pub fn apply_remove(&mut self, c: usize, drop_m: usize) {
         debug_assert!(self.x.get(c, drop_m) > 0);
+        #[cfg(debug_assertions)]
+        let probe = self.rate_removing(c, drop_m);
         self.x.set(c, drop_m, self.x.get(c, drop_m) - 1);
         self.counts[c] -= 1;
         for m in 0..self.x.n_machines() {
@@ -538,6 +585,12 @@ impl<'e> DeltaEval<'e> {
                 self.recompute_machine(m);
             }
         }
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            probe_matches(probe, self.rate()),
+            "apply_remove({c}, {drop_m}): probed rate {probe} vs recomputed {}",
+            self.rate()
+        );
     }
 
     /// Rate if one instance of `c` were added on machine `add_m` (the
@@ -563,6 +616,8 @@ impl<'e> DeltaEval<'e> {
 
     /// Apply the addition probed by [`rate_adding`](Self::rate_adding).
     pub fn apply_add(&mut self, c: usize, add_m: usize) {
+        #[cfg(debug_assertions)]
+        let probe = self.rate_adding(c, add_m);
         self.x.set(c, add_m, self.x.get(c, add_m) + 1);
         self.counts[c] += 1;
         for m in 0..self.x.n_machines() {
@@ -570,7 +625,23 @@ impl<'e> DeltaEval<'e> {
                 self.recompute_machine(m);
             }
         }
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            probe_matches(probe, self.rate()),
+            "apply_add({c}, {add_m}): probed rate {probe} vs recomputed {}",
+            self.rate()
+        );
     }
+}
+
+/// Probe/apply agreement predicate for the debug asserts above: both
+/// symbolically unbounded, or within `1e-9` relative of each other.
+#[cfg(debug_assertions)]
+fn probe_matches(probe: f64, post: f64) -> bool {
+    if probe.is_infinite() && post.is_infinite() {
+        return true;
+    }
+    (probe - post).abs() <= 1e-9 * post.abs().max(1.0)
 }
 
 #[cfg(test)]

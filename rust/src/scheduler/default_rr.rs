@@ -176,6 +176,7 @@ impl Scheduler for DefaultScheduler {
             wall: started.elapsed(),
         };
         crate::scheduler::record_schedule_telemetry(&s, 0);
+        crate::scheduler::debug_validate(problem, req, &s);
         Ok(s)
     }
 }

@@ -467,6 +467,7 @@ impl HeteroScheduler {
             });
         }
         crate::scheduler::record_schedule_telemetry(&s, 0);
+        crate::scheduler::debug_validate(problem, req, &s);
         Ok(s)
     }
 

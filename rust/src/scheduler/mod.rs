@@ -199,6 +199,34 @@ pub(crate) fn record_schedule_telemetry(s: &Schedule, pruned: u64) {
     });
 }
 
+/// Debug-build invariant net: every `schedule()` exit re-derives the
+/// structural invariants through [`crate::check::validate`] (from-scratch
+/// eq.-5 recomputation, constraint compliance, flag consistency) and
+/// panics on the first violation, so property/fuzz runs trip at the
+/// emitting policy instead of downstream.  Release builds compile to a
+/// no-op.  The determinism replay check is CLI/test-only: re-running the
+/// policy from inside the hook would recurse through the policies'
+/// internal seed schedules.
+#[cfg(debug_assertions)]
+pub(crate) fn debug_validate(problem: &Problem, req: &ScheduleRequest, s: &Schedule) {
+    match crate::check::validate(problem, req, s) {
+        Ok(report) => {
+            if !report.passed() {
+                panic!(
+                    "debug invariant check failed for policy '{}':\n{}",
+                    s.provenance.policy,
+                    report.render()
+                );
+            }
+        }
+        Err(e) => panic!("debug invariant check errored: {e}"),
+    }
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+pub(crate) fn debug_validate(_problem: &Problem, _req: &ScheduleRequest, _s: &Schedule) {}
+
 /// Utilization spread (max − min predicted utilization over non-excluded
 /// machines) of `p` at rate `r` — the tie-breaker
 /// [`Objective::BalancedUtilization`] minimizes.

@@ -601,6 +601,7 @@ impl OptimalScheduler {
             wall: started.elapsed(),
         };
         super::record_schedule_telemetry(&s, pruned);
+        super::debug_validate(problem, req, &s);
         Ok(s)
     }
 
@@ -728,6 +729,7 @@ impl OptimalScheduler {
             wall: started.elapsed(),
         };
         super::record_schedule_telemetry(&s, pruned);
+        super::debug_validate(problem, req, &s);
         Ok(s)
     }
 

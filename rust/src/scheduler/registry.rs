@@ -120,25 +120,25 @@ pub fn names() -> Vec<&'static str> {
     POLICIES.iter().map(|p| p.name).collect()
 }
 
+/// Shared row lookup: one registry scan serves both [`canonical`] and
+/// [`create`], so neither needs a second fallible lookup.
+fn lookup(name: &str) -> Result<&'static PolicyInfo> {
+    POLICIES.iter().find(|p| p.name == name || p.aliases.contains(&name)).ok_or_else(|| {
+        Error::Config(format!(
+            "unknown scheduler policy '{name}' (valid: {})",
+            names().join("|")
+        ))
+    })
+}
+
 /// Resolve `name` (canonical or alias) to its canonical name.
 pub fn canonical(name: &str) -> Result<&'static str> {
-    POLICIES
-        .iter()
-        .find(|p| p.name == name || p.aliases.contains(&name))
-        .map(|p| p.name)
-        .ok_or_else(|| {
-            Error::Config(format!(
-                "unknown scheduler policy '{name}' (valid: {})",
-                names().join("|")
-            ))
-        })
+    lookup(name).map(|p| p.name)
 }
 
 /// Construct the policy registered under `name` (canonical or alias).
 pub fn create(name: &str, params: &PolicyParams) -> Result<Box<dyn Scheduler>> {
-    let canon = canonical(name)?;
-    let info = POLICIES.iter().find(|p| p.name == canon).expect("canonical name registered");
-    Ok((info.factory)(params))
+    lookup(name).map(|info| (info.factory)(params))
 }
 
 /// Multi-line listing for `hstorm schedule --list-policies`.

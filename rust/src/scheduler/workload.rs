@@ -676,12 +676,18 @@ impl WorkloadSchedule {
     pub fn describe(&self, wp: &WorkloadProblem) -> String {
         let mut out = String::new();
         for ts in &self.tenants {
-            let tp = wp.tenant(&ts.tenant).expect("schedule tenant in problem");
             out.push_str(&format!(
                 "tenant '{}' (weight {:.2}): rate {:.1} tuple/s, throughput {:.1} tuple/s\n",
                 ts.tenant, ts.weight, ts.schedule.rate, ts.schedule.eval.throughput
             ));
-            out.push_str(&ts.schedule.describe(tp.problem.topology(), wp.cluster()));
+            // a schedule rendered against a foreign problem (tenant not
+            // in `wp`) degrades to the summary row instead of panicking
+            match wp.tenant(&ts.tenant) {
+                Some(tp) => {
+                    out.push_str(&ts.schedule.describe(tp.problem.topology(), wp.cluster()))
+                }
+                None => out.push_str("  (tenant not present in this workload problem)\n"),
+            }
         }
         out
     }

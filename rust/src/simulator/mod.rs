@@ -24,7 +24,7 @@
 pub mod event;
 pub mod stats;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::Cluster;
@@ -139,7 +139,7 @@ pub fn weighted_utilization(
     }
 
     // \bar u_i — mean utilization of machines of type i
-    let mut sum_u: HashMap<usize, (f64, usize)> = HashMap::new();
+    let mut sum_u: BTreeMap<usize, (f64, usize)> = BTreeMap::new();
     for (m, mach) in cluster.machines.iter().enumerate() {
         let e = sum_u.entry(mach.type_id).or_insert((0.0, 0));
         e.0 += util[m];

@@ -3,7 +3,7 @@
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
 //! positional arguments; unknown flags are an error so typos fail fast.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::{Error, Result};
 
@@ -11,7 +11,7 @@ use crate::{Error, Result};
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub positional: Vec<String>,
-    flags: HashMap<String, String>,
+    flags: BTreeMap<String, String>,
     bools: Vec<String>,
 }
 

@@ -1,0 +1,256 @@
+//! Integration tests for the `hstorm::check` invariant verifier.
+//!
+//! Three layers of evidence that the verifier is both *sound* (clean
+//! schedules pass) and *sharp* (every corruption class is flagged with
+//! its own diagnostic code):
+//!
+//! 1. every benchmark topology x registry policy combination validates
+//!    clean and replays bit-for-bit;
+//! 2. randomized `Constraints` (exclusions, pins, instance caps,
+//!    headroom, reserved loads) pushed through all three policies still
+//!    validate clean — the verifier agrees with the schedulers on what
+//!    the constraints mean;
+//! 3. a mutation corpus: eight distinct corruptions of a known-good
+//!    schedule, each flagged with a distinct `Violation::code()`, plus
+//!    shape-mismatch and replay-divergence probes.
+
+use std::collections::BTreeSet;
+
+use hstorm::check;
+use hstorm::cluster::presets;
+use hstorm::scheduler::{registry, Constraints, PolicyParams, Problem, Schedule, ScheduleRequest};
+use hstorm::topology::benchmarks;
+use hstorm::util::prop;
+
+/// Policy tunables for these tests: the optimal search runs sampled
+/// (seeded, so replay stays bit-identical) to keep debug builds fast.
+fn params() -> PolicyParams {
+    PolicyParams { sampled: Some((600, 7)), ..PolicyParams::default() }
+}
+
+fn paper_problem(top: &hstorm::topology::Topology) -> Problem {
+    let (cluster, db) = presets::paper_cluster();
+    Problem::new(top, &cluster, &db).expect("paper presets build a valid problem")
+}
+
+#[test]
+fn every_benchmark_policy_combination_validates_and_replays() {
+    let req = ScheduleRequest::max_throughput();
+    let params = params();
+    for top in benchmarks::all() {
+        let problem = paper_problem(&top);
+        for name in registry::names() {
+            let s = registry::create(name, &params)
+                .expect("registry names construct")
+                .schedule(&problem, &req)
+                .unwrap_or_else(|e| panic!("{name} on {}: {e}", top.name));
+            let mut report = check::validate(&problem, &req, &s).unwrap();
+            report.absorb(check::validate_replay(&problem, &req, &s, &params).unwrap());
+            assert!(report.passed(), "{} x {name}:\n{}", top.name, report.render());
+        }
+    }
+}
+
+#[test]
+fn randomized_constraints_hold_across_all_policies() {
+    let machines = ["pentium-0", "i3-0", "i5-0"];
+    prop::check(
+        "check-validates-constrained-schedules",
+        prop::default_cases() / 4,
+        |rng| {
+            let tname = benchmarks::NAMES[rng.range(0, benchmarks::NAMES.len() - 1)];
+            let top = benchmarks::by_name(tname).expect("NAMES entries resolve");
+            let mut c = Constraints::new();
+            let excluded = if rng.chance(0.4) { Some(rng.range(0, 2)) } else { None };
+            if let Some(x) = excluded {
+                c = c.exclude_machine(machines[x]);
+            }
+            if rng.chance(0.4) {
+                // pin a random component to a nonempty subset of the
+                // machines that remain available
+                let comp = top.components[rng.range(0, top.n_components() - 1)].name.clone();
+                let allowed: Vec<&str> = machines
+                    .iter()
+                    .enumerate()
+                    .filter(|(m, _)| Some(*m) != excluded)
+                    .map(|(_, name)| *name)
+                    .collect();
+                let keep = rng.range(1, allowed.len());
+                c = c.pin_component(comp, allowed.into_iter().take(keep));
+            }
+            if rng.chance(0.5) {
+                let comp = top.components[rng.range(0, top.n_components() - 1)].name.clone();
+                c = c.max_instances(comp, rng.range(1, 3));
+            }
+            if rng.chance(0.5) {
+                c = c.reserve_headroom(rng.range_f64(0.0, 12.0));
+            }
+            if rng.chance(0.4) {
+                c = c.reserve_machine_load(machines[rng.range(0, 2)], rng.range_f64(0.0, 8.0));
+            }
+            (tname.to_string(), c)
+        },
+        |(tname, c)| {
+            let top = benchmarks::by_name(tname).expect("name came from NAMES");
+            let problem = paper_problem(&top);
+            let req = ScheduleRequest::max_throughput().with_constraints(c.clone());
+            let params = params();
+            for name in registry::names() {
+                let s = registry::create(name, &params)
+                    .map_err(|e| e.to_string())?
+                    .schedule(&problem, &req)
+                    .map_err(|e| format!("{name}: schedule failed: {e}"))?;
+                let report = check::validate(&problem, &req, &s).map_err(|e| e.to_string())?;
+                if !report.passed() {
+                    return Err(format!("{name} violated invariants:\n{}", report.render()));
+                }
+                let replay =
+                    check::validate_replay(&problem, &req, &s, &params).map_err(|e| e.to_string())?;
+                if !replay.passed() {
+                    return Err(format!("{name} replay diverged:\n{}", replay.render()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One seeded corruption: schedule `linear` under `req`, apply `mutate`,
+/// and expect `code` among the verifier's findings.
+struct Mutation {
+    name: &'static str,
+    req: ScheduleRequest,
+    mutate: fn(&Problem, &mut Schedule),
+    code: &'static str,
+}
+
+fn corpus() -> Vec<Mutation> {
+    // linear components: spout(0) low(1) mid(2) high(3);
+    // paper machines: pentium-0(0) i3-0(1) i5-0(2)
+    vec![
+        Mutation {
+            name: "drop-component",
+            req: ScheduleRequest::max_throughput(),
+            mutate: |_, s| {
+                for m in 0..s.placement.n_machines() {
+                    s.placement.x[0][m] = 0;
+                }
+            },
+            code: "missing-component",
+        },
+        Mutation {
+            name: "exceed-instance-cap",
+            req: ScheduleRequest::max_throughput()
+                .with_constraints(Constraints::new().max_instances("low", 1)),
+            mutate: |_, s| s.placement.x[1][2] += 1,
+            code: "instance-cap-exceeded",
+        },
+        Mutation {
+            name: "place-on-excluded",
+            req: ScheduleRequest::max_throughput()
+                .with_constraints(Constraints::new().exclude_machine("i3-0")),
+            mutate: |_, s| s.placement.x[0][1] += 1,
+            code: "excluded-machine",
+        },
+        Mutation {
+            name: "break-pin",
+            req: ScheduleRequest::max_throughput()
+                .with_constraints(Constraints::new().pin_component("spout", ["i5-0"])),
+            mutate: |_, s| s.placement.x[0][0] += 1,
+            code: "pin-violated",
+        },
+        Mutation {
+            name: "inflate-rate",
+            req: ScheduleRequest::max_throughput(),
+            // keep the reported eval self-consistent at the inflated
+            // rate, isolating the capacity violation
+            mutate: |p, s| {
+                s.rate *= 8.0;
+                s.eval = p.evaluator().evaluate(&s.placement, s.rate).unwrap();
+            },
+            code: "overutilized",
+        },
+        Mutation {
+            name: "poison-rate",
+            req: ScheduleRequest::max_throughput(),
+            mutate: |_, s| s.rate = f64::NAN,
+            code: "rate-infeasible",
+        },
+        Mutation {
+            name: "tamper-util",
+            req: ScheduleRequest::max_throughput(),
+            mutate: |_, s| s.eval.util[0] += 5.0,
+            code: "util-mismatch",
+        },
+        Mutation {
+            name: "flip-feasible",
+            req: ScheduleRequest::max_throughput(),
+            mutate: |_, s| s.eval.feasible = !s.eval.feasible,
+            code: "feasible-flag-wrong",
+        },
+    ]
+}
+
+#[test]
+fn mutation_corpus_is_fully_flagged_with_distinct_codes() {
+    let corpus = corpus();
+    let distinct: BTreeSet<&str> = corpus.iter().map(|m| m.code).collect();
+    assert!(distinct.len() >= 6, "corpus must cover >= 6 distinct codes");
+    assert_eq!(distinct.len(), corpus.len(), "every mutation expects its own code");
+
+    let top = benchmarks::linear();
+    let problem = paper_problem(&top);
+    for mutation in &corpus {
+        let mut s = registry::create("hetero", &params())
+            .unwrap()
+            .schedule(&problem, &mutation.req)
+            .unwrap_or_else(|e| panic!("{}: schedule failed: {e}", mutation.name));
+        let clean = check::validate(&problem, &mutation.req, &s).unwrap();
+        assert!(
+            clean.passed(),
+            "{}: pre-mutation schedule dirty:\n{}",
+            mutation.name,
+            clean.render()
+        );
+
+        (mutation.mutate)(&problem, &mut s);
+        let report = check::validate(&problem, &mutation.req, &s).unwrap();
+        let codes: Vec<&str> = report.violations.iter().map(|v| v.code()).collect();
+        assert!(
+            codes.contains(&mutation.code),
+            "{}: expected '{}' among {:?}",
+            mutation.name,
+            mutation.code,
+            codes
+        );
+    }
+}
+
+#[test]
+fn schedule_for_the_wrong_problem_is_a_shape_mismatch() {
+    let req = ScheduleRequest::max_throughput();
+    let linear = paper_problem(&benchmarks::linear());
+    let diamond = paper_problem(&benchmarks::diamond());
+    let s = registry::create("hetero", &params()).unwrap().schedule(&linear, &req).unwrap();
+    let report = check::validate(&diamond, &req, &s).unwrap();
+    let codes: Vec<&str> = report.violations.iter().map(|v| v.code()).collect();
+    assert_eq!(codes, vec!["shape-mismatch"], "{}", report.render());
+}
+
+#[test]
+fn moved_instance_diverges_replay() {
+    let req = ScheduleRequest::max_throughput();
+    let problem = paper_problem(&benchmarks::linear());
+    let params = params();
+    let mut s = registry::create("hetero", &params).unwrap().schedule(&problem, &req).unwrap();
+    // move one instance of the sink component to a different machine
+    let from = (0..s.placement.n_machines())
+        .find(|&m| s.placement.x[3][m] > 0)
+        .expect("sink is placed somewhere");
+    let to = (from + 1) % s.placement.n_machines();
+    s.placement.x[3][from] -= 1;
+    s.placement.x[3][to] += 1;
+    let report = check::validate_replay(&problem, &req, &s, &params).unwrap();
+    let codes: Vec<&str> = report.violations.iter().map(|v| v.code()).collect();
+    assert!(codes.contains(&"replay-diverged"), "{}", report.render());
+}

@@ -1,0 +1,213 @@
+//! Repo-local static lints the stock toolchain cannot express: the
+//! determinism and robustness rules the scheduler's bit-identical
+//! replay contract depends on.  CI runs this blocking (`cargo run
+//! --release -p hstorm-lint`); it exits nonzero on any unsuppressed
+//! hit *or* any stale allowlist entry.
+//!
+//! Rules (applied to non-test, non-comment lines of `rust/src`):
+//!
+//! * `wall-clock` — `Instant::now(` / `SystemTime::now(` outside
+//!   `obs/` (telemetry is the one layer allowed to look at the clock;
+//!   everything else must keep schedules time-independent).
+//! * `nondeterministic-rng` — `thread_rng` / `from_entropy` /
+//!   `rand::random`: every random stream must be seeded
+//!   (`util::rng::Rng`) so runs replay.
+//! * `hash-iteration` — any `HashMap` / `HashSet`: iteration order is
+//!   randomized per process and leaks into serialized output and
+//!   tie-breaks; the repo-wide policy is `BTreeMap`/`BTreeSet`.
+//! * `library-unwrap` — `.unwrap()` or `.expect("` in library code:
+//!   fallible paths return `Error` instead of aborting.
+//! * `float-eq` — `==`/`!=` against a float literal: scoring paths
+//!   compare within tolerances, not exactly.
+//!
+//! Suppressions live in `tools/lint/allowlist.txt` as
+//! `rule path # rationale` lines, matched per (rule, file) so entries
+//! survive line drift; the rationale is mandatory documentation.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const RULES: &[&str] =
+    &["wall-clock", "nondeterministic-rng", "hash-iteration", "library-unwrap", "float-eq"];
+
+struct Hit {
+    rule: &'static str,
+    file: String,
+    line_no: usize,
+    line: String,
+}
+
+/// `==` or `!=` adjacent to a float literal (a token containing a
+/// decimal point).  Token-level, both sides of the operator.
+fn float_eq_hit(line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        let op = &bytes[i..i + 2];
+        let standalone = (i == 0 || !matches!(bytes[i - 1], b'=' | b'!' | b'<' | b'>'))
+            && bytes.get(i + 2) != Some(&b'=');
+        if (op == b"==" || op == b"!=") && standalone {
+            if float_literal_follows(&line[i + 2..]) || float_literal_precedes(&line[..i]) {
+                return true;
+            }
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    false
+}
+
+fn float_literal_follows(rest: &str) -> bool {
+    let s = rest.trim_start().trim_start_matches('-');
+    let mut saw_digit = false;
+    for c in s.chars() {
+        if c.is_ascii_digit() {
+            saw_digit = true;
+        } else {
+            return saw_digit && c == '.';
+        }
+    }
+    false
+}
+
+fn float_literal_precedes(before: &str) -> bool {
+    let s = before.trim_end();
+    // the preceding token must end like `<digits>.<digits>`
+    let tail: String = s.chars().rev().take_while(|c| c.is_ascii_digit() || *c == '.').collect();
+    tail.contains('.') && tail.starts_with(|c: char| c.is_ascii_digit())
+}
+
+fn scan_file(root: &Path, rel: &str, hits: &mut Vec<Hit>) {
+    let text = match fs::read_to_string(root.join(rel)) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("hstorm-lint: cannot read rust/src/{rel}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let mut in_test = false;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.contains("#[cfg(test)]") {
+            // repo convention: the test module is the tail of the file
+            in_test = true;
+        }
+        if in_test || line.starts_with("//") {
+            continue;
+        }
+        let mut push = |rule: &'static str| {
+            hits.push(Hit {
+                rule,
+                file: rel.to_string(),
+                line_no: idx + 1,
+                line: line.to_string(),
+            })
+        };
+        let clock = line.contains("Instant::now(") || line.contains("SystemTime::now(");
+        if clock && !rel.starts_with("obs/") {
+            push("wall-clock");
+        }
+        let rng = line.contains("thread_rng")
+            || line.contains("from_entropy")
+            || line.contains("rand::random");
+        if rng {
+            push("nondeterministic-rng");
+        }
+        if line.contains("HashMap") || line.contains("HashSet") {
+            push("hash-iteration");
+        }
+        if line.contains(".unwrap()") || line.contains(".expect(\"") {
+            push("library-unwrap");
+        }
+        if float_eq_hit(line) {
+            push("float-eq");
+        }
+    }
+}
+
+fn collect_sources(dir: &Path, base: &Path, out: &mut Vec<String>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_sources(&p, base, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            if let Ok(rel) = p.strip_prefix(base) {
+                out.push(rel.to_string_lossy().replace('\\', "/"));
+            }
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let src_root = repo_root.join("rust/src");
+    let allow_path = repo_root.join("tools/lint/allowlist.txt");
+
+    let mut files = Vec::new();
+    collect_sources(&src_root, &src_root, &mut files);
+    if files.is_empty() {
+        eprintln!("hstorm-lint: no sources under {}", src_root.display());
+        return ExitCode::FAILURE;
+    }
+
+    let mut hits = Vec::new();
+    for rel in &files {
+        scan_file(&src_root, rel, &mut hits);
+    }
+
+    // allowlist: `rule path # rationale`, matched per (rule, file)
+    let mut allowed: BTreeSet<(String, String)> = BTreeSet::new();
+    let allow_text = fs::read_to_string(&allow_path).unwrap_or_default();
+    let mut malformed = 0;
+    for (idx, raw) in allow_text.lines().enumerate() {
+        let entry = raw.split('#').next().unwrap_or("").trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let mut tok = entry.split_whitespace();
+        match (tok.next(), tok.next(), tok.next(), raw.contains('#')) {
+            (Some(rule), Some(path), None, true) if RULES.contains(&rule) => {
+                allowed.insert((rule.to_string(), path.to_string()));
+            }
+            _ => {
+                let n = idx + 1;
+                eprintln!("allowlist.txt:{n}: malformed (want `rule path # rationale`): {raw}");
+                malformed += 1;
+            }
+        }
+    }
+
+    let mut used: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut reported = 0;
+    let mut suppressed = 0;
+    for h in &hits {
+        let key = (h.rule.to_string(), h.file.clone());
+        if allowed.contains(&key) {
+            used.insert(key);
+            suppressed += 1;
+        } else {
+            println!("rust/src/{}:{}: [{}] {}", h.file, h.line_no, h.rule, h.line);
+            reported += 1;
+        }
+    }
+
+    let mut stale = 0;
+    for (rule, path) in allowed.difference(&used) {
+        eprintln!("allowlist.txt: stale entry `{rule} {path}` (no remaining hit — delete it)");
+        stale += 1;
+    }
+
+    if reported > 0 || stale > 0 || malformed > 0 {
+        eprintln!("hstorm-lint: {reported} violation(s), {stale} stale, {malformed} malformed");
+        ExitCode::FAILURE
+    } else {
+        let n = files.len();
+        println!("hstorm-lint: clean — {n} files scanned, {suppressed} allowlisted hit(s)");
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,24 @@
+//! Loom-backed build of the `hstorm` atomic cores.
+//!
+//! The main crate splits its concurrency-bearing primitives into
+//! standalone "core" source files (`rust/src/obs/histogram_core.rs`,
+//! `rust/src/metrics/meanstat_core.rs`) that import every sync
+//! primitive from a sibling `sync_shim` module.  In the main crate the
+//! shim re-exports `std::sync`; here the same files are re-included by
+//! `#[path]` under a shim that re-exports `loom::sync`, so the loom
+//! model checker exhaustively permutes every interleaving of the exact
+//! production source — no copies, no `cfg(loom)` in the main manifest.
+//!
+//! The models live in `tests/loom_models.rs`.
+
+/// Loom-backed stand-in for the cores' `super::sync_shim` imports.
+pub mod sync_shim {
+    pub use loom::sync::atomic::{AtomicU64, Ordering};
+    pub use loom::sync::RwLock;
+}
+
+#[path = "../../../rust/src/obs/histogram_core.rs"]
+pub mod histogram_core;
+
+#[path = "../../../rust/src/metrics/meanstat_core.rs"]
+pub mod meanstat_core;

@@ -1,0 +1,105 @@
+//! Loom models over the production atomic cores (see `src/lib.rs` for
+//! how the exact `rust/src` source files end up compiled against
+//! loom's primitives).  Every model uses a tiny bucket grid
+//! (`with_buckets(8)`) so the checker tracks a handful of atomics, and
+//! two threads with one operation each — loom explores every
+//! interleaving of the cores' CAS loops and lock acquisitions.
+//!
+//! Quantile assertions are bounds, not exact values: the reduced grid
+//! clamps large samples into its last bucket, so only the
+//! `min <= q <= max` envelope (which `Histogram::quantile` guarantees
+//! by construction) is grid-independent.
+
+use hstorm_loom::histogram_core::Histogram;
+use hstorm_loom::meanstat_core::MeanStat;
+use loom::sync::Arc;
+use loom::thread;
+
+#[test]
+fn histogram_concurrent_records_lose_nothing() {
+    loom::model(|| {
+        let h = Arc::new(Histogram::with_buckets(8));
+        let h2 = h.clone();
+        let t = thread::spawn(move || h2.observe(1.0));
+        h.observe(2.0);
+        t.join().unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 3.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 2.0);
+        let p100 = h.quantile(1.0);
+        assert!(p100 >= h.min() && p100 <= h.max(), "p100 {p100} out of envelope");
+    });
+}
+
+#[test]
+fn histogram_quantile_is_bounded_during_concurrent_record() {
+    loom::model(|| {
+        let h = Arc::new(Histogram::with_buckets(8));
+        h.observe(1.0);
+        let h2 = h.clone();
+        let t = thread::spawn(move || h2.observe(4.0));
+        // racing reader: whatever prefix of the writer's atomics landed,
+        // the quantile must stay finite, non-negative and within the
+        // currently-visible extremes
+        let p50 = h.quantile(0.5);
+        assert!(p50.is_finite() && p50 >= 0.0, "torn quantile {p50}");
+        t.join().unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 4.0);
+    });
+}
+
+#[test]
+fn histogram_merge_is_complete_against_concurrent_record() {
+    loom::model(|| {
+        let a = Arc::new(Histogram::with_buckets(8));
+        let b = Histogram::with_buckets(8);
+        b.observe(4.0);
+        let a2 = a.clone();
+        let t = thread::spawn(move || a2.observe(1.0));
+        a.merge_from(&b);
+        t.join().unwrap();
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.sum(), 5.0);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+        let p100 = a.quantile(1.0);
+        assert!(p100 >= a.min() && p100 <= a.max(), "p100 {p100} out of envelope");
+    });
+}
+
+#[test]
+fn meanstat_reset_never_tears_a_sample() {
+    loom::model(|| {
+        let m = Arc::new(MeanStat::new());
+        let m2 = m.clone();
+        let t = thread::spawn(move || m2.observe(0.5));
+        m.reset();
+        t.join().unwrap();
+        // the reset gate makes observe atomic against reset: the sample
+        // either survives whole or is wiped whole — never a half-applied
+        // (sum, count) pair
+        match m.mean() {
+            None => assert_eq!(m.count(), 0, "count survived a wiped sample"),
+            Some(mean) => {
+                assert_eq!(m.count(), 1);
+                assert!((mean - 0.5).abs() < 1e-12, "torn reset: mean {mean}");
+            }
+        }
+    });
+}
+
+#[test]
+fn meanstat_concurrent_observes_accumulate_exactly() {
+    loom::model(|| {
+        let m = Arc::new(MeanStat::new());
+        let m2 = m.clone();
+        let t = thread::spawn(move || m2.observe(0.25));
+        m.observe(0.5);
+        t.join().unwrap();
+        assert_eq!(m.count(), 2);
+        let mean = m.mean().unwrap();
+        assert!((mean - 0.375).abs() < 1e-12, "lost update: mean {mean}");
+    });
+}
