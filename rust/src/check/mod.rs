@@ -21,6 +21,9 @@
 //!   maximum `min_m (cap_m − b_m)/a_m`;
 //! * the reported per-machine utilization and `feasible` flag match the
 //!   from-scratch recomputation;
+//! * optimality certificates are self-consistent: a reported gap is
+//!   ≥ 0, an exhausted search certifies gap 0, and a claimed bound is
+//!   never below the certified rate;
 //! * workload schedules: per-tenant invariants, combined utilization
 //!   within the *unreduced* machine budgets, machine-disjoint placements
 //!   in isolated mode, and the workload scale equal to
@@ -86,6 +89,9 @@ pub enum Violation {
     CombinedOverutilized { machine: String, util: f64, cap: f64 },
     /// The workload scale disagrees with `min_t rate_t / weight_t`.
     ScaleMismatch { reported: f64, recomputed: f64 },
+    /// The provenance's optimality-gap certificate is self-contradictory
+    /// (negative gap, or a nonzero gap after an exhausted search).
+    GapInconsistent { gap: f64, detail: String },
 }
 
 impl Violation {
@@ -106,6 +112,7 @@ impl Violation {
             Violation::TenantOverlap { .. } => "tenant-overlap",
             Violation::CombinedOverutilized { .. } => "combined-overutilized",
             Violation::ScaleMismatch { .. } => "scale-mismatch",
+            Violation::GapInconsistent { .. } => "gap-inconsistent",
         }
     }
 
@@ -173,6 +180,9 @@ impl Violation {
                 "{}: workload scale {reported:.9} != min_t rate_t/weight_t = {recomputed:.9}",
                 self.code()
             ),
+            Violation::GapInconsistent { gap, detail } => {
+                format!("{}: optimality gap {gap:.9} is inconsistent ({detail})", self.code())
+            }
         }
     }
 }
@@ -334,6 +344,33 @@ pub fn validate(problem: &Problem, req: &ScheduleRequest, s: &Schedule) -> Resul
             reported: s.eval.feasible,
             recomputed: recomputed_feasible,
         });
+    }
+
+    // Optimality-certificate consistency: a gap is relative and can
+    // never be negative, an exhausted search must certify gap 0, and a
+    // claimed bound can never sit below the certified rate.
+    if let Some(gap) = s.provenance.optimality_gap {
+        if gap < -CAP_TOL {
+            v.push(Violation::GapInconsistent {
+                gap,
+                detail: "gap is negative (bound below the returned rate)".into(),
+            });
+        } else if matches!(s.provenance.terminated, crate::scheduler::Termination::Exhausted)
+            && gap > CAP_TOL
+        {
+            v.push(Violation::GapInconsistent {
+                gap,
+                detail: "search reports exhausted but certifies a nonzero gap".into(),
+            });
+        }
+    }
+    if let Some(bound) = s.provenance.bound {
+        if bound + CAP_TOL * bound.abs().max(1.0) < s.rate {
+            v.push(Violation::GapInconsistent {
+                gap: s.provenance.optimality_gap.unwrap_or(f64::NAN),
+                detail: format!("claimed bound {bound:.6} below certified rate {:.6}", s.rate),
+            });
+        }
     }
     Ok(Report { violations: v })
 }
@@ -567,6 +604,53 @@ mod tests {
             "{}",
             report.render()
         );
+    }
+
+    #[test]
+    fn inconsistent_gap_certificates_are_flagged() {
+        use crate::scheduler::Termination;
+        let req = ScheduleRequest::max_throughput();
+        let (p, s) = scheduled(&req);
+
+        // negative gap (bound below the returned rate)
+        let mut neg = s.clone();
+        neg.provenance.optimality_gap = Some(-0.02);
+        neg.provenance.terminated = Termination::Budget;
+        let report = validate(&p, &req, &neg).unwrap();
+        assert!(
+            report.violations.iter().any(|x| x.code() == "gap-inconsistent"),
+            "{}",
+            report.render()
+        );
+
+        // exhausted search claiming a nonzero gap
+        let mut exh = s.clone();
+        exh.provenance.optimality_gap = Some(0.07);
+        exh.provenance.terminated = Termination::Exhausted;
+        let report = validate(&p, &req, &exh).unwrap();
+        assert!(
+            report.violations.iter().any(|x| x.code() == "gap-inconsistent"),
+            "{}",
+            report.render()
+        );
+
+        // bound below the certified rate
+        let mut low = s.clone();
+        low.provenance.bound = Some(s.rate * 0.5);
+        let report = validate(&p, &req, &low).unwrap();
+        assert!(
+            report.violations.iter().any(|x| x.code() == "gap-inconsistent"),
+            "{}",
+            report.render()
+        );
+
+        // a legitimate budgeted certificate passes
+        let mut ok = s;
+        ok.provenance.bound = Some(ok.rate * 1.08);
+        ok.provenance.optimality_gap = Some(0.08);
+        ok.provenance.terminated = Termination::Budget;
+        let report = validate(&p, &req, &ok).unwrap();
+        assert!(report.passed(), "{}", report.render());
     }
 
     #[test]

@@ -486,7 +486,12 @@ fn run_policy_from(
             rep.reschedules += 1;
             if dirty {
                 let replan_started = std::time::Instant::now();
-                let s = sched.schedule(problem, &ScheduleRequest::max_throughput())?;
+                // warm-start from the running placement projected onto the
+                // current cluster, so budgeted search policies refine the
+                // incumbent instead of starting cold
+                let req = ScheduleRequest::max_throughput()
+                    .with_warm_start(np.project(problem.cluster()));
+                let s = sched.schedule(problem, &req)?;
                 if crate::obs::enabled() {
                     crate::obs::global().journal().record(crate::obs::Event::Replanned {
                         policy: policy.name().into(),

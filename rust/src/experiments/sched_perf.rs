@@ -10,13 +10,16 @@
 //! The CLI writes the machine-readable form to `BENCH_sched.json`
 //! whenever this experiment runs, and CI uploads it as an artifact, so
 //! the scheduling-perf trajectory is tracked run over run.  CI's
-//! perf-smoke step greps the rendered note
-//! `incremental >= naive candidates/s : PASS`.
+//! perf-smoke step greps the rendered notes
+//! `incremental >= naive candidates/s : PASS`,
+//! `bnb prunes > 0 and same schedule as exhaustive : PASS` and
+//! `portfolio gap <= 10% : PASS`.
 
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::{presets, scenarios, Cluster};
 use crate::scheduler::optimal::OptimalScheduler;
-use crate::scheduler::{Problem, Schedule, ScheduleRequest, Scheduler};
+use crate::scheduler::search::{BnbScheduler, PortfolioScheduler};
+use crate::scheduler::{Problem, Schedule, ScheduleRequest, Scheduler, SearchBudget};
 use crate::topology::benchmarks;
 use crate::util::json::{self, Value};
 use crate::Result;
@@ -147,6 +150,75 @@ pub fn run_with_json(fast: bool) -> Result<(ExperimentResult, Value)> {
         ]));
     }
 
+    // --- branch-and-bound identity gate: bit-identical schedule to the
+    // exhaustive kernel on scenario 1 while evaluating strictly fewer
+    // candidates (the pruned remainder is certified by the bound) ---
+    let (s1_cluster, s1_db) = scenarios::by_id(1).expect("scenario 1 registered").build();
+    let s1_problem = Problem::new(&top, &s1_cluster, &s1_db)?;
+    let s1_single = OptimalScheduler {
+        max_instances_per_component: 2,
+        threads: 1,
+        ..Default::default()
+    };
+    let s1_space = s1_single.design_space_size(top.n_components(), s1_cluster.n_machines());
+    let exhaustive =
+        EngineRun { engine: "exhaustive", schedule: s1_single.schedule(&s1_problem, &req)? };
+    let bnb = EngineRun {
+        engine: "bnb",
+        schedule: BnbScheduler { max_instances_per_component: 2, ..Default::default() }
+            .schedule(&s1_problem, &req)?,
+    };
+    let bnb_same = bnb.schedule.placement == exhaustive.schedule.placement
+        && bnb.schedule.rate.to_bits() == exhaustive.schedule.rate.to_bits();
+    let bnb_fewer = bnb.schedule.provenance.placements_evaluated
+        < exhaustive.schedule.provenance.placements_evaluated;
+    let bnb_verdict = if bnb_same && bnb_fewer { "PASS" } else { "FAIL" };
+    for run in [&exhaustive, &bnb] {
+        out.row(vec![
+            "scenario1-bnb".into(),
+            run.engine.into(),
+            s1_space.to_string(),
+            run.schedule.provenance.placements_evaluated.to_string(),
+            format!("{:.1} ms", run.wall_s() * 1e3),
+            f1(run.candidates_per_s()),
+            format!("{}x", f2(exhaustive.wall_s() / run.wall_s())),
+            if bnb_same { "yes" } else { "NO" }.into(),
+        ]);
+    }
+
+    // --- anytime gate: a budgeted portfolio on the 180-machine
+    // scenario must return a feasible schedule with a certified
+    // optimality gap within 10% ---
+    let (big_cluster, big_db) = scenarios::by_id(3).expect("scenario 3 registered").build();
+    let big_problem = Problem::new(&top, &big_cluster, &big_db)?;
+    let big_machines = big_cluster.n_machines();
+    let budget_candidates: u64 = if fast { 2_000 } else { 6_000 };
+    let big_space = OptimalScheduler { max_instances_per_component: 2, ..Default::default() }
+        .design_space_size(top.n_components(), big_machines);
+    let preq = ScheduleRequest::max_throughput().with_budget(
+        SearchBudget::unlimited()
+            .with_max_candidates(budget_candidates)
+            .with_max_virtual_ops(budget_candidates * big_machines as u64 * 8),
+    );
+    let portfolio = EngineRun {
+        engine: "portfolio",
+        schedule: PortfolioScheduler { max_instances_per_component: 2, ..Default::default() }
+            .schedule(&big_problem, &preq)?,
+    };
+    let gap = portfolio.schedule.provenance.optimality_gap;
+    let pf_ok = portfolio.schedule.eval.feasible && gap.map_or(false, |g| g <= 0.10);
+    let pf_verdict = if pf_ok { "PASS" } else { "FAIL" };
+    out.row(vec![
+        "scenario3-portfolio".into(),
+        portfolio.engine.into(),
+        big_space.to_string(),
+        portfolio.schedule.provenance.placements_evaluated.to_string(),
+        format!("{:.1} ms", portfolio.wall_s() * 1e3),
+        f1(portfolio.candidates_per_s()),
+        "-".into(),
+        if pf_ok { "yes" } else { "NO" }.into(),
+    ]);
+
     let verdict = if min_speedup >= 1.0 { "PASS" } else { "FAIL" };
     out.note(format!(
         "incremental >= naive candidates/s : {verdict} (min speedup {}x)",
@@ -154,6 +226,16 @@ pub fn run_with_json(fast: bool) -> Result<(ExperimentResult, Value)> {
     ));
     out.note(format!(
         "parallel shards: {auto_threads} threads (identical schedule at any thread count)"
+    ));
+    out.note(format!(
+        "bnb prunes > 0 and same schedule as exhaustive : {bnb_verdict} ({} of {} candidates)",
+        bnb.schedule.provenance.placements_evaluated,
+        exhaustive.schedule.provenance.placements_evaluated
+    ));
+    out.note(format!(
+        "portfolio gap <= 10% : {pf_verdict} (gap {}, {big_machines} machines, \
+         {budget_candidates} candidate budget)",
+        gap.map_or("none".to_string(), |g| format!("{:.2}%", g * 100.0)),
     ));
 
     let payload = json::obj(vec![
@@ -163,6 +245,32 @@ pub fn run_with_json(fast: bool) -> Result<(ExperimentResult, Value)> {
         ("min_speedup_incremental", json::num(min_speedup)),
         ("verdict", json::s(verdict)),
         ("scenarios", json::arr(scenario_objs)),
+        (
+            "bnb_identity",
+            json::obj(vec![
+                ("space", json::num(s1_space as f64)),
+                (
+                    "evaluated_exhaustive",
+                    json::num(exhaustive.schedule.provenance.placements_evaluated as f64),
+                ),
+                ("evaluated_bnb", json::num(bnb.schedule.provenance.placements_evaluated as f64)),
+                ("same_schedule", json::bool(bnb_same)),
+                ("verdict", json::s(bnb_verdict)),
+            ]),
+        ),
+        (
+            "portfolio_anytime",
+            json::obj(vec![
+                ("machines", json::num(big_machines as f64)),
+                ("space", json::num(big_space as f64)),
+                ("budget_candidates", json::num(budget_candidates as f64)),
+                ("evaluated", json::num(portfolio.schedule.provenance.placements_evaluated as f64)),
+                ("rate", json::num(portfolio.schedule.rate)),
+                ("feasible", json::bool(portfolio.schedule.eval.feasible)),
+                ("optimality_gap", gap.map(json::num).unwrap_or(Value::Null)),
+                ("verdict", json::s(pf_verdict)),
+            ]),
+        ),
     ]);
     Ok((out, payload))
 }
@@ -179,8 +287,8 @@ mod tests {
     #[test]
     fn report_races_both_scenarios() {
         let (r, v) = run_with_json(true).unwrap();
-        // 2 scenarios x 3 engines
-        assert_eq!(r.rows.len(), 6);
+        // 2 scenarios x 3 engines + 2 bnb-identity rows + 1 portfolio row
+        assert_eq!(r.rows.len(), 9);
         assert!(r.notes.iter().any(|n| n.contains("incremental >= naive")), "{:?}", r.notes);
         let scenarios = v.get("scenarios").unwrap().as_arr().unwrap();
         assert_eq!(scenarios.len(), 2);
@@ -191,5 +299,33 @@ mod tests {
                 "engines must select the identical schedule"
             );
         }
+    }
+
+    /// Acceptance (scenario 1): bnb returns the identical schedule to
+    /// the exhaustive kernel while evaluating strictly fewer candidates.
+    /// Acceptance (scenario 3, 180 machines): the budgeted portfolio
+    /// stays feasible and certifies an optimality gap within 10%.
+    #[test]
+    fn bnb_and_portfolio_gates_pass() {
+        let (r, v) = run_with_json(true).unwrap();
+        assert!(
+            r.notes.iter().any(|n| n.contains("same schedule as exhaustive : PASS")),
+            "{:?}",
+            r.notes
+        );
+        assert!(
+            r.notes.iter().any(|n| n.contains("portfolio gap <= 10% : PASS")),
+            "{:?}",
+            r.notes
+        );
+        let bnb = v.get("bnb_identity").unwrap();
+        assert_eq!(bnb.get("same_schedule").unwrap().as_bool(), Some(true));
+        assert!(
+            bnb.num_field("evaluated_bnb").unwrap() < bnb.num_field("evaluated_exhaustive").unwrap()
+        );
+        let pf = v.get("portfolio_anytime").unwrap();
+        assert_eq!(pf.get("feasible").unwrap().as_bool(), Some(true));
+        let gap = pf.num_field("optimality_gap").unwrap();
+        assert!((0.0..=0.10).contains(&gap), "portfolio gap {gap} above 10%");
     }
 }

@@ -74,6 +74,25 @@
 //! throughput ties toward the smallest utilization spread — see the
 //! [`scheduler::request`] module docs for exact semantics.
 //!
+//! **Budgeted, anytime search (API note).**  As of the search-portfolio
+//! release a request may also carry a [`scheduler::SearchBudget`]
+//! (`.with_budget(...)`: max candidate evaluations, max kernel virtual
+//! ops, optional target gap).  Existing call sites need no change — the
+//! default budget is unlimited and every prior policy behaves exactly
+//! as before — but all policies now *honor* a budget when one is set,
+//! and the search policies (`bnb`, `beam`, `anneal`, `portfolio` in the
+//! registry) report how they stopped through three new
+//! [`scheduler::Provenance`] fields: `bound` (admissible upper bound on
+//! the achievable rate), `optimality_gap` (`(bound − rate)/rate`, `0`
+//! whenever the space was exhausted) and `terminated`
+//! (`Exhausted`/`Budget`/`TargetGap`).  Requests may also seed a
+//! `.with_warm_start(placement)` incumbent — the controller does this
+//! on every re-plan so budgeted searches refine instead of restart.
+//! The deprecated registry aliases `rr` and `exhaustive` still resolve
+//! (to `default` and `optimal`) but journal a `deprecated_alias` event
+//! once per process; see [`scheduler::search`] for the certificate
+//! math.
+//!
 //! ## Multi-tenant workloads
 //!
 //! Many topologies share one cluster through a
@@ -162,6 +181,8 @@
 //! | `admission_denied`     | workload controller   | tenant, step, reason                     |
 //! | `admission_granted`    | workload controller   | tenant, step                             |
 //! | `backpressure_verdict` | event simulator       | rate, backpressure, queue growth, shed   |
+//! | `strategy_finished`    | search portfolio      | policy, strategy, rate, evaluated        |
+//! | `deprecated_alias`     | policy registry       | alias, canonical (once per process)      |
 //!
 //! `hstorm explain` turns this into a decision story: the eq.-5
 //! bottleneck chain (which component capped `R0*` on which machine,
@@ -192,6 +213,7 @@
 //! | workload scale            | `scale == min_t rate_t / weight_t`                         |
 //! | determinism               | replaying the provenance-named policy is bit-identical     |
 //! | provenance                | a matching `schedule_chosen` journal event exists          |
+//! | gap certificate           | `gap ≥ 0`; exhausted ⇒ `gap = 0`; `bound ≥ rate`           |
 
 pub mod check;
 pub mod cluster;

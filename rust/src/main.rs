@@ -26,6 +26,7 @@ use hstorm::profiling;
 use hstorm::resolve;
 use hstorm::scheduler::{
     registry, Constraints, Objective, PolicyParams, Problem, Schedule, ScheduleRequest,
+    SearchBudget,
 };
 use hstorm::simulator::event::{EventSimConfig, ServiceModel};
 use hstorm::util::cli::Args;
@@ -36,7 +37,8 @@ const VALUE_FLAGS: &[&str] = &[
     "topology", "scenario", "scheduler", "r0", "rate", "seconds", "task", "machine", "json",
     "config", "max-instances", "time-scale", "trace", "steps", "seed", "policy", "cooldown",
     "objective", "exclude", "headroom", "mode", "horizon", "service", "probe", "workload",
-    "tenancy", "metrics-out", "format",
+    "tenancy", "metrics-out", "format", "budget", "budget-vops", "target-gap", "beam-width",
+    "param",
 ];
 const BOOL_FLAGS: &[&str] =
     &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies"];
@@ -44,19 +46,21 @@ const BOOL_FLAGS: &[&str] =
 const USAGE: &str = "hstorm — heterogeneity-aware stream scheduling (Nasiri et al. 2020 repro)
 
 commands:
-  schedule  --topology T [--scenario 1..3] [--scheduler hetero|default|optimal]
+  schedule  --topology T [--scenario 1..3] [--scheduler NAME]
             [--objective max-throughput|min-machines:RATE|balanced]
             [--exclude m1,m2] [--headroom PCT] [--pjrt] [--r0 8]
-            [--max-instances 3] | --list-policies
+            [--max-instances 3] [--budget N] [--budget-vops N]
+            [--target-gap G] [--beam-width W] [--param k=v,...]
+            | --list-policies
             | --workload w.json [--tenancy joint|incremental|isolated]
   run       --topology T [--rate R] [--seconds S] [--time-scale X] [--pjrt-compute]
   simulate  --topology T [--scenario 1..3] [--mode analytic|event] [--rate R]
             [--horizon SECS] [--service exp|det] [--seed N] [--scheduler ...]
   control   --trace constant|diurnal|ramp|bursty [--topology T] [--scenario 1..3]
-            [--policy static|reactive|oracle|all] [--scheduler hetero|default|optimal]
+            [--policy static|reactive|oracle|all] [--scheduler NAME]
             [--probe analytic|event] [--steps 600] [--seed 42] [--cooldown 10]
             [--json out.json] | --workload w.json [--trace ...] [--steps N]
-  explain   [--topology T] [--scenario 1..3] [--scheduler hetero|default|optimal]
+  explain   [--topology T] [--scenario 1..3] [--scheduler NAME]
             [--objective ...] [--exclude ...] [--json out.json]
             | --trace constant|diurnal|ramp|bursty [--steps N] [--seed N]
   metrics   [--topology T] [--scenario 1..3] [--scheduler NAME] [--format prom|json]
@@ -76,11 +80,24 @@ topologies: linear diamond star rolling-count unique-visitor
 
 scheduling is one API everywhere: a Problem (topology + cluster +
 profiles, validated once) scheduled under a ScheduleRequest (objective +
-constraints), by a policy resolved from the registry —
-`--list-policies` prints the registered names.  --exclude reschedules
-around drained machines (zero tasks land there); --headroom keeps CPU
-budget free on every machine; min-machines:RATE packs the fewest
-machines that still sustain RATE tuple/s.
+constraints + search budget), by a policy resolved from the registry —
+`--list-policies` prints the registered names with each policy's
+parameter schema.  --exclude reschedules around drained machines (zero
+tasks land there); --headroom keeps CPU budget free on every machine;
+min-machines:RATE packs the fewest machines that still sustain RATE
+tuple/s.
+
+search policies (bnb, beam, anneal, and the portfolio that races all
+three) are anytime: give them a budget and they return the best feasible
+schedule found so far plus a certified optimality gap where one exists.
+--budget caps candidate evaluations, --budget-vops caps kernel
+virtual ops (machine-row updates), --target-gap G stops early once the
+certified gap falls to G (e.g. 0.05 for 5%).  bnb prunes with the
+admissible eq.-5 bound and, run to exhaustion, is bit-identical to
+`optimal` at a fraction of the candidates; beam/anneal are incomplete
+and claim no gap of their own.  --param k=v,... sets any key from the
+policy's schema (typos are rejected with the valid-key list); `explain`
+renders the resulting bound/gap certificate and `check` verifies it.
 
 schedule --workload places a multi-tenant workload (a JSON file naming
 tenants: topology, rate-weight, optional admit/drain steps — see the
@@ -266,13 +283,35 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Policy tunables from the command line.
+/// Policy tunables from the command line.  `--budget`, `--budget-vops`,
+/// `--target-gap` and `--beam-width` map onto the registry's parameter
+/// schema; `--param k=v[,k=v...]` sets any schema key directly (typos
+/// fail loudly with the valid-key list).
 fn params_from_args(args: &Args) -> Result<PolicyParams> {
-    Ok(PolicyParams {
+    let mut p = PolicyParams {
         r0: args.get_f64("r0", 8.0)?,
         max_instances_per_component: args.get_usize("max-instances", 3)?,
         ..Default::default()
-    })
+    };
+    for (flag, key) in [
+        ("budget", "budget-candidates"),
+        ("budget-vops", "budget-vops"),
+        ("target-gap", "target-gap"),
+        ("beam-width", "beam-width"),
+    ] {
+        if let Some(v) = args.get(flag) {
+            p.set(key, v)?;
+        }
+    }
+    if let Some(list) = args.get("param") {
+        for kv in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("--param expects key=value, got '{kv}'")))?;
+            p.set(k.trim(), v.trim())?;
+        }
+    }
+    Ok(p)
 }
 
 /// Objective + constraints from the command line.
@@ -300,7 +339,25 @@ fn request_from_args(args: &Args) -> Result<ScheduleRequest> {
     if headroom != 0.0 {
         constraints = constraints.reserve_headroom(headroom);
     }
-    Ok(ScheduleRequest::new(objective).with_constraints(constraints))
+    // the same budget flags also ride the request, where they override
+    // any policy-level default for every search policy
+    let mut budget = SearchBudget::unlimited();
+    if let Some(v) = args.get("budget") {
+        budget = budget.with_max_candidates(v.parse().map_err(|_| {
+            Error::Config(format!("--budget: '{v}' is not an integer candidate count"))
+        })?);
+    }
+    if let Some(v) = args.get("budget-vops") {
+        budget = budget.with_max_virtual_ops(v.parse().map_err(|_| {
+            Error::Config(format!("--budget-vops: '{v}' is not an integer virtual-op count"))
+        })?);
+    }
+    if let Some(v) = args.get("target-gap") {
+        budget = budget.with_target_gap(v.parse().map_err(|_| {
+            Error::Config(format!("--target-gap: '{v}' is not a number (e.g. 0.05 for 5%)"))
+        })?);
+    }
+    Ok(ScheduleRequest::new(objective).with_constraints(constraints).with_budget(budget))
 }
 
 /// Attach the PJRT AOT scorer to a problem (`--pjrt`).

@@ -67,6 +67,12 @@ pub struct Explanation {
     /// Candidate placements the search evaluated (from `Provenance`).
     pub evaluated: u64,
     pub wall_ms: f64,
+    /// Certified rate upper bound, when the search proved one.
+    pub bound: Option<f64>,
+    /// Certified relative optimality gap `(bound - rate) / rate`.
+    pub optimality_gap: Option<f64>,
+    /// Why the search stopped (`Termination::name`).
+    pub terminated: &'static str,
     pub bottleneck: Option<Bottleneck>,
     pub machines: Vec<MachineBreakdown>,
 }
@@ -137,6 +143,9 @@ pub fn analyze(
         rate: schedule.rate,
         evaluated: schedule.provenance.placements_evaluated,
         wall_ms: schedule.provenance.wall.as_secs_f64() * 1e3,
+        bound: schedule.provenance.bound,
+        optimality_gap: schedule.provenance.optimality_gap,
+        terminated: schedule.provenance.terminated.name(),
         bottleneck,
         machines,
     }
@@ -154,6 +163,18 @@ pub fn render(x: &Explanation) -> String {
         "  candidates evaluated : {}  (search wall {:.1} ms)\n",
         x.evaluated, x.wall_ms
     ));
+    match (x.bound, x.optimality_gap) {
+        (Some(bound), Some(gap)) => out.push_str(&format!(
+            "  optimality           : bound {:.3}, gap {:.2}%  (terminated: {})\n",
+            bound,
+            gap * 100.0,
+            x.terminated
+        )),
+        _ => out.push_str(&format!(
+            "  optimality           : no certificate  (terminated: {})\n",
+            x.terminated
+        )),
+    }
     match &x.bottleneck {
         Some(b) => out.push_str(&format!(
             "  bottleneck           : component '{}' on machine '{}' \
@@ -245,6 +266,9 @@ pub fn to_json(x: &Explanation) -> Value {
         ("rate", json::num(x.rate)),
         ("evaluated", json::num(x.evaluated as f64)),
         ("wall_ms", json::num(x.wall_ms)),
+        ("bound", x.bound.map(json::num).unwrap_or(Value::Null)),
+        ("optimality_gap", x.optimality_gap.map(json::num).unwrap_or(Value::Null)),
+        ("terminated", json::s(x.terminated)),
         (
             "bottleneck",
             match &x.bottleneck {
@@ -308,6 +332,29 @@ mod tests {
         assert_eq!(x.evaluated, s.provenance.placements_evaluated);
         assert_eq!(x.backend, s.provenance.backend);
         assert_eq!(x.machines.len(), cluster.n_machines());
+        assert_eq!(x.bound, s.provenance.bound);
+        assert_eq!(x.optimality_gap, s.provenance.optimality_gap);
+        assert_eq!(x.terminated, s.provenance.terminated.name());
+    }
+
+    #[test]
+    fn render_shows_gap_certificate_when_present() {
+        use crate::scheduler::Termination;
+        let (problem, mut s, top, cluster) = schedule_linear();
+        // a heuristic carries no certificate
+        let x = analyze(&top, &cluster, problem.evaluator(), &s);
+        assert!(render(&x).contains("no certificate"), "{}", render(&x));
+        // a budgeted search's certificate renders bound, gap and cause
+        s.provenance.bound = Some(s.rate * 1.05);
+        s.provenance.optimality_gap = Some(0.05);
+        s.provenance.terminated = Termination::Budget;
+        let x = analyze(&top, &cluster, problem.evaluator(), &s);
+        let text = render(&x);
+        assert!(text.contains("gap 5.00%"), "{text}");
+        assert!(text.contains("terminated: budget"), "{text}");
+        let v = to_json(&x);
+        assert_eq!(v.num_field("optimality_gap").unwrap(), 0.05);
+        assert_eq!(v.str_field("terminated").unwrap(), "budget");
     }
 
     #[test]

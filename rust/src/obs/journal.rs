@@ -53,6 +53,10 @@ pub enum Event {
     AdmissionGranted { tenant: String, step: usize },
     /// Event simulator: end-of-run stability verdict.
     BackpressureVerdict { rate: f64, backpressure: bool, queue_growth: f64, shed: u64 },
+    /// Portfolio search: one strategy finished its budget share.
+    StrategyFinished { policy: String, strategy: String, rate: f64, evaluated: u64 },
+    /// A deprecated registry alias resolved (warned once per process).
+    DeprecatedAlias { alias: String, canonical: String },
 }
 
 impl Event {
@@ -68,6 +72,8 @@ impl Event {
             Event::AdmissionDenied { .. } => "admission_denied",
             Event::AdmissionGranted { .. } => "admission_granted",
             Event::BackpressureVerdict { .. } => "backpressure_verdict",
+            Event::StrategyFinished { .. } => "strategy_finished",
+            Event::DeprecatedAlias { .. } => "deprecated_alias",
         }
     }
 
@@ -132,6 +138,16 @@ impl Event {
                 pairs.push(("backpressure", json::bool(*backpressure)));
                 pairs.push(("queue_growth", json::num(*queue_growth)));
                 pairs.push(("shed", json::num(*shed as f64)));
+            }
+            Event::StrategyFinished { policy, strategy, rate, evaluated } => {
+                pairs.push(("policy", json::s(policy)));
+                pairs.push(("strategy", json::s(strategy)));
+                pairs.push(("rate", json::num(*rate)));
+                pairs.push(("evaluated", json::num(*evaluated as f64)));
+            }
+            Event::DeprecatedAlias { alias, canonical } => {
+                pairs.push(("alias", json::s(alias)));
+                pairs.push(("canonical", json::s(canonical)));
             }
         }
         json::obj(pairs)

@@ -328,6 +328,36 @@ impl AccumState {
         }
     }
 
+    /// Admissible optimistic bound on [`rate`](Self::rate) over **every
+    /// completion** of the currently-pushed partial candidate.
+    ///
+    /// Identical arithmetic to `rate`, with one deliberate difference:
+    /// a partial state where no machine has a positive slope yet is
+    /// *unbounded-feasible* (any rate could still be certified by rows
+    /// not pushed yet), so the bound is `+∞` there — where `rate`
+    /// certifies `0` because a complete candidate without positive
+    /// slope sustains nothing.  An intercept already over budget still
+    /// bounds to `0`: pushes only add nonnegative `b`, so no completion
+    /// can become feasible again.
+    ///
+    /// Admissibility (bound ≥ true best over all completions) follows
+    /// from monotonicity: every push adds `a ≥ 0` and `b ≥ 0` per
+    /// machine, so `(cap_m − b_m)/a_m` can only shrink as rows land —
+    /// branch-and-bound may prune any subtree whose bound cannot beat
+    /// the incumbent without losing the optimum.
+    pub fn bound(&self, cap: &[f64]) -> f64 {
+        let mut best = f64::INFINITY;
+        for m in 0..self.a.len() {
+            if self.b[m] > cap[m] + 1e-9 {
+                return 0.0;
+            }
+            if self.a[m] > 0.0 {
+                best = best.min((cap[m] - self.b[m]) / self.a[m]);
+            }
+        }
+        best
+    }
+
     /// Utilization spread (max − min over non-excluded machines) at rate
     /// `r`, from the linear form `util_m = a_m·r + b_m`.
     pub fn spread(&self, excluded: &[bool], r: f64) -> f64 {
@@ -704,6 +734,35 @@ mod tests {
                 acc.machines_used(),
                 (0..ev.n_machines()).filter(|&m| p.tasks_on(m) > 0).count()
             );
+        }
+    }
+
+    #[test]
+    fn bound_is_admissible_and_monotone_along_pushes() {
+        let ev = setup();
+        let mut rng = Rng::new(31);
+        for _ in 0..64 {
+            let p = random_placement(&mut rng, ev.n_components(), ev.n_machines());
+            let rows = rows_of_placement(&ev, &p);
+            let full = ev.max_stable_rate_or_zero(&p).unwrap();
+            let mut acc = AccumState::new(ev.n_machines());
+            // the empty prefix bounds everything (no slope yet → +∞)
+            let mut prev = acc.bound(&ev.cap);
+            assert!(prev >= full);
+            for row in rows.iter().rev() {
+                acc.push(row);
+                let b = acc.bound(&ev.cap);
+                // admissible at every prefix: never below the true
+                // rate of this completion ...
+                assert!(b + 1e-9 >= full, "bound {b} underestimates completion rate {full}");
+                // ... and monotone nonincreasing as rows land
+                assert!(b <= prev + 1e-9, "bound rose from {prev} to {b}");
+                prev = b;
+            }
+            // complete candidate: bound degenerates to the exact rate
+            // (when a positive slope exists; rate() maps ∞ to 0)
+            let (b, r) = (acc.bound(&ev.cap), acc.rate(&ev.cap));
+            assert!(b == f64::INFINITY || (b - r).abs() < 1e-9, "{b} vs {r}");
         }
     }
 

@@ -174,6 +174,7 @@ impl Scheduler for DefaultScheduler {
             placements_evaluated: evaluated,
             backend: "native".into(),
             wall: started.elapsed(),
+            ..Default::default()
         };
         crate::scheduler::record_schedule_telemetry(&s, 0);
         crate::scheduler::debug_validate(problem, req, &s);

@@ -458,6 +458,7 @@ impl HeteroScheduler {
             placements_evaluated: evaluated,
             backend: scorer.backend().into(),
             wall: started.elapsed(),
+            ..Default::default()
         };
         if crate::obs::enabled() && (pre_objective_rate - s.rate).abs() > 1e-9 {
             crate::obs::global().journal().record(crate::obs::Event::RunnerUp {

@@ -45,11 +45,12 @@ pub mod problem;
 pub mod registry;
 pub mod request;
 pub mod reschedule;
+pub mod search;
 pub mod workload;
 
 pub use problem::{IntoCow, Problem, ResolvedConstraints};
 pub use registry::PolicyParams;
-pub use request::{Constraints, Objective, ScheduleRequest};
+pub use request::{Constraints, Objective, ScheduleRequest, SearchBudget};
 pub use workload::{
     TenancyMode, TenantSchedule, TenantSpec, Workload, WorkloadProblem, WorkloadSchedule,
 };
@@ -60,6 +61,29 @@ use crate::cluster::Cluster;
 use crate::predict::{Evaluation, Evaluator, Placement};
 use crate::topology::Topology;
 use crate::{Error, Result};
+
+/// Why a search run stopped.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Termination {
+    /// The search covered its whole (possibly bound-pruned) space.
+    #[default]
+    Exhausted,
+    /// The request's [`request::SearchBudget`] ran out first.
+    Budget,
+    /// The certified optimality gap reached the requested target first.
+    TargetGap,
+}
+
+impl Termination {
+    /// Stable lower-case name for rendering and JSON export.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Termination::Exhausted => "exhausted",
+            Termination::Budget => "budget",
+            Termination::TargetGap => "target-gap",
+        }
+    }
+}
 
 /// How a [`Schedule`] came to be.
 #[derive(Debug, Clone, Default)]
@@ -74,6 +98,16 @@ pub struct Provenance {
     pub backend: String,
     /// Wall-clock time spent inside the scheduler.
     pub wall: Duration,
+    /// Certified upper bound on the rate of *any* candidate in the
+    /// search space, when the search can prove one (`None` for
+    /// heuristics that carry no bound).
+    pub bound: Option<f64>,
+    /// Relative optimality gap `(bound − rate) / rate`: how far the
+    /// returned schedule could be from the best possible one.  Always
+    /// ≥ 0, and exactly 0 whenever the search ran to exhaustion.
+    pub optimality_gap: Option<f64>,
+    /// Why the search stopped.
+    pub terminated: Termination,
 }
 
 impl Provenance {
@@ -87,18 +121,34 @@ impl Provenance {
         self.backend = other.backend.clone();
         self.placements_evaluated += other.placements_evaluated;
         self.wall += other.wall;
+        // certainty fields describe the latest run, like identity
+        self.bound = other.bound;
+        self.optimality_gap = other.optimality_gap;
+        self.terminated = other.terminated;
     }
 
     /// One-line rendering for CLI output and reports.
     pub fn render(&self) -> String {
-        format!(
+        let mut line = format!(
             "policy={} objective={} backend={} evaluated={} wall={:.1}ms",
             self.policy,
             self.objective,
             self.backend,
             self.placements_evaluated,
             self.wall.as_secs_f64() * 1e3
-        )
+        );
+        if let Some(b) = self.bound {
+            if b.is_finite() {
+                line.push_str(&format!(" bound={b:.1}"));
+            }
+        }
+        if let Some(g) = self.optimality_gap {
+            line.push_str(&format!(" gap={:.2}%", g * 100.0));
+        }
+        if self.terminated != Termination::Exhausted {
+            line.push_str(&format!(" terminated={}", self.terminated.name()));
+        }
+        line
     }
 }
 
@@ -470,6 +520,7 @@ mod tests {
             placements_evaluated: 10,
             backend: "native".into(),
             wall: Duration::from_millis(5),
+            ..Default::default()
         };
         let other = Provenance {
             policy: "optimal".into(),
@@ -477,12 +528,19 @@ mod tests {
             placements_evaluated: 32,
             backend: "pjrt".into(),
             wall: Duration::from_millis(7),
+            bound: Some(120.0),
+            optimality_gap: Some(0.05),
+            terminated: Termination::Budget,
         };
         acc.absorb(&other);
         // identity fields follow the latest run...
         assert_eq!(acc.policy, "optimal");
         assert_eq!(acc.objective, "balanced-utilization");
         assert_eq!(acc.backend, "pjrt");
+        // ...as do the certainty fields (they describe the latest run)
+        assert_eq!(acc.bound, Some(120.0));
+        assert_eq!(acc.optimality_gap, Some(0.05));
+        assert_eq!(acc.terminated, Termination::Budget);
         // ...while the counters accumulate across runs
         assert_eq!(acc.placements_evaluated, 42);
         assert_eq!(acc.wall, Duration::from_millis(12));
@@ -500,6 +558,7 @@ mod tests {
             placements_evaluated: 9,
             backend: "native".into(),
             wall: Duration::from_millis(3),
+            ..Default::default()
         };
         acc.absorb(&Provenance::default());
         assert_eq!(acc.policy, "");
@@ -517,9 +576,23 @@ mod tests {
             placements_evaluated: 42,
             backend: "native".into(),
             wall: Duration::from_millis(3),
+            ..Default::default()
         };
         let line = pv.render();
         for needle in ["hetero", "max-throughput", "native", "42"] {
+            assert!(line.contains(needle), "{line}");
+        }
+        // no bound/gap → none rendered; exhausted is the quiet default
+        assert!(!line.contains("bound=") && !line.contains("gap="), "{line}");
+        assert!(!line.contains("terminated="), "{line}");
+        let pv = Provenance {
+            bound: Some(110.0),
+            optimality_gap: Some(0.1),
+            terminated: Termination::Budget,
+            ..pv
+        };
+        let line = pv.render();
+        for needle in ["bound=110.0", "gap=10.00%", "terminated=budget"] {
             assert!(line.contains(needle), "{line}");
         }
     }

@@ -112,30 +112,31 @@ fn placements_of(k: u64, m: u64) -> u128 {
 }
 
 /// The best candidate seen so far, under one objective.
-struct Best {
-    placement: Placement,
-    rate: f64,
+pub(crate) struct Best {
+    pub(crate) placement: Placement,
+    pub(crate) rate: f64,
     /// Machines hosting tasks (MinMachinesAtRate key).
-    used: usize,
+    pub(crate) used: usize,
     /// Utilization spread at `rate` (BalancedUtilization tie-breaker).
-    spread: f64,
+    pub(crate) spread: f64,
 }
 
-/// Shared read-only state of one kernel search (borrowed by every shard).
-struct KernelCtx<'a> {
-    ev: &'a Evaluator,
-    rc: &'a ResolvedConstraints,
-    objective: &'a Objective,
+/// Shared read-only state of one kernel search (borrowed by every shard;
+/// also the substrate of the [`super::search`] portfolio strategies).
+pub(crate) struct KernelCtx<'a> {
+    pub(crate) ev: &'a Evaluator,
+    pub(crate) rc: &'a ResolvedConstraints,
+    pub(crate) objective: &'a Objective,
     /// Full-width count rows per component (placement materialization).
-    rows: &'a [Vec<Vec<usize>>],
+    pub(crate) rows: &'a [Vec<Vec<usize>>],
     /// The same rows as precomputed slope/intercept terms.
-    tables: &'a [RowTable],
+    pub(crate) tables: &'a [RowTable],
 }
 
 impl KernelCtx<'_> {
     /// Build the placement selected by one row index per component —
     /// only paid when a candidate actually becomes the running best.
-    fn materialize(&self, sel: &[usize]) -> Placement {
+    pub(crate) fn materialize(&self, sel: &[usize]) -> Placement {
         Placement {
             x: sel.iter().enumerate().map(|(c, &i)| self.rows[c][i].clone()).collect(),
         }
@@ -145,7 +146,7 @@ impl KernelCtx<'_> {
     /// the objective.  `make` materializes the placement lazily.
     /// Returns the candidate's `R0*` so leaves can count infeasible
     /// (pruned) candidates without re-reading the accumulator.
-    fn consider_scored(
+    pub(crate) fn consider_scored(
         &self,
         acc: &AccumState,
         make: impl FnOnce() -> Placement,
@@ -193,7 +194,12 @@ impl KernelCtx<'_> {
     /// arithmetic and push order as the enumeration, so a seed that ties
     /// an enumerated twin compares bit-identically.  Returns the seed's
     /// `R0*` (journaled as a runner-up candidate).
-    fn consider_seed(&self, p: Placement, best: &mut Option<Best>, evaluated: &mut u64) -> f64 {
+    pub(crate) fn consider_seed(
+        &self,
+        p: Placement,
+        best: &mut Option<Best>,
+        evaluated: &mut u64,
+    ) -> f64 {
         let rows = kernel::rows_of_placement(self.ev, &p);
         let mut acc = AccumState::new(self.ev.n_machines());
         for row in rows.iter().rev() {
@@ -276,7 +282,7 @@ fn shard_ranges(n: usize, t: usize) -> Vec<std::ops::Range<usize>> {
 /// Fold a shard's winner into the running best under the objective —
 /// the same strictly-better predicate as the in-shard fold, applied in
 /// shard (= enumeration) order.
-fn merge_best(objective: &Objective, cur: &mut Option<Best>, cand: Option<Best>) {
+pub(crate) fn merge_best(objective: &Objective, cur: &mut Option<Best>, cand: Option<Best>) {
     let Some(cand) = cand else { return };
     let take = match cur.as_ref() {
         None => true,
@@ -293,6 +299,54 @@ fn merge_best(objective: &Objective, cur: &mut Option<Best>, cand: Option<Best>)
     };
     if take {
         *cur = Some(cand);
+    }
+}
+
+/// Score the heuristics' solutions as seed candidates through the
+/// kernel's row arithmetic (RR first, then hetero — the batched
+/// engine's order), journaling each as a runner-up under `policy`.
+/// Shared by the exhaustive kernel search and the [`super::search`]
+/// portfolio strategies so every engine starts from the same incumbent.
+pub(crate) fn seed_candidates(
+    ctx: &KernelCtx,
+    problem: &Problem,
+    req: &ScheduleRequest,
+    policy: &str,
+    best: &mut Option<Best>,
+    evaluated: &mut u64,
+) {
+    use crate::scheduler::default_rr::DefaultScheduler;
+    use crate::scheduler::hetero::HeteroScheduler;
+    let seed_req = ScheduleRequest::max_throughput().with_constraints(req.constraints.clone());
+    if let Ok(h) = HeteroScheduler::default().schedule(problem, &seed_req) {
+        let etg = crate::topology::Etg { counts: h.placement.counts() };
+        let mut seeds: Vec<(&str, f64)> = Vec::new();
+        if let Ok(rr) =
+            DefaultScheduler::assign_constrained(problem.topology(), problem.cluster(), &etg, ctx.rc)
+        {
+            seeds.push(("seed-rr", ctx.consider_seed(rr, best, evaluated)));
+        }
+        seeds.push(("seed-hetero", ctx.consider_seed(h.placement, best, evaluated)));
+        if crate::obs::enabled() {
+            let journal = crate::obs::global().journal();
+            for (label, rate) in seeds {
+                journal.record(crate::obs::Event::RunnerUp {
+                    policy: policy.into(),
+                    label: label.into(),
+                    rate,
+                });
+            }
+        }
+    }
+}
+
+/// The "no candidate survived" error, per objective.
+pub(crate) fn no_best_error(objective: &Objective) -> Error {
+    match objective {
+        Objective::MinMachinesAtRate(t) => {
+            Error::Schedule(format!("no placement in the design space sustains rate {t:.3}"))
+        }
+        _ => Error::Schedule("empty design space".into()),
     }
 }
 
@@ -338,7 +392,12 @@ impl OptimalScheduler {
     /// Placement rows for component `c`: counts `1..=min(bound, cap_c)`
     /// distributed over the machines the constraints allow it, scattered
     /// back to full cluster width.
-    fn component_rows(&self, c: usize, n_m: usize, rc: &ResolvedConstraints) -> Vec<Vec<usize>> {
+    pub(crate) fn component_rows(
+        &self,
+        c: usize,
+        n_m: usize,
+        rc: &ResolvedConstraints,
+    ) -> Vec<Vec<usize>> {
         let allowed: Vec<usize> = (0..n_m).filter(|&m| rc.allows(c, m)).collect();
         let k_max = self.max_instances_per_component.min(rc.max_instances[c]);
         let mut packed = Vec::new();
@@ -505,31 +564,39 @@ impl OptimalScheduler {
         if self.seed_heuristics {
             // include the heuristics' solutions in the candidate set, in
             // the same order the batched engine scores them (RR first)
-            use crate::scheduler::default_rr::DefaultScheduler;
-            use crate::scheduler::hetero::HeteroScheduler;
-            let seed_req =
-                ScheduleRequest::max_throughput().with_constraints(req.constraints.clone());
-            if let Ok(h) = HeteroScheduler::default().schedule(problem, &seed_req) {
-                let etg = crate::topology::Etg { counts: h.placement.counts() };
-                let mut seeds: Vec<(&str, f64)> = Vec::new();
-                if let Ok(rr) =
-                    DefaultScheduler::assign_constrained(top, problem.cluster(), &etg, rc)
-                {
-                    seeds.push(("seed-rr", ctx.consider_seed(rr, &mut best, &mut evaluated)));
-                }
-                let hr = ctx.consider_seed(h.placement, &mut best, &mut evaluated);
-                seeds.push(("seed-hetero", hr));
-                if crate::obs::enabled() {
-                    let journal = crate::obs::global().journal();
-                    for (label, rate) in seeds {
-                        journal.record(crate::obs::Event::RunnerUp {
-                            policy: self.name().into(),
-                            label: label.into(),
-                            rate,
-                        });
-                    }
-                }
+            seed_candidates(&ctx, problem, req, self.name(), &mut best, &mut evaluated);
+        }
+
+        if !req.budget.is_unlimited() {
+            // anytime mode: a sequential budgeted walk over the same
+            // enumeration order (no bound pruning — this policy's
+            // contract is the plain exhaustive fold), reporting partial
+            // coverage through the provenance certainty fields
+            let mut meter = super::search::BudgetMeter::new(&req.budget, n_m as u64);
+            meter.charge_n(evaluated); // the seeds count against the budget
+            let glob = super::search::global_bound(&ctx);
+            let out = super::search::walk(&ctx, best, glob, &mut meter, false);
+            evaluated += out.evaluated;
+            pruned += out.pruned;
+            let best = out.best.ok_or_else(|| no_best_error(&req.objective))?;
+            if best.rate <= 0.0 {
+                return Err(Error::Schedule("no feasible placement in the design space".into()));
             }
+            let mut s = finish(ev, best.placement)?;
+            let (bound, gap) = super::search::certify(out.terminated, s.rate, out.frontier, glob);
+            s.provenance = Provenance {
+                policy: self.name().into(),
+                objective: req.objective.describe(),
+                placements_evaluated: evaluated,
+                backend: "kernel".into(),
+                wall: started.elapsed(),
+                bound,
+                optimality_gap: gap,
+                terminated: out.terminated,
+            };
+            super::record_schedule_telemetry(&s, pruned);
+            super::debug_validate(problem, req, &s);
+            return Ok(s);
         }
 
         let outer_rows = tables[n_comp - 1].rows.len();
@@ -583,12 +650,7 @@ impl OptimalScheduler {
             }
         }
 
-        let best = best.ok_or_else(|| match req.objective {
-            Objective::MinMachinesAtRate(t) => Error::Schedule(format!(
-                "no placement in the design space sustains rate {t:.3}"
-            )),
-            _ => Error::Schedule("empty design space".into()),
-        })?;
+        let best = best.ok_or_else(|| no_best_error(&req.objective))?;
         if best.rate <= 0.0 {
             return Err(Error::Schedule("no feasible placement in the design space".into()));
         }
@@ -599,6 +661,10 @@ impl OptimalScheduler {
             placements_evaluated: evaluated,
             backend: "kernel".into(),
             wall: started.elapsed(),
+            // exhaustion proves the incumbent is the space's optimum
+            bound: Some(s.rate),
+            optimality_gap: Some(0.0),
+            terminated: super::Termination::Exhausted,
         };
         super::record_schedule_telemetry(&s, pruned);
         super::debug_validate(problem, req, &s);
@@ -666,6 +732,15 @@ impl OptimalScheduler {
             }
         }
 
+        // deterministic anytime cap: candidates directly, and virtual
+        // ops as candidates × machines (each batched score is O(M))
+        let cand_cap: u64 = req
+            .budget
+            .max_candidates
+            .unwrap_or(u64::MAX)
+            .min(req.budget.max_virtual_ops.map_or(u64::MAX, |v| v / (n_m as u64).max(1)));
+        const BUDGET_STOP: &str = "__search budget exhausted__";
+        let mut terminated = super::Termination::Exhausted;
         match &self.space {
             SearchSpace::Exhaustive => {
                 let rows: Vec<Vec<Vec<usize>>> =
@@ -679,13 +754,22 @@ impl OptimalScheduler {
                         self.enumeration_limit
                     )));
                 }
-                Self::enumerate(&rows, &mut |p| {
+                let walked = Self::enumerate(&rows, &mut |p| {
+                    if evaluated + buf.len() as u64 >= cand_cap {
+                        return Err(Error::Schedule(BUDGET_STOP.into()));
+                    }
                     buf.push(p);
                     if buf.len() == 256 {
                         flush(&mut buf, &mut best, &mut evaluated, &mut pruned)?;
                     }
                     Ok(())
-                })?;
+                });
+                match walked {
+                    Err(Error::Schedule(msg)) if msg == BUDGET_STOP => {
+                        terminated = super::Termination::Budget;
+                    }
+                    other => other?,
+                }
                 flush(&mut buf, &mut best, &mut evaluated, &mut pruned)?;
             }
             SearchSpace::Sampled { candidates, seed } => {
@@ -694,6 +778,10 @@ impl OptimalScheduler {
                     .map(|c| (0..n_m).filter(|&m| rc.allows(c, m)).collect())
                     .collect();
                 for _ in 0..*candidates {
+                    if evaluated + buf.len() as u64 >= cand_cap {
+                        terminated = super::Termination::Budget;
+                        break;
+                    }
                     let mut p = Placement::empty(n_comp, n_m);
                     for (c, hosts) in allowed.iter().enumerate() {
                         let k_max = self.max_instances_per_component.min(rc.max_instances[c]);
@@ -711,22 +799,28 @@ impl OptimalScheduler {
             }
         }
 
-        let best = best.ok_or_else(|| match req.objective {
-            Objective::MinMachinesAtRate(t) => Error::Schedule(format!(
-                "no placement in the design space sustains rate {t:.3}"
-            )),
-            _ => Error::Schedule("empty design space".into()),
-        })?;
+        let best = best.ok_or_else(|| no_best_error(&req.objective))?;
         if best.rate <= 0.0 {
             return Err(Error::Schedule("no feasible placement in the design space".into()));
         }
         let mut s = finish(ev, best.placement)?;
+        // a complete exhaustive sweep certifies optimality; sampling and
+        // budget-truncated walks prove no bound through this engine
+        let (bound, gap) = match (&self.space, terminated) {
+            (SearchSpace::Exhaustive, super::Termination::Exhausted) => {
+                (Some(s.rate), Some(0.0))
+            }
+            _ => (None, None),
+        };
         s.provenance = Provenance {
             policy: self.name().into(),
             objective: req.objective.describe(),
             placements_evaluated: evaluated,
             backend: scorer.backend().into(),
             wall: started.elapsed(),
+            bound,
+            optimality_gap: gap,
+            terminated,
         };
         super::record_schedule_telemetry(&s, pruned);
         super::debug_validate(problem, req, &s);

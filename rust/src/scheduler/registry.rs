@@ -5,12 +5,19 @@
 //! the experiment harness and the control plane all construct policies
 //! through [`create`], so the set of valid names — and their spellings —
 //! cannot drift between entry points.  `hstorm schedule --list-policies`
-//! prints [`describe_all`].
+//! prints [`describe_all`], which now includes each policy's parameter
+//! schema ([`ParamSpec`]).  Deprecated aliases keep resolving but warn
+//! once per process through the journal (`deprecated_alias`).
+
+use std::collections::BTreeSet;
+use std::sync::Mutex;
 
 use super::default_rr::{DefaultScheduler, EtgSource};
 use super::hetero::HeteroScheduler;
 use super::optimal::{OptimalScheduler, SearchSpace};
-use super::Scheduler;
+use super::search::portfolio::StrategyMix;
+use super::search::{AnnealScheduler, BeamScheduler, BnbScheduler, PortfolioScheduler};
+use super::{Scheduler, SearchBudget};
 use crate::{Error, Result};
 
 /// Tunables a policy factory may consume.  Every field has the
@@ -25,9 +32,9 @@ pub struct PolicyParams {
     pub refine: bool,
     /// Upper bound on executors per worker, the paper's `k_j` (hetero).
     pub max_tasks_per_machine: usize,
-    /// Instance-count bound on the design space (optimal).
+    /// Instance-count bound on the design space (optimal/search).
     pub max_instances_per_component: usize,
-    /// Seed the optimal search with the heuristics' solutions (optimal).
+    /// Seed the search with the heuristics' solutions (optimal/search).
     pub seed_heuristics: bool,
     /// `Some((candidates, seed))` switches the optimal search to
     /// uniform sampling (optimal).
@@ -36,6 +43,24 @@ pub struct PolicyParams {
     /// ETG (default policy; the paper's §6.3 fair-comparison protocol
     /// uses the proposed ETG, which is the default here).
     pub minimal_etg: bool,
+    /// Default candidate budget for the search policies (`None`:
+    /// unlimited; a budget on the [`super::ScheduleRequest`] wins).
+    pub budget_candidates: Option<u64>,
+    /// Default virtual-op budget for the search policies.
+    pub budget_vops: Option<u64>,
+    /// Default target optimality gap (fraction; search policies stop
+    /// once the incumbent certifies within it).
+    pub target_gap: Option<f64>,
+    /// Portfolio budget shares (normalized at run time).
+    pub mix_bnb: f64,
+    pub mix_beam: f64,
+    pub mix_anneal: f64,
+    /// Beam width (beam/portfolio).
+    pub beam_width: usize,
+    /// Annealing restarts/steps/seed (anneal/portfolio).
+    pub anneal_restarts: usize,
+    pub anneal_steps: usize,
+    pub anneal_seed: u64,
 }
 
 impl Default for PolicyParams {
@@ -48,9 +73,217 @@ impl Default for PolicyParams {
             seed_heuristics: true,
             sampled: None,
             minimal_etg: false,
+            budget_candidates: None,
+            budget_vops: None,
+            target_gap: None,
+            mix_bnb: 0.5,
+            mix_beam: 0.25,
+            mix_anneal: 0.25,
+            beam_width: 8,
+            anneal_restarts: 4,
+            anneal_steps: 400,
+            anneal_seed: 0xA11E_A1,
         }
     }
 }
+
+fn parse<T: std::str::FromStr>(key: &str, value: &str, ty: &str) -> Result<T> {
+    value.parse::<T>().map_err(|_| {
+        Error::Config(format!("invalid value '{value}' for parameter '{key}' (expected {ty})"))
+    })
+}
+
+impl PolicyParams {
+    /// The default [`SearchBudget`] these params encode (a budget set on
+    /// the request overrides it).
+    pub fn budget(&self) -> SearchBudget {
+        SearchBudget {
+            max_candidates: self.budget_candidates,
+            max_virtual_ops: self.budget_vops,
+            target_gap: self.target_gap,
+        }
+    }
+
+    /// Set one parameter from its kebab-case key (the CLI's
+    /// `--param key=value` and the JSON config surface).  Unknown keys
+    /// and malformed values fail loudly — a typo must never silently
+    /// fall back to a default.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "r0" => self.r0 = parse(key, value, "float")?,
+            "refine" => self.refine = parse(key, value, "bool")?,
+            "max-tasks-per-machine" => {
+                self.max_tasks_per_machine = parse(key, value, "integer")?
+            }
+            "max-instances" => self.max_instances_per_component = parse(key, value, "integer")?,
+            "seed-heuristics" => self.seed_heuristics = parse(key, value, "bool")?,
+            "minimal-etg" => self.minimal_etg = parse(key, value, "bool")?,
+            "budget-candidates" => {
+                self.budget_candidates = Some(parse(key, value, "integer")?)
+            }
+            "budget-vops" => self.budget_vops = Some(parse(key, value, "integer")?),
+            "target-gap" => self.target_gap = Some(parse(key, value, "float")?),
+            "mix-bnb" => self.mix_bnb = parse(key, value, "float")?,
+            "mix-beam" => self.mix_beam = parse(key, value, "float")?,
+            "mix-anneal" => self.mix_anneal = parse(key, value, "float")?,
+            "beam-width" => self.beam_width = parse(key, value, "integer")?,
+            "anneal-restarts" => self.anneal_restarts = parse(key, value, "integer")?,
+            "anneal-steps" => self.anneal_steps = parse(key, value, "integer")?,
+            "anneal-seed" => self.anneal_seed = parse(key, value, "integer")?,
+            _ => {
+                return Err(Error::Config(format!(
+                    "unknown policy parameter '{key}' (valid: r0|refine|\
+                     max-tasks-per-machine|max-instances|seed-heuristics|minimal-etg|\
+                     budget-candidates|budget-vops|target-gap|mix-bnb|mix-beam|mix-anneal|\
+                     beam-width|anneal-restarts|anneal-steps|anneal-seed)"
+                )))
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One entry of a policy's parameter schema (rendered by
+/// [`describe_all`]; `default` is the rendered default value).
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub ty: &'static str,
+    pub default: &'static str,
+    pub doc: &'static str,
+}
+
+const P_MAX_INSTANCES: ParamSpec = ParamSpec {
+    name: "max-instances",
+    ty: "integer",
+    default: "3",
+    doc: "instance-count bound on the design space",
+};
+const P_SEED_HEURISTICS: ParamSpec = ParamSpec {
+    name: "seed-heuristics",
+    ty: "bool",
+    default: "true",
+    doc: "fold the heuristics' solutions into the candidate set",
+};
+const P_BUDGET: [ParamSpec; 3] = [
+    ParamSpec {
+        name: "budget-candidates",
+        ty: "integer",
+        default: "unlimited",
+        doc: "default candidate budget (a request budget wins)",
+    },
+    ParamSpec {
+        name: "budget-vops",
+        ty: "integer",
+        default: "unlimited",
+        doc: "default virtual-op budget (bound probes included)",
+    },
+    ParamSpec {
+        name: "target-gap",
+        ty: "float",
+        default: "none",
+        doc: "stop once the certified gap falls within this fraction",
+    },
+];
+
+static PARAMS_HETERO: &[ParamSpec] = &[
+    ParamSpec {
+        name: "r0",
+        ty: "float",
+        default: "8.0",
+        doc: "initial topology input rate for Alg. 2",
+    },
+    ParamSpec {
+        name: "refine",
+        ty: "bool",
+        default: "true",
+        doc: "post-pass refinement on/off",
+    },
+    ParamSpec {
+        name: "max-tasks-per-machine",
+        ty: "integer",
+        default: "32",
+        doc: "upper bound on executors per worker (paper's k_j)",
+    },
+];
+static PARAMS_DEFAULT: &[ParamSpec] = &[ParamSpec {
+    name: "minimal-etg",
+    ty: "bool",
+    default: "false",
+    doc: "place the minimal user graph instead of the proposed ETG",
+}];
+static PARAMS_OPTIMAL: &[ParamSpec] = &[P_MAX_INSTANCES, P_SEED_HEURISTICS];
+static PARAMS_BNB: &[ParamSpec] = &[
+    P_MAX_INSTANCES,
+    P_SEED_HEURISTICS,
+    P_BUDGET[0],
+    P_BUDGET[1],
+    P_BUDGET[2],
+];
+static PARAMS_BEAM: &[ParamSpec] = &[
+    P_MAX_INSTANCES,
+    P_SEED_HEURISTICS,
+    ParamSpec {
+        name: "beam-width",
+        ty: "integer",
+        default: "8",
+        doc: "partial candidates kept per level",
+    },
+    P_BUDGET[0],
+    P_BUDGET[1],
+];
+static PARAMS_ANNEAL: &[ParamSpec] = &[
+    P_MAX_INSTANCES,
+    ParamSpec {
+        name: "anneal-restarts",
+        ty: "integer",
+        default: "4",
+        doc: "independent restarts from the base placement",
+    },
+    ParamSpec {
+        name: "anneal-steps",
+        ty: "integer",
+        default: "400",
+        doc: "annealing steps per restart",
+    },
+    ParamSpec {
+        name: "anneal-seed",
+        ty: "integer",
+        default: "10558113",
+        doc: "deterministic RNG seed",
+    },
+    P_BUDGET[0],
+    P_BUDGET[1],
+];
+static PARAMS_PORTFOLIO: &[ParamSpec] = &[
+    P_MAX_INSTANCES,
+    ParamSpec {
+        name: "mix-bnb",
+        ty: "float",
+        default: "0.5",
+        doc: "budget share of the branch-and-bound stage",
+    },
+    ParamSpec {
+        name: "mix-beam",
+        ty: "float",
+        default: "0.25",
+        doc: "budget share of the beam stage",
+    },
+    ParamSpec {
+        name: "mix-anneal",
+        ty: "float",
+        default: "0.25",
+        doc: "budget share of the annealing stage",
+    },
+    ParamSpec {
+        name: "beam-width",
+        ty: "integer",
+        default: "8",
+        doc: "beam width of the beam stage",
+    },
+    P_BUDGET[0],
+    P_BUDGET[1],
+    P_BUDGET[2],
+];
 
 /// One registry row.
 pub struct PolicyInfo {
@@ -58,8 +291,13 @@ pub struct PolicyInfo {
     pub name: &'static str,
     /// Accepted alternative spellings.
     pub aliases: &'static [&'static str],
+    /// Spellings that still resolve but journal a `deprecated_alias`
+    /// warning once per process.
+    pub deprecated: &'static [&'static str],
     /// One-line description for `--list-policies`.
     pub summary: &'static str,
+    /// Parameter schema rendered by [`describe_all`].
+    pub params: &'static [ParamSpec],
     factory: fn(&PolicyParams) -> Box<dyn Scheduler>,
 }
 
@@ -76,13 +314,17 @@ static POLICIES: &[PolicyInfo] = &[
     PolicyInfo {
         name: "hetero",
         aliases: &["proposed"],
+        deprecated: &[],
         summary: "the paper's heterogeneity-aware scheduler (Alg. 1 + Alg. 2 + refinement)",
+        params: PARAMS_HETERO,
         factory: |p| Box::new(make_hetero(p)),
     },
     PolicyInfo {
         name: "default",
-        aliases: &["default-rr", "rr"],
+        aliases: &["default-rr"],
+        deprecated: &["rr"],
         summary: "Storm's Round-Robin baseline (places the proposed ETG unless minimal_etg)",
+        params: PARAMS_DEFAULT,
         factory: |p| {
             let source = if p.minimal_etg {
                 EtgSource::Minimal
@@ -94,8 +336,10 @@ static POLICIES: &[PolicyInfo] = &[
     },
     PolicyInfo {
         name: "optimal",
-        aliases: &["exhaustive"],
+        aliases: &[],
+        deprecated: &["exhaustive"],
         summary: "bounded exhaustive/sampled search over the placement design space",
+        params: PARAMS_OPTIMAL,
         factory: |p| {
             Box::new(OptimalScheduler {
                 max_instances_per_component: p.max_instances_per_component,
@@ -104,6 +348,71 @@ static POLICIES: &[PolicyInfo] = &[
                     None => SearchSpace::Exhaustive,
                 },
                 seed_heuristics: p.seed_heuristics,
+                ..Default::default()
+            })
+        },
+    },
+    PolicyInfo {
+        name: "bnb",
+        aliases: &["branch-and-bound"],
+        deprecated: &[],
+        summary: "branch-and-bound: exhaustive-identical fold with admissible bound pruning",
+        params: PARAMS_BNB,
+        factory: |p| {
+            Box::new(BnbScheduler {
+                max_instances_per_component: p.max_instances_per_component,
+                seed_heuristics: p.seed_heuristics,
+                budget: p.budget(),
+                ..Default::default()
+            })
+        },
+    },
+    PolicyInfo {
+        name: "beam",
+        aliases: &[],
+        deprecated: &[],
+        summary: "beam search over per-component rows, bound-ranked, budget-degradable",
+        params: PARAMS_BEAM,
+        factory: |p| {
+            Box::new(BeamScheduler {
+                max_instances_per_component: p.max_instances_per_component,
+                width: p.beam_width,
+                seed_heuristics: p.seed_heuristics,
+                budget: p.budget(),
+            })
+        },
+    },
+    PolicyInfo {
+        name: "anneal",
+        aliases: &["local-search"],
+        deprecated: &[],
+        summary: "seeded simulated annealing over O(1) placement deltas (deterministic replay)",
+        params: PARAMS_ANNEAL,
+        factory: |p| {
+            Box::new(AnnealScheduler {
+                max_instances_per_component: p.max_instances_per_component,
+                restarts: p.anneal_restarts,
+                steps: p.anneal_steps,
+                seed: p.anneal_seed,
+                budget: p.budget(),
+            })
+        },
+    },
+    PolicyInfo {
+        name: "portfolio",
+        aliases: &[],
+        deprecated: &[],
+        summary: "bnb + beam + anneal racing under one budget, with a certified optimality gap",
+        params: PARAMS_PORTFOLIO,
+        factory: |p| {
+            Box::new(PortfolioScheduler {
+                max_instances_per_component: p.max_instances_per_component,
+                mix: StrategyMix { bnb: p.mix_bnb, beam: p.mix_beam, anneal: p.mix_anneal },
+                width: p.beam_width,
+                restarts: p.anneal_restarts,
+                steps: p.anneal_steps,
+                seed: p.anneal_seed,
+                budget: p.budget(),
                 ..Default::default()
             })
         },
@@ -120,18 +429,41 @@ pub fn names() -> Vec<&'static str> {
     POLICIES.iter().map(|p| p.name).collect()
 }
 
-/// Shared row lookup: one registry scan serves both [`canonical`] and
-/// [`create`], so neither needs a second fallible lookup.
-fn lookup(name: &str) -> Result<&'static PolicyInfo> {
-    POLICIES.iter().find(|p| p.name == name || p.aliases.contains(&name)).ok_or_else(|| {
-        Error::Config(format!(
-            "unknown scheduler policy '{name}' (valid: {})",
-            names().join("|")
-        ))
-    })
+/// Deprecated spellings already warned about (once per process).
+static WARNED: Mutex<BTreeSet<String>> = Mutex::new(BTreeSet::new());
+
+fn warn_deprecated(alias: &str, canonical: &'static str) {
+    let mut warned = WARNED.lock().unwrap_or_else(|e| e.into_inner());
+    if !warned.insert(alias.to_string()) {
+        return;
+    }
+    if crate::obs::enabled() {
+        crate::obs::global().journal().record(crate::obs::Event::DeprecatedAlias {
+            alias: alias.into(),
+            canonical: canonical.into(),
+        });
+    }
 }
 
-/// Resolve `name` (canonical or alias) to its canonical name.
+/// Shared row lookup: one registry scan serves both [`canonical`] and
+/// [`create`], so neither needs a second fallible lookup.  Deprecated
+/// spellings resolve with a once-per-process journal warning.
+fn lookup(name: &str) -> Result<&'static PolicyInfo> {
+    if let Some(p) = POLICIES.iter().find(|p| p.name == name || p.aliases.contains(&name)) {
+        return Ok(p);
+    }
+    if let Some(p) = POLICIES.iter().find(|p| p.deprecated.contains(&name)) {
+        warn_deprecated(name, p.name);
+        return Ok(p);
+    }
+    Err(Error::Config(format!(
+        "unknown scheduler policy '{name}' (valid: {})",
+        names().join("|")
+    )))
+}
+
+/// Resolve `name` (canonical, alias, or deprecated alias) to its
+/// canonical name.
 pub fn canonical(name: &str) -> Result<&'static str> {
     lookup(name).map(|p| p.name)
 }
@@ -141,7 +473,8 @@ pub fn create(name: &str, params: &PolicyParams) -> Result<Box<dyn Scheduler>> {
     lookup(name).map(|info| (info.factory)(params))
 }
 
-/// Multi-line listing for `hstorm schedule --list-policies`.
+/// Multi-line listing for `hstorm schedule --list-policies`: summary,
+/// aliases, deprecated spellings and the per-policy parameter schema.
 pub fn describe_all() -> String {
     let mut out = String::from("registered scheduling policies:\n");
     for p in POLICIES {
@@ -150,7 +483,18 @@ pub fn describe_all() -> String {
         } else {
             format!(" (aliases: {})", p.aliases.join(", "))
         };
-        out.push_str(&format!("  {:<10}{aliases}\n      {}\n", p.name, p.summary));
+        let deprecated = if p.deprecated.is_empty() {
+            String::new()
+        } else {
+            format!(" (deprecated: {})", p.deprecated.join(", "))
+        };
+        out.push_str(&format!("  {:<10}{aliases}{deprecated}\n      {}\n", p.name, p.summary));
+        for spec in p.params {
+            out.push_str(&format!(
+                "        {} ({}, default {}) — {}\n",
+                spec.name, spec.ty, spec.default, spec.doc
+            ));
+        }
     }
     out
 }
@@ -164,10 +508,14 @@ mod tests {
         assert_eq!(canonical("hetero").unwrap(), "hetero");
         assert_eq!(canonical("proposed").unwrap(), "hetero");
         assert_eq!(canonical("default-rr").unwrap(), "default");
+        assert_eq!(canonical("branch-and-bound").unwrap(), "bnb");
+        assert_eq!(canonical("local-search").unwrap(), "anneal");
+        // deprecated spellings still resolve (with a one-time warning)
         assert_eq!(canonical("rr").unwrap(), "default");
         assert_eq!(canonical("exhaustive").unwrap(), "optimal");
         let err = canonical("round-robin").unwrap_err().to_string();
         assert!(err.contains("hetero") && err.contains("optimal"), "{err}");
+        assert!(err.contains("portfolio"), "{err}");
     }
 
     #[test]
@@ -175,7 +523,7 @@ mod tests {
         for info in policies() {
             let s = create(info.name, &PolicyParams::default()).unwrap();
             assert_eq!(s.name(), info.name);
-            for alias in info.aliases {
+            for alias in info.aliases.iter().chain(info.deprecated) {
                 assert_eq!(create(alias, &PolicyParams::default()).unwrap().name(), info.name);
             }
         }
@@ -183,10 +531,57 @@ mod tests {
     }
 
     #[test]
-    fn describe_all_mentions_every_policy() {
+    fn describe_all_mentions_every_policy_and_schema() {
         let d = describe_all();
         for info in policies() {
             assert!(d.contains(info.name), "{d}");
+            for spec in info.params {
+                assert!(d.contains(spec.name), "missing param {} in:\n{d}", spec.name);
+            }
         }
+        assert!(d.contains("deprecated: rr"), "{d}");
+    }
+
+    #[test]
+    fn params_set_parses_and_rejects_loudly() {
+        let mut p = PolicyParams::default();
+        p.set("budget-candidates", "5000").unwrap();
+        p.set("target-gap", "0.1").unwrap();
+        p.set("mix-bnb", "0.7").unwrap();
+        p.set("beam-width", "16").unwrap();
+        p.set("anneal-seed", "42").unwrap();
+        assert_eq!(p.budget_candidates, Some(5000));
+        assert_eq!(p.budget().max_candidates, Some(5000));
+        assert_eq!(p.target_gap, Some(0.1));
+        assert_eq!(p.mix_bnb, 0.7);
+        assert_eq!(p.beam_width, 16);
+        assert_eq!(p.anneal_seed, 42);
+
+        let err = p.set("beam-widht", "16").unwrap_err().to_string();
+        assert!(err.contains("unknown policy parameter"), "{err}");
+        assert!(err.contains("beam-width"), "typo error must list valid keys: {err}");
+        let err = p.set("beam-width", "wide").unwrap_err().to_string();
+        assert!(err.contains("invalid value"), "{err}");
+    }
+
+    #[test]
+    fn deprecated_alias_warns_once() {
+        // drain any earlier state: resolving twice must journal at most
+        // one deprecated_alias event for this spelling
+        let before = crate::obs::global()
+            .journal()
+            .entries()
+            .iter()
+            .filter(|e| matches!(e.event, crate::obs::Event::DeprecatedAlias { .. }))
+            .count();
+        canonical("exhaustive").unwrap();
+        canonical("exhaustive").unwrap();
+        let after = crate::obs::global()
+            .journal()
+            .entries()
+            .iter()
+            .filter(|e| matches!(e.event, crate::obs::Event::DeprecatedAlias { .. }))
+            .count();
+        assert!(after <= before + 1, "deprecated alias warned more than once");
     }
 }

@@ -53,6 +53,8 @@
 //! are resolved against the [`Problem`](super::Problem) (and unknown
 //! names rejected with the valid options) at schedule time.
 
+use crate::predict::Placement;
+
 /// What a [`ScheduleRequest`] asks the scheduler to optimize.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Objective {
@@ -157,18 +159,86 @@ impl Constraints {
     }
 }
 
-/// One scheduling request: an objective plus constraints.
+/// An anytime-search budget: how much work a scheduler may spend before
+/// it must return its incumbent.  The default is unlimited — identical
+/// behavior to the pre-budget API.
+///
+/// Budgets are **deterministic**: they count candidates and virtual
+/// work units, never wall-clock time, so a budgeted search returns the
+/// bit-identical schedule on every machine and at every load.  Policies
+/// that stop on budget report it through
+/// [`Provenance::terminated`](super::Provenance) together with the best
+/// surviving bound and the resulting optimality gap; heuristic policies
+/// (which evaluate a bounded handful of candidates anyway) ignore
+/// budgets cheaply.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SearchBudget {
+    /// Stop after evaluating this many complete candidates.
+    pub max_candidates: Option<u64>,
+    /// Deterministic virtual-time cap: every candidate evaluation or
+    /// delta probe charges one unit per machine touched (`O(M)` work →
+    /// `M` units), so the cap tracks compute without reading a clock.
+    pub max_virtual_ops: Option<u64>,
+    /// Stop as soon as the certified relative gap (incumbent vs. best
+    /// surviving bound) drops to this value or below.
+    pub target_gap: Option<f64>,
+}
+
+impl SearchBudget {
+    /// No limits: search runs to exhaustion (the default).
+    pub fn unlimited() -> Self {
+        SearchBudget::default()
+    }
+
+    /// True when no cap is set (target gap alone still counts as a
+    /// limit: it can stop an exhaustive walk early).
+    pub fn is_unlimited(&self) -> bool {
+        self.max_candidates.is_none() && self.max_virtual_ops.is_none() && self.target_gap.is_none()
+    }
+
+    /// Cap the number of complete candidates evaluated.
+    pub fn with_max_candidates(mut self, n: u64) -> Self {
+        self.max_candidates = Some(n);
+        self
+    }
+
+    /// Cap deterministic virtual work units (≈ machines touched).
+    pub fn with_max_virtual_ops(mut self, n: u64) -> Self {
+        self.max_virtual_ops = Some(n);
+        self
+    }
+
+    /// Stop once the certified optimality gap is ≤ `gap` (relative,
+    /// e.g. `0.05` for 5%).
+    pub fn with_target_gap(mut self, gap: f64) -> Self {
+        self.target_gap = Some(gap);
+        self
+    }
+}
+
+/// One scheduling request: an objective plus constraints, optionally
+/// under a [`SearchBudget`] and warm-started from an incumbent
+/// placement.
 ///
 /// ```no_run
-/// use hstorm::scheduler::{Constraints, Objective, ScheduleRequest};
+/// use hstorm::scheduler::{Constraints, Objective, ScheduleRequest, SearchBudget};
 ///
 /// let req = ScheduleRequest::new(Objective::MaxThroughput)
-///     .with_constraints(Constraints::new().exclude_machine("i3-0").reserve_headroom(10.0));
+///     .with_constraints(Constraints::new().exclude_machine("i3-0").reserve_headroom(10.0))
+///     .with_budget(SearchBudget::unlimited().with_max_candidates(50_000).with_target_gap(0.05));
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScheduleRequest {
     pub objective: Objective,
     pub constraints: Constraints,
+    /// Anytime-search budget (default: unlimited).
+    pub budget: SearchBudget,
+    /// Incumbent placement to warm-start search policies from — the
+    /// controller's re-plan path passes the currently-running placement
+    /// so the portfolio starts at a known-good solution.  Heuristic
+    /// policies ignore it; search policies repair it against the
+    /// request's constraints before use.
+    pub warm_start: Option<Placement>,
 }
 
 impl Default for ScheduleRequest {
@@ -179,7 +249,12 @@ impl Default for ScheduleRequest {
 
 impl ScheduleRequest {
     pub fn new(objective: Objective) -> Self {
-        ScheduleRequest { objective, constraints: Constraints::default() }
+        ScheduleRequest {
+            objective,
+            constraints: Constraints::default(),
+            budget: SearchBudget::default(),
+            warm_start: None,
+        }
     }
 
     /// The common case: maximize throughput, no constraints.
@@ -194,6 +269,18 @@ impl ScheduleRequest {
 
     pub fn with_constraints(mut self, constraints: Constraints) -> Self {
         self.constraints = constraints;
+        self
+    }
+
+    /// Bound the search effort (see [`SearchBudget`]).
+    pub fn with_budget(mut self, budget: SearchBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Warm-start search policies from an incumbent placement.
+    pub fn with_warm_start(mut self, placement: Placement) -> Self {
+        self.warm_start = Some(placement);
         self
     }
 }
@@ -233,5 +320,20 @@ mod tests {
         let r = ScheduleRequest::default();
         assert_eq!(r.objective, Objective::MaxThroughput);
         assert!(r.constraints.is_empty());
+        assert!(r.budget.is_unlimited());
+        assert!(r.warm_start.is_none());
+    }
+
+    #[test]
+    fn budget_builder_accumulates() {
+        let b = SearchBudget::unlimited();
+        assert!(b.is_unlimited());
+        let b = b.with_max_candidates(100).with_max_virtual_ops(5_000).with_target_gap(0.1);
+        assert_eq!(b.max_candidates, Some(100));
+        assert_eq!(b.max_virtual_ops, Some(5_000));
+        assert_eq!(b.target_gap, Some(0.1));
+        assert!(!b.is_unlimited());
+        // a target gap alone already counts as a limit
+        assert!(!SearchBudget::unlimited().with_target_gap(0.01).is_unlimited());
     }
 }

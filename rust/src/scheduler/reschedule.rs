@@ -52,7 +52,10 @@ pub fn after_failures(
         return Err(Error::Cluster("cannot lose every worker".into()));
     }
     let req = ScheduleRequest::max_throughput()
-        .with_constraints(Constraints::new().exclude_machines(failed.iter().copied()));
+        .with_constraints(Constraints::new().exclude_machines(failed.iter().copied()))
+        // search policies resume from the pre-failure placement (repaired
+        // off the dead machines); heuristics ignore the warm start
+        .with_warm_start(before.placement.clone());
     // unknown machine names are rejected by constraint resolution
     let schedule = policy.schedule(problem, &req)?;
     let retained = if before.eval.throughput > 0.0 {

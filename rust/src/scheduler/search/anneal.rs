@@ -1,0 +1,352 @@
+//! Simulated annealing over `O(1)`-amortized placement deltas.
+//!
+//! Local search on the placement itself: each step probes one random
+//! move/add/remove through [`DeltaEval`](crate::predict::kernel::DeltaEval)
+//! (which re-reads `R0*` off patched accumulators instead of
+//! re-deriving the whole evaluation), accepts improvements always and
+//! regressions with Boltzmann probability under a geometrically
+//! cooling temperature, and restarts from the base placement a
+//! configurable number of times.  All randomness flows from one
+//! [`Rng`](crate::util::rng::Rng) seed, so a given configuration
+//! replays bit-identically — `hstorm check`'s replay gate holds for
+//! `anneal` exactly as for the deterministic policies.
+//!
+//! Moves are constraint-closed: targets must be allowed by the
+//! resolved constraints, adds stop at the component cap, removes keep
+//! every component populated.  Like beam search this is an incomplete
+//! strategy — it reports no bound/gap of its own.
+
+use std::time::Instant;
+
+use super::super::problem::ResolvedConstraints;
+use super::super::{
+    apply_objective, Problem, Provenance, Schedule, ScheduleRequest, Scheduler, SearchBudget,
+    Termination,
+};
+use super::{record_search_started, repair_warm_start, BudgetMeter};
+use crate::predict::kernel::DeltaEval;
+use crate::predict::{Evaluator, Placement};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// Simulated-annealing policy (`anneal` in the registry).
+#[derive(Debug, Clone)]
+pub struct AnnealScheduler {
+    /// Cap on instances a component may grow to (the add-move bound,
+    /// intersected with the per-component constraint caps).
+    pub max_instances_per_component: usize,
+    /// Independent restarts from the base placement.
+    pub restarts: usize,
+    /// Annealing steps per restart.
+    pub steps: usize,
+    /// Root seed for the deterministic RNG.
+    pub seed: u64,
+    /// Default budget when the request leaves its budget unlimited.
+    pub budget: SearchBudget,
+}
+
+impl Default for AnnealScheduler {
+    fn default() -> Self {
+        AnnealScheduler {
+            max_instances_per_component: 3,
+            restarts: 4,
+            steps: 400,
+            seed: 0xA11E_A1,
+            budget: SearchBudget::unlimited(),
+        }
+    }
+}
+
+/// Outcome of the annealing runs (shared with the portfolio).
+pub(crate) struct AnnealOutcome {
+    /// Best placement seen and its rate (`None`: nothing feasible).
+    pub(crate) best: Option<(Placement, f64)>,
+    /// Probes charged (each probe is one candidate evaluation).
+    pub(crate) evaluated: u64,
+    pub(crate) stopped: bool,
+}
+
+/// Anneal from `base`, spending at most what `meter` affords.
+pub(crate) fn run(
+    ev: &Evaluator,
+    rc: &ResolvedConstraints,
+    base: &Placement,
+    max_instances: usize,
+    restarts: usize,
+    steps: usize,
+    seed: u64,
+    meter: &mut BudgetMeter,
+) -> Result<AnnealOutcome> {
+    let n_comp = base.n_components();
+    let n_m = base.n_machines();
+    let mut out = AnnealOutcome { best: None, evaluated: 0, stopped: false };
+    let mut consider = |p: Placement, r: f64, best: &mut Option<(Placement, f64)>| {
+        if r > 0.0 && best.as_ref().map_or(true, |(_, br)| r > *br) {
+            *best = Some((p, r));
+        }
+    };
+
+    'restarts: for restart in 0..restarts.max(1) {
+        // distinct, deterministic stream per restart
+        let mut rng = Rng::new(seed ^ (restart as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut de = DeltaEval::new(ev, base)?;
+        let mut cur = de.rate_or_zero();
+        if !cur.is_finite() {
+            cur = 0.0;
+        }
+        consider(de.placement(), cur, &mut out.best);
+        // temperature as a fraction of the current value: accept a 5%
+        // regression with probability 1/e at the start, cooling out
+        let mut temp = 0.05 * cur.max(1.0);
+        for _ in 0..steps {
+            if !meter.try_charge() {
+                out.stopped = true;
+                break 'restarts;
+            }
+            out.evaluated += 1;
+            let proposal = propose(&de, rc, max_instances, n_comp, n_m, &mut rng);
+            let Some((kind, c, a, b)) = proposal else { continue };
+            let r_new = match kind {
+                Move::Shift => de.rate_with_move(c, a, b),
+                Move::Add => de.rate_adding(c, a),
+                Move::Remove => de.rate_removing(c, a),
+            };
+            let r_new = if r_new.is_finite() { r_new } else { 0.0 };
+            let accept = r_new >= cur
+                || (temp > 1e-12 && rng.chance(((r_new - cur) / temp).exp().min(1.0)));
+            if accept {
+                match kind {
+                    Move::Shift => de.apply_move(c, a, b),
+                    Move::Add => de.apply_add(c, a),
+                    Move::Remove => de.apply_remove(c, a),
+                }
+                cur = r_new;
+                if out.best.as_ref().map_or(true, |(_, br)| cur > *br) {
+                    consider(de.placement(), cur, &mut out.best);
+                }
+            }
+            temp *= 0.995;
+        }
+    }
+    Ok(out)
+}
+
+#[derive(Clone, Copy)]
+enum Move {
+    /// Shift one instance of component `c` from machine `a` to `b`.
+    Shift,
+    /// Add one instance of `c` on machine `a`.
+    Add,
+    /// Remove one instance of `c` from machine `a`.
+    Remove,
+}
+
+/// Draw one constraint-closed neighbor; `None` when the drawn kind has
+/// no legal move for the drawn component (the step is just skipped —
+/// skipping is itself deterministic).
+fn propose(
+    de: &DeltaEval,
+    rc: &ResolvedConstraints,
+    max_instances: usize,
+    n_comp: usize,
+    n_m: usize,
+    rng: &mut Rng,
+) -> Option<(Move, usize, usize, usize)> {
+    let c = rng.range(0, n_comp - 1);
+    let kind = rng.range(0, 3);
+    let hosts: Vec<usize> = (0..n_m).filter(|&m| de.get(c, m) > 0).collect();
+    match kind {
+        // moves are drawn twice as often as grow/shrink
+        0 | 1 => {
+            let from = hosts[rng.range(0, hosts.len() - 1)];
+            let targets: Vec<usize> =
+                (0..n_m).filter(|&m| m != from && rc.allows(c, m)).collect();
+            if targets.is_empty() {
+                return None;
+            }
+            let to = targets[rng.range(0, targets.len() - 1)];
+            Some((Move::Shift, c, from, to))
+        }
+        2 => {
+            let cap = max_instances.min(rc.max_instances[c]);
+            if (de.count(c) as usize) >= cap {
+                return None;
+            }
+            let targets: Vec<usize> = (0..n_m).filter(|&m| rc.allows(c, m)).collect();
+            if targets.is_empty() {
+                return None;
+            }
+            let m = targets[rng.range(0, targets.len() - 1)];
+            Some((Move::Add, c, m, 0))
+        }
+        _ => {
+            if de.count(c) <= 1 {
+                return None;
+            }
+            let m = hosts[rng.range(0, hosts.len() - 1)];
+            Some((Move::Remove, c, m, 0))
+        }
+    }
+}
+
+/// The base placement annealing starts from: the repaired warm start
+/// when the request carries one, otherwise the heterogeneous
+/// heuristic's solution, otherwise one instance per component on its
+/// first allowed machine.
+pub(crate) fn base_placement(
+    problem: &Problem,
+    req: &ScheduleRequest,
+    rc: &ResolvedConstraints,
+) -> Result<Placement> {
+    let n_comp = problem.topology().n_components();
+    let n_m = problem.cluster().n_machines();
+    if let Some(warm) = &req.warm_start {
+        if let Some(fixed) = repair_warm_start(rc, warm, n_comp, n_m) {
+            return Ok(fixed);
+        }
+    }
+    let seed_req = ScheduleRequest::max_throughput().with_constraints(req.constraints.clone());
+    if let Ok(h) = super::super::hetero::HeteroScheduler::default().schedule(problem, &seed_req) {
+        return Ok(h.placement);
+    }
+    let mut p = Placement::empty(n_comp, n_m);
+    for c in 0..n_comp {
+        let m = (0..n_m)
+            .find(|&m| rc.allows(c, m))
+            .ok_or_else(|| Error::Schedule(format!("component {c} has no allowed machine")))?;
+        p.x[c][m] = 1;
+    }
+    Ok(p)
+}
+
+impl Scheduler for AnnealScheduler {
+    fn name(&self) -> &'static str {
+        "anneal"
+    }
+
+    fn schedule(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule> {
+        let started = Instant::now();
+        let rc = problem.resolve(&req.constraints)?;
+        let ev = problem.constrained_evaluator(&rc);
+        let n_comp = problem.topology().n_components();
+        let n_m = problem.cluster().n_machines();
+        record_search_started(self.name(), n_comp, n_m);
+
+        let base = base_placement(problem, req, &rc)?;
+        let budget = if req.budget.is_unlimited() { self.budget } else { req.budget };
+        let mut meter = BudgetMeter::new(&budget, n_m as u64);
+        let out = run(
+            &ev,
+            &rc,
+            &base,
+            self.max_instances_per_component,
+            self.restarts,
+            self.steps,
+            self.seed,
+            &mut meter,
+        )?;
+
+        let (placement, _) = out
+            .best
+            .ok_or_else(|| Error::Schedule("no feasible placement found by annealing".into()))?;
+        let mut evaluated = out.evaluated;
+        let s = super::super::finish(&ev, placement)?;
+        // rate is what annealing optimizes; the other objectives get
+        // the same post-passes the heuristic policies use
+        let mut s = apply_objective(&ev, &rc, &req.objective, s, usize::MAX, &mut evaluated)?;
+        s.provenance = Provenance {
+            policy: self.name().into(),
+            objective: req.objective.describe(),
+            placements_evaluated: evaluated,
+            backend: "kernel".into(),
+            wall: started.elapsed(),
+            bound: None,
+            optimality_gap: None,
+            terminated: if out.stopped { Termination::Budget } else { Termination::Exhausted },
+        };
+        super::super::record_schedule_telemetry(&s, 0);
+        super::super::debug_validate(problem, req, &s);
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::optimal::OptimalScheduler;
+    use super::super::super::{Constraints, Problem, ScheduleRequest};
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    fn problem() -> Problem {
+        let (cluster, db) = presets::paper_cluster();
+        Problem::new(&benchmarks::linear(), &cluster, &db).unwrap()
+    }
+
+    /// Determinism: the seeded RNG makes runs bit-identical.
+    #[test]
+    fn anneal_is_deterministic() {
+        let p = problem();
+        let req = ScheduleRequest::max_throughput();
+        let a = AnnealScheduler::default().schedule(&p, &req).unwrap();
+        let b = AnnealScheduler::default().schedule(&p, &req).unwrap();
+        assert_eq!(a.placement.x, b.placement.x);
+        assert_eq!(a.rate.to_bits(), b.rate.to_bits());
+    }
+
+    /// A different seed is allowed to land elsewhere, but stays feasible
+    /// and never below the heuristic base it started from.
+    #[test]
+    fn anneal_never_regresses_below_its_base() {
+        let p = problem();
+        let req = ScheduleRequest::max_throughput();
+        let base = super::super::super::hetero::HeteroScheduler::default()
+            .schedule(&p, &req)
+            .unwrap();
+        for seed in [1u64, 2, 3] {
+            let s = AnnealScheduler { seed, ..Default::default() }.schedule(&p, &req).unwrap();
+            assert!(
+                s.rate + 1e-9 >= base.rate,
+                "seed {seed}: anneal rate {} below base {}",
+                s.rate,
+                base.rate
+            );
+        }
+    }
+
+    /// Anneal lands within a few percent of the optimum on the micro
+    /// space (it is a local search, not a certificate).
+    #[test]
+    fn anneal_close_to_optimum_on_micro_space() {
+        let p = problem();
+        let req = ScheduleRequest::max_throughput();
+        let opt = OptimalScheduler { threads: 1, ..Default::default() }
+            .schedule(&p, &req)
+            .unwrap();
+        let s = AnnealScheduler::default().schedule(&p, &req).unwrap();
+        assert!(s.rate >= opt.rate * 0.95, "anneal {} vs optimum {}", s.rate, opt.rate);
+    }
+
+    /// Moves never step outside the resolved constraints.
+    #[test]
+    fn anneal_respects_exclusions() {
+        let p = problem();
+        let req = ScheduleRequest::max_throughput()
+            .with_constraints(Constraints::new().exclude_machine("i3-0"));
+        let s = AnnealScheduler::default().schedule(&p, &req).unwrap();
+        for c in 0..p.topology().n_components() {
+            assert_eq!(s.placement.x[c][1], 0, "instance left on excluded machine");
+        }
+    }
+
+    /// The probe budget is honored.
+    #[test]
+    fn anneal_honors_budget() {
+        let p = problem();
+        let req = ScheduleRequest::max_throughput()
+            .with_budget(crate::scheduler::SearchBudget::unlimited().with_max_candidates(50));
+        let s = AnnealScheduler::default().schedule(&p, &req).unwrap();
+        assert!(s.provenance.placements_evaluated <= 50);
+        assert_eq!(s.provenance.terminated, Termination::Budget);
+    }
+}

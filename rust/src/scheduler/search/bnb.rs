@@ -1,0 +1,262 @@
+//! Branch-and-bound over the exhaustive search's exact design space.
+//!
+//! Same row tables, same enumeration order, same first-wins fold as
+//! [`OptimalScheduler`](super::super::optimal::OptimalScheduler) — but
+//! every internal DFS node reads the admissible optimistic bound off
+//! the running accumulators and skips subtrees that cannot beat the
+//! incumbent under the request's objective.  The prune predicates admit
+//! exactly the candidates the exhaustive fold could take, so with an
+//! unlimited budget the result is **bit-identical** to `optimal` while
+//! evaluating strictly fewer candidates whenever any bound fires; the
+//! skipped-candidate count is journaled as `candidate_pruned` with
+//! reason `"bound"`.  Under a [`SearchBudget`] the walk becomes
+//! anytime: it stops at the budget (or at the requested target gap) and
+//! certifies the incumbent against the tightest surviving bound.
+
+use std::time::Instant;
+
+use super::super::optimal::{no_best_error, seed_candidates, Best};
+use super::super::{
+    Problem, Provenance, Schedule, ScheduleRequest, Scheduler, SearchBudget, Termination,
+};
+use super::{
+    certify, global_bound, record_bound_pruned, record_search_started, repair_warm_start, walk,
+    BudgetMeter, TableSet,
+};
+use crate::{Error, Result};
+
+/// Branch-and-bound policy (`bnb` in the registry).
+#[derive(Debug, Clone)]
+pub struct BnbScheduler {
+    /// Max instances per component (same space bound as `optimal`).
+    pub max_instances_per_component: usize,
+    /// Hard cap on the space size when no budget limits the walk; with
+    /// any budget set, anytime mode accepts spaces of any size.
+    pub enumeration_limit: u64,
+    /// Seed the incumbent from the heuristics (a good incumbent is
+    /// what makes bounds fire early).
+    pub seed_heuristics: bool,
+    /// Default budget when the request leaves its budget unlimited.
+    pub budget: SearchBudget,
+}
+
+impl Default for BnbScheduler {
+    fn default() -> Self {
+        BnbScheduler {
+            max_instances_per_component: 3,
+            enumeration_limit: 3_000_000,
+            seed_heuristics: true,
+            budget: SearchBudget::unlimited(),
+        }
+    }
+}
+
+impl BnbScheduler {
+    /// Request budget wins; the policy's configured budget is the
+    /// fallback.
+    pub(crate) fn effective_budget(&self, req: &ScheduleRequest) -> SearchBudget {
+        if req.budget.is_unlimited() {
+            self.budget
+        } else {
+            req.budget
+        }
+    }
+}
+
+impl Scheduler for BnbScheduler {
+    fn name(&self) -> &'static str {
+        "bnb"
+    }
+
+    fn schedule(&self, problem: &Problem, req: &ScheduleRequest) -> Result<Schedule> {
+        let started = Instant::now();
+        let rc = problem.resolve(&req.constraints)?;
+        let ev = problem.constrained_evaluator(&rc);
+        let n_comp = problem.topology().n_components();
+        let n_m = problem.cluster().n_machines();
+        record_search_started(self.name(), n_comp, n_m);
+
+        let ts = TableSet::build(&ev, &rc, self.max_instances_per_component, n_comp, n_m);
+        let budget = self.effective_budget(req);
+        if budget.is_unlimited() && ts.size > self.enumeration_limit as u128 {
+            return Err(Error::Schedule(format!(
+                "design space has {} placements (> limit {}); set a search budget for anytime mode",
+                ts.size, self.enumeration_limit
+            )));
+        }
+        let ctx = ts.ctx(&ev, &rc, &req.objective);
+
+        let mut best: Option<Best> = None;
+        let mut evaluated: u64 = 0;
+        if self.seed_heuristics {
+            seed_candidates(&ctx, problem, req, self.name(), &mut best, &mut evaluated);
+        }
+        if let Some(warm) = &req.warm_start {
+            if let Some(fixed) = repair_warm_start(&rc, warm, n_comp, n_m) {
+                ctx.consider_seed(fixed, &mut best, &mut evaluated);
+            }
+        }
+
+        let mut meter = BudgetMeter::new(&budget, n_m as u64);
+        meter.charge_n(evaluated); // the seeds count against the budget
+        let glob = global_bound(&ctx);
+        let out = walk(&ctx, best, glob, &mut meter, true);
+        evaluated += out.evaluated;
+
+        let best = out.best.ok_or_else(|| no_best_error(&req.objective))?;
+        if best.rate <= 0.0 {
+            return Err(Error::Schedule("no feasible placement in the design space".into()));
+        }
+        let mut s = super::super::finish(&ev, best.placement)?;
+        let (bound, gap) = certify(out.terminated, s.rate, out.frontier, glob);
+        s.provenance = Provenance {
+            policy: self.name().into(),
+            objective: req.objective.describe(),
+            placements_evaluated: evaluated,
+            backend: "kernel".into(),
+            wall: started.elapsed(),
+            bound,
+            optimality_gap: gap,
+            terminated: out.terminated,
+        };
+        super::super::record_schedule_telemetry(&s, out.pruned);
+        record_bound_pruned(self.name(), out.bound_pruned);
+        super::super::debug_validate(problem, req, &s);
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::optimal::OptimalScheduler;
+    use super::super::super::{Objective, Problem, ScheduleRequest};
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    fn problem(top: &crate::topology::Topology) -> Problem {
+        let (cluster, db) = presets::paper_cluster();
+        Problem::new(top, &cluster, &db).unwrap()
+    }
+
+    fn assert_identical(p: &Problem, name: &str, max_inst: usize) {
+        let req = ScheduleRequest::max_throughput();
+        let opt = OptimalScheduler {
+            max_instances_per_component: max_inst,
+            threads: 1,
+            ..Default::default()
+        }
+        .schedule(p, &req)
+        .unwrap();
+        let bnb = BnbScheduler { max_instances_per_component: max_inst, ..Default::default() }
+            .schedule(p, &req)
+            .unwrap();
+        assert_eq!(bnb.placement.x, opt.placement.x, "{name}: placements diverge");
+        assert_eq!(bnb.rate.to_bits(), opt.rate.to_bits(), "{name}: rates diverge");
+        assert!(
+            bnb.provenance.placements_evaluated <= opt.provenance.placements_evaluated,
+            "{name}: bnb evaluated more ({} > {})",
+            bnb.provenance.placements_evaluated,
+            opt.provenance.placements_evaluated
+        );
+        assert_eq!(bnb.provenance.terminated, Termination::Exhausted);
+        assert_eq!(bnb.provenance.optimality_gap, Some(0.0), "{name}: exhausted ⇒ gap 0");
+    }
+
+    /// The tentpole identity: with an unlimited budget, bnb returns the
+    /// bit-identical schedule to the exhaustive optimal on every
+    /// benchmark topology (paper cluster), evaluating no more
+    /// candidates.  `max_instances 2` keeps the 5-component spaces at
+    /// debug-test scale without weakening the property.
+    #[test]
+    fn bit_identical_to_optimal_on_all_benchmarks() {
+        for top in benchmarks::all() {
+            let name = top.name.clone();
+            let p = problem(&top);
+            assert_identical(&p, &name, 2);
+        }
+    }
+
+    /// Same identity on a scenario cluster (6 heterogeneous machines).
+    /// The 5-component topologies exceed the enumeration limit here
+    /// (27^5 ≈ 14M), so the sweep covers the ≤ 4-component ones.
+    #[test]
+    fn bit_identical_on_scenario_cluster() {
+        let (cluster, db) = crate::cluster::scenarios::by_id(1).unwrap().build();
+        for top in benchmarks::all() {
+            if top.n_components() > 4 {
+                continue;
+            }
+            let name = top.name.clone();
+            let p = Problem::new(&top, &cluster, &db).unwrap();
+            assert_identical(&p, &name, 2);
+        }
+    }
+
+    /// Identity must also hold under the non-default objectives (their
+    /// prune predicates differ).
+    #[test]
+    fn bit_identical_under_every_objective() {
+        let p = problem(&benchmarks::linear());
+        let probe = OptimalScheduler { threads: 1, ..Default::default() }
+            .schedule(&p, &ScheduleRequest::max_throughput())
+            .unwrap();
+        for objective in [
+            Objective::MinMachinesAtRate(probe.rate * 0.5),
+            Objective::BalancedUtilization,
+        ] {
+            let req = ScheduleRequest::new(objective);
+            let opt = OptimalScheduler { threads: 1, ..Default::default() }
+                .schedule(&p, &req)
+                .unwrap();
+            let bnb = BnbScheduler::default().schedule(&p, &req).unwrap();
+            assert_eq!(bnb.placement.x, opt.placement.x, "{:?}", req.objective);
+            assert_eq!(bnb.rate.to_bits(), opt.rate.to_bits());
+        }
+    }
+
+    /// Pruning must actually fire (strictly fewer evaluations) — the
+    /// acceptance criterion's micro form.
+    #[test]
+    fn prunes_strictly_on_linear_topology() {
+        let p = problem(&benchmarks::linear());
+        let req = ScheduleRequest::max_throughput();
+        let opt = OptimalScheduler { threads: 1, ..Default::default() }
+            .schedule(&p, &req)
+            .unwrap();
+        let bnb = BnbScheduler::default().schedule(&p, &req).unwrap();
+        assert!(
+            bnb.provenance.placements_evaluated < opt.provenance.placements_evaluated,
+            "bound pruning never fired: {} vs {}",
+            bnb.provenance.placements_evaluated,
+            opt.provenance.placements_evaluated
+        );
+    }
+
+    /// A candidate budget truncates the walk and certifies a gap.
+    #[test]
+    fn budget_truncates_and_certifies() {
+        let p = problem(&benchmarks::linear());
+        let req = ScheduleRequest::max_throughput()
+            .with_budget(SearchBudget::unlimited().with_max_candidates(25));
+        let s = BnbScheduler::default().schedule(&p, &req).unwrap();
+        assert!(s.provenance.placements_evaluated <= 25);
+        assert_eq!(s.provenance.terminated, Termination::Budget);
+        let gap = s.provenance.optimality_gap.expect("truncated run must report a gap");
+        assert!(gap >= 0.0);
+        let bound = s.provenance.bound.expect("truncated run must report a bound");
+        assert!(bound + 1e-9 >= s.rate);
+    }
+
+    /// A generous target gap stops the walk as soon as the incumbent
+    /// certifies within it.
+    #[test]
+    fn target_gap_stops_early() {
+        let p = problem(&benchmarks::linear());
+        let req = ScheduleRequest::max_throughput()
+            .with_budget(SearchBudget::unlimited().with_target_gap(10.0));
+        let s = BnbScheduler::default().schedule(&p, &req).unwrap();
+        assert_eq!(s.provenance.terminated, Termination::TargetGap);
+        assert!(s.provenance.optimality_gap.unwrap() <= 10.0);
+    }
+}

@@ -1,0 +1,622 @@
+//! Search portfolio over the kernel oracle (ROADMAP item 2): anytime
+//! strategies that scale placement search past exhaustive enumeration.
+//!
+//! The exhaustive optimal search proves optimality but only at
+//! micro-benchmark scale.  This module keeps its substrate — the
+//! per-component row tables and push/pop accumulators of
+//! [`crate::predict::kernel`] — and adds four registry policies that
+//! trade completeness for reach under one deterministic
+//! [`SearchBudget`](super::request::SearchBudget):
+//!
+//! * [`bnb::BnbScheduler`] — **branch-and-bound**: the same DFS and
+//!   first-wins fold as the exhaustive search, but every internal node
+//!   reads the admissible optimistic bound
+//!   ([`AccumState::bound`](crate::predict::kernel::AccumState::bound))
+//!   off the running accumulators and prunes subtrees that cannot beat
+//!   the incumbent under the request's objective.  With an unlimited
+//!   budget it returns the **bit-identical** schedule to `optimal`
+//!   while evaluating strictly fewer candidates (the pruned count rides
+//!   the `candidate_pruned` journal event, reason `"bound"`).
+//! * [`beam::BeamScheduler`] — **beam search** over per-component row
+//!   choices: partial candidates ranked by their optimistic bound, top
+//!   `width` kept per level, rows expanded best-singleton-first so a
+//!   degraded (budget-starved) beam still probes the strongest rows.
+//! * [`anneal::AnnealScheduler`] — **simulated annealing** over
+//!   [`DeltaEval`](crate::predict::kernel::DeltaEval) move/add/remove
+//!   probes with randomized restarts, seeded through
+//!   [`crate::util::rng`] so runs replay bit-identically.
+//! * [`portfolio::PortfolioScheduler`] — races the three under a shared
+//!   budget split by a configurable strategy mix, warm-started from the
+//!   request's incumbent, and returns the best feasible schedule plus a
+//!   certified optimality gap (incumbent vs. best surviving bound).
+//!
+//! ## The certificate
+//!
+//! Two bounds survive any truncated run: the **global** bound `B* =
+//! min_c max_i bound(row_i of c)` (every candidate contains one row per
+//! component, so its rate is at most that component's best singleton
+//! bound), and the **frontier** bound (the max optimistic bound over
+//! subtrees the walk never entered).  A run that stops early reports
+//! `bound = min(B*, max(incumbent, frontier))` and `gap = (bound −
+//! rate)/rate` through [`Provenance`](super::Provenance); a run that
+//! exhausts its space reports `gap = 0` — the incumbent is the space's
+//! optimum, which `hstorm check` verifies.
+
+pub mod anneal;
+pub mod beam;
+pub mod bnb;
+pub mod portfolio;
+
+pub use anneal::AnnealScheduler;
+pub use beam::BeamScheduler;
+pub use bnb::BnbScheduler;
+pub use portfolio::PortfolioScheduler;
+
+use super::optimal::{Best, KernelCtx, OptimalScheduler};
+use super::problem::ResolvedConstraints;
+use super::request::SearchBudget;
+use super::{Objective, Termination};
+use crate::predict::kernel::{AccumState, RowTable};
+use crate::predict::{Evaluator, Placement};
+
+/// Deterministic budget accounting shared by every search strategy.
+///
+/// Candidates and virtual ops only — never wall-clock — so a budgeted
+/// search stops at the identical point on every machine.  One complete
+/// candidate evaluation charges `(1 candidate, M vops)`; internal
+/// bound probes charge vops alone.  When only `max_candidates` is set,
+/// an implied vop cap of `4 × candidates × M` keeps bound-probe
+/// overhead (which evaluates no candidate) from running unmetered.
+pub(crate) struct BudgetMeter {
+    cand_cap: u64,
+    vop_cap: u64,
+    vops_per_candidate: u64,
+    candidates: u64,
+    vops: u64,
+    /// Stop once the certified gap reaches this value.
+    pub(crate) target_gap: Option<f64>,
+}
+
+impl BudgetMeter {
+    pub(crate) fn new(budget: &SearchBudget, vops_per_candidate: u64) -> Self {
+        let vpc = vops_per_candidate.max(1);
+        let vop_cap = budget.max_virtual_ops.unwrap_or_else(|| {
+            budget
+                .max_candidates
+                .map_or(u64::MAX, |c| c.saturating_mul(vpc).saturating_mul(4))
+        });
+        BudgetMeter {
+            cand_cap: budget.max_candidates.unwrap_or(u64::MAX),
+            vop_cap,
+            vops_per_candidate: vpc,
+            candidates: 0,
+            vops: 0,
+            target_gap: budget.target_gap,
+        }
+    }
+
+    /// A sub-meter holding `share` (0..=1) of this meter's remaining
+    /// candidate budget (vops scale along) — how the portfolio splits
+    /// one budget across strategies.
+    pub(crate) fn share(&self, share: f64) -> BudgetMeter {
+        let cand = self.remaining_candidates();
+        let cap = if cand == u64::MAX {
+            u64::MAX
+        } else {
+            ((cand as f64) * share.clamp(0.0, 1.0)).floor() as u64
+        };
+        let vop_cap = if self.vop_cap == u64::MAX {
+            u64::MAX
+        } else {
+            ((self.vop_cap.saturating_sub(self.vops) as f64) * share.clamp(0.0, 1.0)).floor()
+                as u64
+        };
+        BudgetMeter {
+            cand_cap: cap,
+            vop_cap,
+            vops_per_candidate: self.vops_per_candidate,
+            candidates: 0,
+            vops: 0,
+            target_gap: self.target_gap,
+        }
+    }
+
+    /// Charge one complete candidate evaluation; `false` when the
+    /// budget is spent (the candidate must then not be evaluated).
+    pub(crate) fn try_charge(&mut self) -> bool {
+        if self.candidates >= self.cand_cap
+            || self.vops.saturating_add(self.vops_per_candidate) > self.vop_cap
+        {
+            return false;
+        }
+        self.candidates += 1;
+        self.vops += self.vops_per_candidate;
+        true
+    }
+
+    /// Charge `n` virtual ops of boundkeeping work (no candidate).
+    pub(crate) fn try_charge_vops(&mut self, n: u64) -> bool {
+        if self.vops.saturating_add(n) > self.vop_cap {
+            return false;
+        }
+        self.vops += n;
+        true
+    }
+
+    /// Account for `n` candidates evaluated outside the meter (seeds).
+    pub(crate) fn charge_n(&mut self, n: u64) {
+        self.candidates = self.candidates.saturating_add(n);
+        self.vops = self.vops.saturating_add(n.saturating_mul(self.vops_per_candidate));
+    }
+
+    pub(crate) fn spent_candidates(&self) -> u64 {
+        self.candidates
+    }
+
+    /// Fold a sub-meter's spend back into this meter (the portfolio
+    /// splits one budget into per-strategy shares and re-absorbs them).
+    pub(crate) fn absorb(&mut self, sub: &BudgetMeter) {
+        self.candidates = self.candidates.saturating_add(sub.candidates);
+        self.vops = self.vops.saturating_add(sub.vops);
+    }
+
+    /// Virtual ops still affordable (`u64::MAX` when uncapped).
+    pub(crate) fn remaining_vops(&self) -> u64 {
+        if self.vop_cap == u64::MAX {
+            u64::MAX
+        } else {
+            self.vop_cap.saturating_sub(self.vops)
+        }
+    }
+
+    /// Candidate evaluations still affordable under both caps.
+    pub(crate) fn remaining_candidates(&self) -> u64 {
+        let by_c = self.cand_cap.saturating_sub(self.candidates);
+        if self.vop_cap == u64::MAX {
+            return by_c;
+        }
+        by_c.min(self.vop_cap.saturating_sub(self.vops) / self.vops_per_candidate)
+    }
+}
+
+/// The cheap certified global bound `B*`: every candidate contains one
+/// row per component, so its rate is at most `min_c max_i
+/// bound(singleton push of row i of component c)`.
+pub(crate) fn global_bound(ctx: &KernelCtx) -> f64 {
+    let mut acc = AccumState::new(ctx.ev.n_machines());
+    let mut glob = f64::INFINITY;
+    for table in ctx.tables {
+        let mut comp_best = 0.0f64;
+        for row in &table.rows {
+            acc.push(row);
+            comp_best = comp_best.max(acc.bound(&ctx.ev.cap));
+            acc.pop();
+        }
+        glob = glob.min(comp_best);
+    }
+    glob
+}
+
+/// Per-component row order, best optimistic singleton bound first
+/// (stable: index breaks ties) — the expansion order beam search uses
+/// so a budget-starved level still probes the strongest rows.
+pub(crate) fn singleton_order(ctx: &KernelCtx) -> Vec<Vec<usize>> {
+    let mut acc = AccumState::new(ctx.ev.n_machines());
+    ctx.tables
+        .iter()
+        .map(|table| {
+            let mut scored: Vec<(f64, usize)> = table
+                .rows
+                .iter()
+                .enumerate()
+                .map(|(i, row)| {
+                    acc.push(row);
+                    let b = acc.bound(&ctx.ev.cap);
+                    acc.pop();
+                    (b, i)
+                })
+                .collect();
+            scored.sort_by(|x, y| {
+                y.0.partial_cmp(&x.0).unwrap_or(std::cmp::Ordering::Equal).then(x.1.cmp(&y.1))
+            });
+            scored.into_iter().map(|(_, i)| i).collect()
+        })
+        .collect()
+}
+
+/// Outcome of one (possibly truncated, possibly bound-pruned) DFS walk.
+pub(crate) struct WalkOutcome {
+    pub(crate) best: Option<Best>,
+    /// Complete candidates evaluated inside the walk.
+    pub(crate) evaluated: u64,
+    /// Infeasible leaves (`R0* = 0`) — the existing pruned counter.
+    pub(crate) pruned: u64,
+    /// Candidates skipped because their subtree's bound could not beat
+    /// the incumbent (branch-and-bound only).
+    pub(crate) bound_pruned: u64,
+    /// Max optimistic bound over subtrees the walk never entered
+    /// (`NEG_INFINITY` when the walk exhausted the space).
+    pub(crate) frontier: f64,
+    pub(crate) terminated: Termination,
+}
+
+/// Sequential DFS over the row tables in the exhaustive search's exact
+/// enumeration order (component 0 varies fastest; identical first-wins
+/// fold), stoppable by `meter` and — when `prune` is set —
+/// branch-and-bound pruned under the objective-aware predicates that
+/// exclude only candidates the fold could never take, so the pruned
+/// walk returns the bit-identical incumbent.
+pub(crate) fn walk(
+    ctx: &KernelCtx,
+    best: Option<Best>,
+    glob: f64,
+    meter: &mut BudgetMeter,
+    prune: bool,
+) -> WalkOutcome {
+    let n_comp = ctx.tables.len();
+    // leaves under one fixed row at level c = Π row counts below c
+    let mut below = vec![1u128; n_comp];
+    for c in 1..n_comp {
+        below[c] = below[c - 1].saturating_mul(ctx.tables[c - 1].rows.len() as u128);
+    }
+    let mut w = Walker {
+        ctx,
+        meter,
+        prune,
+        below,
+        glob,
+        sel: vec![0usize; n_comp],
+        acc: AccumState::new(ctx.ev.n_machines()),
+        out: WalkOutcome {
+            best,
+            evaluated: 0,
+            pruned: 0,
+            bound_pruned: 0,
+            frontier: f64::NEG_INFINITY,
+            terminated: Termination::Exhausted,
+        },
+    };
+    w.level(n_comp - 1);
+    w.out
+}
+
+struct Walker<'a, 'b> {
+    ctx: &'a KernelCtx<'b>,
+    meter: &'a mut BudgetMeter,
+    prune: bool,
+    below: Vec<u128>,
+    glob: f64,
+    sel: Vec<usize>,
+    acc: AccumState,
+    out: WalkOutcome,
+}
+
+impl Walker<'_, '_> {
+    /// Visit every row of level `c` under the current prefix; `false`
+    /// when the walk stopped inside (budget / target gap reached).
+    fn level(&mut self, c: usize) -> bool {
+        let n_rows = self.ctx.tables[c].rows.len();
+        for i in 0..n_rows {
+            self.sel[c] = i;
+            self.acc.push(&self.ctx.tables[c].rows[i]);
+            let keep_going = if c == 0 { self.leaf() } else { self.node(c) };
+            self.acc.pop();
+            if !keep_going {
+                // the remaining siblings are unexplored: their
+                // optimistic bounds join the frontier certificate
+                self.frontier_rest(c, i + 1);
+                return false;
+            }
+        }
+        true
+    }
+
+    /// One complete candidate at the bottom of the DFS.
+    fn leaf(&mut self) -> bool {
+        if !self.meter.try_charge() {
+            self.out.terminated = Termination::Budget;
+            // this leaf itself goes unexplored
+            self.out.frontier = self.out.frontier.max(self.acc.bound(&self.ctx.ev.cap));
+            return false;
+        }
+        self.out.evaluated += 1;
+        let ctx = self.ctx;
+        let sel = &self.sel;
+        let r = ctx.consider_scored(&self.acc, || ctx.materialize(sel), &mut self.out.best);
+        if r <= 0.0 {
+            self.out.pruned += 1;
+        }
+        if let (Some(target), Some(b)) = (self.meter.target_gap, self.out.best.as_ref()) {
+            if b.rate > 0.0 && self.glob.is_finite() && (self.glob - b.rate) / b.rate <= target {
+                self.out.terminated = Termination::TargetGap;
+                return false;
+            }
+        }
+        true
+    }
+
+    /// One internal node (row pushed at level `c ≥ 1`).
+    fn node(&mut self, c: usize) -> bool {
+        if self.prune {
+            // boundkeeping is real work: meter it as vops so pruning
+            // overhead cannot run away on huge levels
+            if !self.meter.try_charge_vops(self.ctx.ev.n_machines() as u64) {
+                self.out.terminated = Termination::Budget;
+                self.out.frontier = self.out.frontier.max(self.acc.bound(&self.ctx.ev.cap));
+                return false;
+            }
+            let bd = self.acc.bound(&self.ctx.ev.cap);
+            // prune exactly the subtrees whose every candidate the
+            // exhaustive fold would reject — identity-preserving:
+            //  * MaxThroughput takes only r > incumbent, and r ≤ bd;
+            //  * MinMachinesAtRate early-returns r + 1e-9 < target;
+            //  * Balanced needs r ≥ incumbent·(1−1e-9) to even tie.
+            let cant_win = match self.ctx.objective {
+                Objective::MaxThroughput => {
+                    self.out.best.as_ref().map_or(false, |b| bd <= b.rate)
+                }
+                Objective::MinMachinesAtRate(target) => bd + 1e-9 < *target,
+                Objective::BalancedUtilization => {
+                    self.out.best.as_ref().map_or(false, |b| bd < b.rate * (1.0 - 1e-9))
+                }
+            };
+            if cant_win {
+                self.out.bound_pruned +=
+                    u64::try_from(self.below[c]).unwrap_or(u64::MAX);
+                return true;
+            }
+        }
+        self.level(c - 1)
+    }
+
+    /// Fold the optimistic bounds of level `c`'s unvisited rows
+    /// `from..` (under the prefix above `c`) into the frontier.
+    fn frontier_rest(&mut self, c: usize, from: usize) {
+        for i in from..self.ctx.tables[c].rows.len() {
+            self.acc.push(&self.ctx.tables[c].rows[i]);
+            self.out.frontier = self.out.frontier.max(self.acc.bound(&self.ctx.ev.cap));
+            self.acc.pop();
+        }
+    }
+}
+
+/// Turn a walk's end state into the provenance certificate:
+/// exhaustion proves the incumbent optimal (gap 0); a truncated run
+/// reports the tightest surviving bound, or nothing when no finite
+/// bound survives.
+pub(crate) fn certify(
+    terminated: Termination,
+    rate: f64,
+    frontier: f64,
+    glob: f64,
+) -> (Option<f64>, Option<f64>) {
+    match terminated {
+        Termination::Exhausted => (Some(rate), Some(0.0)),
+        Termination::Budget | Termination::TargetGap => {
+            // `.max(rate)` keeps the certificate monotone even when an
+            // out-of-space seed (heuristics may use more instances than
+            // the enumeration cap) beats every in-space bound
+            let bound = glob.min(frontier.max(rate)).max(rate);
+            if bound.is_finite() && rate > 0.0 {
+                (Some(bound), Some(((bound - rate) / rate).max(0.0)))
+            } else {
+                (None, None)
+            }
+        }
+    }
+}
+
+/// Row tables shared by the strategies: the exhaustive search's exact
+/// per-component rows (constraints shrink the space itself) plus their
+/// precomputed slope/intercept terms and the space size.
+pub(crate) struct TableSet {
+    pub(crate) rows: Vec<Vec<Vec<usize>>>,
+    pub(crate) tables: Vec<RowTable>,
+    pub(crate) size: u128,
+}
+
+impl TableSet {
+    pub(crate) fn build(
+        ev: &Evaluator,
+        rc: &ResolvedConstraints,
+        max_instances_per_component: usize,
+        n_comp: usize,
+        n_m: usize,
+    ) -> TableSet {
+        let proto =
+            OptimalScheduler { max_instances_per_component, ..Default::default() };
+        let rows: Vec<Vec<Vec<usize>>> =
+            (0..n_comp).map(|c| proto.component_rows(c, n_m, rc)).collect();
+        let size = rows.iter().fold(1u128, |acc, r| acc.saturating_mul(r.len() as u128));
+        let tables: Vec<RowTable> = (0..n_comp).map(|c| RowTable::build(ev, c, &rows[c])).collect();
+        TableSet { rows, tables, size }
+    }
+
+    pub(crate) fn ctx<'a>(
+        &'a self,
+        ev: &'a Evaluator,
+        rc: &'a ResolvedConstraints,
+        objective: &'a Objective,
+    ) -> KernelCtx<'a> {
+        KernelCtx { ev, rc, objective, rows: &self.rows, tables: &self.tables }
+    }
+}
+
+/// Repair a warm-start placement against the resolved constraints:
+/// drop instances from disallowed machines, re-seed components left
+/// empty on their first allowed machine, clamp counts to the
+/// component caps.  `None` when the shape mismatches the problem or a
+/// component has no allowed machine at all.
+pub(crate) fn repair_warm_start(
+    rc: &ResolvedConstraints,
+    p: &Placement,
+    n_comp: usize,
+    n_m: usize,
+) -> Option<Placement> {
+    if p.n_components() != n_comp || p.n_machines() != n_m {
+        return None;
+    }
+    let mut q = p.clone();
+    for c in 0..n_comp {
+        for m in 0..n_m {
+            if q.x[c][m] > 0 && !rc.allows(c, m) {
+                q.x[c][m] = 0;
+            }
+        }
+        let first_allowed = (0..n_m).find(|&m| rc.allows(c, m))?;
+        if q.count(c) == 0 {
+            q.x[c][first_allowed] = 1;
+        }
+        while q.count(c) > rc.max_instances[c] {
+            let m = (0..n_m).max_by_key(|&m| q.x[c][m])?;
+            if q.x[c][m] <= 1 && q.count(c) <= 1 {
+                break;
+            }
+            q.x[c][m] -= 1;
+        }
+    }
+    Some(q)
+}
+
+/// Journal a search start (shared preamble of every strategy).
+pub(crate) fn record_search_started(policy: &str, components: usize, machines: usize) {
+    if crate::obs::enabled() {
+        crate::obs::global().journal().record(crate::obs::Event::SearchStarted {
+            policy: policy.into(),
+            components,
+            machines,
+        });
+    }
+}
+
+/// Journal bound-pruned candidates (reason `"bound"` — distinct from
+/// the infeasible-leaf counter [`super::record_schedule_telemetry`]
+/// flushes with reason `"infeasible"`).
+pub(crate) fn record_bound_pruned(policy: &str, count: u64) {
+    if !crate::obs::enabled() || count == 0 {
+        return;
+    }
+    let reg = crate::obs::global();
+    reg.counter(&format!("sched.{policy}.bound_pruned")).add(count);
+    reg.journal().record(crate::obs::Event::CandidatePruned {
+        policy: policy.into(),
+        count,
+        reason: "bound".into(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Constraints, Problem, ScheduleRequest};
+    use super::*;
+    use crate::cluster::presets;
+    use crate::topology::benchmarks;
+
+    fn problem() -> Problem {
+        let (cluster, db) = presets::paper_cluster();
+        Problem::new(&benchmarks::linear(), &cluster, &db).unwrap()
+    }
+
+    #[test]
+    fn meter_counts_candidates_and_vops() {
+        let b = SearchBudget::unlimited().with_max_candidates(2);
+        let mut m = BudgetMeter::new(&b, 3);
+        assert_eq!(m.remaining_candidates(), 2);
+        assert!(m.try_charge());
+        assert!(m.try_charge());
+        assert!(!m.try_charge(), "third candidate exceeds the cap");
+        assert_eq!(m.spent_candidates(), 2);
+        // implied vop cap = 4 × candidates × vpc = 24; 6 already spent
+        assert!(m.try_charge_vops(18));
+        assert!(!m.try_charge_vops(1));
+    }
+
+    #[test]
+    fn meter_share_splits_remaining() {
+        let b = SearchBudget::unlimited().with_max_candidates(100);
+        let mut m = BudgetMeter::new(&b, 1);
+        m.charge_n(20);
+        let half = m.share(0.5);
+        assert_eq!(half.remaining_candidates(), 40);
+        let unlimited = BudgetMeter::new(&SearchBudget::unlimited(), 1);
+        assert_eq!(unlimited.share(0.25).remaining_candidates(), u64::MAX);
+    }
+
+    #[test]
+    fn global_bound_upper_bounds_the_optimum() {
+        let p = problem();
+        let rc = p.resolve(&Constraints::new()).unwrap();
+        let ev = p.evaluator();
+        let ts = TableSet::build(ev, &rc, 2, p.topology().n_components(), 3);
+        let obj = crate::scheduler::Objective::MaxThroughput;
+        let ctx = ts.ctx(ev, &rc, &obj);
+        let glob = global_bound(&ctx);
+        let opt = crate::scheduler::optimal::OptimalScheduler {
+            max_instances_per_component: 2,
+            ..Default::default()
+        }
+        .schedule(&p, &ScheduleRequest::max_throughput())
+        .unwrap();
+        assert!(
+            glob + 1e-9 >= opt.rate,
+            "global bound {glob} underestimates the optimum {}",
+            opt.rate
+        );
+    }
+
+    #[test]
+    fn walk_without_pruning_matches_space_size() {
+        let p = problem();
+        let rc = p.resolve(&Constraints::new()).unwrap();
+        let ev = p.evaluator();
+        let ts = TableSet::build(ev, &rc, 2, p.topology().n_components(), 3);
+        let obj = crate::scheduler::Objective::MaxThroughput;
+        let ctx = ts.ctx(ev, &rc, &obj);
+        let mut meter = BudgetMeter::new(&SearchBudget::unlimited(), 3);
+        let out = walk(&ctx, None, global_bound(&ctx), &mut meter, false);
+        assert_eq!(out.evaluated as u128, ts.size);
+        assert_eq!(out.terminated, Termination::Exhausted);
+        assert_eq!(out.bound_pruned, 0);
+        assert!(out.best.is_some());
+    }
+
+    #[test]
+    fn budgeted_walk_stops_and_reports_frontier() {
+        let p = problem();
+        let rc = p.resolve(&Constraints::new()).unwrap();
+        let ev = p.evaluator();
+        let ts = TableSet::build(ev, &rc, 2, p.topology().n_components(), 3);
+        let obj = crate::scheduler::Objective::MaxThroughput;
+        let ctx = ts.ctx(ev, &rc, &obj);
+        let budget = SearchBudget::unlimited().with_max_candidates(10);
+        let mut meter = BudgetMeter::new(&budget, 3);
+        let glob = global_bound(&ctx);
+        let out = walk(&ctx, None, glob, &mut meter, false);
+        assert_eq!(out.evaluated, 10);
+        assert_eq!(out.terminated, Termination::Budget);
+        assert!(out.frontier > 0.0, "unexplored subtrees must leave a frontier bound");
+        let best = out.best.unwrap();
+        let (bound, gap) = certify(out.terminated, best.rate, out.frontier, glob);
+        let (bound, gap) = (bound.unwrap(), gap.unwrap());
+        assert!(bound + 1e-9 >= best.rate);
+        assert!(gap >= 0.0);
+    }
+
+    #[test]
+    fn repair_moves_off_disallowed_machines() {
+        let p = problem();
+        let rc = p.resolve(&Constraints::new().exclude_machine("i3-0")).unwrap();
+        let n_comp = p.topology().n_components();
+        let mut warm = Placement::empty(n_comp, 3);
+        for c in 0..n_comp {
+            warm.x[c][1] = 2; // everything on the now-excluded machine
+        }
+        let fixed = repair_warm_start(&rc, &warm, n_comp, 3).unwrap();
+        for c in 0..n_comp {
+            assert_eq!(fixed.x[c][1], 0);
+            assert!(fixed.count(c) >= 1);
+        }
+        // shape mismatch is rejected, not repaired
+        assert!(repair_warm_start(&rc, &warm, n_comp + 1, 3).is_none());
+    }
+}

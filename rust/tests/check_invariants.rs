@@ -7,10 +7,10 @@
 //! 1. every benchmark topology x registry policy combination validates
 //!    clean and replays bit-for-bit;
 //! 2. randomized `Constraints` (exclusions, pins, instance caps,
-//!    headroom, reserved loads) pushed through all three policies still
-//!    validate clean — the verifier agrees with the schedulers on what
-//!    the constraints mean;
-//! 3. a mutation corpus: eight distinct corruptions of a known-good
+//!    headroom, reserved loads) pushed through every registry policy
+//!    still validate clean — the verifier agrees with the schedulers on
+//!    what the constraints mean;
+//! 3. a mutation corpus: nine distinct corruptions of a known-good
 //!    schedule, each flagged with a distinct `Violation::code()`, plus
 //!    shape-mismatch and replay-divergence probes.
 
@@ -22,10 +22,14 @@ use hstorm::scheduler::{registry, Constraints, PolicyParams, Problem, Schedule, 
 use hstorm::topology::benchmarks;
 use hstorm::util::prop;
 
-/// Policy tunables for these tests: the optimal search runs sampled
-/// (seeded, so replay stays bit-identical) to keep debug builds fast.
+/// Policy tunables for these tests: the optimal search runs sampled and
+/// the budgeted search policies (bnb/beam/portfolio) run under a small
+/// deterministic candidate budget (so replay stays bit-identical) to
+/// keep debug builds fast.
 fn params() -> PolicyParams {
-    PolicyParams { sampled: Some((600, 7)), ..PolicyParams::default() }
+    let mut p = PolicyParams { sampled: Some((600, 7)), ..PolicyParams::default() };
+    p.set("budget-candidates", "4000").unwrap();
+    p
 }
 
 fn paper_problem(top: &hstorm::topology::Topology) -> Problem {
@@ -187,6 +191,14 @@ fn corpus() -> Vec<Mutation> {
             req: ScheduleRequest::max_throughput(),
             mutate: |_, s| s.eval.feasible = !s.eval.feasible,
             code: "feasible-flag-wrong",
+        },
+        Mutation {
+            name: "negative-gap",
+            req: ScheduleRequest::max_throughput(),
+            // a bound below the returned rate implies a negative gap —
+            // no search can legitimately certify this
+            mutate: |_, s| s.provenance.optimality_gap = Some(-0.05),
+            code: "gap-inconsistent",
         },
     ]
 }
