@@ -1,0 +1,80 @@
+//! Bench: the batched ring dataplane vs the legacy per-tuple channel
+//! dataplane, racing the same placement at the same offered load in a
+//! transport-bound regime (service compressed to ~nothing, so the
+//! measured wall tuples/s is pure dataplane overhead).
+//!
+//! CI asserts the headline: `ring >= 10x legacy tuples/s : PASS`.
+//! Run: cargo bench --bench dataplane  [HSTORM_FAST=1 for quick mode]
+
+use std::time::Duration;
+
+use hstorm::cluster::presets;
+use hstorm::engine::{self, Dataplane, EngineConfig};
+use hstorm::scheduler::{registry, PolicyParams, Problem, ScheduleRequest};
+use hstorm::topology::benchmarks;
+
+fn race(
+    label: &str,
+    dataplane: Dataplane,
+    cfg: &EngineConfig,
+    world: (&hstorm::topology::Topology, &hstorm::cluster::Cluster),
+    db: &hstorm::cluster::profile::ProfileDb,
+    placement: &hstorm::predict::Placement,
+    rate: f64,
+) -> f64 {
+    let (top, cluster) = world;
+    // two runs, best-of: the first pass also warms caches/allocator
+    let mut best = 0.0f64;
+    for _ in 0..2 {
+        let run_cfg = EngineConfig { dataplane, ..cfg.clone() };
+        let rep = engine::run(top, cluster, db, placement, rate, &run_cfg).expect("engine run");
+        println!(
+            "{label:<8} {:>12.0} wall tuples/s   (virtual {:>10.0}/s, shed {}, {})",
+            rep.wall_throughput,
+            rep.throughput,
+            rep.shed,
+            if rep.throttled { "throttled" } else { "unthrottled" }
+        );
+        best = best.max(rep.wall_throughput);
+    }
+    best
+}
+
+fn main() {
+    let fast = std::env::var("HSTORM_FAST").is_ok();
+    let top = benchmarks::rolling_count();
+    let (cluster, db) = presets::paper_cluster();
+    let problem = Problem::new(&top, &cluster, &db).expect("problem");
+    let hetero = registry::create("hetero", &PolicyParams::default()).expect("policy");
+    let s = hetero.schedule(&problem, &ScheduleRequest::max_throughput()).expect("schedule");
+
+    // compress service to ~nothing so both engines run transport-bound:
+    // the offered wall rate (rate / time_scale) saturates either
+    // dataplane and the measured wall tuples/s is its transport ceiling
+    let cfg = EngineConfig {
+        duration: Duration::from_millis(if fast { 800 } else { 1500 }),
+        warmup: Duration::from_millis(if fast { 250 } else { 400 }),
+        time_scale: 1e-5,
+        ..Default::default()
+    };
+    println!(
+        "racing dataplanes on '{}' (hetero placement, certified rate {:.1}, \
+         offered wall rate {:.1}M tuples/s)",
+        top.name,
+        s.rate,
+        s.rate / cfg.time_scale / 1e6
+    );
+    let world = (&top, &cluster);
+    let ring = race("ring", Dataplane::Ring, &cfg, world, &db, &s.placement, s.rate);
+    let legacy = race("legacy", Dataplane::Legacy, &cfg, world, &db, &s.placement, s.rate);
+
+    let ratio = ring / legacy.max(1.0);
+    let pass = ratio >= 10.0;
+    println!(
+        "ring {:.2}M vs legacy {:.2}M wall tuples/s -> {ratio:.1}x",
+        ring / 1e6,
+        legacy / 1e6
+    );
+    println!("ring >= 10x legacy tuples/s : {}", if pass { "PASS" } else { "FAIL" });
+    assert!(pass, "ring dataplane only {ratio:.1}x the legacy dataplane");
+}

@@ -1,0 +1,316 @@
+//! Legacy channel dataplane: the original per-tuple engine, kept as
+//! the baseline the batched ring dataplane is raced against
+//! (`benches/dataplane.rs`) and selectable via
+//! [`super::Dataplane::Legacy`].
+//!
+//! One thread per machine draining an unbounded `std::sync::mpsc`
+//! channel of single-tuple [`WorkItem`]s; service is burned by
+//! high-resolution sleeping ([`Burner::Sleep`]); spouts shed load once
+//! a target machine's pending depth passes `max_pending` (blind
+//! shedding — the ring dataplane replaces this with credit-based
+//! throttling).  Tuples carry the emit-epoch flag so warmup backlog is
+//! excluded from both the throughput numerator and the busy-time
+//! denominator, same as the ring path.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::worker::{Burner, ComputeMode};
+use super::{EngineConfig, EngineReport, Plan};
+use crate::metrics::Registry;
+use crate::topology::fanout::{AlphaAcc, ShuffleCursor};
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// One tuple in flight: which component's task must process it.
+#[derive(Debug, Clone, Copy)]
+struct WorkItem {
+    comp: usize,
+    /// Task index within the component.  Routing already resolved the
+    /// hosting machine; the slot is carried for trace/debug output.
+    #[allow(dead_code)]
+    slot: usize,
+    /// True when the root spout tuple was emitted inside the
+    /// measurement window (inherited downstream) — only such tuples
+    /// count toward throughput and busy time.
+    measured: bool,
+}
+
+struct MachineCtx {
+    machine: usize,
+    /// tasks[c][slot] = hosting machine (global task table).
+    tasks: Vec<Vec<usize>>,
+    e_m: Vec<Vec<f64>>,
+    met_m: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    downstream: Vec<Vec<usize>>,
+    senders: Vec<Sender<WorkItem>>,
+    pending: Arc<Vec<AtomicI64>>,
+    recording: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    metrics: Registry,
+    time_scale: f64,
+    noise: f64,
+    rng: Rng,
+    compute: ComputeMode,
+}
+
+fn machine_loop(mut ctx: MachineCtx, rx: Receiver<WorkItem>) {
+    let m = ctx.machine;
+    let n_comp = ctx.tasks.len();
+    let busy_us = ctx.metrics.counter(&format!("machine.{m}.busy_us"));
+    let processed: Vec<_> =
+        (0..n_comp).map(|c| ctx.metrics.counter(&format!("comp.{c}.processed"))).collect();
+    let svc: Vec<_> = (0..n_comp).map(|c| ctx.metrics.mean(&format!("svc.{c}.{m}"))).collect();
+
+    // Per-instance MET on this machine: background overhead burned every
+    // tick, in budget-percent.
+    let met_total: f64 = (0..n_comp)
+        .map(|c| ctx.tasks[c].iter().filter(|&&tm| tm == m).count() as f64 * ctx.met_m[c][m])
+        .sum();
+    let met_tick = Duration::from_millis(50);
+    let mut last_met = Instant::now();
+
+    // shuffle-grouping cursors: per (producer on this machine) we keep one
+    // cursor per downstream component
+    let mut cursors: Vec<ShuffleCursor> = vec![ShuffleCursor::new(); n_comp];
+    // fractional alpha accumulators per component processed here
+    let mut acc: Vec<AlphaAcc> = vec![AlphaAcc::new(); n_comp];
+
+    let mut burner = Burner::sleep(&ctx.compute);
+
+    loop {
+        // periodic MET burn (keeps measured util containing the eq.-5
+        // constant term)
+        if met_total > 0.0 && last_met.elapsed() >= met_tick {
+            // MET is a constant share of the budget, and the budget is
+            // wall time under time compression — no scale factor here
+            let secs = met_total / 100.0 * met_tick.as_secs_f64();
+            burner.burn(secs);
+            if ctx.recording.load(Ordering::Relaxed) {
+                busy_us.add((secs * 1e6) as u64);
+            }
+            last_met = Instant::now();
+        }
+
+        let item = match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(it) => it,
+            Err(RecvTimeoutError::Timeout) => {
+                if ctx.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        ctx.pending[m].fetch_sub(1, Ordering::Relaxed);
+        let c = item.comp;
+
+        // ---- service -----------------------------------------------------
+        let noise_mul = if ctx.noise > 0.0 {
+            1.0 + ctx.noise * (ctx.rng.f64() * 2.0 - 1.0)
+        } else {
+            1.0
+        };
+        let service_budget_secs = ctx.e_m[c][m] / 100.0 * noise_mul; // profile units
+        let service_wall = service_budget_secs * ctx.time_scale;
+        burner.burn(service_wall);
+
+        // emit-epoch accounting: the tuple must have been emitted in
+        // the window *and* be processed inside it
+        if item.measured && ctx.recording.load(Ordering::Relaxed) {
+            busy_us.add((service_wall * 1e6) as u64);
+            processed[c].inc();
+            svc[c].observe(service_wall);
+        }
+
+        // ---- emit downstream (shuffle grouping, eq. 6) ----------------------
+        let emit = acc[c].step(ctx.alpha[c]);
+        if emit > 0 {
+            for &d in &ctx.downstream[c] {
+                for _ in 0..emit {
+                    let n_inst = ctx.tasks[d].len();
+                    if n_inst == 0 {
+                        continue;
+                    }
+                    let slot = cursors[d].next_slot(n_inst);
+                    let target_machine = ctx.tasks[d][slot];
+                    let fwd = WorkItem { comp: d, slot, measured: item.measured };
+                    if ctx.senders[target_machine].send(fwd).is_ok() {
+                        ctx.pending[target_machine].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+
+        if ctx.stop.load(Ordering::Relaxed) {
+            // drain quickly on shutdown without burning time
+            while rx.try_recv().is_ok() {}
+            return;
+        }
+    }
+}
+
+/// Execute `plan` on the legacy channel dataplane.
+pub(crate) fn run_legacy(plan: &Plan, r0: f64, cfg: &EngineConfig) -> Result<EngineReport> {
+    let n_comp = plan.n_comp;
+    let n_machines = plan.n_machines;
+    let tasks = plan.tasks.clone();
+
+    // ---- shared state -----------------------------------------------------
+    let recording = Arc::new(AtomicBool::new(false));
+    let stop = Arc::new(AtomicBool::new(false));
+    let pending: Arc<Vec<AtomicI64>> =
+        Arc::new((0..n_machines).map(|_| AtomicI64::new(0)).collect());
+    let shed = Arc::new(AtomicU64::new(0));
+    let emitted = Arc::new(AtomicU64::new(0));
+    let metrics = Registry::new();
+
+    // one unbounded channel per machine (backpressure is enforced at the
+    // spouts via the `pending` depth counters)
+    let mut senders: Vec<Sender<WorkItem>> = Vec::with_capacity(n_machines);
+    let mut receivers = Vec::with_capacity(n_machines);
+    for _ in 0..n_machines {
+        let (tx, rx) = channel::<WorkItem>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    // ---- machine worker threads --------------------------------------------
+    let mut joins = Vec::new();
+    for (m, rx) in receivers.into_iter().enumerate() {
+        let ctx = MachineCtx {
+            machine: m,
+            tasks: tasks.clone(),
+            e_m: plan.e_m.clone(),
+            met_m: plan.met_m.clone(),
+            alpha: plan.alpha.clone(),
+            downstream: plan.downstream.clone(),
+            senders: senders.clone(),
+            pending: pending.clone(),
+            recording: recording.clone(),
+            stop: stop.clone(),
+            metrics: metrics.clone(),
+            time_scale: cfg.time_scale,
+            noise: cfg.noise,
+            rng: Rng::new(cfg.seed ^ ((m as u64) << 17)),
+            compute: cfg.compute.clone(),
+        };
+        joins.push(std::thread::spawn(move || machine_loop(ctx, rx)));
+    }
+
+    // ---- spout pacing threads ------------------------------------------------
+    let mut spout_joins = Vec::new();
+    for &c in &plan.spouts {
+        let n_inst = tasks[c].len();
+        // wall-clock emission rate: virtual rate compressed by time_scale
+        // (weighted spouts receive `weight · R0` — see Component::weight)
+        let rate_per_inst = r0 * plan.weights[c] / n_inst as f64 / cfg.time_scale;
+        for slot in 0..n_inst {
+            let machine = tasks[c][slot];
+            let tx = senders[machine].clone();
+            let pending = pending.clone();
+            let stop = stop.clone();
+            let shed = shed.clone();
+            let emitted = emitted.clone();
+            let recording = recording.clone();
+            let max_pending = cfg.max_pending;
+            spout_joins.push(std::thread::spawn(move || {
+                let tick = Duration::from_millis(5);
+                let mut carry = 0.0f64;
+                // elapsed-based pacing: sleep overshoot (large on busy
+                // single-core hosts) self-corrects instead of silently
+                // lowering the emission rate
+                let mut last = Instant::now();
+                // token bucket with a bounded burst (~50 ms of rate): a
+                // transient CPU stall must not flood the queues with the
+                // whole backlog at once and trigger spurious shedding
+                let burst_cap = (rate_per_inst * 0.05).max(2.0);
+                while !stop.load(Ordering::Relaxed) {
+                    let now = Instant::now();
+                    carry = (carry + rate_per_inst * (now - last).as_secs_f64()).min(burst_cap);
+                    last = now;
+                    let n = carry as u64;
+                    carry -= n as f64;
+                    for _ in 0..n {
+                        let measured = recording.load(Ordering::Relaxed);
+                        if pending[machine].load(Ordering::Relaxed) > max_pending {
+                            if measured {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            continue;
+                        }
+                        if tx.send(WorkItem { comp: c, slot, measured }).is_err() {
+                            return;
+                        }
+                        pending[machine].fetch_add(1, Ordering::Relaxed);
+                        if measured {
+                            emitted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    std::thread::sleep(tick);
+                }
+            }));
+        }
+    }
+    drop(senders);
+
+    // ---- warmup, measure, stop -------------------------------------------------
+    std::thread::sleep(cfg.warmup);
+    recording.store(true, Ordering::SeqCst);
+    let t0 = Instant::now();
+    std::thread::sleep(cfg.duration);
+    recording.store(false, Ordering::SeqCst);
+    let window = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::SeqCst);
+    for j in spout_joins {
+        j.join().map_err(|_| Error::Engine("spout thread panicked".into()))?;
+    }
+    for j in joins {
+        j.join().map_err(|_| Error::Engine("machine thread panicked".into()))?;
+    }
+
+    // ---- collect ------------------------------------------------------------------
+    // rates are reported in *virtual* tuples/s: `window` wall seconds
+    // simulate `window / time_scale` virtual seconds
+    let vwindow = window / cfg.time_scale;
+    let mut comp_rate = vec![0.0f64; n_comp];
+    let mut total_processed = 0u64;
+    for (c, rate) in comp_rate.iter_mut().enumerate() {
+        let processed = metrics.counter(&format!("comp.{c}.processed")).get();
+        total_processed += processed;
+        *rate = processed as f64 / vwindow;
+    }
+    let mut util = vec![0.0f64; n_machines];
+    for (m, u) in util.iter_mut().enumerate() {
+        let busy_us = metrics.counter(&format!("machine.{m}.busy_us")).get();
+        // under time compression both busy time and the budget are wall
+        // quantities, so utilization is a plain wall ratio
+        *u = busy_us as f64 / 1e6 / window * 100.0;
+    }
+    let mut service = vec![vec![None; n_machines]; n_comp];
+    for c in 0..n_comp {
+        for m in 0..n_machines {
+            let stat = metrics.mean(&format!("svc.{c}.{m}"));
+            if stat.count() > 0 {
+                // report in profile units: undo time_scale
+                service[c][m] = stat.mean().map(|s| s / cfg.time_scale);
+            }
+        }
+    }
+    Ok(EngineReport {
+        window,
+        throughput: comp_rate.iter().sum(),
+        util,
+        comp_rate,
+        service,
+        shed: shed.load(Ordering::Relaxed),
+        emitted_rate: emitted.load(Ordering::Relaxed) as f64 / vwindow,
+        wall_throughput: total_processed as f64 / window,
+        latency: None,
+        credit_stalls: 0,
+        throttled: false,
+    })
+}

@@ -4,49 +4,68 @@
 //! The paper measures its schedulers on four physical machines running
 //! Apache Storm.  This engine reproduces the mechanism that matters for
 //! the paper's claims — heterogeneous per-tuple CPU cost and machine
-//! capacity saturation — with real queueing and real time:
+//! capacity saturation — with real threads, real queueing and real
+//! time:
 //!
 //! * every worker **machine** is a thread modeling one Storm worker
 //!   process: a single-server queue with a CPU budget of 100 %·s per
 //!   second (the paper's `MAC`);
 //! * every **task** (executor) is pinned to its machine per the
-//!   placement; the machine serially processes tuples addressed to its
-//!   tasks, spending `e_ij` percent-seconds of budget per tuple (drawn
-//!   from the same profile DB the schedulers read, plus optional noise —
-//!   the engine is the ground truth the prediction model is judged
-//!   against, Fig. 6);
-//! * per-instance **MET** overhead is burned as periodic background work;
-//! * **spout pacing** threads inject the topology input rate `R0`,
-//!   shedding load when a downstream queue passes the pending bound
-//!   (Storm's `max.spout.pending` analogue), so over-scheduled placements
-//!   saturate instead of deadlocking;
-//! * routing uses **shuffle grouping**: each producer task round-robins
-//!   over the consumer component's instances; α > 1 fan-out is produced
-//!   with a deterministic fractional accumulator (eq. 6 semantics);
-//! * in [`ComputeMode::Pjrt`] the service time is burned by executing the
-//!   AOT work kernel (`work.hlo.txt`) instead of sleeping — real compute
-//!   through PJRT on the data path.
+//!   placement; work addressed to a task arrives over bounded
+//!   lock-free SPSC **rings** ([`ring`]), one per (producer thread,
+//!   task) pair, and moves in [tuple batches](worker) — the
+//!   throughput-first dataplane of ROADMAP item 1;
+//! * service spends `n · e_ij` percent-seconds of budget per batch
+//!   (from the same profile DB the schedulers read, plus optional
+//!   noise — the engine is the ground truth the prediction model is
+//!   judged against, Fig. 6); per-instance **MET** overhead is burned
+//!   as periodic background work;
+//! * **spout pacing** threads inject the topology input rate `R0`;
+//!   when downstream credits run out the spout is *throttled*
+//!   (credit-based backpressure, lossless) instead of shedding — the
+//!   legacy channel dataplane ([`legacy`], [`Dataplane::Legacy`])
+//!   keeps the old `max.spout.pending` shedding behavior as the
+//!   baseline;
+//! * routing uses **shuffle grouping**: producers round-robin over the
+//!   consumer component's instances; α > 1 fan-out is produced with
+//!   the deterministic fractional accumulator shared with the event
+//!   simulator ([`crate::topology::fanout`], eq. 6 semantics);
+//! * in [`ComputeMode::Pjrt`] the service time is burned by executing
+//!   the AOT work kernel (`work.hlo.txt`) instead of virtual work —
+//!   real compute through PJRT on the data path.
 //!
 //! Throughput is the sum of tuples processed per second over all tasks
 //! (the paper's eq. 2 objective); utilization is busy-time / wall-time
-//! per machine.  Both are measured only inside the post-warmup window.
+//! per machine.  Both are measured only inside the post-warmup window,
+//! and only for tuples *emitted* inside it (the emit-epoch stamp —
+//! warmup backlog is excluded from numerator and denominator alike).
 
+mod legacy;
+pub mod ring;
 mod worker;
 
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::sync::Mutex;
+use std::time::Duration;
 
 use crate::cluster::profile::ProfileDb;
 use crate::cluster::Cluster;
-use crate::metrics::Registry;
 use crate::predict::Placement;
+use crate::simulator::event::LatencySummary;
 use crate::topology::Topology;
-use crate::util::rng::Rng;
 use crate::{Error, Result};
 
 pub use worker::ComputeMode;
+
+/// Which dataplane executes the placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataplane {
+    /// Batched SPSC-ring dataplane with credit-based backpressure
+    /// (the default; millions of tuples/s).
+    Ring,
+    /// The original per-tuple mpsc dataplane with `max.spout.pending`
+    /// shedding, kept as the bench baseline.
+    Legacy,
+}
 
 /// Engine tunables.
 #[derive(Debug, Clone)]
@@ -59,15 +78,28 @@ pub struct EngineConfig {
     /// virtual (cluster) seconds.  Service times shrink by `time_scale`
     /// and emission rates grow by `1/time_scale`, so machines saturate at
     /// exactly the modeled capacity and utilization ratios are preserved;
-    /// 1.0 = real time, 0.25 = 4x faster (test suite).
+    /// 1.0 = real time, 0.25 = 4x faster (test suite), ~0.001 = the
+    /// millions-of-tuples/s regime of the `dataplane` experiment.
     pub time_scale: f64,
-    /// Spout sheds load once a target machine's pending queue passes
-    /// this depth (Storm `max.spout.pending` analogue).
+    /// Legacy dataplane only: spouts shed load once a target machine's
+    /// pending queue passes this depth (Storm `max.spout.pending`).
     pub max_pending: i64,
     /// Multiplicative service-time noise amplitude (0.05 = ±5%).
     pub noise: f64,
     pub seed: u64,
     pub compute: ComputeMode,
+    /// Which dataplane to run.
+    pub dataplane: Dataplane,
+    /// Ring dataplane: tuples per batch.
+    pub batch: usize,
+    /// Ring dataplane: ring capacity in batches per (producer, task)
+    /// pair — the credit pool; a full ring throttles the producer.
+    pub ring_capacity: usize,
+    /// Ring dataplane: spin-burner floor in µs — service debts below
+    /// this accumulate before the calibrated spin runs (the
+    /// calibration knob; raise it to amortize clock polling, lower it
+    /// for finer pacing).
+    pub spin_floor_us: f64,
 }
 
 impl Default for EngineConfig {
@@ -80,6 +112,10 @@ impl Default for EngineConfig {
             noise: 0.0,
             seed: 0x5EED,
             compute: ComputeMode::Simulated,
+            dataplane: Dataplane::Ring,
+            batch: 256,
+            ring_capacity: 64,
+            spin_floor_us: 1.0,
         }
     }
 }
@@ -96,14 +132,20 @@ impl EngineConfig {
     }
 }
 
-/// One tuple in flight: which component's task must process it.
-#[derive(Debug, Clone, Copy)]
-pub(crate) struct WorkItem {
-    pub comp: usize,
-    /// Task index within the component.  Routing already resolved the
-    /// hosting machine; the slot is carried for trace/debug output.
-    #[allow(dead_code)]
-    pub slot: usize,
+/// Validated, expanded inputs shared by both dataplanes.
+pub(crate) struct Plan {
+    pub n_comp: usize,
+    pub n_machines: usize,
+    /// tasks[c][slot] = hosting machine.
+    pub tasks: Vec<Vec<usize>>,
+    pub e_m: Vec<Vec<f64>>,
+    pub met_m: Vec<Vec<f64>>,
+    pub alpha: Vec<f64>,
+    pub downstream: Vec<Vec<usize>>,
+    /// Spout weight per component (`weight · R0` arrives at weighted
+    /// spouts).
+    pub weights: Vec<f64>,
+    pub spouts: Vec<usize>,
 }
 
 /// Measured results of an engine run.
@@ -111,22 +153,43 @@ pub(crate) struct WorkItem {
 pub struct EngineReport {
     /// Measurement window length (s).
     pub window: f64,
-    /// Overall throughput: tuples processed per second summed over all
-    /// tasks (same definition as the predictor's objective).
+    /// Overall throughput in *virtual* tuples/s: tuples processed per
+    /// virtual second summed over all tasks (same definition as the
+    /// predictor's objective).
     pub throughput: f64,
     /// Measured CPU utilization per machine (%), busy / wall.
     pub util: Vec<f64>,
-    /// Tuples processed per second per component.
+    /// Tuples processed per virtual second per component.
     pub comp_rate: Vec<f64>,
     /// Mean measured service time per (component, machine) where
     /// observed, in profile units (seconds of budget per tuple; the
     /// engine's `time_scale` is already divided out).
     pub service: Vec<Vec<Option<f64>>>,
-    /// Tuples shed at the spouts (backpressure drops) in the window.
+    /// Tuples shed at the spouts in the window (legacy dataplane only;
+    /// the ring dataplane is lossless and always reports 0).
     pub shed: u64,
-    /// Effective spout emission rate achieved (tuples/s).
+    /// Effective spout emission rate achieved (virtual tuples/s).
     pub emitted_rate: f64,
+    /// Tuples processed per *wall-clock* second — the executed
+    /// dataplane rate the 1M-tuples/s roadmap target is scored on.
+    pub wall_throughput: f64,
+    /// End-to-end sink tuple latency in wall seconds (ring dataplane;
+    /// `None` when nothing reached a sink inside the window).
+    pub latency: Option<LatencySummary>,
+    /// Producer-side events where a downstream ring was full (credits
+    /// exhausted); ring dataplane only.
+    pub credit_stalls: u64,
+    /// True when a spout was throttled by exhausted credits inside the
+    /// measurement window (the credit-based backpressure verdict).
+    pub throttled: bool,
 }
+
+/// Engine runs measure wall-clock capacity with spinning worker
+/// threads; two concurrent runs in one process would contend for cores
+/// and corrupt each other's measurements (most visibly when the test
+/// harness runs engine tests in parallel).  Nothing legitimate runs
+/// two engines at once, so `run` is process-serialized.
+static RUN_GATE: Mutex<()> = Mutex::new(());
 
 /// Run `placement` on the engine at topology input rate `r0`.
 pub fn run(
@@ -137,6 +200,7 @@ pub fn run(
     r0: f64,
     cfg: &EngineConfig,
 ) -> Result<EngineReport> {
+    let _serial = RUN_GATE.lock().unwrap_or_else(|e| e.into_inner());
     top.validate()?;
     cluster.validate()?;
     profiles.check_coverage(top, cluster)?;
@@ -160,161 +224,28 @@ pub fn run(
         }
     }
 
-    // ---- shared state -----------------------------------------------------
-    let recording = Arc::new(AtomicBool::new(false));
-    let stop = Arc::new(AtomicBool::new(false));
-    let pending: Arc<Vec<AtomicI64>> =
-        Arc::new((0..n_machines).map(|_| AtomicI64::new(0)).collect());
-    let shed = Arc::new(AtomicU64::new(0));
-    let emitted = Arc::new(AtomicU64::new(0));
-    let metrics = Registry::new();
-
-    // one unbounded channel per machine (backpressure is enforced at the
-    // spouts via the `pending` depth counters)
-    let mut senders: Vec<Sender<WorkItem>> = Vec::with_capacity(n_machines);
-    let mut receivers = Vec::with_capacity(n_machines);
-    for _ in 0..n_machines {
-        let (tx, rx) = channel::<WorkItem>();
-        senders.push(tx);
-        receivers.push(rx);
+    let plan = Plan {
+        n_comp,
+        n_machines,
+        tasks,
+        e_m,
+        met_m,
+        alpha: top.components.iter().map(|c| c.alpha).collect(),
+        downstream: (0..n_comp).map(|c| top.downstream(c)).collect(),
+        weights: top.components.iter().map(|c| c.weight).collect(),
+        spouts: top.spouts(),
+    };
+    match cfg.dataplane {
+        Dataplane::Ring => worker::run_ring(&plan, r0, cfg),
+        Dataplane::Legacy => legacy::run_legacy(&plan, r0, cfg),
     }
-
-    // ---- machine worker threads --------------------------------------------
-    let mut joins = Vec::new();
-    for (m, rx) in receivers.into_iter().enumerate() {
-        let ctx = worker::MachineCtx {
-            machine: m,
-            tasks: tasks.clone(),
-            e_m: e_m.clone(),
-            met_m: met_m.clone(),
-            alpha: top.components.iter().map(|c| c.alpha).collect(),
-            downstream: (0..n_comp).map(|c| top.downstream(c)).collect(),
-            senders: senders.clone(),
-            pending: pending.clone(),
-            recording: recording.clone(),
-            stop: stop.clone(),
-            metrics: metrics.clone(),
-            time_scale: cfg.time_scale,
-            noise: cfg.noise,
-            rng: Rng::new(cfg.seed ^ ((m as u64) << 17)),
-            compute: cfg.compute.clone(),
-        };
-        joins.push(std::thread::spawn(move || worker::machine_loop(ctx, rx)));
-    }
-
-    // ---- spout pacing threads ------------------------------------------------
-    let spouts = top.spouts();
-    let mut spout_joins = Vec::new();
-    for &c in &spouts {
-        let n_inst = tasks[c].len();
-        // wall-clock emission rate: virtual rate compressed by time_scale
-        // (weighted spouts receive `weight · R0` — see Component::weight)
-        let rate_per_inst = r0 * top.components[c].weight / n_inst as f64 / cfg.time_scale;
-        for slot in 0..n_inst {
-            let machine = tasks[c][slot];
-            let tx = senders[machine].clone();
-            let pending = pending.clone();
-            let stop = stop.clone();
-            let shed = shed.clone();
-            let emitted = emitted.clone();
-            let recording = recording.clone();
-            let max_pending = cfg.max_pending;
-            spout_joins.push(std::thread::spawn(move || {
-                let tick = Duration::from_millis(5);
-                let mut carry = 0.0f64;
-                // elapsed-based pacing: sleep overshoot (large on busy
-                // single-core hosts) self-corrects instead of silently
-                // lowering the emission rate
-                let mut last = Instant::now();
-                // token bucket with a bounded burst (~50 ms of rate): a
-                // transient CPU stall must not flood the queues with the
-                // whole backlog at once and trigger spurious shedding
-                let burst_cap = (rate_per_inst * 0.05).max(2.0);
-                while !stop.load(Ordering::Relaxed) {
-                    let now = Instant::now();
-                    carry = (carry + rate_per_inst * (now - last).as_secs_f64()).min(burst_cap);
-                    last = now;
-                    let n = carry as u64;
-                    carry -= n as f64;
-                    for _ in 0..n {
-                        if pending[machine].load(Ordering::Relaxed) > max_pending {
-                            if recording.load(Ordering::Relaxed) {
-                                shed.fetch_add(1, Ordering::Relaxed);
-                            }
-                            continue;
-                        }
-                        if tx.send(WorkItem { comp: c, slot }).is_err() {
-                            return;
-                        }
-                        pending[machine].fetch_add(1, Ordering::Relaxed);
-                        if recording.load(Ordering::Relaxed) {
-                            emitted.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                    std::thread::sleep(tick);
-                }
-            }));
-        }
-    }
-    drop(senders);
-
-    // ---- warmup, measure, stop -------------------------------------------------
-    std::thread::sleep(cfg.warmup);
-    recording.store(true, Ordering::SeqCst);
-    let t0 = Instant::now();
-    std::thread::sleep(cfg.duration);
-    recording.store(false, Ordering::SeqCst);
-    let window = t0.elapsed().as_secs_f64();
-    stop.store(true, Ordering::SeqCst);
-    for j in spout_joins {
-        j.join().map_err(|_| Error::Engine("spout thread panicked".into()))?;
-    }
-    for j in joins {
-        j.join().map_err(|_| Error::Engine("machine thread panicked".into()))?;
-    }
-
-    // ---- collect ------------------------------------------------------------------
-    // rates are reported in *virtual* tuples/s: `window` wall seconds
-    // simulate `window / time_scale` virtual seconds
-    let vwindow = window / cfg.time_scale;
-    let mut comp_rate = vec![0.0f64; n_comp];
-    for (c, rate) in comp_rate.iter_mut().enumerate() {
-        let processed = metrics.counter(&format!("comp.{c}.processed")).get();
-        *rate = processed as f64 / vwindow;
-    }
-    let mut util = vec![0.0f64; n_machines];
-    for (m, u) in util.iter_mut().enumerate() {
-        let busy_us = metrics.counter(&format!("machine.{m}.busy_us")).get();
-        // under time compression both busy time and the budget are wall
-        // quantities, so utilization is a plain wall ratio
-        *u = busy_us as f64 / 1e6 / window * 100.0;
-    }
-    let mut service = vec![vec![None; n_machines]; n_comp];
-    for c in 0..n_comp {
-        for m in 0..n_machines {
-            let stat = metrics.mean(&format!("svc.{c}.{m}"));
-            if stat.count() > 0 {
-                // report in profile units: undo time_scale
-                service[c][m] = stat.mean().map(|s| s / cfg.time_scale);
-            }
-        }
-    }
-    Ok(EngineReport {
-        window,
-        throughput: comp_rate.iter().sum(),
-        util,
-        comp_rate,
-        service,
-        shed: shed.load(Ordering::Relaxed),
-        emitted_rate: emitted.load(Ordering::Relaxed) as f64 / vwindow,
-    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::benchmarks;
     use crate::cluster::presets;
+    use crate::topology::benchmarks;
 
     fn place_spread(top: &Topology, cluster: &Cluster) -> Placement {
         let mut p = Placement::empty(top.n_components(), cluster.n_machines());
@@ -333,8 +264,13 @@ mod tests {
         for (c, r) in rep.comp_rate.iter().enumerate() {
             assert!((r - 40.0).abs() < 12.0, "comp {c}: rate {r}");
         }
-        assert!(rep.shed == 0, "shed {} at low rate", rep.shed);
+        assert!(rep.shed == 0, "ring dataplane never sheds");
+        assert!(rep.credit_stalls == 0, "no stalls at low rate: {}", rep.credit_stalls);
+        assert!(!rep.throttled);
         assert!(rep.throughput > 110.0 && rep.throughput < 210.0, "{}", rep.throughput);
+        assert!(rep.wall_throughput > rep.throughput, "time compression raises the wall rate");
+        let lat = rep.latency.expect("sink latency must be observed");
+        assert!(lat.samples > 0 && lat.p99 >= lat.p50 && lat.p50 > 0.0);
     }
 
     #[test]
@@ -359,18 +295,36 @@ mod tests {
     }
 
     #[test]
-    fn overload_sheds_and_saturates() {
+    fn overload_throttles_without_shedding() {
         let (cluster, db) = presets::paper_cluster();
         let top = benchmarks::linear();
         let mut p = Placement::empty(top.n_components(), cluster.n_machines());
         for c in 0..top.n_components() {
             p.x[c][0] = 1; // everything on the Pentium worker
         }
-        let cfg = EngineConfig { max_pending: 128, ..EngineConfig::fast_test() };
+        // small batches/rings: at the test's compressed wall rates a
+        // full-size credit pool would hold several hundred ms of work,
+        // and the (correctly) uncounted warmup backlog would eat the
+        // measurement window
+        let cfg = EngineConfig { batch: 8, ring_capacity: 4, ..EngineConfig::fast_test() };
         let rep = run(&top, &cluster, &db, &p, 4000.0, &cfg).unwrap();
-        assert!(rep.shed > 0, "expected shedding under overload");
-        assert!(rep.util[0] > 75.0, "util {}", rep.util[0]);
+        assert!(rep.shed == 0, "credit-based backpressure is lossless, got shed {}", rep.shed);
+        assert!(rep.throttled, "spout must be throttled under overload");
+        assert!(rep.credit_stalls > 0, "credits must run out under overload");
+        assert!(
+            rep.emitted_rate < 4000.0 * 0.8,
+            "throttle must cut emission: {}",
+            rep.emitted_rate
+        );
+        assert!(rep.util[0] > 60.0, "util {}", rep.util[0]);
         assert!(rep.util[1] < 5.0 && rep.util[2] < 5.0);
+        // emit-epoch accounting: throughput cannot exceed what the
+        // machine can actually process (warmup backlog must not inflate
+        // the numerator)
+        let (e_m, _) = db.expand(&top, &cluster).unwrap();
+        let cap: f64 = 100.0 / (0..top.n_components()).map(|c| e_m[c][0]).sum::<f64>();
+        let per_comp = rep.throughput / top.n_components() as f64;
+        assert!(per_comp < cap * 1.25, "per-comp rate {per_comp} vs capacity {cap}");
     }
 
     #[test]
@@ -414,5 +368,16 @@ mod tests {
         let rel = (svc - want).abs() / want;
         assert!(rel < 0.25, "measured {svc}, want {want}");
     }
-}
 
+    #[test]
+    fn legacy_dataplane_still_runs() {
+        let (cluster, db) = presets::paper_cluster();
+        let top = benchmarks::linear();
+        let p = place_spread(&top, &cluster);
+        let cfg = EngineConfig { dataplane: Dataplane::Legacy, ..EngineConfig::fast_test() };
+        let rep = run(&top, &cluster, &db, &p, 40.0, &cfg).unwrap();
+        assert!(rep.shed == 0, "shed {} at low rate", rep.shed);
+        assert!(rep.throughput > 110.0 && rep.throughput < 210.0, "{}", rep.throughput);
+        assert!(rep.latency.is_none(), "legacy path reports no latency");
+    }
+}

@@ -1,0 +1,225 @@
+//! Bounded lock-free single-producer/single-consumer ring queue.
+//!
+//! The dataplane's only inter-thread channel: each (producer thread,
+//! consumer task) pair owns exactly one ring, so every slot is written
+//! by one thread and read by one thread — no CAS loops, no locks, one
+//! release store per side per operation.  Capacity is a power of two
+//! and **fixed at construction**: a full ring makes `try_push` fail,
+//! which *is* the engine's credit-based backpressure (the free slots
+//! are the producer's credits; the consumer returns a credit by
+//! popping).
+//!
+//! Memory ordering is the classic SPSC protocol: the producer
+//! publishes a slot with a release store of `tail` (pairing with the
+//! consumer's acquire load), the consumer releases a slot with a
+//! release store of `head` (pairing with the producer's acquire load).
+//! Each side caches the opposite index and only re-reads it on
+//! apparent full/empty, so the steady-state hot path touches a single
+//! shared cache line.  Head and tail live on separate 64-byte lines to
+//! avoid false sharing.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[repr(align(64))]
+struct CachePadded(AtomicUsize);
+
+struct Inner<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: usize,
+    /// Next index to pop; written only by the consumer.
+    head: CachePadded,
+    /// Next index to push; written only by the producer.
+    tail: CachePadded,
+}
+
+// SAFETY: the Producer/Consumer halves enforce single-threaded access
+// per side; slots are handed across threads only through the
+// release/acquire head/tail protocol, so `T: Send` suffices.
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // `&mut self`: both halves are gone, plain loads are enough.
+        let head = self.head.0.load(Ordering::Relaxed);
+        let tail = self.tail.0.load(Ordering::Relaxed);
+        let mut i = head;
+        while i != tail {
+            // SAFETY: indices in [head, tail) hold initialized values
+            // that neither side will touch again.
+            unsafe { (*self.buf[i & self.mask].get()).assume_init_drop() };
+            i = i.wrapping_add(1);
+        }
+    }
+}
+
+/// Producer half; owned by exactly one thread.
+pub struct Producer<T> {
+    inner: Arc<Inner<T>>,
+    /// Consumer's head as last observed; refreshed only on full.
+    head_cache: usize,
+}
+
+/// Consumer half; owned by exactly one thread.
+pub struct Consumer<T> {
+    inner: Arc<Inner<T>>,
+    /// Producer's tail as last observed; refreshed only on empty.
+    tail_cache: usize,
+}
+
+/// Build a ring holding up to `capacity` items (rounded up to a power
+/// of two, minimum 2).
+pub fn ring<T>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = capacity.next_power_of_two().max(2);
+    let buf: Box<[UnsafeCell<MaybeUninit<T>>]> =
+        (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let inner = Arc::new(Inner {
+        buf,
+        mask: cap - 1,
+        head: CachePadded(AtomicUsize::new(0)),
+        tail: CachePadded(AtomicUsize::new(0)),
+    });
+    (Producer { inner: Arc::clone(&inner), head_cache: 0 }, Consumer { inner, tail_cache: 0 })
+}
+
+impl<T> Producer<T> {
+    /// Push `v`, or hand it back when the ring is full (credits
+    /// exhausted — the caller decides whether to stash or throttle).
+    #[inline]
+    pub fn try_push(&mut self, v: T) -> Result<(), T> {
+        let inner = &*self.inner;
+        let tail = inner.tail.0.load(Ordering::Relaxed);
+        if tail.wrapping_sub(self.head_cache) > inner.mask {
+            self.head_cache = inner.head.0.load(Ordering::Acquire);
+            if tail.wrapping_sub(self.head_cache) > inner.mask {
+                return Err(v);
+            }
+        }
+        // SAFETY: slot `tail` is unoccupied (tail - head <= mask) and
+        // only this thread writes at tail.
+        unsafe { (*inner.buf[tail & inner.mask].get()).write(v) };
+        inner.tail.0.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+}
+
+impl<T> Consumer<T> {
+    /// Pop the oldest item, or `None` when the ring is empty.
+    #[inline]
+    pub fn try_pop(&mut self) -> Option<T> {
+        let inner = &*self.inner;
+        let head = inner.head.0.load(Ordering::Relaxed);
+        if head == self.tail_cache {
+            self.tail_cache = inner.tail.0.load(Ordering::Acquire);
+            if head == self.tail_cache {
+                return None;
+            }
+        }
+        // SAFETY: slot `head` was published by the producer's release
+        // store of tail (acquire-loaded above) and only this thread
+        // reads at head.
+        let v = unsafe { (*inner.buf[head & inner.mask].get()).assume_init_read() };
+        inner.head.0.store(head.wrapping_add(1), Ordering::Release);
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let (mut tx, mut rx) = ring::<u64>(4);
+        for i in 0..4 {
+            assert!(tx.try_push(i).is_ok());
+        }
+        assert_eq!(tx.try_push(99), Err(99), "5th push must fail on a 4-ring");
+        for i in 0..4 {
+            assert_eq!(rx.try_pop(), Some(i));
+        }
+        assert_eq!(rx.try_pop(), None);
+        // credits returned: pushes succeed again
+        assert!(tx.try_push(7).is_ok());
+        assert_eq!(rx.try_pop(), Some(7));
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        let (mut tx, mut rx) = ring::<u32>(3);
+        for i in 0..4 {
+            assert!(tx.try_push(i).is_ok(), "rounded capacity must be 4");
+        }
+        assert!(tx.try_push(4).is_err());
+        for i in 0..4 {
+            assert_eq!(rx.try_pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn wraps_many_times() {
+        let (mut tx, mut rx) = ring::<usize>(8);
+        let mut next_out = 0usize;
+        for i in 0..10_000 {
+            while tx.try_push(i).is_err() {
+                assert_eq!(rx.try_pop(), Some(next_out));
+                next_out += 1;
+            }
+        }
+        while let Some(v) = rx.try_pop() {
+            assert_eq!(v, next_out);
+            next_out += 1;
+        }
+        assert_eq!(next_out, 10_000);
+    }
+
+    #[test]
+    fn cross_thread_transfer_is_lossless_and_ordered() {
+        let (mut tx, mut rx) = ring::<u64>(64);
+        let n = 200_000u64;
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                loop {
+                    match tx.try_push(i) {
+                        Ok(()) => break,
+                        Err(_) => std::hint::spin_loop(),
+                    }
+                }
+            }
+        });
+        let mut expect = 0u64;
+        while expect < n {
+            if let Some(v) = rx.try_pop() {
+                assert_eq!(v, expect);
+                expect += 1;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        producer.join().expect("producer thread");
+        assert_eq!(rx.try_pop(), None);
+    }
+
+    #[test]
+    fn drops_undelivered_items() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let (mut tx, mut rx) = ring::<D>(8);
+        for _ in 0..5 {
+            assert!(tx.try_push(D).is_ok());
+        }
+        drop(rx.try_pop()); // one delivered + dropped
+        drop(tx);
+        drop(rx); // four still queued: Inner::drop must release them
+        assert_eq!(DROPS.load(Ordering::Relaxed), 5);
+    }
+}

@@ -1,26 +1,58 @@
-//! Machine worker thread: a single-server queue with a 100 %·s/s budget.
+//! Batched ring dataplane: the throughput-first execution path.
 //!
-//! Each tuple addressed to a task hosted here consumes `e[c][m]`
-//! percent-seconds of CPU budget (profile units scaled by `time_scale`);
-//! per-instance MET overhead is burned as periodic background work so
-//! measured utilization contains the same constant term the prediction
-//! model adds (eq. 5).  Service is realized either as high-resolution
-//! sleeping ([`ComputeMode::Simulated`]) or by repeatedly executing the
-//! AOT work kernel ([`ComputeMode::Pjrt`]).
+//! One thread per machine (a single-server queue with a 100 %·s/s
+//! budget, the paper's `MAC`), one pacer thread per spout task.  All
+//! tuple movement happens in [`TupleBatch`]es over bounded SPSC rings
+//! ([`super::ring`]): every (producer thread, consumer task) pair owns
+//! one ring, producers shard across a consumer component's instances
+//! by shuffle-grouping round-robin
+//! ([`crate::topology::fanout::ShuffleCursor`]), and the eq.-6
+//! fractional-α accumulator ([`crate::topology::fanout::AlphaAcc`]) is
+//! applied per batch.
+//!
+//! **Service cost** is charged per batch as `n · e_ij` (profile units
+//! scaled by `time_scale`) and burned in a calibrated clock-polling
+//! spin ([`Burner::Spin`]) instead of `thread::sleep` — sub-µs debts
+//! accumulate until they cross the spin floor (the calibration knob,
+//! [`super::EngineConfig::spin_floor_us`]), so cheap batches are not
+//! drowned in timer overhead and the burned time is exact.
+//!
+//! **Credit-based backpressure**: the free slots of a ring are the
+//! producer's credits and the consumer returns one per pop.  A machine
+//! whose output push fails parks the batch in the *producing task's*
+//! stash and stops serving that task until the stash flushes — its own
+//! input rings then fill, and the pressure propagates hop by hop to
+//! the pacer, which throttles the spout instead of shedding (Storm's
+//! `max.spout.pending` done properly; `shed` is always 0 here).
+//! Because a task only ever waits on strictly-downstream tasks and the
+//! topology is a DAG, sinks always drain and the wait chain is
+//! well-founded — no deadlock, and every queue is bounded by
+//! construction.
+//!
+//! **Warmup accounting**: batches carry the measurement phase at their
+//! *spout emission* (`epoch`); throughput, busy time, service means and
+//! latency count a batch only when it was emitted in the measurement
+//! window *and* is processed inside it, so warmup backlog can neither
+//! inflate the numerator nor escape the denominator.
 
-use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::WorkItem;
-use crate::metrics::Registry;
+use super::ring::{ring, Consumer, Producer};
+use super::{EngineConfig, EngineReport, Plan};
+use crate::obs;
+use crate::simulator::event::LatencySummary;
+use crate::topology::fanout::{AlphaAcc, ShuffleCursor};
 use crate::util::rng::Rng;
+use crate::{Error, Result};
 
 /// How service time is realized.
 #[derive(Debug, Clone)]
 pub enum ComputeMode {
-    /// High-resolution sleep (deterministic timing; the default).
+    /// Virtual work: calibrated spin (ring dataplane) or
+    /// high-resolution sleep (legacy dataplane); the default.
     Simulated,
     /// Execute the AOT `work.hlo.txt` kernel repeatedly — real compute
     /// through PJRT on the data path.  The value is the artifacts dir.
@@ -29,56 +61,91 @@ pub enum ComputeMode {
     Pjrt { artifacts_dir: String },
 }
 
-pub(crate) struct MachineCtx {
-    pub machine: usize,
-    /// tasks[c][slot] = hosting machine (global task table).
-    pub tasks: Vec<Vec<usize>>,
-    pub e_m: Vec<Vec<f64>>,
-    pub met_m: Vec<Vec<f64>>,
-    pub alpha: Vec<f64>,
-    pub downstream: Vec<Vec<usize>>,
-    pub senders: Vec<Sender<WorkItem>>,
-    pub pending: Arc<Vec<AtomicI64>>,
-    pub recording: Arc<AtomicBool>,
-    pub stop: Arc<AtomicBool>,
-    pub metrics: Registry,
-    pub time_scale: f64,
-    pub noise: f64,
-    pub rng: Rng,
-    pub compute: ComputeMode,
+/// Measurement phases, stamped into [`TupleBatch::epoch`] at the spout.
+pub(crate) const PHASE_WARMUP: u8 = 0;
+pub(crate) const PHASE_MEASURE: u8 = 1;
+pub(crate) const PHASE_DRAIN: u8 = 2;
+
+/// A run of tuples for one component, moved as a unit.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct TupleBatch {
+    /// Consumer component id.
+    pub comp: u32,
+    /// Tuples in the batch.
+    pub count: u32,
+    /// Phase when the *spout* emitted the root tuples (inherited by
+    /// derived batches) — the emit-epoch of the warmup accounting.
+    pub epoch: u8,
+    /// Spout emission time, nanoseconds since engine start (inherited
+    /// by derived batches; sink latency = now − birth).
+    pub birth_ns: u64,
 }
 
-/// Executes service time; abstracts Simulated vs Pjrt burning.
-enum Burner {
+/// Executes service time; abstracts how CPU budget is burned.
+pub(crate) enum Burner {
+    /// Clock-polling spin with a debt floor (ring dataplane).
+    Spin { owed: f64, floor: f64 },
+    /// High-resolution sleep with debt accumulation (legacy dataplane).
     Sleep { owed: f64 },
     #[cfg(feature = "pjrt")]
     Pjrt { kernel: crate::runtime::WorkKernel, secs_per_call: f64 },
 }
 
 impl Burner {
-    fn new(mode: &ComputeMode) -> Self {
+    /// Burner for the ring dataplane: spin, exact, sub-µs resolution.
+    pub(crate) fn spin(mode: &ComputeMode, floor_us: f64) -> Self {
         match mode {
-            ComputeMode::Simulated => Burner::Sleep { owed: 0.0 },
+            ComputeMode::Simulated => Burner::Spin { owed: 0.0, floor: floor_us.max(0.0) * 1e-6 },
             #[cfg(feature = "pjrt")]
-            ComputeMode::Pjrt { artifacts_dir } => {
-                // Each machine thread owns its own PJRT client + compiled
-                // kernel (the xla handles are not Send).
-                let rt = crate::runtime::PjRtRuntime::cpu(artifacts_dir)
-                    .expect("engine pjrt mode: artifacts must exist");
-                let kernel = rt.work_kernel().expect("work kernel loads");
-                // calibrate: how long does one kernel invocation take?
-                let t = Instant::now();
-                let calls = 200;
-                kernel.burn(calls).expect("calibration burn");
-                let secs_per_call = (t.elapsed().as_secs_f64() / calls as f64).max(1e-7);
-                Burner::Pjrt { kernel, secs_per_call }
-            }
+            ComputeMode::Pjrt { artifacts_dir } => Burner::pjrt(artifacts_dir),
         }
     }
 
+    /// Burner for the legacy dataplane: sleep in >= 500 µs chunks.
+    pub(crate) fn sleep(mode: &ComputeMode) -> Self {
+        match mode {
+            ComputeMode::Simulated => Burner::Sleep { owed: 0.0 },
+            #[cfg(feature = "pjrt")]
+            ComputeMode::Pjrt { artifacts_dir } => Burner::pjrt(artifacts_dir),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt(artifacts_dir: &str) -> Self {
+        // Each machine thread owns its own PJRT client + compiled
+        // kernel (the xla handles are not Send).
+        let rt = crate::runtime::PjRtRuntime::cpu(artifacts_dir)
+            .expect("engine pjrt mode: artifacts must exist");
+        let kernel = rt.work_kernel().expect("work kernel loads");
+        // calibrate: how long does one kernel invocation take?
+        let t = Instant::now();
+        let calls = 200;
+        kernel.burn(calls).expect("calibration burn");
+        let secs_per_call = (t.elapsed().as_secs_f64() / calls as f64).max(1e-7);
+        Burner::Pjrt { kernel, secs_per_call }
+    }
+
     /// Burn `secs` of CPU budget (already wall-scaled).
-    fn burn(&mut self, secs: f64) {
+    pub(crate) fn burn(&mut self, secs: f64) {
         match self {
+            Burner::Spin { owed, floor } => {
+                // accumulate sub-floor debts; when spinning, poll the
+                // clock so the burned time is exact and overshoot is
+                // repaid on the next burn
+                *owed += secs;
+                if *owed < *floor {
+                    return;
+                }
+                let t = Instant::now();
+                let target = *owed;
+                loop {
+                    std::hint::spin_loop();
+                    if t.elapsed().as_secs_f64() >= target {
+                        break;
+                    }
+                }
+                *owed -= t.elapsed().as_secs_f64();
+            }
             Burner::Sleep { owed } => {
                 // accumulate sub-millisecond debts and sleep in chunks so
                 // cheap tuples (spouts) do not drown in syscall overhead;
@@ -100,98 +167,475 @@ impl Burner {
     }
 }
 
-pub(crate) fn machine_loop(mut ctx: MachineCtx, rx: Receiver<WorkItem>) {
-    let m = ctx.machine;
-    let n_comp = ctx.tasks.len();
-    let busy_us = ctx.metrics.counter(&format!("machine.{m}.busy_us"));
-    let processed: Vec<_> =
-        (0..n_comp).map(|c| ctx.metrics.counter(&format!("comp.{c}.processed"))).collect();
-    let svc: Vec<_> = (0..n_comp).map(|c| ctx.metrics.mean(&format!("svc.{c}.{m}"))).collect();
+/// Flags and counters shared by every engine thread.
+#[derive(Clone)]
+struct Shared {
+    phase: Arc<AtomicU8>,
+    stop: Arc<AtomicBool>,
+    /// Producer-side events where a downstream ring was full.
+    credit_stalls: Arc<AtomicU64>,
+    /// Set when a spout was throttled inside the measurement window.
+    throttled: Arc<AtomicBool>,
+}
 
-    // Per-instance MET on this machine: background overhead burned every
-    // tick, in budget-percent.
-    let met_total: f64 = (0..n_comp)
-        .map(|c| ctx.tasks[c].iter().filter(|&&tm| tm == m).count() as f64 * ctx.met_m[c][m])
-        .sum();
-    let met_tick = Duration::from_millis(50);
+/// One task hosted on a machine thread.
+struct LocalTask {
+    comp: usize,
+    /// Input rings: one per producer thread (machines, then pacer).
+    inputs: Vec<Consumer<TupleBatch>>,
+    /// Round-robin cursor over `inputs`.
+    rr: usize,
+    /// Output batches whose ring was full; while non-empty this task
+    /// is not served (per-task backpressure, see module docs).
+    stash: VecDeque<(usize, TupleBatch)>,
+}
+
+/// Per-machine read-only tables.
+struct Tables {
+    /// `e[c][m]` for this machine, per component (profile %·s/tuple).
+    e_row: Vec<f64>,
+    /// ΣMET of hosted instances, budget-%.
+    met_total: f64,
+    alpha: Vec<f64>,
+    downstream: Vec<Vec<usize>>,
+    /// Global task ids per component, slot order.
+    tasks_of: Vec<Vec<usize>>,
+    is_sink: Vec<bool>,
+}
+
+struct MachineCtx {
+    local: Vec<LocalTask>,
+    /// Producer half of this thread's ring to every task, by task id.
+    outs: Vec<Producer<TupleBatch>>,
+    tables: Tables,
+    shared: Shared,
+    t0: Instant,
+    time_scale: f64,
+    noise: f64,
+    rng: Rng,
+    compute: ComputeMode,
+    spin_floor_us: f64,
+    /// Live busy-ns gauge (None when obs is disabled).
+    gauge: Option<Arc<crate::metrics::Gauge>>,
+}
+
+/// What a machine thread measured inside the window.
+struct MachineStats {
+    busy_ns: u64,
+    /// Measure-epoch tuples processed per component.
+    processed: Vec<u64>,
+    /// Σ wall service seconds / tuple count per component (this machine).
+    svc_sum: Vec<f64>,
+    svc_cnt: Vec<u64>,
+    /// Sink tuple latency, wall seconds.
+    latency: obs::Histogram,
+}
+
+const MET_TICK_SECS: f64 = 0.005;
+
+fn machine_loop(ctx: MachineCtx) -> MachineStats {
+    let MachineCtx {
+        mut local,
+        mut outs,
+        tables,
+        shared,
+        t0,
+        time_scale,
+        noise,
+        mut rng,
+        compute,
+        spin_floor_us,
+        gauge,
+    } = ctx;
+    let n_comp = tables.e_row.len();
+    let mut stats = MachineStats {
+        busy_ns: 0,
+        processed: vec![0; n_comp],
+        svc_sum: vec![0.0; n_comp],
+        svc_cnt: vec![0; n_comp],
+        latency: obs::Histogram::new(),
+    };
+    let mut burner = Burner::spin(&compute, spin_floor_us);
+    // per-machine routing state, keyed by downstream component id (one
+    // cursor per consumer component, shared by all local producers —
+    // the engine's historical keying; the event sim keys per task)
+    let mut acc: Vec<AlphaAcc> = vec![AlphaAcc::new(); n_comp];
+    let mut cursors: Vec<ShuffleCursor> = vec![ShuffleCursor::new(); n_comp];
+    let mut split_buf: Vec<(usize, u64)> = Vec::new();
+    let met_frac = tables.met_total / 100.0;
     let mut last_met = Instant::now();
-
-    // shuffle-grouping cursors: per (producer on this machine) we keep one
-    // cursor per downstream component
-    let mut cursors = vec![0usize; n_comp];
-    // fractional alpha accumulators per component processed here
-    let mut acc = vec![0.0f64; n_comp];
-
-    let mut burner = Burner::new(&ctx.compute);
+    let mut idle_spins = 0u32;
 
     loop {
-        // periodic MET burn (keeps measured util containing the eq.-5
-        // constant term)
-        if met_total > 0.0 && last_met.elapsed() >= met_tick {
-            // MET is a constant share of the budget, and the budget is
-            // wall time under time compression — no scale factor here
-            let secs = met_total / 100.0 * met_tick.as_secs_f64();
-            burner.burn(secs);
-            if ctx.recording.load(Ordering::Relaxed) {
-                busy_us.add((secs * 1e6) as u64);
+        let phase_now = shared.phase.load(Ordering::Relaxed);
+        // ---- MET: a constant share of wall time (the budget is wall
+        // time under time compression — no scale factor here)
+        let dt = last_met.elapsed().as_secs_f64();
+        if dt >= MET_TICK_SECS {
+            if met_frac > 0.0 {
+                let secs = met_frac * dt;
+                burner.burn(secs);
+                if phase_now == PHASE_MEASURE {
+                    stats.busy_ns += (secs * 1e9) as u64;
+                }
+            }
+            if let Some(g) = &gauge {
+                g.set(stats.busy_ns as f64);
             }
             last_met = Instant::now();
         }
 
-        let item = match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(it) => it,
-            Err(RecvTimeoutError::Timeout) => {
-                if ctx.stop.load(Ordering::Relaxed) {
-                    return;
+        let mut progressed = false;
+        for task in local.iter_mut() {
+            // flush this task's parked output first; while any remains
+            // the task is not served, so its inputs back up (credits)
+            while let Some(&(target, b)) = task.stash.front() {
+                match outs[target].try_push(b) {
+                    Ok(()) => {
+                        task.stash.pop_front();
+                        progressed = true;
+                    }
+                    Err(_) => break,
                 }
+            }
+            if !task.stash.is_empty() {
                 continue;
             }
-            Err(RecvTimeoutError::Disconnected) => return,
-        };
-        ctx.pending[m].fetch_sub(1, Ordering::Relaxed);
-        let c = item.comp;
+            let Some(batch) = pop_one(task) else { continue };
+            progressed = true;
+            let c = batch.comp as usize;
 
-        // ---- service -----------------------------------------------------
-        let noise_mul = if ctx.noise > 0.0 {
-            1.0 + ctx.noise * (ctx.rng.f64() * 2.0 - 1.0)
-        } else {
-            1.0
-        };
-        let service_budget_secs = ctx.e_m[c][m] / 100.0 * noise_mul; // profile units
-        let service_wall = service_budget_secs * ctx.time_scale;
-        burner.burn(service_wall);
+            // ---- service: n · e_ij, charged per batch ----------------
+            let noise_mul =
+                if noise > 0.0 { 1.0 + noise * (rng.f64() * 2.0 - 1.0) } else { 1.0 };
+            let wall = batch.count as f64 * tables.e_row[c] / 100.0 * noise_mul * time_scale;
+            burner.burn(wall);
+            if batch.epoch == PHASE_MEASURE && phase_now == PHASE_MEASURE {
+                stats.busy_ns += (wall * 1e9) as u64;
+                stats.processed[c] += batch.count as u64;
+                stats.svc_sum[c] += wall;
+                stats.svc_cnt[c] += batch.count as u64;
+                if tables.is_sink[c] {
+                    let now_ns = t0.elapsed().as_nanos() as u64;
+                    stats.latency.observe(now_ns.saturating_sub(batch.birth_ns) as f64 / 1e9);
+                }
+            }
 
-        if ctx.recording.load(Ordering::Relaxed) {
-            busy_us.add((service_wall * 1e6) as u64);
-            processed[c].inc();
-            svc[c].observe(service_wall);
-        }
-
-        // ---- emit downstream (shuffle grouping, eq. 6) ----------------------
-        acc[c] += ctx.alpha[c];
-        let emit = acc[c] as usize;
-        acc[c] -= emit as f64;
-        if emit > 0 {
-            for &d in &ctx.downstream[c] {
-                for _ in 0..emit {
-                    let n_inst = ctx.tasks[d].len();
+            // ---- fan out (shuffle grouping, eq. 6, per batch) --------
+            let emit = acc[c].step_n(tables.alpha[c], batch.count as u64);
+            if emit > 0 {
+                for &d in &tables.downstream[c] {
+                    let n_inst = tables.tasks_of[d].len();
                     if n_inst == 0 {
                         continue;
                     }
-                    let slot = cursors[d] % n_inst;
-                    cursors[d] = cursors[d].wrapping_add(1);
-                    let target_machine = ctx.tasks[d][slot];
-                    if ctx.senders[target_machine].send(WorkItem { comp: d, slot }).is_ok() {
-                        ctx.pending[target_machine].fetch_add(1, Ordering::Relaxed);
+                    split_buf.clear();
+                    cursors[d].split(emit, n_inst, &mut split_buf);
+                    for &(slot, count) in split_buf.iter() {
+                        let target = tables.tasks_of[d][slot];
+                        let nb = TupleBatch {
+                            comp: d as u32,
+                            count: count as u32,
+                            epoch: batch.epoch,
+                            birth_ns: batch.birth_ns,
+                        };
+                        if let Err(nb) = outs[target].try_push(nb) {
+                            shared.credit_stalls.fetch_add(1, Ordering::Relaxed);
+                            task.stash.push_back((target, nb));
+                        }
                     }
                 }
             }
         }
 
-        if ctx.stop.load(Ordering::Relaxed) {
-            // drain quickly on shutdown without burning time
-            while rx.try_recv().is_ok() {}
-            return;
+        if shared.stop.load(Ordering::Relaxed) {
+            return stats;
+        }
+        if progressed {
+            idle_spins = 0;
+        } else {
+            // back off when idle or output-blocked: cheap spins first,
+            // then a short sleep so stalled machines do not burn a core
+            idle_spins += 1;
+            if idle_spins > 64 {
+                std::thread::sleep(Duration::from_micros(50));
+            } else {
+                std::hint::spin_loop();
+            }
         }
     }
+}
+
+/// Pop one batch from a task's input rings, round-robin across
+/// producers so no upstream thread is starved.
+fn pop_one(task: &mut LocalTask) -> Option<TupleBatch> {
+    let n = task.inputs.len();
+    for k in 0..n {
+        let i = (task.rr + k) % n;
+        if let Some(b) = task.inputs[i].try_pop() {
+            task.rr = (i + 1) % n;
+            return Some(b);
+        }
+    }
+    None
+}
+
+struct PacerCtx {
+    comp: usize,
+    producer: Producer<TupleBatch>,
+    /// Wall-clock emission rate for this spout instance, tuples/s.
+    rate: f64,
+    batch: usize,
+    shared: Shared,
+    t0: Instant,
+}
+
+/// Spout pacer: emits `TupleBatch`es at the offered rate, throttling
+/// (not shedding) when the spout task's ring has no credits left.
+/// Returns the measure-epoch tuples emitted.
+fn pacer_loop(ctx: PacerCtx) -> u64 {
+    let PacerCtx { comp, mut producer, rate, batch, shared, t0 } = ctx;
+    let tick = Duration::from_micros(500);
+    if rate <= 0.0 {
+        while !shared.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(tick);
+        }
+        return 0;
+    }
+    let batch_max = batch.max(1) as f64;
+    // carry is capped (~50 ms of rate, at least two batches): when the
+    // ring is full the backlog stops accumulating — offered load beyond
+    // the credits is simply never produced, which is what throttling a
+    // spout means.  Nothing is ever shed.
+    let burst_cap = (rate * 0.05).max(2.0 * batch_max);
+    let mut carry = 0.0f64;
+    let mut last = Instant::now();
+    let mut emitted = 0u64;
+    while !shared.stop.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        carry = (carry + rate * (now - last).as_secs_f64()).min(burst_cap);
+        last = now;
+        while carry >= 1.0 {
+            let n = carry.min(batch_max) as u32;
+            let epoch = shared.phase.load(Ordering::Relaxed);
+            let b = TupleBatch {
+                comp: comp as u32,
+                count: n,
+                epoch,
+                birth_ns: t0.elapsed().as_nanos() as u64,
+            };
+            match producer.try_push(b) {
+                Ok(()) => {
+                    carry -= n as f64;
+                    if epoch == PHASE_MEASURE {
+                        emitted += n as u64;
+                    }
+                }
+                Err(_) => {
+                    shared.credit_stalls.fetch_add(1, Ordering::Relaxed);
+                    if epoch == PHASE_MEASURE {
+                        shared.throttled.store(true, Ordering::Relaxed);
+                    }
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(tick);
+    }
+    emitted
+}
+
+/// Execute `plan` on the batched ring dataplane.
+pub(crate) fn run_ring(plan: &Plan, r0: f64, cfg: &EngineConfig) -> Result<EngineReport> {
+    let n_comp = plan.n_comp;
+    let n_machines = plan.n_machines;
+
+    // ---- global task table ------------------------------------------------
+    let mut task_comp: Vec<usize> = Vec::new();
+    let mut task_machine: Vec<usize> = Vec::new();
+    let mut tasks_of: Vec<Vec<usize>> = vec![Vec::new(); n_comp];
+    for c in 0..n_comp {
+        for &m in &plan.tasks[c] {
+            tasks_of[c].push(task_comp.len());
+            task_comp.push(c);
+            task_machine.push(m);
+        }
+    }
+    let n_tasks = task_comp.len();
+    let is_sink: Vec<bool> = (0..n_comp).map(|c| plan.downstream[c].is_empty()).collect();
+
+    // ---- rings: one per (producer thread, consumer task) ------------------
+    let mut task_inputs: Vec<Vec<Consumer<TupleBatch>>> =
+        (0..n_tasks).map(|_| Vec::new()).collect();
+    let mut machine_outs: Vec<Vec<Producer<TupleBatch>>> = Vec::with_capacity(n_machines);
+    for _p in 0..n_machines {
+        let mut outs = Vec::with_capacity(n_tasks);
+        for inputs in task_inputs.iter_mut() {
+            let (tx, rx) = ring::<TupleBatch>(cfg.ring_capacity);
+            outs.push(tx);
+            inputs.push(rx);
+        }
+        machine_outs.push(outs);
+    }
+    // pacer rings: one per spout task
+    let mut pacer_inputs: Vec<(usize, Producer<TupleBatch>)> = Vec::new();
+    for &c in &plan.spouts {
+        for &t in &tasks_of[c] {
+            let (tx, rx) = ring::<TupleBatch>(cfg.ring_capacity);
+            task_inputs[t].push(rx);
+            pacer_inputs.push((t, tx));
+        }
+    }
+
+    // ---- shared state -----------------------------------------------------
+    let shared = Shared {
+        phase: Arc::new(AtomicU8::new(PHASE_WARMUP)),
+        stop: Arc::new(AtomicBool::new(false)),
+        credit_stalls: Arc::new(AtomicU64::new(0)),
+        throttled: Arc::new(AtomicBool::new(false)),
+    };
+    let t0 = Instant::now();
+    let obs_on = obs::enabled();
+
+    // ---- machine threads --------------------------------------------------
+    let mut joins = Vec::with_capacity(n_machines);
+    for (m, outs) in machine_outs.into_iter().enumerate() {
+        let mut local = Vec::new();
+        for t in 0..n_tasks {
+            if task_machine[t] == m {
+                local.push(LocalTask {
+                    comp: task_comp[t],
+                    inputs: std::mem::take(&mut task_inputs[t]),
+                    rr: 0,
+                    stash: VecDeque::new(),
+                });
+            }
+        }
+        let met_total: f64 = (0..n_comp)
+            .map(|c| plan.tasks[c].iter().filter(|&&tm| tm == m).count() as f64 * plan.met_m[c][m])
+            .sum();
+        let ctx = MachineCtx {
+            local,
+            outs,
+            tables: Tables {
+                e_row: (0..n_comp).map(|c| plan.e_m[c][m]).collect(),
+                met_total,
+                alpha: plan.alpha.clone(),
+                downstream: plan.downstream.clone(),
+                tasks_of: tasks_of.clone(),
+                is_sink: is_sink.clone(),
+            },
+            shared: shared.clone(),
+            t0,
+            time_scale: cfg.time_scale,
+            noise: cfg.noise,
+            rng: Rng::new(cfg.seed ^ ((m as u64) << 17)),
+            compute: cfg.compute.clone(),
+            spin_floor_us: cfg.spin_floor_us,
+            gauge: if obs_on {
+                Some(obs::global().gauge(&format!("engine.machine.{m}.busy_ns")))
+            } else {
+                None
+            },
+        };
+        joins.push(std::thread::spawn(move || machine_loop(ctx)));
+    }
+    drop(task_inputs);
+
+    // ---- pacer threads ----------------------------------------------------
+    let mut pacer_joins = Vec::new();
+    for (t, producer) in pacer_inputs {
+        let c = task_comp[t];
+        let n_inst = tasks_of[c].len() as f64;
+        // wall-clock emission rate: virtual rate compressed by time_scale
+        // (weighted spouts receive `weight · R0` — see Component::weight)
+        let rate = r0 * plan.weights[c] / n_inst / cfg.time_scale;
+        let ctx =
+            PacerCtx { comp: c, producer, rate, batch: cfg.batch, shared: shared.clone(), t0 };
+        pacer_joins.push(std::thread::spawn(move || pacer_loop(ctx)));
+    }
+
+    // ---- warmup, measure, drain -------------------------------------------
+    std::thread::sleep(cfg.warmup);
+    shared.phase.store(PHASE_MEASURE, Ordering::SeqCst);
+    let t_measure = Instant::now();
+    std::thread::sleep(cfg.duration);
+    shared.phase.store(PHASE_DRAIN, Ordering::SeqCst);
+    let window = t_measure.elapsed().as_secs_f64();
+    shared.stop.store(true, Ordering::SeqCst);
+    let mut emitted = 0u64;
+    for j in pacer_joins {
+        emitted += j.join().map_err(|_| Error::Engine("pacer thread panicked".into()))?;
+    }
+    let mut stats = Vec::with_capacity(n_machines);
+    for j in joins {
+        stats.push(j.join().map_err(|_| Error::Engine("machine thread panicked".into()))?);
+    }
+
+    // ---- collect ----------------------------------------------------------
+    // rates are reported in *virtual* tuples/s: `window` wall seconds
+    // simulate `window / time_scale` virtual seconds
+    let vwindow = window / cfg.time_scale;
+    let mut comp_rate = vec![0.0f64; n_comp];
+    let mut total_processed = 0u64;
+    for (c, rate) in comp_rate.iter_mut().enumerate() {
+        let n: u64 = stats.iter().map(|s| s.processed[c]).sum();
+        total_processed += n;
+        *rate = n as f64 / vwindow;
+    }
+    let util: Vec<f64> =
+        stats.iter().map(|s| s.busy_ns as f64 / 1e9 / window * 100.0).collect();
+    let mut service = vec![vec![None; n_machines]; n_comp];
+    for (m, s) in stats.iter().enumerate() {
+        for c in 0..n_comp {
+            if s.svc_cnt[c] > 0 {
+                // report in profile units: undo time_scale
+                service[c][m] = Some(s.svc_sum[c] / s.svc_cnt[c] as f64 / cfg.time_scale);
+            }
+        }
+    }
+    let merged = obs::Histogram::new();
+    for s in &stats {
+        merged.merge_from(&s.latency);
+    }
+    let latency = if merged.count() > 0 {
+        Some(LatencySummary {
+            samples: merged.count() as usize,
+            mean: merged.mean(),
+            p50: merged.quantile(0.5),
+            p95: merged.quantile(0.95),
+            p99: merged.quantile(0.99),
+            max: merged.max(),
+        })
+    } else {
+        None
+    };
+    let credit_stalls = shared.credit_stalls.load(Ordering::Relaxed);
+    let throttled = shared.throttled.load(Ordering::Relaxed);
+    if obs_on {
+        let reg = obs::global();
+        for (m, s) in stats.iter().enumerate() {
+            reg.gauge(&format!("engine.machine.{m}.busy_ns")).set(s.busy_ns as f64);
+        }
+        reg.histogram("engine.latency_s").merge_from(&merged);
+        reg.journal().record(obs::Event::BackpressureVerdict {
+            rate: r0,
+            backpressure: throttled,
+            queue_growth: 0.0,
+            shed: 0,
+        });
+    }
+    Ok(EngineReport {
+        window,
+        throughput: comp_rate.iter().sum(),
+        util,
+        comp_rate,
+        service,
+        shed: 0,
+        emitted_rate: emitted as f64 / vwindow,
+        wall_throughput: total_processed as f64 / window,
+        latency,
+        credit_stalls,
+        throttled,
+    })
 }

@@ -20,6 +20,7 @@
 //! | accuracy | §6.2 (event-sim)    | [`accuracy::run`]  |
 //! | sched-perf | search-engine perf | [`sched_perf::run`]|
 //! | tenancy  | multi-tenant modes  | [`tenancy::run`]   |
+//! | dataplane | executed throughput | [`dataplane::run`] |
 //!
 //! `fast: true` shrinks engine windows/design spaces so the whole suite
 //! runs in seconds (used by tests); benches use `fast: false`.  Running
@@ -31,6 +32,7 @@
 pub mod ablation;
 pub mod accuracy;
 pub mod complexity;
+pub mod dataplane;
 pub mod elastic;
 pub mod fig10;
 pub mod fig3;

@@ -5,7 +5,8 @@
 //!                 [--scheduler hetero|default|optimal] [--objective max-throughput] \
 //!                 [--exclude m1,m2] [--headroom 10] [--pjrt] [--r0 8]
 //! hstorm schedule --list-policies
-//! hstorm run      --topology linear [--rate 100] [--seconds 4] [--pjrt-compute]
+//! hstorm run      --topology linear [--rate 100] [--seconds 4] [--time-scale X]
+//!                 [--dataplane ring|legacy] [--batch 256] [--pjrt-compute]
 //! hstorm simulate --topology linear --scenario 2 [--mode analytic|event]
 //! hstorm control  --trace diurnal --scenario 2 [--policy reactive] [--steps 600]
 //! hstorm explain  --topology linear [--scheduler hetero] [--trace diurnal]
@@ -13,14 +14,14 @@
 //! hstorm check    [--topology linear|all] [--scheduler hetero|all] [--workload w.json]
 //! hstorm profile  [--task highCompute] [--machine pentium]
 //! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
-//!                  |sched-perf|all>  [--fast] [--json out.json]
+//!                  |sched-perf|tenancy|dataplane|all>  [--fast] [--json out.json]
 //! hstorm config   --config exp.json            # run a JSON experiment
 //! ```
 
 use std::process::ExitCode;
 
 use hstorm::controller::{self, ControllerConfig, Policy};
-use hstorm::engine::{self, ComputeMode, EngineConfig};
+use hstorm::engine::{self, ComputeMode, Dataplane, EngineConfig};
 use hstorm::experiments;
 use hstorm::profiling;
 use hstorm::resolve;
@@ -38,7 +39,7 @@ const VALUE_FLAGS: &[&str] = &[
     "config", "max-instances", "time-scale", "trace", "steps", "seed", "policy", "cooldown",
     "objective", "exclude", "headroom", "mode", "horizon", "service", "probe", "workload",
     "tenancy", "metrics-out", "format", "budget", "budget-vops", "target-gap", "beam-width",
-    "param",
+    "param", "dataplane", "batch",
 ];
 const BOOL_FLAGS: &[&str] =
     &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies"];
@@ -53,7 +54,8 @@ commands:
             [--target-gap G] [--beam-width W] [--param k=v,...]
             | --list-policies
             | --workload w.json [--tenancy joint|incremental|isolated]
-  run       --topology T [--rate R] [--seconds S] [--time-scale X] [--pjrt-compute]
+  run       --topology T [--rate R] [--seconds S] [--time-scale X]
+            [--dataplane ring|legacy] [--batch 256] [--pjrt-compute]
   simulate  --topology T [--scenario 1..3] [--mode analytic|event] [--rate R]
             [--horizon SECS] [--service exp|det] [--seed N] [--scheduler ...]
   control   --trace constant|diurnal|ramp|bursty [--topology T] [--scenario 1..3]
@@ -69,7 +71,8 @@ commands:
             | --workload w.json [--tenancy joint|incremental|isolated|all]
   profile   [--task highCompute] [--machine pentium]
   bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
-            |sched-perf|tenancy|all  [--fast] [--json out.json]
+            |sched-perf|tenancy|dataplane|all  [--fast] [--json out.json]
+            (accuracy also takes --mode simulate|execute)
   config    --config exp.json
 
 every command also takes --metrics-out FILE: after a successful run the
@@ -123,10 +126,26 @@ drift; --probe event feeds breach detection from short event-sim probes
 (backpressure verdicts) instead of the closed form; see the controller
 module docs for breach/cooldown semantics.
 
+run executes the schedule on the wall-clock engine: one thread per
+machine, tuples batched through bounded lock-free ring queues with
+credit-based backpressure (a full downstream ring throttles the spout —
+nothing is shed).  --dataplane legacy selects the old per-tuple channel
+engine for comparison; --batch caps tuples per batch; --time-scale X
+compresses virtual time (0.01 = 100x faster than real time).  The
+report includes wall tuples/s, end-to-end latency percentiles and a
+backpressure verdict next to the predicted utilization columns.
+
 bench sched-perf races the optimal search's engines (naive batched
 scoring vs the incremental row-table kernel, single- and multi-threaded)
 over the exhaustive seed scenarios and writes BENCH_sched.json —
 candidates/s and wall time per scenario — next to the rendered table.
+
+bench dataplane executes every scheduler's placement on the ring
+dataplane across the benchmark topologies (paper cluster) and writes
+BENCH_dataplane.json — executed wall tuples/s, latency percentiles and
+the predicted-vs-executed utilization error that re-grounds the paper's
+§6.2 accuracy claim on real threads; bench accuracy --mode execute
+tables the same comparison against the event-sim cells.
 
 check re-derives every invariant of a schedule from scratch — raw
 profile lookups, not the cached evaluator — and verifies: every
@@ -524,19 +543,49 @@ fn cmd_run(args: &Args) -> Result<()> {
     let s = make_schedule(args, &problem)?;
     let rate = args.get_f64("rate", s.rate)?;
     let seconds = args.get_f64("seconds", 4.0)?;
+    let defaults = EngineConfig::default();
+    let dataplane = match args.get_or("dataplane", "ring") {
+        "ring" => Dataplane::Ring,
+        "legacy" => Dataplane::Legacy,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown --dataplane '{other}' (valid: ring|legacy)"
+            )))
+        }
+    };
     let cfg = EngineConfig {
         duration: std::time::Duration::from_secs_f64(seconds),
         time_scale: args.get_f64("time-scale", 1.0)?,
         compute: if args.has("pjrt-compute") { pjrt_compute()? } else { ComputeMode::Simulated },
-        ..Default::default()
+        dataplane,
+        batch: args.get_usize("batch", defaults.batch)?,
+        ..defaults
     };
-    println!("running '{}' on engine at {rate:.1} tuple/s for {seconds}s ...", top.name);
+    println!(
+        "running '{}' on the {} dataplane at {rate:.1} tuple/s for {seconds}s ...",
+        top.name,
+        if dataplane == Dataplane::Ring { "ring" } else { "legacy" }
+    );
     let rep = engine::run(&top, &cluster, &db, &s.placement, rate, &cfg)?;
     println!(
-        "measured throughput : {:.1} tuple/s (predicted {:.1})",
-        rep.throughput, s.eval.throughput
+        "measured throughput : {:.1} tuple/s (predicted {:.1})   wall {:.0} tuple/s",
+        rep.throughput, s.eval.throughput, rep.wall_throughput
     );
     println!("emitted rate        : {:.1} tuple/s   shed: {}", rep.emitted_rate, rep.shed);
+    println!(
+        "backpressure        : {}   credit stalls: {}",
+        if rep.throttled { "spout throttled (credits exhausted)" } else { "none" },
+        rep.credit_stalls
+    );
+    if let Some(l) = &rep.latency {
+        println!(
+            "latency p50/p95/p99 : {:.3} / {:.3} / {:.3} ms wall ({} tuples)",
+            l.p50 * 1e3,
+            l.p95 * 1e3,
+            l.p99 * 1e3,
+            l.samples
+        );
+    }
     for (m, u) in rep.util.iter().enumerate() {
         println!(
             "  {:<12} measured {:>5.1}%   predicted {:>5.1}%",
@@ -857,7 +906,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let ids: Vec<&str> = if which == "all" {
         vec![
             "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "table5", "space", "ablation",
-            "elastic", "accuracy", "sched-perf", "tenancy",
+            "elastic", "accuracy", "sched-perf", "tenancy", "dataplane",
         ]
     } else {
         vec![which]
@@ -874,7 +923,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "space" => experiments::complexity::run(fast)?,
             "ablation" => experiments::ablation::run(fast)?,
             "elastic" => experiments::elastic::run(fast)?,
-            "accuracy" => experiments::accuracy::run(fast)?,
+            "accuracy" => match args.get_or("mode", "simulate") {
+                "simulate" => experiments::accuracy::run(fast)?,
+                "execute" => experiments::accuracy::run_execute(fast)?,
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown --mode '{other}' for accuracy (valid: simulate|execute)"
+                    )))
+                }
+            },
             "sched-perf" => {
                 // also emit the machine-readable perf trajectory file
                 // CI uploads (see experiments::sched_perf module docs)
@@ -887,6 +944,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 let (r, v) = experiments::tenancy::run_with_json(fast)?;
                 std::fs::write("BENCH_tenancy.json", json::to_string_pretty(&v))?;
                 println!("wrote BENCH_tenancy.json");
+                r
+            }
+            "dataplane" => {
+                let (r, v) = experiments::dataplane::run_with_json(fast)?;
+                std::fs::write("BENCH_dataplane.json", json::to_string_pretty(&v))?;
+                println!("wrote BENCH_dataplane.json");
                 r
             }
             other => return Err(Error::Config(format!("unknown experiment '{other}'"))),

@@ -46,6 +46,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::predict::Placement;
 use crate::scheduler::Problem;
+use crate::topology::fanout::{AlphaAcc, ShuffleCursor};
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
@@ -180,9 +181,9 @@ struct TaskState {
     /// (`∞` when MET alone exceeds the machine budget).
     svc_mean: f64,
     /// Fractional-α accumulator (eq. 6 semantics, per producer task).
-    acc: f64,
+    acc: AlphaAcc,
     /// Shuffle cursors, index-aligned with `downstream[comp]`.
-    cursors: Vec<usize>,
+    cursors: Vec<ShuffleCursor>,
     /// Tuples processed inside the measurement window.
     done: u64,
 }
@@ -247,7 +248,7 @@ struct Sim<'a> {
     is_sink: Vec<bool>,
     alpha: Vec<f64>,
     /// External-arrival shuffle cursor per spout component.
-    route: Vec<usize>,
+    route: Vec<ShuffleCursor>,
     heap: BinaryHeap<Event>,
     seq: u64,
     rng: Rng,
@@ -342,16 +343,13 @@ impl Sim<'_> {
         }
         // fan out along the DAG (shuffle grouping, fractional α); every
         // subscribed consumer component receives the full stream
-        self.tasks[t].acc += self.alpha[c];
-        let emit = self.tasks[t].acc as usize;
-        self.tasks[t].acc -= emit as f64;
+        let emit = self.tasks[t].acc.step(self.alpha[c]);
         if emit > 0 {
             for di in 0..self.downstream[c].len() {
                 let d = self.downstream[c][di];
                 for _ in 0..emit {
                     let n_inst = self.tasks_of[d].len();
-                    let slot = self.tasks[t].cursors[di] % n_inst;
-                    self.tasks[t].cursors[di] = self.tasks[t].cursors[di].wrapping_add(1);
+                    let slot = self.tasks[t].cursors[di].next_slot(n_inst);
                     let target = self.tasks_of[d][slot];
                     self.enqueue(target, cur.birth, now);
                 }
@@ -368,8 +366,7 @@ impl Sim<'_> {
             return;
         }
         let n_inst = self.tasks_of[comp].len();
-        let slot = self.route[comp] % n_inst;
-        self.route[comp] = self.route[comp].wrapping_add(1);
+        let slot = self.route[comp].next_slot(n_inst);
         let target = self.tasks_of[comp][slot];
         self.enqueue(target, now, now);
     }
@@ -548,8 +545,8 @@ pub fn simulate_grouped(
                     machine: m,
                     queue: VecDeque::new(),
                     svc_mean: if budget > 0.0 { ev.e_m[c][m] / budget } else { f64::INFINITY },
-                    acc: 0.0,
-                    cursors: vec![0; downstream[c].len()],
+                    acc: AlphaAcc::new(),
+                    cursors: vec![ShuffleCursor::new(); downstream[c].len()],
                     done: 0,
                 });
                 tasks_of[c].push(id);
@@ -576,7 +573,7 @@ pub fn simulate_grouped(
         downstream,
         is_sink,
         alpha,
-        route: vec![0; n_comp],
+        route: vec![ShuffleCursor::new(); n_comp],
         heap: BinaryHeap::new(),
         seq: 0,
         rng: Rng::new(cfg.seed),

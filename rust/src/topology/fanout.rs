@@ -1,0 +1,259 @@
+//! Shared eq.-6 shuffle fan-out primitives.
+//!
+//! Both execution substrates — the discrete-event simulator
+//! ([`crate::simulator::event`]) and the threaded engine
+//! ([`crate::engine`]) — propagate tuples along the DAG with the same
+//! two pieces of deterministic routing state:
+//!
+//! * a **fractional-α accumulator** ([`AlphaAcc`]): each processed
+//!   input tuple adds the edge's α (`rate_gain` ratio) to a carry and
+//!   emits `floor(carry)` downstream tuples, so a non-integral α like
+//!   1.5 alternates 1, 2, 1, 2, … and the long-run emission rate is
+//!   exactly α × the input rate (eq. 6);
+//! * a **shuffle-grouping cursor** ([`ShuffleCursor`]): emissions
+//!   round-robin across the consumer component's task instances, the
+//!   engine-default shuffle grouping of Storm.
+//!
+//! The two call sites used to carry independent copies of this logic;
+//! they now share these types, and the unit tests below pin the exact
+//! emission sequences both sites produced before the dedupe.
+
+/// Fractional-α emission accumulator (eq. 6).
+///
+/// `step` is the per-tuple form both call sites historically used;
+/// `step_n` is the batched form the ring dataplane uses, implemented
+/// as `n` repeated steps so a batch of `n` tuples emits *bit-for-bit*
+/// the same count as `n` individual tuples would (a single
+/// `acc += alpha * n` would round differently).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AlphaAcc {
+    acc: f64,
+}
+
+impl AlphaAcc {
+    pub fn new() -> Self {
+        AlphaAcc { acc: 0.0 }
+    }
+
+    /// Account one processed input tuple; returns how many tuples to
+    /// emit downstream.
+    #[inline]
+    pub fn step(&mut self, alpha: f64) -> usize {
+        self.acc += alpha;
+        let emit = self.acc as usize;
+        self.acc -= emit as f64;
+        emit
+    }
+
+    /// Account `n` processed input tuples; returns the total number of
+    /// tuples to emit downstream.  Identical to summing `n` calls to
+    /// [`AlphaAcc::step`].
+    #[inline]
+    pub fn step_n(&mut self, alpha: f64, n: u64) -> u64 {
+        let mut total = 0u64;
+        for _ in 0..n {
+            total += self.step(alpha) as u64;
+        }
+        total
+    }
+}
+
+/// Round-robin shuffle-grouping cursor over a component's `n_inst`
+/// task instances.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShuffleCursor {
+    cursor: usize,
+}
+
+impl ShuffleCursor {
+    pub fn new() -> Self {
+        ShuffleCursor { cursor: 0 }
+    }
+
+    /// Pick the instance slot for the next emission.  `n_inst` must be
+    /// non-zero (callers skip components with no placed instances).
+    #[inline]
+    pub fn next_slot(&mut self, n_inst: usize) -> usize {
+        let slot = self.cursor % n_inst;
+        self.cursor = self.cursor.wrapping_add(1);
+        slot
+    }
+
+    /// Distribute `emit` consecutive emissions over `n_inst` instances,
+    /// appending `(slot, count)` pairs to `out` (at most `n_inst`
+    /// pairs, slots in cursor order).  Aggregates exactly what `emit`
+    /// calls to [`ShuffleCursor::next_slot`] would route, advancing the
+    /// cursor identically.
+    pub fn split(&mut self, emit: u64, n_inst: usize, out: &mut Vec<(usize, u64)>) {
+        let n = n_inst as u64;
+        for k in 0..emit.min(n) {
+            let slot = self.cursor.wrapping_add(k as usize) % n_inst;
+            // emissions k, k+n, k+2n, … < emit land on this slot
+            let count = (emit - k).div_ceil(n);
+            out.push((slot, count));
+        }
+        self.cursor = self.cursor.wrapping_add(emit as usize);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The original `simulator/event.rs` fan-out, verbatim: per-task
+    /// accumulator, cursors indexed by downstream *position*.
+    fn sim_site_reference(alphas: &[f64], n_tuples: usize, insts: &[usize]) -> Vec<(usize, usize)> {
+        let mut acc = 0.0f64;
+        let mut cursors = vec![0usize; insts.len()];
+        let mut seq = Vec::new();
+        for _ in 0..n_tuples {
+            acc += alphas[0];
+            let emit = acc as usize;
+            acc -= emit as f64;
+            if emit > 0 {
+                for di in 0..insts.len() {
+                    for _ in 0..emit {
+                        let n_inst = insts[di];
+                        let slot = cursors[di] % n_inst;
+                        cursors[di] = cursors[di].wrapping_add(1);
+                        seq.push((di, slot));
+                    }
+                }
+            }
+        }
+        seq
+    }
+
+    /// The original `engine/worker.rs` fan-out, verbatim: per-machine
+    /// accumulator and cursors keyed by downstream component id.
+    fn engine_site_reference(
+        alphas: &[f64],
+        n_tuples: usize,
+        insts: &[usize],
+    ) -> Vec<(usize, usize)> {
+        let mut acc = 0.0f64;
+        let mut cursors = vec![0usize; insts.len()];
+        let mut seq = Vec::new();
+        for _ in 0..n_tuples {
+            acc += alphas[0];
+            let emit = acc as usize;
+            acc -= emit as f64;
+            if emit > 0 {
+                for (d, &n_inst) in insts.iter().enumerate() {
+                    for _ in 0..emit {
+                        if n_inst == 0 {
+                            continue;
+                        }
+                        let slot = cursors[d] % n_inst;
+                        cursors[d] = cursors[d].wrapping_add(1);
+                        seq.push((d, slot));
+                    }
+                }
+            }
+        }
+        seq
+    }
+
+    /// Drive the shared helper the way both refactored call sites do.
+    fn helper_site(alphas: &[f64], n_tuples: usize, insts: &[usize]) -> Vec<(usize, usize)> {
+        let mut acc = AlphaAcc::new();
+        let mut cursors = vec![ShuffleCursor::new(); insts.len()];
+        let mut seq = Vec::new();
+        for _ in 0..n_tuples {
+            let emit = acc.step(alphas[0]);
+            if emit > 0 {
+                for (d, &n_inst) in insts.iter().enumerate() {
+                    for _ in 0..emit {
+                        if n_inst == 0 {
+                            continue;
+                        }
+                        seq.push((d, cursors[d].next_slot(n_inst)));
+                    }
+                }
+            }
+        }
+        seq
+    }
+
+    #[test]
+    fn both_call_sites_emit_identical_sequences() {
+        // alphas the paper topologies actually use, plus awkward ones
+        for &alpha in &[0.5, 1.0, 1.5, 2.0, 0.3, 1.0 / 3.0, 2.7] {
+            for &insts in &[&[1usize, 1][..], &[2, 3][..], &[4, 1, 2][..]] {
+                let a = [alpha];
+                let sim = sim_site_reference(&a, 500, insts);
+                let eng = engine_site_reference(&a, 500, insts);
+                let shared = helper_site(&a, 500, insts);
+                assert_eq!(sim, eng, "alpha={alpha} insts={insts:?}");
+                assert_eq!(sim, shared, "alpha={alpha} insts={insts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_n_equals_repeated_step() {
+        let mut rng = Rng::new(0xFA11);
+        for _ in 0..50 {
+            let alpha = rng.f64() * 3.0;
+            let n = (rng.f64() * 400.0) as u64 + 1;
+            let mut a = AlphaAcc::new();
+            let mut b = AlphaAcc::new();
+            let batched = a.step_n(alpha, n);
+            let mut singles = 0u64;
+            for _ in 0..n {
+                singles += b.step(alpha) as u64;
+            }
+            assert_eq!(batched, singles, "alpha={alpha} n={n}");
+            assert_eq!(a.acc.to_bits(), b.acc.to_bits(), "carry must match exactly");
+        }
+    }
+
+    #[test]
+    fn split_equals_repeated_next_slot() {
+        let mut rng = Rng::new(0x5EED_1234);
+        for _ in 0..200 {
+            let n_inst = (rng.f64() * 7.0) as usize + 1;
+            let emit = (rng.f64() * 50.0) as u64;
+            let mut a = ShuffleCursor::new();
+            let mut b = ShuffleCursor::new();
+            // desync the cursors from zero first, identically
+            let warm = (rng.f64() * 9.0) as usize;
+            for _ in 0..warm {
+                a.next_slot(n_inst);
+                b.next_slot(n_inst);
+            }
+            let mut split = Vec::new();
+            a.split(emit, n_inst, &mut split);
+            let mut per_slot = vec![0u64; n_inst];
+            for &(slot, count) in &split {
+                per_slot[slot] += count;
+            }
+            let mut expect = vec![0u64; n_inst];
+            let mut order = Vec::new();
+            for _ in 0..emit {
+                let s = b.next_slot(n_inst);
+                expect[s] += 1;
+                if !order.contains(&s) {
+                    order.push(s);
+                }
+            }
+            assert_eq!(per_slot, expect, "emit={emit} n_inst={n_inst}");
+            assert_eq!(
+                split.iter().map(|&(s, _)| s).collect::<Vec<_>>(),
+                order,
+                "slot order must follow the cursor"
+            );
+            assert_eq!(a.cursor, b.cursor, "cursors must advance identically");
+        }
+    }
+
+    #[test]
+    fn integral_alpha_emits_exactly() {
+        let mut acc = AlphaAcc::new();
+        for _ in 0..100 {
+            assert_eq!(acc.step(2.0), 2);
+        }
+        assert_eq!(acc.step_n(1.0, 64), 64);
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod benchmarks;
 pub mod builder;
+pub mod fanout;
 
 use crate::{Error, Result};
 

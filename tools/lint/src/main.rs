@@ -6,9 +6,10 @@
 //!
 //! Rules (applied to non-test, non-comment lines of `rust/src`):
 //!
-//! * `wall-clock` — `Instant::now(` / `SystemTime::now(` outside
-//!   `obs/` (telemetry is the one layer allowed to look at the clock;
-//!   everything else must keep schedules time-independent).
+//! * `wall-clock` — `Instant::now(` / `SystemTime::now(`: schedules
+//!   must stay time-independent.  Whole layers whose *job* is the
+//!   clock (telemetry in `obs/`, the real-time executor in `engine/`)
+//!   are exempted via allowlist zones rather than per-file entries.
 //! * `nondeterministic-rng` — `thread_rng` / `from_entropy` /
 //!   `rand::random`: every random stream must be seeded
 //!   (`util::rng::Rng`) so runs replay.
@@ -20,9 +21,14 @@
 //! * `float-eq` — `==`/`!=` against a float literal: scoring paths
 //!   compare within tolerances, not exactly.
 //!
-//! Suppressions live in `tools/lint/allowlist.txt` as
-//! `rule path # rationale` lines, matched per (rule, file) so entries
-//! survive line drift; the rationale is mandatory documentation.
+//! Suppressions live in `tools/lint/allowlist.txt`:
+//!
+//! * `rule path # rationale` — matched per (rule, file) so entries
+//!   survive line drift; the rationale is mandatory documentation.
+//! * `zone rule prefix/ # rationale` — exempts every file under the
+//!   prefix from one rule, for directories whose whole purpose makes
+//!   the rule inapplicable (e.g. `obs/` and the clock).  Zones go
+//!   stale like entries: a zone with no remaining hit fails the lint.
 
 use std::collections::BTreeSet;
 use std::fs;
@@ -75,9 +81,13 @@ fn float_literal_follows(rest: &str) -> bool {
 
 fn float_literal_precedes(before: &str) -> bool {
     let s = before.trim_end();
-    // the preceding token must end like `<digits>.<digits>`
+    // the preceding token must end like `<digits>.<digits>`; requiring a
+    // digit on *both* sides of the dot keeps tuple-field access
+    // (`pair.0 == other.0`) from reading as a float literal
     let tail: String = s.chars().rev().take_while(|c| c.is_ascii_digit() || *c == '.').collect();
-    tail.contains('.') && tail.starts_with(|c: char| c.is_ascii_digit())
+    tail.contains('.')
+        && tail.starts_with(|c: char| c.is_ascii_digit())
+        && tail.ends_with(|c: char| c.is_ascii_digit())
 }
 
 fn scan_file(root: &Path, rel: &str, hits: &mut Vec<Hit>) {
@@ -107,7 +117,7 @@ fn scan_file(root: &Path, rel: &str, hits: &mut Vec<Hit>) {
             })
         };
         let clock = line.contains("Instant::now(") || line.contains("SystemTime::now(");
-        if clock && !rel.starts_with("obs/") {
+        if clock {
             push("wall-clock");
         }
         let rng = line.contains("thread_rng")
@@ -160,8 +170,10 @@ fn main() -> ExitCode {
         scan_file(&src_root, rel, &mut hits);
     }
 
-    // allowlist: `rule path # rationale`, matched per (rule, file)
+    // allowlist: `rule path # rationale` entries matched per (rule,
+    // file), plus `zone rule prefix/ # rationale` directory exemptions
     let mut allowed: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut zones: BTreeSet<(String, String)> = BTreeSet::new();
     let allow_text = fs::read_to_string(&allow_path).unwrap_or_default();
     let mut malformed = 0;
     for (idx, raw) in allow_text.lines().enumerate() {
@@ -169,26 +181,40 @@ fn main() -> ExitCode {
         if entry.is_empty() {
             continue;
         }
-        let mut tok = entry.split_whitespace();
-        match (tok.next(), tok.next(), tok.next(), raw.contains('#')) {
-            (Some(rule), Some(path), None, true) if RULES.contains(&rule) => {
+        let toks: Vec<&str> = entry.split_whitespace().collect();
+        match toks.as_slice() {
+            [rule, path] if raw.contains('#') && RULES.contains(rule) => {
                 allowed.insert((rule.to_string(), path.to_string()));
+            }
+            ["zone", rule, prefix] if raw.contains('#') && RULES.contains(rule) => {
+                zones.insert((rule.to_string(), prefix.to_string()));
             }
             _ => {
                 let n = idx + 1;
-                eprintln!("allowlist.txt:{n}: malformed (want `rule path # rationale`): {raw}");
+                eprintln!(
+                    "allowlist.txt:{n}: malformed (want `rule path # rationale` or \
+                     `zone rule prefix/ # rationale`): {raw}"
+                );
                 malformed += 1;
             }
         }
     }
 
     let mut used: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut used_zones: BTreeSet<(String, String)> = BTreeSet::new();
     let mut reported = 0;
     let mut suppressed = 0;
     for h in &hits {
         let key = (h.rule.to_string(), h.file.clone());
+        // exact entries are matched before zones so both kinds report
+        // staleness independently
         if allowed.contains(&key) {
             used.insert(key);
+            suppressed += 1;
+        } else if let Some(z) =
+            zones.iter().find(|(rule, prefix)| *rule == h.rule && h.file.starts_with(prefix))
+        {
+            used_zones.insert(z.clone());
             suppressed += 1;
         } else {
             println!("rust/src/{}:{}: [{}] {}", h.file, h.line_no, h.rule, h.line);
@@ -199,6 +225,12 @@ fn main() -> ExitCode {
     let mut stale = 0;
     for (rule, path) in allowed.difference(&used) {
         eprintln!("allowlist.txt: stale entry `{rule} {path}` (no remaining hit — delete it)");
+        stale += 1;
+    }
+    for (rule, prefix) in zones.difference(&used_zones) {
+        eprintln!(
+            "allowlist.txt: stale zone `zone {rule} {prefix}` (no remaining hit — delete it)"
+        );
         stale += 1;
     }
 
