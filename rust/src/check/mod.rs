@@ -92,6 +92,13 @@ pub enum Violation {
     /// The provenance's optimality-gap certificate is self-contradictory
     /// (negative gap, or a nonzero gap after an exhausted search).
     GapInconsistent { gap: f64, detail: String },
+    /// A fleet re-plan step changed the placement of a tenant that was
+    /// not in the step's dirty set (residual re-plans must never move
+    /// clean residents).
+    ResidentMoved { tenant: String },
+    /// A fleet re-plan step started more instances than the per-step
+    /// migration budget allows.
+    MigrationBudgetExceeded { moved: usize, budget: usize },
 }
 
 impl Violation {
@@ -113,6 +120,8 @@ impl Violation {
             Violation::CombinedOverutilized { .. } => "combined-overutilized",
             Violation::ScaleMismatch { .. } => "scale-mismatch",
             Violation::GapInconsistent { .. } => "gap-inconsistent",
+            Violation::ResidentMoved { .. } => "resident-moved",
+            Violation::MigrationBudgetExceeded { .. } => "migration-budget-exceeded",
         }
     }
 
@@ -183,6 +192,14 @@ impl Violation {
             Violation::GapInconsistent { gap, detail } => {
                 format!("{}: optimality gap {gap:.9} is inconsistent ({detail})", self.code())
             }
+            Violation::ResidentMoved { tenant } => format!(
+                "{}: clean tenant '{tenant}' was moved by a dirty-tenant re-plan",
+                self.code()
+            ),
+            Violation::MigrationBudgetExceeded { moved, budget } => format!(
+                "{}: step started {moved} instance(s), budget is {budget}",
+                self.code()
+            ),
         }
     }
 }
@@ -237,6 +254,42 @@ fn eq5_lines(problem: &Problem, placement: &crate::predict::Placement) -> Result
         }
     }
     Ok(lines)
+}
+
+/// Validate one fleet control step: given every tenant's placement
+/// before and after the step's dirty-tenant re-plans (both already on
+/// the step's machine list), the dirty set the controller claimed, and
+/// the per-step migration budget, check that
+///
+/// * no clean (non-dirty) tenant's placement changed at all
+///   ([`Violation::ResidentMoved`]) — residual re-plans only ever
+///   touch dirty tenants, and
+/// * the step started at most `max_moves` instances in total
+///   ([`Violation::MigrationBudgetExceeded`]).
+pub fn validate_fleet(
+    tenants: &[String],
+    before: &[crate::predict::Placement],
+    after: &[crate::predict::Placement],
+    dirty: &[bool],
+    max_moves: usize,
+) -> Report {
+    let n = before.len().min(after.len()).min(dirty.len());
+    let mut v = Vec::new();
+    let mut moved_total = 0usize;
+    for i in 0..n {
+        if !dirty[i] && before[i] != after[i] {
+            let tenant = tenants
+                .get(i)
+                .cloned()
+                .unwrap_or_else(|| format!("tenant-{i}"));
+            v.push(Violation::ResidentMoved { tenant });
+        }
+        moved_total += crate::controller::workload::started_tasks(&before[i], &after[i]);
+    }
+    if moved_total > max_moves {
+        v.push(Violation::MigrationBudgetExceeded { moved: moved_total, budget: max_moves });
+    }
+    Report { violations: v }
 }
 
 /// Validate a single-problem [`Schedule`] against every structural

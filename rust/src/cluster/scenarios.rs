@@ -11,7 +11,7 @@
 
 use super::presets::{paper_profiles, CORE_I3, CORE_I5, PENTIUM};
 use super::profile::ProfileDb;
-use super::Cluster;
+use super::{Cluster, Machine};
 
 /// One Table 4 row.
 #[derive(Debug, Clone, Copy)]
@@ -53,6 +53,52 @@ pub fn by_id(id: usize) -> Option<Scenario> {
     SCENARIOS.iter().copied().find(|s| s.id == id)
 }
 
+/// Synthetic fleet for the incremental-control-plane harness: machines
+/// grouped into racks of `rack_size`, one worker type per rack (the
+/// three Table 2 types striped round-robin across racks), named
+/// `r{rack}-{slot}` so correlated rack outages can address a whole
+/// rack by name prefix.  Shares the paper's profile DB — the fleet is
+/// a scaled-out Table 4, not a new hardware model.
+pub fn fleet(n_machines: usize, rack_size: usize) -> (Cluster, ProfileDb) {
+    let n = n_machines.max(1);
+    let rack_size = rack_size.max(1);
+    let mut c = Cluster::new(format!("fleet-{n}"));
+    let types = [
+        c.add_type(PENTIUM, "Pentium Dual-Core 2.6 GHz"),
+        c.add_type(CORE_I3, "Intel Core i3 2.9 GHz"),
+        c.add_type(CORE_I5, "Intel Core i5 2.5 GHz"),
+    ];
+    for m in 0..n {
+        let rack = m / rack_size;
+        let slot = m % rack_size;
+        c.machines.push(Machine {
+            name: format!("r{rack}-{slot}"),
+            type_id: types[rack % types.len()],
+            cap: 100.0,
+        });
+    }
+    (c, paper_profiles())
+}
+
+/// Names of every machine in rack `rack` of a [`fleet`] cluster
+/// (prefix match on `r{rack}-`).
+pub fn rack_members(cluster: &Cluster, rack: usize) -> Vec<String> {
+    let prefix = format!("r{rack}-");
+    cluster
+        .machines
+        .iter()
+        .filter(|m| m.name.starts_with(&prefix))
+        .map(|m| m.name.clone())
+        .collect()
+}
+
+/// Number of racks a [`fleet`] cluster of `n_machines` machines with
+/// `rack_size`-machine racks has.
+pub fn n_racks(n_machines: usize, rack_size: usize) -> usize {
+    let rack_size = rack_size.max(1);
+    n_machines.max(1).div_ceil(rack_size)
+}
+
 /// One-line summary of the valid scenarios for CLI error messages,
 /// e.g. `1=small(6), 2=medium(30), 3=large(180)`.
 pub fn describe_all() -> String {
@@ -88,6 +134,33 @@ mod tests {
     fn by_id_lookup() {
         assert_eq!(by_id(3).unwrap().label, "large");
         assert!(by_id(4).is_none());
+    }
+
+    #[test]
+    fn fleet_builds_racked_clusters() {
+        let (c, db) = fleet(1000, 20);
+        c.validate().unwrap();
+        assert_eq!(c.n_machines(), 1000);
+        assert_eq!(n_racks(1000, 20), 50);
+        // every rack is full and uniformly typed
+        for rack in 0..n_racks(1000, 20) {
+            let members = rack_members(&c, rack);
+            assert_eq!(members.len(), 20, "rack {rack}");
+            let ids: Vec<usize> = c
+                .machines
+                .iter()
+                .filter(|m| members.contains(&m.name))
+                .map(|m| m.type_id)
+                .collect();
+            assert!(ids.windows(2).all(|w| w[0] == w[1]), "rack {rack} mixes types");
+        }
+        // all three Table 2 types are represented
+        assert_eq!(c.types.len(), 3);
+        assert!(db.get("highCompute", CORE_I5).is_ok());
+        // ragged tail still builds
+        let (c2, _) = fleet(55, 20);
+        c2.validate().unwrap();
+        assert_eq!(rack_members(&c2, 2).len(), 15);
     }
 
     #[test]

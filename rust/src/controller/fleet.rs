@@ -1,0 +1,752 @@
+//! Fleet-scale control harness: many tenants on a synthetic rack-built
+//! cluster, driven through failure storms at a decision-latency budget.
+//!
+//! [`run_fleet`] replays a [`traces::fleet_storm`] world — correlated
+//! rack outages, a flapping machine, plus util-band autoscaling — over a
+//! [`crate::cluster::scenarios::fleet`] cluster, with each tenant
+//! running one of the five benchmark topologies under its own diurnal
+//! offered-load profile.  Two control regimes are compared:
+//!
+//! * [`FleetMode::Incremental`] — the dirty-tenant control plane: only
+//!   tenants that are damaged (lost instances to an outage), breached
+//!   (offered > capacity) or individually outside the hysteresis band
+//!   are re-planned, each against the *residual* capacity left by every
+//!   other tenant's reserved load, warm-started from the incumbent
+//!   placement, bounded by [`ControllerConfig::replan_budget`] and the
+//!   per-step migration budget [`ControllerConfig::max_moves_per_step`].
+//! * [`FleetMode::FullReplan`] — the quality comparator: every placed
+//!   tenant is re-planned from scratch every step with an unlimited
+//!   search budget and no migration cap (the pre-incremental regime).
+//!
+//! World evolution is shared machinery with the single-tenant
+//! controller: rack outages go through
+//! [`Problem::apply_machine_leaves_fleet`] (one batched column-drop
+//! across every tenant's evaluator), joins and drifts through
+//! [`Problem::apply_delta_fleet`] (one copy-on-write clone of the
+//! cluster, adopted by the whole fleet), and tenant placements/util
+//! vectors are patched with the same
+//! [`crate::predict::drop_indices`] kernel — so a 1000-machine step that
+//! changes nothing costs O(tenants) and a rack outage costs one pass
+//! over the affected columns, never a `Problem::new` rebuild.
+//!
+//! ## Autoscaling
+//!
+//! The util-band autoscaler compares a **trace-derived load proxy** (the
+//! weighted mean of the tenants' offered-rate multipliers) against fixed
+//! thresholds and enqueues a `scale-{k}` machine join above the high
+//! mark or drains the most recent scale machine below the low mark.
+//! Deriving the signal from trace data alone keeps the *world* identical
+//! across both modes, so the delivered-throughput gap measures control
+//! quality, not diverging cluster histories.
+//!
+//! ## Measurement
+//!
+//! Per-step decision latency (event absorption + dirty detection +
+//! re-planning) is observed into both the global `control.step_s`
+//! histogram and a run-local one that feeds the report's p50/p95/p99
+//! (milliseconds).  Latency is wall-clock and therefore excluded from
+//! the deterministic surface: everything else in a [`FleetReport`] is a
+//! pure function of (spec, config, mode).  With `verify` set,
+//! [`crate::check::validate_fleet`] audits every step — clean tenants
+//! must keep bit-identical placements and total instance starts must
+//! respect the migration budget — at the cost of per-step placement
+//! snapshots (use it on small configs; it inflates measured latency).
+
+use std::sync::Arc;
+
+use crate::cluster::presets::CORE_I5;
+use crate::cluster::scenarios;
+use crate::cluster::Cluster;
+use crate::obs::{Histogram, Span};
+use crate::predict::{drop_indices, Placement};
+use crate::scheduler::{
+    Constraints, Problem, ProblemDelta, Schedule, ScheduleRequest, Scheduler, SearchBudget,
+};
+use crate::topology::benchmarks;
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+use super::traces::{self, ClusterEvent};
+use super::workload::started_tasks;
+use super::ControllerConfig;
+
+/// Offered-load-proxy threshold above which the autoscaler enqueues a
+/// scale-out join (the diurnal profiles peak near 1.3×).
+const AUTOSCALE_HI: f64 = 1.1;
+/// Proxy threshold below which the most recent scale machine drains.
+const AUTOSCALE_LO: f64 = 0.55;
+
+/// Control regime for one fleet run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetMode {
+    /// Dirty-tenant residual re-plans under search + migration budgets.
+    Incremental,
+    /// Every placed tenant re-planned from scratch every step
+    /// (unlimited budget) — the quality baseline.
+    FullReplan,
+}
+
+impl FleetMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetMode::Incremental => "incremental",
+            FleetMode::FullReplan => "full-replan",
+        }
+    }
+}
+
+/// Shape of one synthetic fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Machines in the day-zero cluster.
+    pub machines: usize,
+    /// Tenants admitted at day zero (benchmark topologies, round-robin).
+    pub tenants: usize,
+    /// Virtual steps to replay.
+    pub steps: usize,
+    /// Seed for the storm trace and the per-tenant load profiles.
+    pub seed: u64,
+    /// Machines per rack (outages take whole racks).
+    pub rack_size: usize,
+    /// Audit every step with [`crate::check::validate_fleet`] (placement
+    /// snapshots land inside the measured step, so keep this off for
+    /// latency runs).
+    pub verify: bool,
+}
+
+impl FleetSpec {
+    pub fn new(machines: usize, tenants: usize) -> Self {
+        FleetSpec { machines, tenants, steps: 120, seed: 42, rack_size: 20, verify: false }
+    }
+}
+
+/// Aggregates of one fleet run under one mode.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub mode: &'static str,
+    pub machines: usize,
+    pub tenants: usize,
+    /// Tenants that received a day-zero schedule (the rest are denied
+    /// admission and sit out the whole run).
+    pub admitted: usize,
+    pub steps: usize,
+    pub seed: u64,
+    /// Cluster events absorbed (storm + autoscale).
+    pub events: usize,
+    /// Accepted tenant re-plans.
+    pub replans: usize,
+    /// Steps on which at least one re-plan was accepted.
+    pub replan_steps: usize,
+    /// Re-plans rejected because they would exceed the migration budget.
+    pub deferred: usize,
+    /// Task instances newly started or moved by re-plans.
+    pub tasks_moved: usize,
+    /// Fleet-invariant violations found by the per-step audit (0 unless
+    /// the spec's `verify` flag is set and something is broken).
+    pub violations: usize,
+    /// ∫ Σ_i weight_i · offered_i dt — weighted tuples offered.
+    pub offered_volume: f64,
+    /// ∫ Σ_i weight_i · delivered_i dt — weighted tuples delivered.
+    pub delivered_volume: f64,
+    /// Per-step decision-latency percentiles, milliseconds (wall-clock;
+    /// 0 when telemetry is disabled).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl FleetReport {
+    /// Weighted delivered share of weighted offered load, percent.
+    pub fn delivered_pct(&self) -> f64 {
+        if self.offered_volume > 0.0 {
+            self.delivered_volume / self.offered_volume * 100.0
+        } else {
+            100.0
+        }
+    }
+
+    /// One-block terminal summary.
+    pub fn render(&self) -> String {
+        format!(
+            "\n=== fleet — {} machines, {}/{} tenants admitted, {} steps (seed {}) \
+             mode '{}' ===\n\
+             events: {}   re-plans: {} (on {} steps)   deferred: {}   moved: {}   \
+             violations: {}\n\
+             weighted delivered: {:.1}% of offered\n\
+             step latency ms  p50 {:.3}   p95 {:.3}   p99 {:.3}   max {:.3}\n",
+            self.machines,
+            self.admitted,
+            self.tenants,
+            self.steps,
+            self.seed,
+            self.mode,
+            self.events,
+            self.replans,
+            self.replan_steps,
+            self.deferred,
+            self.tasks_moved,
+            self.violations,
+            self.delivered_pct(),
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms,
+        )
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("mode", json::s(self.mode)),
+            ("machines", json::num(self.machines as f64)),
+            ("tenants", json::num(self.tenants as f64)),
+            ("admitted", json::num(self.admitted as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("events", json::num(self.events as f64)),
+            ("replans", json::num(self.replans as f64)),
+            ("replan_steps", json::num(self.replan_steps as f64)),
+            ("deferred", json::num(self.deferred as f64)),
+            ("tasks_moved", json::num(self.tasks_moved as f64)),
+            ("violations", json::num(self.violations as f64)),
+            ("offered_volume", json::num(self.offered_volume)),
+            ("delivered_volume", json::num(self.delivered_volume)),
+            ("delivered_pct", json::num(self.delivered_pct())),
+            ("p50_ms", json::num(self.p50_ms)),
+            ("p95_ms", json::num(self.p95_ms)),
+            ("p99_ms", json::num(self.p99_ms)),
+            ("max_ms", json::num(self.max_ms)),
+        ])
+    }
+}
+
+/// Weighted-throughput gap of `incremental` vs `full`, percent (positive
+/// when the full re-planner delivered more; negative when incremental
+/// won, e.g. by avoiding migration downtime).
+pub fn quality_gap_pct(incremental: &FleetReport, full: &FleetReport) -> f64 {
+    if full.delivered_volume > 0.0 {
+        (full.delivered_volume - incremental.delivered_volume) / full.delivered_volume * 100.0
+    } else {
+        0.0
+    }
+}
+
+/// Residual-capacity constraint: every machine's already-spoken-for load.
+fn reserve(cluster: &Cluster, load: &[f64]) -> Constraints {
+    let mut c = Constraints::new();
+    for (m, l) in load.iter().enumerate() {
+        if *l > 1e-9 {
+            c = c.reserve_machine_load(cluster.machines[m].name.clone(), *l);
+        }
+    }
+    c
+}
+
+/// Placements aligned for the per-step audit (denied tenants as empty).
+fn snapshot(placements: &[Option<Placement>], problems: &[Problem]) -> Vec<Placement> {
+    placements
+        .iter()
+        .zip(problems)
+        .map(|(p, pb)| {
+            p.clone().unwrap_or_else(|| {
+                Placement::empty(pb.topology().n_components(), pb.cluster().n_machines())
+            })
+        })
+        .collect()
+}
+
+/// Current closed-form capacity + util vector of a placement (capacity 0
+/// when a component has no instances left; an unbounded rate keeps the
+/// previous certified rate).
+fn recertify(problem: &Problem, pl: &Placement, prev_rate: f64) -> Result<(f64, Vec<f64>)> {
+    let rate = match problem.evaluator().max_stable_rate(pl) {
+        Ok(r) if r.is_finite() => r,
+        Ok(_) => prev_rate,
+        Err(_) => 0.0,
+    };
+    let util = problem.evaluator().evaluate(pl, rate)?.util;
+    Ok((rate, util))
+}
+
+/// Replay one fleet run.  See the module docs for the control model;
+/// everything but the latency percentiles is deterministic in
+/// (spec, cfg, mode).
+pub fn run_fleet(spec: &FleetSpec, cfg: &ControllerConfig, mode: FleetMode) -> Result<FleetReport> {
+    if spec.machines == 0 || spec.tenants == 0 || spec.steps == 0 {
+        return Err(Error::Config("fleet spec needs machines, tenants and steps >= 1".into()));
+    }
+    let (cluster, db) = scenarios::fleet(spec.machines, spec.rack_size);
+    let storm = traces::fleet_storm(&cluster, spec.steps, spec.seed);
+    let cluster = Arc::new(cluster);
+    let db = Arc::new(db);
+    let sched = cfg.scheduler()?;
+
+    // tenants: benchmark topologies round-robin, weights striped, each
+    // with its own diurnal offered profile (events of which are ignored
+    // — the storm trace owns the world)
+    let bench = benchmarks::all();
+    let t = spec.tenants;
+    let mut names: Vec<String> = Vec::with_capacity(t);
+    let mut weights: Vec<f64> = Vec::with_capacity(t);
+    let mut mult: Vec<Vec<f64>> = Vec::with_capacity(t);
+    let mut problems: Vec<Problem> = Vec::with_capacity(t);
+    for i in 0..t {
+        let top = bench[i % bench.len()].clone();
+        names.push(format!("t{i:03}"));
+        weights.push([1.0, 1.5, 2.0][i % 3]);
+        let tenant_seed = spec.seed.wrapping_add(1000 + i as u64);
+        let profile = traces::diurnal(&top, &cluster, spec.steps, tenant_seed);
+        mult.push(profile.steps.iter().map(|st| st.offered).collect());
+        problems.push(Problem::from_shared(Arc::new(top), cluster.clone(), db.clone())?);
+    }
+
+    // mode-independent autoscale signal: weighted mean offered multiplier
+    let wsum: f64 = weights.iter().sum();
+    let proxies: Vec<f64> = (0..spec.steps)
+        .map(|s| weights.iter().zip(&mult).map(|(w, mi)| w * mi[s]).sum::<f64>() / wsum)
+        .collect();
+    let max_scale = (spec.machines / 50).max(1);
+
+    // day zero: sequential residual admission (identical in both modes)
+    let n_m0 = cluster.n_machines();
+    let mut total_util = vec![0.0f64; n_m0];
+    let mut placements: Vec<Option<Placement>> = vec![None; t];
+    let mut rates = vec![0.0f64; t];
+    let mut base = vec![0.0f64; t];
+    let mut utils: Vec<Vec<f64>> = vec![vec![0.0; n_m0]; t];
+    let mut admitted = 0usize;
+    for i in 0..t {
+        let req = ScheduleRequest::max_throughput()
+            .with_constraints(reserve(problems[i].cluster(), &total_util));
+        if let Ok(s) = sched.schedule(&problems[i], &req) {
+            if s.rate > 0.0 {
+                let Schedule { placement, rate, eval, .. } = s;
+                for (m, u) in eval.util.iter().enumerate() {
+                    total_util[m] += u;
+                }
+                utils[i] = eval.util;
+                rates[i] = rate;
+                base[i] = rate;
+                placements[i] = Some(placement);
+                admitted += 1;
+            }
+        }
+    }
+
+    let step_local = Arc::new(Histogram::new());
+    let step_global = crate::obs::global().histogram("control.step_s");
+    let replan_hist = crate::obs::global().histogram("control.replan_s");
+
+    let mut rep = FleetReport {
+        mode: mode.name(),
+        machines: spec.machines,
+        tenants: t,
+        admitted,
+        steps: spec.steps,
+        seed: spec.seed,
+        events: 0,
+        replans: 0,
+        replan_steps: 0,
+        deferred: 0,
+        tasks_moved: 0,
+        violations: 0,
+        offered_volume: 0.0,
+        delivered_volume: 0.0,
+        p50_ms: 0.0,
+        p95_ms: 0.0,
+        p99_ms: 0.0,
+        max_ms: 0.0,
+    };
+
+    let mut pending: Vec<ClusterEvent> = Vec::new();
+    let mut scale_live: Vec<String> = Vec::new();
+    let mut scale_counter = 0usize;
+    let mut cooldowns = vec![0usize; t];
+
+    for s in 0..spec.steps {
+        let mut events: Vec<ClusterEvent> = storm.steps[s].events.clone();
+        events.extend(pending.drain(..));
+        rep.events += events.len();
+
+        let mut dirty = vec![false; t];
+        let mut moved_tenant = vec![0usize; t];
+        let mut before: Option<Vec<Placement>> = None;
+        let mut replans_step = 0usize;
+        {
+            let _g = Span::start(step_global.clone());
+            let _l = Span::start(step_local.clone());
+
+            // --- 1. absorb this step's world changes, fleet-wide
+            let mut leave_names: Vec<String> = Vec::new();
+            let mut joins: Vec<(String, String)> = Vec::new();
+            let mut drifted = false;
+            for ev in &events {
+                match ev {
+                    ClusterEvent::Leave { machine } => leave_names.push(machine.clone()),
+                    ClusterEvent::Join { machine, machine_type } => {
+                        joins.push((machine.clone(), machine_type.clone()));
+                    }
+                    ClusterEvent::Drift { task_type, machine_type, factor } => {
+                        Problem::apply_delta_fleet(
+                            &mut problems,
+                            &ProblemDelta::ProfileDrift {
+                                task_type: task_type.clone(),
+                                machine_type: machine_type.clone(),
+                                factor: *factor,
+                            },
+                        )?;
+                        drifted = true;
+                    }
+                }
+            }
+            leave_names
+                .retain(|n| problems[0].cluster().machines.iter().any(|m| &m.name == n));
+            if !leave_names.is_empty() {
+                let mut ms: Vec<usize> = leave_names
+                    .iter()
+                    .filter_map(|n| {
+                        problems[0].cluster().machines.iter().position(|m| &m.name == n)
+                    })
+                    .collect();
+                ms.sort_unstable();
+                ms.dedup();
+                Problem::apply_machine_leaves_fleet(&mut problems, &leave_names)?;
+                for i in 0..t {
+                    if let Some(pl) = placements[i].as_mut() {
+                        let lost: usize = ms.iter().map(|&m| pl.tasks_on(m)).sum();
+                        for row in pl.x.iter_mut() {
+                            drop_indices(row, &ms);
+                        }
+                        if lost > 0 {
+                            dirty[i] = true;
+                        }
+                    }
+                    drop_indices(&mut utils[i], &ms);
+                }
+            }
+            for (name, ty) in joins {
+                if problems[0].cluster().machines.iter().any(|m| m.name == name) {
+                    continue;
+                }
+                Problem::apply_delta_fleet(
+                    &mut problems,
+                    &ProblemDelta::MachineJoin { name, machine_type: ty, cap: 100.0 },
+                )?;
+                for i in 0..t {
+                    if let Some(pl) = placements[i].as_mut() {
+                        for row in pl.x.iter_mut() {
+                            row.push(0);
+                        }
+                    }
+                    utils[i].push(0.0);
+                }
+                total_util.push(0.0);
+            }
+            // re-certify tenants whose capacity may have changed, then
+            // rebuild the reserved-load ledger once
+            if !leave_names.is_empty() || drifted {
+                for i in 0..t {
+                    if !(drifted || dirty[i]) {
+                        continue;
+                    }
+                    if let Some(pl) = placements[i].as_ref() {
+                        let (r, u) = recertify(&problems[i], pl, rates[i])?;
+                        rates[i] = r;
+                        utils[i] = u;
+                    }
+                }
+                let n_m = problems[0].cluster().n_machines();
+                total_util = vec![0.0; n_m];
+                for u in &utils {
+                    for (m, v) in u.iter().enumerate() {
+                        total_util[m] += v;
+                    }
+                }
+            }
+
+            if spec.verify {
+                before = Some(snapshot(&placements, &problems));
+            }
+
+            // --- 2. dirty detection
+            match mode {
+                FleetMode::FullReplan => {
+                    for (i, p) in placements.iter().enumerate() {
+                        if p.is_some() {
+                            dirty[i] = true;
+                        }
+                    }
+                }
+                FleetMode::Incremental => {
+                    for i in 0..t {
+                        if placements[i].is_none() || dirty[i] {
+                            continue;
+                        }
+                        let offered = base[i] * mult[i][s];
+                        let cap = rates[i];
+                        let breach = offered > cap * (1.0 + 1e-9);
+                        let ratio = if cap > 0.0 { offered / cap } else { f64::INFINITY };
+                        let band = ratio < cfg.band_lo || ratio > cfg.band_hi;
+                        if breach || (band && cooldowns[i] == 0) {
+                            dirty[i] = true;
+                        }
+                    }
+                }
+            }
+
+            // --- 3. re-plans
+            match mode {
+                FleetMode::Incremental => {
+                    let mut moves_left = cfg.max_moves_per_step;
+                    for i in 0..t {
+                        if !dirty[i] {
+                            cooldowns[i] = cooldowns[i].saturating_sub(1);
+                            continue;
+                        }
+                        let Some(old_pl) = placements[i].clone() else { continue };
+                        if moves_left == 0 && cfg.max_moves_per_step > 0 {
+                            // budget exhausted mid-step: don't pay for
+                            // searches whose result could not be adopted
+                            rep.deferred += 1;
+                            continue;
+                        }
+                        let n_m = problems[i].cluster().n_machines();
+                        let mut residual = vec![0.0f64; n_m];
+                        for m in 0..n_m {
+                            residual[m] = (total_util[m] - utils[i][m]).max(0.0);
+                        }
+                        let req = ScheduleRequest::max_throughput()
+                            .with_constraints(reserve(problems[i].cluster(), &residual))
+                            .with_budget(cfg.replan_budget)
+                            .with_warm_start(old_pl.clone());
+                        let result = {
+                            let _r = Span::start(replan_hist.clone());
+                            sched.schedule(&problems[i], &req)
+                        };
+                        if let Ok(snew) = result {
+                            let moved = started_tasks(&old_pl, &snew.placement);
+                            if moved > moves_left {
+                                rep.deferred += 1;
+                                continue;
+                            }
+                            moves_left -= moved;
+                            let Schedule { placement, rate, eval, .. } = snew;
+                            for (m, u) in eval.util.iter().enumerate() {
+                                total_util[m] += u - utils[i][m];
+                            }
+                            utils[i] = eval.util;
+                            rates[i] = rate;
+                            placements[i] = Some(placement);
+                            moved_tenant[i] = moved;
+                            replans_step += 1;
+                            cooldowns[i] = cfg.cooldown_steps;
+                        }
+                    }
+                }
+                FleetMode::FullReplan => {
+                    let n_m = problems[0].cluster().n_machines();
+                    let mut new_total = vec![0.0f64; n_m];
+                    for i in 0..t {
+                        let Some(old_pl) = placements[i].clone() else { continue };
+                        let req = ScheduleRequest::max_throughput()
+                            .with_constraints(reserve(problems[i].cluster(), &new_total))
+                            .with_budget(SearchBudget::unlimited());
+                        let result = {
+                            let _r = Span::start(replan_hist.clone());
+                            sched.schedule(&problems[i], &req)
+                        };
+                        match result {
+                            Ok(snew) => {
+                                let moved = started_tasks(&old_pl, &snew.placement);
+                                let Schedule { placement, rate, eval, .. } = snew;
+                                for (m, u) in eval.util.iter().enumerate() {
+                                    new_total[m] += u;
+                                }
+                                utils[i] = eval.util;
+                                rates[i] = rate;
+                                placements[i] = Some(placement);
+                                moved_tenant[i] = moved;
+                                replans_step += 1;
+                            }
+                            Err(_) => {
+                                // keep the incumbent and its reservation
+                                for (m, u) in utils[i].iter().enumerate() {
+                                    new_total[m] += u;
+                                }
+                            }
+                        }
+                    }
+                    total_util = new_total;
+                }
+            }
+
+            // --- 4. util-band autoscaling (world change lands next step)
+            if proxies[s] > AUTOSCALE_HI && scale_live.len() < max_scale {
+                let name = format!("scale-{scale_counter}");
+                scale_counter += 1;
+                pending.push(ClusterEvent::Join {
+                    machine: name.clone(),
+                    machine_type: CORE_I5.into(),
+                });
+                scale_live.push(name);
+            } else if proxies[s] < AUTOSCALE_LO {
+                if let Some(name) = scale_live.pop() {
+                    pending.push(ClusterEvent::Leave { machine: name });
+                }
+            }
+        }
+
+        // --- 5. audit (outside the measured step)
+        if let Some(before) = before {
+            let after = snapshot(&placements, &problems);
+            let budget = match mode {
+                FleetMode::Incremental => cfg.max_moves_per_step,
+                FleetMode::FullReplan => usize::MAX,
+            };
+            let audit = crate::check::validate_fleet(&names, &before, &after, &dirty, budget);
+            rep.violations += audit.violations.len();
+        }
+
+        // --- 6. weighted delivery accounting with migration downtime
+        let dt = cfg.step_seconds;
+        let mut moved_step = 0usize;
+        for i in 0..t {
+            if placements[i].is_none() {
+                continue;
+            }
+            let offered = base[i] * mult[i][s];
+            let downtime = (cfg.migration_cost * moved_tenant[i] as f64).min(dt);
+            let delivered = offered.min(rates[i]) * (1.0 - downtime / dt);
+            rep.offered_volume += weights[i] * offered * dt;
+            rep.delivered_volume += weights[i] * delivered * dt;
+            moved_step += moved_tenant[i];
+        }
+        rep.tasks_moved += moved_step;
+        rep.replans += replans_step;
+        if replans_step > 0 {
+            rep.replan_steps += 1;
+        }
+    }
+
+    rep.p50_ms = step_local.quantile(0.5) * 1e3;
+    rep.p95_ms = step_local.quantile(0.95) * 1e3;
+    rep.p99_ms = step_local.quantile(0.99) * 1e3;
+    rep.max_ms = step_local.max() * 1e3;
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> FleetSpec {
+        FleetSpec { machines: 30, tenants: 6, steps: 40, seed: 3, rack_size: 5, verify: true }
+    }
+
+    fn fingerprint(r: &FleetReport) -> (usize, usize, usize, usize, u64, u64) {
+        (
+            r.events,
+            r.replans,
+            r.deferred,
+            r.tasks_moved,
+            r.offered_volume.to_bits(),
+            r.delivered_volume.to_bits(),
+        )
+    }
+
+    #[test]
+    fn fleet_run_is_deterministic() {
+        let spec = small_spec();
+        let cfg = ControllerConfig::default();
+        let a = run_fleet(&spec, &cfg, FleetMode::Incremental).unwrap();
+        let b = run_fleet(&spec, &cfg, FleetMode::Incremental).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b), "replay must be bit-identical");
+        assert_eq!(a.admitted, 6, "30 machines fit all 6 small tenants");
+        assert!(a.events > 0, "the storm trace must perturb the world");
+        assert_eq!(a.violations, 0, "clean tenants moved or budget exceeded");
+    }
+
+    #[test]
+    fn zero_migration_budget_freezes_every_placement() {
+        let spec = small_spec();
+        let cfg = ControllerConfig { max_moves_per_step: 0, ..Default::default() };
+        let r = run_fleet(&spec, &cfg, FleetMode::Incremental).unwrap();
+        assert_eq!(r.tasks_moved, 0, "budget 0 must never start an instance");
+        assert_eq!(r.violations, 0);
+    }
+
+    #[test]
+    fn full_replan_comparator_replans_everything_and_bounds_the_gap() {
+        let spec = small_spec();
+        let cfg = ControllerConfig::default();
+        let inc = run_fleet(&spec, &cfg, FleetMode::Incremental).unwrap();
+        let full = run_fleet(&spec, &cfg, FleetMode::FullReplan).unwrap();
+        // every placed tenant, every step, minus the occasional step an
+        // outage leaves a tenant with no feasible from-scratch placement
+        assert!(
+            full.replans >= full.admitted * spec.steps * 3 / 4,
+            "full mode must re-plan nearly every tenant every step ({} < {})",
+            full.replans,
+            full.admitted * spec.steps * 3 / 4
+        );
+        assert!(
+            inc.replans < full.replans,
+            "incremental must take fewer decisions ({} vs {})",
+            inc.replans,
+            full.replans
+        );
+        for r in [&inc, &full] {
+            assert!(
+                r.delivered_volume <= r.offered_volume * (1.0 + 1e-9),
+                "{}: delivered exceeds offered",
+                r.mode
+            );
+            let pct = r.delivered_pct();
+            assert!(pct > 50.0, "{}: delivered only {pct:.1}%", r.mode);
+        }
+        assert!(
+            inc.delivered_volume >= 0.7 * full.delivered_volume,
+            "incremental lost too much throughput: gap {:.1}%",
+            quality_gap_pct(&inc, &full)
+        );
+    }
+
+    #[test]
+    fn oversubscribed_fleet_denies_admission_but_stays_sound() {
+        let spec = FleetSpec {
+            machines: 6,
+            tenants: 30,
+            steps: 25,
+            seed: 9,
+            rack_size: 3,
+            verify: true,
+        };
+        let cfg = ControllerConfig::default();
+        let r = run_fleet(&spec, &cfg, FleetMode::Incremental).unwrap();
+        assert!(r.admitted > 0, "some tenant must fit");
+        assert!(r.admitted < 30, "6 machines cannot hold 30 tenants");
+        assert_eq!(r.violations, 0);
+        assert!(r.delivered_volume <= r.offered_volume * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn report_renders_and_roundtrips() {
+        let spec = FleetSpec { steps: 20, ..FleetSpec::new(10, 2) };
+        let cfg = ControllerConfig::default();
+        let r = run_fleet(&spec, &cfg, FleetMode::Incremental).unwrap();
+        let text = r.render();
+        assert!(text.contains("incremental"), "{text}");
+        assert!(text.contains("p99"), "{text}");
+        let back = json::parse(&json::to_string_pretty(&r.to_json())).unwrap();
+        assert_eq!(back.str_field("mode").unwrap(), "incremental");
+        assert_eq!(back.num_field("machines").unwrap(), 10.0);
+        assert_eq!(back.num_field("steps").unwrap(), 20.0);
+    }
+
+    #[test]
+    fn rejects_empty_spec() {
+        let cfg = ControllerConfig::default();
+        assert!(run_fleet(&FleetSpec::new(0, 5), &cfg, FleetMode::Incremental).is_err());
+        assert!(run_fleet(&FleetSpec::new(5, 0), &cfg, FleetMode::Incremental).is_err());
+    }
+}

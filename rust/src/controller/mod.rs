@@ -7,7 +7,8 @@
 //! virtual time (one [`traces::TraceStep`] per virtual second — the loop
 //! is purely analytic, it never sleeps).  At each step the controller
 //! re-evaluates the current placement against its cached
-//! [`Problem`] (rebuilt only when the world actually changes) and
+//! [`Problem`] (delta-patched in place when the world changes — see
+//! [`crate::scheduler::ProblemDelta`]) and
 //! decides whether to issue a new [`ScheduleRequest`] to the scheduler
 //! policy resolved once, by name, through [`crate::scheduler::registry`].
 //!
@@ -64,8 +65,11 @@
 //!
 //! Multi-tenant control — admitting, draining and re-planning many
 //! topologies on one shared cluster over per-tenant traces — lives in
-//! [`workload`] ([`workload::run_workload`]).
+//! [`workload`] ([`workload::run_workload`]); the fleet-scale harness
+//! (hundreds to thousands of machines, failure storms, autoscaling, a
+//! per-step decision-latency budget) in [`fleet`] ([`fleet::run_fleet`]).
 
+pub mod fleet;
 pub mod report;
 pub mod traces;
 pub mod workload;
@@ -73,15 +77,16 @@ pub mod workload;
 use std::collections::BTreeMap;
 
 use crate::cluster::profile::ProfileDb;
-use crate::cluster::{Cluster, Machine};
+use crate::cluster::Cluster;
 use crate::predict::kernel;
 use crate::predict::Placement;
 use crate::scheduler::{
-    registry, reschedule, PolicyParams, Problem, Schedule, ScheduleRequest, Scheduler,
+    registry, reschedule, PolicyParams, Problem, ProblemDelta, Schedule, ScheduleRequest,
+    Scheduler, SearchBudget,
 };
 use crate::simulator::event::{self, EventSimConfig};
 use crate::topology::Topology;
-use crate::{Error, Result};
+use crate::Result;
 
 use report::{ControlReport, PolicyReport, StepRow};
 use traces::{ClusterEvent, Trace};
@@ -137,6 +142,19 @@ pub struct ControllerConfig {
     /// forced the decision, so the per-step cost is bounded by the
     /// probe horizon.
     pub event_probe: Option<EventSimConfig>,
+    /// Deterministic per-decision search budget attached to every
+    /// re-plan request — at fleet scale an exhaustive or unbounded
+    /// search per breach blows the step-latency budget, so the
+    /// controller caps the work and takes the anytime incumbent.
+    /// Default: unlimited (identical behavior to the pre-budget loop).
+    pub replan_budget: SearchBudget,
+    /// Migration budget: at most this many task instances may be newly
+    /// started or moved per step by dirty-tenant re-plans
+    /// ([`workload::run_workload`]).  A re-plan whose move count would
+    /// exceed the remaining budget is rejected and the tenant keeps its
+    /// incumbent schedule until a later step.  Default: `usize::MAX`
+    /// (no cap — the pre-budget behavior).
+    pub max_moves_per_step: usize,
 }
 
 impl Default for ControllerConfig {
@@ -150,6 +168,8 @@ impl Default for ControllerConfig {
             scheduler_policy: "hetero".into(),
             scheduler_params: PolicyParams::default(),
             event_probe: None,
+            replan_budget: SearchBudget::unlimited(),
+            max_moves_per_step: usize::MAX,
         }
     }
 }
@@ -161,29 +181,44 @@ impl ControllerConfig {
     }
 }
 
-/// Cluster + profiles as they evolve over the trace; `version` bumps on
-/// every applied event and keys the problem/schedule caches.
-#[derive(Debug, Clone)]
-struct World {
-    cluster: Cluster,
-    profiles: ProfileDb,
-    version: u64,
+/// Copy-on-write world state: **one live [`Problem`]** absorbing
+/// cluster events as [`ProblemDelta`]s.  Where the loop used to rebuild
+/// `Problem::new` per world version (full re-validation + `O(C·M)`
+/// profile expansion, plus a fresh copy of the immutable topology and
+/// profile tables), a machine join/leave/drift is now an `O(C)`
+/// evaluator column patch; the construction `Arc`s are shared with the
+/// day-zero problem, so nothing immutable is ever copied.  The problem's
+/// delta counter ([`Problem::version`]) keys the capacity/probe caches,
+/// exactly as the old world version did.
+struct WorldState {
+    problem: Problem,
 }
 
-impl World {
-    fn new(cluster: Cluster, profiles: ProfileDb) -> Self {
-        World { cluster, profiles, version: 0 }
+impl WorldState {
+    /// Spawn from a day-zero problem without copying its inputs.
+    fn from_day_zero(day_zero: &Problem) -> Result<Self> {
+        let (top, cluster, profiles) = day_zero.shared_parts();
+        Ok(WorldState { problem: Problem::from_shared(top, cluster, profiles)? })
+    }
+
+    fn problem(&self) -> &Problem {
+        &self.problem
+    }
+
+    fn cluster(&self) -> &Cluster {
+        self.problem.cluster()
+    }
+
+    fn version(&self) -> u64 {
+        self.problem.version()
     }
 
     fn machine_index(&self, name: &str) -> Option<usize> {
-        self.cluster.machines.iter().position(|m| m.name == name)
+        self.cluster().machines.iter().position(|m| m.name == name)
     }
 
-    fn remove_machine(&mut self, name: &str) {
-        if let Some(idx) = self.machine_index(name) {
-            self.cluster.machines.remove(idx);
-            self.version += 1;
-        }
+    fn remove_machine(&mut self, name: &str) -> Result<()> {
+        self.problem.apply_delta(&ProblemDelta::MachineLeave { name: name.into() })
     }
 
     /// Apply a Join or Drift event.  Leave is policy-dependent (plain
@@ -197,27 +232,19 @@ impl World {
                 if self.machine_index(machine).is_some() {
                     return Ok(false); // already present
                 }
-                let type_id = self
-                    .cluster
-                    .types
-                    .iter()
-                    .position(|t| &t.name == machine_type)
-                    .ok_or_else(|| {
-                        Error::Cluster(format!("join references unknown type '{machine_type}'"))
-                    })?;
-                self.cluster.machines.push(Machine {
+                self.problem.apply_delta(&ProblemDelta::MachineJoin {
                     name: machine.clone(),
-                    type_id,
+                    machine_type: machine_type.clone(),
                     cap: 100.0,
-                });
-                self.version += 1;
+                })?;
                 Ok(true)
             }
             ClusterEvent::Drift { task_type, machine_type, factor } => {
-                let mut p = self.profiles.get(task_type, machine_type)?;
-                p.e *= factor.max(1e-9);
-                self.profiles.insert(task_type, machine_type, p);
-                self.version += 1;
+                self.problem.apply_delta(&ProblemDelta::ProfileDrift {
+                    task_type: task_type.clone(),
+                    machine_type: machine_type.clone(),
+                    factor: *factor,
+                })?;
                 Ok(true)
             }
         }
@@ -323,18 +350,15 @@ pub fn run_policy(
     let sched = cfg.scheduler()?;
     let problem = Problem::new(top, cluster, profiles)?;
     let initial = sched.schedule(&problem, &ScheduleRequest::max_throughput())?;
-    run_policy_from(top, cluster, profiles, trace, policy, cfg, sched.as_ref(), &problem, initial)
+    run_policy_from(trace, policy, cfg, sched.as_ref(), &problem, initial)
 }
 
 /// [`run_policy`] with the scheduler resolved and the day-zero problem +
 /// schedule precomputed (so a multi-policy comparison pays for them
-/// once).  `day_zero` serves requests until the world first changes;
-/// after that the loop owns a rebuilt [`Problem`] per world version.
-#[allow(clippy::too_many_arguments)]
+/// once).  The loop owns a [`WorldState`] spawned from `day_zero`'s
+/// shared parts; cluster events mutate it in place as deltas instead of
+/// triggering per-version `Problem::new` rebuilds.
 fn run_policy_from(
-    top: &Topology,
-    cluster: &Cluster,
-    profiles: &ProfileDb,
     trace: &Trace,
     policy: Policy,
     cfg: &ControllerConfig,
@@ -344,14 +368,12 @@ fn run_policy_from(
 ) -> Result<PolicyReport> {
     let base_rate = initial.rate;
 
-    let mut world = World::new(cluster.clone(), profiles.clone());
-    let mut np = NamedPlacement::capture(&initial.placement, &world.cluster);
+    let mut world = WorldState::from_day_zero(day_zero)?;
+    let mut np = NamedPlacement::capture(&initial.placement, world.cluster());
     let mut np_epoch = 0u64;
     let mut cap_cache = CapacityCache::default();
     let mut cur: Schedule = initial;
-    let mut scheduled_version = world.version;
-    let mut rebuilt: Option<Problem> = None;
-    let mut problem_version = world.version;
+    let mut scheduled_version = world.version();
     let mut cooldown = 0usize;
     // (world version, offered-rate bits) -> verdict: the placement only
     // changes on a reschedule (which also clears `dirty`), so a stale
@@ -359,6 +381,7 @@ fn run_policy_from(
     let mut probe_memo: Option<(u64, u64, bool)> = None;
     let mut rep = PolicyReport::new(policy.name());
     let step_hist = crate::obs::global().histogram("control.step_s");
+    let replan_hist = crate::obs::global().histogram("control.replan_s");
 
     for step in &trace.steps {
         let _step_span = crate::obs::Span::start(step_hist.clone());
@@ -371,40 +394,36 @@ fn run_policy_from(
             match ev {
                 ClusterEvent::Leave { machine } => {
                     let known = world.machine_index(machine).is_some();
-                    if !known || world.cluster.n_machines() == 1 {
+                    if !known || world.cluster().n_machines() == 1 {
                         continue;
                     }
                     if policy == Policy::Static {
-                        world.remove_machine(machine);
+                        world.remove_machine(machine)?;
                     } else {
                         // dead machine: forced breach through the
                         // failure-rescheduling path — an excluded-machine
                         // request on the current problem, ignoring
                         // cooldown; the machine leaves the tracked world
                         // right after.
-                        if problem_version != world.version {
-                            rebuilt = Some(Problem::new(top, &world.cluster, &world.profiles)?);
-                            problem_version = world.version;
-                        }
-                        let problem = rebuilt.as_ref().unwrap_or(day_zero);
-                        let replan_started = std::time::Instant::now();
-                        let r = reschedule::after_failure(problem, &cur, machine, sched)?;
+                        let r = {
+                            let _replan_span = crate::obs::Span::start(replan_hist.clone());
+                            reschedule::after_failure(world.problem(), &cur, machine, sched)?
+                        };
                         if crate::obs::enabled() {
                             crate::obs::global().journal().record(crate::obs::Event::Replanned {
                                 policy: policy.name().into(),
                                 step: step.t as usize,
                                 cause: "machine-leave".into(),
-                                latency_ms: replan_started.elapsed().as_secs_f64() * 1e3,
                             });
                         }
                         let new_np =
-                            NamedPlacement::capture(&r.schedule.placement, &world.cluster);
+                            NamedPlacement::capture(&r.schedule.placement, world.cluster());
                         migrated_step += migrated_tasks(&np, &new_np);
                         np = new_np;
                         np_epoch += 1;
                         cur = r.schedule;
-                        world.remove_machine(machine);
-                        scheduled_version = world.version;
+                        world.remove_machine(machine)?;
+                        scheduled_version = world.version();
                         rep.reschedules += 1;
                         resched_step = true;
                         cooldown = cfg.cooldown_steps;
@@ -416,16 +435,13 @@ fn run_policy_from(
             }
         }
 
-        // 2. refresh the cached problem if the world changed
-        if problem_version != world.version {
-            rebuilt = Some(Problem::new(top, &world.cluster, &world.profiles)?);
-            problem_version = world.version;
-        }
-        let problem = rebuilt.as_ref().unwrap_or(day_zero);
-        let mut capacity = cap_cache.get(&np, problem, problem_version, np_epoch)?;
+        // 2. the world's problem is always current (delta-patched in
+        // step 1); read this step's capacity off the memo
+        let problem = world.problem();
+        let mut capacity = cap_cache.get(&np, problem, world.version(), np_epoch)?;
 
         // 3. breach detection / scheduling decision
-        let dirty = scheduled_version != world.version;
+        let dirty = scheduled_version != world.version();
         let decide: Option<&'static str> = match policy {
             Policy::Static => None,
             Policy::Oracle => Some("oracle"),
@@ -459,7 +475,7 @@ fn run_policy_from(
                     match &cfg.event_probe {
                         None => None,
                         Some(probe) => {
-                            let key = (world.version, offered.to_bits());
+                            let key = (world.version(), offered.to_bits());
                             let verdict = match probe_memo {
                                 Some((v, o, verdict)) if (v, o) == key => verdict,
                                 _ => {
@@ -485,28 +501,30 @@ fn run_policy_from(
         if let Some(cause) = decide {
             rep.reschedules += 1;
             if dirty {
-                let replan_started = std::time::Instant::now();
                 // warm-start from the running placement projected onto the
                 // current cluster, so budgeted search policies refine the
                 // incumbent instead of starting cold
                 let req = ScheduleRequest::max_throughput()
-                    .with_warm_start(np.project(problem.cluster()));
-                let s = sched.schedule(problem, &req)?;
+                    .with_warm_start(np.project(problem.cluster()))
+                    .with_budget(cfg.replan_budget);
+                let s = {
+                    let _replan_span = crate::obs::Span::start(replan_hist.clone());
+                    sched.schedule(problem, &req)?
+                };
                 if crate::obs::enabled() {
                     crate::obs::global().journal().record(crate::obs::Event::Replanned {
                         policy: policy.name().into(),
                         step: step.t as usize,
                         cause: cause.into(),
-                        latency_ms: replan_started.elapsed().as_secs_f64() * 1e3,
                     });
                 }
-                let new_np = NamedPlacement::capture(&s.placement, &world.cluster);
+                let new_np = NamedPlacement::capture(&s.placement, world.cluster());
                 migrated_step += migrated_tasks(&np, &new_np);
                 np = new_np;
                 np_epoch += 1;
                 cur = s;
-                scheduled_version = world.version;
-                capacity = cap_cache.get(&np, problem, problem_version, np_epoch)?;
+                scheduled_version = world.version();
+                capacity = cap_cache.get(&np, problem, world.version(), np_epoch)?;
                 cooldown = cfg.cooldown_steps;
                 resched_step = true;
             }
@@ -564,17 +582,8 @@ pub fn run_trace(
         policies: Vec::with_capacity(policies.len()),
     };
     for &p in policies {
-        out.policies.push(run_policy_from(
-            top,
-            cluster,
-            profiles,
-            trace,
-            p,
-            cfg,
-            sched.as_ref(),
-            &problem,
-            initial.clone(),
-        )?);
+        let initial = initial.clone();
+        out.policies.push(run_policy_from(trace, p, cfg, sched.as_ref(), &problem, initial)?);
     }
     Ok(out)
 }

@@ -20,6 +20,11 @@
 //!   (machine join) at the midpoint.
 //! * `bursty`   — ~0.55× baseline with seeded flash crowds (short
 //!   windows at 1.05×–1.45×) plus one machine leave/rejoin churn pair.
+//! * `fleet-storm` — flat 1.0× rate (the fleet runner overlays its own
+//!   per-tenant profiles) carrying the cluster-event backbone of a
+//!   fleet run: correlated rack outages (every machine whose name
+//!   shares a rack prefix leaves at once and the rack returns later)
+//!   and one flapping machine cycling leave/rejoin.
 
 use crate::cluster::Cluster;
 use crate::topology::Topology;
@@ -73,7 +78,7 @@ impl Trace {
 }
 
 /// Trace names accepted by [`by_name`] (CLI error surfaces).
-pub const NAMES: [&str; 4] = ["constant", "diurnal", "ramp", "bursty"];
+pub const NAMES: [&str; 5] = ["constant", "diurnal", "ramp", "bursty", "fleet-storm"];
 
 /// Look a trace generator up by name.
 pub fn by_name(
@@ -88,6 +93,7 @@ pub fn by_name(
         "diurnal" => Some(diurnal(top, cluster, steps, seed)),
         "ramp" => Some(ramp(cluster, steps, seed)),
         "bursty" => Some(bursty(cluster, steps, seed)),
+        "fleet-storm" => Some(fleet_storm(cluster, steps, seed)),
         _ => None,
     }
 }
@@ -229,6 +235,95 @@ pub fn bursty(cluster: &Cluster, steps: usize, seed: u64) -> Trace {
     Trace { name: "bursty".into(), seed, steps: out }
 }
 
+/// The cluster-event backbone of a fleet run: correlated rack outages
+/// and a flapping machine, over a flat 1.0× offered rate (the fleet
+/// runner overlays its own per-tenant rate profiles — this trace only
+/// models the world changing).
+///
+/// Racks are machine-name prefixes (the part before the final `-`, as
+/// [`crate::cluster::scenarios::fleet`] names them).  Each storm takes
+/// a whole rack down at once — every member leaves in one step — and
+/// the rack returns a seeded number of steps later.  Rack 0 never
+/// storms (the cluster is never emptied) but donates its last machine
+/// as the flapper, which cycles leave/rejoin through the second half
+/// of the trace.  Storms never overlap on the same rack, so every
+/// leave addresses a live machine and every join a missing one.
+pub fn fleet_storm(cluster: &Cluster, steps: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let n = steps.max(20);
+
+    // racks in first-seen order: (prefix, members with their type names)
+    let rack_of = |name: &str| -> String {
+        name.rsplit_once('-').map_or(name, |(r, _)| r).to_string()
+    };
+    let mut racks: Vec<(String, Vec<(String, String)>)> = Vec::new();
+    for m in &cluster.machines {
+        let rack = rack_of(&m.name);
+        let ty = cluster.types[m.type_id].name.clone();
+        match racks.iter_mut().find(|(r, _)| *r == rack) {
+            Some((_, members)) => members.push((m.name.clone(), ty)),
+            None => racks.push((rack, vec![(m.name.clone(), ty)])),
+        }
+    }
+
+    let mut events: Vec<Vec<ClusterEvent>> = vec![Vec::new(); n];
+
+    // correlated rack outages (rack 0 exempt, no overlap per rack)
+    if racks.len() > 1 {
+        let n_storms = (n / 40).max(1);
+        let mut down_until = vec![0usize; racks.len()];
+        for _ in 0..n_storms {
+            let rack = rng.range(1, racks.len() - 1);
+            let len = rng.range(n / 20 + 2, n / 10 + 4);
+            let latest = n.saturating_sub(len + 2).max(n / 10 + 1);
+            let start = rng.range(n / 10, latest);
+            if start < down_until[rack] || start + len >= n {
+                continue; // rack still out, or the outage would never heal
+            }
+            down_until[rack] = start + len + 1;
+            for (name, _) in &racks[rack].1 {
+                events[start].push(ClusterEvent::Leave { machine: name.clone() });
+            }
+            for (name, ty) in &racks[rack].1 {
+                events[start + len].push(ClusterEvent::Join {
+                    machine: name.clone(),
+                    machine_type: ty.clone(),
+                });
+            }
+        }
+    }
+
+    // one flapping machine: rapid leave/rejoin cycles late in the trace
+    if cluster.machines.len() > 1 {
+        let (flapper, flapper_type) = racks[0].1.last().cloned().unwrap_or_else(|| {
+            (
+                cluster.machines[0].name.clone(),
+                cluster.types[cluster.machines[0].type_id].name.clone(),
+            )
+        });
+        let period = (n / 30).max(4);
+        let mut at = 2 * n / 5;
+        for _ in 0..4 {
+            if at + 2 >= n {
+                break;
+            }
+            events[at].push(ClusterEvent::Leave { machine: flapper.clone() });
+            events[at + 2].push(ClusterEvent::Join {
+                machine: flapper.clone(),
+                machine_type: flapper_type.clone(),
+            });
+            at += period;
+        }
+    }
+
+    let steps = events
+        .into_iter()
+        .enumerate()
+        .map(|(i, events)| TraceStep { t: i as f64, offered: 1.0, events })
+        .collect();
+    Trace { name: "fleet-storm".into(), seed, steps }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,6 +414,40 @@ mod tests {
                     .flat_map(|s| &s.events)
                     .any(|e| matches!(e, ClusterEvent::Leave { .. })),
                 "seed {seed}: no churn"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_storm_outages_are_correlated_and_heal() {
+        let (cluster, _) = crate::cluster::scenarios::fleet(200, 20);
+        for seed in [0, 7, 13, 42] {
+            let t = fleet_storm(&cluster, 160, seed);
+            let mut down = std::collections::BTreeSet::new();
+            for s in &t.steps {
+                for e in &s.events {
+                    match e {
+                        ClusterEvent::Leave { machine } => {
+                            assert!(down.insert(machine.clone()), "seed {seed}: double leave");
+                        }
+                        ClusterEvent::Join { machine, .. } => {
+                            assert!(down.remove(machine), "seed {seed}: join of live machine");
+                        }
+                        ClusterEvent::Drift { .. } => {}
+                    }
+                }
+            }
+            assert!(down.is_empty(), "seed {seed}: outages never healed: {down:?}");
+            // at least one whole-rack storm (all 20 members in one step)
+            assert!(
+                t.steps.iter().any(|s| {
+                    s.events
+                        .iter()
+                        .filter(|e| matches!(e, ClusterEvent::Leave { .. }))
+                        .count()
+                        >= 20
+                }),
+                "seed {seed}: no correlated rack outage"
             );
         }
     }

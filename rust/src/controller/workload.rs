@@ -21,19 +21,30 @@
 //!   next joint re-plan.
 //! * **Per-tenant breach detection** — a tenant whose offered rate
 //!   exceeds its certified rate is breached.  Re-planning is only
-//!   useful when the active set changed since the last joint schedule
-//!   (the scheduler is deterministic), so breaches force a joint
-//!   re-plan of the active set when it is **stale** (an admission or
-//!   drain happened), overriding cooldown; the utilization band
-//!   (`Σ offered / Σ certified` outside `[band_lo, band_hi]`) triggers
-//!   the same re-plan cooldown-gated.
+//!   useful when the active set changed since the last plan (the
+//!   scheduler is deterministic), so breaches force a re-plan when the
+//!   set is **stale** (an admission or drain happened), overriding
+//!   cooldown; the utilization band (`Σ offered / Σ certified` outside
+//!   `[band_lo, band_hi]`) triggers the same re-plan cooldown-gated.
 //!
-//! Joint re-plans go through [`WorkloadProblem::subset`] +
-//! [`WorkloadProblem::schedule_joint`] — every tenant is re-certified
-//! at its weighted share of the new scale — and charge migration
-//! downtime per tenant exactly like the single-tenant loop: newly
-//! started instances cost `migration_cost` virtual seconds of spout
-//! downtime, capped at the step length.
+//! Re-plans are **dirty-tenant residual re-plans**: only the tenants
+//! the event actually touched (individually breached or individually
+//! outside the band) are re-planned, each through the same
+//! [`WorkloadProblem::admit`] path admissions take — scheduled against
+//! the residual capacity every *other* resident leaves, warm-started
+//! from its incumbent placement, and bounded by the controller's
+//! [`replan_budget`](super::ControllerConfig::replan_budget).  Clean
+//! residents are never moved, so per-step decision cost scales with
+//! what changed, not with fleet size.  A per-step migration budget
+//! ([`max_moves_per_step`](super::ControllerConfig::max_moves_per_step))
+//! caps how many instances re-plans may start in one step: a re-plan
+//! that would exceed the remaining budget is deferred (the tenant keeps
+//! its incumbent and retries next step).  Moves charge migration
+//! downtime exactly like the single-tenant loop: newly started
+//! instances cost `migration_cost` virtual seconds of spout downtime,
+//! capped at the step length.  Only day zero still co-plans jointly —
+//! everyone present at t=0 is certified at its weighted share via
+//! [`WorkloadProblem::schedule_joint`].
 
 use crate::predict::Placement;
 use crate::scheduler::workload::{TenantSchedule, WorkloadProblem};
@@ -145,7 +156,8 @@ pub struct WorkloadControlReport {
     pub trace: String,
     pub seed: u64,
     pub steps: usize,
-    /// Joint re-plans of the active set.
+    /// Re-plan steps after day zero (each step re-plans only the dirty
+    /// tenants, against the residual the clean residents leave).
     pub reschedules: usize,
     pub admissions: usize,
     pub drains: usize,
@@ -183,7 +195,7 @@ impl WorkloadControlReport {
             ));
         }
         out.push_str(&format!(
-            "joint re-plans: {}   admissions: {}   drains: {}\n",
+            "re-plans: {}   admissions: {}   drains: {}\n",
             self.reschedules, self.admissions, self.drains
         ));
         out
@@ -203,9 +215,10 @@ impl WorkloadControlReport {
     }
 }
 
-/// Task instances newly started going `old → new` (same machine list —
-/// the cluster is fixed here).
-fn started_tasks(old: &Placement, new: &Placement) -> usize {
+/// Task instances newly started going `old → new` (same machine list).
+/// Shared with the fleet runner's migration accounting and the
+/// [`crate::check::validate_fleet`] budget invariant.
+pub(crate) fn started_tasks(old: &Placement, new: &Placement) -> usize {
     let mut n = 0usize;
     for (row_old, row_new) in old.x.iter().zip(&new.x) {
         for (k_old, k_new) in row_old.iter().zip(row_new) {
@@ -284,12 +297,6 @@ pub fn run_workload(
     let mut drains = 0usize;
     let mut cooldown = 0usize;
     let mut stale = false;
-    // per-active-set subproblem memo: validation, per-tenant evaluators
-    // and the merged problem only depend on the tenant set, so each set
-    // (day zero, post-admission, post-drain, ...) is built exactly once
-    // across the whole run
-    let mut subproblems: std::collections::BTreeMap<Vec<usize>, WorkloadProblem> =
-        std::collections::BTreeMap::new();
 
     // day zero: co-plan everyone present at t=0 jointly (fair weighted
     // shares); when the joint bound is exceeded the step-0 admission
@@ -298,10 +305,7 @@ pub fn run_workload(
         .filter(|&i| plans[i].admit_at == 0 && plans[i].drain_at != Some(0))
         .collect();
     if !day_zero.is_empty() {
-        let sub = match subproblems.entry(day_zero.clone()) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(e) => e.insert(wp.subset(&day_zero)?),
-        };
+        let sub = wp.subset(&day_zero)?;
         if let Ok(ws) = sub.schedule_joint(sched.as_ref(), &req) {
             for (slot, &i) in day_zero.iter().enumerate() {
                 let ts = ws.tenants[slot].clone();
@@ -389,51 +393,79 @@ pub fn run_workload(
         let load = if sum_capacity > 0.0 { sum_offered / sum_capacity } else { 0.0 };
         let band = sum_capacity > 0.0 && (load > cfg.band_hi || load < cfg.band_lo);
 
-        // 4. joint re-plan of the active set: only useful when the set
+        // 4. dirty-tenant residual re-plans: only useful when the set
         // changed since the last plan (deterministic scheduler);
-        // breaches override cooldown, the band is cooldown-gated
+        // breaches override cooldown, the band is cooldown-gated.
+        // Only the tenants the event touched — individually breached or
+        // individually out of band — are re-planned, each against the
+        // residual every other resident leaves (the admission path),
+        // warm-started from its incumbent and within the per-decision
+        // search budget; clean residents never move.
         if stale && (breach || (band && cooldown == 0)) {
-            let active: Vec<usize> =
-                (0..n).filter(|&i| schedules[i].is_some()).collect();
-            if !active.is_empty() {
-                let sub = match subproblems.entry(active.clone()) {
-                    std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-                    std::collections::hash_map::Entry::Vacant(e) => e.insert(wp.subset(&active)?),
-                };
-                let replan_started = std::time::Instant::now();
-                match sub.schedule_joint(sched.as_ref(), &req) {
-                    Ok(ws) => {
-                        if crate::obs::enabled() {
-                            let journal = crate::obs::global().journal();
-                            journal.record(crate::obs::Event::Replanned {
-                                policy: "workload".into(),
-                                step,
-                                cause: if breach { "infeasible".into() } else { "band".into() },
-                                latency_ms: replan_started.elapsed().as_secs_f64() * 1e3,
-                            });
+            let dirty: Vec<usize> = (0..n)
+                .filter(|&i| {
+                    let Some(ts) = &schedules[i] else { return false };
+                    let cap = ts.schedule.rate;
+                    offered[i] > cap * (1.0 + 1e-9)
+                        || (cap > 0.0
+                            && (offered[i] / cap < cfg.band_lo
+                                || offered[i] / cap > cfg.band_hi))
+                })
+                .collect();
+            if !dirty.is_empty() {
+                let replan_hist = crate::obs::global().histogram("control.replan_s");
+                let _replan_span = crate::obs::Span::start(replan_hist);
+                let mut moves_left = cfg.max_moves_per_step;
+                let mut deferred = false;
+                let mut any = false;
+                for &i in &dirty {
+                    let Some(old) = schedules[i].clone() else { continue };
+                    let residents: Vec<TenantSchedule> = schedules
+                        .iter()
+                        .enumerate()
+                        .filter(|&(j, _)| j != i)
+                        .filter_map(|(_, s)| s.clone())
+                        .collect();
+                    let tenant_req = req
+                        .clone()
+                        .with_warm_start(old.schedule.placement.clone())
+                        .with_budget(cfg.replan_budget);
+                    // a residual the incumbent cannot be improved in
+                    // (admission denied) keeps the incumbent untouched
+                    if let Ok(ts) = wp.admit(&residents, i, sched.as_ref(), &tenant_req) {
+                        let moved =
+                            started_tasks(&old.schedule.placement, &ts.schedule.placement);
+                        if moved > moves_left {
+                            // migration budget exhausted: keep the
+                            // incumbent, retry next step
+                            deferred = true;
+                            continue;
                         }
-                        for (slot, &i) in active.iter().enumerate() {
-                            let new = &ws.tenants[slot];
-                            let old = schedules[i].as_ref().expect("active tenant scheduled");
-                            let moved =
-                                started_tasks(&old.schedule.placement, &new.schedule.placement);
-                            if moved > 0 {
-                                migrated[i] += moved;
-                                touched[i] = true;
-                            }
-                            schedules[i] = Some(new.clone());
+                        moves_left -= moved;
+                        if moved > 0 {
+                            migrated[i] += moved;
+                            touched[i] = true;
                         }
-                        reschedules += 1;
-                        replanned = true;
-                        stale = false;
-                        cooldown = cfg.cooldown_steps;
-                    }
-                    Err(_) => {
-                        // joint bound exceeded (oversized active set):
-                        // keep the incremental placements as they are
-                        stale = false;
+                        schedules[i] = Some(ts);
+                        any = true;
                     }
                 }
+                if any {
+                    if crate::obs::enabled() {
+                        let journal = crate::obs::global().journal();
+                        journal.record(crate::obs::Event::Replanned {
+                            policy: "workload".into(),
+                            step,
+                            cause: if breach { "infeasible".into() } else { "band".into() },
+                        });
+                    }
+                    reschedules += 1;
+                    replanned = true;
+                    cooldown = cfg.cooldown_steps;
+                }
+                // budget-deferred tenants keep the set stale so the
+                // next step (fresh migration budget) retries them
+                stale = deferred;
             } else {
                 stale = false;
             }
@@ -608,6 +640,24 @@ mod tests {
     }
 
     #[test]
+    fn zero_migration_budget_never_moves_tasks() {
+        let wp = duo(true);
+        let plans = [
+            TenantPlan::default(),
+            TenantPlan { admit_at: 0, drain_at: Some(15) },
+        ];
+        let mut c = cfg();
+        c.cooldown_steps = 2;
+        c.max_moves_per_step = 0;
+        let rep = run_workload(&wp, &plans, "ramp", 120, 11, &c).unwrap();
+        // re-plans that would start instances are deferred forever under
+        // a zero budget: nothing migrates after the day-zero co-plan
+        for t in &rep.tenants {
+            assert_eq!(t.tasks_migrated, 0, "{} moved tasks past a zero budget", t.name);
+        }
+    }
+
+    #[test]
     fn deterministic_by_seed() {
         let wp = duo(true);
         let plans = [
@@ -630,6 +680,6 @@ mod tests {
         let text = rep.render();
         assert!(text.contains("search"), "{text}");
         assert!(text.contains("ads"), "{text}");
-        assert!(text.contains("joint re-plans"), "{text}");
+        assert!(text.contains("re-plans"), "{text}");
     }
 }

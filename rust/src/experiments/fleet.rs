@@ -1,0 +1,246 @@
+//! Fleet-scale control-plane experiment: decision latency and schedule
+//! quality of the dirty-tenant incremental re-planner vs the
+//! full-re-plan baseline, at 500–5000 machines and 50–200 tenants.
+//!
+//! Each configuration replays the same storm trace
+//! ([`crate::controller::traces::fleet_storm`] — correlated rack
+//! outages, a flapping machine, trace-driven autoscaling) under both
+//! [`FleetMode`]s and reports per-step decision-latency percentiles
+//! (milliseconds, from the run-local step histogram) plus the weighted
+//! delivered-throughput gap.  The two headlines the CI pipeline greps,
+//! gated on the 1000-machine / 100-tenant configuration:
+//!
+//! * `p99 step latency < 10ms at 1000 machines : PASS`
+//! * `incremental within 5% of full re-plan throughput : PASS`
+//!
+//! Latency percentiles are wall-clock and vary run to run; everything
+//! else in the table is deterministic in the seed.  Sub-1000-machine
+//! configurations additionally run with per-step invariant auditing
+//! ([`crate::check::validate_fleet`]) enabled; auditing is kept off the
+//! gated configuration because the placement snapshots land inside the
+//! measured step.
+
+use crate::controller::fleet::{quality_gap_pct, run_fleet, FleetMode, FleetReport, FleetSpec};
+use crate::controller::ControllerConfig;
+use crate::scheduler::SearchBudget;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+use super::{f1, f2, ExperimentResult};
+
+/// Headline latency budget, milliseconds.
+const P99_BUDGET_MS: f64 = 10.0;
+/// Headline quality budget: max weighted-throughput loss vs full
+/// re-plans, percent.
+const GAP_BUDGET_PCT: f64 = 5.0;
+/// The configuration both headline gates are evaluated on.
+const GATE_MACHINES: usize = 1000;
+
+struct Case {
+    machines: usize,
+    tenants: usize,
+    steps: usize,
+    /// Run the full-re-plan comparator too (skipped for the largest
+    /// fleets, where from-scratch-every-step is the cost being avoided).
+    compare: bool,
+    /// Audit every step with the fleet invariants.
+    verify: bool,
+}
+
+fn cases(fast: bool) -> Vec<Case> {
+    let steps = if fast { 40 } else { 120 };
+    let mut out = vec![
+        Case { machines: 500, tenants: 50, steps, compare: true, verify: true },
+        Case { machines: GATE_MACHINES, tenants: 100, steps, compare: true, verify: false },
+    ];
+    if !fast {
+        out.push(Case { machines: 2000, tenants: 150, steps: 60, compare: false, verify: false });
+        out.push(Case { machines: 5000, tenants: 200, steps: 30, compare: false, verify: false });
+    }
+    out
+}
+
+/// Controller tuning for the incremental mode: a deterministic search
+/// budget per re-plan and a per-step migration cap (the full-re-plan
+/// comparator ignores both by construction).
+fn fleet_cfg() -> ControllerConfig {
+    ControllerConfig {
+        replan_budget: SearchBudget::unlimited()
+            .with_max_candidates(512)
+            .with_max_virtual_ops(2_000_000),
+        max_moves_per_step: 2000,
+        ..Default::default()
+    }
+}
+
+fn report_row(c: &Case, r: &FleetReport, gap: Option<f64>) -> Vec<String> {
+    vec![
+        c.machines.to_string(),
+        c.tenants.to_string(),
+        c.steps.to_string(),
+        r.mode.to_string(),
+        r.events.to_string(),
+        r.replans.to_string(),
+        r.deferred.to_string(),
+        r.tasks_moved.to_string(),
+        format!("{:.3}", r.p50_ms),
+        format!("{:.3}", r.p95_ms),
+        format!("{:.3}", r.p99_ms),
+        f1(r.delivered_pct()),
+        gap.map_or_else(|| "-".into(), f2),
+    ]
+}
+
+pub fn run(fast: bool) -> Result<ExperimentResult> {
+    run_with_json(fast).map(|(r, _)| r)
+}
+
+/// Run the experiment and also return the machine-readable JSON the CLI
+/// writes to `BENCH_fleet.json` (uploaded by the CI experiments job).
+pub fn run_with_json(fast: bool) -> Result<(ExperimentResult, Value)> {
+    run_cases(&cases(fast), fast)
+}
+
+fn run_cases(cases: &[Case], fast: bool) -> Result<(ExperimentResult, Value)> {
+    let mut out = ExperimentResult::new(
+        "fleet",
+        "fleet-scale incremental control plane: dirty-tenant re-plans vs full re-plans \
+         under failure storms (hetero policy)",
+        &[
+            "machines", "tenants", "steps", "mode", "events", "re-plans", "deferred", "moved",
+            "p50 ms", "p95 ms", "p99 ms", "deliv %", "gap %",
+        ],
+    );
+    let cfg = fleet_cfg();
+
+    let mut gate_p99: Option<f64> = None;
+    let mut gate_gap: Option<f64> = None;
+    let mut violations = 0usize;
+    let mut any_verified = false;
+    let mut case_rows = Vec::new();
+    for c in cases {
+        let spec = FleetSpec {
+            steps: c.steps,
+            verify: c.verify,
+            ..FleetSpec::new(c.machines, c.tenants)
+        };
+        let inc = run_fleet(&spec, &cfg, FleetMode::Incremental)?;
+        let full = if c.compare {
+            Some(run_fleet(&spec, &cfg, FleetMode::FullReplan)?)
+        } else {
+            None
+        };
+        let gap = full.as_ref().map(|f| quality_gap_pct(&inc, f));
+        if c.verify {
+            any_verified = true;
+            violations += inc.violations + full.as_ref().map_or(0, |f| f.violations);
+        }
+        if c.machines == GATE_MACHINES {
+            gate_p99 = Some(inc.p99_ms);
+            if let Some(g) = gap {
+                gate_gap = Some(g);
+            }
+        }
+        out.row(report_row(c, &inc, gap));
+        if let Some(f) = &full {
+            out.row(report_row(c, f, gap));
+        }
+        case_rows.push(json::obj(vec![
+            ("machines", json::num(c.machines as f64)),
+            ("tenants", json::num(c.tenants as f64)),
+            ("steps", json::num(c.steps as f64)),
+            ("incremental", inc.to_json()),
+            ("full_replan", full.as_ref().map_or(Value::Null, |f| f.to_json())),
+            ("gap_pct", gap.map_or(Value::Null, json::num)),
+        ]));
+    }
+
+    let p99_ok = gate_p99.is_some_and(|p| p < P99_BUDGET_MS);
+    let gap_ok = gate_gap.is_some_and(|g| g <= GAP_BUDGET_PCT);
+    if let Some(p99) = gate_p99 {
+        out.note(format!(
+            "p99 step latency < 10ms at 1000 machines : {} ({p99:.3} ms)",
+            if p99_ok { "PASS" } else { "FAIL" }
+        ));
+    }
+    if let Some(gap) = gate_gap {
+        out.note(format!(
+            "incremental within 5% of full re-plan throughput : {} (gap {gap:+.2}%)",
+            if gap_ok { "PASS" } else { "FAIL" }
+        ));
+    }
+    if any_verified {
+        out.note(format!(
+            "fleet invariants clean on audited configs : {}",
+            if violations == 0 { "PASS" } else { "FAIL" }
+        ));
+    }
+    out.note(
+        "gap % = weighted delivered-throughput loss vs re-planning every tenant from \
+         scratch every step (negative: incremental wins by avoiding migration downtime); \
+         latency percentiles are wall-clock per-step decision times, all other columns \
+         are deterministic in the seed",
+    );
+
+    let v = json::obj(vec![
+        ("id", json::s("fleet")),
+        ("fast", Value::Bool(fast)),
+        ("policy", json::s("hetero")),
+        ("p99_budget_ms", json::num(P99_BUDGET_MS)),
+        ("gap_budget_pct", json::num(GAP_BUDGET_PCT)),
+        ("p99_under_budget", Value::Bool(p99_ok)),
+        ("gap_under_budget", Value::Bool(gap_ok)),
+        ("violations", json::num(violations as f64)),
+        ("configs", json::arr(case_rows)),
+    ]);
+    Ok((out, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests run a miniature fleet (debug builds are ~50x slower
+    // than the release bench); the real configurations run through
+    // `hstorm bench fleet` in CI.
+    fn tiny() -> Vec<Case> {
+        vec![Case { machines: 24, tenants: 5, steps: 25, compare: true, verify: true }]
+    }
+
+    #[test]
+    fn rows_cover_both_modes_and_json_carries_reports() {
+        let (r, v) = run_cases(&tiny(), true).unwrap();
+        assert_eq!(r.rows.len(), 2, "incremental + full-replan rows");
+        for row in &r.rows {
+            assert_eq!(row.len(), 13);
+        }
+        let configs = v.get("configs").unwrap().as_arr().unwrap();
+        assert_eq!(configs.len(), 1);
+        let inc = configs[0].get("incremental").unwrap();
+        assert_eq!(inc.str_field("mode").unwrap(), "incremental");
+        assert!(configs[0].get("gap_pct").unwrap().as_f64().is_some());
+        assert_eq!(v.num_field("violations").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn audited_tiny_fleet_is_clean_and_notes_say_so() {
+        let (r, _) = run_cases(&tiny(), true).unwrap();
+        assert!(r.notes.iter().any(|n| n.starts_with("fleet invariants clean")), "{:?}", r.notes);
+        assert!(
+            r.notes.iter().any(|n| n.contains(": PASS")),
+            "audited run must pass: {:?}",
+            r.notes
+        );
+    }
+
+    #[test]
+    fn gate_notes_only_appear_for_the_gate_config() {
+        let (r, v) = run_cases(&tiny(), true).unwrap();
+        assert!(
+            !r.notes.iter().any(|n| n.contains("p99 step latency")),
+            "no 1000-machine case, no latency gate: {:?}",
+            r.notes
+        );
+        assert_eq!(v.get("p99_under_budget").unwrap().as_bool(), Some(false));
+    }
+}

@@ -21,13 +21,16 @@
 //! | sched-perf | search-engine perf | [`sched_perf::run`]|
 //! | tenancy  | multi-tenant modes  | [`tenancy::run`]   |
 //! | dataplane | executed throughput | [`dataplane::run`] |
+//! | fleet    | fleet control plane | [`fleet::run`]     |
 //!
 //! `fast: true` shrinks engine windows/design spaces so the whole suite
 //! runs in seconds (used by tests); benches use `fast: false`.  Running
-//! `sched-perf` / `tenancy` through the CLI additionally writes
-//! `BENCH_sched.json` / `BENCH_tenancy.json` (machine-readable
-//! candidates/s + wall time per scenario, respectively
-//! joint-vs-incremental-vs-isolated numbers per tenant mix).
+//! `sched-perf` / `tenancy` / `fleet` through the CLI additionally
+//! writes `BENCH_sched.json` / `BENCH_tenancy.json` / `BENCH_fleet.json`
+//! (machine-readable candidates/s + wall time per scenario,
+//! joint-vs-incremental-vs-isolated numbers per tenant mix, and
+//! per-step decision-latency percentiles + quality gap per fleet
+//! configuration, respectively).
 
 pub mod ablation;
 pub mod accuracy;
@@ -40,6 +43,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod fleet;
 pub mod sched_perf;
 pub mod tenancy;
 

@@ -9,12 +9,13 @@
 //!                 [--dataplane ring|legacy] [--batch 256] [--pjrt-compute]
 //! hstorm simulate --topology linear --scenario 2 [--mode analytic|event]
 //! hstorm control  --trace diurnal --scenario 2 [--policy reactive] [--steps 600]
+//! hstorm control  --fleet [--machines 1000] [--tenants 100] [--mode both]
 //! hstorm explain  --topology linear [--scheduler hetero] [--trace diurnal]
 //! hstorm metrics  [--topology linear] [--format prom|json]
 //! hstorm check    [--topology linear|all] [--scheduler hetero|all] [--workload w.json]
 //! hstorm profile  [--task highCompute] [--machine pentium]
 //! hstorm bench    <fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
-//!                  |sched-perf|tenancy|dataplane|all>  [--fast] [--json out.json]
+//!                  |sched-perf|tenancy|dataplane|fleet|all>  [--fast] [--json out.json]
 //! hstorm config   --config exp.json            # run a JSON experiment
 //! ```
 
@@ -39,10 +40,10 @@ const VALUE_FLAGS: &[&str] = &[
     "config", "max-instances", "time-scale", "trace", "steps", "seed", "policy", "cooldown",
     "objective", "exclude", "headroom", "mode", "horizon", "service", "probe", "workload",
     "tenancy", "metrics-out", "format", "budget", "budget-vops", "target-gap", "beam-width",
-    "param", "dataplane", "batch",
+    "param", "dataplane", "batch", "machines", "tenants", "rack-size", "moves",
 ];
 const BOOL_FLAGS: &[&str] =
-    &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies"];
+    &["pjrt", "pjrt-compute", "fast", "paper-cluster", "help", "list-policies", "fleet", "verify"];
 
 const USAGE: &str = "hstorm — heterogeneity-aware stream scheduling (Nasiri et al. 2020 repro)
 
@@ -62,6 +63,9 @@ commands:
             [--policy static|reactive|oracle|all] [--scheduler NAME]
             [--probe analytic|event] [--steps 600] [--seed 42] [--cooldown 10]
             [--json out.json] | --workload w.json [--trace ...] [--steps N]
+            | --fleet [--machines 1000] [--tenants 100] [--steps 120]
+            [--seed 42] [--rack-size 20] [--moves 2000] [--verify]
+            [--mode incremental|full|both] [--json out.json]
   explain   [--topology T] [--scenario 1..3] [--scheduler NAME]
             [--objective ...] [--exclude ...] [--json out.json]
             | --trace constant|diurnal|ramp|bursty [--steps N] [--seed N]
@@ -71,7 +75,7 @@ commands:
             | --workload w.json [--tenancy joint|incremental|isolated|all]
   profile   [--task highCompute] [--machine pentium]
   bench     fig3|fig6|fig7|fig8|fig9|fig10|table5|space|ablation|elastic|accuracy
-            |sched-perf|tenancy|dataplane|all  [--fast] [--json out.json]
+            |sched-perf|tenancy|dataplane|fleet|all  [--fast] [--json out.json]
             (accuracy also takes --mode simulate|execute)
   config    --config exp.json
 
@@ -125,6 +129,22 @@ clairvoyant oracle keep up with rate swings, machine churn and profile
 drift; --probe event feeds breach detection from short event-sim probes
 (backpressure verdicts) instead of the closed form; see the controller
 module docs for breach/cooldown semantics.
+
+control --fleet runs the fleet-scale control plane instead: a synthetic
+striped fleet (--machines, racks of --rack-size) serving --tenants
+multi-tenant topologies through a correlated failure-storm trace with
+trace-driven autoscaling.  --mode incremental re-plans only dirty
+tenants (breach/band triggers, copy-on-write world patches, warm
+starts, at most --moves task moves per step); --mode full re-plans
+every tenant from scratch each step; --mode both runs the two on the
+identical event sequence and prints the weighted delivered-throughput
+gap.  --verify audits every step against the fleet invariants (clean
+tenants never move, migration budget respected) — it snapshots
+placements inside the measured step, so leave it off when reading the
+latency percentiles.  bench fleet sweeps 500-5000 machines, writes
+BENCH_fleet.json, and gates two headlines on the 1000-machine/
+100-tenant configuration: p99 step decision latency < 10ms and
+incremental delivered throughput within 5% of always-full re-plans.
 
 run executes the schedule on the wall-clock engine: one thread per
 machine, tuples batched through bounded lock-free ring queues with
@@ -360,7 +380,13 @@ fn request_from_args(args: &Args) -> Result<ScheduleRequest> {
     }
     // the same budget flags also ride the request, where they override
     // any policy-level default for every search policy
-    let mut budget = SearchBudget::unlimited();
+    let budget = budget_from_args(args, SearchBudget::unlimited())?;
+    Ok(ScheduleRequest::new(objective).with_constraints(constraints).with_budget(budget))
+}
+
+/// `--budget`/`--budget-vops`/`--target-gap` layered over a base budget.
+fn budget_from_args(args: &Args, base: SearchBudget) -> Result<SearchBudget> {
+    let mut budget = base;
     if let Some(v) = args.get("budget") {
         budget = budget.with_max_candidates(v.parse().map_err(|_| {
             Error::Config(format!("--budget: '{v}' is not an integer candidate count"))
@@ -376,7 +402,7 @@ fn request_from_args(args: &Args) -> Result<ScheduleRequest> {
             Error::Config(format!("--target-gap: '{v}' is not a number (e.g. 0.05 for 5%)"))
         })?);
     }
-    Ok(ScheduleRequest::new(objective).with_constraints(constraints).with_budget(budget))
+    Ok(budget)
 }
 
 /// Attach the PJRT AOT scorer to a problem (`--pjrt`).
@@ -724,7 +750,69 @@ fn cmd_control_workload(args: &Args, path: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fleet-scale control plane: a synthetic striped fleet under the
+/// failure-storm trace, dirty-tenant incremental re-plans vs the
+/// full-re-plan comparator (see the controller::fleet module docs).
+fn cmd_control_fleet(args: &Args) -> Result<()> {
+    use hstorm::controller::fleet::{quality_gap_pct, run_fleet, FleetMode, FleetSpec};
+    let spec = FleetSpec {
+        steps: args.get_usize("steps", 120)?,
+        seed: args.get_usize("seed", 42)? as u64,
+        rack_size: args.get_usize("rack-size", 20)?,
+        verify: args.has("verify"),
+        ..FleetSpec::new(args.get_usize("machines", 1000)?, args.get_usize("tenants", 100)?)
+    };
+    let cfg = ControllerConfig {
+        cooldown_steps: args.get_usize("cooldown", ControllerConfig::default().cooldown_steps)?,
+        scheduler_policy: args.get_or("scheduler", "hetero").to_string(),
+        scheduler_params: params_from_args(args)?,
+        // same per-re-plan tuning as `bench fleet`, overridable via the
+        // usual budget flags
+        replan_budget: budget_from_args(
+            args,
+            SearchBudget::unlimited().with_max_candidates(512).with_max_virtual_ops(2_000_000),
+        )?,
+        max_moves_per_step: args.get_usize("moves", 2000)?,
+        ..Default::default()
+    };
+    let modes: Vec<FleetMode> = match args.get_or("mode", "incremental") {
+        "incremental" => vec![FleetMode::Incremental],
+        "full" => vec![FleetMode::FullReplan],
+        "both" => vec![FleetMode::Incremental, FleetMode::FullReplan],
+        other => {
+            return Err(Error::Config(format!(
+                "unknown --mode '{other}' for control --fleet (valid: incremental|full|both)"
+            )))
+        }
+    };
+    println!(
+        "fleet: {} machines (racks of {}), {} tenants, {} storm steps (seed {})...",
+        spec.machines, spec.rack_size, spec.tenants, spec.steps, spec.seed
+    );
+    let mut reports = Vec::new();
+    for mode in modes {
+        let report = run_fleet(&spec, &cfg, mode)?;
+        println!("{}", report.render());
+        reports.push(report);
+    }
+    if let [inc, full] = &reports[..] {
+        println!(
+            "quality gap vs full re-plan: {:+.2}% (positive: incremental delivers less)",
+            quality_gap_pct(inc, full)
+        );
+    }
+    if let Some(out) = args.get("json") {
+        let v = json::arr(reports.iter().map(|r| r.to_json()).collect());
+        std::fs::write(out, json::to_string_pretty(&v))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_control(args: &Args) -> Result<()> {
+    if args.has("fleet") {
+        return cmd_control_fleet(args);
+    }
     if let Some(path) = args.get("workload") {
         return cmd_control_workload(args, path);
     }
@@ -906,7 +994,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let ids: Vec<&str> = if which == "all" {
         vec![
             "fig3", "fig6", "fig7", "fig8", "fig9", "fig10", "table5", "space", "ablation",
-            "elastic", "accuracy", "sched-perf", "tenancy", "dataplane",
+            "elastic", "accuracy", "sched-perf", "tenancy", "dataplane", "fleet",
         ]
     } else {
         vec![which]
@@ -950,6 +1038,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 let (r, v) = experiments::dataplane::run_with_json(fast)?;
                 std::fs::write("BENCH_dataplane.json", json::to_string_pretty(&v))?;
                 println!("wrote BENCH_dataplane.json");
+                r
+            }
+            "fleet" => {
+                let (r, v) = experiments::fleet::run_with_json(fast)?;
+                std::fs::write("BENCH_fleet.json", json::to_string_pretty(&v))?;
+                println!("wrote BENCH_fleet.json");
                 r
             }
             other => return Err(Error::Config(format!("unknown experiment '{other}'"))),

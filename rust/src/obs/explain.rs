@@ -216,10 +216,8 @@ pub fn render_timeline(entries: &[Entry], policy: &str) -> String {
                     "  step {step:>5}  breach     offered {offered:.2} > capacity {capacity:.2}"
                 ))
             }
-            Event::Replanned { policy: p, step, cause, latency_ms } if p == policy => {
-                Some(format!(
-                    "  step {step:>5}  re-plan    cause={cause}  latency {latency_ms:.2} ms"
-                ))
+            Event::Replanned { policy: p, step, cause } if p == policy => {
+                Some(format!("  step {step:>5}  re-plan    cause={cause}"))
             }
             Event::AdmissionDenied { tenant, step, reason } if policy == "workload" => {
                 Some(format!("  step {step:>5}  denied     tenant={tenant}  {reason}"))
@@ -398,17 +396,11 @@ mod tests {
                     policy: "reactive".into(),
                     step: 12,
                     cause: "infeasible".into(),
-                    latency_ms: 3.5,
                 },
             },
             Entry {
                 seq: 2,
-                event: Event::Replanned {
-                    policy: "oracle".into(),
-                    step: 3,
-                    cause: "oracle".into(),
-                    latency_ms: 1.0,
-                },
+                event: Event::Replanned { policy: "oracle".into(), step: 3, cause: "oracle".into() },
             },
         ];
         let text = render_timeline(&entries, "reactive");

@@ -45,8 +45,11 @@ pub enum Event {
     RunnerUp { policy: String, label: String, rate: f64 },
     /// Controller: offered load exceeded certified capacity.
     BreachDetected { policy: String, step: usize, offered: f64, capacity: f64 },
-    /// Controller: a re-plan ran, with its cause and decision latency.
-    Replanned { policy: String, step: usize, cause: String, latency_ms: f64 },
+    /// Controller: a re-plan ran, with its cause.  Decision latency is
+    /// telemetry, not a decision, and lives in the `control.replan_s`
+    /// histogram — keeping it out of the journal is what makes journals
+    /// bit-identical across identical runs.
+    Replanned { policy: String, step: usize, cause: String },
     /// Workload controller: a tenant admission was rejected.
     AdmissionDenied { tenant: String, step: usize, reason: String },
     /// Workload controller: a tenant was admitted.
@@ -118,11 +121,10 @@ impl Event {
                 pairs.push(("offered", json::num(*offered)));
                 pairs.push(("capacity", json::num(*capacity)));
             }
-            Event::Replanned { policy, step, cause, latency_ms } => {
+            Event::Replanned { policy, step, cause } => {
                 pairs.push(("policy", json::s(policy)));
                 pairs.push(("step", json::num(*step as f64)));
                 pairs.push(("cause", json::s(cause)));
-                pairs.push(("latency_ms", json::num(*latency_ms)));
             }
             Event::AdmissionDenied { tenant, step, reason } => {
                 pairs.push(("tenant", json::s(tenant)));
@@ -296,12 +298,7 @@ mod tests {
 
     #[test]
     fn event_json_is_typed_and_deterministic() {
-        let e = Event::Replanned {
-            policy: "reactive".into(),
-            step: 7,
-            cause: "band".into(),
-            latency_ms: 2.25,
-        };
+        let e = Event::Replanned { policy: "reactive".into(), step: 7, cause: "band".into() };
         let v = e.to_json();
         assert_eq!(v.str_field("kind").unwrap(), "replanned");
         assert_eq!(v.str_field("cause").unwrap(), "band");

@@ -117,6 +117,125 @@ impl Evaluator {
         self.n_machines
     }
 
+    // ---- delta patches (copy-on-write world state) ----------------------
+    //
+    // The control plane applies cluster events as O(C) column patches
+    // instead of rebuilding the whole evaluator (O(C·M) expand + full
+    // re-validation).  Each patch reads the same `profiles.get(task_type,
+    // type_name)` cells as [`ProfileDb::expand`], so a patched evaluator
+    // is bit-identical to one built from scratch on the mutated inputs —
+    // the equivalence suite in `rust/tests/fleet_equivalence.rs` pins
+    // this across randomized event sequences.
+
+    /// Append the column for the machine at index `cluster.n_machines()-1`
+    /// (a machine just pushed onto `cluster`).  `O(C)`.
+    pub fn patch_machine_join(
+        &mut self,
+        top: &Topology,
+        cluster: &Cluster,
+        profiles: &ProfileDb,
+    ) -> Result<()> {
+        if cluster.n_machines() != self.n_machines + 1 {
+            return Err(Error::Cluster(format!(
+                "join patch expects exactly one new machine: cluster has {}, evaluator has {}",
+                cluster.n_machines(),
+                self.n_machines
+            )));
+        }
+        let mach = cluster.machines.last().expect("non-empty after join");
+        let type_name = &cluster.types[mach.type_id].name;
+        // read the profile cells first so a coverage gap leaves the
+        // evaluator untouched
+        let mut col = Vec::with_capacity(top.components.len());
+        for comp in &top.components {
+            let p = profiles.get(&comp.task_type, type_name)?;
+            col.push((p.e, p.met));
+        }
+        for (ci, (e, met)) in col.into_iter().enumerate() {
+            self.e_m[ci].push(e);
+            self.met_m[ci].push(met);
+        }
+        self.cap.push(mach.cap);
+        self.n_machines += 1;
+        Ok(())
+    }
+
+    /// Remove machine column `m` (the machine already removed from the
+    /// cluster).  `O(C·M)` worst case from the `Vec::remove` shifts, but
+    /// no profile lookups or re-validation.
+    pub fn patch_machine_leave(&mut self, m: usize) -> Result<()> {
+        if m >= self.n_machines {
+            return Err(Error::Cluster(format!(
+                "leave patch: machine index {m} out of range ({} machines)",
+                self.n_machines
+            )));
+        }
+        for row in &mut self.e_m {
+            row.remove(m);
+        }
+        for row in &mut self.met_m {
+            row.remove(m);
+        }
+        self.cap.remove(m);
+        self.n_machines -= 1;
+        Ok(())
+    }
+
+    /// Remove several machine columns at once (`ms` strictly increasing,
+    /// already removed from the cluster): one retain pass per row, so a
+    /// whole-rack outage costs `O(C·M)` total instead of `O(C·M)` per
+    /// removed machine.
+    pub fn patch_machine_leave_batch(&mut self, ms: &[usize]) -> Result<()> {
+        if ms.is_empty() {
+            return Ok(());
+        }
+        if ms.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::Cluster(
+                "leave batch: indices must be strictly increasing".into(),
+            ));
+        }
+        if ms[ms.len() - 1] >= self.n_machines {
+            return Err(Error::Cluster(format!(
+                "leave batch: machine index {} out of range ({} machines)",
+                ms[ms.len() - 1],
+                self.n_machines
+            )));
+        }
+        for row in self.e_m.iter_mut().chain(self.met_m.iter_mut()) {
+            drop_indices(row, ms);
+        }
+        drop_indices(&mut self.cap, ms);
+        self.n_machines -= ms.len();
+        Ok(())
+    }
+
+    /// Re-read every `(task_type, machine_type)` cell after a profile
+    /// drift mutated `profiles`.  Only the affected rows/columns are
+    /// rewritten; untouched cells keep their exact bits.
+    pub fn patch_profile_drift(
+        &mut self,
+        top: &Topology,
+        cluster: &Cluster,
+        profiles: &ProfileDb,
+        task_type: &str,
+        machine_type: &str,
+    ) -> Result<()> {
+        for (ci, comp) in top.components.iter().enumerate() {
+            if comp.task_type != task_type {
+                continue;
+            }
+            let p = profiles.get(task_type, machine_type)?;
+            for (mi, mach) in cluster.machines.iter().enumerate() {
+                if cluster.types[mach.type_id].name != machine_type {
+                    continue;
+                }
+                self.e_m[ci][mi] = p.e;
+                self.met_m[ci][mi] = p.met;
+            }
+        }
+        Ok(())
+    }
+
     /// Component input rates at topology rate `r0` (eq. 6).
     pub fn rates(&self, r0: f64) -> Vec<f64> {
         self.gains.iter().map(|g| g * r0).collect()
@@ -307,6 +426,23 @@ impl Evaluator {
     }
 }
 
+/// Drop the strictly-increasing indices `ms` from `xs` in one pass
+/// (the retain kernel behind [`Evaluator::patch_machine_leave_batch`],
+/// shared with the fleet runner's placement column patching).
+pub(crate) fn drop_indices<T>(xs: &mut Vec<T>, ms: &[usize]) {
+    let mut mi = 0;
+    let mut w = 0;
+    for r in 0..xs.len() {
+        if mi < ms.len() && ms[mi] == r {
+            mi += 1;
+            continue;
+        }
+        xs.swap(w, r);
+        w += 1;
+    }
+    xs.truncate(w);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -446,6 +582,89 @@ mod tests {
         let ev = Evaluator::new(&t, &c, &db).unwrap();
         let p = Placement::empty(2, 3);
         assert!(ev.evaluate(&p, 1.0).is_err());
+    }
+
+    fn assert_bit_identical(a: &Evaluator, b: &Evaluator) {
+        assert_eq!(a.n_components(), b.n_components());
+        assert_eq!(a.n_machines(), b.n_machines());
+        for c in 0..a.n_components() {
+            for m in 0..a.n_machines() {
+                assert_eq!(a.e_m[c][m].to_bits(), b.e_m[c][m].to_bits(), "e[{c}][{m}]");
+                assert_eq!(a.met_m[c][m].to_bits(), b.met_m[c][m].to_bits(), "met[{c}][{m}]");
+            }
+        }
+        for m in 0..a.n_machines() {
+            assert_eq!(a.cap[m].to_bits(), b.cap[m].to_bits(), "cap[{m}]");
+        }
+        for c in 0..a.n_components() {
+            assert_eq!(a.gains[c].to_bits(), b.gains[c].to_bits(), "gain[{c}]");
+        }
+    }
+
+    #[test]
+    fn patch_join_matches_rebuild() {
+        let (t, mut c, db) = setup();
+        let mut ev = Evaluator::new(&t, &c, &db).unwrap();
+        c.machines.push(crate::cluster::Machine { name: "joined-0".into(), type_id: 1, cap: 100.0 });
+        ev.patch_machine_join(&t, &c, &db).unwrap();
+        let rebuilt = Evaluator::new(&t, &c, &db).unwrap();
+        assert_bit_identical(&ev, &rebuilt);
+    }
+
+    #[test]
+    fn patch_leave_matches_rebuild() {
+        let (t, mut c, db) = setup();
+        let mut ev = Evaluator::new(&t, &c, &db).unwrap();
+        c.machines.remove(1);
+        ev.patch_machine_leave(1).unwrap();
+        let rebuilt = Evaluator::new(&t, &c, &db).unwrap();
+        assert_bit_identical(&ev, &rebuilt);
+    }
+
+    #[test]
+    fn patch_leave_batch_matches_rebuild() {
+        let (t, c, db) = setup();
+        // a bigger cluster so the batch removes a non-trivial subset
+        let mut big = c.clone();
+        for k in 0..6 {
+            big.machines.push(crate::cluster::Machine {
+                name: format!("extra-{k}"),
+                type_id: k % big.types.len(),
+                cap: 100.0,
+            });
+        }
+        let mut ev = Evaluator::new(&t, &big, &db).unwrap();
+        let ms = [1usize, 4, 5, 8];
+        for &m in ms.iter().rev() {
+            big.machines.remove(m);
+        }
+        ev.patch_machine_leave_batch(&ms).unwrap();
+        let rebuilt = Evaluator::new(&t, &big, &db).unwrap();
+        assert_bit_identical(&ev, &rebuilt);
+        // and rejects unsorted / out-of-range batches untouched
+        assert!(ev.patch_machine_leave_batch(&[2, 1]).is_err());
+        assert!(ev.patch_machine_leave_batch(&[99]).is_err());
+    }
+
+    #[test]
+    fn patch_drift_matches_rebuild() {
+        let (t, c, mut db) = setup();
+        let mut ev = Evaluator::new(&t, &c, &db).unwrap();
+        let mut p = db.get("midCompute", "core-i3").unwrap();
+        p.e *= 1.3;
+        db.insert("midCompute", "core-i3", p);
+        ev.patch_profile_drift(&t, &c, &db, "midCompute", "core-i3").unwrap();
+        let rebuilt = Evaluator::new(&t, &c, &db).unwrap();
+        assert_bit_identical(&ev, &rebuilt);
+    }
+
+    #[test]
+    fn patch_join_rejects_stale_cluster() {
+        let (t, c, db) = setup();
+        let mut ev = Evaluator::new(&t, &c, &db).unwrap();
+        // cluster unchanged: no new machine to patch in
+        assert!(ev.patch_machine_join(&t, &c, &db).is_err());
+        assert!(ev.patch_machine_leave(99).is_err());
     }
 
     #[test]

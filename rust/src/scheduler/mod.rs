@@ -48,7 +48,7 @@ pub mod reschedule;
 pub mod search;
 pub mod workload;
 
-pub use problem::{IntoCow, Problem, ResolvedConstraints};
+pub use problem::{IntoCow, Problem, ProblemDelta, ResolvedConstraints};
 pub use registry::PolicyParams;
 pub use request::{Constraints, Objective, ScheduleRequest, SearchBudget};
 pub use workload::{

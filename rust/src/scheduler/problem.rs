@@ -10,10 +10,11 @@
 //! life of the online controller: many requests, one world.
 
 use std::borrow::Cow;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::cluster::profile::ProfileDb;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Machine};
 use crate::predict::Evaluator;
 use crate::runtime::scorer::PlacementScorer;
 use crate::topology::Topology;
@@ -48,6 +49,21 @@ impl<'a, T: Clone + 'a> IntoCow<'a, T> for Cow<'a, T> {
     }
 }
 
+/// One incremental world change a [`Problem`] can absorb in place via
+/// [`Problem::apply_delta`] — the copy-on-write alternative to
+/// rebuilding the problem per cluster event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProblemDelta {
+    /// A machine joins the cluster (named, of an already-known type).
+    MachineJoin { name: String, machine_type: String, cap: f64 },
+    /// A machine leaves the cluster (drain, failure, scale-down).
+    MachineLeave { name: String },
+    /// The per-tuple cost of `task_type` on `machine_type` scales by
+    /// `factor` (clamped below at `1e-9`, matching the controller's
+    /// drift semantics).
+    ProfileDrift { task_type: String, machine_type: String, factor: f64 },
+}
+
 /// A validated scheduling problem with cached evaluation state.
 ///
 /// The triple is held behind [`Arc`]s so many problems can share one
@@ -60,6 +76,9 @@ pub struct Problem {
     profiles: Arc<ProfileDb>,
     evaluator: Evaluator,
     scorer: Option<Box<dyn PlacementScorer>>,
+    /// Bumped by every applied [`ProblemDelta`]; freshly built problems
+    /// start at 0.  Caches keyed on problem identity use this.
+    version: u64,
 }
 
 impl Problem {
@@ -89,7 +108,177 @@ impl Problem {
     ) -> Result<Self> {
         // Evaluator::new validates topology + cluster + coverage.
         let evaluator = Evaluator::new(&top, &cluster, &profiles)?;
-        Ok(Problem { top, cluster, profiles, evaluator, scorer: None })
+        Ok(Problem { top, cluster, profiles, evaluator, scorer: None, version: 0 })
+    }
+
+    /// Monotonic delta counter: 0 for a freshly built problem, +1 per
+    /// applied [`ProblemDelta`].  Two problems with the same construction
+    /// inputs and version have identical evaluator state.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Absorb one cluster event as an in-place delta: the shared
+    /// cluster/profile `Arc`s are copy-on-write (`Arc::make_mut` clones
+    /// only when another problem still shares them) and the cached
+    /// [`Evaluator`] is column-patched in `O(C)` per machine event
+    /// instead of re-expanded in `O(C·M)` with full re-validation.  The
+    /// patched state is bit-identical to a full
+    /// [`from_shared`](Self::from_shared) rebuild on the mutated inputs
+    /// (pinned by the fleet equivalence suite).  A failed delta leaves
+    /// the problem unchanged.  Any attached batch scorer is dropped —
+    /// its compiled tables describe the pre-delta world.
+    pub fn apply_delta(&mut self, delta: &ProblemDelta) -> Result<()> {
+        match delta {
+            ProblemDelta::MachineJoin { name, machine_type, cap } => {
+                if self.cluster.machines.iter().any(|m| m.name == *name) {
+                    return Err(Error::Cluster(format!(
+                        "join of '{name}': machine already present"
+                    )));
+                }
+                let type_id = self
+                    .cluster
+                    .types
+                    .iter()
+                    .position(|t| t.name == *machine_type)
+                    .ok_or_else(|| {
+                        Error::Cluster(format!(
+                            "join of '{name}': unknown machine type '{machine_type}'"
+                        ))
+                    })?;
+                if !(0.0..=100.0).contains(cap) {
+                    return Err(Error::Cluster(format!(
+                        "join of '{name}': capacity {cap} outside [0,100]"
+                    )));
+                }
+                Arc::make_mut(&mut self.cluster).machines.push(Machine {
+                    name: name.clone(),
+                    type_id,
+                    cap: *cap,
+                });
+                if let Err(e) =
+                    self.evaluator.patch_machine_join(&self.top, &self.cluster, &self.profiles)
+                {
+                    // roll the push back (profile coverage gap for the
+                    // new machine's type) so the problem stays coherent
+                    Arc::make_mut(&mut self.cluster).machines.pop();
+                    return Err(e);
+                }
+            }
+            ProblemDelta::MachineLeave { name } => {
+                let m = self.machine_index(name)?;
+                if self.cluster.n_machines() == 1 {
+                    return Err(Error::Cluster(format!(
+                        "leave of '{name}' would empty the cluster"
+                    )));
+                }
+                Arc::make_mut(&mut self.cluster).machines.remove(m);
+                self.evaluator.patch_machine_leave(m)?;
+            }
+            ProblemDelta::ProfileDrift { task_type, machine_type, factor } => {
+                let profiles = Arc::make_mut(&mut self.profiles);
+                let mut p = profiles.get(task_type, machine_type)?;
+                p.e *= factor.max(1e-9);
+                profiles.insert(task_type, machine_type, p);
+                self.evaluator.patch_profile_drift(
+                    &self.top,
+                    &self.cluster,
+                    &self.profiles,
+                    task_type,
+                    machine_type,
+                )?;
+            }
+        }
+        self.scorer = None;
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Apply one delta to a whole fleet of problems that share the same
+    /// cluster and profile db (different topologies — one problem per
+    /// tenant, built via [`from_shared`](Self::from_shared) on common
+    /// `Arc`s).  The first problem absorbs the delta through
+    /// [`apply_delta`](Self::apply_delta) — paying the single
+    /// copy-on-write clone of the shared parts — and every other
+    /// problem adopts the first's updated `Arc`s and column-patches its
+    /// own evaluator: `O(C)` per tenant per event, **one** `O(M)`
+    /// cluster clone per event for the entire fleet.
+    ///
+    /// The first problem's failed delta leaves the whole fleet
+    /// unchanged.  A failure on a later problem (a profile-coverage gap
+    /// for one tenant's task types) leaves the fleet split across
+    /// versions — callers should treat that as fatal for the run.
+    pub fn apply_delta_fleet(problems: &mut [Problem], delta: &ProblemDelta) -> Result<()> {
+        let Some((first, rest)) = problems.split_first_mut() else {
+            return Ok(());
+        };
+        first.apply_delta(delta)?;
+        let cluster = first.cluster.clone();
+        let profiles = first.profiles.clone();
+        for p in rest {
+            match delta {
+                ProblemDelta::MachineJoin { .. } => {
+                    p.evaluator.patch_machine_join(&p.top, &cluster, &profiles)?;
+                }
+                ProblemDelta::MachineLeave { name } => {
+                    let m = p.machine_index(name)?;
+                    p.evaluator.patch_machine_leave(m)?;
+                }
+                ProblemDelta::ProfileDrift { task_type, machine_type, .. } => {
+                    p.evaluator.patch_profile_drift(
+                        &p.top,
+                        &cluster,
+                        &profiles,
+                        task_type,
+                        machine_type,
+                    )?;
+                }
+            }
+            p.cluster = cluster.clone();
+            p.profiles = profiles.clone();
+            p.scorer = None;
+            p.version += 1;
+        }
+        Ok(())
+    }
+
+    /// Batched machine-leave across a fleet: remove several machines in
+    /// one pass — how a correlated rack outage (every member leaving in
+    /// the same step) stays `O(C·M)` per tenant for the whole rack
+    /// instead of `O(C·M)` per machine.  Counts as one applied delta
+    /// per removed machine for [`version`](Self::version).  Same
+    /// sharing contract as [`apply_delta_fleet`](Self::apply_delta_fleet);
+    /// a failure partway leaves the fleet split across versions.
+    pub fn apply_machine_leaves_fleet(problems: &mut [Problem], names: &[String]) -> Result<()> {
+        if names.is_empty() {
+            return Ok(());
+        }
+        let Some(first) = problems.first() else {
+            return Ok(());
+        };
+        let mut ms = Vec::with_capacity(names.len());
+        for n in names {
+            ms.push(first.machine_index(n)?);
+        }
+        ms.sort_unstable();
+        ms.dedup();
+        if ms.len() != names.len() {
+            return Err(Error::Cluster("leave batch names a machine twice".into()));
+        }
+        if ms.len() >= first.cluster.n_machines() {
+            return Err(Error::Cluster("leave batch would empty the cluster".into()));
+        }
+        let mut cluster = (*first.cluster).clone();
+        crate::predict::drop_indices(&mut cluster.machines, &ms);
+        let cluster = Arc::new(cluster);
+        let bump = ms.len() as u64;
+        for p in problems {
+            p.evaluator.patch_machine_leave_batch(&ms)?;
+            p.cluster = cluster.clone();
+            p.scorer = None;
+            p.version += bump;
+        }
+        Ok(())
     }
 
     /// Attach a placement scorer (typically the PJRT AOT scorer built by
@@ -102,6 +291,14 @@ impl Problem {
 
     pub fn topology(&self) -> &Topology {
         &self.top
+    }
+
+    /// Clone out the shared construction `Arc`s — how the control plane
+    /// spawns a copy-on-write world from a day-zero problem without
+    /// copying the topology, cluster or profile tables
+    /// ([`from_shared`](Self::from_shared) on the returned parts).
+    pub fn shared_parts(&self) -> (Arc<Topology>, Arc<Cluster>, Arc<ProfileDb>) {
+        (self.top.clone(), self.cluster.clone(), self.profiles.clone())
     }
 
     pub fn cluster(&self) -> &Cluster {
@@ -132,18 +329,20 @@ impl Problem {
             .machines
             .iter()
             .position(|m| m.name == name)
-            .ok_or_else(|| {
-                Error::Schedule(format!(
-                    "constraint references unknown machine '{name}' (cluster '{}' has: {})",
-                    self.cluster.name,
-                    self.cluster
-                        .machines
-                        .iter()
-                        .map(|m| m.name.as_str())
-                        .collect::<Vec<_>>()
-                        .join(", ")
-                ))
-            })
+            .ok_or_else(|| self.unknown_machine(name))
+    }
+
+    fn unknown_machine(&self, name: &str) -> Error {
+        Error::Schedule(format!(
+            "constraint references unknown machine '{name}' (cluster '{}' has: {})",
+            self.cluster.name,
+            self.cluster
+                .machines
+                .iter()
+                .map(|m| m.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))
     }
 
     fn component_index(&self, name: &str) -> Result<usize> {
@@ -182,13 +381,31 @@ impl Problem {
         }
         rc.headroom_pct = c.headroom_pct;
 
+        // Residual-capacity requests at fleet scale carry one entry per
+        // occupied machine, so an O(M) name scan per entry would make
+        // resolution quadratic in the cluster size; large batches go
+        // through a name→index map instead.
+        let reserved_idx: Option<BTreeMap<&str, usize>> = (c.reserved_loads.len() >= 16)
+            .then(|| {
+                self.cluster
+                    .machines
+                    .iter()
+                    .enumerate()
+                    .map(|(m, mach)| (mach.name.as_str(), m))
+                    .collect()
+            });
         for (name, pct) in &c.reserved_loads {
             if !(pct.is_finite() && *pct >= 0.0) {
                 return Err(Error::Schedule(format!(
                     "reserved load on '{name}' must be finite and >= 0; got {pct}"
                 )));
             }
-            let m = self.machine_index(name)?;
+            let m = match &reserved_idx {
+                Some(idx) => *idx
+                    .get(name.as_str())
+                    .ok_or_else(|| self.unknown_machine(name))?,
+                None => self.machine_index(name)?,
+            };
             rc.reserved[m] += pct;
         }
 
@@ -422,6 +639,182 @@ mod tests {
         .unwrap();
         assert!(std::ptr::eq(c.cluster(), d.cluster()), "cluster must be shared, not copied");
         assert!(std::ptr::eq(c.profiles(), d.profiles()));
+    }
+
+    fn assert_same_tables(a: &Problem, b: &Problem) {
+        let (ea, eb) = (a.evaluator(), b.evaluator());
+        assert_eq!(ea.n_machines(), eb.n_machines());
+        assert_eq!(ea.e_m, eb.e_m);
+        assert_eq!(ea.met_m, eb.met_m);
+        for (x, y) in ea.cap.iter().zip(&eb.cap) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn apply_delta_matches_full_rebuild() {
+        let mut p = problem();
+        assert_eq!(p.version(), 0);
+        let deltas = [
+            ProblemDelta::MachineJoin {
+                name: "fresh-0".into(),
+                machine_type: "core-i5".into(),
+                cap: 100.0,
+            },
+            ProblemDelta::ProfileDrift {
+                task_type: "midCompute".into(),
+                machine_type: "core-i3".into(),
+                factor: 1.25,
+            },
+            ProblemDelta::MachineLeave { name: "pentium-0".into() },
+        ];
+        for (i, d) in deltas.iter().enumerate() {
+            p.apply_delta(d).unwrap();
+            assert_eq!(p.version(), i as u64 + 1);
+            let rebuilt = Problem::new(p.topology(), p.cluster(), p.profiles()).unwrap();
+            assert_same_tables(&p, &rebuilt);
+        }
+    }
+
+    #[test]
+    fn apply_delta_rejects_bad_events_untouched() {
+        let mut p = problem();
+        let before = p.evaluator().cap.clone();
+        assert!(p
+            .apply_delta(&ProblemDelta::MachineLeave { name: "ghost".into() })
+            .is_err());
+        assert!(p
+            .apply_delta(&ProblemDelta::MachineJoin {
+                name: "x-0".into(),
+                machine_type: "no-such-type".into(),
+                cap: 100.0,
+            })
+            .is_err());
+        assert!(p
+            .apply_delta(&ProblemDelta::MachineJoin {
+                name: "pentium-0".into(), // duplicate name
+                machine_type: "core-i5".into(),
+                cap: 100.0,
+            })
+            .is_err());
+        assert!(p
+            .apply_delta(&ProblemDelta::ProfileDrift {
+                task_type: "ghostTask".into(),
+                machine_type: "core-i5".into(),
+                factor: 1.1,
+            })
+            .is_err());
+        assert_eq!(p.version(), 0, "failed deltas must not bump the version");
+        assert_eq!(p.evaluator().cap, before);
+    }
+
+    #[test]
+    fn apply_delta_cow_leaves_sharers_unchanged() {
+        let (cluster, db) = presets::paper_cluster();
+        let cluster = std::sync::Arc::new(cluster);
+        let db = std::sync::Arc::new(db);
+        let top = std::sync::Arc::new(benchmarks::linear());
+        let mut a = Problem::from_shared(top.clone(), cluster.clone(), db.clone()).unwrap();
+        let b = Problem::from_shared(top, cluster.clone(), db).unwrap();
+        a.apply_delta(&ProblemDelta::MachineLeave { name: "i3-0".into() }).unwrap();
+        assert_eq!(a.cluster().n_machines(), 2);
+        // b still sees the original shared world
+        assert_eq!(b.cluster().n_machines(), 3);
+        assert_eq!(cluster.n_machines(), 3);
+    }
+
+    #[test]
+    fn apply_delta_fleet_keeps_problems_in_lockstep() {
+        let (cluster, db) = presets::paper_cluster();
+        let cluster = std::sync::Arc::new(cluster);
+        let db = std::sync::Arc::new(db);
+        let mut fleet: Vec<Problem> = [benchmarks::linear(), benchmarks::diamond()]
+            .into_iter()
+            .map(|t| {
+                Problem::from_shared(std::sync::Arc::new(t), cluster.clone(), db.clone()).unwrap()
+            })
+            .collect();
+        let deltas = [
+            ProblemDelta::MachineJoin {
+                name: "fresh-0".into(),
+                machine_type: "core-i5".into(),
+                cap: 100.0,
+            },
+            ProblemDelta::ProfileDrift {
+                task_type: "midCompute".into(),
+                machine_type: "core-i3".into(),
+                factor: 1.2,
+            },
+            ProblemDelta::MachineLeave { name: "i3-0".into() },
+        ];
+        for (i, d) in deltas.iter().enumerate() {
+            Problem::apply_delta_fleet(&mut fleet, d).unwrap();
+            // one shared post-delta world, not one clone per tenant
+            assert!(
+                std::ptr::eq(fleet[0].cluster(), fleet[1].cluster()),
+                "fleet clusters diverged after delta {i}"
+            );
+            assert!(std::ptr::eq(fleet[0].profiles(), fleet[1].profiles()));
+            for p in &fleet {
+                assert_eq!(p.version(), i as u64 + 1);
+                let rebuilt = Problem::new(p.topology(), p.cluster(), p.profiles()).unwrap();
+                assert_same_tables(p, &rebuilt);
+            }
+        }
+        // the original day-zero Arc is untouched
+        assert_eq!(cluster.n_machines(), 3);
+    }
+
+    #[test]
+    fn machine_leave_batch_matches_sequential_deltas() {
+        let (cluster, db) = presets::paper_cluster();
+        let cluster = std::sync::Arc::new(cluster);
+        let db = std::sync::Arc::new(db);
+        let build = || -> Vec<Problem> {
+            [benchmarks::linear(), benchmarks::diamond()]
+                .into_iter()
+                .map(|t| {
+                    Problem::from_shared(std::sync::Arc::new(t), cluster.clone(), db.clone())
+                        .unwrap()
+                })
+                .collect()
+        };
+        let mut batched = build();
+        let mut sequential = build();
+        // unsorted input on purpose — the batch sorts internally
+        Problem::apply_machine_leaves_fleet(
+            &mut batched,
+            &["i5-0".to_string(), "pentium-0".to_string()],
+        )
+        .unwrap();
+        for name in ["pentium-0", "i5-0"] {
+            Problem::apply_delta_fleet(
+                &mut sequential,
+                &ProblemDelta::MachineLeave { name: name.into() },
+            )
+            .unwrap();
+        }
+        for (a, b) in batched.iter().zip(&sequential) {
+            assert_eq!(a.version(), 2);
+            assert_eq!(a.version(), b.version());
+            let names = |p: &Problem| -> Vec<String> {
+                p.cluster().machines.iter().map(|m| m.name.clone()).collect()
+            };
+            assert_eq!(names(a), names(b));
+            assert_same_tables(a, b);
+        }
+        // rejects duplicates and emptying batches
+        let mut f = build();
+        assert!(Problem::apply_machine_leaves_fleet(
+            &mut f,
+            &["i3-0".to_string(), "i3-0".to_string()]
+        )
+        .is_err());
+        assert!(Problem::apply_machine_leaves_fleet(
+            &mut f,
+            &["pentium-0".to_string(), "i3-0".to_string(), "i5-0".to_string()]
+        )
+        .is_err());
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //!    what the constraints mean;
 //! 3. a mutation corpus: nine distinct corruptions of a known-good
 //!    schedule, each flagged with a distinct `Violation::code()`, plus
-//!    shape-mismatch and replay-divergence probes.
+//!    shape-mismatch and replay-divergence probes and a fleet-step
+//!    corpus for the dirty-tenant re-plan invariants (clean residents
+//!    never move, per-step migration budget respected).
 
 use std::collections::BTreeSet;
 
@@ -247,6 +249,62 @@ fn schedule_for_the_wrong_problem_is_a_shape_mismatch() {
     let report = check::validate(&diamond, &req, &s).unwrap();
     let codes: Vec<&str> = report.violations.iter().map(|v| v.code()).collect();
     assert_eq!(codes, vec!["shape-mismatch"], "{}", report.render());
+}
+
+/// Fleet-step corpus: each corruption of a clean dirty-tenant re-plan
+/// step is flagged with its own code — a clean resident whose
+/// placement changed (`resident-moved`) and a step that started more
+/// instances than the migration budget (`migration-budget-exceeded`).
+#[test]
+fn fleet_step_corpus_flags_resident_moves_and_budget_breaches() {
+    use hstorm::predict::Placement;
+    let tenants = vec!["t0".to_string(), "t1".to_string()];
+    let mut resident = Placement::empty(2, 3);
+    resident.x[0][0] = 1;
+    resident.x[1][2] = 2;
+    let mut dirty = Placement::empty(2, 3);
+    dirty.x[0][1] = 1;
+    dirty.x[1][1] = 1;
+    let before = vec![resident.clone(), dirty.clone()];
+
+    // clean step: only the dirty tenant moved, one start, budget 8
+    let mut replanned = dirty.clone();
+    replanned.x[0][1] = 0;
+    replanned.x[0][0] = 1;
+    let after = vec![resident.clone(), replanned.clone()];
+    let report = check::validate_fleet(&tenants, &before, &after, &[false, true], 8);
+    assert!(report.passed(), "clean step must pass:\n{}", report.render());
+
+    // corruption 1: a non-dirty resident's placement changed
+    let mut moved = resident.clone();
+    moved.x[0][0] = 0;
+    moved.x[0][2] = 1;
+    let after = vec![moved, dirty.clone()];
+    let report = check::validate_fleet(&tenants, &before, &after, &[false, true], 8);
+    let codes: Vec<&str> = report.violations.iter().map(|v| v.code()).collect();
+    assert!(codes.contains(&"resident-moved"), "expected resident-moved among {codes:?}");
+
+    // corruption 2: the dirty tenant started more instances than the
+    // per-step migration budget allows
+    let mut greedy = dirty.clone();
+    greedy.x[1][0] = 4;
+    let after = vec![resident.clone(), greedy];
+    let report = check::validate_fleet(&tenants, &before, &after, &[false, true], 2);
+    let codes: Vec<&str> = report.violations.iter().map(|v| v.code()).collect();
+    assert!(
+        codes.contains(&"migration-budget-exceeded"),
+        "expected migration-budget-exceeded among {codes:?}"
+    );
+    assert!(
+        !codes.contains(&"resident-moved"),
+        "budget breach must not implicate the clean resident: {codes:?}"
+    );
+
+    // a zero budget flags any started instance at all
+    let after = vec![resident, replanned];
+    let report = check::validate_fleet(&tenants, &before, &after, &[false, true], 0);
+    let codes: Vec<&str> = report.violations.iter().map(|v| v.code()).collect();
+    assert_eq!(codes, vec!["migration-budget-exceeded"], "{}", report.render());
 }
 
 #[test]

@@ -1,0 +1,225 @@
+//! Acceptance suite for the fleet-scale incremental control plane:
+//! the copy-on-write delta path must be **bit-identical** to a full
+//! rebuild — [`Problem::apply_delta`] over a randomized join/leave/
+//! drift sequence produces the same evaluator matrices (to the bit) as
+//! [`Problem::new`] on equivalently-mutated inputs, and the same
+//! schedule; a dirty tenant's residual re-plan (the fleet harness
+//! spelling: reserve every resident's utilization, then schedule) is
+//! the same decision as [`WorkloadProblem::admit`]; and a long fleet
+//! storm replay is deterministic in the seed, bit for bit.
+
+use std::sync::Arc;
+
+use hstorm::cluster::{scenarios, Machine};
+use hstorm::controller::fleet::{run_fleet, FleetMode, FleetReport, FleetSpec};
+use hstorm::controller::ControllerConfig;
+use hstorm::predict::Evaluator;
+use hstorm::scheduler::{
+    registry, Constraints, PolicyParams, Problem, ProblemDelta, ScheduleRequest, Scheduler,
+    SearchBudget, TenantSchedule, Workload, WorkloadProblem,
+};
+use hstorm::topology::benchmarks;
+use hstorm::util::rng::Rng;
+
+fn assert_eval_bits_eq(got: &Evaluator, want: &Evaluator, ctx: &str) {
+    assert_eq!(got.n_components(), want.n_components(), "{ctx}: component count");
+    assert_eq!(got.n_machines(), want.n_machines(), "{ctx}: machine count");
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&got.cap), bits(&want.cap), "{ctx}: cap");
+    assert_eq!(bits(&got.gains), bits(&want.gains), "{ctx}: gains");
+    for c in 0..want.n_components() {
+        assert_eq!(bits(&got.e_m[c]), bits(&want.e_m[c]), "{ctx}: e_m[{c}]");
+        assert_eq!(bits(&got.met_m[c]), bits(&want.met_m[c]), "{ctx}: met_m[{c}]");
+    }
+}
+
+/// Bit-identity: a problem patched through a randomized event sequence
+/// equals a from-scratch [`Problem::new`] on the mutated cluster +
+/// profile db after **every** event — same evaluator matrices to the
+/// bit, same hetero schedule at the end.
+#[test]
+fn patched_problem_is_bit_identical_to_a_rebuild() {
+    let hetero = registry::create("hetero", &PolicyParams::default()).unwrap();
+    let req = ScheduleRequest::max_throughput();
+    for (top, seed) in [
+        (benchmarks::linear(), 1u64),
+        (benchmarks::rolling_count(), 2),
+        (benchmarks::unique_visitor(), 3),
+    ] {
+        let (mut cluster, mut db) = scenarios::fleet(30, 6);
+        let mut problem = Problem::new(&top, &cluster, &db).unwrap();
+        let task_types: Vec<String> = top.components.iter().map(|c| c.task_type.clone()).collect();
+        let mut rng = Rng::new(seed);
+        let mut joins = 0usize;
+        for step in 0..30 {
+            // mutate the mirror inputs and the problem with the same event
+            match rng.range(0, 2) {
+                0 => {
+                    let type_id = rng.range(0, cluster.types.len() - 1);
+                    let name = format!("x-{joins}");
+                    joins += 1;
+                    problem
+                        .apply_delta(&ProblemDelta::MachineJoin {
+                            name: name.clone(),
+                            machine_type: cluster.types[type_id].name.clone(),
+                            cap: 100.0,
+                        })
+                        .unwrap();
+                    cluster.machines.push(Machine { name, type_id, cap: 100.0 });
+                }
+                1 if cluster.n_machines() > 4 => {
+                    let m = rng.range(0, cluster.n_machines() - 1);
+                    let name = cluster.machines[m].name.clone();
+                    problem.apply_delta(&ProblemDelta::MachineLeave { name }).unwrap();
+                    cluster.machines.remove(m);
+                }
+                _ => {
+                    let task = &task_types[rng.range(0, task_types.len() - 1)];
+                    let mt = &cluster.types[rng.range(0, cluster.types.len() - 1)].name;
+                    let factor = rng.range_f64(0.6, 1.4);
+                    problem
+                        .apply_delta(&ProblemDelta::ProfileDrift {
+                            task_type: task.clone(),
+                            machine_type: mt.clone(),
+                            factor,
+                        })
+                        .unwrap();
+                    // the mirror applies the documented drift semantics
+                    let mut p = db.get(task, mt).unwrap();
+                    p.e *= factor.max(1e-9);
+                    db.insert(task, mt, p);
+                }
+            }
+            let rebuilt = Problem::new(&top, &cluster, &db).unwrap();
+            assert_eval_bits_eq(
+                problem.evaluator(),
+                rebuilt.evaluator(),
+                &format!("{}/seed {seed}/event {step}", top.name),
+            );
+            let got = hetero.schedule(&problem, &req).unwrap();
+            let want = hetero.schedule(&rebuilt, &req).unwrap();
+            assert_eq!(got.placement, want.placement, "{}: placements diverge", top.name);
+            assert_eq!(
+                got.rate.to_bits(),
+                want.rate.to_bits(),
+                "{}: rates diverge ({} vs {})",
+                top.name,
+                got.rate,
+                want.rate
+            );
+        }
+        assert_eq!(problem.version(), 30, "{}: every event bumps the version", top.name);
+    }
+}
+
+/// A resident pinned at a fraction of its certified max rate.
+fn resident_at(
+    wp: &WorkloadProblem,
+    idx: usize,
+    policy: &dyn Scheduler,
+    frac: f64,
+) -> TenantSchedule {
+    let tp = &wp.tenants()[idx];
+    let s = policy.schedule(&tp.problem, &ScheduleRequest::max_throughput()).unwrap();
+    let rate = s.rate * frac;
+    let eval = tp.problem.evaluator().evaluate(&s.placement, rate).unwrap();
+    TenantSchedule {
+        tenant: tp.name.clone(),
+        weight: tp.weight,
+        schedule: hstorm::scheduler::Schedule {
+            placement: s.placement,
+            rate,
+            eval,
+            provenance: s.provenance,
+        },
+    }
+}
+
+/// With exactly one dirty tenant, the fleet harness's residual re-plan
+/// (reserve every resident's per-machine utilization, schedule the
+/// dirty tenant's own problem) is the same decision as the workload
+/// layer's [`WorkloadProblem::admit`] — identical placement, identical
+/// certified rate to the bit.
+#[test]
+fn single_dirty_tenant_residual_replan_matches_admit() {
+    let (cluster, db) = scenarios::fleet(12, 4);
+    let shared = Arc::new(db);
+    let hetero = registry::create("hetero", &PolicyParams::default()).unwrap();
+    let req = ScheduleRequest::max_throughput();
+    let wp = WorkloadProblem::new(
+        Workload::new("fleet-slice")
+            .tenant("resident-a", benchmarks::linear(), shared.clone(), 1.0)
+            .tenant("resident-b", benchmarks::star(), shared.clone(), 1.5)
+            .tenant("dirty", benchmarks::rolling_count(), shared.clone(), 2.0),
+        &cluster,
+    )
+    .unwrap();
+    let residents =
+        [resident_at(&wp, 0, hetero.as_ref(), 0.5), resident_at(&wp, 1, hetero.as_ref(), 0.4)];
+
+    // workload spelling: admission against the residual
+    let admitted = wp.admit(&residents, 2, hetero.as_ref(), &req).unwrap();
+
+    // fleet spelling: residents' combined utilization as per-machine
+    // reservations on the dirty tenant's own problem
+    let mut load = vec![0.0f64; cluster.n_machines()];
+    for r in &residents {
+        for (m, u) in r.schedule.eval.util.iter().enumerate() {
+            load[m] += u;
+        }
+    }
+    let mut constraints = Constraints::new();
+    for (m, l) in load.iter().enumerate() {
+        if *l > 1e-12 {
+            constraints = constraints.reserve_machine_load(&cluster.machines[m].name, *l);
+        }
+    }
+    let replanned = hetero
+        .schedule(&wp.tenants()[2].problem, &req.clone().with_constraints(constraints))
+        .unwrap();
+
+    assert_eq!(replanned.placement, admitted.schedule.placement, "placements diverge");
+    assert_eq!(
+        replanned.rate.to_bits(),
+        admitted.schedule.rate.to_bits(),
+        "rates diverge ({} vs {})",
+        replanned.rate,
+        admitted.schedule.rate
+    );
+    assert!(admitted.schedule.rate > 0.0, "residual must have room at 50%/40% residency");
+}
+
+fn fingerprint(r: &FleetReport) -> Vec<u64> {
+    vec![
+        r.admitted as u64,
+        r.events as u64,
+        r.replans as u64,
+        r.replan_steps as u64,
+        r.deferred as u64,
+        r.tasks_moved as u64,
+        r.violations as u64,
+        r.offered_volume.to_bits(),
+        r.delivered_volume.to_bits(),
+    ]
+}
+
+/// A long fleet storm trace (correlated rack outages, a flapper,
+/// trace-driven autoscaling, dirty-tenant re-plans) replays
+/// bit-identically: everything but the wall-clock latency percentiles
+/// is deterministic in the seed.
+#[test]
+fn long_fleet_trace_replays_bit_identically() {
+    let spec = FleetSpec { steps: 80, seed: 11, rack_size: 8, ..FleetSpec::new(48, 8) };
+    let cfg = ControllerConfig {
+        replan_budget: SearchBudget::unlimited().with_max_candidates(128),
+        max_moves_per_step: 500,
+        ..Default::default()
+    };
+    let a = run_fleet(&spec, &cfg, FleetMode::Incremental).unwrap();
+    let b = run_fleet(&spec, &cfg, FleetMode::Incremental).unwrap();
+    assert!(a.admitted > 0, "fleet must admit tenants");
+    assert!(a.events > 0, "storm trace must carry events");
+    assert!(a.replans > 0, "storm must dirty tenants");
+    assert_eq!(a.steps, 80);
+    assert_eq!(fingerprint(&a), fingerprint(&b), "replay diverged");
+}
